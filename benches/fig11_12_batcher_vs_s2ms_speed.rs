@@ -1,0 +1,36 @@
+//! Regenerates Figs. 11 & 12 (Batcher vs S2MS propagation delay, 8-bit
+//! and 32-bit, both FPGAs) and times the software execution of the same
+//! devices (ns/merge on this host).
+
+use loms::bench::{figures, timing};
+use loms::sortnet::exec::{ExecMode, ExecScratch};
+use loms::sortnet::{batcher, s2ms};
+use loms::util::Rng;
+
+fn main() {
+    for f in [figures::fig11(), figures::fig12()] {
+        println!("{}", f.to_table());
+        let p = f.save_csv("bench_out").expect("csv");
+        println!("   csv → {}\n", p.display());
+    }
+    // Host-side execution throughput of the same networks.
+    let mut rng = Rng::new(1);
+    for m in [8usize, 16, 32] {
+        for (label, d) in [
+            (format!("oem up{m}/dn{m} software exec"), batcher::odd_even_merge(m)),
+            (format!("s2ms up{m}/dn{m} software exec"), s2ms::s2ms(m, m)),
+        ] {
+            let a = rng.sorted_list(m, 1 << 20);
+            let b = rng.sorted_list(m, 1 << 20);
+            let mut v = d.load_inputs(&[a, b]);
+            let mut scratch = ExecScratch::new();
+            let base = v.clone();
+            let meas = timing::bench(&label, || {
+                v.copy_from_slice(&base);
+                scratch.run(&d, &mut v, ExecMode::Fast, None).unwrap();
+                std::hint::black_box(&v);
+            });
+            println!("{}", meas.row());
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Regenerates Fig. 13 (32-bit LUT usage: OEMS/Bitonic/S2MS on both
+//! FPGAs) from the cost model.
+
+use loms::bench::figures;
+
+fn main() {
+    let f = figures::fig13();
+    println!("{}", f.to_table());
+    let p = f.save_csv("bench_out").expect("csv");
+    println!("   csv → {}", p.display());
+}

@@ -1,0 +1,12 @@
+//! Regenerates Figs. 14 & 15 (32-bit Versal 4insLUT: Bitonic vs S2MS vs
+//! 2-col LOMS — speed and LUTs for small devices).
+
+use loms::bench::figures;
+
+fn main() {
+    for f in [figures::fig14(), figures::fig15()] {
+        println!("{}", f.to_table());
+        let p = f.save_csv("bench_out").expect("csv");
+        println!("   csv → {}\n", p.display());
+    }
+}

@@ -1,0 +1,13 @@
+//! Regenerates Figs. 16 & 17 (32-bit Ultrascale+ 2insLUT: Bitonic vs
+//! S2MS vs LOMS 2/4/8-col up to 256 outputs) plus the Fig.-10 fit
+//! matrix, including the paper's headline anchor (2.24 ns / 2.63×).
+
+use loms::bench::figures;
+
+fn main() {
+    for f in [figures::fig10(), figures::fig16(), figures::fig17()] {
+        println!("{}", f.to_table());
+        let p = f.save_csv("bench_out").expect("csv");
+        println!("   csv → {}\n", p.display());
+    }
+}

@@ -1,0 +1,33 @@
+//! Regenerates Figs. 18, 19 & 20 (3c_7r 3-way median/full delays and
+//! LUTs: LOMS vs the MWMS baseline) and times software execution of the
+//! two 3-way devices.
+
+use loms::bench::{figures, timing};
+use loms::sortnet::exec::{ExecMode, ExecScratch};
+use loms::sortnet::{loms as lm, mwms};
+use loms::util::Rng;
+
+fn main() {
+    for f in [figures::fig18(), figures::fig19(), figures::fig20()] {
+        println!("{}", f.to_table());
+        let p = f.save_csv("bench_out").expect("csv");
+        println!("   csv → {}\n", p.display());
+    }
+    println!("{}", figures::mwms_note());
+    let mut rng = Rng::new(3);
+    for (label, d) in [
+        ("loms 3c_7r software exec", lm::loms_kway(&[7, 7, 7])),
+        ("mwms 3c_7r software exec", mwms::mwms_3way(7)),
+    ] {
+        let lists: Vec<Vec<u32>> = (0..3).map(|_| rng.sorted_list(7, 1 << 20)).collect();
+        let mut v = d.load_inputs(&lists);
+        let base = v.clone();
+        let mut scratch = ExecScratch::new();
+        let meas = timing::bench(label, || {
+            v.copy_from_slice(&base);
+            scratch.run(&d, &mut v, ExecMode::Fast, None).unwrap();
+            std::hint::black_box(&v);
+        });
+        println!("{}", meas.row());
+    }
+}

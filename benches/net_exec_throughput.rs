@@ -1,0 +1,61 @@
+//! Software-execution throughput of every device family — the host-side
+//! analogue of the paper's device comparison, plus scaling over sizes.
+
+use loms::bench::timing;
+use loms::sortnet::exec::{ExecMode, ExecScratch};
+use loms::sortnet::{batcher, loms as lm, s2ms};
+use loms::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(9);
+    let mut rows = Vec::new();
+    for outs in [16usize, 64, 256] {
+        let m = outs / 2;
+        let devices = vec![
+            (format!("batcher-oem {outs}-out"), batcher::odd_even_merge(m)),
+            (format!("batcher-bitonic {outs}-out"), batcher::bitonic_merge(m)),
+            (format!("s2ms {outs}-out"), s2ms::s2ms(m, m)),
+            (format!("loms-2col {outs}-out"), lm::loms_2way(m, m, 2)),
+            (format!("loms-8col {outs}-out"), lm::loms_2way(m, m, 8)),
+        ];
+        for (label, d) in devices {
+            let a = rng.sorted_list(m, 1 << 20);
+            let b = rng.sorted_list(m, 1 << 20);
+            let mut v = d.load_inputs(&[a, b]);
+            let base = v.clone();
+            let mut scratch = ExecScratch::new();
+            let meas = timing::bench(&label, || {
+                v.copy_from_slice(&base);
+                scratch.run(&d, &mut v, ExecMode::Fast, None).unwrap();
+                std::hint::black_box(&v);
+            });
+            println!("{}", meas.row());
+            rows.push(meas);
+        }
+    }
+    // Reference: std two-pointer merge of the same sizes.
+    for outs in [16usize, 64, 256] {
+        let m = outs / 2;
+        let a = rng.sorted_list(m, 1 << 20);
+        let b = rng.sorted_list(m, 1 << 20);
+        let mut out = vec![0u32; outs];
+        let meas = timing::bench(&format!("std two-pointer merge {outs}-out"), || {
+            let (mut i, mut j, mut t) = (0, 0, 0);
+            while i < a.len() && j < b.len() {
+                if a[i] <= b[j] {
+                    out[t] = a[i];
+                    i += 1;
+                } else {
+                    out[t] = b[j];
+                    j += 1;
+                }
+                t += 1;
+            }
+            out[t..t + a.len() - i].copy_from_slice(&a[i..]);
+            let t2 = t + a.len() - i;
+            out[t2..].copy_from_slice(&b[j..]);
+            std::hint::black_box(&out);
+        });
+        println!("{}", meas.row());
+    }
+}

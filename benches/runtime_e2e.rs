@@ -1,0 +1,77 @@
+//! End-to-end runtime benchmark: raw PJRT batch execution per artifact
+//! and full service round-trips (the coordinator-overhead measurement
+//! EXPERIMENTS.md §Perf tracks). Skips PJRT parts when artifacts are
+//! missing.
+
+use loms::bench::timing;
+use loms::coordinator::{MergeService, PjrtBackend, ServiceConfig, SoftwareBackend};
+use loms::runtime::Runtime;
+use loms::util::Rng;
+use std::time::Instant;
+
+fn main() {
+    let dir = std::path::PathBuf::from("artifacts");
+    let have_artifacts = dir.join("manifest.json").exists();
+    if have_artifacts {
+        let mut rt = Runtime::load(&dir).expect("runtime");
+        let mut rng = Rng::new(11);
+        for name in rt.names() {
+            let meta = rt.executable_mut(&name).unwrap().meta.clone();
+            let lists: Vec<Vec<u32>> = meta
+                .list_sizes
+                .iter()
+                .map(|&s| {
+                    let mut flat = Vec::with_capacity(meta.batch * s);
+                    for _ in 0..meta.batch {
+                        flat.extend(rng.sorted_list(s, 1 << 22));
+                    }
+                    flat
+                })
+                .collect();
+            let exe = rt.executable_mut(&name).unwrap();
+            let meas = timing::bench(&format!("pjrt exec {name}"), || {
+                std::hint::black_box(exe.execute_batch(&lists).unwrap());
+            });
+            let rows_per_s = meta.batch as f64 / (meas.mean_ns / 1e9);
+            println!("{}   ({rows_per_s:.0} merges/s raw)", meas.row());
+        }
+    } else {
+        eprintln!("artifacts missing — skipping raw PJRT benches");
+    }
+
+    // Service round-trip throughput (dynamic batching + verification).
+    let (svc, backend) = if have_artifacts {
+        let d = dir.clone();
+        (MergeService::start(move || PjrtBackend::load(d), ServiceConfig::default()).unwrap(), "pjrt")
+    } else {
+        (
+            MergeService::start(|| Ok(SoftwareBackend::default_set()), ServiceConfig::default())
+                .unwrap(),
+            "software",
+        )
+    };
+    let mut rng = Rng::new(12);
+    let n = 20_000usize;
+    // Pre-generate the workload: the timer measures the service, not rng.
+    let workload: Vec<Vec<Vec<u32>>> = (0..n)
+        .map(|_| vec![rng.sorted_list(32, 1 << 22), rng.sorted_list(32, 1 << 22)])
+        .collect();
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(n);
+    for lists in workload {
+        rxs.push(svc.submit(lists));
+    }
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    let dt = t0.elapsed();
+    let snap = svc.metrics().snapshot();
+    println!(
+        "service({backend}) 32+32 merge round-trips: {:.0} merges/s (n={n}, batches={}, p50={:.0}µs p99={:.0}µs)",
+        n as f64 / dt.as_secs_f64(),
+        snap.batches,
+        snap.p50_latency_us,
+        snap.p99_latency_us
+    );
+    svc.shutdown();
+}

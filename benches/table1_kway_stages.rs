@@ -1,0 +1,13 @@
+//! Regenerates Table 1 (column/row sorts per k) with exhaustive
+//! validation of our reconstruction up to k = 12 (3^k sorted-0-1
+//! patterns; k = 13, 14 are claimed-only — minutes of validation).
+
+use loms::bench::figures;
+
+fn main() {
+    let deep = std::env::args().any(|a| a == "--deep");
+    let f = figures::table1_to(if deep { 14 } else { 12 });
+    println!("{}", f.to_table());
+    let p = f.save_csv("bench_out").expect("csv");
+    println!("   csv → {}", p.display());
+}

@@ -1,0 +1,48 @@
+// Calibration grid search: re-derives the Ultrascale+ timing constants in
+// rust/src/fpga/device.rs from the paper anchor numbers (EXPERIMENTS.md
+// §Calibration). Run after changing the cost model structure.
+use loms::fpga::device::{Family, FpgaDevice, TimingParams};
+use loms::fpga::{CostModel, Methodology};
+use loms::sortnet::{batcher, loms as lm, s2ms};
+
+fn main() {
+    let mut best = (f64::MAX, TimingParams { t_lut: 0., t_net: 0., t_muxf: 0., t_carry8: 0., t_io: 0. });
+    for t_lut in [0.06, 0.08, 0.10, 0.12] {
+        for t_net in [0.20, 0.24, 0.28, 0.32, 0.36, 0.40, 0.44] {
+            for t_carry8 in [0.10, 0.12, 0.14, 0.16, 0.18, 0.20, 0.22] {
+                for t_muxf in [0.04, 0.06, 0.08] {
+                    for t_io in [0.10, 0.20, 0.30, 0.40] {
+                        let t = TimingParams { t_lut, t_net, t_muxf, t_carry8, t_io };
+                        let fpga = FpgaDevice { name: "x", family: Family::UltrascalePlus, luts_available: 216_960, routable_fraction: 0.75, t };
+                        let m = CostModel::new(fpga, Methodology::TwoInsLut, 32);
+                        let b = m.delay_ns(&batcher::odd_even_merge(32));
+                        let l = m.delay_ns(&lm::loms_2way(32, 32, 2));
+                        let s = m.delay_ns(&s2ms::s2ms(32, 32));
+                        let l3 = m.delay_ns(&lm::loms_kway(&[7, 7, 7]));
+                        // anchors: batcher 5.89, loms 2.24 (ratio 2.63 weighted heavily), s2ms ~1.45, loms3 3.4
+                        let e = ((b - 5.89) / 5.89).powi(2)
+                            + 4.0 * ((l - 2.24) / 2.24).powi(2)
+                            + 4.0 * ((b / l - 2.63) / 2.63).powi(2)
+                            + 0.5 * ((s - 1.45) / 1.45).powi(2)
+                            + ((l3 - 3.4) / 3.4).powi(2);
+                        if e < best.0 {
+                            best = (e, t);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let t = best.1;
+    println!("best err {:.4}: {:?}", best.0, t);
+    let fpga = FpgaDevice { name: "x", family: Family::UltrascalePlus, luts_available: 216_960, routable_fraction: 0.75, t };
+    let m = CostModel::new(fpga, Methodology::TwoInsLut, 32);
+    println!(
+        "batcher64={:.2} loms64={:.2} (speedup {:.2}) s2ms64={:.2} loms3c7r={:.2}",
+        m.delay_ns(&batcher::odd_even_merge(32)),
+        m.delay_ns(&lm::loms_2way(32, 32, 2)),
+        m.delay_ns(&batcher::odd_even_merge(32)) / m.delay_ns(&lm::loms_2way(32, 32, 2)),
+        m.delay_ns(&s2ms::s2ms(32, 32)),
+        m.delay_ns(&lm::loms_kway(&[7, 7, 7]))
+    );
+}

@@ -1,0 +1,17 @@
+//! Full paper reproduction report: regenerate every table and figure of
+//! §VII from the frozen FPGA cost model, printing the same rows/series
+//! the paper plots and saving CSVs under bench_out/.
+//!
+//!     cargo run --release --example fpga_report
+
+use loms::bench::figures;
+
+fn main() -> anyhow::Result<()> {
+    for f in figures::all_figures() {
+        println!("{}", f.to_table());
+        let p = f.save_csv("bench_out")?;
+        println!("   csv → {}\n", p.display());
+    }
+    println!("{}", figures::mwms_note());
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! END-TO-END DRIVER (EXPERIMENTS.md §E2E): start the full three-layer
+//! stack — Rust coordinator → PJRT CPU client → AOT-compiled JAX/Pallas
+//! merge kernels — and serve a mixed batched merge workload, reporting
+//! throughput and latency percentiles. Every response is checked
+//! bit-exactly against a software merge.
+//!
+//!     make artifacts && cargo run --release --example merge_service
+//!
+//! Falls back to the software backend when artifacts are missing.
+
+use loms::coordinator::{MergeService, PjrtBackend, ServiceConfig, SoftwareBackend};
+use loms::util::Rng;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let n_requests: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10_000);
+    let dir = std::path::PathBuf::from("artifacts");
+    let (svc, backend) = if dir.join("manifest.json").exists() {
+        (MergeService::start(move || PjrtBackend::load(dir), ServiceConfig::default())?, "pjrt")
+    } else {
+        eprintln!("artifacts missing — software backend (run `make artifacts`)");
+        (
+            MergeService::start(|| Ok(SoftwareBackend::default_set()), ServiceConfig::default())?,
+            "software",
+        )
+    };
+
+    let mut rng = Rng::new(0xE2E);
+    println!("backend={backend}; firing {n_requests} mixed merge requests...");
+    let t0 = Instant::now();
+    let mut in_flight = Vec::new();
+    let mut checked = 0usize;
+    for i in 0..n_requests {
+        // Workload mix: 60% 32+32, 20% ragged (padded routes), 20% 3-way.
+        let lists = match i % 5 {
+            0 | 1 | 2 => vec![rng.sorted_list(32, 1 << 22), rng.sorted_list(32, 1 << 22)],
+            3 => {
+                let la = rng.range(1, 33);
+                let lb = rng.range(1, 33);
+                vec![rng.sorted_list(la, 1 << 22), rng.sorted_list(lb, 1 << 22)]
+            }
+            _ => vec![
+                rng.sorted_list(7, 1 << 22),
+                rng.sorted_list(7, 1 << 22),
+                rng.sorted_list(7, 1 << 22),
+            ],
+        };
+        let mut want: Vec<u32> = lists.concat();
+        want.sort_unstable();
+        in_flight.push((svc.submit(lists), want));
+        // Bound the in-flight window like a real client.
+        if in_flight.len() >= 4096 {
+            for (rx, want) in in_flight.drain(..2048) {
+                let resp = rx.recv()?;
+                assert_eq!(resp.merged, want, "response mismatch");
+                checked += 1;
+            }
+        }
+    }
+    for (rx, want) in in_flight {
+        let resp = rx.recv()?;
+        assert_eq!(resp.merged, want, "response mismatch");
+        checked += 1;
+    }
+    let dt = t0.elapsed();
+    let snap = svc.metrics().snapshot();
+    println!("served+verified {checked} merges in {dt:.2?}");
+    println!("throughput: {:.0} merges/s", checked as f64 / dt.as_secs_f64());
+    println!(
+        "latency: mean={:.0}µs p50={:.0}µs p99={:.0}µs",
+        snap.mean_latency_us, snap.p50_latency_us, snap.p99_latency_us
+    );
+    println!(
+        "batches={} padding={:.1}% software-served={}",
+        snap.batches,
+        100.0 * snap.rows_padded as f64 / (snap.rows_real + snap.rows_padded).max(1) as f64,
+        snap.software_served
+    );
+    svc.shutdown();
+    Ok(())
+}

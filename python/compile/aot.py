@@ -1,0 +1,70 @@
+"""AOT compilation: lower every model variant to HLO **text** and write
+the artifact manifest.
+
+HLO text (not ``serialize()``d HloModuleProto) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that the published
+``xla`` crate's xla_extension 0.5.1 rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md). Lowering
+uses ``return_tuple=True``, so the Rust side unwraps with ``to_tuple1``.
+
+Usage: ``python -m compile.aot --out ../artifacts`` (idempotent; the
+Makefile `artifacts` target skips it when inputs are unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import VARIANTS, Variant
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the default HLO printer
+    # ELIDES wide literals ("constant({...})"), and the xla_extension
+    # 0.5.1 text parser fills the gap with zeros — every static
+    # index/mask array of the merge plans would silently become zeros
+    # (observed: merges returning the per-row maximum everywhere).
+    text = comp.as_hlo_text(True)
+    assert "..." not in text, "HLO text still contains elided constants"
+    return text
+
+
+def lower_variant(v: Variant) -> str:
+    fn = v.build()
+    specs = [jax.ShapeDtypeStruct(shape, jax.numpy.uint32) for shape in v.input_shapes()]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output directory")
+    ap.add_argument("--only", nargs="*", help="subset of variant names")
+    args = ap.parse_args()
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    names = args.only or list(VARIANTS)
+    manifest = []
+    for name in names:
+        v = VARIANTS[name]
+        text = lower_variant(v)
+        path = out / f"{name}.hlo.txt"
+        path.write_text(text)
+        meta = v.meta()
+        meta["file"] = path.name
+        manifest.append(meta)
+        print(f"wrote {path} ({len(text)} chars, plan_steps={meta['plan_steps']})")
+    (out / "manifest.json").write_text(json.dumps({"artifacts": manifest}, indent=2, sort_keys=True))
+    print(f"wrote {out/'manifest.json'} ({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Pallas kernel wrapping a merge plan (Layer 1).
+
+The whole setup array for one batch block lives in VMEM: inputs are
+blocked over the batch dimension via ``BlockSpec`` (the HBM↔VMEM
+schedule), and the plan's steps run as VPU-friendly min/max/select and
+MXU-shaped one-hot placements inside the kernel body. ``interpret=True``
+is mandatory in this environment: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute (see
+/opt/xla-example/README.md), while interpret mode lowers to plain HLO
+that runs on any backend — numerics are identical.
+
+VMEM budget: a block holds ``block_b × total`` u32 values per list plus
+the flat working vector — for the largest AOT variant (UP-128/DN-128,
+block 64) that is 64×256×4 B × ~3 ≈ 200 KiB, comfortably inside the
+~16 MiB/core VMEM of a real TPU (DESIGN.md §Perf records the footprint
+per artifact).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..netgen.device import MergeDevice
+from .plan import apply_plan, constants, lower
+
+
+def make_pallas_merge(device: MergeDevice, batch: int, mode: str = "rank", block_b: int = 32):
+    """Build ``f(*lists) -> merged`` executing the device's plan as a
+    Pallas kernel blocked over the batch dimension.
+
+    The plan's static index/mask arrays are passed as kernel inputs
+    (Pallas rejects captured array constants); their BlockSpecs map every
+    grid step to the whole (small) array."""
+    steps = lower(device, mode)
+    total = device.n
+    block_b = min(block_b, batch)
+    assert batch % block_b == 0, "batch must be a multiple of the block size"
+    consts = constants(device, steps)
+    n_lists = len(device.list_sizes)
+
+    def kernel(*refs):
+        in_refs = refs[:n_lists]
+        const_refs = refs[n_lists:-1]
+        o_ref = refs[-1]
+        lists = [r[...] for r in in_refs]
+        o_ref[...] = apply_plan(device, steps, lists, [r[...] for r in const_refs])
+
+    grid = (batch // block_b,)
+    in_specs = [pl.BlockSpec((block_b, s), lambda i: (i, 0)) for s in device.list_sizes]
+    in_specs += [
+        pl.BlockSpec(c.shape, (lambda nd: (lambda i: (0,) * nd))(c.ndim)) for c in consts
+    ]
+    out_spec = pl.BlockSpec((block_b, total), lambda i: (i, 0))
+
+    def f(*lists):
+        assert len(lists) == n_lists
+        for x, s in zip(lists, device.list_sizes):
+            assert x.shape == (batch, s), f"expected ({batch},{s}), got {x.shape}"
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=out_spec,
+            out_shape=jax.ShapeDtypeStruct((batch, total), lists[0].dtype),
+            interpret=True,
+        )(*lists, *[jnp.asarray(c) for c in consts])
+
+    return f
+
+
+def vmem_bytes(device: MergeDevice, block_b: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set of one kernel invocation: input blocks
+    + flat vector + output block."""
+    per_row = sum(device.list_sizes) + 2 * device.n
+    return block_b * per_row * dtype_bytes

@@ -1,0 +1,199 @@
+"""Lowering of a netgen ``MergeDevice`` into a vectorised execution plan.
+
+Two lowering modes mirror the paper's device families:
+
+* ``mode="rank"`` (LOMS/S2MS style): ``MergeS2`` blocks stay as
+  single-stage rank-select merges ([`rank_merge`]); ``SortN``/``Cas``
+  blocks become compare-exchange steps. A 2-way LOMS lowers to
+  *column rank-merge → row CAS* — exactly the paper's 2 stages.
+* ``mode="cas"`` (Batcher style): everything, including ``MergeS2``,
+  lowers to compare-exchange stages (odd-even networks) — the log-depth
+  baseline.
+
+Each plan step is dense vector work over the whole batch with all
+indices static, so the plan traces into a single fused XLA computation
+(and into a Pallas kernel body — see ``pallas_kernel.py``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..netgen.batcher import _odd_even_merge_stages, sortn_cas_stages
+from ..netgen.device import Cas, FilterN, MergeDevice, MergeS2, SortN
+from .rank_merge import rank_merge
+
+
+@dataclass(frozen=True)
+class CasStep:
+    """One compare-exchange stage over the flat vector: position p takes
+    min(x[p], x[partner[p]]) where min_mask[p], else max. Untouched
+    positions have partner[p] == p."""
+
+    partner: tuple[int, ...]
+    min_mask: tuple[bool, ...]
+
+
+@dataclass(frozen=True)
+class RankMergeStep:
+    """A group of same-shape S2MS blocks executed as one batched
+    rank-select merge: gather (g, m) + (g, n), merge, scatter (g, m+n)."""
+
+    up_idx: tuple[tuple[int, ...], ...]
+    dn_idx: tuple[tuple[int, ...], ...]
+    out_idx: tuple[tuple[int, ...], ...]
+
+
+Step = CasStep | RankMergeStep
+
+
+def _cas_stage_to_step(n: int, pairs: list[tuple[int, int]]) -> CasStep:
+    partner = list(range(n))
+    min_mask = [True] * n
+    for lo, hi in pairs:
+        partner[lo] = hi
+        partner[hi] = lo
+        min_mask[lo] = True
+        min_mask[hi] = False
+    return CasStep(tuple(partner), tuple(min_mask))
+
+
+def _block_cas_stages(b, mode: str) -> list[list[tuple[int, int]]]:
+    """CAS-stage expansion of one block (used when the block is not kept
+    as a rank-merge)."""
+    if isinstance(b, Cas):
+        return [[(b.lo, b.hi)]]
+    if isinstance(b, (SortN, FilterN)):
+        return sortn_cas_stages(list(b.pos))
+    if isinstance(b, MergeS2):
+        # Odd-even merge needs the merged sequence laid out in out-order
+        # with the two runs as its halves; arbitrary sizes fall back to a
+        # transposition sort over out positions.
+        total = len(b.up) + len(b.dn)
+        seq = list(b.up) + list(b.dn)
+        if len(b.up) == len(b.dn) and total & (total - 1) == 0:
+            stages = _odd_even_merge_stages(seq)
+            # After the odd-even merge, rank t sits at seq[t]; route to
+            # out positions. seq and out are permutations of the same
+            # set; if they differ we add no comparator — the plan's final
+            # gather handles it only if out==seq. LOMS column sorters
+            # always satisfy out == up++dn in row order... if not, sort
+            # transpositions are used instead.
+            if seq == list(b.out):
+                return stages
+        return sortn_cas_stages(list(b.out))
+    raise TypeError(b)
+
+
+def lower(device: MergeDevice, mode: str = "rank") -> list[Step]:
+    """Lower a device into plan steps."""
+    assert mode in ("rank", "cas")
+    steps: list[Step] = []
+    for stage in device.stages:
+        rank_blocks: list[MergeS2] = []
+        cas_blocks = []
+        for b in stage.blocks:
+            if mode == "rank" and isinstance(b, MergeS2):
+                rank_blocks.append(b)
+            else:
+                cas_blocks.append(b)
+        # Group rank blocks by shape so each group is one batched merge.
+        groups: dict[tuple[int, int], list[MergeS2]] = {}
+        for b in rank_blocks:
+            groups.setdefault((len(b.up), len(b.dn)), []).append(b)
+        for (_m, _n), blocks in sorted(groups.items()):
+            steps.append(
+                RankMergeStep(
+                    tuple(b.up for b in blocks),
+                    tuple(b.dn for b in blocks),
+                    tuple(b.out for b in blocks),
+                )
+            )
+        # Lower the remaining blocks to CAS stages run in lockstep.
+        expanded = [_block_cas_stages(b, mode) for b in cas_blocks]
+        depth = max((len(e) for e in expanded), default=0)
+        for level in range(depth):
+            pairs = [p for e in expanded if level < len(e) for p in e[level]]
+            if pairs:
+                steps.append(_cas_stage_to_step(device.n, pairs))
+    return steps
+
+
+def input_gather(device: MergeDevice) -> tuple[int, ...]:
+    """gather index g: flat[p] = concat_inputs[g[p]] where the concat is
+    list 0 ascending, list 1 ascending, ..."""
+    g = [0] * device.n
+    src = 0
+    for m in device.input_map:
+        for p in m:
+            g[p] = src
+            src += 1
+    return tuple(g)
+
+
+def constants(device: MergeDevice, steps: list[Step]) -> list[np.ndarray]:
+    """All static index/mask arrays the plan needs, in execution order.
+
+    Kept separate from ``apply_plan`` so the Pallas wrapper can pass them
+    as kernel *inputs* (Pallas forbids captured array constants) while
+    the plain-jnp path closes over them."""
+    arrs: list[np.ndarray] = [np.array(input_gather(device), dtype=np.int32)]
+    for step in steps:
+        if isinstance(step, CasStep):
+            arrs.append(np.array(step.partner, dtype=np.int32))
+            arrs.append(np.array(step.min_mask, dtype=np.int8))
+        else:
+            arrs.append(np.array(step.up_idx, dtype=np.int32))
+            arrs.append(np.array(step.dn_idx, dtype=np.int32))
+            arrs.append(np.array(step.out_idx, dtype=np.int32))
+    arrs.append(np.array(device.output_perm, dtype=np.int32))
+    return arrs
+
+
+def apply_plan(
+    device: MergeDevice,
+    steps: list[Step],
+    lists: list[jnp.ndarray],
+    consts: list[jnp.ndarray] | None = None,
+) -> jnp.ndarray:
+    """Execute the plan over batched inputs (each (B, s_l)) → (B, total)."""
+    it = iter(consts if consts is not None else constants(device, steps))
+    x = jnp.concatenate(lists, axis=-1)[:, next(it)]
+    for step in steps:
+        if isinstance(step, CasStep):
+            partner = next(it)
+            mask = next(it)
+            xp = x[:, partner]
+            x = jnp.where(mask != 0, jnp.minimum(x, xp), jnp.maximum(x, xp))
+        else:
+            up = next(it)  # (g, m)
+            dn = next(it)  # (g, n)
+            out = next(it)  # (g, m+n)
+            a = x[:, up]  # (B, g, m)
+            b = x[:, dn]  # (B, g, n)
+            merged = rank_merge(a, b)  # (B, g, m+n)
+            x = x.at[:, out.reshape(-1)].set(merged.reshape(x.shape[0], -1))
+    return x[:, next(it)]
+
+
+def merge_fn(device: MergeDevice, mode: str = "rank"):
+    """Build a jit-able ``f(*lists) -> merged`` for the device."""
+    steps = lower(device, mode)
+
+    def f(*lists):
+        return apply_plan(device, steps, list(lists))
+
+    return f
+
+
+def plan_stats(steps: list[Step]) -> dict:
+    """Structural stats: sequential vector-op depth per kind (the TPU
+    analogue of the paper's stage counts)."""
+    return {
+        "steps": len(steps),
+        "cas_steps": sum(isinstance(s, CasStep) for s in steps),
+        "rank_steps": sum(isinstance(s, RankMergeStep) for s in steps),
+    }

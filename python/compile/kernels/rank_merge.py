@@ -1,0 +1,76 @@
+"""Rank-select merge — the TPU analogue of the paper's Single-Stage
+2-way Merge Sorter (S2MS).
+
+The hardware S2MS computes all ``m*n`` cross comparison signals in
+parallel and routes every input straight to its output rank through a
+multiplexer tree (Fig. 9). The vectorised analogue computes the same
+comparator bank as one broadcast compare, derives each element's output
+*rank* (its index plus the count of cross elements ahead of it), and
+places elements with a one-hot matmul-style scatter — **one parallel
+stage**, versus the log-depth compare-exchange cascade of a Batcher
+network. This is the stage-count trade the paper's figures measure,
+re-expressed in vector-op depth (DESIGN.md §3 Hardware-Adaptation).
+
+Stability matches the hardware (and the Rust exec): UP values win ties.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def merge_ranks(a: jnp.ndarray, b: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Output ranks for merging sorted ``a`` (..., m) with sorted ``b``
+    (..., n): rank_a[i] = i + #{b < a_i}, rank_b[j] = j + #{a <= b_j}.
+
+    The two broadcast comparisons are exactly the S2MS ``ge_*``
+    comparator bank."""
+    m = a.shape[-1]
+    n = b.shape[-1]
+    # (..., m, n) comparator bank.
+    b_lt_a = (b[..., None, :] < a[..., :, None]).astype(jnp.int32)
+    a_le_b = (a[..., :, None] <= b[..., None, :]).astype(jnp.int32)
+    rank_a = jnp.arange(m, dtype=jnp.int32) + b_lt_a.sum(axis=-1)
+    rank_b = jnp.arange(n, dtype=jnp.int32) + a_le_b.sum(axis=-2)
+    return rank_a, rank_b
+
+
+def rank_merge_onehot(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """One-hot placement — the MXU-shaped form (a matmul against a
+    one-hot matrix), the closest analogue of the hardware mux tree.
+    O(n²) multiply-adds per merge: ideal for a systolic array, ~30%
+    slower than the scatter form on the CPU PJRT backend (§Perf)."""
+    m = a.shape[-1]
+    n = b.shape[-1]
+    total = m + n
+    rank_a, rank_b = merge_ranks(a, b)
+    slots = jnp.arange(total, dtype=jnp.int32)
+    onehot_a = (rank_a[..., :, None] == slots).astype(a.dtype)
+    onehot_b = (rank_b[..., :, None] == slots).astype(b.dtype)
+    return (a[..., :, None] * onehot_a).sum(axis=-2) + (b[..., :, None] * onehot_b).sum(axis=-2)
+
+
+def rank_merge_scatter(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Scatter placement: ranks are a permutation, so the two scatters
+    never collide. Faster than one-hot on the CPU backend (§Perf:
+    41.6 µs vs 58.5 µs per 64×(32+32) batch)."""
+    import jax
+
+    m = a.shape[-1]
+    n = b.shape[-1]
+    total = m + n
+    rank_a, rank_b = merge_ranks(a, b)
+    lead = a.shape[:-1]
+    out = jnp.zeros((*lead, total), a.dtype)
+
+    def place(o, r, v):
+        return o.at[r].set(v)
+
+    out = jax.vmap(place)(out.reshape(-1, total), rank_a.reshape(-1, m), a.reshape(-1, m))
+    out = jax.vmap(place)(out, rank_b.reshape(-1, n), b.reshape(-1, n))
+    return out.reshape(*lead, total)
+
+
+# Default implementation (selected by the §Perf pass for the CPU PJRT
+# deployment target; switch to `rank_merge_onehot` for MXU targets).
+rank_merge = rank_merge_scatter

@@ -1,0 +1,22 @@
+"""Pure-jnp correctness oracles for the merge kernels.
+
+``merge_ref`` is the ground truth every kernel variant must match
+bit-exactly (pytest asserts exact equality — values are u32 and merging
+is exact)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def merge_ref(lists: list[jnp.ndarray]) -> jnp.ndarray:
+    """Merge k batched sorted lists: each (B, s_l) -> (B, sum s_l) sorted."""
+    return jnp.sort(jnp.concatenate(lists, axis=-1), axis=-1)
+
+
+def median_ref(lists: list[jnp.ndarray]) -> jnp.ndarray:
+    """Median of the merged values per batch row (odd totals)."""
+    merged = merge_ref(lists)
+    total = merged.shape[-1]
+    assert total % 2 == 1, "median oracle expects odd totals"
+    return merged[..., total // 2]

@@ -1,0 +1,88 @@
+"""Layer 2: the batched merge computation graphs (variant registry).
+
+Each variant pairs a netgen device with a kernel lowering mode and a
+batch shape; ``aot.py`` lowers every variant once to HLO text for the
+Rust runtime, and the pytest suite checks each against the pure-jnp
+oracle. Python never runs at request time — these functions exist only
+on the compile path.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax.numpy as jnp
+
+from .kernels.pallas_kernel import make_pallas_merge, vmem_bytes
+from .kernels.plan import lower, plan_stats
+from .netgen import batcher, loms, s2ms
+from .netgen.device import MergeDevice
+
+
+@dataclass(frozen=True)
+class Variant:
+    """One AOT-compiled merge executable."""
+
+    name: str
+    device_fn: Callable[[], MergeDevice]
+    mode: str  # "rank" (LOMS/S2MS style) | "cas" (Batcher style)
+    batch: int
+    block_b: int
+
+    def device(self) -> MergeDevice:
+        return self.device_fn()
+
+    def build(self):
+        """The jit-able batched merge fn (Pallas kernel inside)."""
+        return make_pallas_merge(self.device(), self.batch, self.mode, self.block_b)
+
+    def input_shapes(self) -> list[tuple[int, int]]:
+        return [(self.batch, s) for s in self.device().list_sizes]
+
+    def meta(self) -> dict:
+        d = self.device()
+        stats = plan_stats(lower(d, self.mode))
+        return {
+            "name": self.name,
+            "device": d.name,
+            "mode": self.mode,
+            "batch": self.batch,
+            "block_b": self.block_b,
+            "list_sizes": d.list_sizes,
+            "total": d.n,
+            "dtype": "u32",
+            "hw_stages": d.depth(),
+            "plan_steps": stats["steps"],
+            "vmem_bytes_per_block": vmem_bytes(d, min(self.block_b, self.batch)),
+        }
+
+
+# The merge ladder the coordinator serves (powers of two for the external
+# sort), the paper's flagship 2-way devices, the Batcher/S2MS baselines,
+# and the 3-way device.
+VARIANTS: dict[str, Variant] = {
+    v.name: v
+    for v in [
+        # Batch/block shapes picked by the §Perf scan (EXPERIMENTS.md):
+        # throughput-optimal on the CPU PJRT backend at acceptable
+        # batching latency.
+        Variant("loms2_up32_dn32_b256", lambda: loms.loms_2way(32, 32, 2), "rank", 256, 128),
+        Variant("loms2_up64_dn64_b128", lambda: loms.loms_2way(64, 64, 2), "rank", 128, 64),
+        Variant("loms2_up128_dn128_b16", lambda: loms.loms_2way(128, 128, 4), "rank", 16, 8),
+        Variant("loms2_up256_dn256_b32", lambda: loms.loms_2way(256, 256, 8), "rank", 32, 16),
+        Variant("batcher_up32_dn32_b64", lambda: batcher.odd_even_merge(32), "cas", 64, 32),
+        Variant("s2ms_up32_dn32_b64", lambda: s2ms.s2ms(32, 32), "rank", 64, 32),
+        Variant("loms3_7r_b256", lambda: loms.loms_kway([7, 7, 7]), "rank", 256, 128),
+    ]
+}
+
+
+def example_args(v: Variant) -> list[jnp.ndarray]:
+    """Deterministic example inputs (sorted ascending rows)."""
+    out = []
+    for li, (b, s) in enumerate(v.input_shapes()):
+        base = jnp.arange(b, dtype=jnp.uint32)[:, None] * 131 + li * 17
+        row = jnp.arange(s, dtype=jnp.uint32)[None, :] * 3
+        out.append(base + row)
+    return out

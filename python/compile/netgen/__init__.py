@@ -1,0 +1,13 @@
+"""Compile-time network construction (Python mirror of rust sortnet).
+
+Cross-checked against the Rust implementation via golden JSON vectors —
+see python/tests/test_golden.py and `loms netgen --golden`.
+"""
+
+from . import batcher, device, loms, s2ms
+from .device import Cas, FilterN, MergeDevice, MergeS2, SortN, Stage
+
+__all__ = [
+    "batcher", "device", "loms", "s2ms",
+    "Cas", "FilterN", "MergeDevice", "MergeS2", "SortN", "Stage",
+]

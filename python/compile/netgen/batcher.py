@@ -1,0 +1,104 @@
+"""Batcher Odd-Even and Bitonic merge networks (Python mirror of
+``rust/src/sortnet/batcher.rs``) — the CAS-stage baselines the kernels
+compile for comparison against the LOMS rank kernels."""
+
+from __future__ import annotations
+
+from .device import Cas, MergeDevice, Stage
+
+
+def _is_pow2(x: int) -> bool:
+    return x > 0 and (x & (x - 1)) == 0
+
+
+def _odd_even_merge_stages(idx: list[int]) -> list[list[tuple[int, int]]]:
+    n = len(idx)
+    assert _is_pow2(n) and n >= 2
+    if n == 2:
+        return [[(idx[0], idx[1])]]
+    even = idx[0::2]
+    odd = idx[1::2]
+    se = _odd_even_merge_stages(even)
+    so = _odd_even_merge_stages(odd)
+    stages = [e + o for e, o in zip(se, so)]
+    stages.append([(idx[2 * i + 1], idx[2 * i + 2]) for i in range(n // 2 - 1)])
+    return stages
+
+
+def _bitonic_merge_stages(idx: list[int]) -> list[list[tuple[int, int]]]:
+    n = len(idx)
+    assert _is_pow2(n) and n >= 2
+    stages = []
+    span = n // 2
+    while span >= 1:
+        stage = []
+        block = 0
+        while block < n:
+            for i in range(block, block + span):
+                stage.append((idx[i], idx[i + span]))
+            block += 2 * span
+        stages.append(stage)
+        span //= 2
+    return stages
+
+
+def _device(name: str, kind: str, m: int, input_map: list[list[int]], cas) -> MergeDevice:
+    n = 2 * m
+    stages = [
+        Stage(f"cas-{i}", [Cas(lo, hi) for lo, hi in pairs]) for i, pairs in enumerate(cas)
+    ]
+    return MergeDevice(
+        name=name,
+        kind=kind,
+        list_sizes=[m, m],
+        input_map=input_map,
+        n=n,
+        stages=stages,
+        output_perm=list(range(n)),
+    )
+
+
+def odd_even_merge(m: int) -> MergeDevice:
+    """Batcher odd-even 2-way merge of two sorted power-of-2 lists."""
+    assert _is_pow2(m)
+    n = 2 * m
+    return _device(
+        f"oem-up{m}-dn{m}",
+        "odd_even_merge",
+        m,
+        [list(range(m)), list(range(m, n))],
+        _odd_even_merge_stages(list(range(n))),
+    )
+
+
+def bitonic_merge(m: int) -> MergeDevice:
+    """Batcher bitonic 2-way merge (B list loaded reversed)."""
+    assert _is_pow2(m)
+    n = 2 * m
+    return _device(
+        f"bims-up{m}-dn{m}",
+        "bitonic_merge",
+        m,
+        [list(range(m)), list(range(n - 1, m - 1, -1))],
+        _bitonic_merge_stages(list(range(n))),
+    )
+
+
+def sortn_cas_stages(pos: list[int]) -> list[list[tuple[int, int]]]:
+    """Odd-even transposition sort network over arbitrary-width ``pos`` —
+    used to lower SortN row sorters into CAS stages for the kernels.
+    Depth = len(pos) rounds (fine: LOMS rows are ≤ 8 wide)."""
+    n = len(pos)
+    if n < 2:
+        return []
+    stages = []
+    for r in range(n):
+        pairs = []
+        start = r % 2
+        i = start
+        while i + 1 < n:
+            pairs.append((pos[i], pos[i + 1]))
+            i += 2
+        if pairs:
+            stages.append(pairs)
+    return stages

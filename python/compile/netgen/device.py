@@ -1,0 +1,206 @@
+"""Merge-device representation — the compile-time (Python) mirror of
+``rust/src/sortnet/network.rs``.
+
+The Rust crate is the runtime implementation; this module exists so the
+JAX/Pallas kernels can be *constructed* at AOT time without invoking the
+Rust toolchain. The two implementations are independently written and
+cross-checked structurally through golden JSON vectors
+(``tests/golden/*.json``, emitted by ``loms netgen --golden``).
+
+Conventions match the Rust side exactly: values ascend, ``input_map[l][i]``
+is the flat position of list ``l``'s i-th smallest value, flat positions
+are assigned in output-scan order (``output_perm`` is the identity for
+LOMS devices), and block semantics are "sorted ascending into listed
+positions".
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class Cas:
+    """2-sorter: after execution value at ``lo`` <= value at ``hi``."""
+
+    lo: int
+    hi: int
+
+    def reads(self) -> list[int]:
+        return [self.lo, self.hi]
+
+    def to_json(self) -> dict:
+        return {"type": "cas", "lo": self.lo, "hi": self.hi}
+
+
+@dataclass(frozen=True)
+class SortN:
+    """Single-stage N-sorter: sorts ``pos`` ascending into listed order."""
+
+    pos: tuple[int, ...]
+
+    def reads(self) -> list[int]:
+        return list(self.pos)
+
+    def to_json(self) -> dict:
+        return {"type": "sortN", "pos": list(self.pos)}
+
+
+@dataclass(frozen=True)
+class MergeS2:
+    """S2MS block: merges sorted runs ``up`` and ``dn``; merged rank t
+    lands at ``out[t]``."""
+
+    up: tuple[int, ...]
+    dn: tuple[int, ...]
+    out: tuple[int, ...]
+
+    def reads(self) -> list[int]:
+        return list(self.up) + list(self.dn)
+
+    def to_json(self) -> dict:
+        return {"type": "s2ms", "up": list(self.up), "dn": list(self.dn), "out": list(self.out)}
+
+
+@dataclass(frozen=True)
+class FilterN:
+    """N-filter: writes only the tapped ranks of the sorted ``pos``."""
+
+    pos: tuple[int, ...]
+    taps: tuple[int, ...]
+
+    def reads(self) -> list[int]:
+        return list(self.pos)
+
+    def to_json(self) -> dict:
+        return {"type": "filterN", "pos": list(self.pos), "taps": list(self.taps)}
+
+
+Block = Cas | SortN | MergeS2 | FilterN
+
+
+@dataclass
+class Stage:
+    label: str
+    blocks: list[Block] = field(default_factory=list)
+
+    def to_json(self) -> dict:
+        return {"label": self.label, "blocks": [b.to_json() for b in self.blocks]}
+
+
+@dataclass
+class MergeDevice:
+    name: str
+    kind: str
+    list_sizes: list[int]
+    input_map: list[list[int]]
+    n: int
+    stages: list[Stage]
+    output_perm: list[int]
+    median_tap: tuple[int, int] | None = None
+    grid: tuple[int, int] | None = None
+
+    def check(self) -> None:
+        assert sum(self.list_sizes) == self.n, f"{self.name}: size sum"
+        seen = [False] * self.n
+        for l, m in enumerate(self.input_map):
+            assert len(m) == self.list_sizes[l], f"{self.name}: input_map[{l}] len"
+            for p in m:
+                assert 0 <= p < self.n and not seen[p], f"{self.name}: input_map pos {p}"
+                seen[p] = True
+        assert all(seen), f"{self.name}: input_map incomplete"
+        assert sorted(self.output_perm) == list(range(self.n)), f"{self.name}: output_perm"
+        for si, stage in enumerate(self.stages):
+            touched = [False] * self.n
+            for b in stage.blocks:
+                if isinstance(b, MergeS2):
+                    assert sorted(b.out) == sorted(b.reads()), f"{self.name}: s2ms out perm"
+                for p in b.reads():
+                    assert 0 <= p < self.n and not touched[p], f"{self.name}: stage {si} overlap at {p}"
+                    touched[p] = True
+
+    def depth(self) -> int:
+        return len(self.stages)
+
+    def to_json(self) -> dict:
+        j = {
+            "name": self.name,
+            "kind": self.kind,
+            "list_sizes": self.list_sizes,
+            "input_map": self.input_map,
+            "n": self.n,
+            "stages": [s.to_json() for s in self.stages],
+            "output_perm": self.output_perm,
+        }
+        if self.median_tap is not None:
+            j["median_tap"] = list(self.median_tap)
+        if self.grid is not None:
+            j["grid"] = list(self.grid)
+        return j
+
+    def to_json_str(self) -> str:
+        return json.dumps(self.to_json(), indent=2, sort_keys=True)
+
+    # ------------------------------------------------------------------
+    # Reference execution (the Python oracle of hardware semantics).
+    # ------------------------------------------------------------------
+    def load_inputs(self, lists: list[list[int]]) -> list[int]:
+        v = [0] * self.n
+        for l, lst in enumerate(lists):
+            assert len(lst) == self.list_sizes[l]
+            for i, x in enumerate(lst):
+                v[self.input_map[l][i]] = x
+        return v
+
+    def run(self, v: list[int], stop_after: int | None = None) -> None:
+        for stage in self.stages[: stop_after if stop_after is not None else len(self.stages)]:
+            for b in stage.blocks:
+                if isinstance(b, Cas):
+                    if v[b.lo] > v[b.hi]:
+                        v[b.lo], v[b.hi] = v[b.hi], v[b.lo]
+                elif isinstance(b, SortN):
+                    vals = sorted(v[p] for p in b.pos)
+                    for i, p in enumerate(b.pos):
+                        v[p] = vals[i]
+                elif isinstance(b, MergeS2):
+                    vals = sorted(v[p] for p in b.reads())
+                    for i, p in enumerate(b.out):
+                        v[p] = vals[i]
+                elif isinstance(b, FilterN):
+                    vals = sorted(v[p] for p in b.pos)
+                    for t in b.taps:
+                        v[b.pos[t]] = vals[t]
+
+    def merge(self, lists: list[list[int]]) -> list[int]:
+        v = self.load_inputs(lists)
+        self.run(v)
+        return [v[p] for p in self.output_perm]
+
+
+def validate_merge_01(d: MergeDevice) -> None:
+    """Exhaustive sorted-0-1 validation (see the Rust twin for theory)."""
+    d.check()
+    sizes = d.list_sizes
+    zeros = [0] * len(sizes)
+    while True:
+        lists = [[0] * z + [1] * (s - z) for s, z in zip(sizes, zeros)]
+        out = d.merge(lists)
+        assert all(out[i] <= out[i + 1] for i in range(len(out) - 1)), (
+            f"{d.name}: unsorted output for {lists}"
+        )
+        if d.median_tap is not None:
+            stop, pos = d.median_tap
+            v = d.load_inputs(lists)
+            d.run(v, stop_after=stop)
+            flat = sorted(x for lst in lists for x in lst)
+            assert v[pos] == flat[len(flat) // 2], f"{d.name}: median tap wrong for {lists}"
+        i = 0
+        while True:
+            if i == len(sizes):
+                return
+            zeros[i] += 1
+            if zeros[i] <= sizes[i]:
+                break
+            zeros[i] = 0
+            i += 1

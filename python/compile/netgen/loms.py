@@ -1,0 +1,224 @@
+"""List Offset Merge Sorter construction — Python mirror of
+``rust/src/sortnet/loms.rs`` (see that file and paper §IV/§V/App. A for
+the construction; conventions are identical: row 0 = bottom, col 0 =
+rightmost, flat positions in final-output scan order)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .device import Cas, MergeDevice, MergeS2, SortN, Stage
+
+
+@dataclass
+class SetupArray:
+    rows: int
+    cols: int
+    # grid[row][col] = (list, idx, pos) or None
+    grid: list[list[tuple[int, int, int] | None]]
+    serpentine: bool
+    list_sizes: list[int]
+
+    def scan_cols(self, row: int) -> list[int]:
+        if self.serpentine and row % 2 == 1:
+            return list(range(self.cols - 1, -1, -1))
+        return list(range(self.cols))
+
+    def input_map(self) -> list[list[int]]:
+        m = [[-1] * s for s in self.list_sizes]
+        for row in self.grid:
+            for cell in row:
+                if cell is not None:
+                    l, i, p = cell
+                    m[l][i] = p
+        return m
+
+    def column(self, c: int) -> list[tuple[int, int, int]]:
+        return [self.grid[r][c] for r in range(self.rows) if self.grid[r][c] is not None]
+
+    def row_scan(self, r: int) -> list[tuple[int, int, int]]:
+        return [self.grid[r][c] for c in self.scan_cols(r) if self.grid[r][c] is not None]
+
+
+def _finish(staged, cols: int, sizes: list[int], serpentine: bool) -> SetupArray:
+    r0 = len(staged)
+    slid: list[list[tuple[int, int] | None]] = [[None] * cols for _ in range(r0)]
+    for c in range(cols):
+        vals = [staged[r][c] for r in range(r0) if staged[r][c] is not None]
+        h = len(vals)
+        for i, v in enumerate(vals):
+            slid[r0 - h + i][c] = v
+    first = next(r for r in range(r0) if any(x is not None for x in slid[r]))
+    rows = r0 - first
+    arr = SetupArray(rows, cols, [[None] * cols for _ in range(rows)], serpentine, sizes)
+    pos = 0
+    for r in range(rows):
+        for c in arr.scan_cols(r):
+            cell = slid[first + r][c]
+            if cell is not None:
+                arr.grid[r][c] = (cell[0], cell[1], pos)
+                pos += 1
+    return arr
+
+
+def setup_2way(m: int, n: int, cols: int) -> SetupArray:
+    assert cols >= 2 and m + n >= 1
+    ra = -(-m // cols)
+    rb = -(-n // cols)
+    r0 = ra + rb
+    staged: list[list[tuple[int, int] | None]] = [[None] * cols for _ in range(r0)]
+    for d in range(m):
+        staged[r0 - 1 - d // cols][cols - 1 - d % cols] = (0, m - 1 - d)
+    for d in range(n):
+        staged[rb - 1 - d // cols][d % cols] = (1, n - 1 - d)
+    return _finish(staged, cols, [m, n], False)
+
+
+def setup_kway(sizes: list[int]) -> SetupArray:
+    k = len(sizes)
+    assert k >= 2
+    rows_per = [-(-s // k) for s in sizes]
+    r0 = sum(rows_per)
+    staged: list[list[tuple[int, int] | None]] = [[None] * k for _ in range(r0)]
+    top = r0
+    for l, s in enumerate(sizes):
+        band_top = top - 1
+        for d in range(s):
+            r = band_top - d // k
+            c = (k - 1 - l - d % k) % k
+            assert staged[r][c] is None
+            staged[r][c] = (l, s - 1 - d)
+        top -= rows_per[l]
+    return _finish(staged, k, list(sizes), k >= 3)
+
+
+def _column_sort_stage(arr: SetupArray) -> Stage:
+    blocks = []
+    for c in range(arr.cols):
+        cells = arr.column(c)
+        if len(cells) < 2:
+            continue
+        out = tuple(x[2] for x in cells)
+        if len(arr.list_sizes) == 2:
+            up = tuple(x[2] for x in cells if x[0] == 0)
+            dn = tuple(x[2] for x in cells if x[0] == 1)
+            if not up or not dn:
+                continue
+            blocks.append(MergeS2(up, dn, out))
+        else:
+            if len({x[0] for x in cells}) <= 1:
+                continue
+            blocks.append(SortN(out))
+    return Stage("col-sort", blocks)
+
+
+def _row_sort_stage(arr: SetupArray, label: str = "row-sort") -> Stage:
+    blocks = []
+    for r in range(arr.rows):
+        pos = tuple(x[2] for x in arr.row_scan(r))
+        if len(pos) < 2:
+            continue
+        blocks.append(Cas(pos[0], pos[1]) if len(pos) == 2 else SortN(pos))
+    return Stage(label, blocks)
+
+
+def _full_column_stage(arr: SetupArray) -> Stage:
+    blocks = []
+    for c in range(arr.cols):
+        cells = arr.column(c)
+        if len(cells) >= 2:
+            blocks.append(SortN(tuple(x[2] for x in cells)))
+    return Stage("col-sort", blocks)
+
+
+def _edge_pair_stage(arr: SetupArray) -> Stage:
+    k = arr.cols
+    blocks = []
+
+    def pos(c, r):
+        cell = arr.grid[r][c]
+        return None if cell is None else cell[2]
+
+    r = 0
+    while r + 1 < arr.rows:
+        lo, hi = pos(k - 1, r), pos(k - 1, r + 1)
+        if lo is not None and hi is not None:
+            blocks.append(Cas(lo, hi))
+        r += 2
+    r = 1
+    while r + 1 < arr.rows:
+        lo, hi = pos(0, r), pos(0, r + 1)
+        if lo is not None and hi is not None:
+            blocks.append(Cas(lo, hi))
+        r += 2
+    return Stage("edge-pair-sort", blocks)
+
+
+def table1_stage_count(k: int) -> int:
+    if k <= 1:
+        return 0
+    if k == 2:
+        return 2
+    if k == 3:
+        return 3
+    if k in (4, 5):
+        return 4
+    if k == 6:
+        return 5
+    if k <= 14:
+        return 6
+    import math
+
+    return 6 + math.ceil(math.log2(k / 7.0))
+
+
+def loms_2way(m: int, n: int, cols: int) -> MergeDevice:
+    arr = setup_2way(m, n, cols)
+    total = m + n
+    stages = [s for s in (_column_sort_stage(arr), _row_sort_stage(arr)) if s.blocks]
+    return MergeDevice(
+        name=f"loms2-{cols}col-up{m}-dn{n}",
+        kind="loms",
+        list_sizes=[m, n],
+        input_map=arr.input_map(),
+        n=total,
+        stages=stages,
+        output_perm=list(range(total)),
+        grid=(arr.cols, arr.rows),
+    )
+
+
+def loms_kway(sizes: list[int]) -> MergeDevice:
+    k = len(sizes)
+    assert k >= 3
+    arr = setup_kway(sizes)
+    total = sum(sizes)
+    n_stages = table1_stage_count(k)
+    full_grid = (
+        total == arr.rows * arr.cols
+        and all(s == sizes[0] for s in sizes)
+        and sizes[0] % 2 == 1
+    )
+    stages = [_column_sort_stage(arr), _row_sort_stage(arr)]
+    for s in range(2, n_stages):
+        if s % 2 == 0:
+            if k == 3 and full_grid and s == 2:
+                stages.append(_edge_pair_stage(arr))
+            else:
+                stages.append(_full_column_stage(arr))
+        else:
+            stages.append(_row_sort_stage(arr))
+    stages = [s for s in stages if s.blocks]
+    equal_odd = k == 3 and all(s == sizes[0] for s in sizes) and sizes[0] % 2 == 1
+    median_tap = (min(2, len(stages)), total // 2) if equal_odd and total % 2 == 1 else None
+    return MergeDevice(
+        name=f"loms{k}-{'_'.join(map(str, sizes))}r",
+        kind="loms",
+        list_sizes=list(sizes),
+        input_map=arr.input_map(),
+        n=total,
+        stages=stages,
+        output_perm=list(range(total)),
+        median_tap=median_tap,
+        grid=(arr.cols, arr.rows),
+    )

@@ -1,0 +1,20 @@
+"""Single-Stage 2-way Merge Sorter device (Python mirror of
+``rust/src/sortnet/s2ms.rs``)."""
+
+from __future__ import annotations
+
+from .device import MergeDevice, MergeS2, Stage
+
+
+def s2ms(m: int, n: int) -> MergeDevice:
+    """UP-m/DN-n single-stage merge: one MergeS2 block."""
+    total = m + n
+    return MergeDevice(
+        name=f"s2ms-up{m}-dn{n}",
+        kind="s2ms",
+        list_sizes=[m, n],
+        input_map=[list(range(m)), list(range(m, total))],
+        n=total,
+        stages=[Stage("s2ms", [MergeS2(tuple(range(m)), tuple(range(m, total)), tuple(range(total)))])],
+        output_perm=list(range(total)),
+    )

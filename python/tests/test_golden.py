@@ -1,0 +1,41 @@
+"""Cross-implementation golden check: the Python netgen constructions
+must match the Rust crate's structurally (same setup arrays, same
+blocks, same maps). Goldens are emitted by ``loms netgen --golden
+tests/golden`` (and `make goldens`); a Rust test regenerates and
+compares them too, so drift on either side is caught."""
+
+import json
+import pathlib
+
+import pytest
+
+from compile.netgen import batcher, loms, s2ms
+
+GOLDEN = pathlib.Path(__file__).resolve().parents[2] / "tests" / "golden"
+
+CASES = {
+    "loms2_up8_dn8_2col": lambda: loms.loms_2way(8, 8, 2),
+    "loms2_up7_dn5_2col": lambda: loms.loms_2way(7, 5, 2),
+    "loms2_up32_dn32_8col": lambda: loms.loms_2way(32, 32, 8),
+    "loms3_7r": lambda: loms.loms_kway([7, 7, 7]),
+    "oem_up8_dn8": lambda: batcher.odd_even_merge(8),
+    "bims_up8_dn8": lambda: batcher.bitonic_merge(8),
+    "s2ms_up7_dn5": lambda: s2ms.s2ms(7, 5),
+}
+
+
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_matches_rust_golden(case):
+    path = GOLDEN / f"{case}.json"
+    if not path.exists():
+        pytest.skip(f"golden {path} not generated (run `make goldens`)")
+    rust = json.loads(path.read_text())
+    py = CASES[case]().to_json()
+    assert py["list_sizes"] == rust["list_sizes"], case
+    assert py["input_map"] == rust["input_map"], case
+    assert py["output_perm"] == rust["output_perm"], case
+    assert py.get("median_tap") == rust.get("median_tap"), case
+    assert py.get("grid") == rust.get("grid"), case
+    assert len(py["stages"]) == len(rust["stages"]), case
+    for ps, rs in zip(py["stages"], rust["stages"]):
+        assert ps["blocks"] == rs["blocks"], f"{case}: stage {ps['label']}"

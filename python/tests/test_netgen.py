@@ -1,0 +1,97 @@
+"""Construction tests for the Python netgen mirror (paper figures +
+exhaustive sorted-0-1 validation)."""
+
+import pytest
+
+from compile.netgen import batcher, loms, s2ms
+from compile.netgen.device import validate_merge_01
+
+
+def grid_as_paper(arr):
+    """Top row first, leftmost column first, (list, idx) cells."""
+    return [
+        [
+            (arr.grid[r][c][0], arr.grid[r][c][1]) if arr.grid[r][c] else None
+            for c in range(arr.cols - 1, -1, -1)
+        ]
+        for r in range(arr.rows - 1, -1, -1)
+    ]
+
+
+def test_fig1_up8_dn8_setup():
+    a = lambda i: (0, i)
+    b = lambda i: (1, i)
+    assert grid_as_paper(loms.setup_2way(8, 8, 2)) == [
+        [a(7), a(6)],
+        [a(5), a(4)],
+        [a(3), a(2)],
+        [a(1), a(0)],
+        [b(6), b(7)],
+        [b(4), b(5)],
+        [b(2), b(3)],
+        [b(0), b(1)],
+    ]
+
+
+def test_fig2_up1_dn8_setup():
+    b = lambda i: (1, i)
+    assert grid_as_paper(loms.setup_2way(1, 8, 2)) == [
+        [(0, 0), b(7)],
+        [b(6), b(5)],
+        [b(4), b(3)],
+        [b(2), b(1)],
+        [b(0), None],
+    ]
+
+
+def test_fig23_3c7r_setup():
+    a = lambda i: (0, i)
+    b = lambda i: (1, i)
+    c = lambda i: (2, i)
+    assert grid_as_paper(loms.setup_kway([7, 7, 7])) == [
+        [a(6), a(5), a(4)],
+        [a(3), a(2), a(1)],
+        [a(0), b(6), b(5)],
+        [b(4), b(3), b(2)],
+        [b(1), b(0), c(6)],
+        [c(5), c(4), c(3)],
+        [c(2), c(1), c(0)],
+    ]
+
+
+def test_fig6_worked_example():
+    d = loms.loms_kway([7, 7, 7])
+    out = d.merge([list(range(1, 8)), list(range(8, 15)), list(range(15, 22))])
+    assert out == list(range(1, 22))
+
+
+@pytest.mark.parametrize("m,n", [(1, 1), (1, 8), (8, 1), (7, 5), (8, 8), (16, 16), (9, 3)])
+@pytest.mark.parametrize("cols", [2, 4])
+def test_loms_2way_validates(m, n, cols):
+    validate_merge_01(loms.loms_2way(m, n, cols))
+
+
+@pytest.mark.parametrize("sizes", [[7, 7, 7], [5, 5, 5], [3, 3, 3], [4, 4, 4], [7, 5, 3]])
+def test_loms_kway_validates(sizes):
+    validate_merge_01(loms.loms_kway(sizes))
+
+
+@pytest.mark.parametrize("m", [1, 2, 4, 8, 16])
+def test_batcher_validates(m):
+    validate_merge_01(batcher.odd_even_merge(m))
+    validate_merge_01(batcher.bitonic_merge(m))
+
+
+@pytest.mark.parametrize("m,n", [(2, 2), (7, 5), (16, 16)])
+def test_s2ms_validates(m, n):
+    validate_merge_01(s2ms.s2ms(m, n))
+
+
+def test_loms_depths():
+    assert loms.loms_2way(32, 32, 2).depth() == 2
+    assert loms.loms_kway([7, 7, 7]).depth() == 3
+    assert loms.loms_kway([7, 7, 7]).median_tap == (2, 10)
+
+
+def test_table1():
+    assert [loms.table1_stage_count(k) for k in range(2, 8)] == [2, 3, 4, 4, 5, 6]

@@ -1,0 +1,93 @@
+//! Figure/table regeneration harness — shared by `benches/*` and the
+//! `loms report` CLI. One function per paper figure; each returns a
+//! [`FigReport`] whose rows/series mirror what the paper plots, computed
+//! from the frozen FPGA cost model (DESIGN.md §2 for the substitution).
+
+pub mod figures;
+pub mod timing;
+
+use std::fmt::Write as _;
+
+/// One plotted series.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub label: String,
+    /// (x, y) points; x is outputs (2-way figures) or bit-width (3-way).
+    pub points: Vec<(usize, f64)>,
+}
+
+/// A regenerated figure/table.
+#[derive(Debug, Clone)]
+pub struct FigReport {
+    pub id: String,
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    pub series: Vec<Series>,
+    /// Free-form annotation lines (headline numbers, fit marks, notes).
+    pub notes: Vec<String>,
+}
+
+impl FigReport {
+    /// CSV: `figure,series,x,y` rows plus `#`-prefixed notes.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "# {}: {}", self.id, self.title);
+        let _ = writeln!(s, "# x = {}, y = {}", self.x_label, self.y_label);
+        for n in &self.notes {
+            let _ = writeln!(s, "# {n}");
+        }
+        let _ = writeln!(s, "figure,series,x,y");
+        for ser in &self.series {
+            for &(x, y) in &ser.points {
+                let _ = writeln!(s, "{},{},{},{}", self.id, ser.label, x, y);
+            }
+        }
+        s
+    }
+
+    /// Human-readable table: series as columns over the x values.
+    pub fn to_table(&self) -> String {
+        let mut xs: Vec<usize> = self
+            .series
+            .iter()
+            .flat_map(|s| s.points.iter().map(|&(x, _)| x))
+            .collect();
+        xs.sort_unstable();
+        xs.dedup();
+        let mut s = String::new();
+        let _ = writeln!(s, "== {} — {} ==", self.id, self.title);
+        for n in &self.notes {
+            let _ = writeln!(s, "   {n}");
+        }
+        let _ = write!(s, "{:>8}", self.x_label);
+        for ser in &self.series {
+            let _ = write!(s, "{:>24}", ser.label);
+        }
+        let _ = writeln!(s);
+        for x in xs {
+            let _ = write!(s, "{x:>8}");
+            for ser in &self.series {
+                match ser.points.iter().find(|&&(px, _)| px == x) {
+                    Some(&(_, y)) => {
+                        let _ = write!(s, "{y:>24.3}");
+                    }
+                    None => {
+                        let _ = write!(s, "{:>24}", "-");
+                    }
+                }
+            }
+            let _ = writeln!(s);
+        }
+        s
+    }
+
+    /// Write the CSV under `bench_out/` (created if needed) and return
+    /// the path.
+    pub fn save_csv(&self, dir: &str) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = std::path::Path::new(dir).join(format!("{}.csv", self.id));
+        std::fs::write(&path, self.to_csv())?;
+        Ok(path)
+    }
+}

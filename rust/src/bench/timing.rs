@@ -1,0 +1,74 @@
+//! Minimal wall-clock benchmarking harness (the offline build has no
+//! criterion): warmup + N timed iterations, reporting ns/op with a
+//! simple min/median/mean spread. Used by `benches/*.rs`.
+
+use std::time::Instant;
+
+/// Result of one measured benchmark.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Measurement {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>12.0} ns/op (median {:>12.0}, min {:>12.0}, n={})",
+            self.name, self.mean_ns, self.median_ns, self.min_ns, self.iters
+        )
+    }
+}
+
+/// Time `f` (which should perform one operation) with auto-scaled
+/// iteration counts: warms up, then runs enough iterations to pass
+/// ~200 ms of total measurement, batched to amortise timer overhead.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> Measurement {
+    // Warmup + calibration.
+    let t0 = Instant::now();
+    let mut calib_iters = 0usize;
+    while t0.elapsed().as_millis() < 50 {
+        f();
+        calib_iters += 1;
+    }
+    let per_op = t0.elapsed().as_nanos() as f64 / calib_iters as f64;
+    let batch = ((5_000_000.0 / per_op).ceil() as usize).clamp(1, 100_000);
+    let samples = 40usize;
+    let mut times: Vec<f64> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        times.push(t.elapsed().as_nanos() as f64 / batch as f64);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    Measurement {
+        name: name.to_string(),
+        iters: batch * samples,
+        mean_ns: mean,
+        median_ns: times[times.len() / 2],
+        min_ns: times[0],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut x = 0u64;
+        let m = bench("noop-ish", || {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+            std::hint::black_box(x);
+        });
+        assert!(m.mean_ns > 0.0);
+        assert!(m.min_ns <= m.median_ns);
+        assert!(!m.row().is_empty());
+    }
+}

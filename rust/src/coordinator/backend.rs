@@ -1,0 +1,204 @@
+//! Execution backends for the merge service.
+//!
+//! * [`PjrtBackend`] — the production path: AOT-compiled artifacts on the
+//!   PJRT CPU client (Python never runs here).
+//! * [`SoftwareBackend`] — bit-exact software execution of the *same*
+//!   devices (used when artifacts are absent, for unroutable shapes, and
+//!   as the differential oracle in tests).
+
+use crate::runtime::{ArtifactMeta, Runtime};
+use crate::sortnet::exec::{ExecMode, ExecScratch};
+use crate::sortnet::network::MergeDevice;
+use crate::sortnet::{loms, s2ms};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+
+/// A batch executor over a fixed artifact set.
+///
+/// Not `Send`: PJRT handles are thread-confined (`Rc` internally), so
+/// the service constructs its backend *inside* the engine thread via a
+/// factory — see [`super::service::MergeService::start`].
+pub trait Backend {
+    /// The artifact shapes this backend serves.
+    fn artifacts(&self) -> Vec<ArtifactMeta>;
+    /// Execute one full batch for artifact `name`. `lists[l]` is
+    /// row-major `(batch, list_sizes[l])`; returns `(batch, total)`.
+    fn execute(&mut self, name: &str, lists: &[Vec<u32>]) -> Result<Vec<u32>>;
+    /// Backend label for metrics.
+    fn label(&self) -> &'static str;
+}
+
+/// PJRT-backed execution of `artifacts/*.hlo.txt`.
+pub struct PjrtBackend {
+    runtime: Runtime,
+}
+
+impl PjrtBackend {
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        Ok(PjrtBackend { runtime: Runtime::load(dir)? })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn artifacts(&self) -> Vec<ArtifactMeta> {
+        self.runtime.manifest.artifacts.clone()
+    }
+
+    fn execute(&mut self, name: &str, lists: &[Vec<u32>]) -> Result<Vec<u32>> {
+        self.runtime.executable_mut(name)?.execute_batch(lists)
+    }
+
+    fn label(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// Build the sortnet device matching an artifact's shape (the same
+/// construction the Python compile path used).
+pub fn device_for_meta(meta: &ArtifactMeta) -> MergeDevice {
+    let sizes = &meta.list_sizes;
+    if sizes.len() == 2 {
+        if meta.device.starts_with("s2ms") {
+            s2ms::s2ms(sizes[0], sizes[1])
+        } else {
+            // Column count from the device name (loms2-<c>col-...), else 2.
+            let cols = meta
+                .device
+                .split('-')
+                .find_map(|part| part.strip_suffix("col").and_then(|c| c.parse().ok()))
+                .unwrap_or(2);
+            loms::loms_2way(sizes[0], sizes[1], cols)
+        }
+    } else {
+        loms::loms_kway(sizes)
+    }
+}
+
+/// Software twin of the artifact set (same shapes, bit-exact semantics).
+pub struct SoftwareBackend {
+    metas: Vec<ArtifactMeta>,
+    devices: HashMap<String, MergeDevice>,
+    scratch: ExecScratch<u32>,
+}
+
+impl SoftwareBackend {
+    /// Mirror an artifact set in software.
+    pub fn new(metas: Vec<ArtifactMeta>) -> Self {
+        let devices = metas.iter().map(|m| (m.name.clone(), device_for_meta(m))).collect();
+        SoftwareBackend { metas, devices, scratch: ExecScratch::new() }
+    }
+
+    /// A default artifact set matching `python/compile/model.py`'s
+    /// variants — lets everything run without `make artifacts`.
+    pub fn default_set() -> Self {
+        let mk = |name: &str, device: &str, sizes: Vec<usize>, batch: usize| ArtifactMeta {
+            name: name.into(),
+            file: String::new(),
+            total: sizes.iter().sum(),
+            list_sizes: sizes,
+            batch,
+            block_b: batch,
+            plan_steps: 0,
+            hw_stages: 0,
+            device: device.into(),
+        };
+        SoftwareBackend::new(vec![
+            mk("loms2_up32_dn32_b256", "loms2-2col-up32-dn32", vec![32, 32], 256),
+            mk("loms2_up64_dn64_b128", "loms2-2col-up64-dn64", vec![64, 64], 128),
+            mk("loms2_up128_dn128_b16", "loms2-4col-up128-dn128", vec![128, 128], 16),
+            mk("loms2_up256_dn256_b32", "loms2-8col-up256-dn256", vec![256, 256], 32),
+            mk("loms3_7r_b256", "loms3-7_7_7r", vec![7, 7, 7], 256),
+        ])
+    }
+}
+
+impl Backend for SoftwareBackend {
+    fn artifacts(&self) -> Vec<ArtifactMeta> {
+        self.metas.clone()
+    }
+
+    fn execute(&mut self, name: &str, lists: &[Vec<u32>]) -> Result<Vec<u32>> {
+        let meta = self
+            .metas
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| anyhow!("no software device {name:?}"))?;
+        let d = &self.devices[name];
+        let mut out = Vec::with_capacity(meta.batch * meta.total);
+        let mut v = vec![0u32; d.n];
+        for row in 0..meta.batch {
+            for (l, &s) in meta.list_sizes.iter().enumerate() {
+                let slice = &lists[l][row * s..(row + 1) * s];
+                for (i, &x) in slice.iter().enumerate() {
+                    v[d.input_map[l][i]] = x;
+                }
+            }
+            self.scratch
+                .run(d, &mut v, ExecMode::Fast, None)
+                .map_err(|e| anyhow!("{name}: {e}"))?;
+            out.extend(d.output_perm.iter().map(|&p| v[p]));
+        }
+        Ok(out)
+    }
+
+    fn label(&self) -> &'static str {
+        "software"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn software_backend_merges() {
+        let mut b = SoftwareBackend::default_set();
+        let metas = b.artifacts();
+        let meta = metas.iter().find(|m| m.name == "loms2_up32_dn32_b256").unwrap();
+        let mut rng = Rng::new(9);
+        let lists: Vec<Vec<u32>> = meta
+            .list_sizes
+            .iter()
+            .map(|&s| {
+                let mut flat = Vec::new();
+                for _ in 0..meta.batch {
+                    flat.extend(rng.sorted_list(s, 10_000));
+                }
+                flat
+            })
+            .collect();
+        let out = b.execute("loms2_up32_dn32_b256", &lists).unwrap();
+        for row in 0..meta.batch {
+            let got = &out[row * meta.total..(row + 1) * meta.total];
+            assert!(got.windows(2).all(|w| w[0] <= w[1]), "row {row}");
+        }
+    }
+
+    #[test]
+    fn device_for_meta_parses_cols() {
+        let m = ArtifactMeta {
+            name: "x".into(),
+            file: String::new(),
+            list_sizes: vec![128, 128],
+            batch: 1,
+            total: 256,
+            block_b: 1,
+            plan_steps: 0,
+            hw_stages: 0,
+            device: "loms2-4col-up128-dn128".into(),
+        };
+        let d = device_for_meta(&m);
+        assert_eq!(d.grid.unwrap().0, 4);
+    }
+
+    #[test]
+    fn unknown_artifact_rejected() {
+        let mut b = SoftwareBackend::default_set();
+        assert!(b.execute("nope", &[]).is_err());
+    }
+}

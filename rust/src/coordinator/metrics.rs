@@ -1,0 +1,144 @@
+//! Service metrics: counters, padding efficiency and a fixed-bucket
+//! latency histogram (lock-free enough for the request path: one mutex,
+//! short critical sections).
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Power-of-2 latency buckets from 1 µs up to ~4 s.
+const BUCKETS: usize = 23;
+
+#[derive(Debug, Default)]
+struct Inner {
+    requests: u64,
+    responses: u64,
+    batches: u64,
+    rows_padded: u64,
+    rows_real: u64,
+    software_served: u64,
+    rejected: u64,
+    latency_buckets: [u64; BUCKETS],
+    latency_sum_ns: u128,
+}
+
+/// Shared metrics handle.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+/// A point-in-time snapshot.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub responses: u64,
+    pub batches: u64,
+    pub rows_padded: u64,
+    pub rows_real: u64,
+    pub software_served: u64,
+    pub rejected: u64,
+    pub mean_latency_us: f64,
+    pub p50_latency_us: f64,
+    pub p99_latency_us: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    pub fn on_request(&self) {
+        self.inner.lock().unwrap().requests += 1;
+    }
+
+    pub fn on_rejected(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    pub fn on_batch(&self, real_rows: usize, padded_rows: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.rows_real += real_rows as u64;
+        g.rows_padded += padded_rows as u64;
+    }
+
+    pub fn on_software(&self) {
+        self.inner.lock().unwrap().software_served += 1;
+    }
+
+    pub fn on_response(&self, latency: Duration) {
+        let mut g = self.inner.lock().unwrap();
+        g.responses += 1;
+        let ns = latency.as_nanos();
+        g.latency_sum_ns += ns;
+        let us = (ns / 1_000).max(1) as u64;
+        let bucket = (63 - us.leading_zeros() as usize).min(BUCKETS - 1);
+        g.latency_buckets[bucket] += 1;
+    }
+
+    fn percentile(buckets: &[u64; BUCKETS], total: u64, q: f64) -> f64 {
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (total as f64 * q).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                // midpoint of the bucket [2^i, 2^(i+1)) µs
+                return (1u64 << i) as f64 * 1.5;
+            }
+        }
+        (1u64 << (BUCKETS - 1)) as f64
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let g = self.inner.lock().unwrap();
+        Snapshot {
+            requests: g.requests,
+            responses: g.responses,
+            batches: g.batches,
+            rows_padded: g.rows_padded,
+            rows_real: g.rows_real,
+            software_served: g.software_served,
+            rejected: g.rejected,
+            mean_latency_us: if g.responses == 0 {
+                0.0
+            } else {
+                g.latency_sum_ns as f64 / g.responses as f64 / 1_000.0
+            },
+            p50_latency_us: Self::percentile(&g.latency_buckets, g.responses, 0.50),
+            p99_latency_us: Self::percentile(&g.latency_buckets, g.responses, 0.99),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.on_request();
+        m.on_request();
+        m.on_batch(3, 1);
+        m.on_response(Duration::from_micros(100));
+        m.on_response(Duration::from_micros(200));
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.responses, 2);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.rows_real, 3);
+        assert_eq!(s.rows_padded, 1);
+        assert!(s.mean_latency_us >= 100.0 && s.mean_latency_us <= 200.0);
+        assert!(s.p50_latency_us > 0.0);
+        assert!(s.p99_latency_us >= s.p50_latency_us);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s, Snapshot::default());
+    }
+}

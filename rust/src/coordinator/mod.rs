@@ -1,0 +1,17 @@
+//! Layer 3: the merge coordinator — a batched merge *service* in the
+//! mould of a serving-system router (request queue → shape router →
+//! dynamic batcher → PJRT worker), plus the hierarchical merge planner
+//! that turns the compiled LOMS ladder into an external sorter.
+
+pub mod backend;
+pub mod metrics;
+pub mod planner;
+pub mod request;
+pub mod router;
+pub mod service;
+
+pub use backend::{Backend, PjrtBackend, SoftwareBackend};
+pub use metrics::{Metrics, Snapshot};
+pub use request::{MergeRequest, MergeResponse};
+pub use router::{Route, Router};
+pub use service::{MergeService, ServiceConfig};

@@ -1,0 +1,132 @@
+//! Hierarchical merge planning: external sort through the merge service.
+//!
+//! The classic hardware-merge-sorter deployment (§II: merge networks as
+//! building blocks of larger sorters): split the keys into chunks, sort
+//! each chunk locally, then run a binary merge tree where every level's
+//! pairwise merges are *batched through the compiled LOMS ladder*
+//! (32+32 → 64, 64+64 → 128, …). Levels beyond the largest artifact fall
+//! back to a k-way software merge of the surviving runs.
+
+use super::service::MergeService;
+use anyhow::Result;
+use std::collections::BinaryHeap;
+
+/// External-sort statistics.
+#[derive(Debug, Clone, Default)]
+pub struct SortStats {
+    pub keys: usize,
+    pub chunks: usize,
+    pub network_levels: usize,
+    pub network_merges: usize,
+    pub final_kway_runs: usize,
+}
+
+/// Sort `data` by chunking + hierarchical merging through `service`.
+/// `chunk` is the initial run length (typically the smallest artifact's
+/// list size); `max_network` caps the list size sent through the merge
+/// network ladder.
+pub fn external_sort(
+    service: &MergeService,
+    data: &[u32],
+    chunk: usize,
+    max_network: usize,
+) -> Result<(Vec<u32>, SortStats)> {
+    let mut stats = SortStats { keys: data.len(), ..Default::default() };
+    if data.is_empty() {
+        return Ok((Vec::new(), stats));
+    }
+    // Phase 1: sorted runs.
+    let mut runs: Vec<Vec<u32>> = data
+        .chunks(chunk)
+        .map(|c| {
+            let mut v = c.to_vec();
+            v.sort_unstable();
+            v
+        })
+        .collect();
+    stats.chunks = runs.len();
+    // Phase 2: binary merge tree through the service, level by level.
+    while runs.len() > 1 && runs[0].len() < max_network {
+        let mut next: Vec<Vec<u32>> = Vec::with_capacity(runs.len().div_ceil(2));
+        let mut rxs = Vec::new();
+        let mut odd = None;
+        let mut iter = runs.into_iter();
+        while let Some(a) = iter.next() {
+            match iter.next() {
+                Some(b) => rxs.push(service.submit(vec![a, b])),
+                None => odd = Some(a),
+            }
+        }
+        for rx in rxs {
+            let resp = rx.recv().map_err(|_| anyhow::anyhow!("merge rejected"))?;
+            stats.network_merges += 1;
+            next.push(resp.merged);
+        }
+        if let Some(a) = odd {
+            next.push(a);
+        }
+        stats.network_levels += 1;
+        runs = next;
+    }
+    // Phase 3: k-way software merge of the surviving runs.
+    stats.final_kway_runs = runs.len();
+    Ok((kway_merge(runs), stats))
+}
+
+/// Heap-based k-way merge of sorted runs.
+pub fn kway_merge(runs: Vec<Vec<u32>>) -> Vec<u32> {
+    let total: usize = runs.iter().map(Vec::len).sum();
+    let mut out = Vec::with_capacity(total);
+    // Min-heap via Reverse of (value, run, idx).
+    let mut heap = BinaryHeap::new();
+    for (r, run) in runs.iter().enumerate() {
+        if !run.is_empty() {
+            heap.push(std::cmp::Reverse((run[0], r, 0usize)));
+        }
+    }
+    while let Some(std::cmp::Reverse((v, r, i))) = heap.pop() {
+        out.push(v);
+        if i + 1 < runs[r].len() {
+            heap.push(std::cmp::Reverse((runs[r][i + 1], r, i + 1)));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::SoftwareBackend;
+    use crate::coordinator::service::{MergeService, ServiceConfig};
+    use crate::util::Rng;
+
+    #[test]
+    fn kway_merge_correct() {
+        let runs = vec![vec![1, 5, 9], vec![2, 6], vec![], vec![3, 4, 7, 8]];
+        assert_eq!(kway_merge(runs), vec![1, 2, 3, 4, 5, 6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn external_sort_small() {
+        let s = MergeService::start(|| Ok(SoftwareBackend::default_set()), ServiceConfig::default()).unwrap();
+        let mut rng = Rng::new(11);
+        let data: Vec<u32> = (0..5000).map(|_| rng.next_u32() >> 4).collect();
+        let (sorted, stats) = external_sort(&s, &data, 32, 512).unwrap();
+        let mut want = data.clone();
+        want.sort_unstable();
+        assert_eq!(sorted, want);
+        assert_eq!(stats.keys, 5000);
+        assert_eq!(stats.chunks, 5000usize.div_ceil(32));
+        assert!(stats.network_levels >= 3, "ladder used: {stats:?}");
+        assert!(stats.network_merges > 50);
+    }
+
+    #[test]
+    fn external_sort_edge_cases() {
+        let s = MergeService::start(|| Ok(SoftwareBackend::default_set()), ServiceConfig::default()).unwrap();
+        assert_eq!(external_sort(&s, &[], 32, 512).unwrap().0, Vec::<u32>::new());
+        assert_eq!(external_sort(&s, &[7], 32, 512).unwrap().0, vec![7]);
+        let data = vec![5u32; 100]; // all duplicates
+        assert_eq!(external_sort(&s, &data, 32, 512).unwrap().0, data);
+    }
+}

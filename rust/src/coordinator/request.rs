@@ -1,0 +1,63 @@
+//! Merge request/response types of the coordinator (L3).
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// A single k-way merge request: k sorted ascending u32 lists.
+#[derive(Debug, Clone)]
+pub struct MergeRequest {
+    pub id: u64,
+    pub lists: Vec<Vec<u32>>,
+    /// Submission time (for latency accounting).
+    pub submitted: Instant,
+}
+
+impl MergeRequest {
+    pub fn new(id: u64, lists: Vec<Vec<u32>>) -> Self {
+        MergeRequest { id, lists, submitted: Instant::now() }
+    }
+
+    /// Shape signature used for routing.
+    pub fn sizes(&self) -> Vec<usize> {
+        self.lists.iter().map(Vec::len).collect()
+    }
+
+    /// Validate the hardware precondition (each list sorted ascending).
+    pub fn check_sorted(&self) -> Result<(), String> {
+        for (l, list) in self.lists.iter().enumerate() {
+            if list.windows(2).any(|w| w[0] > w[1]) {
+                return Err(format!("request {}: list {l} is not sorted", self.id));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The merged result.
+#[derive(Debug, Clone)]
+pub struct MergeResponse {
+    pub id: u64,
+    pub merged: Vec<u32>,
+    /// End-to-end latency in nanoseconds.
+    pub latency_ns: u128,
+    /// Which artifact (or "software") served it.
+    pub served_by: String,
+}
+
+/// Response channel handed back on submission.
+pub type ResponseRx = mpsc::Receiver<MergeResponse>;
+pub type ResponseTx = mpsc::Sender<MergeResponse>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_and_sorted_check() {
+        let r = MergeRequest::new(1, vec![vec![1, 2, 3], vec![4, 5]]);
+        assert_eq!(r.sizes(), vec![3, 2]);
+        r.check_sorted().unwrap();
+        let bad = MergeRequest::new(2, vec![vec![3, 1]]);
+        assert!(bad.check_sorted().is_err());
+    }
+}

@@ -1,0 +1,146 @@
+//! Request routing: map a merge request's shape to a compiled artifact.
+//!
+//! Exact-shape matches route directly. Smaller requests route to the
+//! tightest artifact that dominates them per list (k must match): lists
+//! are padded with `u32::MAX` sentinels — sentinels sort to the tail of
+//! the merged output, so the first `Σ real sizes` outputs are exactly
+//! the true merge (data-oblivious networks make this safe for any
+//! input). Requests no artifact dominates are served by the software
+//! backend.
+
+use super::request::MergeRequest;
+use crate::runtime::ArtifactMeta;
+
+/// Padding sentinel: sorts after every real key. Real keys must be
+/// < u32::MAX (documented service contract).
+pub const PAD: u32 = u32::MAX;
+
+/// A routing decision.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Route {
+    /// Serve with this artifact (index into the router's table).
+    Artifact { idx: usize },
+    /// No artifact dominates: execute in software.
+    Software,
+}
+
+/// Shape router over the loaded artifact set.
+#[derive(Debug, Clone)]
+pub struct Router {
+    artifacts: Vec<ArtifactMeta>,
+}
+
+impl Router {
+    pub fn new(mut artifacts: Vec<ArtifactMeta>) -> Self {
+        // Prefer tighter (smaller total) artifacts at equal k.
+        artifacts.sort_by_key(|a| (a.list_sizes.len(), a.total, a.name.clone()));
+        Router { artifacts }
+    }
+
+    pub fn artifacts(&self) -> &[ArtifactMeta] {
+        &self.artifacts
+    }
+
+    /// Route a request shape. Exact match wins; otherwise the smallest
+    /// dominating artifact with the same list count.
+    pub fn route(&self, sizes: &[usize]) -> Route {
+        let exact = self
+            .artifacts
+            .iter()
+            .position(|a| a.list_sizes == sizes);
+        if let Some(idx) = exact {
+            return Route::Artifact { idx };
+        }
+        let dominating = self.artifacts.iter().position(|a| {
+            a.list_sizes.len() == sizes.len()
+                && a.list_sizes.iter().zip(sizes).all(|(&cap, &want)| cap >= want)
+        });
+        match dominating {
+            Some(idx) => Route::Artifact { idx },
+            None => Route::Software,
+        }
+    }
+
+    /// Pad a request's lists to the artifact's shape with sentinels.
+    pub fn pad_lists(&self, idx: usize, req: &MergeRequest) -> Vec<Vec<u32>> {
+        let meta = &self.artifacts[idx];
+        req.lists
+            .iter()
+            .zip(&meta.list_sizes)
+            .map(|(list, &cap)| {
+                let mut v = list.clone();
+                v.resize(cap, PAD);
+                v
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(name: &str, sizes: Vec<usize>, batch: usize) -> ArtifactMeta {
+        let total = sizes.iter().sum();
+        ArtifactMeta {
+            name: name.into(),
+            file: format!("{name}.hlo.txt"),
+            list_sizes: sizes,
+            batch,
+            total,
+            block_b: 1,
+            plan_steps: 1,
+            hw_stages: 1,
+            device: name.into(),
+        }
+    }
+
+    fn router() -> Router {
+        Router::new(vec![
+            meta("m32", vec![32, 32], 64),
+            meta("m64", vec![64, 64], 32),
+            meta("m3x7", vec![7, 7, 7], 64),
+        ])
+    }
+
+    #[test]
+    fn exact_match() {
+        let r = router();
+        let Route::Artifact { idx } = r.route(&[32, 32]) else { panic!() };
+        assert_eq!(r.artifacts()[idx].name, "m32");
+        let Route::Artifact { idx } = r.route(&[7, 7, 7]) else { panic!() };
+        assert_eq!(r.artifacts()[idx].name, "m3x7");
+    }
+
+    #[test]
+    fn smaller_requests_route_to_tightest_dominating() {
+        let r = router();
+        let Route::Artifact { idx } = r.route(&[10, 20]) else { panic!() };
+        assert_eq!(r.artifacts()[idx].name, "m32");
+        let Route::Artifact { idx } = r.route(&[33, 1]) else { panic!() };
+        assert_eq!(r.artifacts()[idx].name, "m64");
+    }
+
+    #[test]
+    fn unroutable_goes_software() {
+        let r = router();
+        assert_eq!(r.route(&[100, 100]), Route::Software);
+        assert_eq!(r.route(&[1, 1, 1, 1]), Route::Software);
+    }
+
+    #[test]
+    fn padding_preserves_merge_semantics() {
+        let r = router();
+        let req = MergeRequest::new(1, vec![vec![5, 9], vec![1, 7, 8]]);
+        let Route::Artifact { idx } = r.route(&req.sizes()) else { panic!() };
+        let padded = r.pad_lists(idx, &req);
+        assert_eq!(padded[0].len(), 32);
+        assert_eq!(padded[1].len(), 32);
+        assert_eq!(&padded[0][..2], &[5, 9]);
+        assert!(padded[0][2..].iter().all(|&x| x == PAD));
+        // Sentinels sort after real keys: merged prefix == true merge.
+        let mut all: Vec<u32> = padded.concat();
+        all.sort_unstable();
+        assert_eq!(&all[..5], &[1, 5, 7, 8, 9]);
+    }
+}

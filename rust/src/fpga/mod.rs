@@ -1,0 +1,13 @@
+//! Structural FPGA cost model: the stand-in for Vivado synthesis + static
+//! timing analysis on the paper's two target products (DESIGN.md §2).
+//!
+//! * [`device`] — product descriptions + calibrated timing constants.
+//! * [`mux`] — output multiplexer tree shapes per methodology/family.
+//! * [`cost`] — delay (ns) and LUT usage for any `MergeDevice`; fit check.
+
+pub mod cost;
+pub mod device;
+pub mod mux;
+
+pub use cost::{CostModel, CostReport};
+pub use device::{FpgaDevice, Methodology, ULTRASCALE_PLUS, VERSAL_PRIME};

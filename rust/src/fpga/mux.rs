@@ -1,0 +1,213 @@
+//! Output-multiplexer tree shapes.
+//!
+//! Every single-stage sorter output (S2MS rank outputs, N-sorter outputs)
+//! is a wide one-of-C multiplexer built from LUTs. How the tree maps onto
+//! the fabric is what separates the devices and methodologies (§VI-A):
+//!
+//! * **2insLUT**: each leaf LUT takes 2 candidate data bits + 1 select.
+//! * **4insLUT**: each leaf LUT takes 4 candidate bits + 2 selects (one
+//!   select formed by a *series* function LUT — denser, slower).
+//! * **Ultrascale+**: up to 8 leaf LUTs combine inside one slice through
+//!   the hard MUXF7/F8/F9 levels (Fig. 7) — no interconnect hops. Wider
+//!   trees chain a second series slice through the fabric (the step in
+//!   Figs. 11/16 between 16 and 32 outputs).
+//! * **Versal Prime**: no MUXF\*; every 2:1 combine is another LUT
+//!   reached through the programmable interconnect — one extra series
+//!   level per doubling (the constant slope in Figs. 11/12).
+
+use super::device::{Family, FpgaDevice, Methodology, TimingParams};
+
+/// Structural summary of one output's mux tree.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MuxTree {
+    /// Candidate inputs (C).
+    pub candidates: usize,
+    /// Leaf LUT count (first level).
+    pub leaf_luts: usize,
+    /// Combine LUTs beyond the leaves (0 on Ultrascale+ while the tree
+    /// fits the hard MUXF levels of the slices).
+    pub combine_luts: usize,
+    /// Series slice count on Ultrascale+ (1 slice = LUT + ≤3 MUXF
+    /// levels); series LUT levels on Versal.
+    pub series_levels: usize,
+    /// Data-path delay from the mux slice inputs to the tree output,
+    /// selects assumed ready (ns).
+    pub delay: f64,
+}
+
+fn leaf_width(meth: Methodology) -> usize {
+    match meth {
+        Methodology::TwoInsLut => 2,
+        Methodology::FourInsLut => 4,
+    }
+}
+
+/// MUXF levels needed to combine `n` leaf LUTs inside one US+ slice
+/// (n ≤ 8): 1 leaf → 0 levels, 2 → 1 (F7), 3-4 → 2 (F7+F8), 5-8 → 3.
+fn muxf_levels(n: usize) -> usize {
+    match n {
+        0 | 1 => 0,
+        2 => 1,
+        3 | 4 => 2,
+        _ => 3,
+    }
+}
+
+/// Build the mux-tree profile for one output with `c` candidates.
+pub fn mux_tree(c: usize, meth: Methodology, fpga: &FpgaDevice) -> MuxTree {
+    let t: &TimingParams = &fpga.t;
+    let lw = leaf_width(meth);
+    if c <= 1 {
+        return MuxTree { candidates: c, leaf_luts: 0, combine_luts: 0, series_levels: 0, delay: 0.0 };
+    }
+    let leaves = c.div_ceil(lw);
+    match fpga.family {
+        Family::UltrascalePlus => {
+            // Hierarchy of slices: a slice absorbs up to 8 inputs via its
+            // LUTs... at the leaf level each LUT takes `lw` candidates, so
+            // one slice covers 8*lw candidates. Deeper levels treat the
+            // previous level's slice outputs as candidates again.
+            let mut level_inputs = leaves; // units entering the current level (LUT leaves)
+            let mut slices = 1usize;
+            let mut luts = leaves;
+            let mut delay = t.t_lut + t.t_muxf * muxf_levels(level_inputs.min(8)) as f64;
+            while level_inputs > 8 {
+                // outputs of this level's slices become inputs of the next
+                let outs = level_inputs.div_ceil(8);
+                let next_leaves = outs.div_ceil(lw);
+                luts += next_leaves;
+                delay += t.t_net + t.t_lut + t.t_muxf * muxf_levels(next_leaves.min(8)) as f64;
+                slices += 1;
+                level_inputs = next_leaves;
+            }
+            MuxTree {
+                candidates: c,
+                leaf_luts: leaves,
+                combine_luts: luts - leaves,
+                series_levels: slices,
+                delay,
+            }
+        }
+        Family::VersalPrime => {
+            // Pure LUT tree: each combine LUT merges up to `lw` child
+            // outputs; every level crosses the interconnect.
+            let mut luts = leaves;
+            let mut level = leaves;
+            let mut levels = 1usize;
+            let mut delay = t.t_lut;
+            while level > 1 {
+                level = level.div_ceil(lw);
+                luts += level;
+                levels += 1;
+                delay += t.t_net + t.t_lut;
+                if level == 1 {
+                    break;
+                }
+            }
+            MuxTree {
+                candidates: c,
+                leaf_luts: leaves,
+                combine_luts: luts - leaves,
+                series_levels: levels,
+                delay,
+            }
+        }
+    }
+}
+
+/// Select-decode LUTs per output (width-independent: select signals are
+/// shared by all data bits of an output). 2insLUT selects are raw `ge_*`
+/// signals plus one composed signal per leaf pair; 4insLUT additionally
+/// spends one series function LUT per leaf (§VI-A).
+pub fn select_luts(c: usize, meth: Methodology) -> usize {
+    if c <= 2 {
+        return 0;
+    }
+    let lw = leaf_width(meth);
+    let leaves = c.div_ceil(lw);
+    match meth {
+        Methodology::TwoInsLut => leaves / 2,
+        Methodology::FourInsLut => leaves / 2 + leaves,
+    }
+}
+
+/// Extra select-path latency before the tree can switch (ns): the
+/// 4insLUT composed select function is produced by a series LUT (§VI-A).
+pub fn select_extra_delay(meth: Methodology, fpga: &FpgaDevice) -> f64 {
+    match meth {
+        Methodology::TwoInsLut => 0.0,
+        Methodology::FourInsLut => fpga.t.t_net + fpga.t.t_lut,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::device::{ULTRASCALE_PLUS, VERSAL_PRIME};
+
+    #[test]
+    fn single_candidate_is_wire() {
+        let m = mux_tree(1, Methodology::TwoInsLut, &ULTRASCALE_PLUS);
+        assert_eq!(m.leaf_luts, 0);
+        assert_eq!(m.delay, 0.0);
+    }
+
+    #[test]
+    fn usplus_one_slice_up_to_16_candidates_2inslut() {
+        // §VII-A: only 1 series slice for up to 16 outputs (16 candidates).
+        for c in [2usize, 4, 8, 16] {
+            let m = mux_tree(c, Methodology::TwoInsLut, &ULTRASCALE_PLUS);
+            assert_eq!(m.series_levels, 1, "c={c}");
+            assert_eq!(m.leaf_luts, c.div_ceil(2));
+            assert_eq!(m.combine_luts, 0, "hard MUXF combining is free");
+        }
+        // 32 and 64 candidates: 2 series slices (the Fig.-11 step).
+        for c in [17usize, 32, 64, 128, 256] {
+            let m = mux_tree(c, Methodology::TwoInsLut, &ULTRASCALE_PLUS);
+            assert_eq!(m.series_levels, 2, "c={c}");
+        }
+    }
+
+    #[test]
+    fn usplus_delay_steps_with_slices() {
+        let d16 = mux_tree(16, Methodology::TwoInsLut, &ULTRASCALE_PLUS).delay;
+        let d32 = mux_tree(32, Methodology::TwoInsLut, &ULTRASCALE_PLUS).delay;
+        let d64 = mux_tree(64, Methodology::TwoInsLut, &ULTRASCALE_PLUS).delay;
+        assert!(d32 > d16);
+        // within the same slice count the delay is flat-ish
+        assert!((d64 - d32).abs() < 0.08, "d32={d32} d64={d64}");
+    }
+
+    #[test]
+    fn versal_delay_grows_per_doubling() {
+        // No MUXF*: every doubling adds a series LUT level (§VII-A).
+        let meth = Methodology::TwoInsLut;
+        let mut prev = mux_tree(4, meth, &VERSAL_PRIME);
+        for c in [8usize, 16, 32, 64] {
+            let m = mux_tree(c, meth, &VERSAL_PRIME);
+            assert!(m.series_levels >= prev.series_levels, "c={c}");
+            assert!(m.delay > prev.delay, "c={c}");
+            prev = m;
+        }
+    }
+
+    #[test]
+    fn versal_pays_combine_luts_usplus_does_not() {
+        let u = mux_tree(16, Methodology::TwoInsLut, &ULTRASCALE_PLUS);
+        let v = mux_tree(16, Methodology::TwoInsLut, &VERSAL_PRIME);
+        assert_eq!(u.combine_luts, 0);
+        assert!(v.combine_luts > 0);
+        assert!(u.leaf_luts == v.leaf_luts);
+    }
+
+    #[test]
+    fn fourinslut_denser_but_slower_path() {
+        let two = mux_tree(16, Methodology::TwoInsLut, &VERSAL_PRIME);
+        let four = mux_tree(16, Methodology::FourInsLut, &VERSAL_PRIME);
+        assert!(four.leaf_luts < two.leaf_luts);
+        assert!(
+            select_extra_delay(Methodology::FourInsLut, &VERSAL_PRIME)
+                > select_extra_delay(Methodology::TwoInsLut, &VERSAL_PRIME)
+        );
+    }
+}

@@ -1,0 +1,27 @@
+//! # loms — List Offset Merge Sorters
+//!
+//! A reproduction of *"Fast and Efficient Merge of Sorted Input Lists in
+//! Hardware Using List Offset Merge Sorters"* (Kent & Pattichis, 2025) as
+//! a three-layer Rust + JAX/Pallas system:
+//!
+//! * [`sortnet`] — construction, bit-exact execution and exhaustive
+//!   validation of every device family in the paper (LOMS, S2MS,
+//!   Batcher OEM/Bitonic, N-sorters, MWMS).
+//! * [`fpga`] — the structural FPGA cost model (Kintex Ultrascale+ /
+//!   Versal Prime; 2insLUT / 4insLUT) that regenerates the paper's
+//!   propagation-delay and LUT-usage figures.
+//! * [`runtime`] — PJRT client that loads the AOT-compiled JAX/Pallas
+//!   merge kernels (`artifacts/*.hlo.txt`) and executes them.
+//! * [`coordinator`] — the batched merge service (router, dynamic
+//!   batcher, workers, metrics) and the hierarchical merge planner.
+//! * [`bench`] — figure/table regeneration harness shared by `benches/`.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod bench;
+pub mod coordinator;
+pub mod fpga;
+pub mod runtime;
+pub mod sortnet;
+pub mod util;

@@ -1,0 +1,267 @@
+//! `loms` — the coordinator binary.
+//!
+//! Subcommands:
+//!   report   [--figure <id|all>] [--csv-dir DIR]   regenerate paper figures
+//!   netgen   --kind K [options] [--out FILE]       export a device as JSON
+//!   goldens  [--dir tests/golden]                  write the cross-check set
+//!   validate --kind K [options]                    exhaustive 0-1 validation
+//!   serve    [--artifacts DIR] [--requests N]      run the merge service demo
+//!   sort     [--n N] [--chunk C] [--artifacts DIR] external-sort driver
+//!   selftest                                       quick end-to-end check
+//!
+//! (Arg parsing is hand-rolled: the offline build vendors no clap.)
+
+use anyhow::{anyhow, bail, Context, Result};
+use loms::bench::figures;
+use loms::coordinator::{planner, MergeService, PjrtBackend, ServiceConfig, SoftwareBackend};
+use loms::sortnet::validate::{validate_median_01, validate_merge_01};
+use loms::sortnet::{batcher, json, loms as lomsnet, mwms, s2ms, MergeDevice};
+use loms::util::Rng;
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+/// Parse `--key value` pairs after the subcommand.
+fn opts(args: &[String]) -> Result<HashMap<String, String>> {
+    let mut m = HashMap::new();
+    let mut it = args.iter();
+    while let Some(k) = it.next() {
+        let k = k
+            .strip_prefix("--")
+            .ok_or_else(|| anyhow!("expected --option, got {k:?}"))?;
+        let v = it.next().cloned().unwrap_or_else(|| "true".into());
+        m.insert(k.to_string(), v);
+    }
+    Ok(m)
+}
+
+fn get_usize(o: &HashMap<String, String>, k: &str, default: usize) -> Result<usize> {
+    match o.get(k) {
+        Some(v) => v.parse().with_context(|| format!("--{k} {v:?}")),
+        None => Ok(default),
+    }
+}
+
+/// Build a device from `--kind` + options (shared by netgen/validate).
+fn device_from_opts(o: &HashMap<String, String>) -> Result<MergeDevice> {
+    let kind = o.get("kind").map(String::as_str).unwrap_or("loms2");
+    Ok(match kind {
+        "loms2" => {
+            let m = get_usize(o, "m", 8)?;
+            let n = get_usize(o, "n", 8)?;
+            let cols = get_usize(o, "cols", 2)?;
+            lomsnet::loms_2way(m, n, cols)
+        }
+        "lomsk" => {
+            let sizes: Vec<usize> = o
+                .get("sizes")
+                .map(String::as_str)
+                .unwrap_or("7,7,7")
+                .split(',')
+                .map(|s| s.trim().parse().context("--sizes"))
+                .collect::<Result<_>>()?;
+            lomsnet::loms_kway(&sizes)
+        }
+        "loms3med" => lomsnet::loms_3way_median(get_usize(o, "r", 7)?),
+        "s2ms" => s2ms::s2ms(get_usize(o, "m", 8)?, get_usize(o, "n", 8)?),
+        "oem" => batcher::odd_even_merge(get_usize(o, "m", 8)?),
+        "bims" => batcher::bitonic_merge(get_usize(o, "m", 8)?),
+        "mwms" => mwms::mwms_3way(get_usize(o, "r", 7)?),
+        "mwmsmed" => mwms::mwms_3way_median(get_usize(o, "r", 7)?),
+        other => bail!("unknown --kind {other:?} (loms2|lomsk|loms3med|s2ms|oem|bims|mwms|mwmsmed)"),
+    })
+}
+
+/// The golden device set shared with `python/tests/test_golden.py`.
+fn golden_set() -> Vec<(&'static str, MergeDevice)> {
+    vec![
+        ("loms2_up8_dn8_2col", lomsnet::loms_2way(8, 8, 2)),
+        ("loms2_up7_dn5_2col", lomsnet::loms_2way(7, 5, 2)),
+        ("loms2_up32_dn32_8col", lomsnet::loms_2way(32, 32, 8)),
+        ("loms3_7r", lomsnet::loms_kway(&[7, 7, 7])),
+        ("oem_up8_dn8", batcher::odd_even_merge(8)),
+        ("bims_up8_dn8", batcher::bitonic_merge(8)),
+        ("s2ms_up7_dn5", s2ms::s2ms(7, 5)),
+    ]
+}
+
+fn artifacts_dir(o: &HashMap<String, String>) -> String {
+    o.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into())
+}
+
+fn start_service(o: &HashMap<String, String>) -> Result<(MergeService, &'static str)> {
+    let dir = artifacts_dir(o);
+    let manifest = std::path::Path::new(&dir).join("manifest.json");
+    if manifest.exists() {
+        let svc = MergeService::start(move || PjrtBackend::load(dir), ServiceConfig::default())?;
+        Ok((svc, "pjrt"))
+    } else {
+        eprintln!(
+            "note: {} missing — using the software backend (run `make artifacts`)",
+            manifest.display()
+        );
+        let svc =
+            MergeService::start(|| Ok(SoftwareBackend::default_set()), ServiceConfig::default())?;
+        Ok((svc, "software"))
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        bail!("usage: loms <report|netgen|goldens|validate|serve|sort|selftest> [options]");
+    };
+    let o = opts(&args[1..])?;
+    match cmd.as_str() {
+        "report" => {
+            let which = o.get("figure").map(String::as_str).unwrap_or("all");
+            let figs = if which == "all" {
+                figures::all_figures()
+            } else {
+                let all = figures::all_figures();
+                let direct: Vec<_> = all.iter().filter(|f| f.id == which).cloned().collect();
+                if direct.is_empty() {
+                    let id = format!("fig{which}");
+                    all.into_iter().filter(|f| f.id == id).collect()
+                } else {
+                    direct
+                }
+            };
+            if figs.is_empty() {
+                bail!("no figure matching {which:?}");
+            }
+            for f in &figs {
+                println!("{}", f.to_table());
+                if let Some(dir) = o.get("csv-dir") {
+                    let p = f.save_csv(dir)?;
+                    println!("   csv → {}\n", p.display());
+                }
+            }
+            println!("{}", figures::mwms_note());
+            Ok(())
+        }
+        "netgen" => {
+            let d = device_from_opts(&o)?;
+            d.check().map_err(anyhow::Error::msg)?;
+            let text = json::to_json(&d);
+            match o.get("out") {
+                Some(path) => {
+                    std::fs::write(path, text)?;
+                    println!(
+                        "wrote {path} ({} stages, {} comparators)",
+                        d.depth(),
+                        d.comparator_count()
+                    );
+                }
+                None => println!("{text}"),
+            }
+            Ok(())
+        }
+        "goldens" => {
+            let dir = o.get("dir").cloned().unwrap_or_else(|| "tests/golden".into());
+            std::fs::create_dir_all(&dir)?;
+            for (name, d) in golden_set() {
+                let path = format!("{dir}/{name}.json");
+                json::write_file(&d, &path)?;
+                println!("wrote {path}");
+            }
+            Ok(())
+        }
+        "validate" => {
+            let d = device_from_opts(&o)?;
+            let t0 = Instant::now();
+            if matches!(o.get("kind").map(String::as_str), Some("loms3med" | "mwmsmed")) {
+                validate_median_01(&d).map_err(|e| anyhow!("{e}"))?;
+            } else {
+                validate_merge_01(&d).map_err(|e| anyhow!("{e}"))?;
+            }
+            println!(
+                "{}: VALID for all inputs (sorted-0-1 exhaustive, {} patterns, {:?})",
+                d.name,
+                loms::sortnet::validate::merge_01_pattern_count(&d.list_sizes),
+                t0.elapsed()
+            );
+            Ok(())
+        }
+        "serve" => {
+            let n = get_usize(&o, "requests", 2000)?;
+            let (svc, backend) = start_service(&o)?;
+            let mut rng = Rng::new(1);
+            let t0 = Instant::now();
+            let mut rxs = Vec::with_capacity(n);
+            for i in 0..n {
+                let lists = if i % 4 == 3 {
+                    vec![
+                        rng.sorted_list(7, 1 << 20),
+                        rng.sorted_list(7, 1 << 20),
+                        rng.sorted_list(7, 1 << 20),
+                    ]
+                } else {
+                    vec![rng.sorted_list(32, 1 << 20), rng.sorted_list(32, 1 << 20)]
+                };
+                rxs.push(svc.submit(lists));
+            }
+            let mut ok = 0;
+            for rx in rxs {
+                if rx.recv_timeout(Duration::from_secs(30)).is_ok() {
+                    ok += 1;
+                }
+            }
+            let dt = t0.elapsed();
+            let snap = svc.metrics().snapshot();
+            println!(
+                "backend={backend} served {ok}/{n} in {dt:?} ({:.0} merges/s)",
+                ok as f64 / dt.as_secs_f64()
+            );
+            println!(
+                "batches={} pad-ratio={:.2}% mean={:.0}µs p50={:.0}µs p99={:.0}µs",
+                snap.batches,
+                100.0 * snap.rows_padded as f64
+                    / (snap.rows_real + snap.rows_padded).max(1) as f64,
+                snap.mean_latency_us,
+                snap.p50_latency_us,
+                snap.p99_latency_us
+            );
+            svc.shutdown();
+            Ok(())
+        }
+        "sort" => {
+            let n = get_usize(&o, "n", 1_000_000)?;
+            let chunk = get_usize(&o, "chunk", 32)?;
+            let (svc, backend) = start_service(&o)?;
+            let mut rng = Rng::new(2);
+            let data: Vec<u32> = (0..n).map(|_| rng.next_u32() >> 1).collect();
+            let t0 = Instant::now();
+            let (sorted, stats) = planner::external_sort(&svc, &data, chunk, 512)?;
+            let dt = t0.elapsed();
+            anyhow::ensure!(sorted.windows(2).all(|w| w[0] <= w[1]), "output not sorted!");
+            anyhow::ensure!(sorted.len() == n, "lost keys");
+            println!(
+                "backend={backend} sorted {n} keys in {dt:?} ({:.2} Mkeys/s)",
+                n as f64 / dt.as_secs_f64() / 1e6
+            );
+            println!("{stats:?}");
+            Ok(())
+        }
+        "selftest" => {
+            validate_merge_01(&lomsnet::loms_2way(8, 8, 2)).map_err(|e| anyhow!("{e}"))?;
+            validate_merge_01(&lomsnet::loms_kway(&[7, 7, 7])).map_err(|e| anyhow!("{e}"))?;
+            let (svc, backend) = start_service(&o)?;
+            let resp = svc.merge_blocking(vec![vec![1, 3, 5], vec![2, 4, 6]])?;
+            anyhow::ensure!(resp.merged == vec![1, 2, 3, 4, 5, 6]);
+            println!("selftest OK (backend={backend})");
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?}"),
+    }
+}

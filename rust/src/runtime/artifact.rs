@@ -1,0 +1,135 @@
+//! Artifact manifest: the contract between `python/compile/aot.py`
+//! (which writes `artifacts/manifest.json` + one HLO text file per
+//! compiled merge variant) and the Rust runtime (which loads them).
+
+use crate::util::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Metadata of one AOT-compiled merge executable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// HLO text file, relative to the artifact directory.
+    pub file: String,
+    /// Sorted input list sizes (k lists).
+    pub list_sizes: Vec<usize>,
+    /// Compiled batch size (rows per execution).
+    pub batch: usize,
+    /// Total output width per row.
+    pub total: usize,
+    /// Pallas batch block size (documentation/perf metadata).
+    pub block_b: usize,
+    /// Vector-op depth of the compiled plan (TPU stage-count analogue).
+    pub plan_steps: usize,
+    /// Hardware stage count of the underlying device.
+    pub hw_stages: usize,
+    /// Source device name (netgen).
+    pub device: String,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts array"))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let get_str = |k: &str| -> Result<String> {
+                Ok(a.get(k)
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("artifact missing {k}"))?
+                    .to_string())
+            };
+            let get_usize = |k: &str| -> Result<usize> {
+                a.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("artifact missing {k}"))
+            };
+            artifacts.push(ArtifactMeta {
+                name: get_str("name")?,
+                file: get_str("file")?,
+                list_sizes: a
+                    .get_usizes("list_sizes")
+                    .ok_or_else(|| anyhow!("artifact missing list_sizes"))?,
+                batch: get_usize("batch")?,
+                total: get_usize("total")?,
+                block_b: get_usize("block_b").unwrap_or(1),
+                plan_steps: get_usize("plan_steps").unwrap_or(0),
+                hw_stages: get_usize("hw_stages").unwrap_or(0),
+                device: get_str("device").unwrap_or_default(),
+            });
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join("loms_manifest_test");
+        write_manifest(
+            &dir,
+            r#"{"artifacts": [{"name": "m1", "file": "m1.hlo.txt",
+                "list_sizes": [32, 32], "batch": 64, "total": 64,
+                "block_b": 32, "plan_steps": 2, "hw_stages": 2,
+                "device": "loms2", "dtype": "u32"}]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.get("m1").unwrap();
+        assert_eq!(a.list_sizes, vec![32, 32]);
+        assert_eq!(a.batch, 64);
+        assert!(m.hlo_path(a).ends_with("m1.hlo.txt"));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        assert!(Manifest::load("/nonexistent/loms").is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // Integration: the repo's own artifacts (skipped when not built).
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(!m.artifacts.is_empty());
+        for a in &m.artifacts {
+            assert!(m.hlo_path(a).exists(), "{}", a.name);
+            assert_eq!(a.total, a.list_sizes.iter().sum::<usize>());
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! PJRT execution of AOT-compiled merge artifacts.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. One compiled executable per artifact;
+//! Python is never on this path.
+
+use super::artifact::{ArtifactMeta, Manifest};
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Per-executable execution statistics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecStats {
+    pub executions: u64,
+    pub rows_merged: u64,
+    pub total_exec_ns: u128,
+}
+
+/// A compiled merge executable plus its metadata.
+pub struct MergeExecutable {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+    stats: ExecStats,
+}
+
+impl MergeExecutable {
+    /// Execute one full batch. `lists[l]` is row-major `(batch,
+    /// list_sizes[l])` flattened; returns row-major `(batch, total)`.
+    pub fn execute_batch(&mut self, lists: &[Vec<u32>]) -> Result<Vec<u32>> {
+        let meta = &self.meta;
+        anyhow::ensure!(lists.len() == meta.list_sizes.len(), "{}: wrong list count", meta.name);
+        let mut literals = Vec::with_capacity(lists.len());
+        for (l, flat) in lists.iter().enumerate() {
+            let rows = meta.batch;
+            let cols = meta.list_sizes[l];
+            anyhow::ensure!(
+                flat.len() == rows * cols,
+                "{}: list {l} has {} values, want {rows}x{cols}",
+                meta.name,
+                flat.len()
+            );
+            literals.push(
+                xla::Literal::vec1(flat)
+                    .reshape(&[rows as i64, cols as i64])
+                    .with_context(|| format!("{}: reshaping input {l}", meta.name))?,
+            );
+        }
+        let t0 = Instant::now();
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("{}: execute", meta.name))?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<u32>()?;
+        self.stats.executions += 1;
+        self.stats.rows_merged += meta.batch as u64;
+        self.stats.total_exec_ns += t0.elapsed().as_nanos();
+        anyhow::ensure!(
+            values.len() == meta.batch * meta.total,
+            "{}: output size {} want {}",
+            meta.name,
+            values.len(),
+            meta.batch * meta.total
+        );
+        Ok(values)
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        self.stats
+    }
+}
+
+/// The runtime: a PJRT CPU client with every manifest artifact compiled.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    executables: HashMap<String, MergeExecutable>,
+}
+
+impl Runtime {
+    /// Load and compile every artifact in the manifest directory.
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        let mut executables = HashMap::new();
+        for meta in &manifest.artifacts {
+            let path = manifest.hlo_path(meta);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("{}: parsing HLO text: {e}", meta.name))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(|e| anyhow!("{}: compile: {e}", meta.name))?;
+            executables
+                .insert(meta.name.clone(), MergeExecutable { meta: meta.clone(), exe, stats: ExecStats::default() });
+        }
+        Ok(Runtime { manifest, client, executables })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn executable_mut(&mut self, name: &str) -> Result<&mut MergeExecutable> {
+        self.executables
+            .get_mut(name)
+            .ok_or_else(|| anyhow!("no executable named {name:?}"))
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.executables.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn stats(&self) -> Vec<(String, ExecStats)> {
+        let mut v: Vec<(String, ExecStats)> =
+            self.executables.iter().map(|(k, e)| (k.clone(), e.stats)).collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+}

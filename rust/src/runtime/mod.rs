@@ -1,0 +1,10 @@
+//! Runtime layer: load AOT artifacts (HLO text emitted by
+//! `python/compile/aot.py`) and execute them on the PJRT CPU client.
+//! The `loms` binary is self-contained once `make artifacts` has run —
+//! Python never executes on the request path.
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{ArtifactMeta, Manifest};
+pub use client::{ExecStats, MergeExecutable, Runtime};

@@ -1,0 +1,304 @@
+//! Kenneth Batcher's classic merge networks [1]: Odd-Even Merge and
+//! Bitonic Merge — the paper's 2-way state-of-the-art baselines — plus the
+//! full sorters built from them.
+//!
+//! As in the paper (§VI), merge devices are built for equal power-of-2
+//! input list sizes; Batcher networks are awkward for anything else, which
+//! is one of LOMS/S2MS's selling points.
+
+use super::network::{Block, DeviceKind, MergeDevice, Stage};
+
+/// Stages of compare-exchange pairs `(lo, hi)` (ascending orientation).
+type CasStages = Vec<Vec<(usize, usize)>>;
+
+fn is_pow2(x: usize) -> bool {
+    x != 0 && x & (x - 1) == 0
+}
+
+/// Batcher odd-even merge over the index slice `idx`, whose first half
+/// and second half each hold a sorted ascending run. `idx.len()` must be
+/// a power of two. Returns comparator stages; depth = log2(len).
+fn odd_even_merge_stages(idx: &[usize]) -> CasStages {
+    let n = idx.len();
+    assert!(is_pow2(n) && n >= 2);
+    if n == 2 {
+        return vec![vec![(idx[0], idx[1])]];
+    }
+    let even: Vec<usize> = idx.iter().step_by(2).copied().collect();
+    let odd: Vec<usize> = idx.iter().skip(1).step_by(2).copied().collect();
+    let se = odd_even_merge_stages(&even);
+    let so = odd_even_merge_stages(&odd);
+    debug_assert_eq!(se.len(), so.len());
+    let mut stages: CasStages = se
+        .into_iter()
+        .zip(so)
+        .map(|(mut e, o)| {
+            e.extend(o);
+            e
+        })
+        .collect();
+    // Final fix-up stage: compare idx[2i+1] with idx[2i+2].
+    let fixup: Vec<(usize, usize)> = (0..n / 2 - 1).map(|i| (idx[2 * i + 1], idx[2 * i + 2])).collect();
+    stages.push(fixup);
+    stages
+}
+
+/// Bitonic merge over `idx` holding a bitonic sequence (first half
+/// ascending, second half descending). Depth = log2(len).
+fn bitonic_merge_stages(idx: &[usize]) -> CasStages {
+    let n = idx.len();
+    assert!(is_pow2(n) && n >= 2);
+    let mut stages = CasStages::new();
+    let mut span = n / 2;
+    while span >= 1 {
+        let mut stage = Vec::with_capacity(n / 2);
+        let mut block = 0;
+        while block < n {
+            for i in block..block + span {
+                stage.push((idx[i], idx[i + span]));
+            }
+            block += 2 * span;
+        }
+        stages.push(stage);
+        span /= 2;
+    }
+    stages
+}
+
+fn stages_to_device(
+    name: String,
+    kind: DeviceKind,
+    m: usize,
+    n_b: usize,
+    input_map: Vec<Vec<usize>>,
+    cas: CasStages,
+) -> MergeDevice {
+    let n = m + n_b;
+    let stages = cas
+        .into_iter()
+        .enumerate()
+        .map(|(i, pairs)| {
+            Stage::new(
+                format!("cas-{i}"),
+                pairs.into_iter().map(|(lo, hi)| Block::Cas { lo, hi }).collect(),
+            )
+        })
+        .collect();
+    MergeDevice {
+        name,
+        kind,
+        list_sizes: vec![m, n_b],
+        input_map,
+        n,
+        stages,
+        output_perm: (0..n).collect(),
+        median_tap: None,
+        grid: None,
+    }
+}
+
+/// Batcher Odd-Even 2-way merge of two sorted lists, each of (power-of-2)
+/// size `m`. Depth = log2(2m) stages.
+pub fn odd_even_merge(m: usize) -> MergeDevice {
+    assert!(is_pow2(m), "Batcher odd-even merge requires power-of-2 list size, got {m}");
+    let n = 2 * m;
+    // A at positions 0..m ascending, B at m..2m ascending.
+    let idx: Vec<usize> = (0..n).collect();
+    // Odd-even merge expects the two runs interleaved as one slice with
+    // first half = A, second half = B; the classic recursion operates on
+    // the concatenation directly.
+    let cas = odd_even_merge_stages(&idx);
+    stages_to_device(
+        format!("oem-up{m}-dn{m}"),
+        DeviceKind::OddEvenMerge,
+        m,
+        m,
+        vec![(0..m).collect(), (m..n).collect()],
+        cas,
+    )
+}
+
+/// Batcher Bitonic 2-way merge of two sorted lists, each of (power-of-2)
+/// size `m`. The B list is loaded reversed (forming a bitonic sequence);
+/// depth = log2(2m) stages.
+pub fn bitonic_merge(m: usize) -> MergeDevice {
+    assert!(is_pow2(m), "Bitonic merge requires power-of-2 list size, got {m}");
+    let n = 2 * m;
+    let idx: Vec<usize> = (0..n).collect();
+    let cas = bitonic_merge_stages(&idx);
+    stages_to_device(
+        format!("bims-up{m}-dn{m}"),
+        DeviceKind::BitonicMerge,
+        m,
+        m,
+        // B reversed: its smallest value sits at the highest position.
+        vec![(0..m).collect(), (m..n).rev().collect()],
+        cas,
+    )
+}
+
+/// Full Batcher odd-even merge sorter over `n` (power-of-2) unsorted
+/// values: the classic log2(n)(log2(n)+1)/2-stage network.
+pub fn oems_sorter(n: usize) -> MergeDevice {
+    assert!(is_pow2(n) && n >= 2);
+    fn sort_rec(idx: &[usize]) -> CasStages {
+        if idx.len() == 1 {
+            return vec![];
+        }
+        let (lo, hi) = idx.split_at(idx.len() / 2);
+        let sl = sort_rec(lo);
+        let sh = sort_rec(hi);
+        debug_assert_eq!(sl.len(), sh.len());
+        let mut stages: CasStages = sl
+            .into_iter()
+            .zip(sh)
+            .map(|(mut a, b)| {
+                a.extend(b);
+                a
+            })
+            .collect();
+        stages.extend(odd_even_merge_stages(idx));
+        stages
+    }
+    let idx: Vec<usize> = (0..n).collect();
+    let cas = sort_rec(&idx);
+    let mut d = stages_to_device(
+        format!("oems-sort{n}"),
+        DeviceKind::OddEvenMerge,
+        n,
+        0,
+        vec![(0..n).collect(), vec![]],
+        cas,
+    );
+    d.list_sizes = vec![n]; // one *unsorted* input list
+    d.input_map = vec![(0..n).collect()];
+    d
+}
+
+/// Full bitonic sorter over `n` (power-of-2) unsorted values.
+pub fn bitonic_sorter(n: usize) -> MergeDevice {
+    assert!(is_pow2(n) && n >= 2);
+    fn sort_rec(idx: &[usize], ascending: bool) -> CasStages {
+        if idx.len() == 1 {
+            return vec![];
+        }
+        let (lo, hi) = idx.split_at(idx.len() / 2);
+        let sl = sort_rec(lo, true);
+        let sh = sort_rec(hi, false);
+        let mut stages: CasStages = sl
+            .into_iter()
+            .zip(sh)
+            .map(|(mut a, b)| {
+                a.extend(b);
+                a
+            })
+            .collect();
+        let merged = bitonic_merge_stages(idx);
+        for st in merged {
+            let st = st
+                .into_iter()
+                .map(|(a, b)| if ascending { (a, b) } else { (b, a) })
+                .collect();
+            stages.push(st);
+        }
+        stages
+    }
+    let idx: Vec<usize> = (0..n).collect();
+    let cas = sort_rec(&idx, true);
+    let mut d = stages_to_device(
+        format!("bims-sort{n}"),
+        DeviceKind::BitonicMerge,
+        n,
+        0,
+        vec![(0..n).collect(), vec![]],
+        cas,
+    );
+    d.list_sizes = vec![n];
+    d.input_map = vec![(0..n).collect()];
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sortnet::exec::{merge, ExecMode};
+    use crate::sortnet::validate::{validate_merge_01, validate_sorter_01};
+
+    #[test]
+    fn oem_depth_is_log2_outputs() {
+        for m in [1usize, 2, 4, 8, 16, 32] {
+            let d = odd_even_merge(m);
+            d.check().unwrap();
+            assert_eq!(d.depth(), (2 * m).ilog2() as usize, "m={m}");
+        }
+    }
+
+    #[test]
+    fn bitonic_depth_is_log2_outputs() {
+        for m in [1usize, 2, 4, 8, 16, 32] {
+            let d = bitonic_merge(m);
+            d.check().unwrap();
+            assert_eq!(d.depth(), (2 * m).ilog2() as usize, "m={m}");
+        }
+    }
+
+    #[test]
+    fn oem_merges_known_example() {
+        let d = odd_even_merge(4);
+        let out = merge(&d, &[vec![1u32, 4, 6, 9], vec![2, 3, 7, 20]], ExecMode::Fast).unwrap();
+        assert_eq!(out, vec![1, 2, 3, 4, 6, 7, 9, 20]);
+    }
+
+    #[test]
+    fn bitonic_merges_known_example() {
+        let d = bitonic_merge(4);
+        let out = merge(&d, &[vec![1u32, 4, 6, 9], vec![2, 3, 7, 20]], ExecMode::Fast).unwrap();
+        assert_eq!(out, vec![1, 2, 3, 4, 6, 7, 9, 20]);
+    }
+
+    #[test]
+    fn oem_validates_01_up_to_32() {
+        for m in [1usize, 2, 4, 8, 16, 32] {
+            validate_merge_01(&odd_even_merge(m)).unwrap();
+        }
+    }
+
+    #[test]
+    fn bitonic_validates_01_up_to_32() {
+        for m in [1usize, 2, 4, 8, 16, 32] {
+            validate_merge_01(&bitonic_merge(m)).unwrap();
+        }
+    }
+
+    #[test]
+    fn oem_comparator_count_matches_formula() {
+        // Batcher OEM(n,n) uses n*log2(n) + 1 comparators... verify the
+        // recurrence C(2n) = 2C(n) + n - 1, C(2)=1 instead of a closed form.
+        fn expect(m: usize) -> usize {
+            if m == 1 {
+                1
+            } else {
+                2 * expect(m / 2) + m - 1
+            }
+        }
+        for m in [1usize, 2, 4, 8, 16, 32, 64] {
+            assert_eq!(odd_even_merge(m).comparator_count(), expect(m), "m={m}");
+        }
+    }
+
+    #[test]
+    fn bitonic_comparator_count_is_half_n_log_n() {
+        for m in [2usize, 4, 8, 16, 32] {
+            let n = 2 * m;
+            assert_eq!(bitonic_merge(m).comparator_count(), n / 2 * n.ilog2() as usize);
+        }
+    }
+
+    #[test]
+    fn full_sorters_sort() {
+        for n in [2usize, 4, 8, 16] {
+            validate_sorter_01(&oems_sorter(n)).unwrap();
+            validate_sorter_01(&bitonic_sorter(n)).unwrap();
+        }
+    }
+}

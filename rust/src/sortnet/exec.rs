@@ -1,0 +1,289 @@
+//! Bit-exact software execution of [`MergeDevice`]s.
+//!
+//! Execution is *faithful to the hardware semantics*: a `Cas` block
+//! compare-exchanges, an `S2MS` block performs the two-run merge its mux
+//! equations implement (correct only when its input runs are sorted — the
+//! physical device has the same precondition), `SortN`/`FilterN` blocks
+//! sort their inputs. [`ExecMode::Strict`] additionally checks every
+//! precondition, which is how device validation proves a network correct
+//! for *all* inputs (see [`crate::sortnet::validate`]).
+
+use super::network::{Block, MergeDevice};
+
+/// Execution mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Trust preconditions (hot path).
+    Fast,
+    /// Check every block precondition; used by the validators.
+    Strict,
+}
+
+/// Error raised in strict mode when a hardware precondition is violated.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PreconditionViolation {
+    pub stage: usize,
+    pub block: usize,
+    pub detail: String,
+}
+
+impl std::fmt::Display for PreconditionViolation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "stage {} block {}: {}", self.stage, self.block, self.detail)
+    }
+}
+
+impl std::error::Error for PreconditionViolation {}
+
+/// Scratch buffers reused across executions — the hot path allocates
+/// nothing per call once warmed.
+#[derive(Default)]
+pub struct ExecScratch<T> {
+    buf: Vec<T>,
+}
+
+impl<T: Copy + Ord + Default> ExecScratch<T> {
+    pub fn new() -> Self {
+        ExecScratch { buf: Vec::new() }
+    }
+
+    /// Execute one block in-place over `v`.
+    fn apply_block(
+        &mut self,
+        b: &Block,
+        v: &mut [T],
+        mode: ExecMode,
+        si: usize,
+        bi: usize,
+    ) -> Result<(), PreconditionViolation> {
+        match b {
+            Block::Cas { lo, hi } => {
+                if v[*lo] > v[*hi] {
+                    v.swap(*lo, *hi);
+                }
+            }
+            Block::SortN { pos } => {
+                self.buf.clear();
+                self.buf.extend(pos.iter().map(|&p| v[p]));
+                self.buf.sort_unstable();
+                for (i, &p) in pos.iter().enumerate() {
+                    v[p] = self.buf[i];
+                }
+            }
+            Block::MergeS2 { up, dn, out } => {
+                if mode == ExecMode::Strict {
+                    for w in [up, dn] {
+                        if w.windows(2).any(|pair| v[pair[0]] > v[pair[1]]) {
+                            return Err(PreconditionViolation {
+                                stage: si,
+                                block: bi,
+                                detail: "S2MS input run not sorted".into(),
+                            });
+                        }
+                    }
+                }
+                // Two-pointer merge — the functional content of the
+                // S2MS output mux equations (Fig. 9 of the paper).
+                self.buf.clear();
+                self.buf.reserve(up.len() + dn.len());
+                let (mut i, mut j) = (0usize, 0usize);
+                while i < up.len() && j < dn.len() {
+                    // Stable: UP values win ties (paper's sorters are stable).
+                    if v[up[i]] <= v[dn[j]] {
+                        self.buf.push(v[up[i]]);
+                        i += 1;
+                    } else {
+                        self.buf.push(v[dn[j]]);
+                        j += 1;
+                    }
+                }
+                self.buf.extend(up[i..].iter().map(|&p| v[p]));
+                self.buf.extend(dn[j..].iter().map(|&p| v[p]));
+                for (t, &p) in out.iter().enumerate() {
+                    v[p] = self.buf[t];
+                }
+            }
+            Block::FilterN { pos, taps } => {
+                self.buf.clear();
+                self.buf.extend(pos.iter().map(|&p| v[p]));
+                self.buf.sort_unstable();
+                for &t in taps {
+                    v[pos[t]] = self.buf[t];
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute a single stage (used by the pruning analysis).
+    pub fn run_stage(
+        &mut self,
+        d: &MergeDevice,
+        stage: usize,
+        v: &mut [T],
+        mode: ExecMode,
+    ) -> Result<(), PreconditionViolation> {
+        for (bi, b) in d.stages[stage].blocks.iter().enumerate() {
+            self.apply_block(b, v, mode, stage, bi)?;
+        }
+        Ok(())
+    }
+
+    /// Execute the full device over a flat vector (already loaded via
+    /// [`MergeDevice::load_inputs`]). Runs all stages unless
+    /// `stop_after` limits the stage count (median taps).
+    pub fn run(
+        &mut self,
+        d: &MergeDevice,
+        v: &mut [T],
+        mode: ExecMode,
+        stop_after: Option<usize>,
+    ) -> Result<(), PreconditionViolation> {
+        let last = stop_after.unwrap_or(d.stages.len());
+        for (si, stage) in d.stages.iter().take(last).enumerate() {
+            for (bi, b) in stage.blocks.iter().enumerate() {
+                self.apply_block(b, v, mode, si, bi)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Convenience: merge `lists` through the device; returns the sorted
+/// output. Panics on malformed inputs (strict-mode errors propagate).
+pub fn merge<T: Copy + Ord + Default>(
+    d: &MergeDevice,
+    lists: &[Vec<T>],
+    mode: ExecMode,
+) -> Result<Vec<T>, PreconditionViolation> {
+    let mut v = d.load_inputs(lists);
+    let mut scratch = ExecScratch::new();
+    scratch.run(d, &mut v, mode, None)?;
+    Ok(d.read_outputs(&v))
+}
+
+/// Convenience: run only up to the median tap and return the median.
+/// `None` if the device has no tap.
+pub fn median<T: Copy + Ord + Default>(
+    d: &MergeDevice,
+    lists: &[Vec<T>],
+    mode: ExecMode,
+) -> Result<Option<T>, PreconditionViolation> {
+    let Some((stop, pos)) = d.median_tap else {
+        return Ok(None);
+    };
+    let mut v = d.load_inputs(lists);
+    let mut scratch = ExecScratch::new();
+    scratch.run(d, &mut v, mode, Some(stop))?;
+    Ok(Some(v[pos]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sortnet::network::{DeviceKind, Stage};
+
+    fn dev(stages: Vec<Stage>, n: usize) -> MergeDevice {
+        MergeDevice {
+            name: "t".into(),
+            kind: DeviceKind::NSorter,
+            list_sizes: vec![n],
+            input_map: vec![(0..n).collect()],
+            n,
+            stages,
+            output_perm: (0..n).collect(),
+            median_tap: None,
+            grid: None,
+        }
+    }
+
+    #[test]
+    fn cas_block_orders_pair() {
+        let d = dev(vec![Stage::new("s", vec![Block::Cas { lo: 0, hi: 1 }])], 2);
+        let mut v = vec![9u32, 3];
+        ExecScratch::new().run(&d, &mut v, ExecMode::Fast, None).unwrap();
+        assert_eq!(v, vec![3, 9]);
+    }
+
+    #[test]
+    fn sortn_block_sorts() {
+        let d = dev(vec![Stage::new("s", vec![Block::SortN { pos: vec![3, 1, 0, 2] }])], 4);
+        let mut v = vec![4u32, 3, 2, 1];
+        ExecScratch::new().run(&d, &mut v, ExecMode::Fast, None).unwrap();
+        // sorted ascending into listed order [3,1,0,2]
+        assert_eq!(v[3], 1);
+        assert_eq!(v[1], 2);
+        assert_eq!(v[0], 3);
+        assert_eq!(v[2], 4);
+    }
+
+    #[test]
+    fn s2ms_block_merges_runs() {
+        let d = dev(
+            vec![Stage::new("s", vec![Block::MergeS2 { up: vec![0, 1], dn: vec![2, 3], out: vec![0, 1, 2, 3] }])],
+            4,
+        );
+        let mut v = vec![2u32, 7, 1, 9];
+        ExecScratch::new().run(&d, &mut v, ExecMode::Strict, None).unwrap();
+        assert_eq!(v, vec![1, 2, 7, 9]);
+    }
+
+    #[test]
+    fn s2ms_strict_detects_unsorted_run() {
+        let d = dev(
+            vec![Stage::new("s", vec![Block::MergeS2 { up: vec![0, 1], dn: vec![2, 3], out: vec![0, 1, 2, 3] }])],
+            4,
+        );
+        let mut v = vec![7u32, 2, 1, 9]; // up run descending: violation
+        let err = ExecScratch::new().run(&d, &mut v, ExecMode::Strict, None);
+        assert!(err.is_err());
+        // Fast mode does not check (garbage-in tolerated, like hardware).
+        let mut v2 = vec![7u32, 2, 1, 9];
+        ExecScratch::new().run(&d, &mut v2, ExecMode::Fast, None).unwrap();
+    }
+
+    #[test]
+    fn filter_writes_only_taps() {
+        let d = dev(
+            vec![Stage::new("s", vec![Block::FilterN { pos: vec![0, 1, 2], taps: vec![1] }])],
+            3,
+        );
+        let mut v = vec![30u32, 10, 20];
+        ExecScratch::new().run(&d, &mut v, ExecMode::Fast, None).unwrap();
+        assert_eq!(v[1], 20); // median landed at pos[1]
+        assert_eq!(v[0], 30); // untouched
+        assert_eq!(v[2], 20); // untouched
+    }
+
+    #[test]
+    fn merge_helper_roundtrip() {
+        let d = MergeDevice {
+            name: "m".into(),
+            kind: DeviceKind::S2ms,
+            list_sizes: vec![2, 2],
+            input_map: vec![vec![0, 1], vec![2, 3]],
+            n: 4,
+            stages: vec![Stage::new(
+                "s",
+                vec![Block::MergeS2 { up: vec![0, 1], dn: vec![2, 3], out: vec![0, 1, 2, 3] }],
+            )],
+            output_perm: vec![0, 1, 2, 3],
+            median_tap: None,
+            grid: None,
+        };
+        let out = merge(&d, &[vec![1u32, 5], vec![2, 9]], ExecMode::Strict).unwrap();
+        assert_eq!(out, vec![1, 2, 5, 9]);
+    }
+
+    #[test]
+    fn stable_ties_prefer_up() {
+        // Stability is observable with (value, origin) pairs via Ord on tuples.
+        let d = dev(
+            vec![Stage::new("s", vec![Block::MergeS2 { up: vec![0], dn: vec![1], out: vec![0, 1] }])],
+            2,
+        );
+        let mut v = vec![(5u32, 0u8), (5u32, 1u8)];
+        ExecScratch::new().run(&d, &mut v, ExecMode::Fast, None).unwrap();
+        assert_eq!(v, vec![(5, 0), (5, 1)]);
+    }
+}

@@ -1,0 +1,213 @@
+//! JSON (de)serialisation of [`MergeDevice`]s (in-crate JSON — see
+//! [`crate::util::json`]).
+//!
+//! Used for (a) the `loms netgen` CLI (export networks for inspection or
+//! for the Python compile path), and (b) the golden-vector cross-check
+//! between this crate and `python/compile/netgen` (two independent
+//! implementations of the paper's constructions must agree structurally).
+
+use super::network::{Block, DeviceKind, MergeDevice, Stage};
+use crate::util::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+fn kind_str(k: DeviceKind) -> &'static str {
+    match k {
+        DeviceKind::OddEvenMerge => "odd_even_merge",
+        DeviceKind::BitonicMerge => "bitonic_merge",
+        DeviceKind::S2ms => "s2ms",
+        DeviceKind::Loms => "loms",
+        DeviceKind::Mwms => "mwms",
+        DeviceKind::NSorter => "nsorter",
+    }
+}
+
+fn kind_parse(s: &str) -> Result<DeviceKind> {
+    Ok(match s {
+        "odd_even_merge" => DeviceKind::OddEvenMerge,
+        "bitonic_merge" => DeviceKind::BitonicMerge,
+        "s2ms" => DeviceKind::S2ms,
+        "loms" => DeviceKind::Loms,
+        "mwms" => DeviceKind::Mwms,
+        "nsorter" => DeviceKind::NSorter,
+        other => bail!("unknown device kind {other:?}"),
+    })
+}
+
+fn block_json(b: &Block) -> Json {
+    match b {
+        Block::Cas { lo, hi } => Json::obj(vec![
+            ("type", Json::str("cas")),
+            ("lo", Json::int(*lo as i64)),
+            ("hi", Json::int(*hi as i64)),
+        ]),
+        Block::SortN { pos } => Json::obj(vec![
+            ("type", Json::str("sortN")),
+            ("pos", Json::usize_arr(pos.iter().copied())),
+        ]),
+        Block::MergeS2 { up, dn, out } => Json::obj(vec![
+            ("type", Json::str("s2ms")),
+            ("up", Json::usize_arr(up.iter().copied())),
+            ("dn", Json::usize_arr(dn.iter().copied())),
+            ("out", Json::usize_arr(out.iter().copied())),
+        ]),
+        Block::FilterN { pos, taps } => Json::obj(vec![
+            ("type", Json::str("filterN")),
+            ("pos", Json::usize_arr(pos.iter().copied())),
+            ("taps", Json::usize_arr(taps.iter().copied())),
+        ]),
+    }
+}
+
+fn block_parse(j: &Json) -> Result<Block> {
+    let ty = j.get("type").and_then(Json::as_str).ok_or_else(|| anyhow!("block missing type"))?;
+    Ok(match ty {
+        "cas" => Block::Cas {
+            lo: j.get("lo").and_then(Json::as_usize).ok_or_else(|| anyhow!("cas.lo"))?,
+            hi: j.get("hi").and_then(Json::as_usize).ok_or_else(|| anyhow!("cas.hi"))?,
+        },
+        "sortN" => Block::SortN { pos: j.get_usizes("pos").ok_or_else(|| anyhow!("sortN.pos"))? },
+        "s2ms" => Block::MergeS2 {
+            up: j.get_usizes("up").ok_or_else(|| anyhow!("s2ms.up"))?,
+            dn: j.get_usizes("dn").ok_or_else(|| anyhow!("s2ms.dn"))?,
+            out: j.get_usizes("out").ok_or_else(|| anyhow!("s2ms.out"))?,
+        },
+        "filterN" => Block::FilterN {
+            pos: j.get_usizes("pos").ok_or_else(|| anyhow!("filterN.pos"))?,
+            taps: j.get_usizes("taps").ok_or_else(|| anyhow!("filterN.taps"))?,
+        },
+        other => bail!("unknown block type {other:?}"),
+    })
+}
+
+/// Serialise a device to pretty JSON.
+pub fn to_json(d: &MergeDevice) -> String {
+    let stages = d
+        .stages
+        .iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("label", Json::str(s.label.clone())),
+                ("blocks", Json::arr(s.blocks.iter().map(block_json))),
+            ])
+        })
+        .collect::<Vec<_>>();
+    let mut fields = vec![
+        ("name", Json::str(d.name.clone())),
+        ("kind", Json::str(kind_str(d.kind))),
+        ("list_sizes", Json::usize_arr(d.list_sizes.iter().copied())),
+        (
+            "input_map",
+            Json::arr(d.input_map.iter().map(|m| Json::usize_arr(m.iter().copied()))),
+        ),
+        ("n", Json::int(d.n as i64)),
+        ("stages", Json::arr(stages)),
+        ("output_perm", Json::usize_arr(d.output_perm.iter().copied())),
+    ];
+    if let Some((stage, pos)) = d.median_tap {
+        fields.push(("median_tap", Json::usize_arr([stage, pos])));
+    }
+    if let Some((cols, rows)) = d.grid {
+        fields.push(("grid", Json::usize_arr([cols, rows])));
+    }
+    Json::obj(fields).to_string_pretty()
+}
+
+/// Parse a device from JSON and run its structural check.
+pub fn from_json(s: &str) -> Result<MergeDevice> {
+    let j = Json::parse(s).map_err(|e| anyhow!("parsing MergeDevice JSON: {e}"))?;
+    let name = j.get("name").and_then(Json::as_str).ok_or_else(|| anyhow!("missing name"))?.to_string();
+    let kind = kind_parse(j.get("kind").and_then(Json::as_str).ok_or_else(|| anyhow!("missing kind"))?)?;
+    let list_sizes = j.get_usizes("list_sizes").ok_or_else(|| anyhow!("missing list_sizes"))?;
+    let input_map = j
+        .get("input_map")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing input_map"))?
+        .iter()
+        .map(|m| m.as_arr().and_then(|a| a.iter().map(Json::as_usize).collect()))
+        .collect::<Option<Vec<Vec<usize>>>>()
+        .ok_or_else(|| anyhow!("bad input_map"))?;
+    let n = j.get("n").and_then(Json::as_usize).ok_or_else(|| anyhow!("missing n"))?;
+    let stages = j
+        .get("stages")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing stages"))?
+        .iter()
+        .map(|s| {
+            let label = s.get("label").and_then(Json::as_str).unwrap_or("").to_string();
+            let blocks = s
+                .get("blocks")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("stage missing blocks"))?
+                .iter()
+                .map(block_parse)
+                .collect::<Result<Vec<_>>>()?;
+            Ok(Stage { label, blocks })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let output_perm = j.get_usizes("output_perm").ok_or_else(|| anyhow!("missing output_perm"))?;
+    let median_tap = j.get_usizes("median_tap").map(|v| (v[0], v[1]));
+    let grid = j.get_usizes("grid").map(|v| (v[0], v[1]));
+    let d = MergeDevice { name, kind, list_sizes, input_map, n, stages, output_perm, median_tap, grid };
+    d.check().map_err(anyhow::Error::msg)?;
+    Ok(d)
+}
+
+/// Write a device to a file.
+pub fn write_file(d: &MergeDevice, path: impl AsRef<Path>) -> Result<()> {
+    std::fs::write(path.as_ref(), to_json(d))
+        .with_context(|| format!("writing {}", path.as_ref().display()))
+}
+
+/// Read a device from a file.
+pub fn read_file(path: impl AsRef<Path>) -> Result<MergeDevice> {
+    let s = std::fs::read_to_string(path.as_ref())
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    from_json(&s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sortnet::{batcher, loms, mwms, s2ms};
+
+    #[test]
+    fn roundtrip_all_kinds() {
+        for d in [
+            batcher::odd_even_merge(4),
+            batcher::bitonic_merge(4),
+            s2ms::s2ms(3, 5),
+            loms::loms_2way(8, 8, 2),
+            loms::loms_kway(&[7, 7, 7]),
+            loms::loms_3way_median(7),
+            mwms::mwms_3way(3),
+        ] {
+            let j = to_json(&d);
+            let d2 = from_json(&j).unwrap();
+            assert_eq!(d.name, d2.name);
+            assert_eq!(d.kind, d2.kind);
+            assert_eq!(d.stages, d2.stages);
+            assert_eq!(d.input_map, d2.input_map);
+            assert_eq!(d.output_perm, d2.output_perm);
+            assert_eq!(d.median_tap, d2.median_tap);
+            assert_eq!(d.grid, d2.grid);
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_broken_device() {
+        let d = s2ms::s2ms(2, 2);
+        let j = to_json(&d).replace("\"output_perm\": [\n    0,", "\"output_perm\": [\n    3,");
+        assert!(from_json(&j).is_err(), "duplicate output positions must fail check()");
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let d = loms::loms_2way(4, 4, 2);
+        let path = std::env::temp_dir().join("loms_json_test.json");
+        write_file(&d, &path).unwrap();
+        let d2 = read_file(&path).unwrap();
+        assert_eq!(d.stages, d2.stages);
+        let _ = std::fs::remove_file(path);
+    }
+}

@@ -1,0 +1,709 @@
+//! List Offset Merge Sorters — the paper's primary contribution.
+//!
+//! A LOMS device arranges k sorted input lists in a 2-D *setup array*
+//! with each list's order offset from the previous list's, then runs a
+//! minimal sequence of alternating column-sort / row-sort stages:
+//!
+//! * 2-way (§IV): any two list sizes, any column count C ≥ 2; exactly
+//!   2 stages — parallel S2MS column merges, then parallel row sorts.
+//! * k-way (§V, Appendix A): k lists in k columns; stage counts per
+//!   Table 1 (k=3 → 3 stages; the 3rd stage for full-grid 3-way devices
+//!   sorts only vertical pairs in the edge columns, as in Fig. 6).
+//! * Median tap (§V-A): for equal odd list sizes the output median is
+//!   final after only 2 stages.
+//!
+//! Conventions (paper-faithful): row 0 is the **bottom** row, column 0 is
+//! the **rightmost** column. Values ascend bottom-to-top. Flat positions
+//! are assigned in final-output scan order, so `output_perm` is the
+//! identity: 2-way scans rows bottom-up with the row minimum at Col 0;
+//! k-way (k ≥ 3) scans serpentine — even rows minimum at Col 0, odd rows
+//! minimum at Col k-1 (Fig. 5).
+
+use super::network::{Block, DeviceKind, MergeDevice, Stage};
+
+/// One populated cell of a setup array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Cell {
+    /// Which input list the cell's value comes from.
+    pub list: usize,
+    /// Ascending index of the value within its list (0 = minimum).
+    pub idx: usize,
+    /// Flat position in the device's value vector (= final output rank
+    /// slot of this grid location).
+    pub pos: usize,
+}
+
+/// A constructed setup array: `grid[row][col]`, row 0 = bottom,
+/// col 0 = rightmost. `None` = unpopulated cell (only in bottom rows).
+#[derive(Debug, Clone)]
+pub struct SetupArray {
+    pub rows: usize,
+    pub cols: usize,
+    pub grid: Vec<Vec<Option<Cell>>>,
+    /// True for k≥3 devices: output scan is serpentine.
+    pub serpentine: bool,
+    pub list_sizes: Vec<usize>,
+}
+
+impl SetupArray {
+    /// Flat-position scan order of a (row, col) cell; the order used to
+    /// number positions. 2-way: within every row ascending ranks run from
+    /// Col 0 leftward. Serpentine: odd rows run from Col k-1 rightward.
+    fn scan_cols(&self, row: usize) -> Vec<usize> {
+        if self.serpentine && row % 2 == 1 {
+            (0..self.cols).rev().collect()
+        } else {
+            (0..self.cols).collect()
+        }
+    }
+
+    /// Number of populated cells.
+    pub fn n_values(&self) -> usize {
+        self.list_sizes.iter().sum()
+    }
+
+    /// `input_map[l][i]` = flat position of list l's i-th smallest value.
+    pub fn input_map(&self) -> Vec<Vec<usize>> {
+        let mut map: Vec<Vec<usize>> = self.list_sizes.iter().map(|&s| vec![usize::MAX; s]).collect();
+        for row in &self.grid {
+            for cell in row.iter().flatten() {
+                map[cell.list][cell.idx] = cell.pos;
+            }
+        }
+        debug_assert!(map.iter().flatten().all(|&p| p != usize::MAX));
+        map
+    }
+
+    /// Cells of column `c`, bottom row first.
+    pub fn column(&self, c: usize) -> Vec<Cell> {
+        (0..self.rows).filter_map(|r| self.grid[r][c]).collect()
+    }
+
+    /// Cells of row `r` in ascending-rank scan order.
+    pub fn row_scan(&self, r: usize) -> Vec<Cell> {
+        self.scan_cols(r).into_iter().filter_map(|c| self.grid[r][c]).collect()
+    }
+}
+
+/// Build the §IV 2-way setup array: UP list `m` values, DN list `n`
+/// values, `cols` columns. The UP (A) list fills the top rows row-major
+/// descending left-to-right; the DN (B) list fills the bottom rows
+/// row-major descending right-to-left (the "offset"); unpopulated cells
+/// then slide to the bottom of each column and fully-empty rows vanish.
+pub fn setup_2way(m: usize, n: usize, cols: usize) -> SetupArray {
+    assert!(cols >= 2, "LOMS needs at least 2 columns");
+    assert!(m + n >= 1);
+    let ra = m.div_ceil(cols);
+    let rb = n.div_ceil(cols);
+    let r0 = ra + rb;
+    // (row, col) -> (list, idx), staged grid before sliding.
+    let mut grid: Vec<Vec<Option<(usize, usize)>>> = vec![vec![None; cols]; r0];
+    // A: descending rank d (0 = max = index m-1): row r0-1 - d/cols,
+    // col cols-1 - d%cols (fills each row left to right).
+    for d in 0..m {
+        let (r, c) = (r0 - 1 - d / cols, cols - 1 - d % cols);
+        grid[r][c] = Some((0, m - 1 - d));
+    }
+    // B: descending rank d: row rb-1 - d/cols, col d%cols (fills each
+    // row right to left — the list-offset reversal).
+    for d in 0..n {
+        let (r, c) = (rb - 1 - d / cols, d % cols);
+        grid[r][c] = Some((1, n - 1 - d));
+    }
+    finish_setup(grid, cols, vec![m, n], false)
+}
+
+/// Build the Appendix-A k-way setup array (k = number of lists = number
+/// of columns). List `l` is placed row-major descending with its columns
+/// offset `l` to the right of the previous list's (wrapping modulo k —
+/// the appendix's "slide left by k columns" step).
+pub fn setup_kway(sizes: &[usize]) -> SetupArray {
+    let k = sizes.len();
+    assert!(k >= 2, "k-way setup needs >= 2 lists");
+    let rows_per: Vec<usize> = sizes.iter().map(|&s| s.div_ceil(k)).collect();
+    let r0: usize = rows_per.iter().sum();
+    let mut grid: Vec<Vec<Option<(usize, usize)>>> = vec![vec![None; k]; r0];
+    let mut top = r0; // exclusive top of the current list's band
+    for (l, &s) in sizes.iter().enumerate() {
+        let band_top = top - 1;
+        for d in 0..s {
+            let r = band_top - d / k;
+            // Virtual column k-1-l-d%k, wrapped into 0..k.
+            let v = k as isize - 1 - l as isize - (d % k) as isize;
+            let c = v.rem_euclid(k as isize) as usize;
+            debug_assert!(grid[r][c].is_none());
+            grid[r][c] = Some((l, s - 1 - d));
+        }
+        top -= rows_per[l];
+    }
+    finish_setup(grid, k, sizes.to_vec(), k >= 3)
+}
+
+/// Shared tail of setup construction: slide values to the top of each
+/// column (unpopulated cells to the bottom — Figs. 2, 3, 22), drop
+/// fully-empty rows, and assign flat positions in output scan order.
+fn finish_setup(
+    grid: Vec<Vec<Option<(usize, usize)>>>,
+    cols: usize,
+    list_sizes: Vec<usize>,
+    serpentine: bool,
+) -> SetupArray {
+    let r0 = grid.len();
+    // Compact each column upward.
+    let mut slid: Vec<Vec<Option<(usize, usize)>>> = vec![vec![None; cols]; r0];
+    for c in 0..cols {
+        let vals: Vec<(usize, usize)> = (0..r0).filter_map(|r| grid[r][c]).collect();
+        // vals is bottom-up; keep order, placed into the top |vals| rows.
+        let h = vals.len();
+        for (i, v) in vals.into_iter().enumerate() {
+            slid[r0 - h + i][c] = Some(v);
+        }
+    }
+    // Drop fully-empty rows (all at the bottom after compaction).
+    let first_populated = (0..r0)
+        .find(|&r| slid[r].iter().any(Option::is_some))
+        .expect("non-empty setup");
+    let rows = r0 - first_populated;
+    let mut arr = SetupArray {
+        rows,
+        cols,
+        grid: vec![vec![None; cols]; rows],
+        serpentine,
+        list_sizes,
+    };
+    // Assign flat positions in scan order (bottom row first).
+    let mut pos = 0usize;
+    for r in 0..rows {
+        for c in arr.scan_cols(r) {
+            if let Some((list, idx)) = slid[first_populated + r][c] {
+                arr.grid[r][c] = Some(Cell { list, idx, pos });
+                pos += 1;
+            }
+        }
+    }
+    arr
+}
+
+/// Stage-1 column-sort blocks. For 2-way arrays each column holds (up to)
+/// two sorted ascending runs — one per list — merged by an S2MS block;
+/// columns holding a single run are already in order and need no sorter
+/// (Figs. 2, 3). For k ≥ 3 each column holds up to k runs and is sorted
+/// by a single-stage N-sorter.
+fn column_sort_stage(arr: &SetupArray) -> Stage {
+    let mut blocks = Vec::new();
+    for c in 0..arr.cols {
+        let cells = arr.column(c);
+        if cells.len() < 2 {
+            continue;
+        }
+        let out: Vec<usize> = cells.iter().map(|x| x.pos).collect();
+        // Split into per-list runs; cells within a column are ascending
+        // per list as the row increases.
+        let lists_present: Vec<usize> = {
+            let mut ls: Vec<usize> = cells.iter().map(|x| x.list).collect();
+            ls.dedup();
+            ls.sort_unstable();
+            ls.dedup();
+            ls
+        };
+        if arr.list_sizes.len() == 2 {
+            let up: Vec<usize> = cells.iter().filter(|x| x.list == 0).map(|x| x.pos).collect();
+            let dn: Vec<usize> = cells.iter().filter(|x| x.list == 1).map(|x| x.pos).collect();
+            if up.is_empty() || dn.is_empty() {
+                // Single sorted run already in column order: no hardware.
+                continue;
+            }
+            blocks.push(Block::MergeS2 { up, dn, out });
+        } else {
+            if lists_present.len() <= 1 {
+                continue;
+            }
+            blocks.push(Block::SortN { pos: out });
+        }
+    }
+    Stage::new("col-sort", blocks)
+}
+
+/// Row-sort stage: each populated row sorted into its scan order.
+/// Width-2 rows become plain 2-sorters.
+fn row_sort_stage(arr: &SetupArray, label: &str) -> Stage {
+    let mut blocks = Vec::new();
+    for r in 0..arr.rows {
+        let cells = arr.row_scan(r);
+        if cells.len() < 2 {
+            continue;
+        }
+        let pos: Vec<usize> = cells.iter().map(|x| x.pos).collect();
+        if pos.len() == 2 {
+            blocks.push(Block::Cas { lo: pos[0], hi: pos[1] });
+        } else {
+            blocks.push(Block::SortN { pos });
+        }
+    }
+    Stage::new(label, blocks)
+}
+
+/// Full-column sort stage used by k-way devices after stage 2.
+fn full_column_stage(arr: &SetupArray, label: &str) -> Stage {
+    let mut blocks = Vec::new();
+    for c in 0..arr.cols {
+        let cells = arr.column(c);
+        if cells.len() < 2 {
+            continue;
+        }
+        blocks.push(Block::SortN { pos: cells.iter().map(|x| x.pos).collect() });
+    }
+    Stage::new(label, blocks)
+}
+
+/// The Fig.-6 stage-3 for full-grid 3-way devices: sort only the vertical
+/// pairs in the edge columns that hold consecutive serpentine ranks.
+/// Left edge (col k-1): rows (2j, 2j+1); right edge (col 0): rows
+/// (2j+1, 2j+2). The centre column is untouched.
+fn edge_pair_stage(arr: &SetupArray) -> Stage {
+    let k = arr.cols;
+    let mut blocks = Vec::new();
+    let col = |c: usize, r: usize| arr.grid[r][c].map(|x| x.pos);
+    let mut r = 0;
+    while r + 1 < arr.rows {
+        if let (Some(lo), Some(hi)) = (col(k - 1, r), col(k - 1, r + 1)) {
+            blocks.push(Block::Cas { lo, hi });
+        }
+        r += 2;
+    }
+    let mut r = 1;
+    while r + 1 < arr.rows {
+        if let (Some(lo), Some(hi)) = (col(0, r), col(0, r + 1)) {
+            blocks.push(Block::Cas { lo, hi });
+        }
+        r += 2;
+    }
+    Stage::new("edge-pair-sort", blocks)
+}
+
+/// Table 1: total alternating column/row sorts required for a k-way
+/// merge. (k = 2 → 2, 3 → 3, 4–5 → 4, 6 → 5, 7–14 → 6.)
+pub fn table1_stage_count(k: usize) -> usize {
+    match k {
+        0 | 1 => 0,
+        2 => 2,
+        3 => 3,
+        4 | 5 => 4,
+        6 => 5,
+        7..=14 => 6,
+        // Beyond the paper's table: continue the even/odd cadence of a
+        // shear-style schedule (documented reconstruction).
+        _ => 6 + (k as f64 / 7.0).log2().ceil() as usize,
+    }
+}
+
+/// Build a 2-way LOMS merging sorted lists of sizes `m` (UP) and `n`
+/// (DN) in a `cols`-column array: 2 stages (S2MS column merges, then
+/// row sorts).
+pub fn loms_2way(m: usize, n: usize, cols: usize) -> MergeDevice {
+    let arr = setup_2way(m, n, cols);
+    let total = m + n;
+    let stages: Vec<Stage> = [column_sort_stage(&arr), row_sort_stage(&arr, "row-sort")]
+        .into_iter()
+        .filter(|s| !s.blocks.is_empty())
+        .collect();
+    MergeDevice {
+        name: format!("loms2-{cols}col-up{m}-dn{n}"),
+        kind: DeviceKind::Loms,
+        list_sizes: vec![m, n],
+        input_map: arr.input_map(),
+        n: total,
+        stages,
+        output_perm: (0..total).collect(),
+        median_tap: None,
+        grid: Some((arr.cols, arr.rows)),
+    }
+}
+
+/// Build a k-way LOMS (k = sizes.len() ≥ 3) with the Table-1 stage
+/// schedule: full column sorts alternating with full serpentine row
+/// sorts. Full-grid 3-way devices use the cheaper Fig.-6 edge-pair
+/// stage 3. When all lists have the same odd size, the device carries a
+/// 2-stage median tap (§V-A).
+///
+/// Correctness caveat: the paper specifies constructions only for k = 2
+/// (§IV), k = 3 (§V-A) and *equal-size* lists (Table 1). Those
+/// configurations validate exhaustively (see `tests/device_validation`).
+/// For k ≥ 4 with *unequal* sizes the Table-1 stage budget can be
+/// insufficient for this reconstruction — use [`loms_kway_validated`],
+/// which provably extends the schedule until the device is correct.
+pub fn loms_kway(sizes: &[usize]) -> MergeDevice {
+    loms_kway_with_stages(sizes, None)
+}
+
+/// k-way LOMS whose schedule is *extended beyond Table 1 if needed*
+/// until the exhaustive sorted-0-1 validation proves it correct.
+///
+/// Returns `Err` when no alternating row/column schedule up to 16
+/// stages sorts the configuration — which happens for some *unequal*
+/// k = 3 mixtures (e.g. [8, 1, 6]): unpopulated bottom-row holes can
+/// make the serpentine rank order unreachable by row/column sorts
+/// alone. Equal-size configurations always succeed (Table 1's setting;
+/// many validate exactly at the Table-1 count). The paper's
+/// any-mixture claim is made for 2-way devices only (§VIII).
+pub fn loms_kway_validated(sizes: &[usize]) -> Result<MergeDevice, String> {
+    use super::validate::{merge_01_pattern_count, validate_merge_01};
+    if merge_01_pattern_count(sizes) > 5_000_000 {
+        return Err(format!("validation infeasible for sizes {sizes:?}"));
+    }
+    let base = table1_stage_count(sizes.len());
+    for extra in 0..=(16usize.saturating_sub(base)) {
+        let d = loms_kway_with_stages(sizes, Some(base + extra));
+        if validate_merge_01(&d).is_ok() {
+            return Ok(d);
+        }
+    }
+    Err(format!("no valid LOMS schedule for sizes {sizes:?} within 16 stages"))
+}
+
+fn loms_kway_with_stages(sizes: &[usize], n_stages_override: Option<usize>) -> MergeDevice {
+    let k = sizes.len();
+    assert!(k >= 3, "use loms_2way for k=2");
+    // Scope matches the paper: k = 3 supports any size mixture (§V-A,
+    // validated exhaustively); k ≥ 4 requires equal sizes (Table 1's
+    // setting). Unequal sizes at k ≥ 4 leave unpopulated holes that the
+    // alternating row/column schedule provably cannot always bridge
+    // (counterexample: sizes [3,3,7,4,1] fails even with 16 stages).
+    assert!(
+        k == 3 || sizes.iter().all(|&s| s == sizes[0]),
+        "k-way LOMS with k >= 4 requires equal list sizes (got {sizes:?})"
+    );
+    let arr = setup_kway(sizes);
+    let total: usize = sizes.iter().sum();
+    let n_stages = n_stages_override.unwrap_or_else(|| table1_stage_count(k));
+    // The Fig.-6 reduced stage 3 is proven (validated) for full-grid
+    // equal-odd-size 3-way devices — the configuration the paper
+    // demonstrates; other shapes use a full column sort.
+    let full_grid = total == arr.rows * arr.cols
+        && sizes.iter().all(|&s| s == sizes[0])
+        && sizes[0] % 2 == 1;
+    let mut stages = vec![column_sort_stage(&arr), row_sort_stage(&arr, "row-sort")];
+    for s in 2..n_stages {
+        if s % 2 == 0 {
+            if k == 3 && full_grid && s == 2 {
+                stages.push(edge_pair_stage(&arr));
+            } else {
+                stages.push(full_column_stage(&arr, "col-sort"));
+            }
+        } else {
+            stages.push(row_sort_stage(&arr, "row-sort"));
+        }
+    }
+    let stages: Vec<Stage> = stages.into_iter().filter(|s| !s.blocks.is_empty()).collect();
+    // Median tap (§V-A): for *3-way* devices with equal odd sizes, the
+    // median is final after stage 2 at the centre rank's position (= the
+    // rank itself; positions are assigned in output scan order). The
+    // paper makes this claim for 3-way merge; it does not hold for all
+    // k (validation shows k=5 counterexamples), so the tap is 3-way only.
+    let equal_odd = k == 3 && sizes.iter().all(|&s| s == sizes[0]) && sizes[0] % 2 == 1;
+    let median_tap = if equal_odd && total % 2 == 1 {
+        Some((2.min(stages.len()), total / 2))
+    } else {
+        None
+    };
+    MergeDevice {
+        name: format!("loms{k}-{}r", sizes.iter().map(|s| s.to_string()).collect::<Vec<_>>().join("_")),
+        kind: DeviceKind::Loms,
+        list_sizes: sizes.to_vec(),
+        input_map: arr.input_map(),
+        n: total,
+        stages,
+        output_perm: (0..total).collect(),
+        median_tap,
+        grid: Some((arr.cols, arr.rows)),
+    }
+}
+
+/// The §V-A / Fig.-18 *median-only* 3-way LOMS device: stage 1 sorts all
+/// k columns in full; stage 2 builds only a single N-filter on the middle
+/// row, tapping the centre cell — 2 stages versus 4 for the MWMS median
+/// baseline. Requires equal odd list sizes (odd total, centred median).
+pub fn loms_3way_median(r: usize) -> MergeDevice {
+    assert!(r % 2 == 1, "median device needs odd list size");
+    let sizes = vec![r; 3];
+    let arr = setup_kway(&sizes);
+    let total = 3 * r;
+    let mid_row = (total / 2) / arr.cols;
+    let row_cells = arr.row_scan(mid_row);
+    let pos: Vec<usize> = row_cells.iter().map(|x| x.pos).collect();
+    let tap = pos.iter().position(|&p| p == total / 2).expect("centre in middle row");
+    let stages = vec![
+        column_sort_stage(&arr),
+        Stage::new("median-filter", vec![Block::FilterN { pos, taps: vec![tap] }]),
+    ];
+    MergeDevice {
+        name: format!("loms3-median-{r}r"),
+        kind: DeviceKind::Loms,
+        list_sizes: sizes,
+        input_map: arr.input_map(),
+        n: total,
+        stages,
+        output_perm: (0..total).collect(),
+        median_tap: Some((2, total / 2)),
+        grid: Some((arr.cols, arr.rows)),
+    }
+}
+
+/// The paper's Fig.-10 matrix: the S2MS column-sorter size `(m, n)` used
+/// by a 2-way LOMS with `cols` columns and `outputs` total outputs
+/// (equal power-of-2 input lists).
+pub fn fig10_column_sorter(outputs: usize, cols: usize) -> (usize, usize) {
+    let per_col = outputs / cols;
+    (per_col / 2, per_col / 2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sortnet::exec::{median, merge, ExecMode};
+    use crate::sortnet::validate::{validate_merge_01, validate_merge_random};
+
+    /// Render a setup array as (list, idx) paper-style for comparisons,
+    /// top row first, leftmost column first.
+    fn render(arr: &SetupArray) -> Vec<Vec<Option<(usize, usize)>>> {
+        (0..arr.rows)
+            .rev()
+            .map(|r| {
+                (0..arr.cols)
+                    .rev()
+                    .map(|c| arr.grid[r][c].map(|x| (x.list, x.idx)))
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fig1_up8_dn8_setup() {
+        // Fig. 1: UP-8/DN-8, 2 columns. Top-down, [Col1, Col0] per row.
+        let arr = setup_2way(8, 8, 2);
+        let a = |i: usize| Some((0usize, i));
+        let b = |i: usize| Some((1usize, i));
+        assert_eq!(
+            render(&arr),
+            vec![
+                vec![a(7), a(6)],
+                vec![a(5), a(4)],
+                vec![a(3), a(2)],
+                vec![a(1), a(0)],
+                vec![b(6), b(7)],
+                vec![b(4), b(5)],
+                vec![b(2), b(3)],
+                vec![b(0), b(1)],
+            ]
+        );
+    }
+
+    #[test]
+    fn fig2_up1_dn8_setup() {
+        // Fig. 2 right: A_00 and B_07 in top row, empty cell at bottom Col 0.
+        let arr = setup_2way(1, 8, 2);
+        let b = |i: usize| Some((1usize, i));
+        assert_eq!(
+            render(&arr),
+            vec![
+                vec![Some((0, 0)), b(7)],
+                vec![b(6), b(5)],
+                vec![b(4), b(3)],
+                vec![b(2), b(1)],
+                vec![b(0), None],
+            ]
+        );
+    }
+
+    #[test]
+    fn fig3_up8_dn1_setup() {
+        let arr = setup_2way(8, 1, 2);
+        let a = |i: usize| Some((0usize, i));
+        assert_eq!(
+            render(&arr),
+            vec![
+                vec![a(7), a(6)],
+                vec![a(5), a(4)],
+                vec![a(3), a(2)],
+                vec![a(1), a(0)],
+                vec![None, Some((1, 0))],
+            ]
+        );
+    }
+
+    #[test]
+    fn fig3_up7_dn5_setup() {
+        // Fig. 3 lower right: unpopulated row removed, 6 rows.
+        let arr = setup_2way(7, 5, 2);
+        let a = |i: usize| Some((0usize, i));
+        let b = |i: usize| Some((1usize, i));
+        assert_eq!(
+            render(&arr),
+            vec![
+                vec![a(6), a(5)],
+                vec![a(4), a(3)],
+                vec![a(2), a(1)],
+                vec![a(0), b(4)],
+                vec![b(3), b(2)],
+                vec![b(1), b(0)],
+            ]
+        );
+    }
+
+    #[test]
+    fn fig23_3c7r_setup() {
+        // Appendix A final setup array (Fig. 23 == Fig. 5 left).
+        let arr = setup_kway(&[7, 7, 7]);
+        let a = |i: usize| Some((0usize, i));
+        let b = |i: usize| Some((1usize, i));
+        let c = |i: usize| Some((2usize, i));
+        assert_eq!(
+            render(&arr),
+            vec![
+                vec![a(6), a(5), a(4)],
+                vec![a(3), a(2), a(1)],
+                vec![a(0), b(6), b(5)],
+                vec![b(4), b(3), b(2)],
+                vec![b(1), b(0), c(6)],
+                vec![c(5), c(4), c(3)],
+                vec![c(2), c(1), c(0)],
+            ]
+        );
+    }
+
+    #[test]
+    fn kway_setup_agrees_with_2way_for_2_columns() {
+        for (m, n) in [(8usize, 8usize), (1, 8), (8, 1), (7, 5)] {
+            let a = setup_2way(m, n, 2);
+            let b = setup_kway(&[m, n]);
+            assert_eq!(render(&a), render(&b), "UP-{m}/DN-{n}");
+        }
+    }
+
+    #[test]
+    fn fig1_example_merge() {
+        // Fig. 1 numeric example: A = 1,5,6,9,10,13,14,15 / B = 2,3,4,7,8,11,12,16.
+        let d = loms_2way(8, 8, 2);
+        let out = merge(
+            &d,
+            &[vec![1u32, 5, 6, 9, 10, 13, 14, 15], vec![2, 3, 4, 7, 8, 11, 12, 16]],
+            ExecMode::Strict,
+        )
+        .unwrap();
+        assert_eq!(out, (1..=16).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn fig6_worst_case_3way_example() {
+        // Fig. 6: A = {1..7}, B = {8..14}, C = {15..21} arranged so the
+        // setup is the paper's "worst case". Lists ascending:
+        let d = loms_kway(&[7, 7, 7]);
+        let a: Vec<u32> = (1..=7).collect();
+        let b: Vec<u32> = (8..=14).collect();
+        let c: Vec<u32> = (15..=21).collect();
+        let out = merge(&d, &[a.clone(), b.clone(), c.clone()], ExecMode::Strict).unwrap();
+        assert_eq!(out, (1..=21).collect::<Vec<u32>>());
+        // Median after only 2 stages (paper: Row 3 Col 1 holds rank 10).
+        let med = median(&d, &[a, b, c], ExecMode::Strict).unwrap();
+        assert_eq!(med, Some(11));
+    }
+
+    #[test]
+    fn loms_2way_depth_is_2() {
+        for (m, n, c) in [(8usize, 8usize, 2usize), (16, 16, 2), (32, 32, 8), (7, 5, 2)] {
+            assert_eq!(loms_2way(m, n, c).depth(), 2, "UP-{m}/DN-{n} {c}col");
+        }
+    }
+
+    #[test]
+    fn loms_2way_validates_all_mixtures() {
+        // Equal/odd/even/empty-ish mixtures, all column counts: the
+        // versatility claim (§VIII) — no size restrictions.
+        for (m, n) in [(1usize, 1usize), (1, 8), (8, 1), (7, 5), (5, 7), (8, 8), (16, 16), (9, 3), (2, 13)] {
+            for cols in [2usize, 4] {
+                let d = loms_2way(m, n, cols);
+                validate_merge_01(&d).unwrap_or_else(|e| panic!("{e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn loms_2way_large_power_of_two_validates() {
+        // The study's characterized sizes (Fig. 10 matrix).
+        for (outs, cols) in [(32usize, 2usize), (64, 2), (64, 4), (64, 8), (128, 4), (256, 8)] {
+            let m = outs / 2;
+            let d = loms_2way(m, m, cols);
+            validate_merge_01(&d).unwrap_or_else(|e| panic!("{e}"));
+            assert_eq!(d.depth(), 2);
+        }
+    }
+
+    #[test]
+    fn loms_3way_validates() {
+        for sizes in [[7usize, 7, 7], [5, 5, 5], [3, 3, 3], [4, 4, 4], [7, 5, 3]] {
+            let d = loms_kway(&sizes);
+            validate_merge_01(&d).unwrap_or_else(|e| panic!("{e}"));
+        }
+        validate_merge_random(&loms_kway(&[7, 7, 7]), 100, 3).unwrap();
+    }
+
+    #[test]
+    fn loms_3c7r_stage_structure_matches_paper() {
+        let d = loms_kway(&[7, 7, 7]);
+        assert_eq!(d.depth(), 3);
+        // Stage 1: 3 full column sorts of 7 values.
+        assert_eq!(d.stages[0].blocks.len(), 3);
+        // Stage 2: 7 row 3-sorters.
+        assert_eq!(d.stages[1].blocks.len(), 7);
+        // Stage 3: edge pairs only — 3 pairs per edge column (Fig. 6).
+        assert_eq!(d.stages[2].label, "edge-pair-sort");
+        assert_eq!(d.stages[2].blocks.len(), 6);
+        assert!(d.stages[2].blocks.iter().all(|b| matches!(b, Block::Cas { .. })));
+        // Median tap: 2 stages, centre position (rank 10).
+        assert_eq!(d.median_tap, Some((2, 10)));
+    }
+
+    #[test]
+    fn loms_kway_4_to_8_validate() {
+        for k in 3..=8usize {
+            let sizes = vec![3usize; k];
+            let d = loms_kway(&sizes);
+            validate_merge_01(&d).unwrap_or_else(|e| panic!("k={k}: {e}"));
+            assert!(d.depth() <= table1_stage_count(k), "k={k}");
+        }
+    }
+
+    #[test]
+    fn table1_counts() {
+        assert_eq!(table1_stage_count(2), 2);
+        assert_eq!(table1_stage_count(3), 3);
+        assert_eq!(table1_stage_count(4), 4);
+        assert_eq!(table1_stage_count(5), 4);
+        assert_eq!(table1_stage_count(6), 5);
+        assert_eq!(table1_stage_count(7), 6);
+        assert_eq!(table1_stage_count(14), 6);
+    }
+
+    #[test]
+    fn fig10_column_sorters() {
+        // Fig. 10 matrix rows.
+        assert_eq!(fig10_column_sorter(32, 8), (2, 2));
+        assert_eq!(fig10_column_sorter(64, 8), (4, 4));
+        assert_eq!(fig10_column_sorter(256, 8), (16, 16));
+        assert_eq!(fig10_column_sorter(256, 4), (32, 32));
+        assert_eq!(fig10_column_sorter(128, 2), (32, 32));
+    }
+
+    #[test]
+    fn setup_2way_multicolumn_columns_hold_two_runs() {
+        let arr = setup_2way(32, 32, 8);
+        assert_eq!(arr.rows, 8);
+        for c in 0..8 {
+            let cells = arr.column(c);
+            assert_eq!(cells.len(), 8);
+            // bottom half B, top half A
+            assert!(cells[..4].iter().all(|x| x.list == 1));
+            assert!(cells[4..].iter().all(|x| x.list == 0));
+        }
+    }
+}

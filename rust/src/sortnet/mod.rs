@@ -1,0 +1,27 @@
+//! Sorting-network substrate: construction, execution and validation of
+//! every merge device the paper builds or compares against.
+//!
+//! * [`network`] — the [`network::MergeDevice`] representation.
+//! * [`exec`] — bit-exact software execution (hardware semantics).
+//! * [`validate`] — exhaustive sorted-0-1-principle correctness proofs.
+//! * [`batcher`] — Odd-Even / Bitonic merge baselines [1].
+//! * [`s2ms`] — Single-Stage 2-way Merge Sorters [2][3].
+//! * [`nsorter`] — single-stage N-sorters / N-filters [20][21].
+//! * [`loms`] — List Offset Merge Sorters (the paper's contribution).
+//! * [`mwms`] — Multiway Merge Sorting Network baseline [4][5].
+//! * [`json`] — device (de)serialisation.
+
+pub mod batcher;
+pub mod exec;
+pub mod json;
+pub mod loms;
+pub mod mwms;
+pub mod network;
+pub mod nsorter;
+pub mod prune;
+pub mod s2ms;
+pub mod sorter;
+pub mod validate;
+
+pub use exec::{merge, ExecMode, ExecScratch};
+pub use network::{Block, DeviceKind, MergeDevice, Stage};

@@ -1,0 +1,237 @@
+//! Multiway Merge Sorting Network (MWMS) baseline — a reconstruction of
+//! the state-of-the-art 3-way merge devices of Kent/Pattichis [4][5].
+//!
+//! The original paper was not available in this environment; what the
+//! LOMS paper uses from it is (a) the device class — networks of
+//! single-stage N-sorters / N-filters over a k-column array with the
+//! input lists placed *without* the list offset — and (b) the stage
+//! counts for the 3c_7r comparison: **5 stages for a full merge, 4 for
+//! the median** (§VII-D). This module reconstructs the device class:
+//! each list is its own (pre-sorted) column, and alternating full
+//! row-sort / column-sort stages run until the array is provably sorted,
+//! with the schedule *discovered by exhaustive sorted-0-1 validation*.
+//!
+//! Reconstruction gap (documented): our best validated full-sort
+//! schedule for 3c_7r needs **6** stages (median: 5) — an exhaustive
+//! search over full row/column-sort schedules with every row-direction
+//! convention found no 5-stage solution — while the authors'
+//! proprietary MWMS achieves 5 (median: 4). To avoid flattering LOMS in the Fig. 18–20 comparisons,
+//! the FPGA cost model prices the MWMS baseline with the *paper's*
+//! stage counts — see [`paper_stage_counts`] — while the executable
+//! network keeps the validated 6-stage schedule. EXPERIMENTS.md §F18
+//! carries the note.
+
+use super::network::{Block, DeviceKind, MergeDevice, Stage};
+use super::validate::{validate_median_01, validate_merge_01};
+
+/// Build the alternating-stage MWMS 3-way device with `t` stages (row
+/// sorts first — the columns are the input lists, already sorted).
+fn mwms_3way_with_stages(r: usize, t: usize) -> MergeDevice {
+    let k = 3usize;
+    let total = k * r;
+    // Grid: list l occupies column k-1-l (list 0 leftmost, matching the
+    // paper's A,B,C left-to-right figures), value i at row i.
+    // Flat positions in serpentine scan order (identity output_perm).
+    let pos_of = |row: usize, col: usize| -> usize {
+        let off = if row % 2 == 1 { col } else { k - 1 - col };
+        row * k + off
+    };
+    let mut input_map: Vec<Vec<usize>> = Vec::with_capacity(k);
+    for l in 0..k {
+        let col = k - 1 - l;
+        input_map.push((0..r).map(|i| pos_of(i, col)).collect());
+    }
+    let row_stage = |label: &str| {
+        Stage::new(
+            label,
+            (0..r)
+                .map(|row| {
+                    // Serpentine ascending order = ascending flat positions.
+                    Block::SortN { pos: (row * k..row * k + k).collect() }
+                })
+                .collect(),
+        )
+    };
+    let col_stage = |label: &str| {
+        Stage::new(
+            label,
+            (0..k)
+                .map(|col| Block::SortN { pos: (0..r).map(|row| pos_of(row, col)).collect() })
+                .collect(),
+        )
+    };
+    let stages: Vec<Stage> = (0..t)
+        .map(|s| if s % 2 == 0 { row_stage("row-sort") } else { col_stage("col-sort") })
+        .collect();
+    MergeDevice {
+        name: format!("mwms3-{r}r-{t}st"),
+        kind: DeviceKind::Mwms,
+        list_sizes: vec![r; k],
+        input_map,
+        n: total,
+        stages,
+        output_perm: (0..total).collect(),
+        median_tap: None,
+        grid: Some((k, r)),
+    }
+}
+
+/// The stage counts the paper states for the authors' MWMS 3c_7r
+/// devices: (full merge, median) = (5, 4). Used by the FPGA cost model
+/// so the baseline is priced as published, not as our (slightly deeper)
+/// reconstruction executes.
+pub fn paper_stage_counts() -> (usize, usize) {
+    (5, 4)
+}
+
+/// Minimal validated stage count for an MWMS 3-way full merge of three
+/// `r`-value lists.
+pub fn mwms_3way_min_stages(r: usize) -> usize {
+    for t in 1..=16 {
+        let d = mwms_3way_with_stages(r, t);
+        if validate_merge_01(&d).is_ok() {
+            return t;
+        }
+    }
+    panic!("mwms 3-way r={r}: no schedule up to 16 stages validated");
+}
+
+/// The MWMS 3-way full-merge baseline (minimal validated schedule; the
+/// paper's 3c_7r device has 5 stages and tests pin that).
+pub fn mwms_3way(r: usize) -> MergeDevice {
+    mwms_3way_with_stages(r, mwms_3way_min_stages(r))
+}
+
+/// The MWMS 3-way *median* baseline: the shortest prefix of the
+/// alternating schedule whose final stage is replaced by a single
+/// N-filter tapping the centre cell, validated to deliver the true
+/// median (the paper's 3c_7r median device has 4 stages).
+pub fn mwms_3way_median(r: usize) -> MergeDevice {
+    assert!(r % 2 == 1, "median device needs odd list size");
+    let k = 3usize;
+    let total = k * r;
+    let centre = total / 2;
+    for t in 1..=16 {
+        let mut d = mwms_3way_with_stages(r, t);
+        // Replace the last stage's blocks with the single filter that
+        // covers the centre cell (row filter on odd stage index parity
+        // handled implicitly: keep only the block containing `centre`,
+        // demoted to an N-filter).
+        let last = d.stages.len() - 1;
+        let keep: Vec<Block> = d.stages[last]
+            .blocks
+            .iter()
+            .filter(|b| b.reads().contains(&centre))
+            .map(|b| match b {
+                Block::SortN { pos } => {
+                    let tap = pos.iter().position(|&p| p == centre).unwrap();
+                    Block::FilterN { pos: pos.clone(), taps: vec![tap] }
+                }
+                other => other.clone(),
+            })
+            .collect();
+        d.stages[last] = Stage::new("median-filter", keep);
+        d.median_tap = Some((d.stages.len(), centre));
+        d.name = format!("mwms3-median-{r}r-{t}st");
+        if validate_median_01(&d).is_ok() {
+            return d;
+        }
+    }
+    panic!("mwms 3-way median r={r}: no schedule up to 16 stages validated");
+}
+
+/// Cost-model proxy for the authors' MWMS device: our reconstruction's
+/// stage composition truncated to the *paper's* stage count (full merge:
+/// 5 = 3 row-sort + 2 column-sort stages for 3c_7r). NOT functionally a
+/// complete merge — used only to price the baseline as published in the
+/// Fig. 18–20 comparisons (see module docs for the reconstruction gap).
+pub fn mwms_3way_cost_proxy(r: usize) -> MergeDevice {
+    let (full, _) = paper_stage_counts();
+    let mut d = mwms_3way_with_stages(r, full);
+    d.name = format!("mwms3-{r}r-paper-cost-proxy");
+    d
+}
+
+/// Cost proxy for the paper's 4-stage MWMS median device: 3 alternating
+/// full-sort stages + one centre N-filter.
+pub fn mwms_3way_median_cost_proxy(r: usize) -> MergeDevice {
+    let (_, med) = paper_stage_counts();
+    let mut d = mwms_3way_with_stages(r, med);
+    let total = 3 * r;
+    let centre = total / 2;
+    let last = d.stages.len() - 1;
+    let keep: Vec<Block> = d.stages[last]
+        .blocks
+        .iter()
+        .filter(|b| b.reads().contains(&centre))
+        .map(|b| match b {
+            Block::SortN { pos } => {
+                let tap = pos.iter().position(|&p| p == centre).unwrap();
+                Block::FilterN { pos: pos.clone(), taps: vec![tap] }
+            }
+            other => other.clone(),
+        })
+        .collect();
+    d.stages[last] = Stage::new("median-filter", keep);
+    d.median_tap = Some((d.stages.len(), centre));
+    d.name = format!("mwms3-median-{r}r-paper-cost-proxy");
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sortnet::exec::{merge, ExecMode};
+
+    #[test]
+    fn mwms_3c7r_stage_counts() {
+        // §VII-D states 5 full / 4 median for the authors' devices; our
+        // validated reconstruction needs one extra full-sort stage (see
+        // module docs). Pin both facts.
+        assert_eq!(paper_stage_counts(), (5, 4));
+        assert_eq!(mwms_3way_min_stages(7), 6);
+        assert_eq!(mwms_3way_median(7).depth(), 5);
+    }
+
+    #[test]
+    fn mwms_full_merges() {
+        let d = mwms_3way(7);
+        let out = merge(
+            &d,
+            &[
+                (1..=7).collect::<Vec<u32>>(),
+                (8..=14).collect::<Vec<u32>>(),
+                (15..=21).collect::<Vec<u32>>(),
+            ],
+            ExecMode::Strict,
+        )
+        .unwrap();
+        assert_eq!(out, (1..=21).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn mwms_median_correct() {
+        let d = mwms_3way_median(7);
+        validate_median_01(&d).unwrap();
+    }
+
+    #[test]
+    fn mwms_other_sizes_validate() {
+        for r in [3usize, 5] {
+            let d = mwms_3way(r);
+            validate_merge_01(&d).unwrap();
+            let m = mwms_3way_median(r);
+            validate_median_01(&m).unwrap();
+        }
+    }
+
+    #[test]
+    fn mwms_uses_more_stages_than_loms() {
+        // The paper's core 3-way claim: LOMS needs 3 stages (2 for the
+        // median) where MWMS needs 5 (4).
+        use crate::sortnet::loms::loms_kway;
+        let loms = loms_kway(&[7, 7, 7]);
+        let mwms = mwms_3way(7);
+        assert!(loms.depth() < mwms.depth(), "loms {} vs mwms {}", loms.depth(), mwms.depth());
+    }
+}

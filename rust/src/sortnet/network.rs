@@ -1,0 +1,343 @@
+//! Core representation of hardware merge/sort devices.
+//!
+//! Every device in the paper — Batcher Odd-Even / Bitonic merge networks,
+//! Single-Stage 2-way Merge Sorters (S2MS), single-stage N-sorters and
+//! N-filters, List Offset Merge Sorters (LOMS) and Multiway Merge Sorting
+//! Networks (MWMS) — is described as a [`MergeDevice`]: a fixed sequence of
+//! [`Stage`]s, each a set of disjoint [`Block`]s operating in parallel on
+//! positions of a flat value vector.
+//!
+//! The representation is *structural*: it captures exactly the facts the
+//! FPGA cost model needs (block type, operand counts, stage sequencing)
+//! while remaining bit-exact executable in software (see [`crate::sortnet::exec`]).
+
+/// One hardware block within a stage. All blocks are combinatorial,
+/// data-oblivious structures; semantics are "read the listed positions,
+/// write back the sorted permutation of those values into the same
+/// positions, ascending in listed order".
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Block {
+    /// 2-sorter (compare-and-swap): after execution
+    /// `v[lo] <= v[hi]`. The basic Batcher building block.
+    Cas { lo: usize, hi: usize },
+    /// Single-stage N-sorter (Kent/Pattichis [20][21]): all-pairs
+    /// comparator bank + rank decode + per-output mux. Sorts `pos`
+    /// (arbitrary input order) ascending into `pos`.
+    SortN { pos: Vec<usize> },
+    /// Single-Stage 2-way Merge Sorter (S2MS, [2][3]): merges the sorted
+    /// ascending run at `up` with the sorted ascending run at `dn`,
+    /// writing rank `t` of the merged result to `out[t]`. `out` must be a
+    /// permutation of `up ∪ dn` (S2MS output ports are distinct wires; the
+    /// in-place array is a simulation artifact).
+    ///
+    /// Hardware precondition: both runs are already sorted. Violations are
+    /// detected by strict execution (the physical device would emit
+    /// garbage); validation proves preconditions hold for all inputs.
+    MergeS2 { up: Vec<usize>, dn: Vec<usize>, out: Vec<usize> },
+    /// Single-stage N-filter: like `SortN` but only the outputs at
+    /// `taps` (ranks into the sorted order of `pos`) are physically
+    /// built. Execution writes only the tapped ranks (other positions
+    /// become dead in subsequent stages). Used by MWMS median devices.
+    FilterN { pos: Vec<usize>, taps: Vec<usize> },
+}
+
+impl Block {
+    /// Positions this block reads.
+    pub fn reads(&self) -> Vec<usize> {
+        match self {
+            Block::Cas { lo, hi } => vec![*lo, *hi],
+            Block::SortN { pos } => pos.clone(),
+            Block::MergeS2 { up, dn, .. } => up.iter().chain(dn.iter()).copied().collect(),
+            Block::FilterN { pos, .. } => pos.clone(),
+        }
+    }
+
+    /// Positions this block writes (for `FilterN` only the tapped ranks'
+    /// positions are meaningful, but the whole span is claimed so that
+    /// stage-disjointness checking stays conservative).
+    pub fn writes(&self) -> Vec<usize> {
+        self.reads()
+    }
+
+    /// Number of values entering the block.
+    pub fn width(&self) -> usize {
+        match self {
+            Block::Cas { .. } => 2,
+            Block::SortN { pos } => pos.len(),
+            Block::MergeS2 { up, dn, .. } => up.len() + dn.len(),
+            Block::FilterN { pos, .. } => pos.len(),
+        }
+    }
+
+    /// Short structural tag, used in reports.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Block::Cas { .. } => "cas",
+            Block::SortN { .. } => "sortN",
+            Block::MergeS2 { .. } => "s2ms",
+            Block::FilterN { .. } => "filterN",
+        }
+    }
+}
+
+/// A stage: blocks that operate concurrently. Their position sets must be
+/// pairwise disjoint ([`MergeDevice::check`] enforces it).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Stage {
+    pub blocks: Vec<Block>,
+    /// Human-readable label, e.g. `"col-sort"` / `"row-sort"`.
+    pub label: String,
+}
+
+impl Stage {
+    pub fn new(label: impl Into<String>, blocks: Vec<Block>) -> Self {
+        Stage { blocks, label: label.into() }
+    }
+}
+
+/// Device family, used by the FPGA cost model and reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceKind {
+    /// Batcher Odd-Even merge network.
+    OddEvenMerge,
+    /// Batcher Bitonic merge network.
+    BitonicMerge,
+    /// Single-Stage 2-way Merge Sorter.
+    S2ms,
+    /// List Offset Merge Sorter (2-way or k-way).
+    Loms,
+    /// Multiway Merge Sorting Network (baseline, reconstruction of [4]).
+    Mwms,
+    /// Single-stage N-sorter used standalone.
+    NSorter,
+}
+
+/// A complete combinatorial merge device.
+///
+/// Input contract: input list `l` (sorted ascending) is loaded element by
+/// element at the flat positions `input_map[l]` (ascending value order).
+/// After all stages run, output rank `r` (ascending) is read from flat
+/// position `output_perm[r]`.
+#[derive(Debug, Clone)]
+pub struct MergeDevice {
+    pub name: String,
+    pub kind: DeviceKind,
+    /// Sizes of the k sorted input lists.
+    pub list_sizes: Vec<usize>,
+    /// `input_map[l][i]` = flat position of list `l`'s i-th smallest value.
+    pub input_map: Vec<Vec<usize>>,
+    /// Total number of values (= sum of list sizes = flat vector length).
+    pub n: usize,
+    pub stages: Vec<Stage>,
+    /// `output_perm[r]` = flat position holding output rank `r`.
+    pub output_perm: Vec<usize>,
+    /// If the device exposes an early median tap: (stage index *after*
+    /// which the median is valid, flat position of the median).
+    pub median_tap: Option<(usize, usize)>,
+    /// Geometry metadata for LOMS/MWMS devices: (columns, rows).
+    pub grid: Option<(usize, usize)>,
+}
+
+impl MergeDevice {
+    /// Total number of input values across all lists.
+    pub fn total_inputs(&self) -> usize {
+        self.list_sizes.iter().sum()
+    }
+
+    /// Structural sanity: maps are permutations, stages touch valid
+    /// positions, blocks within a stage are disjoint.
+    pub fn check(&self) -> Result<(), String> {
+        let n = self.n;
+        if self.total_inputs() != n {
+            return Err(format!("{}: list sizes sum {} != n {}", self.name, self.total_inputs(), n));
+        }
+        let mut seen = vec![false; n];
+        for (l, m) in self.input_map.iter().enumerate() {
+            if m.len() != self.list_sizes[l] {
+                return Err(format!("{}: input_map[{l}] len {} != list size {}", self.name, m.len(), self.list_sizes[l]));
+            }
+            for &p in m {
+                if p >= n {
+                    return Err(format!("{}: input_map position {p} out of range", self.name));
+                }
+                if seen[p] {
+                    return Err(format!("{}: input_map position {p} duplicated", self.name));
+                }
+                seen[p] = true;
+            }
+        }
+        if seen.iter().any(|s| !s) {
+            return Err(format!("{}: input_map does not cover all positions", self.name));
+        }
+        if self.output_perm.len() != n {
+            return Err(format!("{}: output_perm len {} != n {}", self.name, self.output_perm.len(), n));
+        }
+        let mut seen = vec![false; n];
+        for &p in &self.output_perm {
+            if p >= n || seen[p] {
+                return Err(format!("{}: output_perm invalid at {p}", self.name));
+            }
+            seen[p] = true;
+        }
+        for (si, stage) in self.stages.iter().enumerate() {
+            let mut touched = vec![false; n];
+            for b in &stage.blocks {
+                if let Block::Cas { lo, hi } = b {
+                    if lo == hi {
+                        return Err(format!("{}: stage {si} CAS with lo==hi", self.name));
+                    }
+                }
+                if let Block::MergeS2 { up, dn, out } = b {
+                    if up.is_empty() && dn.is_empty() {
+                        return Err(format!("{}: stage {si} empty MergeS2", self.name));
+                    }
+                    let mut ins: Vec<usize> = up.iter().chain(dn.iter()).copied().collect();
+                    let mut outs = out.clone();
+                    ins.sort_unstable();
+                    outs.sort_unstable();
+                    if ins != outs {
+                        return Err(format!(
+                            "{}: stage {si} MergeS2 out is not a permutation of up ∪ dn",
+                            self.name
+                        ));
+                    }
+                }
+                if let Block::FilterN { pos, taps } = b {
+                    for &t in taps {
+                        if t >= pos.len() {
+                            return Err(format!("{}: stage {si} FilterN tap {t} out of range", self.name));
+                        }
+                    }
+                }
+                for p in b.reads() {
+                    if p >= n {
+                        return Err(format!("{}: stage {si} position {p} out of range", self.name));
+                    }
+                    if touched[p] {
+                        return Err(format!("{}: stage {si} position {p} used by two blocks", self.name));
+                    }
+                    touched[p] = true;
+                }
+            }
+        }
+        if let Some((si, p)) = self.median_tap {
+            if si > self.stages.len() || p >= n {
+                return Err(format!("{}: median tap out of range", self.name));
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of stages (the paper's primary speed driver).
+    pub fn depth(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Total compare-and-swap count, counting an N-block as its
+    /// all-pairs comparator bank (what the hardware builds).
+    pub fn comparator_count(&self) -> usize {
+        self.stages
+            .iter()
+            .flat_map(|s| &s.blocks)
+            .map(|b| match b {
+                Block::Cas { .. } => 1,
+                Block::SortN { pos } => pos.len() * (pos.len().saturating_sub(1)) / 2,
+                Block::MergeS2 { up, dn, .. } => up.len() * dn.len(),
+                Block::FilterN { pos, .. } => pos.len() * (pos.len().saturating_sub(1)) / 2,
+            })
+            .sum()
+    }
+
+    /// Load sorted input lists into a flat vector per `input_map`.
+    /// Panics if list counts/sizes mismatch (callers validate).
+    pub fn load_inputs<T: Copy + Default>(&self, lists: &[Vec<T>]) -> Vec<T> {
+        assert_eq!(lists.len(), self.list_sizes.len(), "{}: wrong list count", self.name);
+        let mut v = vec![T::default(); self.n];
+        for (l, list) in lists.iter().enumerate() {
+            assert_eq!(list.len(), self.list_sizes[l], "{}: wrong size for list {l}", self.name);
+            for (i, &x) in list.iter().enumerate() {
+                v[self.input_map[l][i]] = x;
+            }
+        }
+        v
+    }
+
+    /// Read the sorted output out of a flat vector per `output_perm`.
+    pub fn read_outputs<T: Copy>(&self, v: &[T]) -> Vec<T> {
+        self.output_perm.iter().map(|&p| v[p]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_device() -> MergeDevice {
+        MergeDevice {
+            name: "tiny".into(),
+            kind: DeviceKind::OddEvenMerge,
+            list_sizes: vec![1, 1],
+            input_map: vec![vec![0], vec![1]],
+            n: 2,
+            stages: vec![Stage::new("s0", vec![Block::Cas { lo: 0, hi: 1 }])],
+            output_perm: vec![0, 1],
+            median_tap: None,
+            grid: None,
+        }
+    }
+
+    #[test]
+    fn check_accepts_valid() {
+        tiny_device().check().unwrap();
+    }
+
+    #[test]
+    fn check_rejects_overlapping_blocks() {
+        let mut d = tiny_device();
+        d.stages[0].blocks.push(Block::Cas { lo: 1, hi: 0 });
+        assert!(d.check().is_err());
+    }
+
+    #[test]
+    fn check_rejects_bad_output_perm() {
+        let mut d = tiny_device();
+        d.output_perm = vec![0, 0];
+        assert!(d.check().is_err());
+    }
+
+    #[test]
+    fn check_rejects_incomplete_input_map() {
+        let mut d = tiny_device();
+        d.input_map = vec![vec![0], vec![0]];
+        assert!(d.check().is_err());
+    }
+
+    #[test]
+    fn load_read_roundtrip() {
+        let d = tiny_device();
+        let v = d.load_inputs(&[vec![7u32], vec![3u32]]);
+        assert_eq!(v, vec![7, 3]);
+        assert_eq!(d.read_outputs(&v), vec![7, 3]);
+    }
+
+    #[test]
+    fn comparator_counts() {
+        assert_eq!(tiny_device().comparator_count(), 1);
+        let b = Block::SortN { pos: vec![0, 1, 2, 3] };
+        assert_eq!(
+            match &b {
+                Block::SortN { pos } => pos.len() * (pos.len() - 1) / 2,
+                _ => 0,
+            },
+            6
+        );
+    }
+
+    #[test]
+    fn block_reads_and_width() {
+        let b = Block::MergeS2 { up: vec![0, 1], dn: vec![2, 3, 4], out: vec![0, 1, 2, 3, 4] };
+        assert_eq!(b.width(), 5);
+        assert_eq!(b.reads(), vec![0, 1, 2, 3, 4]);
+        assert_eq!(b.kind(), "s2ms");
+    }
+}

@@ -1,0 +1,87 @@
+//! Single-stage N-sorters and N-filters (Kent/Pattichis [20][21]).
+//!
+//! An N-sorter sorts N *unsorted* values in one combinatorial stage:
+//! all C(N,2) pairwise comparators run in parallel, each input's output
+//! rank is decoded from its comparison bits (a popcount), and one N-wide
+//! multiplexer per output routes the value. An N-filter builds only a
+//! subset of the output ranks (e.g. the median), saving the mux logic of
+//! the unbuilt outputs.
+//!
+//! These are the row sorters of LOMS devices with >2 columns and the
+//! building blocks of the MWMS baseline.
+
+use super::network::{Block, DeviceKind, MergeDevice, Stage};
+
+/// Structural profile of a single-stage N-sorter/N-filter.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NSorterProfile {
+    pub n: usize,
+    /// All-pairs comparator bank: C(N,2).
+    pub comparators: usize,
+    /// Output ranks physically built (all N for a full sorter).
+    pub outputs_built: usize,
+    /// Each built output is an N-wide mux.
+    pub mux_width: usize,
+}
+
+/// Profile of a full N-sorter.
+pub fn sorter_profile(n: usize) -> NSorterProfile {
+    NSorterProfile { n, comparators: n * n.saturating_sub(1) / 2, outputs_built: n, mux_width: n }
+}
+
+/// Profile of an N-filter building `outputs_built` ranks.
+pub fn filter_profile(n: usize, outputs_built: usize) -> NSorterProfile {
+    NSorterProfile {
+        n,
+        comparators: n * n.saturating_sub(1) / 2,
+        outputs_built,
+        mux_width: n,
+    }
+}
+
+/// Standalone N-sorter device (sorts one unsorted list of n values).
+pub fn nsorter(n: usize) -> MergeDevice {
+    assert!(n >= 1);
+    MergeDevice {
+        name: format!("nsorter-{n}"),
+        kind: DeviceKind::NSorter,
+        list_sizes: vec![n],
+        input_map: vec![(0..n).collect()],
+        n,
+        stages: vec![Stage::new("sort", vec![Block::SortN { pos: (0..n).collect() }])],
+        output_perm: (0..n).collect(),
+        median_tap: None,
+        grid: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sortnet::exec::{merge, ExecMode};
+    use crate::sortnet::validate::validate_sorter_01;
+
+    #[test]
+    fn profiles() {
+        let p = sorter_profile(7);
+        assert_eq!(p.comparators, 21);
+        assert_eq!(p.outputs_built, 7);
+        let f = filter_profile(7, 1);
+        assert_eq!(f.comparators, 21);
+        assert_eq!(f.outputs_built, 1);
+    }
+
+    #[test]
+    fn nsorter_sorts_and_validates() {
+        for n in [1usize, 2, 3, 5, 8] {
+            let d = nsorter(n);
+            d.check().unwrap();
+            assert_eq!(d.depth(), 1);
+            if n >= 2 {
+                validate_sorter_01(&d).unwrap();
+            }
+        }
+        let out = merge(&nsorter(5), &[vec![9u32, 1, 7, 3, 3]], ExecMode::Fast).unwrap();
+        assert_eq!(out, vec![1, 3, 3, 7, 9]);
+    }
+}

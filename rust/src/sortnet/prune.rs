@@ -1,0 +1,177 @@
+//! Output-cone pruning — the generalization of the paper's Fig.-6
+//! observation that after stage 2 most 3c_7r cells are "already sorted"
+//! (lavender cells) and stage 3 only needs edge-pair sorters.
+//!
+//! For every (stage, position) we decide, by exhaustive sorted-0-1
+//! analysis, whether the stage can EVER change the value at that
+//! position. Positions a stage provably never changes need no output
+//! multiplexer in that stage's hardware: `SortN` blocks become
+//! `FilterN`s tapping only the mutable ranks, and compare-exchange
+//! blocks that never fire disappear. The comparator banks stay (they
+//! feed the remaining outputs); functional behaviour is bit-identical —
+//! [`prune`] re-validates the result.
+//!
+//! The 0-1 argument: if a stage changed a position on some real input,
+//! it would change it on the threshold projection that separates the old
+//! and new values, so "never changes on all 0-1 patterns" is exact.
+
+use super::exec::{ExecMode, ExecScratch};
+use super::network::{Block, MergeDevice, Stage};
+use super::validate::{merge_01_pattern_count, validate_merge_01, ValidationError};
+
+/// Per-stage set of positions the stage can change (union over all
+/// sorted-0-1 inputs).
+pub fn mutable_positions(d: &MergeDevice) -> Result<Vec<Vec<bool>>, ValidationError> {
+    assert!(
+        merge_01_pattern_count(&d.list_sizes) <= 5_000_000,
+        "pruning analysis infeasible for {:?}",
+        d.list_sizes
+    );
+    let mut mutable = vec![vec![false; d.n]; d.stages.len()];
+    let sizes = &d.list_sizes;
+    let mut zeros = vec![0usize; sizes.len()];
+    let mut scratch = ExecScratch::new();
+    loop {
+        let lists: Vec<Vec<u8>> = sizes
+            .iter()
+            .zip(&zeros)
+            .map(|(&s, &z)| {
+                let mut v = vec![0u8; s];
+                for x in v.iter_mut().skip(z) {
+                    *x = 1;
+                }
+                v
+            })
+            .collect();
+        let mut v = d.load_inputs(&lists);
+        for (si, _) in d.stages.iter().enumerate() {
+            let before = v.clone();
+            // run just this stage
+            scratch
+                .run_stage(d, si, &mut v, ExecMode::Fast)
+                .map_err(|e| ValidationError { device: d.name.clone(), detail: e.to_string() })?;
+            for p in 0..d.n {
+                if v[p] != before[p] {
+                    mutable[si][p] = true;
+                }
+            }
+        }
+        // Odometer.
+        let mut l = 0;
+        loop {
+            if l == sizes.len() {
+                return Ok(mutable);
+            }
+            zeros[l] += 1;
+            if zeros[l] <= sizes[l] {
+                break;
+            }
+            zeros[l] = 0;
+            l += 1;
+        }
+    }
+}
+
+/// Prune a device: drop output muxes (and whole blocks) a stage provably
+/// never uses. Returns the pruned device (re-validated) plus the number
+/// of output muxes removed.
+pub fn prune(d: &MergeDevice) -> Result<(MergeDevice, usize), ValidationError> {
+    let mutable = mutable_positions(d)?;
+    let mut pruned = d.clone();
+    let mut removed = 0usize;
+    for (si, stage) in d.stages.iter().enumerate() {
+        let mut blocks = Vec::with_capacity(stage.blocks.len());
+        for b in &stage.blocks {
+            match b {
+                Block::Cas { lo, hi } => {
+                    if mutable[si][*lo] || mutable[si][*hi] {
+                        blocks.push(b.clone());
+                    } else {
+                        removed += 2;
+                    }
+                }
+                Block::SortN { pos } => {
+                    let taps: Vec<usize> = pos
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, &p)| mutable[si][p])
+                        .map(|(t, _)| t)
+                        .collect();
+                    removed += pos.len() - taps.len();
+                    if taps.is_empty() {
+                        // whole block is a no-op
+                    } else if taps.len() == pos.len() {
+                        blocks.push(b.clone());
+                    } else {
+                        blocks.push(Block::FilterN { pos: pos.clone(), taps });
+                    }
+                }
+                Block::FilterN { pos, taps } => {
+                    let kept: Vec<usize> = taps
+                        .iter()
+                        .copied()
+                        .filter(|&t| mutable[si][pos[t]])
+                        .collect();
+                    removed += taps.len() - kept.len();
+                    if !kept.is_empty() {
+                        blocks.push(Block::FilterN { pos: pos.clone(), taps: kept });
+                    }
+                }
+                Block::MergeS2 { up, dn, out } => {
+                    // S2MS outputs are cheap to prune the same way, but a
+                    // partially-pruned S2MS is still modelled as a full
+                    // block; only drop it when it is a complete no-op.
+                    if out.iter().any(|&p| mutable[si][p]) {
+                        blocks.push(b.clone());
+                    } else {
+                        removed += up.len() + dn.len();
+                    }
+                }
+            }
+        }
+        pruned.stages[si] = Stage::new(format!("{}*", stage.label), blocks);
+    }
+    pruned.stages.retain(|s| !s.blocks.is_empty());
+    pruned.name = format!("{}-pruned", d.name);
+    validate_merge_01(&pruned)?;
+    Ok((pruned, removed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sortnet::loms::loms_kway;
+    use crate::sortnet::mwms::mwms_3way;
+    use crate::sortnet::validate::validate_merge_random;
+
+    #[test]
+    fn loms_3c7r_is_already_minimal() {
+        // A satisfying check of the paper's design: the 3c_7r LOMS with
+        // its edge-pair stage 3 has NOTHING to prune — every built mux
+        // can fire on some input. The list-offset setup is doing exactly
+        // the work pruning would otherwise recover.
+        let d = loms_kway(&[7, 7, 7]);
+        let (p, removed) = prune(&d).unwrap();
+        assert_eq!(removed, 0, "LOMS 3c_7r should already be cone-minimal");
+        validate_merge_random(&p, 50, 1).unwrap();
+        assert_eq!(p.depth(), d.depth());
+    }
+
+    #[test]
+    fn pruned_mwms_still_valid() {
+        let d = mwms_3way(5);
+        let (p, removed) = prune(&d).unwrap();
+        assert!(removed > 0);
+        validate_merge_random(&p, 50, 2).unwrap();
+    }
+
+    #[test]
+    fn mutable_positions_monotone_shrink() {
+        // Later stages of a correct merge touch fewer positions.
+        let d = mwms_3way(7);
+        let m = mutable_positions(&d).unwrap();
+        let first: usize = m[0].iter().filter(|&&x| x).count();
+        let last: usize = m.last().unwrap().iter().filter(|&&x| x).count();
+        assert!(last < first, "first stage {first}, last {last}");
+    }
+}

@@ -1,0 +1,178 @@
+//! Complete sorters composed from merge devices — the deployment the
+//! paper's introduction motivates (§II): a first rank of parallel
+//! 2-sorters turns an unsorted list into sorted pairs, then a binary
+//! tree of 2-way merge devices produces the sorted output. The choice
+//! of merge family (Batcher / S2MS / LOMS) sets the sorter's overall
+//! stage count and LUT bill — the trade the paper's figures quantify
+//! per merge level.
+
+use super::batcher::{bitonic_merge, odd_even_merge};
+use super::loms::loms_2way;
+use super::network::{Block, DeviceKind, MergeDevice, Stage};
+use super::s2ms::s2ms;
+
+/// Which 2-way merge family composes the sorter's merge tree.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MergeFamily {
+    OddEven,
+    Bitonic,
+    S2ms,
+    /// LOMS with the given column count at every level (columns are
+    /// capped at the level's list size).
+    Loms { cols: usize },
+}
+
+impl MergeFamily {
+    fn merge_device(self, m: usize) -> MergeDevice {
+        match self {
+            MergeFamily::OddEven => odd_even_merge(m),
+            MergeFamily::Bitonic => bitonic_merge(m),
+            MergeFamily::S2ms => s2ms(m, m),
+            MergeFamily::Loms { cols } => loms_2way(m, m, cols.min(m.max(2))),
+        }
+    }
+
+    pub fn label(self) -> String {
+        match self {
+            MergeFamily::OddEven => "oems".into(),
+            MergeFamily::Bitonic => "bims".into(),
+            MergeFamily::S2ms => "s2ms".into(),
+            MergeFamily::Loms { cols } => format!("loms{cols}"),
+        }
+    }
+}
+
+/// Build a complete sorter for `n` (power-of-2 ≥ 2) unsorted values:
+/// one 2-sorter stage, then log2(n)-1 merge levels of the chosen family.
+///
+/// Stage structure: the merge devices of one level run in parallel, so
+/// the sorter's stage sequence is the concatenation of each level's
+/// stage sequence (each level's sub-devices are stage-aligned).
+pub fn sorter(n: usize, family: MergeFamily) -> MergeDevice {
+    assert!(n >= 2 && n.is_power_of_two(), "sorter needs a power-of-2 size, got {n}");
+    // Stage 0: 2-sorters over adjacent pairs.
+    let mut stages = vec![Stage::new(
+        "pair-sort",
+        (0..n / 2).map(|i| Block::Cas { lo: 2 * i, hi: 2 * i + 1 }).collect(),
+    )];
+    // `layout[rank_slot] = absolute position` of the value holding that
+    // rank within its run after the completed levels. After the pair
+    // stage each pair is sorted in place, so layout starts as identity.
+    let mut layout: Vec<usize> = (0..n).collect();
+    let mut m = 2usize;
+    while m < n {
+        let proto = family.merge_device(m);
+        debug_assert!(proto.output_perm.iter().enumerate().all(|(r, &p)| r == p));
+        let mut level_stages: Vec<Stage> = proto
+            .stages
+            .iter()
+            .map(|s| Stage::new(format!("merge{m}-{}", s.label), vec![]))
+            .collect();
+        let mut next_layout = vec![0usize; n];
+        for group in 0..n / (2 * m) {
+            let base = group * 2 * m;
+            // abs_of_proto: prototype coordinate -> absolute position.
+            // Inputs: run l element i sits at layout[base + l*m + i] and
+            // the prototype expects it at input_map[l][i].
+            let mut abs_of_proto = vec![usize::MAX; 2 * m];
+            for (l, map) in proto.input_map.iter().enumerate() {
+                for (i, &pc) in map.iter().enumerate() {
+                    abs_of_proto[pc] = layout[base + l * m + i];
+                }
+            }
+            debug_assert!(abs_of_proto.iter().all(|&x| x != usize::MAX));
+            for (si, stage) in proto.stages.iter().enumerate() {
+                for b in &stage.blocks {
+                    let nb = match b {
+                        Block::Cas { lo, hi } => {
+                            Block::Cas { lo: abs_of_proto[*lo], hi: abs_of_proto[*hi] }
+                        }
+                        Block::SortN { pos } => Block::SortN {
+                            pos: pos.iter().map(|&p| abs_of_proto[p]).collect(),
+                        },
+                        Block::MergeS2 { up, dn, out } => Block::MergeS2 {
+                            up: up.iter().map(|&p| abs_of_proto[p]).collect(),
+                            dn: dn.iter().map(|&p| abs_of_proto[p]).collect(),
+                            out: out.iter().map(|&p| abs_of_proto[p]).collect(),
+                        },
+                        Block::FilterN { pos, taps } => Block::FilterN {
+                            pos: pos.iter().map(|&p| abs_of_proto[p]).collect(),
+                            taps: taps.clone(),
+                        },
+                    };
+                    level_stages[si].blocks.push(nb);
+                }
+            }
+            // Outputs: prototype rank r lands at abs_of_proto[r].
+            for r in 0..2 * m {
+                next_layout[base + r] = abs_of_proto[r];
+            }
+        }
+        stages.extend(level_stages);
+        layout = next_layout;
+        m *= 2;
+    }
+    MergeDevice {
+        name: format!("sorter{n}-{}", family.label()),
+        kind: DeviceKind::Loms,
+        list_sizes: vec![n],
+        input_map: vec![(0..n).collect()],
+        n,
+        stages,
+        output_perm: layout,
+        median_tap: None,
+        grid: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sortnet::exec::{merge, ExecMode};
+    use crate::sortnet::validate::validate_sorter_01;
+    use crate::util::Rng;
+
+    #[test]
+    fn sorters_sort_01_exhaustive() {
+        for family in [
+            MergeFamily::OddEven,
+            MergeFamily::Bitonic,
+            MergeFamily::S2ms,
+            MergeFamily::Loms { cols: 2 },
+        ] {
+            for n in [2usize, 4, 8, 16] {
+                let d = sorter(n, family);
+                d.check().unwrap_or_else(|e| panic!("{e}"));
+                validate_sorter_01(&d).unwrap_or_else(|e| panic!("{family:?} n={n}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn sorters_random_differential() {
+        let mut rng = Rng::new(44);
+        for family in [MergeFamily::S2ms, MergeFamily::Loms { cols: 2 }, MergeFamily::OddEven] {
+            let d = sorter(64, family);
+            for _ in 0..20 {
+                let mut data: Vec<u32> = (0..64).map(|_| rng.next_u32() >> 8).collect();
+                let got = merge(&d, &[data.clone()], ExecMode::Fast).unwrap();
+                data.sort_unstable();
+                assert_eq!(got, data, "{family:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn loms_sorter_shallower_than_batcher_sorter() {
+        // The composition inherits the paper's stage story: each LOMS
+        // merge level is 2 stages, each S2MS level 1, each Batcher level
+        // log2(outputs).
+        let n = 64;
+        let batcher_depth = sorter(n, MergeFamily::OddEven).depth();
+        let loms_depth = sorter(n, MergeFamily::Loms { cols: 2 }).depth();
+        let s2ms_depth = sorter(n, MergeFamily::S2ms).depth();
+        assert_eq!(s2ms_depth, 1 + 5); // pairs + one stage per level
+        assert_eq!(loms_depth, 1 + 2 * 5); // pairs + 2 per level... minus level-2 col skip
+        assert!(loms_depth < batcher_depth, "loms {loms_depth} vs batcher {batcher_depth}");
+    }
+}

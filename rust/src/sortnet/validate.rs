@@ -1,0 +1,274 @@
+//! Correctness validation of merge devices via the 0-1 principle.
+//!
+//! For *merge* devices (sorted input lists) the 0-1 principle specialises:
+//! a sorted 0-1 list of length `s` has exactly `s+1` distinct patterns
+//! (the number of leading zeros), so a k-way merge device is correct for
+//! **all** inputs iff it is correct for the `∏ (s_l + 1)` sorted 0-1
+//! input combinations — exhaustively checkable even for 256-value devices.
+//!
+//! Strict execution (precondition checks on every `S2MS` block) during
+//! validation extends the guarantee to the hardware semantics: if no 0-1
+//! pattern violates a block precondition, no real-valued input can either
+//! (a descent in a real-valued run implies a descent in its threshold
+//! projection at any cut between the two values).
+
+use super::exec::{ExecMode, ExecScratch};
+use super::network::MergeDevice;
+
+/// Validation failure detail.
+#[derive(Debug, Clone)]
+pub struct ValidationError {
+    pub device: String,
+    pub detail: String,
+}
+
+impl std::fmt::Display for ValidationError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.device, self.detail)
+    }
+}
+
+impl std::error::Error for ValidationError {}
+
+/// Iterate all sorted 0-1 patterns for the device's input lists, calling
+/// `f(lists)` for each. Pattern count = ∏ (size_l + 1).
+fn for_each_sorted01<F: FnMut(&[Vec<u8>]) -> Result<(), ValidationError>>(
+    sizes: &[usize],
+    mut f: F,
+) -> Result<(), ValidationError> {
+    let k = sizes.len();
+    let mut zeros = vec![0usize; k]; // list l = zeros[l] zeros then ones
+    loop {
+        let lists: Vec<Vec<u8>> = sizes
+            .iter()
+            .zip(&zeros)
+            .map(|(&s, &z)| {
+                let mut v = vec![0u8; s];
+                for x in v.iter_mut().skip(z) {
+                    *x = 1;
+                }
+                v
+            })
+            .collect();
+        f(&lists)?;
+        // Odometer increment.
+        let mut l = 0;
+        loop {
+            if l == k {
+                return Ok(());
+            }
+            zeros[l] += 1;
+            if zeros[l] <= sizes[l] {
+                break;
+            }
+            zeros[l] = 0;
+            l += 1;
+        }
+    }
+}
+
+/// Number of sorted 0-1 patterns a merge validation will run.
+pub fn merge_01_pattern_count(sizes: &[usize]) -> u128 {
+    sizes.iter().map(|&s| (s + 1) as u128).product()
+}
+
+/// Exhaustive sorted-0-1 validation of a merge device: every pattern must
+/// execute without precondition violation and produce a sorted output.
+/// Also checks the median tap (if any) against the true median.
+pub fn validate_merge_01(d: &MergeDevice) -> Result<(), ValidationError> {
+    d.check().map_err(|e| ValidationError { device: d.name.clone(), detail: e })?;
+    let mut scratch = ExecScratch::new();
+    for_each_sorted01(&d.list_sizes, |lists| {
+        let mut v = d.load_inputs(lists);
+        scratch
+            .run(d, &mut v, ExecMode::Strict, None)
+            .map_err(|e| ValidationError {
+                device: d.name.clone(),
+                detail: format!("precondition violated on {lists:?}: {e}"),
+            })?;
+        let out = d.read_outputs(&v);
+        if out.windows(2).any(|w| w[0] > w[1]) {
+            return Err(ValidationError {
+                device: d.name.clone(),
+                detail: format!("unsorted output {out:?} for input {lists:?}"),
+            });
+        }
+        // Median tap check (only defined for odd totals).
+        if let Some((stop, pos)) = d.median_tap {
+            let mut v2 = d.load_inputs(lists);
+            scratch
+                .run(d, &mut v2, ExecMode::Strict, Some(stop))
+                .map_err(|e| ValidationError {
+                    device: d.name.clone(),
+                    detail: format!("median-path precondition violated: {e}"),
+                })?;
+            let mut all: Vec<u8> = lists.iter().flatten().copied().collect();
+            all.sort_unstable();
+            let want = all[all.len() / 2];
+            if v2[pos] != want {
+                return Err(ValidationError {
+                    device: d.name.clone(),
+                    detail: format!(
+                        "median tap got {} want {} for input {lists:?}",
+                        v2[pos], want
+                    ),
+                });
+            }
+        }
+        Ok(())
+    })
+}
+
+/// Exhaustive sorted-0-1 validation of a *median-only* device (e.g. the
+/// Fig.-18 LOMS/MWMS median filters): checks only the median tap, since
+/// such devices do not build the full sorted output.
+pub fn validate_median_01(d: &MergeDevice) -> Result<(), ValidationError> {
+    d.check().map_err(|e| ValidationError { device: d.name.clone(), detail: e })?;
+    let (stop, pos) = d.median_tap.ok_or_else(|| ValidationError {
+        device: d.name.clone(),
+        detail: "device has no median tap".into(),
+    })?;
+    let mut scratch = ExecScratch::new();
+    for_each_sorted01(&d.list_sizes, |lists| {
+        let mut v = d.load_inputs(lists);
+        scratch.run(d, &mut v, ExecMode::Strict, Some(stop)).map_err(|e| ValidationError {
+            device: d.name.clone(),
+            detail: format!("precondition violated on {lists:?}: {e}"),
+        })?;
+        let mut all: Vec<u8> = lists.iter().flatten().copied().collect();
+        all.sort_unstable();
+        let want = all[all.len() / 2];
+        if v[pos] != want {
+            return Err(ValidationError {
+                device: d.name.clone(),
+                detail: format!("median got {} want {} for {lists:?}", v[pos], want),
+            });
+        }
+        Ok(())
+    })
+}
+
+/// Exhaustive 0-1 validation for full sorters (unsorted input): all 2^n
+/// binary vectors. Only feasible for small n (caller's responsibility;
+/// asserts n <= 24).
+pub fn validate_sorter_01(d: &MergeDevice) -> Result<(), ValidationError> {
+    d.check().map_err(|e| ValidationError { device: d.name.clone(), detail: e })?;
+    let n = d.n;
+    assert!(n <= 24, "exhaustive 0-1 sorter validation limited to n<=24");
+    assert_eq!(d.list_sizes.len(), 1, "sorter validation expects a single unsorted list");
+    let mut scratch = ExecScratch::new();
+    for bits in 0u32..(1u32 << n) {
+        let list: Vec<u8> = (0..n).map(|i| ((bits >> i) & 1) as u8).collect();
+        let mut v = d.load_inputs(&[list.clone()]);
+        scratch.run(d, &mut v, ExecMode::Strict, None).map_err(|e| ValidationError {
+            device: d.name.clone(),
+            detail: format!("precondition violated on {bits:b}: {e}"),
+        })?;
+        let out = d.read_outputs(&v);
+        if out.windows(2).any(|w| w[0] > w[1]) {
+            return Err(ValidationError {
+                device: d.name.clone(),
+                detail: format!("unsorted output {out:?} for input {list:?}"),
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Randomised differential validation against `sort()` on u32 values —
+/// a belt-and-braces complement to the exhaustive 0-1 proofs (checks
+/// value routing, not just order).
+pub fn validate_merge_random(d: &MergeDevice, iters: usize, seed: u64) -> Result<(), ValidationError> {
+    let mut rng = crate::util::Rng::new(seed);
+    let mut scratch = ExecScratch::new();
+    for it in 0..iters {
+        let lists: Vec<Vec<u32>> = d.list_sizes.iter().map(|&s| rng.sorted_list(s, 1000)).collect();
+        let mut v = d.load_inputs(&lists);
+        scratch.run(d, &mut v, ExecMode::Strict, None).map_err(|e| ValidationError {
+            device: d.name.clone(),
+            detail: format!("iter {it}: precondition violated: {e}"),
+        })?;
+        let got = d.read_outputs(&v);
+        let mut want: Vec<u32> = lists.iter().flatten().copied().collect();
+        want.sort_unstable();
+        if got != want {
+            return Err(ValidationError {
+                device: d.name.clone(),
+                detail: format!("iter {it}: got {got:?} want {want:?} for {lists:?}"),
+            });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sortnet::network::{Block, DeviceKind, Stage};
+
+    fn s2ms_2x2() -> MergeDevice {
+        MergeDevice {
+            name: "s2ms-2-2".into(),
+            kind: DeviceKind::S2ms,
+            list_sizes: vec![2, 2],
+            input_map: vec![vec![0, 1], vec![2, 3]],
+            n: 4,
+            stages: vec![Stage::new("m", vec![Block::MergeS2 { up: vec![0, 1], dn: vec![2, 3], out: vec![0, 1, 2, 3] }])],
+            output_perm: vec![0, 1, 2, 3],
+            median_tap: None,
+            grid: None,
+        }
+    }
+
+    #[test]
+    fn pattern_count() {
+        assert_eq!(merge_01_pattern_count(&[2, 2]), 9);
+        assert_eq!(merge_01_pattern_count(&[7, 7, 7]), 512);
+        assert_eq!(merge_01_pattern_count(&[32, 32]), 33 * 33);
+    }
+
+    #[test]
+    fn valid_merge_passes() {
+        validate_merge_01(&s2ms_2x2()).unwrap();
+        validate_merge_random(&s2ms_2x2(), 50, 1).unwrap();
+    }
+
+    #[test]
+    fn broken_merge_fails() {
+        let mut d = s2ms_2x2();
+        // Swap two outputs: still a permutation, but not sorted.
+        d.output_perm = vec![1, 0, 2, 3];
+        assert!(validate_merge_01(&d).is_err());
+    }
+
+    #[test]
+    fn incomplete_network_fails() {
+        // A single CAS cannot merge 2+2: validation must catch it.
+        let d = MergeDevice {
+            name: "bogus".into(),
+            kind: DeviceKind::OddEvenMerge,
+            list_sizes: vec![2, 2],
+            input_map: vec![vec![0, 1], vec![2, 3]],
+            n: 4,
+            stages: vec![Stage::new("s", vec![Block::Cas { lo: 1, hi: 2 }])],
+            output_perm: vec![0, 1, 2, 3],
+            median_tap: None,
+            grid: None,
+        };
+        assert!(validate_merge_01(&d).is_err());
+    }
+
+    #[test]
+    fn bad_median_tap_fails() {
+        let mut d = s2ms_2x2();
+        d.list_sizes = vec![2, 1];
+        d.input_map = vec![vec![0, 1], vec![2]];
+        d.n = 3;
+        d.stages = vec![Stage::new("m", vec![Block::MergeS2 { up: vec![0, 1], dn: vec![2], out: vec![0, 1, 2] }])];
+        d.output_perm = vec![0, 1, 2];
+        d.median_tap = Some((1, 0)); // position 0 is the min, not median
+        assert!(validate_merge_01(&d).is_err());
+        d.median_tap = Some((1, 1)); // correct
+        validate_merge_01(&d).unwrap();
+    }
+}

@@ -1,0 +1,8 @@
+//! In-crate substrates for the offline build: PRNG, JSON, timing/report
+//! helpers. (The environment vendors only `xla` + `anyhow`.)
+
+pub mod json;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,87 @@
+//! End-to-end coordinator integration over the real PJRT backend:
+//! requests → router → dynamic batcher → compiled HLO → responses.
+//! Skips when artifacts are absent (`make artifacts`).
+
+use loms::coordinator::{MergeService, PjrtBackend, ServiceConfig};
+use loms::util::Rng;
+use std::time::Duration;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn service_or_skip() -> Option<MergeService> {
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    let dir = artifacts_dir();
+    Some(
+        MergeService::start(
+            move || PjrtBackend::load(dir),
+            ServiceConfig { max_wait: Duration::from_millis(2), software_fallback: true },
+        )
+        .expect("service start"),
+    )
+}
+
+#[test]
+fn pjrt_service_end_to_end() {
+    let Some(s) = service_or_skip() else { return };
+    let mut rng = Rng::new(0xE2E);
+    let mut rxs = Vec::new();
+    let mut wants = Vec::new();
+    for i in 0..300u32 {
+        // Mix of shapes: exact artifact shapes, padded shapes, 3-way.
+        let lists: Vec<Vec<u32>> = match i % 4 {
+            0 => vec![rng.sorted_list(32, 1 << 20), rng.sorted_list(32, 1 << 20)],
+            1 => vec![rng.sorted_list(20, 1 << 20), rng.sorted_list(9, 1 << 20)],
+            2 => vec![rng.sorted_list(64, 1 << 20), rng.sorted_list(64, 1 << 20)],
+            _ => vec![
+                rng.sorted_list(7, 1 << 20),
+                rng.sorted_list(7, 1 << 20),
+                rng.sorted_list(7, 1 << 20),
+            ],
+        };
+        let mut want: Vec<u32> = lists.concat();
+        want.sort_unstable();
+        wants.push(want);
+        rxs.push(s.submit(lists));
+    }
+    for (rx, want) in rxs.into_iter().zip(wants) {
+        let resp = rx.recv().expect("response");
+        assert_eq!(resp.merged, want);
+        assert_ne!(resp.served_by, "software", "these shapes all route to artifacts");
+    }
+    let snap = s.metrics().snapshot();
+    assert_eq!(snap.responses, 300);
+    assert!(snap.batches > 0 && snap.batches < 300, "dynamic batching engaged: {snap:?}");
+    s.shutdown();
+}
+
+#[test]
+fn pjrt_service_latency_accounting() {
+    let Some(s) = service_or_skip() else { return };
+    let mut rng = Rng::new(7);
+    for _ in 0..10 {
+        let resp = s
+            .merge_blocking(vec![rng.sorted_list(32, 1000), rng.sorted_list(32, 1000)])
+            .unwrap();
+        assert!(resp.latency_ns > 0);
+    }
+    let snap = s.metrics().snapshot();
+    assert!(snap.mean_latency_us > 0.0);
+    assert!(snap.p99_latency_us >= snap.p50_latency_us);
+}
+
+#[test]
+fn pjrt_external_sort_end_to_end() {
+    let Some(s) = service_or_skip() else { return };
+    let mut rng = Rng::new(42);
+    let data: Vec<u32> = (0..20_000).map(|_| rng.next_u32() >> 3).collect();
+    let (sorted, stats) = loms::coordinator::planner::external_sort(&s, &data, 32, 512).unwrap();
+    let mut want = data;
+    want.sort_unstable();
+    assert_eq!(sorted, want);
+    assert!(stats.network_levels >= 4, "{stats:?}");
+}

@@ -1,0 +1,110 @@
+//! Exhaustive device validation sweeps — the headline correctness
+//! guarantee: every characterized device in the paper's study is proven
+//! correct for ALL inputs via the sorted-0-1 principle (strict hardware
+//! semantics, preconditions checked).
+
+use loms::sortnet::loms::{loms_2way, loms_3way_median, loms_kway, table1_stage_count};
+use loms::sortnet::mwms::{mwms_3way, mwms_3way_median};
+use loms::sortnet::validate::{validate_median_01, validate_merge_01, validate_merge_random};
+use loms::sortnet::{batcher, s2ms};
+
+/// Every cell of the paper's Fig.-10 matrix (S2MS device sizes used in
+/// S2MS/LOMS sorters, 4..256 outputs).
+#[test]
+fn fig10_matrix_devices_all_validate() {
+    // S2MS row: 4..=128 outputs (256-out S2MS exists structurally even
+    // though it never fits an FPGA — validation is about function).
+    for m in [2usize, 4, 8, 16, 32, 64] {
+        validate_merge_01(&s2ms::s2ms(m, m)).unwrap();
+    }
+    // LOMS rows: (outputs, cols) per Fig. 10.
+    for (outs, cols) in [
+        (8usize, 2usize),
+        (16, 2),
+        (16, 4),
+        (32, 2),
+        (32, 4),
+        (32, 8),
+        (64, 2),
+        (64, 4),
+        (64, 8),
+        (128, 2),
+        (128, 4),
+        (128, 8),
+        (256, 2),
+        (256, 4),
+        (256, 8),
+    ] {
+        let d = loms_2way(outs / 2, outs / 2, cols);
+        assert_eq!(d.depth(), 2, "{}", d.name);
+        validate_merge_01(&d).unwrap_or_else(|e| panic!("{e}"));
+    }
+}
+
+/// Batcher baselines across the full studied range.
+#[test]
+fn batcher_baselines_validate() {
+    for m in [2usize, 4, 8, 16, 32, 64, 128] {
+        validate_merge_01(&batcher::odd_even_merge(m)).unwrap();
+        validate_merge_01(&batcher::bitonic_merge(m)).unwrap();
+    }
+}
+
+/// Mixed/odd list sizes — the versatility claim (§VIII): any mixture,
+/// no power-of-2 restriction.
+#[test]
+fn loms_versatility_sweep() {
+    for m in 1..=12usize {
+        for n in 1..=12usize {
+            for cols in [2usize, 3, 4] {
+                let d = loms_2way(m, n, cols);
+                validate_merge_01(&d)
+                    .unwrap_or_else(|e| panic!("UP-{m}/DN-{n} {cols}col: {e}"));
+            }
+        }
+    }
+}
+
+/// 3-way devices: LOMS (3 stages + 2-stage median) and the MWMS
+/// baseline reconstruction, across list sizes.
+#[test]
+fn three_way_devices_validate() {
+    for r in [1usize, 3, 5, 7, 9] {
+        let d = loms_kway(&[r, r, r]);
+        validate_merge_01(&d).unwrap_or_else(|e| panic!("{e}"));
+        if r >= 3 {
+            validate_median_01(&loms_3way_median(r)).unwrap_or_else(|e| panic!("{e}"));
+        }
+    }
+    for r in [3usize, 5, 7] {
+        validate_merge_01(&mwms_3way(r)).unwrap();
+        validate_median_01(&mwms_3way_median(r)).unwrap();
+    }
+}
+
+/// k-way merges up to k=8 validate within the Table-1 stage budget.
+#[test]
+fn kway_table1_budget_holds() {
+    for k in 3..=8usize {
+        for r in [2usize, 3, 4] {
+            let d = loms_kway(&vec![r; k]);
+            validate_merge_01(&d).unwrap_or_else(|e| panic!("k={k} r={r}: {e}"));
+            assert!(
+                d.depth() <= table1_stage_count(k),
+                "k={k} r={r}: depth {} > table1 {}",
+                d.depth(),
+                table1_stage_count(k)
+            );
+        }
+    }
+}
+
+/// Random differential check on the largest devices (value routing, not
+/// just 0-1 order).
+#[test]
+fn large_devices_random_differential() {
+    validate_merge_random(&loms_2way(128, 128, 8), 20, 1).unwrap();
+    validate_merge_random(&loms_2way(64, 64, 2), 20, 2).unwrap();
+    validate_merge_random(&s2ms::s2ms(64, 64), 20, 3).unwrap();
+    validate_merge_random(&loms_kway(&[9, 9, 9, 9, 9]), 20, 4).unwrap();
+}

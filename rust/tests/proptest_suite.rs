@@ -1,0 +1,228 @@
+//! Property-based tests (hand-rolled generators over `util::Rng`; the
+//! offline build has no proptest crate). Each property runs hundreds of
+//! randomized cases with deterministic seeds — failures print the seed.
+
+use loms::coordinator::{MergeService, Route, Router, ServiceConfig, SoftwareBackend};
+use loms::sortnet::exec::{merge, ExecMode};
+use loms::sortnet::{batcher, loms as lm, s2ms};
+use loms::util::Rng;
+
+/// Property: every LOMS 2-way configuration merges arbitrary sorted
+/// inputs exactly like std sort, for random (m, n, cols).
+#[test]
+fn prop_loms_2way_merges_like_sort() {
+    let mut rng = Rng::new(2024);
+    for case in 0..300 {
+        let m = rng.range(1, 40);
+        let n = rng.range(1, 40);
+        let cols = [2, 3, 4, 8][rng.range(0, 4)];
+        let d = lm::loms_2way(m, n, cols);
+        let a = rng.sorted_list(m, 500);
+        let b = rng.sorted_list(n, 500);
+        let got = merge(&d, &[a.clone(), b.clone()], ExecMode::Strict)
+            .unwrap_or_else(|e| panic!("case {case} (m={m},n={n},cols={cols}): {e}"));
+        let mut want = [a, b].concat();
+        want.sort_unstable();
+        assert_eq!(got, want, "case {case} (m={m},n={n},cols={cols})");
+    }
+}
+
+/// Property: k-way LOMS merges arbitrary sorted inputs for random k and
+/// sizes (k in 3..=6; unequal sizes exercised at k=3).
+#[test]
+fn prop_loms_kway_merges_like_sort() {
+    let mut rng = Rng::new(77);
+    for case in 0..150 {
+        // Equal sizes: the paper's k-way setting (Table 1). Unequal
+        // mixtures are only claimed (and only hold) for 2-way/3-way
+        // special cases — exercised separately below.
+        let k = rng.range(3, 7);
+        let sizes: Vec<usize> = vec![rng.range(1, 8); k];
+        let d = lm::loms_kway(&sizes);
+        let lists: Vec<Vec<u32>> = sizes.iter().map(|&s| rng.sorted_list(s, 300)).collect();
+        let got = merge(&d, &lists, ExecMode::Strict)
+            .unwrap_or_else(|e| panic!("case {case} sizes {sizes:?}: {e}"));
+        let mut want: Vec<u32> = lists.concat();
+        want.sort_unstable();
+        assert_eq!(got, want, "case {case} sizes {sizes:?}");
+    }
+}
+
+/// Known-good unequal 3-way mixtures merge through the validated
+/// constructor (schedule extended beyond Table 1 where needed).
+#[test]
+fn prop_loms_3way_unequal_known_good() {
+    let mut rng = Rng::new(303);
+    for sizes in [[7usize, 5, 3], [5, 3, 1], [3, 5, 7], [7, 7, 5], [9, 7, 5]] {
+        let d = lm::loms_kway_validated(&sizes).unwrap_or_else(|e| panic!("{e}"));
+        for _ in 0..20 {
+            let lists: Vec<Vec<u32>> = sizes.iter().map(|&s| rng.sorted_list(s, 200)).collect();
+            let got = merge(&d, &lists, ExecMode::Strict).unwrap();
+            let mut want: Vec<u32> = lists.concat();
+            want.sort_unstable();
+            assert_eq!(got, want, "{sizes:?}");
+        }
+    }
+    // Non-convergent mixtures are reported as errors, never mis-built.
+    assert!(lm::loms_kway_validated(&[8, 1, 6]).is_err());
+    assert!(lm::loms_kway_validated(&[5, 5, 3]).is_err());
+}
+
+/// Property: stability — S2MS and LOMS keep UP-list values ahead of
+/// equal DN-list values (checked via (key, origin) pairs).
+#[test]
+fn prop_merge_stability() {
+    let mut rng = Rng::new(5150);
+    for _ in 0..100 {
+        let m = rng.range(1, 20);
+        let n = rng.range(1, 20);
+        let a: Vec<(u32, u8)> = {
+            let mut v: Vec<u32> = (0..m).map(|_| rng.below(8) as u32).collect();
+            v.sort_unstable();
+            v.into_iter().map(|x| (x, 0)).collect()
+        };
+        let b: Vec<(u32, u8)> = {
+            let mut v: Vec<u32> = (0..n).map(|_| rng.below(8) as u32).collect();
+            v.sort_unstable();
+            v.into_iter().map(|x| (x, 1)).collect()
+        };
+        let d = s2ms::s2ms(m, n);
+        let got = merge(&d, &[a, b], ExecMode::Strict).unwrap();
+        // Among equal keys, all origin-0 entries must precede origin-1.
+        for w in got.windows(2) {
+            if w[0].0 == w[1].0 {
+                assert!(w[0].1 <= w[1].1, "stability violated: {got:?}");
+            }
+        }
+    }
+}
+
+/// Property: the Batcher baselines and LOMS agree on every input.
+#[test]
+fn prop_all_devices_agree() {
+    let mut rng = Rng::new(31337);
+    for _ in 0..100 {
+        let m = [4usize, 8, 16, 32][rng.range(0, 4)];
+        let a = rng.sorted_list(m, 1000);
+        let b = rng.sorted_list(m, 1000);
+        let oem = merge(&batcher::odd_even_merge(m), &[a.clone(), b.clone()], ExecMode::Fast).unwrap();
+        let bim = merge(&batcher::bitonic_merge(m), &[a.clone(), b.clone()], ExecMode::Fast).unwrap();
+        let lms = merge(&lm::loms_2way(m, m, 2), &[a.clone(), b.clone()], ExecMode::Strict).unwrap();
+        let s2 = merge(&s2ms::s2ms(m, m), &[a, b], ExecMode::Strict).unwrap();
+        assert_eq!(oem, bim);
+        assert_eq!(oem, lms);
+        assert_eq!(oem, s2);
+    }
+}
+
+/// Property: the router always routes exact artifact shapes to that
+/// artifact, never pads an exact match, and padding preserves order
+/// dominance (every routed artifact dominates the request per-list).
+#[test]
+fn prop_router_invariants() {
+    let backend = SoftwareBackend::default_set();
+    use loms::coordinator::Backend;
+    let router = Router::new(backend.artifacts());
+    let mut rng = Rng::new(99);
+    for _ in 0..500 {
+        let k = if rng.below(4) == 0 { 3 } else { 2 };
+        let sizes: Vec<usize> = (0..k).map(|_| rng.range(1, 300)).collect();
+        match router.route(&sizes) {
+            Route::Artifact { idx } => {
+                let meta = &router.artifacts()[idx];
+                assert_eq!(meta.list_sizes.len(), k);
+                for (cap, want) in meta.list_sizes.iter().zip(&sizes) {
+                    assert!(cap >= want, "{sizes:?} -> {}", meta.name);
+                }
+                // Tightest: no smaller dominating artifact exists.
+                for other in router.artifacts() {
+                    if other.list_sizes.len() == k
+                        && other.total < meta.total
+                        && other.list_sizes.iter().zip(&sizes).all(|(c, w)| c >= w)
+                    {
+                        panic!("{sizes:?} routed to {} but {} is tighter", meta.name, other.name);
+                    }
+                }
+            }
+            Route::Software => {
+                // No artifact with matching k dominates.
+                for a in router.artifacts() {
+                    if a.list_sizes.len() == k {
+                        assert!(
+                            a.list_sizes.iter().zip(&sizes).any(|(c, w)| c < w),
+                            "{sizes:?} should have routed to {}",
+                            a.name
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Property: the service returns the exact std-sort merge for random
+/// mixed workloads (shapes, duplicates, empty-ish lists) and never loses
+/// a request.
+#[test]
+fn prop_service_state_conservation() {
+    let s = MergeService::start(|| Ok(SoftwareBackend::default_set()), ServiceConfig::default())
+        .unwrap();
+    let mut rng = Rng::new(60601);
+    let mut rxs = Vec::new();
+    let mut wants = Vec::new();
+    let total = 400;
+    for _ in 0..total {
+        let k = if rng.below(3) == 0 { 3 } else { 2 };
+        let lists: Vec<Vec<u32>> = (0..k)
+            .map(|_| {
+                let len = rng.range(1, 80);
+                rng.sorted_list(len, 100)
+            })
+            .collect();
+        let mut want: Vec<u32> = lists.concat();
+        want.sort_unstable();
+        wants.push(want);
+        rxs.push(s.submit(lists));
+    }
+    let mut served = 0;
+    for (rx, want) in rxs.into_iter().zip(wants) {
+        let resp = rx.recv().expect("no request may be lost");
+        assert_eq!(resp.merged, want);
+        served += 1;
+    }
+    assert_eq!(served, total);
+    let snap = s.metrics().snapshot();
+    assert_eq!(snap.requests, total as u64);
+    assert_eq!(snap.responses, total as u64);
+    assert_eq!(snap.rejected, 0);
+}
+
+/// Property: the batcher pads but never reorders — responses map 1:1 to
+/// their requests (ids checked under heavy interleaving).
+#[test]
+fn prop_batcher_id_integrity() {
+    let s = MergeService::start(|| Ok(SoftwareBackend::default_set()), ServiceConfig::default())
+        .unwrap();
+    let mut rng = Rng::new(8080);
+    let mut pending = Vec::new();
+    for round in 0..20 {
+        for _ in 0..rng.range(1, 50) {
+            let la = rng.range(1, 33);
+            let a = rng.sorted_list(la, 1000);
+            let lb = rng.range(1, 33);
+            let b = rng.sorted_list(lb, 1000);
+            let lo = *a.iter().chain(b.iter()).min().unwrap_or(&0);
+            pending.push((s.submit(vec![a, b]), lo, round));
+        }
+        // Drain half each round to interleave submissions and flushes.
+        let drain = pending.len() / 2;
+        for (rx, lo, _) in pending.drain(..drain) {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.merged.first().copied().unwrap_or(0), lo);
+        }
+    }
+    for (rx, lo, _) in pending {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.merged.first().copied().unwrap_or(0), lo);
+    }
+}

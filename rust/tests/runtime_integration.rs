@@ -1,0 +1,83 @@
+//! Integration: the full AOT bridge. Loads every artifact produced by
+//! `make artifacts`, executes it on the PJRT CPU client, and checks the
+//! numerics against the bit-exact software execution of the same device.
+//!
+//! Skips (with a message) when artifacts have not been built — CI runs
+//! `make artifacts` first.
+
+use loms::runtime::Runtime;
+use loms::util::Rng;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn runtime_or_skip() -> Option<Runtime> {
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load(artifacts_dir()).expect("runtime load"))
+}
+
+/// Batched sorted inputs for an artifact, flattened row-major.
+fn gen_inputs(sizes: &[usize], batch: usize, rng: &mut Rng) -> Vec<Vec<u32>> {
+    sizes
+        .iter()
+        .map(|&s| {
+            let mut flat = Vec::with_capacity(batch * s);
+            for _ in 0..batch {
+                flat.extend(rng.sorted_list(s, 1_000_000));
+            }
+            flat
+        })
+        .collect()
+}
+
+#[test]
+fn every_artifact_matches_software_merge() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    assert_eq!(rt.platform(), "cpu");
+    let names = rt.names();
+    assert!(!names.is_empty());
+    let mut rng = Rng::new(0xA07);
+    for name in names {
+        let meta = rt.executable_mut(&name).unwrap().meta.clone();
+        let inputs = gen_inputs(&meta.list_sizes, meta.batch, &mut rng);
+        let out = rt.executable_mut(&name).unwrap().execute_batch(&inputs).unwrap();
+        // Reference: per-row std merge.
+        for row in 0..meta.batch {
+            let mut want: Vec<u32> = Vec::with_capacity(meta.total);
+            for (l, &s) in meta.list_sizes.iter().enumerate() {
+                want.extend_from_slice(&inputs[l][row * s..(row + 1) * s]);
+            }
+            want.sort_unstable();
+            let got = &out[row * meta.total..(row + 1) * meta.total];
+            assert_eq!(got, &want[..], "{name} row {row}");
+        }
+    }
+}
+
+#[test]
+fn stats_accumulate() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let name = "loms2_up32_dn32_b256";
+    let meta = rt.executable_mut(name).unwrap().meta.clone();
+    let mut rng = Rng::new(1);
+    let inputs = gen_inputs(&meta.list_sizes, meta.batch, &mut rng);
+    for _ in 0..3 {
+        rt.executable_mut(name).unwrap().execute_batch(&inputs).unwrap();
+    }
+    let stats = rt.executable_mut(name).unwrap().stats();
+    assert_eq!(stats.executions, 3);
+    assert_eq!(stats.rows_merged, 3 * meta.batch as u64);
+    assert!(stats.total_exec_ns > 0);
+}
+
+#[test]
+fn wrong_shape_rejected() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let exe = rt.executable_mut("loms2_up32_dn32_b256").unwrap();
+    let bad = vec![vec![1u32; 10], vec![2u32; 10]];
+    assert!(exe.execute_batch(&bad).is_err());
+}
