@@ -1,14 +1,20 @@
 //! Software-execution throughput of every device family — the host-side
 //! analogue of the paper's device comparison, plus scaling over sizes.
+//!
+//! Every device is measured twice, side by side: the enum-tree
+//! interpreter (`ExecScratch::run`) and the lowered IR
+//! (`CompiledPlan::run_row`). A final section measures the software
+//! backend's batch shape (`loms2_up32_dn32_b256`): the old per-row
+//! interpreter loop vs `CompiledPlan::run_batch` in one call.
 
 use loms::bench::timing;
 use loms::sortnet::exec::{ExecMode, ExecScratch};
+use loms::sortnet::plan::{CompiledPlan, PlanScratch};
 use loms::sortnet::{batcher, loms as lm, s2ms};
 use loms::util::Rng;
 
 fn main() {
     let mut rng = Rng::new(9);
-    let mut rows = Vec::new();
     for outs in [16usize, 64, 256] {
         let m = outs / 2;
         let devices = vec![
@@ -24,15 +30,76 @@ fn main() {
             let mut v = d.load_inputs(&[a, b]);
             let base = v.clone();
             let mut scratch = ExecScratch::new();
-            let meas = timing::bench(&label, || {
+            let interp = timing::bench(&format!("{label} [interp]"), || {
                 v.copy_from_slice(&base);
                 scratch.run(&d, &mut v, ExecMode::Fast, None).unwrap();
                 std::hint::black_box(&v);
             });
-            println!("{}", meas.row());
-            rows.push(meas);
+            println!("{}", interp.row());
+            let plan = CompiledPlan::compile(&d).expect("valid device");
+            let mut ps = PlanScratch::new();
+            let planned = timing::bench(&format!("{label} [plan]"), || {
+                v.copy_from_slice(&base);
+                plan.run_row(&mut v, ExecMode::Fast, None, &mut ps).unwrap();
+                std::hint::black_box(&v);
+            });
+            println!("{}   ({:.2}x vs interp)", planned.row(), interp.mean_ns / planned.mean_ns);
         }
     }
+
+    // The software backend's batch shape: loms2_up32_dn32_b256. The old
+    // execute loop re-dispatched the device per row; run_batch executes
+    // the whole row-major batch through the lowered IR in one call.
+    let d = lm::loms_2way(32, 32, 2);
+    let batch = 256usize;
+    let sizes = [32usize, 32];
+    let lists: Vec<Vec<u32>> = sizes
+        .iter()
+        .map(|&s| {
+            let mut flat = Vec::with_capacity(batch * s);
+            for _ in 0..batch {
+                flat.extend(rng.sorted_list(s, 1 << 20));
+            }
+            flat
+        })
+        .collect();
+    let total = d.n;
+    let mut out = Vec::with_capacity(batch * total);
+
+    let mut scratch = ExecScratch::new();
+    let mut v = vec![0u32; d.n];
+    let per_row = timing::bench("loms2_up32_dn32_b256 [interp per-row]", || {
+        out.clear();
+        for row in 0..batch {
+            for (l, &s) in sizes.iter().enumerate() {
+                let slice = &lists[l][row * s..(row + 1) * s];
+                for (i, &x) in slice.iter().enumerate() {
+                    v[d.input_map[l][i]] = x;
+                }
+            }
+            scratch.run(&d, &mut v, ExecMode::Fast, None).unwrap();
+            out.extend(d.output_perm.iter().map(|&p| v[p]));
+        }
+        std::hint::black_box(&out);
+    });
+    println!("{}", per_row.row());
+
+    let plan = CompiledPlan::compile_auto(&d).expect("valid device");
+    let mut ps = PlanScratch::new();
+    let batched = timing::bench("loms2_up32_dn32_b256 [plan run_batch]", || {
+        out.clear();
+        plan.run_batch(&lists, batch, ExecMode::Fast, &mut ps, &mut out).unwrap();
+        std::hint::black_box(&out);
+    });
+    println!("{}", batched.row());
+    println!(
+        "run_batch speedup over per-row interpreter: {:.2}x (pruned={}, {} ops, arena {} u32)",
+        per_row.mean_ns / batched.mean_ns,
+        plan.is_pruned(),
+        plan.op_count(),
+        plan.arena_len()
+    );
+
     // Reference: std two-pointer merge of the same sizes.
     for outs in [16usize, 64, 256] {
         let m = outs / 2;

@@ -7,6 +7,7 @@
 use loms::fpga::{CostModel, Methodology, ULTRASCALE_PLUS, VERSAL_PRIME};
 use loms::sortnet::exec::{merge, ExecMode};
 use loms::sortnet::loms::loms_2way;
+use loms::sortnet::plan::{CompiledPlan, PlanScratch};
 use loms::sortnet::validate::validate_merge_01;
 
 fn main() -> anyhow::Result<()> {
@@ -20,9 +21,23 @@ fn main() -> anyhow::Result<()> {
     // Fig. 1's example values (ascending here; the paper prints descending).
     let a = vec![1u32, 5, 6, 9, 10, 13, 14, 15];
     let b = vec![2u32, 3, 4, 7, 8, 11, 12, 16];
-    let out = merge(&device, &[a, b], ExecMode::Strict)?;
+    let out = merge(&device, &[a.clone(), b.clone()], ExecMode::Strict)?;
     println!("merged: {out:?}");
     assert_eq!(out, (1..=16).collect::<Vec<u32>>());
+
+    // The serving hot path lowers the device once into a flat IR and
+    // reuses the plan for every row (see `loms::sortnet::plan`).
+    let plan = CompiledPlan::compile(&device).map_err(|e| anyhow::anyhow!(e))?;
+    println!(
+        "compiled plan: {} ops over {} stages, index arena {} u32, {} values/row",
+        plan.op_count(),
+        plan.depth(),
+        plan.arena_len(),
+        plan.n()
+    );
+    let mut scratch = PlanScratch::new();
+    let planned = plan.merge_row(&[a, b], ExecMode::Strict, &mut scratch)?;
+    assert_eq!(planned, out, "plan and interpreter agree bit-for-bit");
 
     // Prove it correct for ALL inputs (sorted-0-1 principle, 81 patterns).
     validate_merge_01(&device).map_err(|e| anyhow::anyhow!("{e}"))?;

@@ -2,7 +2,7 @@
 //! from the frozen, once-calibrated cost model; curve shapes, crossovers
 //! and speedups are consequences of the network structures.
 
-use super::{FigReport, Series};
+use super::{timing, FigReport, Series};
 use crate::fpga::{CostModel, Methodology, ULTRASCALE_PLUS, VERSAL_PRIME};
 use crate::sortnet::loms::{loms_2way, loms_3way_median, loms_kway, loms_kway_validated, table1_stage_count};
 use crate::sortnet::mwms::{
@@ -499,6 +499,61 @@ pub fn ext_sorters() -> FigReport {
     }
 }
 
+/// Extension (not a paper figure): software execution throughput of the
+/// enum-tree interpreter vs the compiled plan ([`crate::sortnet::plan`])
+/// on the same devices — the host-side serving-path speedup, measured
+/// side by side. Wall-clock measured via [`timing::bench`].
+///
+/// Deliberately NOT part of [`all_figures`]: unlike every paper figure
+/// it measures wall-clock (machine-dependent, ~1 s to run), so it is
+/// only produced when explicitly requested (`loms report --figure
+/// ext_plan_throughput`, or the `net_exec_throughput` bench).
+pub fn ext_plan_throughput() -> FigReport {
+    use crate::sortnet::exec::{ExecMode, ExecScratch};
+    use crate::sortnet::plan::{CompiledPlan, PlanScratch};
+    use crate::util::Rng;
+    let mut rng = Rng::new(42);
+    let mut interp_pts = Vec::new();
+    let mut plan_pts = Vec::new();
+    for outs in [32usize, 64] {
+        let m = outs / 2;
+        let d = loms_2way(m, m, 2);
+        let a = rng.sorted_list(m, 1 << 20);
+        let b = rng.sorted_list(m, 1 << 20);
+        let base = d.load_inputs(&[a, b]);
+        let mut v = base.clone();
+        let mut scratch = ExecScratch::new();
+        let mi = timing::bench(&format!("interp {outs}-out"), || {
+            v.copy_from_slice(&base);
+            scratch.run(&d, &mut v, ExecMode::Fast, None).unwrap();
+            std::hint::black_box(&v);
+        });
+        interp_pts.push((outs, mi.mean_ns));
+        let plan = CompiledPlan::compile(&d).expect("valid device");
+        let mut ps = PlanScratch::new();
+        let mp = timing::bench(&format!("plan {outs}-out"), || {
+            v.copy_from_slice(&base);
+            plan.run_row(&mut v, ExecMode::Fast, None, &mut ps).unwrap();
+            std::hint::black_box(&v);
+        });
+        plan_pts.push((outs, mp.mean_ns));
+    }
+    let speedup64 = interp_pts[1].1 / plan_pts[1].1;
+    FigReport {
+        id: "ext_plan_throughput".into(),
+        title: "Extension: interpreter vs compiled-plan software throughput (LOMS 2col)".into(),
+        x_label: "outputs".into(),
+        y_label: "ns/op".into(),
+        series: vec![
+            Series { label: "interpreter".into(), points: interp_pts },
+            Series { label: "compiled plan".into(), points: plan_pts },
+        ],
+        notes: vec![format!(
+            "not a paper figure — host serving path; plan speedup at 64 outputs = {speedup64:.2}x"
+        )],
+    }
+}
+
 /// Every figure in §VII, in paper order.
 pub fn all_figures() -> Vec<FigReport> {
     vec![
@@ -521,6 +576,15 @@ pub fn all_figures() -> Vec<FigReport> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn plan_throughput_figure_builds() {
+        // Wall-clock figure (not in all_figures): smoke-test its shape.
+        let f = ext_plan_throughput();
+        assert_eq!(f.series.len(), 2);
+        assert!(f.series.iter().all(|s| s.points.len() == 2));
+        assert!(f.series.iter().all(|s| s.points.iter().all(|&(_, ns)| ns > 0.0)));
+    }
 
     #[test]
     fn all_figures_build_and_have_series() {

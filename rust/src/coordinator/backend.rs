@@ -7,8 +7,9 @@
 //!   as the differential oracle in tests).
 
 use crate::runtime::{ArtifactMeta, Runtime};
-use crate::sortnet::exec::{ExecMode, ExecScratch};
+use crate::sortnet::exec::ExecMode;
 use crate::sortnet::network::MergeDevice;
+use crate::sortnet::plan::{CompiledPlan, PlanScratch};
 use crate::sortnet::{loms, s2ms};
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
@@ -58,38 +59,61 @@ impl Backend for PjrtBackend {
 }
 
 /// Build the sortnet device matching an artifact's shape (the same
-/// construction the Python compile path used).
-pub fn device_for_meta(meta: &ArtifactMeta) -> MergeDevice {
+/// construction the Python compile path used). Errors instead of
+/// guessing when the device tag is malformed — a silently-wrong column
+/// count would build a *different* device than the compiled artifact.
+pub fn device_for_meta(meta: &ArtifactMeta) -> Result<MergeDevice> {
     let sizes = &meta.list_sizes;
     if sizes.len() == 2 {
         if meta.device.starts_with("s2ms") {
-            s2ms::s2ms(sizes[0], sizes[1])
+            Ok(s2ms::s2ms(sizes[0], sizes[1]))
         } else {
-            // Column count from the device name (loms2-<c>col-...), else 2.
+            // Column count from the device tag (loms2-<c>col-...).
             let cols = meta
                 .device
                 .split('-')
-                .find_map(|part| part.strip_suffix("col").and_then(|c| c.parse().ok()))
-                .unwrap_or(2);
-            loms::loms_2way(sizes[0], sizes[1], cols)
+                .find_map(|part| part.strip_suffix("col").and_then(|c| c.parse::<usize>().ok()));
+            match cols {
+                Some(c) if c >= 2 => Ok(loms::loms_2way(sizes[0], sizes[1], c)),
+                _ => Err(anyhow!(
+                    "artifact {}: no column count in device tag {:?} (expected `loms2-<c>col-...`, c >= 2)",
+                    meta.name,
+                    meta.device
+                )),
+            }
         }
     } else {
-        loms::loms_kway(sizes)
+        Ok(loms::loms_kway(sizes))
     }
 }
 
 /// Software twin of the artifact set (same shapes, bit-exact semantics).
+/// Devices are lowered to [`CompiledPlan`]s — compiled on first use,
+/// cached per artifact — and batches execute through
+/// [`CompiledPlan::run_batch`], so the execute loop allocates nothing
+/// per row.
 pub struct SoftwareBackend {
     metas: Vec<ArtifactMeta>,
     devices: HashMap<String, MergeDevice>,
-    scratch: ExecScratch<u32>,
+    /// Per-artifact compiled-plan cache (filled lazily on first execute).
+    plans: HashMap<String, CompiledPlan>,
+    scratch: PlanScratch<u32>,
 }
 
 impl SoftwareBackend {
-    /// Mirror an artifact set in software.
-    pub fn new(metas: Vec<ArtifactMeta>) -> Self {
-        let devices = metas.iter().map(|m| (m.name.clone(), device_for_meta(m))).collect();
-        SoftwareBackend { metas, devices, scratch: ExecScratch::new() }
+    /// Mirror an artifact set in software. Fails if any artifact's
+    /// device tag cannot be reconstructed (see [`device_for_meta`]).
+    pub fn new(metas: Vec<ArtifactMeta>) -> Result<Self> {
+        let mut devices = HashMap::with_capacity(metas.len());
+        for m in &metas {
+            devices.insert(m.name.clone(), device_for_meta(m)?);
+        }
+        Ok(SoftwareBackend {
+            metas,
+            devices,
+            plans: HashMap::new(),
+            scratch: PlanScratch::new(),
+        })
     }
 
     /// A default artifact set matching `python/compile/model.py`'s
@@ -113,6 +137,27 @@ impl SoftwareBackend {
             mk("loms2_up256_dn256_b32", "loms2-8col-up256-dn256", vec![256, 256], 32),
             mk("loms3_7r_b256", "loms3-7_7_7r", vec![7, 7, 7], 256),
         ])
+        .expect("default artifact set is well-formed")
+    }
+
+    /// The cached plan for `name`, if already compiled.
+    pub fn plan(&self, name: &str) -> Option<&CompiledPlan> {
+        self.plans.get(name)
+    }
+
+    /// Compile every artifact's plan up front. Plans are otherwise
+    /// compiled lazily on first execute, which puts the (possibly
+    /// exhaustive-pruning) compile cost on one unlucky first request —
+    /// production deployments should warm at startup; tests that touch
+    /// one artifact keep the cheap lazy path.
+    pub fn warm(&mut self) -> Result<()> {
+        for (name, d) in &self.devices {
+            if !self.plans.contains_key(name) {
+                let plan = CompiledPlan::compile_auto(d).map_err(|e| anyhow!("{name}: {e}"))?;
+                self.plans.insert(name.clone(), plan);
+            }
+        }
+        Ok(())
     }
 }
 
@@ -122,26 +167,24 @@ impl Backend for SoftwareBackend {
     }
 
     fn execute(&mut self, name: &str, lists: &[Vec<u32>]) -> Result<Vec<u32>> {
-        let meta = self
+        let batch = self
             .metas
             .iter()
             .find(|m| m.name == name)
+            .map(|m| m.batch)
             .ok_or_else(|| anyhow!("no software device {name:?}"))?;
-        let d = &self.devices[name];
-        let mut out = Vec::with_capacity(meta.batch * meta.total);
-        let mut v = vec![0u32; d.n];
-        for row in 0..meta.batch {
-            for (l, &s) in meta.list_sizes.iter().enumerate() {
-                let slice = &lists[l][row * s..(row + 1) * s];
-                for (i, &x) in slice.iter().enumerate() {
-                    v[d.input_map[l][i]] = x;
-                }
-            }
-            self.scratch
-                .run(d, &mut v, ExecMode::Fast, None)
-                .map_err(|e| anyhow!("{name}: {e}"))?;
-            out.extend(d.output_perm.iter().map(|&p| v[p]));
+        if !self.plans.contains_key(name) {
+            let d = self
+                .devices
+                .get(name)
+                .ok_or_else(|| anyhow!("no software device {name:?}"))?;
+            let plan = CompiledPlan::compile_auto(d).map_err(|e| anyhow!("{name}: {e}"))?;
+            self.plans.insert(name.to_string(), plan);
         }
+        let plan = &self.plans[name];
+        let mut out = Vec::with_capacity(batch * plan.total_outputs());
+        plan.run_batch(lists, batch, ExecMode::Fast, &mut self.scratch, &mut out)
+            .map_err(|e| anyhow!("{name}: {e}"))?;
         Ok(out)
     }
 
@@ -192,8 +235,66 @@ mod tests {
             hw_stages: 0,
             device: "loms2-4col-up128-dn128".into(),
         };
-        let d = device_for_meta(&m);
+        let d = device_for_meta(&m).unwrap();
         assert_eq!(d.grid.unwrap().0, 4);
+    }
+
+    #[test]
+    fn device_for_meta_rejects_malformed_col_tag() {
+        let mut m = ArtifactMeta {
+            name: "x".into(),
+            file: String::new(),
+            list_sizes: vec![128, 128],
+            batch: 1,
+            total: 256,
+            block_b: 1,
+            plan_steps: 0,
+            hw_stages: 0,
+            device: "loms2-Xcol-up128-dn128".into(),
+        };
+        // Unparsable column counts must error, not silently build 2col.
+        let err = device_for_meta(&m).unwrap_err().to_string();
+        assert!(err.contains("Xcol"), "{err}");
+        m.device = "loms2-up128-dn128".into(); // tag missing entirely
+        assert!(device_for_meta(&m).is_err());
+        m.device = String::new();
+        assert!(device_for_meta(&m).is_err());
+        // And the backend constructor surfaces it.
+        assert!(SoftwareBackend::new(vec![m]).is_err());
+    }
+
+    #[test]
+    fn plan_cache_fills_lazily() {
+        let name = "loms2_up32_dn32_b256";
+        let mut b = SoftwareBackend::default_set();
+        assert!(b.plan(name).is_none());
+        let meta = b.artifacts().into_iter().find(|m| m.name == name).unwrap();
+        let mut rng = Rng::new(3);
+        let lists: Vec<Vec<u32>> = meta
+            .list_sizes
+            .iter()
+            .map(|&s| {
+                let mut flat = Vec::new();
+                for _ in 0..meta.batch {
+                    flat.extend(rng.sorted_list(s, 1000));
+                }
+                flat
+            })
+            .collect();
+        b.execute(name, &lists).unwrap();
+        let plan = b.plan(name).expect("plan cached after first execute");
+        // Small untapped shape (33*33 patterns): the auto policy runs
+        // the pruning analysis.
+        assert!(plan.is_pruned());
+        // Second execute reuses the cached plan (same pointer).
+        let p0 = plan as *const _;
+        b.execute(name, &lists).unwrap();
+        assert_eq!(b.plan(name).unwrap() as *const _, p0);
+        // warm() fills the remaining artifacts (median-tapped loms3
+        // lowers unpruned — its tap stage index must stay valid).
+        b.warm().unwrap();
+        let loms3 = b.plan("loms3_7r_b256").expect("warmed");
+        assert!(!loms3.is_pruned());
     }
 
     #[test]

@@ -31,6 +31,26 @@ impl MergeRequest {
         }
         Ok(())
     }
+
+    /// Full admission check: lists sorted ascending AND free of the
+    /// `u32::MAX` padding sentinel. The router pads requests to artifact
+    /// shape with [`super::router::PAD`]`== u32::MAX`, so a request that
+    /// legitimately contains that value is indistinguishable from
+    /// padding once batched — reject it up front with a clear error
+    /// (documented service contract: real keys < `u32::MAX`).
+    pub fn check_valid(&self) -> Result<(), String> {
+        self.check_sorted()?;
+        for (l, list) in self.lists.iter().enumerate() {
+            // Lists are sorted, so a sentinel can only sit at the tail.
+            if list.last() == Some(&super::router::PAD) {
+                return Err(format!(
+                    "request {}: list {l} contains u32::MAX, which is reserved as the padding sentinel",
+                    self.id
+                ));
+            }
+        }
+        Ok(())
+    }
 }
 
 /// The merged result.
@@ -59,5 +79,16 @@ mod tests {
         r.check_sorted().unwrap();
         let bad = MergeRequest::new(2, vec![vec![3, 1]]);
         assert!(bad.check_sorted().is_err());
+    }
+
+    #[test]
+    fn sentinel_values_rejected() {
+        let ok = MergeRequest::new(1, vec![vec![1, 2], vec![3, u32::MAX - 1]]);
+        ok.check_valid().unwrap();
+        let bad = MergeRequest::new(2, vec![vec![1, 2], vec![3, u32::MAX]]);
+        assert!(bad.check_valid().unwrap_err().contains("sentinel"));
+        // Sorted check still runs first.
+        let unsorted = MergeRequest::new(3, vec![vec![5, 1]]);
+        assert!(unsorted.check_valid().is_err());
     }
 }

@@ -91,7 +91,10 @@ impl<B: Backend> Engine<B> {
 
     fn admit(&mut self, req: MergeRequest, tx: ResponseTx) {
         self.metrics.on_request();
-        if req.check_sorted().is_err() {
+        // Unsorted lists violate the hardware precondition; u32::MAX
+        // values collide with the PAD sentinel and would be corrupted by
+        // batch padding — both rejected before routing.
+        if req.check_valid().is_err() {
             self.metrics.on_rejected();
             drop(tx); // receiver sees a closed channel
             return;
@@ -343,6 +346,20 @@ mod tests {
         let rx = s.submit(vec![vec![5, 1], vec![2, 3]]);
         assert!(rx.recv().is_err());
         assert_eq!(s.metrics().snapshot().rejected, 1);
+    }
+
+    #[test]
+    fn sentinel_request_rejected() {
+        // u32::MAX collides with the PAD sentinel: batch padding would
+        // make the value indistinguishable from padding, so the service
+        // rejects it at admission instead of corrupting the merge.
+        let s = svc();
+        let rx = s.submit(vec![vec![1, 2, u32::MAX], vec![3, 4]]);
+        assert!(rx.recv().is_err());
+        assert_eq!(s.metrics().snapshot().rejected, 1);
+        // The largest *legal* key is still served exactly.
+        let resp = s.merge_blocking(vec![vec![1, u32::MAX - 1], vec![2]]).unwrap();
+        assert_eq!(resp.merged, vec![1, 2, u32::MAX - 1]);
     }
 
     #[test]

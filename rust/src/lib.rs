@@ -6,7 +6,8 @@
 //!
 //! * [`sortnet`] — construction, bit-exact execution and exhaustive
 //!   validation of every device family in the paper (LOMS, S2MS,
-//!   Batcher OEM/Bitonic, N-sorters, MWMS).
+//!   Batcher OEM/Bitonic, N-sorters, MWMS), plus the compiled execution
+//!   plans ([`sortnet::plan`]) the serving hot path runs on.
 //! * [`fpga`] — the structural FPGA cost model (Kintex Ultrascale+ /
 //!   Versal Prime; 2insLUT / 4insLUT) that regenerates the paper's
 //!   propagation-delay and LUT-usage figures.
@@ -16,8 +17,8 @@
 //!   batcher, workers, metrics) and the hierarchical merge planner.
 //! * [`bench`] — figure/table regeneration harness shared by `benches/`.
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
-//! paper-vs-measured record.
+//! See `rust/DESIGN.md` for the system inventory and
+//! `rust/EXPERIMENTS.md` for the paper-vs-measured record.
 
 pub mod bench;
 pub mod coordinator;

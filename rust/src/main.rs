@@ -127,6 +127,9 @@ fn run(args: &[String]) -> Result<()> {
             let which = o.get("figure").map(String::as_str).unwrap_or("all");
             let figs = if which == "all" {
                 figures::all_figures()
+            } else if which == "ext_plan_throughput" {
+                // Wall-clock measurement — only produced on request.
+                vec![figures::ext_plan_throughput()]
             } else {
                 let all = figures::all_figures();
                 let direct: Vec<_> = all.iter().filter(|f| f.id == which).cloned().collect();

@@ -7,8 +7,16 @@
 //! sort their inputs. [`ExecMode::Strict`] additionally checks every
 //! precondition, which is how device validation proves a network correct
 //! for *all* inputs (see [`crate::sortnet::validate`]).
+//!
+//! [`ExecScratch`] is the *interpreter*: it walks the device's enum tree
+//! directly, which keeps per-stage granularity for analyses like
+//! [`crate::sortnet::prune`] and serves as the differential reference.
+//! Hot paths execute through the lowered IR in [`crate::sortnet::plan`]
+//! instead; the [`merge`]/[`median`] helpers here compile-and-run a
+//! [`CompiledPlan`].
 
 use super::network::{Block, MergeDevice};
+use super::plan::{CompiledPlan, PlanScratch};
 
 /// Execution mode.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -150,32 +158,27 @@ impl<T: Copy + Ord + Default> ExecScratch<T> {
 }
 
 /// Convenience: merge `lists` through the device; returns the sorted
-/// output. Panics on malformed inputs (strict-mode errors propagate).
+/// output. Panics on malformed devices/inputs (strict-mode errors
+/// propagate). Compiles and runs a [`CompiledPlan`] — hot paths that
+/// merge repeatedly should compile once and reuse the plan.
 pub fn merge<T: Copy + Ord + Default>(
     d: &MergeDevice,
     lists: &[Vec<T>],
     mode: ExecMode,
 ) -> Result<Vec<T>, PreconditionViolation> {
-    let mut v = d.load_inputs(lists);
-    let mut scratch = ExecScratch::new();
-    scratch.run(d, &mut v, mode, None)?;
-    Ok(d.read_outputs(&v))
+    let plan = CompiledPlan::compile(d).unwrap_or_else(|e| panic!("merge: {e}"));
+    plan.merge_row(lists, mode, &mut PlanScratch::new())
 }
 
 /// Convenience: run only up to the median tap and return the median.
-/// `None` if the device has no tap.
+/// `None` if the device has no tap. Compiles and runs a [`CompiledPlan`].
 pub fn median<T: Copy + Ord + Default>(
     d: &MergeDevice,
     lists: &[Vec<T>],
     mode: ExecMode,
 ) -> Result<Option<T>, PreconditionViolation> {
-    let Some((stop, pos)) = d.median_tap else {
-        return Ok(None);
-    };
-    let mut v = d.load_inputs(lists);
-    let mut scratch = ExecScratch::new();
-    scratch.run(d, &mut v, mode, Some(stop))?;
-    Ok(Some(v[pos]))
+    let plan = CompiledPlan::compile(d).unwrap_or_else(|e| panic!("median: {e}"));
+    plan.median_row(lists, mode, &mut PlanScratch::new())
 }
 
 #[cfg(test)]

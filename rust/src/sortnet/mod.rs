@@ -9,6 +9,7 @@
 //! * [`nsorter`] — single-stage N-sorters / N-filters [20][21].
 //! * [`loms`] — List Offset Merge Sorters (the paper's contribution).
 //! * [`mwms`] — Multiway Merge Sorting Network baseline [4][5].
+//! * [`plan`] — compiled execution plans (flat batch-executable IR).
 //! * [`json`] — device (de)serialisation.
 
 pub mod batcher;
@@ -18,6 +19,7 @@ pub mod loms;
 pub mod mwms;
 pub mod network;
 pub mod nsorter;
+pub mod plan;
 pub mod prune;
 pub mod s2ms;
 pub mod sorter;
@@ -25,3 +27,4 @@ pub mod validate;
 
 pub use exec::{merge, ExecMode, ExecScratch};
 pub use network::{Block, DeviceKind, MergeDevice, Stage};
+pub use plan::{CompiledPlan, PlanScratch};

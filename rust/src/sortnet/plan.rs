@@ -1,0 +1,595 @@
+//! Compiled execution plans: a [`MergeDevice`] lowered into a flat,
+//! batch-executable IR.
+//!
+//! The devices are fixed combinatorial structures, but the interpreter
+//! ([`super::exec::ExecScratch`]) re-walks an enum tree of heap-allocated
+//! `Vec<usize>` index lists for every block of every row. A
+//! [`CompiledPlan`] lowers the device **once** into a cache-friendly
+//! struct-of-arrays form — one contiguous `u32` index arena, fixed-stride
+//! [`OpRec`] records, the input map and output permutation baked into
+//! flat position tables, and the maximum block width precomputed so the
+//! per-op scratch buffer never reallocates. Optionally the output-cone
+//! analysis ([`super::prune`]) drops muxes a stage provably never fires
+//! before lowering.
+//!
+//! Two executors cover both call shapes in the stack:
+//!
+//! * [`CompiledPlan::run_row`] — drop-in for `ExecScratch::run` over a
+//!   loaded flat vector; zero allocation per call once the scratch is
+//!   warm.
+//! * [`CompiledPlan::run_batch`] — executes a whole row-major batch (the
+//!   exact shape [`crate::coordinator::Backend::execute`] receives) in
+//!   one call, reusing a single row buffer across rows.
+//!
+//! Everything downstream — `exec::merge`/`median`, the validators, the
+//! software backend, the throughput benches — routes through this IR, so
+//! later optimisations (SIMD lanes, sharding, alternative backends) have
+//! a single stable target.
+
+use super::exec::{ExecMode, PreconditionViolation};
+use super::network::{Block, MergeDevice};
+use super::prune::prune;
+use super::validate::merge_01_pattern_count;
+
+/// Lowered block kind. One-to-one with [`Block`], minus the embedded
+/// index vectors (those live in the plan's arena).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum OpKind {
+    /// Compare-and-swap of arena `[lo, hi]`.
+    Cas,
+    /// Sort the `a` positions at `off` ascending in listed order.
+    SortN,
+    /// Two-run merge: arena holds `[up(a) | dn(b) | out(a+b)]`.
+    MergeS2,
+    /// Partial sorter: arena holds `[pos(a) | tap ranks(b)]`.
+    FilterN,
+}
+
+/// One lowered block: a fixed-size record pointing into the index arena.
+#[derive(Debug, Clone, Copy)]
+struct OpRec {
+    kind: OpKind,
+    /// Start of this op's index block in the arena.
+    off: u32,
+    /// Primary operand count (Cas: 2, SortN/FilterN: |pos|, MergeS2: |up|).
+    a: u32,
+    /// Secondary operand count (MergeS2: |dn|, FilterN: |taps|, else 0).
+    b: u32,
+    /// Source (stage, block) for strict-mode diagnostics.
+    stage: u32,
+    block: u32,
+}
+
+/// Reusable execution buffers for plan execution. One scratch serves any
+/// number of plans; buffers grow to the largest plan seen and are never
+/// shrunk, so steady-state execution allocates nothing.
+#[derive(Debug, Default)]
+pub struct PlanScratch<T> {
+    /// Flat value vector for row assembly (`run_batch` / `merge_row`).
+    v: Vec<T>,
+    /// Per-op staging buffer (block width ≤ `CompiledPlan::max_width`).
+    buf: Vec<T>,
+}
+
+impl<T> PlanScratch<T> {
+    pub fn new() -> Self {
+        PlanScratch { v: Vec::new(), buf: Vec::new() }
+    }
+}
+
+/// Sorted-0-1 pattern budget under which [`CompiledPlan::compile_auto`]
+/// runs the (exhaustive) pruning analysis before lowering. Covers the
+/// default 2-way software artifacts up to 64+64 inputs; larger shapes —
+/// and median-tapped devices, which are never pruned — lower unpruned
+/// rather than pay a multi-second analysis at plan-cache fill.
+const PRUNE_PATTERN_BUDGET: u128 = 5_000;
+
+/// A [`MergeDevice`] lowered to a flat batch-executable IR.
+#[derive(Debug, Clone)]
+pub struct CompiledPlan {
+    pub name: String,
+    /// Flat vector length (total input values).
+    n: usize,
+    /// Contiguous index arena shared by all ops.
+    arena: Vec<u32>,
+    /// Lowered blocks in execution order (stage-major).
+    ops: Vec<OpRec>,
+    /// `stage_ops[s]` = index into `ops` where stage `s` begins;
+    /// `stage_ops.last()` = `ops.len()`.
+    stage_ops: Vec<u32>,
+    /// Flattened input map: list-major, ascending value order.
+    in_pos: Vec<u32>,
+    list_sizes: Vec<usize>,
+    /// `out_pos[r]` = flat position of output rank `r`.
+    out_pos: Vec<u32>,
+    /// Widest block — upper bound for the staging buffer.
+    max_width: usize,
+    /// Median tap: (stage count to run, flat position), if any.
+    median: Option<(usize, usize)>,
+    pruned: bool,
+    removed_muxes: usize,
+}
+
+impl CompiledPlan {
+    /// Lower a device as-is (structure checked, no pruning analysis).
+    pub fn compile(d: &MergeDevice) -> Result<CompiledPlan, String> {
+        d.check()?;
+        Ok(Self::lower(d, false, 0))
+    }
+
+    /// Lower after output-cone pruning ([`super::prune::prune`]): dead
+    /// output muxes are dropped and never-firing blocks disappear from
+    /// the op stream. Only valid for full-merge devices — a median tap's
+    /// stage index would dangle if pruning emptied an earlier stage.
+    pub fn compile_pruned(d: &MergeDevice) -> Result<CompiledPlan, String> {
+        if d.median_tap.is_some() {
+            return Err(format!("{}: cannot prune a median-tapped device", d.name));
+        }
+        let (pruned, removed) = prune(d).map_err(|e| e.to_string())?;
+        Ok(Self::lower(&pruned, true, removed))
+    }
+
+    /// Lower with pruning when the exhaustive analysis is cheap (pattern
+    /// count ≤ [`PRUNE_PATTERN_BUDGET`] and no median tap), plain
+    /// otherwise. The policy the software backend's plan cache uses.
+    pub fn compile_auto(d: &MergeDevice) -> Result<CompiledPlan, String> {
+        if d.median_tap.is_none() && merge_01_pattern_count(&d.list_sizes) <= PRUNE_PATTERN_BUDGET
+        {
+            Self::compile_pruned(d)
+        } else {
+            Self::compile(d)
+        }
+    }
+
+    fn lower(d: &MergeDevice, pruned: bool, removed_muxes: usize) -> CompiledPlan {
+        let mut arena: Vec<u32> = Vec::new();
+        let mut ops: Vec<OpRec> = Vec::new();
+        let mut stage_ops: Vec<u32> = Vec::with_capacity(d.stages.len() + 1);
+        let mut max_width = 1usize;
+        for (si, stage) in d.stages.iter().enumerate() {
+            stage_ops.push(ops.len() as u32);
+            for (bi, blk) in stage.blocks.iter().enumerate() {
+                let off = arena.len() as u32;
+                let (kind, a, b) = match blk {
+                    Block::Cas { lo, hi } => {
+                        arena.push(*lo as u32);
+                        arena.push(*hi as u32);
+                        (OpKind::Cas, 2, 0)
+                    }
+                    Block::SortN { pos } => {
+                        arena.extend(pos.iter().map(|&p| p as u32));
+                        (OpKind::SortN, pos.len(), 0)
+                    }
+                    Block::MergeS2 { up, dn, out } => {
+                        arena.extend(up.iter().map(|&p| p as u32));
+                        arena.extend(dn.iter().map(|&p| p as u32));
+                        arena.extend(out.iter().map(|&p| p as u32));
+                        (OpKind::MergeS2, up.len(), dn.len())
+                    }
+                    Block::FilterN { pos, taps } => {
+                        arena.extend(pos.iter().map(|&p| p as u32));
+                        arena.extend(taps.iter().map(|&t| t as u32));
+                        (OpKind::FilterN, pos.len(), taps.len())
+                    }
+                };
+                max_width = max_width.max(blk.width());
+                ops.push(OpRec {
+                    kind,
+                    off,
+                    a: a as u32,
+                    b: b as u32,
+                    stage: si as u32,
+                    block: bi as u32,
+                });
+            }
+        }
+        stage_ops.push(ops.len() as u32);
+        let mut in_pos = Vec::with_capacity(d.n);
+        for m in &d.input_map {
+            in_pos.extend(m.iter().map(|&p| p as u32));
+        }
+        CompiledPlan {
+            name: d.name.clone(),
+            n: d.n,
+            arena,
+            ops,
+            stage_ops,
+            in_pos,
+            list_sizes: d.list_sizes.clone(),
+            out_pos: d.output_perm.iter().map(|&p| p as u32).collect(),
+            max_width,
+            median: d.median_tap,
+            pruned,
+            removed_muxes,
+        }
+    }
+
+    /// Flat vector length.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Stage count (after pruning, if applied).
+    pub fn depth(&self) -> usize {
+        self.stage_ops.len() - 1
+    }
+
+    /// Lowered block count.
+    pub fn op_count(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Index arena length (u32 slots).
+    pub fn arena_len(&self) -> usize {
+        self.arena.len()
+    }
+
+    /// Output width per row.
+    pub fn total_outputs(&self) -> usize {
+        self.out_pos.len()
+    }
+
+    pub fn list_sizes(&self) -> &[usize] {
+        &self.list_sizes
+    }
+
+    /// Whether the output-cone analysis ran before lowering.
+    pub fn is_pruned(&self) -> bool {
+        self.pruned
+    }
+
+    /// Output muxes dropped by pruning (0 when unpruned or cone-minimal).
+    pub fn removed_muxes(&self) -> usize {
+        self.removed_muxes
+    }
+
+    /// Execute ops `[0, end)` over the flat vector. The hot loop: every
+    /// index comes from the contiguous arena, `buf` never reallocates
+    /// once grown to `max_width`.
+    fn exec_ops<T: Copy + Ord>(
+        &self,
+        v: &mut [T],
+        buf: &mut Vec<T>,
+        mode: ExecMode,
+        end: usize,
+    ) -> Result<(), PreconditionViolation> {
+        debug_assert_eq!(v.len(), self.n);
+        buf.clear();
+        buf.reserve(self.max_width);
+        for op in &self.ops[..end] {
+            let off = op.off as usize;
+            match op.kind {
+                OpKind::Cas => {
+                    let lo = self.arena[off] as usize;
+                    let hi = self.arena[off + 1] as usize;
+                    if v[lo] > v[hi] {
+                        v.swap(lo, hi);
+                    }
+                }
+                OpKind::SortN => {
+                    let pos = &self.arena[off..off + op.a as usize];
+                    buf.clear();
+                    buf.extend(pos.iter().map(|&p| v[p as usize]));
+                    buf.sort_unstable();
+                    for (i, &p) in pos.iter().enumerate() {
+                        v[p as usize] = buf[i];
+                    }
+                }
+                OpKind::MergeS2 => {
+                    let (a, b) = (op.a as usize, op.b as usize);
+                    let up = &self.arena[off..off + a];
+                    let dn = &self.arena[off + a..off + a + b];
+                    let out = &self.arena[off + a + b..off + 2 * (a + b)];
+                    if mode == ExecMode::Strict {
+                        for run in [up, dn] {
+                            if run.windows(2).any(|w| v[w[0] as usize] > v[w[1] as usize]) {
+                                return Err(PreconditionViolation {
+                                    stage: op.stage as usize,
+                                    block: op.block as usize,
+                                    detail: "S2MS input run not sorted".into(),
+                                });
+                            }
+                        }
+                    }
+                    buf.clear();
+                    let (mut i, mut j) = (0usize, 0usize);
+                    while i < a && j < b {
+                        let x = v[up[i] as usize];
+                        let y = v[dn[j] as usize];
+                        // Stable: UP values win ties (paper's sorters are stable).
+                        if x <= y {
+                            buf.push(x);
+                            i += 1;
+                        } else {
+                            buf.push(y);
+                            j += 1;
+                        }
+                    }
+                    buf.extend(up[i..].iter().map(|&p| v[p as usize]));
+                    buf.extend(dn[j..].iter().map(|&p| v[p as usize]));
+                    for (t, &p) in out.iter().enumerate() {
+                        v[p as usize] = buf[t];
+                    }
+                }
+                OpKind::FilterN => {
+                    let (a, b) = (op.a as usize, op.b as usize);
+                    let pos = &self.arena[off..off + a];
+                    let taps = &self.arena[off + a..off + a + b];
+                    buf.clear();
+                    buf.extend(pos.iter().map(|&p| v[p as usize]));
+                    buf.sort_unstable();
+                    for &t in taps {
+                        let t = t as usize;
+                        v[pos[t] as usize] = buf[t];
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Op index bound for running the first `stages` stages (clamped).
+    fn op_end(&self, stop_after: Option<usize>) -> usize {
+        let s = stop_after.unwrap_or(self.depth()).min(self.depth());
+        self.stage_ops[s] as usize
+    }
+
+    /// Execute over a loaded flat vector — drop-in for
+    /// [`super::exec::ExecScratch::run`]. Allocates nothing once
+    /// `scratch` has warmed to this plan's widest block.
+    pub fn run_row<T: Copy + Ord>(
+        &self,
+        v: &mut [T],
+        mode: ExecMode,
+        stop_after: Option<usize>,
+        scratch: &mut PlanScratch<T>,
+    ) -> Result<(), PreconditionViolation> {
+        self.exec_ops(v, &mut scratch.buf, mode, self.op_end(stop_after))
+    }
+
+    /// Load one row of per-list inputs into the flat vector `v` (resized
+    /// to `n`) via the baked input map.
+    fn load_row<T: Copy + Ord + Default>(&self, lists: &[Vec<T>], v: &mut Vec<T>) {
+        assert_eq!(lists.len(), self.list_sizes.len(), "{}: wrong list count", self.name);
+        v.clear();
+        v.resize(self.n, T::default());
+        let mut ip = 0usize;
+        for (l, list) in lists.iter().enumerate() {
+            assert_eq!(list.len(), self.list_sizes[l], "{}: wrong size for list {l}", self.name);
+            for (i, &x) in list.iter().enumerate() {
+                v[self.in_pos[ip + i] as usize] = x;
+            }
+            ip += self.list_sizes[l];
+        }
+    }
+
+    /// Merge one request: load `lists`, run all stages, return the sorted
+    /// output ranks.
+    pub fn merge_row<T: Copy + Ord + Default>(
+        &self,
+        lists: &[Vec<T>],
+        mode: ExecMode,
+        scratch: &mut PlanScratch<T>,
+    ) -> Result<Vec<T>, PreconditionViolation> {
+        let PlanScratch { v, buf } = scratch;
+        self.load_row(lists, v);
+        self.exec_ops(v, buf, mode, self.ops.len())?;
+        Ok(self.out_pos.iter().map(|&p| v[p as usize]).collect())
+    }
+
+    /// Run up to the median tap and return the median (`None` when the
+    /// device has no tap).
+    pub fn median_row<T: Copy + Ord + Default>(
+        &self,
+        lists: &[Vec<T>],
+        mode: ExecMode,
+        scratch: &mut PlanScratch<T>,
+    ) -> Result<Option<T>, PreconditionViolation> {
+        let Some((stop, pos)) = self.median else {
+            return Ok(None);
+        };
+        let PlanScratch { v, buf } = scratch;
+        self.load_row(lists, v);
+        self.exec_ops(v, buf, mode, self.op_end(Some(stop)))?;
+        Ok(Some(v[pos]))
+    }
+
+    /// Execute a whole row-major batch — the exact shape
+    /// [`crate::coordinator::Backend::execute`] receives: `lists[l]` is
+    /// `(batch, list_sizes[l])` flattened, the merged rows are appended
+    /// to `out` as `(batch, total_outputs)`. One flat row buffer is
+    /// reused across rows; nothing is allocated per row once `out` and
+    /// `scratch` are warm.
+    pub fn run_batch<T: Copy + Ord + Default>(
+        &self,
+        lists: &[Vec<T>],
+        batch: usize,
+        mode: ExecMode,
+        scratch: &mut PlanScratch<T>,
+        out: &mut Vec<T>,
+    ) -> Result<(), PreconditionViolation> {
+        assert_eq!(lists.len(), self.list_sizes.len(), "{}: wrong list count", self.name);
+        for (l, &s) in self.list_sizes.iter().enumerate() {
+            assert_eq!(lists[l].len(), batch * s, "{}: list {l} flat length", self.name);
+        }
+        let PlanScratch { v, buf } = scratch;
+        v.clear();
+        v.resize(self.n, T::default());
+        out.reserve(batch * self.out_pos.len());
+        let end = self.ops.len();
+        for row in 0..batch {
+            let mut ip = 0usize;
+            for (l, &s) in self.list_sizes.iter().enumerate() {
+                let src = &lists[l][row * s..(row + 1) * s];
+                for (i, &x) in src.iter().enumerate() {
+                    v[self.in_pos[ip + i] as usize] = x;
+                }
+                ip += s;
+            }
+            self.exec_ops(v, buf, mode, end)?;
+            out.extend(self.out_pos.iter().map(|&p| v[p as usize]));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sortnet::exec::ExecScratch;
+    use crate::sortnet::loms::{loms_2way, loms_3way_median, loms_kway};
+    use crate::sortnet::mwms::mwms_3way;
+    use crate::sortnet::{batcher, s2ms};
+    use crate::util::Rng;
+
+    fn interp_outputs(d: &MergeDevice, lists: &[Vec<u32>], mode: ExecMode) -> Vec<u32> {
+        let mut v = d.load_inputs(lists);
+        ExecScratch::new().run(d, &mut v, mode, None).unwrap();
+        d.read_outputs(&v)
+    }
+
+    #[test]
+    fn plan_matches_interpreter_on_random_inputs() {
+        let mut rng = Rng::new(11);
+        for d in [
+            loms_2way(8, 8, 2),
+            loms_2way(7, 5, 2),
+            s2ms::s2ms(6, 6),
+            batcher::odd_even_merge(8),
+            loms_kway(&[7, 7, 7]),
+        ] {
+            let plan = CompiledPlan::compile(&d).unwrap();
+            let mut scratch = PlanScratch::new();
+            for _ in 0..25 {
+                let lists: Vec<Vec<u32>> =
+                    d.list_sizes.iter().map(|&s| rng.sorted_list(s, 500)).collect();
+                let want = interp_outputs(&d, &lists, ExecMode::Fast);
+                let got = plan.merge_row(&lists, ExecMode::Fast, &mut scratch).unwrap();
+                assert_eq!(got, want, "{}", d.name);
+            }
+        }
+    }
+
+    #[test]
+    fn run_row_is_drop_in_for_exec_scratch_run() {
+        let d = loms_2way(8, 8, 4);
+        let plan = CompiledPlan::compile(&d).unwrap();
+        let mut rng = Rng::new(3);
+        let lists = vec![rng.sorted_list(8, 100), rng.sorted_list(8, 100)];
+        let mut vi = d.load_inputs(&lists);
+        let mut vp = vi.clone();
+        ExecScratch::new().run(&d, &mut vi, ExecMode::Strict, None).unwrap();
+        plan.run_row(&mut vp, ExecMode::Strict, None, &mut PlanScratch::new()).unwrap();
+        assert_eq!(vi, vp);
+    }
+
+    #[test]
+    fn run_batch_matches_per_row_execution() {
+        let d = loms_2way(8, 8, 2);
+        let plan = CompiledPlan::compile(&d).unwrap();
+        let batch = 17;
+        let mut rng = Rng::new(21);
+        let rows: Vec<Vec<Vec<u32>>> = (0..batch)
+            .map(|_| vec![rng.sorted_list(8, 1000), rng.sorted_list(8, 1000)])
+            .collect();
+        let lists: Vec<Vec<u32>> = (0..2)
+            .map(|l| rows.iter().flat_map(|r| r[l].iter().copied()).collect())
+            .collect();
+        let mut out = Vec::new();
+        let mut scratch = PlanScratch::new();
+        plan.run_batch(&lists, batch, ExecMode::Strict, &mut scratch, &mut out).unwrap();
+        assert_eq!(out.len(), batch * plan.total_outputs());
+        for (row, req) in rows.iter().enumerate() {
+            let want = interp_outputs(&d, req, ExecMode::Fast);
+            assert_eq!(&out[row * 16..(row + 1) * 16], &want[..], "row {row}");
+        }
+    }
+
+    #[test]
+    fn pruned_plan_bit_identical_and_smaller() {
+        let d = mwms_3way(5);
+        let plan = CompiledPlan::compile(&d).unwrap();
+        let pruned = CompiledPlan::compile_pruned(&d).unwrap();
+        assert!(pruned.is_pruned());
+        assert!(pruned.removed_muxes() > 0);
+        assert!(pruned.op_count() <= plan.op_count());
+        let mut rng = Rng::new(7);
+        let mut s1 = PlanScratch::new();
+        let mut s2 = PlanScratch::new();
+        for _ in 0..30 {
+            let lists: Vec<Vec<u32>> =
+                d.list_sizes.iter().map(|&s| rng.sorted_list(s, 200)).collect();
+            let a = plan.merge_row(&lists, ExecMode::Fast, &mut s1).unwrap();
+            let b = pruned.merge_row(&lists, ExecMode::Fast, &mut s2).unwrap();
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn compile_auto_prunes_small_skips_large_and_tapped() {
+        let small = CompiledPlan::compile_auto(&loms_kway(&[3, 3, 3, 3])).unwrap();
+        assert!(small.is_pruned());
+        let large = CompiledPlan::compile_auto(&loms_2way(128, 128, 4)).unwrap();
+        assert!(!large.is_pruned());
+        // Median-tapped devices (loms_kway with equal odd sizes sets a
+        // tap) are never pruned — the tap's stage index must stay valid.
+        let tapped = loms_kway(&[7, 7, 7]);
+        assert!(tapped.median_tap.is_some());
+        assert!(!CompiledPlan::compile_auto(&tapped).unwrap().is_pruned());
+    }
+
+    #[test]
+    fn median_row_matches_interpreter_median() {
+        let d = loms_3way_median(7);
+        assert!(d.median_tap.is_some());
+        let plan = CompiledPlan::compile(&d).unwrap();
+        assert!(CompiledPlan::compile_pruned(&d).is_err());
+        let mut rng = Rng::new(13);
+        let mut scratch = PlanScratch::new();
+        for _ in 0..20 {
+            let lists: Vec<Vec<u32>> =
+                d.list_sizes.iter().map(|&s| rng.sorted_list(s, 99)).collect();
+            let got = plan.median_row(&lists, ExecMode::Strict, &mut scratch).unwrap().unwrap();
+            let want = crate::sortnet::exec::median(&d, &lists, ExecMode::Strict)
+                .unwrap()
+                .unwrap();
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn strict_mode_reports_same_violation_site() {
+        // Up-run descending violates the S2MS precondition; the plan must
+        // report the same (stage, block) the interpreter does.
+        let d = s2ms::s2ms(2, 2);
+        let plan = CompiledPlan::compile(&d).unwrap();
+        let mut v = vec![7u32, 2, 1, 9];
+        let ie = ExecScratch::new().run(&d, &mut v.clone(), ExecMode::Strict, None).unwrap_err();
+        let pe = plan
+            .run_row(&mut v, ExecMode::Strict, None, &mut PlanScratch::new())
+            .unwrap_err();
+        assert_eq!((ie.stage, ie.block), (pe.stage, pe.block));
+        // Fast mode tolerates garbage-in, like the hardware.
+        plan.run_row(&mut vec![7u32, 2, 1, 9], ExecMode::Fast, None, &mut PlanScratch::new())
+            .unwrap();
+    }
+
+    #[test]
+    fn compile_rejects_invalid_device() {
+        let mut d = loms_2way(2, 2, 2);
+        d.output_perm = vec![0, 0, 1, 2];
+        assert!(CompiledPlan::compile(&d).is_err());
+    }
+
+    #[test]
+    fn plan_shape_accessors() {
+        let d = loms_2way(8, 8, 2);
+        let plan = CompiledPlan::compile(&d).unwrap();
+        assert_eq!(plan.n(), 16);
+        assert_eq!(plan.total_outputs(), 16);
+        assert_eq!(plan.depth(), d.depth());
+        assert_eq!(plan.list_sizes(), &[8, 8]);
+        assert!(plan.op_count() > 0);
+        assert!(plan.arena_len() >= plan.op_count());
+    }
+}

@@ -11,9 +11,14 @@
 //! pattern violates a block precondition, no real-valued input can either
 //! (a descent in a real-valued run implies a descent in its threshold
 //! projection at any cut between the two values).
+//!
+//! Validators execute through the compiled plan ([`super::plan`]) in
+//! strict mode — the proof covers the exact IR the serving hot path
+//! runs, not just the structural device description.
 
-use super::exec::{ExecMode, ExecScratch};
+use super::exec::ExecMode;
 use super::network::MergeDevice;
+use super::plan::{CompiledPlan, PlanScratch};
 
 /// Validation failure detail.
 #[derive(Debug, Clone)]
@@ -76,17 +81,16 @@ pub fn merge_01_pattern_count(sizes: &[usize]) -> u128 {
 /// execute without precondition violation and produce a sorted output.
 /// Also checks the median tap (if any) against the true median.
 pub fn validate_merge_01(d: &MergeDevice) -> Result<(), ValidationError> {
-    d.check().map_err(|e| ValidationError { device: d.name.clone(), detail: e })?;
-    let mut scratch = ExecScratch::new();
+    let plan = CompiledPlan::compile(d)
+        .map_err(|e| ValidationError { device: d.name.clone(), detail: e })?;
+    let mut scratch = PlanScratch::new();
     for_each_sorted01(&d.list_sizes, |lists| {
-        let mut v = d.load_inputs(lists);
-        scratch
-            .run(d, &mut v, ExecMode::Strict, None)
-            .map_err(|e| ValidationError {
+        let out = plan.merge_row(lists, ExecMode::Strict, &mut scratch).map_err(|e| {
+            ValidationError {
                 device: d.name.clone(),
                 detail: format!("precondition violated on {lists:?}: {e}"),
-            })?;
-        let out = d.read_outputs(&v);
+            }
+        })?;
         if out.windows(2).any(|w| w[0] > w[1]) {
             return Err(ValidationError {
                 device: d.name.clone(),
@@ -94,24 +98,21 @@ pub fn validate_merge_01(d: &MergeDevice) -> Result<(), ValidationError> {
             });
         }
         // Median tap check (only defined for odd totals).
-        if let Some((stop, pos)) = d.median_tap {
-            let mut v2 = d.load_inputs(lists);
-            scratch
-                .run(d, &mut v2, ExecMode::Strict, Some(stop))
+        if d.median_tap.is_some() {
+            let got = plan
+                .median_row(lists, ExecMode::Strict, &mut scratch)
                 .map_err(|e| ValidationError {
                     device: d.name.clone(),
                     detail: format!("median-path precondition violated: {e}"),
-                })?;
+                })?
+                .expect("median tap present");
             let mut all: Vec<u8> = lists.iter().flatten().copied().collect();
             all.sort_unstable();
             let want = all[all.len() / 2];
-            if v2[pos] != want {
+            if got != want {
                 return Err(ValidationError {
                     device: d.name.clone(),
-                    detail: format!(
-                        "median tap got {} want {} for input {lists:?}",
-                        v2[pos], want
-                    ),
+                    detail: format!("median tap got {got} want {want} for input {lists:?}"),
                 });
             }
         }
@@ -123,25 +124,28 @@ pub fn validate_merge_01(d: &MergeDevice) -> Result<(), ValidationError> {
 /// Fig.-18 LOMS/MWMS median filters): checks only the median tap, since
 /// such devices do not build the full sorted output.
 pub fn validate_median_01(d: &MergeDevice) -> Result<(), ValidationError> {
-    d.check().map_err(|e| ValidationError { device: d.name.clone(), detail: e })?;
-    let (stop, pos) = d.median_tap.ok_or_else(|| ValidationError {
+    d.median_tap.ok_or_else(|| ValidationError {
         device: d.name.clone(),
         detail: "device has no median tap".into(),
     })?;
-    let mut scratch = ExecScratch::new();
+    let plan = CompiledPlan::compile(d)
+        .map_err(|e| ValidationError { device: d.name.clone(), detail: e })?;
+    let mut scratch = PlanScratch::new();
     for_each_sorted01(&d.list_sizes, |lists| {
-        let mut v = d.load_inputs(lists);
-        scratch.run(d, &mut v, ExecMode::Strict, Some(stop)).map_err(|e| ValidationError {
-            device: d.name.clone(),
-            detail: format!("precondition violated on {lists:?}: {e}"),
-        })?;
+        let got = plan
+            .median_row(lists, ExecMode::Strict, &mut scratch)
+            .map_err(|e| ValidationError {
+                device: d.name.clone(),
+                detail: format!("precondition violated on {lists:?}: {e}"),
+            })?
+            .expect("median tap present");
         let mut all: Vec<u8> = lists.iter().flatten().copied().collect();
         all.sort_unstable();
         let want = all[all.len() / 2];
-        if v[pos] != want {
+        if got != want {
             return Err(ValidationError {
                 device: d.name.clone(),
-                detail: format!("median got {} want {} for {lists:?}", v[pos], want),
+                detail: format!("median got {got} want {want} for {lists:?}"),
             });
         }
         Ok(())
@@ -156,15 +160,17 @@ pub fn validate_sorter_01(d: &MergeDevice) -> Result<(), ValidationError> {
     let n = d.n;
     assert!(n <= 24, "exhaustive 0-1 sorter validation limited to n<=24");
     assert_eq!(d.list_sizes.len(), 1, "sorter validation expects a single unsorted list");
-    let mut scratch = ExecScratch::new();
+    let plan = CompiledPlan::compile(d)
+        .map_err(|e| ValidationError { device: d.name.clone(), detail: e })?;
+    let mut scratch = PlanScratch::new();
     for bits in 0u32..(1u32 << n) {
         let list: Vec<u8> = (0..n).map(|i| ((bits >> i) & 1) as u8).collect();
-        let mut v = d.load_inputs(&[list.clone()]);
-        scratch.run(d, &mut v, ExecMode::Strict, None).map_err(|e| ValidationError {
-            device: d.name.clone(),
-            detail: format!("precondition violated on {bits:b}: {e}"),
-        })?;
-        let out = d.read_outputs(&v);
+        let out = plan
+            .merge_row(&[list.clone()], ExecMode::Strict, &mut scratch)
+            .map_err(|e| ValidationError {
+                device: d.name.clone(),
+                detail: format!("precondition violated on {bits:b}: {e}"),
+            })?;
         if out.windows(2).any(|w| w[0] > w[1]) {
             return Err(ValidationError {
                 device: d.name.clone(),
@@ -180,15 +186,17 @@ pub fn validate_sorter_01(d: &MergeDevice) -> Result<(), ValidationError> {
 /// value routing, not just order).
 pub fn validate_merge_random(d: &MergeDevice, iters: usize, seed: u64) -> Result<(), ValidationError> {
     let mut rng = crate::util::Rng::new(seed);
-    let mut scratch = ExecScratch::new();
+    let plan = CompiledPlan::compile(d)
+        .map_err(|e| ValidationError { device: d.name.clone(), detail: e })?;
+    let mut scratch = PlanScratch::new();
     for it in 0..iters {
         let lists: Vec<Vec<u32>> = d.list_sizes.iter().map(|&s| rng.sorted_list(s, 1000)).collect();
-        let mut v = d.load_inputs(&lists);
-        scratch.run(d, &mut v, ExecMode::Strict, None).map_err(|e| ValidationError {
-            device: d.name.clone(),
-            detail: format!("iter {it}: precondition violated: {e}"),
+        let got = plan.merge_row(&lists, ExecMode::Strict, &mut scratch).map_err(|e| {
+            ValidationError {
+                device: d.name.clone(),
+                detail: format!("iter {it}: precondition violated: {e}"),
+            }
         })?;
-        let got = d.read_outputs(&v);
         let mut want: Vec<u32> = lists.iter().flatten().copied().collect();
         want.sort_unstable();
         if got != want {

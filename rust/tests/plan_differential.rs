@@ -1,0 +1,145 @@
+//! Plan-vs-interpreter differential suite: every device family is
+//! lowered to a [`CompiledPlan`] and executed against the enum-tree
+//! interpreter (`ExecScratch`) on the same inputs — random sorted lists
+//! and exhaustive sorted-0-1 patterns, in both `Fast` and `Strict`
+//! modes. The full flat vector is compared (not just the output ranks),
+//! so every intermediate mux write must agree bit-for-bit.
+
+use loms::sortnet::exec::{ExecMode, ExecScratch};
+use loms::sortnet::loms::{loms_2way, loms_kway};
+use loms::sortnet::mwms::mwms_3way;
+use loms::sortnet::plan::{CompiledPlan, PlanScratch};
+use loms::sortnet::{batcher, s2ms, MergeDevice};
+use loms::util::Rng;
+
+/// Every family the paper builds or compares against.
+fn family_devices() -> Vec<MergeDevice> {
+    vec![
+        // LOMS 2-way across column counts and unequal sizes.
+        loms_2way(8, 8, 2),
+        loms_2way(16, 16, 4),
+        loms_2way(7, 5, 3),
+        loms_2way(1, 9, 2),
+        // LOMS k-way.
+        loms_kway(&[7, 7, 7]),
+        loms_kway(&[3, 3, 3, 3]),
+        // S2MS, equal and unequal.
+        s2ms::s2ms(8, 8),
+        s2ms::s2ms(5, 12),
+        // Batcher baselines.
+        batcher::odd_even_merge(8),
+        batcher::bitonic_merge(8),
+        // MWMS baseline (SortN column/row stages).
+        mwms_3way(5),
+    ]
+}
+
+/// Run the interpreter and the plan on identical flat vectors; assert
+/// the entire vectors and the read-out outputs agree.
+fn assert_equivalent(d: &MergeDevice, plan: &CompiledPlan, lists: &[Vec<u32>], mode: ExecMode) {
+    let mut vi = d.load_inputs(lists);
+    let mut vp = vi.clone();
+    let ri = ExecScratch::new().run(d, &mut vi, mode, None);
+    let rp = plan.run_row(&mut vp, mode, None, &mut PlanScratch::new());
+    match (ri, rp) {
+        (Ok(()), Ok(())) => {
+            assert_eq!(vi, vp, "{} flat vectors diverge ({mode:?})", d.name);
+            let plan_out = plan
+                .merge_row(lists, mode, &mut PlanScratch::new())
+                .unwrap_or_else(|e| panic!("{}: {e}", d.name));
+            assert_eq!(d.read_outputs(&vi), plan_out, "{} outputs diverge", d.name);
+        }
+        (Err(ei), Err(ep)) => {
+            assert_eq!(
+                (ei.stage, ei.block),
+                (ep.stage, ep.block),
+                "{} strict violations at different sites",
+                d.name
+            );
+        }
+        (ri, rp) => panic!("{}: interpreter {ri:?} but plan {rp:?}", d.name),
+    }
+}
+
+#[test]
+fn every_family_matches_on_random_inputs_fast_and_strict() {
+    let mut rng = Rng::new(0xD1FF);
+    for d in family_devices() {
+        let plan = CompiledPlan::compile(&d).unwrap_or_else(|e| panic!("{e}"));
+        assert_eq!(plan.depth(), d.depth(), "{}", d.name);
+        for _ in 0..40 {
+            let lists: Vec<Vec<u32>> =
+                d.list_sizes.iter().map(|&s| rng.sorted_list(s, 1 << 16)).collect();
+            for mode in [ExecMode::Fast, ExecMode::Strict] {
+                assert_equivalent(&d, &plan, &lists, mode);
+            }
+        }
+    }
+}
+
+#[test]
+fn every_family_matches_on_all_sorted01_patterns() {
+    for d in family_devices() {
+        let plan = CompiledPlan::compile(&d).unwrap_or_else(|e| panic!("{e}"));
+        // Odometer over all sorted 0-1 patterns (∏ size_l + 1 of them).
+        let sizes = d.list_sizes.clone();
+        let mut zeros = vec![0usize; sizes.len()];
+        'patterns: loop {
+            let lists: Vec<Vec<u32>> = sizes
+                .iter()
+                .zip(&zeros)
+                .map(|(&s, &z)| (0..s).map(|i| u32::from(i >= z)).collect())
+                .collect();
+            for mode in [ExecMode::Fast, ExecMode::Strict] {
+                assert_equivalent(&d, &plan, &lists, mode);
+            }
+            let mut l = 0;
+            loop {
+                if l == sizes.len() {
+                    break 'patterns;
+                }
+                zeros[l] += 1;
+                if zeros[l] <= sizes[l] {
+                    break;
+                }
+                zeros[l] = 0;
+                l += 1;
+            }
+        }
+    }
+}
+
+#[test]
+fn pruned_plans_match_unpruned_outputs() {
+    // Pruning drops muxes a stage provably never fires; the *outputs*
+    // must stay bit-identical (intermediate dead positions may differ).
+    // (loms_kway(&[3,3,3,3]) rather than [7,7,7]: equal odd k-way sizes
+    // carry a median tap, and median-tapped devices are never pruned.)
+    let mut rng = Rng::new(0xBEEF);
+    for d in [mwms_3way(5), loms_kway(&[3, 3, 3, 3])] {
+        let plain = CompiledPlan::compile(&d).unwrap();
+        let pruned = CompiledPlan::compile_pruned(&d).unwrap();
+        assert!(pruned.is_pruned());
+        let mut s1 = PlanScratch::new();
+        let mut s2 = PlanScratch::new();
+        for _ in 0..50 {
+            let lists: Vec<Vec<u32>> =
+                d.list_sizes.iter().map(|&s| rng.sorted_list(s, 500)).collect();
+            let a = plain.merge_row(&lists, ExecMode::Fast, &mut s1).unwrap();
+            let b = pruned.merge_row(&lists, ExecMode::Strict, &mut s2).unwrap();
+            assert_eq!(a, b, "{}", d.name);
+        }
+    }
+}
+
+#[test]
+fn strict_violation_sites_agree_between_plan_and_interpreter() {
+    // Deliberately unsorted runs through an S2MS device: both executors
+    // must flag the same (stage, block) in strict mode.
+    let d = s2ms::s2ms(4, 4);
+    let plan = CompiledPlan::compile(&d).unwrap();
+    let lists = vec![vec![9u32, 1, 2, 3], vec![1, 2, 3, 4]];
+    assert_equivalent(&d, &plan, &lists, ExecMode::Strict);
+    // Fast mode tolerates the garbage identically on both paths.
+    assert_equivalent(&d, &plan, &lists, ExecMode::Fast);
+}
