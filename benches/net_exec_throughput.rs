@@ -3,12 +3,16 @@
 //!
 //! Every device is measured twice, side by side: the enum-tree
 //! interpreter (`ExecScratch::run`) and the lowered IR
-//! (`CompiledPlan::run_row`). A final section measures the software
-//! backend's batch shape (`loms2_up32_dn32_b256`): the old per-row
-//! interpreter loop vs `CompiledPlan::run_batch` in one call.
+//! (`CompiledPlan::run_row`). A batch section then measures the four
+//! executor variants on the software backend's serving shapes —
+//! per-row interpreter loop, `CompiledPlan::run_batch`, the transposed
+//! lane executor (`LanePlan::run_batch`), and lanes + multi-core
+//! sharding (`lanes::run_batch_sharded`) — including the
+//! `loms2_up32_dn32_b256` shape the default artifact set serves.
 
 use loms::bench::timing;
 use loms::sortnet::exec::{ExecMode, ExecScratch};
+use loms::sortnet::lanes::{self, LanePlan, LaneScratch, LANES};
 use loms::sortnet::plan::{CompiledPlan, PlanScratch};
 use loms::sortnet::{batcher, loms as lm, s2ms};
 use loms::util::Rng;
@@ -47,58 +51,85 @@ fn main() {
         }
     }
 
-    // The software backend's batch shape: loms2_up32_dn32_b256. The old
-    // execute loop re-dispatched the device per row; run_batch executes
-    // the whole row-major batch through the lowered IR in one call.
-    let d = lm::loms_2way(32, 32, 2);
-    let batch = 256usize;
-    let sizes = [32usize, 32];
-    let lists: Vec<Vec<u32>> = sizes
-        .iter()
-        .map(|&s| {
-            let mut flat = Vec::with_capacity(batch * s);
-            for _ in 0..batch {
-                flat.extend(rng.sorted_list(s, 1 << 20));
-            }
-            flat
-        })
-        .collect();
-    let total = d.n;
-    let mut out = Vec::with_capacity(batch * total);
-
-    let mut scratch = ExecScratch::new();
-    let mut v = vec![0u32; d.n];
-    let per_row = timing::bench("loms2_up32_dn32_b256 [interp per-row]", || {
-        out.clear();
-        for row in 0..batch {
-            for (l, &s) in sizes.iter().enumerate() {
-                let slice = &lists[l][row * s..(row + 1) * s];
-                for (i, &x) in slice.iter().enumerate() {
-                    v[d.input_map[l][i]] = x;
+    // The four executor variants on the software backend's serving
+    // shapes. `loms2_up32_dn32_b256` is the default artifact set's batch
+    // shape; the 4096-row shape shows where multi-core sharding pays
+    // (thread spawn amortises only past ~tens of µs of work, which is
+    // why `lanes::auto_threads` keeps small batches inline).
+    for (m, batch) in [(32usize, 256usize), (32, 4096)] {
+        let d = lm::loms_2way(m, m, 2);
+        let tag = format!("loms2_up{m}_dn{m}_b{batch}");
+        let sizes = [m, m];
+        let lists: Vec<Vec<u32>> = sizes
+            .iter()
+            .map(|&s| {
+                let mut flat = Vec::with_capacity(batch * s);
+                for _ in 0..batch {
+                    flat.extend(rng.sorted_list(s, 1 << 20));
                 }
-            }
-            scratch.run(&d, &mut v, ExecMode::Fast, None).unwrap();
-            out.extend(d.output_perm.iter().map(|&p| v[p]));
-        }
-        std::hint::black_box(&out);
-    });
-    println!("{}", per_row.row());
+                flat
+            })
+            .collect();
+        let total = d.n;
+        let mut out = Vec::with_capacity(batch * total);
 
-    let plan = CompiledPlan::compile_auto(&d).expect("valid device");
-    let mut ps = PlanScratch::new();
-    let batched = timing::bench("loms2_up32_dn32_b256 [plan run_batch]", || {
-        out.clear();
-        plan.run_batch(&lists, batch, ExecMode::Fast, &mut ps, &mut out).unwrap();
-        std::hint::black_box(&out);
-    });
-    println!("{}", batched.row());
-    println!(
-        "run_batch speedup over per-row interpreter: {:.2}x (pruned={}, {} ops, arena {} u32)",
-        per_row.mean_ns / batched.mean_ns,
-        plan.is_pruned(),
-        plan.op_count(),
-        plan.arena_len()
-    );
+        let mut scratch = ExecScratch::new();
+        let mut v = vec![0u32; d.n];
+        let per_row = timing::bench(&format!("{tag} [interp per-row]"), || {
+            out.clear();
+            for row in 0..batch {
+                for (l, &s) in sizes.iter().enumerate() {
+                    let slice = &lists[l][row * s..(row + 1) * s];
+                    for (i, &x) in slice.iter().enumerate() {
+                        v[d.input_map[l][i]] = x;
+                    }
+                }
+                scratch.run(&d, &mut v, ExecMode::Fast, None).unwrap();
+                out.extend(d.output_perm.iter().map(|&p| v[p]));
+            }
+            std::hint::black_box(&out);
+        });
+        println!("{}", per_row.row());
+
+        let plan = CompiledPlan::compile_auto(&d).expect("valid device");
+        let mut ps = PlanScratch::new();
+        let batched = timing::bench(&format!("{tag} [plan run_batch]"), || {
+            out.clear();
+            plan.run_batch(&lists, batch, ExecMode::Fast, &mut ps, &mut out).unwrap();
+            std::hint::black_box(&out);
+        });
+        println!("{}   ({:.2}x vs interp)", batched.row(), per_row.mean_ns / batched.mean_ns);
+
+        let lane = LanePlan::compile(&plan);
+        let mut ls = LaneScratch::new();
+        let laned = timing::bench(&format!("{tag} [lanes x{LANES}]"), || {
+            out.clear();
+            lane.run_batch(&plan, &lists, batch, &mut ls, &mut out).unwrap();
+            std::hint::black_box(&out);
+        });
+        println!("{}   ({:.2}x vs interp)", laned.row(), per_row.mean_ns / laned.mean_ns);
+
+        let threads = lanes::forced_threads(batch);
+        let sharded = timing::bench(&format!("{tag} [lanes+{threads}thr]"), || {
+            out.clear();
+            lanes::run_batch_sharded(&lane, &plan, &lists, batch, threads, &mut out).unwrap();
+            std::hint::black_box(&out);
+        });
+        println!("{}   ({:.2}x vs interp)", sharded.row(), per_row.mean_ns / sharded.mean_ns);
+        println!(
+            "{tag}: plan {:.2}x | lanes {:.2}x | lanes+{}thr {:.2}x vs per-row interpreter \
+             ({} CAS + {} copy steps/tile, {} slots, pruned={}, auto_threads would use {})",
+            per_row.mean_ns / batched.mean_ns,
+            per_row.mean_ns / laned.mean_ns,
+            threads,
+            per_row.mean_ns / sharded.mean_ns,
+            lane.cas_count(),
+            lane.copy_count(),
+            lane.slots(),
+            plan.is_pruned(),
+            lanes::auto_threads(batch, plan.n()),
+        );
+    }
 
     // Reference: std two-pointer merge of the same sizes.
     for outs in [16usize, 64, 256] {

@@ -499,58 +499,108 @@ pub fn ext_sorters() -> FigReport {
     }
 }
 
-/// Extension (not a paper figure): software execution throughput of the
-/// enum-tree interpreter vs the compiled plan ([`crate::sortnet::plan`])
-/// on the same devices — the host-side serving-path speedup, measured
-/// side by side. Wall-clock measured via [`timing::bench`].
+/// Extension (not a paper figure): software batch-execution throughput
+/// of the four executor variants, side by side on the serving shapes —
+/// the per-row enum-tree interpreter, [`crate::sortnet::plan`]'s
+/// `run_batch`, the transposed lane executor
+/// ([`crate::sortnet::lanes`]), and lanes + multi-core sharding.
+/// y = ns per merged row; wall-clock via [`timing::bench`].
 ///
 /// Deliberately NOT part of [`all_figures`]: unlike every paper figure
-/// it measures wall-clock (machine-dependent, ~1 s to run), so it is
+/// it measures wall-clock (machine-dependent, ~2 s to run), so it is
 /// only produced when explicitly requested (`loms report --figure
 /// ext_plan_throughput`, or the `net_exec_throughput` bench).
 pub fn ext_plan_throughput() -> FigReport {
     use crate::sortnet::exec::{ExecMode, ExecScratch};
+    use crate::sortnet::lanes::{self, LanePlan, LaneScratch};
     use crate::sortnet::plan::{CompiledPlan, PlanScratch};
     use crate::util::Rng;
     let mut rng = Rng::new(42);
+    // The default artifact set's 2col serving shapes, loms2_up32_dn32_b256
+    // (the headline batch shape) first.
+    let shapes = [(32usize, 256usize), (64, 128)];
     let mut interp_pts = Vec::new();
     let mut plan_pts = Vec::new();
-    for outs in [32usize, 64] {
-        let m = outs / 2;
+    let mut lane_pts = Vec::new();
+    let mut shard_pts = Vec::new();
+    let mut notes = vec!["not a paper figure — host serving path, ns per merged row".into()];
+    for (m, batch) in shapes {
+        let outs = 2 * m;
         let d = loms_2way(m, m, 2);
-        let a = rng.sorted_list(m, 1 << 20);
-        let b = rng.sorted_list(m, 1 << 20);
-        let base = d.load_inputs(&[a, b]);
-        let mut v = base.clone();
+        let lists: Vec<Vec<u32>> = (0..2)
+            .map(|_| {
+                let mut flat = Vec::with_capacity(batch * m);
+                for _ in 0..batch {
+                    flat.extend(rng.sorted_list(m, 1 << 20));
+                }
+                flat
+            })
+            .collect();
+        let rows = batch as f64;
+        let mut out: Vec<u32> = Vec::with_capacity(batch * outs);
         let mut scratch = ExecScratch::new();
-        let mi = timing::bench(&format!("interp {outs}-out"), || {
-            v.copy_from_slice(&base);
-            scratch.run(&d, &mut v, ExecMode::Fast, None).unwrap();
-            std::hint::black_box(&v);
+        let mut v = vec![0u32; d.n];
+        let mi = timing::bench(&format!("interp b{batch} {outs}-out"), || {
+            out.clear();
+            for row in 0..batch {
+                for (l, &s) in [m, m].iter().enumerate() {
+                    let slice = &lists[l][row * s..(row + 1) * s];
+                    for (i, &x) in slice.iter().enumerate() {
+                        v[d.input_map[l][i]] = x;
+                    }
+                }
+                scratch.run(&d, &mut v, ExecMode::Fast, None).unwrap();
+                out.extend(d.output_perm.iter().map(|&p| v[p]));
+            }
+            std::hint::black_box(&out);
         });
-        interp_pts.push((outs, mi.mean_ns));
-        let plan = CompiledPlan::compile(&d).expect("valid device");
+        interp_pts.push((outs, mi.mean_ns / rows));
+        let plan = CompiledPlan::compile_auto(&d).expect("valid device");
         let mut ps = PlanScratch::new();
-        let mp = timing::bench(&format!("plan {outs}-out"), || {
-            v.copy_from_slice(&base);
-            plan.run_row(&mut v, ExecMode::Fast, None, &mut ps).unwrap();
-            std::hint::black_box(&v);
+        let mp = timing::bench(&format!("plan b{batch} {outs}-out"), || {
+            out.clear();
+            plan.run_batch(&lists, batch, ExecMode::Fast, &mut ps, &mut out).unwrap();
+            std::hint::black_box(&out);
         });
-        plan_pts.push((outs, mp.mean_ns));
+        plan_pts.push((outs, mp.mean_ns / rows));
+        let lane = LanePlan::compile(&plan);
+        let mut ls = LaneScratch::new();
+        let ml = timing::bench(&format!("lanes b{batch} {outs}-out"), || {
+            out.clear();
+            lane.run_batch(&plan, &lists, batch, &mut ls, &mut out).unwrap();
+            std::hint::black_box(&out);
+        });
+        lane_pts.push((outs, ml.mean_ns / rows));
+        let threads = lanes::forced_threads(batch);
+        let mt = timing::bench(&format!("lanes+{threads}thr b{batch} {outs}-out"), || {
+            out.clear();
+            lanes::run_batch_sharded(&lane, &plan, &lists, batch, threads, &mut out).unwrap();
+            std::hint::black_box(&out);
+        });
+        shard_pts.push((outs, mt.mean_ns / rows));
+        notes.push(format!(
+            "loms2_up{m}_dn{m}_b{batch}: plan {:.2}x, lanes {:.2}x, lanes+{threads}thr {:.2}x \
+             vs interpreter ({} CAS/tile over {} slots)",
+            mi.mean_ns / mp.mean_ns,
+            mi.mean_ns / ml.mean_ns,
+            mi.mean_ns / mt.mean_ns,
+            lane.cas_count(),
+            lane.slots(),
+        ));
     }
-    let speedup64 = interp_pts[1].1 / plan_pts[1].1;
     FigReport {
         id: "ext_plan_throughput".into(),
-        title: "Extension: interpreter vs compiled-plan software throughput (LOMS 2col)".into(),
+        title: "Extension: interpreter vs plan vs lanes vs lanes+threads batch throughput (LOMS 2col)"
+            .into(),
         x_label: "outputs".into(),
-        y_label: "ns/op".into(),
+        y_label: "ns/row".into(),
         series: vec![
             Series { label: "interpreter".into(), points: interp_pts },
             Series { label: "compiled plan".into(), points: plan_pts },
+            Series { label: "lane plan".into(), points: lane_pts },
+            Series { label: "lanes+threads".into(), points: shard_pts },
         ],
-        notes: vec![format!(
-            "not a paper figure — host serving path; plan speedup at 64 outputs = {speedup64:.2}x"
-        )],
+        notes,
     }
 }
 
@@ -579,11 +629,14 @@ mod tests {
 
     #[test]
     fn plan_throughput_figure_builds() {
-        // Wall-clock figure (not in all_figures): smoke-test its shape.
+        // Wall-clock figure (not in all_figures): smoke-test its shape —
+        // all four executor variants over both serving shapes.
         let f = ext_plan_throughput();
-        assert_eq!(f.series.len(), 2);
+        assert_eq!(f.series.len(), 4);
         assert!(f.series.iter().all(|s| s.points.len() == 2));
         assert!(f.series.iter().all(|s| s.points.iter().all(|&(_, ns)| ns > 0.0)));
+        // The serving shape is named in the notes.
+        assert!(f.notes.iter().any(|n| n.contains("loms2_up32_dn32_b256")));
     }
 
     #[test]

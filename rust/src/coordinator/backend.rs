@@ -7,9 +7,9 @@
 //!   as the differential oracle in tests).
 
 use crate::runtime::{ArtifactMeta, Runtime};
-use crate::sortnet::exec::ExecMode;
+use crate::sortnet::lanes::{self, LanePlan, LaneScratch};
 use crate::sortnet::network::MergeDevice;
-use crate::sortnet::plan::{CompiledPlan, PlanScratch};
+use crate::sortnet::plan::CompiledPlan;
 use crate::sortnet::{loms, s2ms};
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
@@ -88,16 +88,24 @@ pub fn device_for_meta(meta: &ArtifactMeta) -> Result<MergeDevice> {
 }
 
 /// Software twin of the artifact set (same shapes, bit-exact semantics).
-/// Devices are lowered to [`CompiledPlan`]s — compiled on first use,
-/// cached per artifact — and batches execute through
-/// [`CompiledPlan::run_batch`], so the execute loop allocates nothing
-/// per row.
+/// Devices are lowered twice — to a [`CompiledPlan`] (scalar IR) and a
+/// [`LanePlan`] (transposed pure-CAS schedule), both compiled on first
+/// use and cached per artifact. Fast-mode batches run through the lane
+/// executor, [`LANES`](crate::sortnet::LANES) rows per tile with a
+/// scalar tail, sharded across cores when the batch is large enough
+/// ([`lanes::auto_threads`]); the scalar plan remains the strict-mode /
+/// median / validation engine.
 pub struct SoftwareBackend {
     metas: Vec<ArtifactMeta>,
+    /// `name → metas` index — `execute` is on the hot path, so batch
+    /// lookup must not linearly scan the artifact set per call.
+    meta_idx: HashMap<String, usize>,
     devices: HashMap<String, MergeDevice>,
     /// Per-artifact compiled-plan cache (filled lazily on first execute).
     plans: HashMap<String, CompiledPlan>,
-    scratch: PlanScratch<u32>,
+    /// Lane-expanded twin of each compiled plan (Fast-mode batch path).
+    lane_plans: HashMap<String, LanePlan>,
+    lane_scratch: LaneScratch<u32>,
 }
 
 impl SoftwareBackend {
@@ -105,14 +113,18 @@ impl SoftwareBackend {
     /// device tag cannot be reconstructed (see [`device_for_meta`]).
     pub fn new(metas: Vec<ArtifactMeta>) -> Result<Self> {
         let mut devices = HashMap::with_capacity(metas.len());
-        for m in &metas {
+        let mut meta_idx = HashMap::with_capacity(metas.len());
+        for (i, m) in metas.iter().enumerate() {
             devices.insert(m.name.clone(), device_for_meta(m)?);
+            meta_idx.insert(m.name.clone(), i);
         }
         Ok(SoftwareBackend {
             metas,
+            meta_idx,
             devices,
             plans: HashMap::new(),
-            scratch: PlanScratch::new(),
+            lane_plans: HashMap::new(),
+            lane_scratch: LaneScratch::new(),
         })
     }
 
@@ -145,17 +157,38 @@ impl SoftwareBackend {
         self.plans.get(name)
     }
 
-    /// Compile every artifact's plan up front. Plans are otherwise
-    /// compiled lazily on first execute, which puts the (possibly
-    /// exhaustive-pruning) compile cost on one unlucky first request —
-    /// production deployments should warm at startup; tests that touch
-    /// one artifact keep the cheap lazy path.
+    /// The cached lane plan for `name`, if already expanded.
+    pub fn lane_plan(&self, name: &str) -> Option<&LanePlan> {
+        self.lane_plans.get(name)
+    }
+
+    /// Fill the plan + lane-plan caches for one artifact (idempotent).
+    fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.lane_plans.contains_key(name) {
+            return Ok(());
+        }
+        let d = self
+            .devices
+            .get(name)
+            .ok_or_else(|| anyhow!("no software device {name:?}"))?;
+        if !self.plans.contains_key(name) {
+            let plan = CompiledPlan::compile_auto(d).map_err(|e| anyhow!("{name}: {e}"))?;
+            self.plans.insert(name.to_string(), plan);
+        }
+        let lane = LanePlan::compile(&self.plans[name]);
+        self.lane_plans.insert(name.to_string(), lane);
+        Ok(())
+    }
+
+    /// Compile every artifact's plan and lane plan up front. Both are
+    /// otherwise compiled lazily on first execute, which puts the
+    /// (possibly exhaustive-pruning) compile cost on one unlucky first
+    /// request — production deployments should warm at startup; tests
+    /// that touch one artifact keep the cheap lazy path.
     pub fn warm(&mut self) -> Result<()> {
-        for (name, d) in &self.devices {
-            if !self.plans.contains_key(name) {
-                let plan = CompiledPlan::compile_auto(d).map_err(|e| anyhow!("{name}: {e}"))?;
-                self.plans.insert(name.clone(), plan);
-            }
+        let names: Vec<String> = self.devices.keys().cloned().collect();
+        for name in names {
+            self.ensure_compiled(&name)?;
         }
         Ok(())
     }
@@ -168,23 +201,22 @@ impl Backend for SoftwareBackend {
 
     fn execute(&mut self, name: &str, lists: &[Vec<u32>]) -> Result<Vec<u32>> {
         let batch = self
-            .metas
-            .iter()
-            .find(|m| m.name == name)
-            .map(|m| m.batch)
+            .meta_idx
+            .get(name)
+            .map(|&i| self.metas[i].batch)
             .ok_or_else(|| anyhow!("no software device {name:?}"))?;
-        if !self.plans.contains_key(name) {
-            let d = self
-                .devices
-                .get(name)
-                .ok_or_else(|| anyhow!("no software device {name:?}"))?;
-            let plan = CompiledPlan::compile_auto(d).map_err(|e| anyhow!("{name}: {e}"))?;
-            self.plans.insert(name.to_string(), plan);
-        }
-        let plan = &self.plans[name];
+        self.ensure_compiled(name)?;
+        let SoftwareBackend { plans, lane_plans, lane_scratch, .. } = self;
+        let plan = &plans[name];
+        let lane = &lane_plans[name];
         let mut out = Vec::with_capacity(batch * plan.total_outputs());
-        plan.run_batch(lists, batch, ExecMode::Fast, &mut self.scratch, &mut out)
-            .map_err(|e| anyhow!("{name}: {e}"))?;
+        let threads = lanes::auto_threads(batch, plan.n());
+        let res = if threads > 1 {
+            lanes::run_batch_sharded(lane, plan, lists, batch, threads, &mut out)
+        } else {
+            lane.run_batch(plan, lists, batch, lane_scratch, &mut out)
+        };
+        res.map_err(|e| anyhow!("{name}: {e}"))?;
         Ok(out)
     }
 
@@ -196,7 +228,39 @@ impl Backend for SoftwareBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sortnet::exec::ExecMode;
+    use crate::sortnet::plan::PlanScratch;
     use crate::util::Rng;
+
+    #[test]
+    fn execute_routes_through_lane_plan_and_matches_scalar() {
+        let name = "loms2_up32_dn32_b256";
+        let mut b = SoftwareBackend::default_set();
+        assert!(b.lane_plan(name).is_none());
+        let meta = b.artifacts().into_iter().find(|m| m.name == name).unwrap();
+        let mut rng = Rng::new(17);
+        let lists: Vec<Vec<u32>> = meta
+            .list_sizes
+            .iter()
+            .map(|&s| {
+                let mut flat = Vec::new();
+                for _ in 0..meta.batch {
+                    flat.extend(rng.sorted_list(s, 100_000));
+                }
+                flat
+            })
+            .collect();
+        let out = b.execute(name, &lists).unwrap();
+        let lane = b.lane_plan(name).expect("lane plan cached after first execute");
+        assert_eq!(lane.total_outputs(), meta.total);
+        // The Fast-mode lane path must be bit-exact with the scalar plan.
+        let mut want = Vec::new();
+        b.plan(name)
+            .unwrap()
+            .run_batch(&lists, meta.batch, ExecMode::Fast, &mut PlanScratch::new(), &mut want)
+            .unwrap();
+        assert_eq!(out, want);
+    }
 
     #[test]
     fn software_backend_merges() {

@@ -7,7 +7,9 @@
 //! * [`sortnet`] — construction, bit-exact execution and exhaustive
 //!   validation of every device family in the paper (LOMS, S2MS,
 //!   Batcher OEM/Bitonic, N-sorters, MWMS), plus the compiled execution
-//!   plans ([`sortnet::plan`]) the serving hot path runs on.
+//!   plans ([`sortnet::plan`]) and their lane-parallel expansion
+//!   ([`sortnet::lanes`]: transposed SIMD-friendly tiles × core
+//!   sharding) the serving hot path runs on.
 //! * [`fpga`] — the structural FPGA cost model (Kintex Ultrascale+ /
 //!   Versal Prime; 2insLUT / 4insLUT) that regenerates the paper's
 //!   propagation-delay and LUT-usage figures.

@@ -32,11 +32,34 @@ pub enum ExecMode {
 pub struct PreconditionViolation {
     pub stage: usize,
     pub block: usize,
+    /// Batch row that tripped the violation, when raised by a batch
+    /// executor ([`crate::sortnet::plan::CompiledPlan::run_batch`] and
+    /// friends); `None` from single-row entry points.
+    pub row: Option<usize>,
     pub detail: String,
+}
+
+impl PreconditionViolation {
+    /// Tag the error with the batch row it came from.
+    pub(crate) fn with_row(mut self, row: usize) -> Self {
+        self.row = Some(row);
+        self
+    }
+
+    /// Shift the row context by `by` (used when a sub-range of a batch
+    /// ran through a nested executor, e.g. the lane executor's scalar
+    /// tail or a thread shard).
+    pub(crate) fn offset_row(mut self, by: usize) -> Self {
+        self.row = Some(self.row.map_or(by, |r| r + by));
+        self
+    }
 }
 
 impl std::fmt::Display for PreconditionViolation {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if let Some(row) = self.row {
+            write!(f, "row {row}: ")?;
+        }
         write!(f, "stage {} block {}: {}", self.stage, self.block, self.detail)
     }
 }
@@ -85,6 +108,7 @@ impl<T: Copy + Ord + Default> ExecScratch<T> {
                             return Err(PreconditionViolation {
                                 stage: si,
                                 block: bi,
+                                row: None,
                                 detail: "S2MS input run not sorted".into(),
                             });
                         }

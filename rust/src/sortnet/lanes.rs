@@ -1,0 +1,678 @@
+//! Lane-parallel execution plans: a [`CompiledPlan`] expanded into a pure
+//! compare-exchange schedule and executed over a **transposed,
+//! value-major batch tile**.
+//!
+//! The devices are data-oblivious comparator networks — the same fixed
+//! schedule runs for every row — so a batch does not have to be executed
+//! row by row. A [`LanePlan`] re-expresses every plan op as plain
+//! 2-input compare-exchange (CAS) steps (the reduction Shi et al. use
+//! for n-sorter networks, and the structure FLiMS exploits for wide
+//! parallel merging):
+//!
+//! * `SortN` blocks expand through the general odd-even merge-sort
+//!   recursion (the arbitrary-size form of the Batcher networks in
+//!   [`super::batcher`]);
+//! * `MergeS2` blocks expand through the general odd-even **merge**
+//!   (Knuth 5.3.4, arbitrary run lengths) — valid whenever the block's
+//!   hardware precondition (sorted input runs) holds, which device
+//!   validation proves for every sorted input;
+//! * `FilterN` blocks copy their inputs into *shadow slots*, run the
+//!   sorter network there, and keep only the comparator cone feeding the
+//!   tapped ranks (the [`super::prune`]-style output-cone idea applied
+//!   to a single block) — untapped positions keep their stale values
+//!   exactly like the scalar executor;
+//! * `Cas` blocks pass through unchanged.
+//!
+//! Instead of physically permuting values, the expansion tracks a
+//! position→slot renaming (`loc`): an odd-even merge leaves rank `t` in
+//! some input slot, and the device's `out[t]` position is simply
+//! re-pointed there. The schedule stays 100% CAS + copy.
+//!
+//! Execution is transposed: a tile holds [`LANES`] consecutive batch
+//! rows in value-major order (`tile[slot * LANES + lane]`), so every
+//! CAS is an elementwise branchless min/max over two contiguous
+//! [`LANES`]-wide chunks — the shape rustc autovectorizes for `u32`.
+//! A batch of `B` rows runs as `B / LANES` tiles plus a scalar
+//! [`CompiledPlan`] tail for the remainder; [`run_batch_sharded`]
+//! additionally splits the tiles across OS threads
+//! (`std::thread::scope`, no added dependencies), each shard writing a
+//! disjoint range of the output buffer.
+//!
+//! Equality contract: on **valid inputs** (each list sorted ascending —
+//! what the service admits) the lane executor is bit-exact with
+//! [`CompiledPlan::run_batch`]; `rust/tests/plan_differential.rs`
+//! enforces this for every device family, ragged sizes included, with
+//! batch sizes that are not multiples of [`LANES`]. Fast-mode
+//! garbage-in (unsorted runs feeding a `MergeS2`) produces *different*
+//! garbage than the scalar two-pointer merge, exactly as the physical
+//! S2MS would; Strict mode, medians and the validators therefore stay
+//! on [`CompiledPlan`].
+
+use super::exec::{ExecMode, PreconditionViolation};
+use super::plan::{append_rows, CompiledPlan, PlanOp, PlanScratch};
+
+/// Rows per tile. 16 × `u32` = 64 bytes: one AVX-512 register or two
+/// AVX2 registers per chunk — wide enough to keep the min/max stream
+/// vectorized, small enough that a tile of any characterized device
+/// stays in L1.
+pub const LANES: usize = 16;
+
+/// One step of the lane schedule. Slot indices address tile chunks
+/// (`slot * LANES`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum LaneOp {
+    /// Elementwise compare-exchange: per lane, `min → lo`, `max → hi`.
+    Cas { lo: u32, hi: u32 },
+    /// Chunk copy `dst ← src` (FilterN shadow-slot loads).
+    Copy { dst: u32, src: u32 },
+}
+
+/// Reusable lane-execution buffers: the transposed tile plus a scalar
+/// [`PlanScratch`] for the tail rows. Grows to the largest plan seen.
+#[derive(Debug, Default)]
+pub struct LaneScratch<T> {
+    tile: Vec<T>,
+    tail: PlanScratch<T>,
+}
+
+impl<T> LaneScratch<T> {
+    pub fn new() -> Self {
+        LaneScratch { tile: Vec::new(), tail: PlanScratch::new() }
+    }
+}
+
+/// A [`CompiledPlan`] expanded to a pure CAS/copy schedule over tile
+/// slots, executable [`LANES`] rows at a time in value-major layout.
+#[derive(Debug, Clone)]
+pub struct LanePlan {
+    name: String,
+    list_sizes: Vec<usize>,
+    /// Device flat-vector length (slots `0..n` are the live positions).
+    n: usize,
+    /// Tile height: `n` plus FilterN shadow slots.
+    slots: usize,
+    ops: Vec<LaneOp>,
+    /// Flattened input map, list-major (loads hit the identity renaming).
+    in_slot: Vec<u32>,
+    /// `out_slot[r]` = tile slot holding output rank `r` after all ops.
+    out_slot: Vec<u32>,
+    cas_count: usize,
+    copy_count: usize,
+}
+
+/// General odd-even merge (Batcher / Knuth 5.3.4, arbitrary run
+/// lengths) over slot lists `a` and `b`, each holding a sorted run in
+/// ascending rank order. Emits CAS steps in dependency order and
+/// returns the slots of the merged sequence in ascending rank order.
+fn emit_merge(a: &[u32], b: &[u32], ops: &mut Vec<LaneOp>) -> Vec<u32> {
+    if a.is_empty() {
+        return b.to_vec();
+    }
+    if b.is_empty() {
+        return a.to_vec();
+    }
+    if a.len() == 1 && b.len() == 1 {
+        ops.push(LaneOp::Cas { lo: a[0], hi: b[0] });
+        return vec![a[0], b[0]];
+    }
+    fn even(s: &[u32]) -> Vec<u32> {
+        s.iter().copied().step_by(2).collect()
+    }
+    fn odd(s: &[u32]) -> Vec<u32> {
+        s.iter().copied().skip(1).step_by(2).collect()
+    }
+    let e = emit_merge(&even(a), &even(b), ops);
+    let o = emit_merge(&odd(a), &odd(b), ops);
+    // Interleave by rank (e0, o0, e1, o1, …) and fix the single possible
+    // inversion per pair: rank 2i+1 = min(o_i, e_{i+1}), 2i+2 = max.
+    // |e| − |o| = (|a| mod 2) + (|b| mod 2) ∈ {0, 1, 2}; unpaired tail
+    // elements are already in place by the 0-1 argument.
+    let mut w = Vec::with_capacity(a.len() + b.len());
+    w.push(e[0]);
+    for (i, &oi) in o.iter().enumerate() {
+        if i + 1 < e.len() {
+            ops.push(LaneOp::Cas { lo: oi, hi: e[i + 1] });
+            w.push(oi);
+            w.push(e[i + 1]);
+        } else {
+            w.push(oi);
+        }
+    }
+    if e.len() > o.len() + 1 {
+        w.extend_from_slice(&e[o.len() + 1..]);
+    }
+    w
+}
+
+/// Odd-even merge sort over an arbitrary slot count: recursive halving,
+/// then [`emit_merge`]. Returns the slots in ascending rank order.
+fn emit_sorter(slots: &[u32], ops: &mut Vec<LaneOp>) -> Vec<u32> {
+    if slots.len() <= 1 {
+        return slots.to_vec();
+    }
+    let (lo, hi) = slots.split_at(slots.len() / 2);
+    let a = emit_sorter(lo, ops);
+    let b = emit_sorter(hi, ops);
+    emit_merge(&a, &b, ops)
+}
+
+impl LanePlan {
+    /// Expand a compiled plan into the CAS/copy lane schedule. Pruned
+    /// plans expand their pruned op stream (FilterN tap cones shrink the
+    /// emitted networks further).
+    pub fn compile(plan: &CompiledPlan) -> LanePlan {
+        let n = plan.n();
+        // Position → slot renaming; starts as the identity.
+        let mut loc: Vec<u32> = (0..n as u32).collect();
+        let mut slots = n;
+        let mut ops: Vec<LaneOp> = Vec::new();
+        for op in plan.iter_ops() {
+            match op {
+                PlanOp::Cas { lo, hi } => {
+                    ops.push(LaneOp::Cas { lo: loc[lo], hi: loc[hi] });
+                }
+                PlanOp::SortN { pos } => {
+                    let s: Vec<u32> = pos.iter().map(|&p| loc[p as usize]).collect();
+                    let w = emit_sorter(&s, &mut ops);
+                    for (i, &p) in pos.iter().enumerate() {
+                        loc[p as usize] = w[i];
+                    }
+                }
+                PlanOp::MergeS2 { up, dn, out } => {
+                    let su: Vec<u32> = up.iter().map(|&p| loc[p as usize]).collect();
+                    let sd: Vec<u32> = dn.iter().map(|&p| loc[p as usize]).collect();
+                    let w = emit_merge(&su, &sd, &mut ops);
+                    for (t, &p) in out.iter().enumerate() {
+                        loc[p as usize] = w[t];
+                    }
+                }
+                PlanOp::FilterN { pos, taps } => {
+                    // Sort in shadow slots so untapped positions keep
+                    // their (possibly stale) values, as in hardware.
+                    let sh: Vec<u32> = (slots as u32..(slots + pos.len()) as u32).collect();
+                    slots += pos.len();
+                    let mut net: Vec<LaneOp> = Vec::new();
+                    let w = emit_sorter(&sh, &mut net);
+                    // Output-cone pruning at block granularity: walk the
+                    // network backward keeping only comparators that feed
+                    // a tapped rank.
+                    let mut needed = vec![false; slots];
+                    for &t in taps {
+                        needed[w[t as usize] as usize] = true;
+                    }
+                    let mut kept: Vec<LaneOp> = Vec::with_capacity(net.len());
+                    for &cas in net.iter().rev() {
+                        let LaneOp::Cas { lo, hi } = cas else { unreachable!() };
+                        if needed[lo as usize] || needed[hi as usize] {
+                            needed[lo as usize] = true;
+                            needed[hi as usize] = true;
+                            kept.push(cas);
+                        }
+                    }
+                    for (i, &p) in pos.iter().enumerate() {
+                        if needed[sh[i] as usize] {
+                            ops.push(LaneOp::Copy { dst: sh[i], src: loc[p as usize] });
+                        }
+                    }
+                    ops.extend(kept.iter().rev());
+                    for &t in taps {
+                        loc[pos[t as usize] as usize] = w[t as usize];
+                    }
+                }
+            }
+        }
+        let cas_count = ops.iter().filter(|o| matches!(o, LaneOp::Cas { .. })).count();
+        let copy_count = ops.len() - cas_count;
+        LanePlan {
+            name: plan.name.clone(),
+            list_sizes: plan.list_sizes().to_vec(),
+            n,
+            slots,
+            ops,
+            in_slot: plan.in_pos().to_vec(),
+            out_slot: plan.out_pos().iter().map(|&p| loc[p as usize]).collect(),
+            cas_count,
+            copy_count,
+        }
+    }
+
+    /// Device flat-vector length.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Tile height in slots (`n()` + FilterN shadow slots).
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    /// Compare-exchange steps per tile.
+    pub fn cas_count(&self) -> usize {
+        self.cas_count
+    }
+
+    /// Chunk-copy steps per tile (FilterN shadow loads).
+    pub fn copy_count(&self) -> usize {
+        self.copy_count
+    }
+
+    /// Output width per row.
+    pub fn total_outputs(&self) -> usize {
+        self.out_slot.len()
+    }
+
+    pub fn list_sizes(&self) -> &[usize] {
+        &self.list_sizes
+    }
+
+    /// Panic unless `scalar` is the plan this lane plan was expanded
+    /// from (the tail rows run through it, so a shape-coincident plan of
+    /// a *different* device would silently give the tail different
+    /// semantics — the name pins the device, shape checks catch stale
+    /// rebuilds).
+    fn check_tail_plan(&self, scalar: &CompiledPlan) {
+        assert_eq!(
+            (scalar.name.as_str(), scalar.list_sizes(), scalar.total_outputs()),
+            (self.name.as_str(), self.list_sizes(), self.out_slot.len()),
+            "lane plan and scalar tail plan mismatch"
+        );
+    }
+
+    /// Execute one full tile: scatter rows `row0 .. row0+LANES` into the
+    /// value-major tile, run the CAS/copy schedule, gather the rows into
+    /// `dst` (row-major, `LANES * total_outputs()` long).
+    fn run_tile<T: Copy + Ord>(&self, lists: &[&[T]], row0: usize, tile: &mut [T], dst: &mut [T]) {
+        let mut ip = 0usize;
+        for (l, &s) in self.list_sizes.iter().enumerate() {
+            for lane in 0..LANES {
+                let src = &lists[l][(row0 + lane) * s..(row0 + lane + 1) * s];
+                for (i, &x) in src.iter().enumerate() {
+                    tile[self.in_slot[ip + i] as usize * LANES + lane] = x;
+                }
+            }
+            ip += s;
+        }
+        for op in &self.ops {
+            match *op {
+                LaneOp::Cas { lo, hi } => cas_lanes(tile, lo as usize, hi as usize),
+                LaneOp::Copy { dst, src } => {
+                    let s0 = src as usize * LANES;
+                    tile.copy_within(s0..s0 + LANES, dst as usize * LANES);
+                }
+            }
+        }
+        let outs = self.out_slot.len();
+        for lane in 0..LANES {
+            let row_dst = &mut dst[lane * outs..(lane + 1) * outs];
+            for (r, &sl) in self.out_slot.iter().enumerate() {
+                row_dst[r] = tile[sl as usize * LANES + lane];
+            }
+        }
+    }
+
+    /// Slice-level batch executor: `lists[l]` is row-major
+    /// `(batch, list_sizes[l])`, `dst` is `batch * total_outputs()` and
+    /// fully overwritten. Full tiles run transposed; the `batch % LANES`
+    /// tail runs through `scalar` ([`CompiledPlan::run_batch_into`],
+    /// Fast mode). Infallible on admitted (sorted) inputs.
+    pub fn run_batch_into<T: Copy + Ord + Default>(
+        &self,
+        scalar: &CompiledPlan,
+        lists: &[&[T]],
+        batch: usize,
+        scratch: &mut LaneScratch<T>,
+        dst: &mut [T],
+    ) -> Result<(), PreconditionViolation> {
+        self.check_tail_plan(scalar);
+        assert_eq!(lists.len(), self.list_sizes.len(), "{}: wrong list count", self.name);
+        for (l, &s) in self.list_sizes.iter().enumerate() {
+            assert_eq!(lists[l].len(), batch * s, "{}: list {l} flat length", self.name);
+        }
+        let outs = self.out_slot.len();
+        assert_eq!(dst.len(), batch * outs, "{}: output buffer length", self.name);
+        if scratch.tile.len() < self.slots * LANES {
+            scratch.tile.resize(self.slots * LANES, T::default());
+        }
+        let tiles = batch / LANES;
+        for t in 0..tiles {
+            self.run_tile(
+                lists,
+                t * LANES,
+                &mut scratch.tile,
+                &mut dst[t * LANES * outs..(t + 1) * LANES * outs],
+            );
+        }
+        let done = tiles * LANES;
+        if done < batch {
+            let tail: Vec<&[T]> =
+                lists.iter().zip(&self.list_sizes).map(|(l, &s)| &l[done * s..]).collect();
+            let tail_dst = &mut dst[done * outs..];
+            scalar
+                .run_batch_into(&tail, batch - done, ExecMode::Fast, &mut scratch.tail, tail_dst)
+                .map_err(|e| e.offset_row(done))?;
+        }
+        Ok(())
+    }
+
+    /// Vec-append convenience over [`Self::run_batch_into`] — the same
+    /// call shape as [`CompiledPlan::run_batch`].
+    pub fn run_batch<T: Copy + Ord + Default>(
+        &self,
+        scalar: &CompiledPlan,
+        lists: &[Vec<T>],
+        batch: usize,
+        scratch: &mut LaneScratch<T>,
+        out: &mut Vec<T>,
+    ) -> Result<(), PreconditionViolation> {
+        let slices: Vec<&[T]> = lists.iter().map(Vec::as_slice).collect();
+        append_rows(out, batch, self.out_slot.len(), |dst| {
+            self.run_batch_into(scalar, &slices, batch, scratch, dst)
+        })
+    }
+}
+
+/// Elementwise branchless compare-exchange of two [`LANES`]-wide tile
+/// chunks: per lane, `min → lo`, `max → hi`. Fixed-size array views give
+/// rustc a compile-time trip count (vectorizes to pminu/pmaxu for u32).
+#[inline]
+fn cas_lanes<T: Copy + Ord>(tile: &mut [T], lo: usize, hi: usize) {
+    debug_assert_ne!(lo, hi);
+    let (lo_off, hi_off) = (lo * LANES, hi * LANES);
+    let (x, y) = if lo_off < hi_off {
+        let (head, tail) = tile.split_at_mut(hi_off);
+        (&mut head[lo_off..lo_off + LANES], &mut tail[..LANES])
+    } else {
+        let (head, tail) = tile.split_at_mut(lo_off);
+        (&mut tail[..LANES], &mut head[hi_off..hi_off + LANES])
+    };
+    let x: &mut [T; LANES] = x.try_into().expect("lo chunk is LANES wide");
+    let y: &mut [T; LANES] = y.try_into().expect("hi chunk is LANES wide");
+    for (p, q) in x.iter_mut().zip(y.iter_mut()) {
+        let (a, b) = (*p, *q);
+        let swap = b < a;
+        *p = if swap { b } else { a };
+        *q = if swap { a } else { b };
+    }
+}
+
+/// Shard a batch across `threads` scoped OS threads: tile-aligned row
+/// ranges (the `batch % LANES` tail rows land in the last non-empty
+/// shard), one fresh [`LaneScratch`] per thread, disjoint output
+/// slices. `threads <= 1` degrades to the single-threaded executor.
+pub fn run_batch_sharded<T: Copy + Ord + Default + Send + Sync>(
+    lane: &LanePlan,
+    scalar: &CompiledPlan,
+    lists: &[Vec<T>],
+    batch: usize,
+    threads: usize,
+    out: &mut Vec<T>,
+) -> Result<(), PreconditionViolation> {
+    if threads <= 1 {
+        return lane.run_batch(scalar, lists, batch, &mut LaneScratch::new(), out);
+    }
+    let outs = lane.total_outputs();
+    let slices: Vec<&[T]> = lists.iter().map(Vec::as_slice).collect();
+    let tiles = batch / LANES;
+    // One shard per thread at most, at least one tile per shard; with no
+    // full tile at all, a single shard just runs the scalar tail.
+    let shards = if tiles == 0 { 1 } else { threads.min(tiles) };
+    let tiles_per = tiles.div_ceil(shards);
+    let mut ranges: Vec<(usize, usize)> = Vec::with_capacity(shards);
+    let mut row = 0usize;
+    for i in 0..shards {
+        let hi = if i == shards - 1 { batch } else { ((i + 1) * tiles_per * LANES).min(batch) };
+        if hi > row {
+            ranges.push((row, hi));
+            row = hi;
+        }
+    }
+    let slices_ref = &slices;
+    append_rows(out, batch, outs, |dst| {
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(ranges.len());
+            let mut rest = dst;
+            for &(lo, hi) in &ranges {
+                let (chunk, tail) = rest.split_at_mut((hi - lo) * outs);
+                rest = tail;
+                handles.push(s.spawn(move || -> Result<(), PreconditionViolation> {
+                    let shard: Vec<&[T]> = slices_ref
+                        .iter()
+                        .zip(lane.list_sizes())
+                        .map(|(l, &sz)| &l[lo * sz..hi * sz])
+                        .collect();
+                    lane.run_batch_into(scalar, &shard, hi - lo, &mut LaneScratch::new(), chunk)
+                        .map_err(|e| e.offset_row(lo))
+                }));
+            }
+            let mut first_err = None;
+            for h in handles {
+                if let Err(e) = h.join().expect("lane shard panicked") {
+                    first_err.get_or_insert(e);
+                }
+            }
+            match first_err {
+                Some(e) => Err(e),
+                None => Ok(()),
+            }
+        })
+    })
+}
+
+/// Shard-count policy for [`crate::coordinator::SoftwareBackend`]: one
+/// shard per core, but only when every shard gets at least two full
+/// tiles AND each shard carries enough values (`batch * row_values`) to
+/// amortize thread spawn (~tens of µs). Small serving batches (e.g.
+/// 256 × 64 values) stay single-threaded on purpose.
+pub fn auto_threads(batch: usize, row_values: usize) -> usize {
+    const MIN_VALUES_PER_SHARD: usize = 1 << 15;
+    let by_work = batch.saturating_mul(row_values) / MIN_VALUES_PER_SHARD;
+    let cap = by_work.min(forced_threads(batch));
+    if cap <= 1 {
+        return 1;
+    }
+    cap
+}
+
+/// Thread count the benches/figure harness uses to *force* sharding on
+/// a shape regardless of [`auto_threads`]' work floor (so the
+/// lanes+threads variant is measured even where the backend would stay
+/// inline): every core, capped so each shard still gets at least two
+/// full tiles.
+pub fn forced_threads(batch: usize) -> usize {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    cores.min((batch / (2 * LANES)).max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sortnet::loms::{loms_2way, loms_3way_median, loms_kway};
+    use crate::sortnet::mwms::mwms_3way;
+    use crate::sortnet::s2ms;
+    use crate::util::Rng;
+
+    fn flat_batch(rng: &mut Rng, sizes: &[usize], batch: usize, max: u32) -> Vec<Vec<u32>> {
+        sizes
+            .iter()
+            .map(|&s| {
+                let mut flat = Vec::with_capacity(batch * s);
+                for _ in 0..batch {
+                    flat.extend(rng.sorted_list(s, max));
+                }
+                flat
+            })
+            .collect()
+    }
+
+    fn scalar_outputs(plan: &CompiledPlan, lists: &[Vec<u32>], batch: usize) -> Vec<u32> {
+        let mut out = Vec::new();
+        plan.run_batch(lists, batch, ExecMode::Fast, &mut PlanScratch::new(), &mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn merge_network_is_correct_for_all_run_lengths() {
+        // Exhaustive sorted-0-1 check of the general odd-even merge: for
+        // every (a, b) up to 9×9 and every zero split, the emitted CAS
+        // schedule must leave the rank-order slots sorted.
+        for a in 0..=9usize {
+            for b in 0..=9usize {
+                if a + b == 0 {
+                    continue;
+                }
+                let slots: Vec<u32> = (0..(a + b) as u32).collect();
+                let mut ops = Vec::new();
+                let w = emit_merge(&slots[..a], &slots[a..], &mut ops);
+                assert_eq!(w.len(), a + b, "a={a} b={b}");
+                for za in 0..=a {
+                    for zb in 0..=b {
+                        let mut v: Vec<u32> = (0..a).map(|i| u32::from(i >= za)).collect();
+                        v.extend((0..b).map(|j| u32::from(j >= zb)));
+                        for op in &ops {
+                            let LaneOp::Cas { lo, hi } = *op else { unreachable!() };
+                            let (x, y) = (v[lo as usize], v[hi as usize]);
+                            v[lo as usize] = x.min(y);
+                            v[hi as usize] = x.max(y);
+                        }
+                        let got: Vec<u32> = w.iter().map(|&s| v[s as usize]).collect();
+                        assert!(
+                            got.windows(2).all(|p| p[0] <= p[1]),
+                            "a={a} b={b} za={za} zb={zb}: {got:?}"
+                        );
+                        assert_eq!(got.iter().filter(|&&x| x == 0).count(), za + zb);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sorter_network_sorts_all_01_inputs() {
+        for n in 1..=8usize {
+            let slots: Vec<u32> = (0..n as u32).collect();
+            let mut ops = Vec::new();
+            let w = emit_sorter(&slots, &mut ops);
+            assert_eq!(w.len(), n);
+            for pattern in 0..(1u32 << n) {
+                let mut v: Vec<u32> = (0..n).map(|i| (pattern >> i) & 1).collect();
+                for op in &ops {
+                    let LaneOp::Cas { lo, hi } = *op else { unreachable!() };
+                    let (x, y) = (v[lo as usize], v[hi as usize]);
+                    v[lo as usize] = x.min(y);
+                    v[hi as usize] = x.max(y);
+                }
+                let got: Vec<u32> = w.iter().map(|&s| v[s as usize]).collect();
+                assert!(got.windows(2).all(|p| p[0] <= p[1]), "n={n} pattern={pattern:b}");
+            }
+        }
+    }
+
+    #[test]
+    fn lane_plan_matches_scalar_on_random_batches() {
+        let mut rng = Rng::new(0x1A7E5);
+        for d in [
+            loms_2way(8, 8, 2),
+            loms_2way(7, 5, 3),
+            loms_kway(&[7, 7, 7]),
+            s2ms::s2ms(6, 6),
+            s2ms::s2ms(1, 9),
+            crate::sortnet::batcher::odd_even_merge(8),
+            mwms_3way(5),
+        ] {
+            let plan = CompiledPlan::compile(&d).unwrap();
+            let lane = LanePlan::compile(&plan);
+            assert_eq!(lane.total_outputs(), plan.total_outputs(), "{}", d.name);
+            for batch in [1usize, LANES - 1, LANES, 2 * LANES + 5] {
+                let lists = flat_batch(&mut rng, &d.list_sizes, batch, 10_000);
+                let want = scalar_outputs(&plan, &lists, batch);
+                let mut got = Vec::new();
+                lane.run_batch(&plan, &lists, batch, &mut LaneScratch::new(), &mut got)
+                    .unwrap();
+                assert_eq!(got, want, "{} batch={batch}", d.name);
+            }
+        }
+    }
+
+    #[test]
+    fn pruned_filter_blocks_expand_with_shadow_slots() {
+        // Pruned MWMS carries FilterN blocks; the lane expansion must add
+        // shadow slots and a strictly smaller network than the full sort.
+        let d = mwms_3way(5);
+        let pruned = CompiledPlan::compile_pruned(&d).unwrap();
+        assert!(pruned.removed_muxes() > 0);
+        let lane = LanePlan::compile(&pruned);
+        // Shadow slots appear exactly when the pruned plan carries
+        // FilterN blocks (partially-pruned sorters), and each shadow
+        // slot in a tap cone is fed by one copy.
+        assert_eq!(lane.slots() > lane.n(), lane.copy_count() > 0);
+        let unpruned_lane = LanePlan::compile(&CompiledPlan::compile(&d).unwrap());
+        assert!(
+            lane.cas_count() <= unpruned_lane.cas_count(),
+            "pruning must not grow the CAS schedule ({} vs {})",
+            lane.cas_count(),
+            unpruned_lane.cas_count()
+        );
+        let mut rng = Rng::new(77);
+        let batch = LANES + 3;
+        let lists = flat_batch(&mut rng, &d.list_sizes, batch, 500);
+        let want = scalar_outputs(&pruned, &lists, batch);
+        let mut got = Vec::new();
+        lane.run_batch(&pruned, &lists, batch, &mut LaneScratch::new(), &mut got).unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn native_filter_device_keeps_stale_positions() {
+        // loms_3way_median builds a FilterN natively (not via pruning):
+        // untapped outputs stay stale, and the scalar plan's full-merge
+        // output reflects that. The lane plan must agree exactly.
+        let d = loms_3way_median(5);
+        let plan = CompiledPlan::compile(&d).unwrap();
+        let lane = LanePlan::compile(&plan);
+        let mut rng = Rng::new(5);
+        let batch = 2 * LANES + 1;
+        let lists = flat_batch(&mut rng, &d.list_sizes, batch, 99);
+        let want = scalar_outputs(&plan, &lists, batch);
+        let mut got = Vec::new();
+        lane.run_batch(&plan, &lists, batch, &mut LaneScratch::new(), &mut got).unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn sharded_matches_single_thread_and_offsets_rows() {
+        let d = loms_2way(8, 8, 2);
+        let plan = CompiledPlan::compile_auto(&d).unwrap();
+        let lane = LanePlan::compile(&plan);
+        let mut rng = Rng::new(0x5AAD);
+        let batch = 5 * LANES + 11;
+        let lists = flat_batch(&mut rng, &d.list_sizes, batch, 1 << 20);
+        let want = scalar_outputs(&plan, &lists, batch);
+        for threads in [1usize, 2, 3, 8, 64] {
+            let mut got = Vec::new();
+            run_batch_sharded(&lane, &plan, &lists, batch, threads, &mut got).unwrap();
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn auto_threads_policy_bounds() {
+        // Too few tiles or too little work: stay single-threaded.
+        assert_eq!(auto_threads(LANES, 1 << 20), 1);
+        assert_eq!(auto_threads(256, 64), 1, "serving shape b256×64 stays inline");
+        // Huge batches may shard (bounded by core count, so only ≥ 1 is
+        // portable to assert).
+        assert!(auto_threads(1 << 16, 512) >= 1);
+        assert!(auto_threads(1 << 16, 512) <= std::thread::available_parallelism().unwrap().get());
+    }
+
+    #[test]
+    fn schedule_is_pure_cas_plus_filter_copies() {
+        // Families without FilterN lower to a copy-free pure CAS stream.
+        for d in [loms_2way(8, 8, 2), s2ms::s2ms(8, 8), loms_kway(&[3, 3, 3, 3])] {
+            let lane = LanePlan::compile(&CompiledPlan::compile(&d).unwrap());
+            assert_eq!(lane.copy_count(), 0, "{}", d.name);
+            assert!(lane.cas_count() > 0, "{}", d.name);
+            assert_eq!(lane.slots(), lane.n(), "{}", d.name);
+        }
+    }
+}

@@ -10,11 +10,14 @@
 //! * [`loms`] — List Offset Merge Sorters (the paper's contribution).
 //! * [`mwms`] — Multiway Merge Sorting Network baseline [4][5].
 //! * [`plan`] — compiled execution plans (flat batch-executable IR).
+//! * [`lanes`] — lane-parallel plans: pure-CAS expansion executed over
+//!   transposed batch tiles, plus multi-core batch sharding.
 //! * [`json`] — device (de)serialisation.
 
 pub mod batcher;
 pub mod exec;
 pub mod json;
+pub mod lanes;
 pub mod loms;
 pub mod mwms;
 pub mod network;
@@ -26,5 +29,6 @@ pub mod sorter;
 pub mod validate;
 
 pub use exec::{merge, ExecMode, ExecScratch};
+pub use lanes::{LanePlan, LaneScratch, LANES};
 pub use network::{Block, DeviceKind, MergeDevice, Stage};
 pub use plan::{CompiledPlan, PlanScratch};

@@ -22,9 +22,11 @@
 //!   one call, reusing a single row buffer across rows.
 //!
 //! Everything downstream — `exec::merge`/`median`, the validators, the
-//! software backend, the throughput benches — routes through this IR, so
-//! later optimisations (SIMD lanes, sharding, alternative backends) have
-//! a single stable target.
+//! software backend, the throughput benches — routes through this IR.
+//! It is also the lowering source for the lane-parallel tier
+//! ([`super::lanes`]): Fast-mode batches expand further into a pure
+//! compare-exchange schedule executed over transposed SIMD-friendly
+//! tiles, while Strict mode, medians and validation stay here.
 
 use super::exec::{ExecMode, PreconditionViolation};
 use super::network::{Block, MergeDevice};
@@ -43,6 +45,17 @@ enum OpKind {
     MergeS2,
     /// Partial sorter: arena holds `[pos(a) | tap ranks(b)]`.
     FilterN,
+}
+
+/// Borrowed view of one lowered op, resolved against the arena. The
+/// lane expander ([`super::lanes`]) walks these to re-express the plan
+/// as a pure compare-exchange schedule.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum PlanOp<'a> {
+    Cas { lo: usize, hi: usize },
+    SortN { pos: &'a [u32] },
+    MergeS2 { up: &'a [u32], dn: &'a [u32], out: &'a [u32] },
+    FilterN { pos: &'a [u32], taps: &'a [u32] },
 }
 
 /// One lowered block: a fixed-size record pointing into the index arena.
@@ -75,6 +88,25 @@ impl<T> PlanScratch<T> {
     pub fn new() -> Self {
         PlanScratch { v: Vec::new(), buf: Vec::new() }
     }
+}
+
+/// Append-executor plumbing shared by every batch entry point (scalar,
+/// lane, sharded): grow `out` by `rows * outs` default values, run `f`
+/// over the new region, and roll the growth back on error so a poisoned
+/// batch appends nothing.
+pub(crate) fn append_rows<T: Copy + Default, E>(
+    out: &mut Vec<T>,
+    rows: usize,
+    outs: usize,
+    f: impl FnOnce(&mut [T]) -> Result<(), E>,
+) -> Result<(), E> {
+    let start = out.len();
+    out.resize(start + rows * outs, T::default());
+    let res = f(&mut out[start..]);
+    if res.is_err() {
+        out.truncate(start);
+    }
+    res
 }
 
 /// Sorted-0-1 pattern budget under which [`CompiledPlan::compile_auto`]
@@ -243,9 +275,46 @@ impl CompiledPlan {
         self.removed_muxes
     }
 
+    /// Walk the lowered ops in execution order (stage-major), with arena
+    /// slices resolved. Consumed by the lane expander.
+    pub(crate) fn iter_ops(&self) -> impl Iterator<Item = PlanOp<'_>> + '_ {
+        self.ops.iter().map(|op| {
+            let off = op.off as usize;
+            let (a, b) = (op.a as usize, op.b as usize);
+            match op.kind {
+                OpKind::Cas => PlanOp::Cas {
+                    lo: self.arena[off] as usize,
+                    hi: self.arena[off + 1] as usize,
+                },
+                OpKind::SortN => PlanOp::SortN { pos: &self.arena[off..off + a] },
+                OpKind::MergeS2 => PlanOp::MergeS2 {
+                    up: &self.arena[off..off + a],
+                    dn: &self.arena[off + a..off + a + b],
+                    out: &self.arena[off + a + b..off + 2 * (a + b)],
+                },
+                OpKind::FilterN => PlanOp::FilterN {
+                    pos: &self.arena[off..off + a],
+                    taps: &self.arena[off + a..off + a + b],
+                },
+            }
+        })
+    }
+
+    /// Flattened input map (list-major, ascending value order).
+    pub(crate) fn in_pos(&self) -> &[u32] {
+        &self.in_pos
+    }
+
+    /// Flat position of each output rank.
+    pub(crate) fn out_pos(&self) -> &[u32] {
+        &self.out_pos
+    }
+
     /// Execute ops `[0, end)` over the flat vector. The hot loop: every
-    /// index comes from the contiguous arena, `buf` never reallocates
-    /// once grown to `max_width`.
+    /// index comes from the contiguous arena, and `buf` never
+    /// reallocates once warmed to `max_width` (callers warm once per
+    /// entry point — see [`Self::warm_scratch`] — keeping the
+    /// clear/reserve pair off the per-row path).
     fn exec_ops<T: Copy + Ord>(
         &self,
         v: &mut [T],
@@ -254,17 +323,18 @@ impl CompiledPlan {
         end: usize,
     ) -> Result<(), PreconditionViolation> {
         debug_assert_eq!(v.len(), self.n);
-        buf.clear();
-        buf.reserve(self.max_width);
         for op in &self.ops[..end] {
             let off = op.off as usize;
             match op.kind {
                 OpKind::Cas => {
+                    // Branchless min/max — same select shape as the lane
+                    // executor, so both paths cost the same per value.
                     let lo = self.arena[off] as usize;
                     let hi = self.arena[off + 1] as usize;
-                    if v[lo] > v[hi] {
-                        v.swap(lo, hi);
-                    }
+                    let (a, b) = (v[lo], v[hi]);
+                    let swap = b < a;
+                    v[lo] = if swap { b } else { a };
+                    v[hi] = if swap { a } else { b };
                 }
                 OpKind::SortN => {
                     let pos = &self.arena[off..off + op.a as usize];
@@ -286,6 +356,7 @@ impl CompiledPlan {
                                 return Err(PreconditionViolation {
                                     stage: op.stage as usize,
                                     block: op.block as usize,
+                                    row: None,
                                     detail: "S2MS input run not sorted".into(),
                                 });
                             }
@@ -334,6 +405,14 @@ impl CompiledPlan {
         self.stage_ops[s] as usize
     }
 
+    /// Warm a scratch's staging buffer to this plan's widest block —
+    /// called once per public entry point so [`Self::exec_ops`] never
+    /// pays the clear/reserve pair per row.
+    fn warm_scratch<T>(&self, buf: &mut Vec<T>) {
+        buf.clear();
+        buf.reserve(self.max_width);
+    }
+
     /// Execute over a loaded flat vector — drop-in for
     /// [`super::exec::ExecScratch::run`]. Allocates nothing once
     /// `scratch` has warmed to this plan's widest block.
@@ -344,6 +423,7 @@ impl CompiledPlan {
         stop_after: Option<usize>,
         scratch: &mut PlanScratch<T>,
     ) -> Result<(), PreconditionViolation> {
+        self.warm_scratch(&mut scratch.buf);
         self.exec_ops(v, &mut scratch.buf, mode, self.op_end(stop_after))
     }
 
@@ -372,6 +452,7 @@ impl CompiledPlan {
         scratch: &mut PlanScratch<T>,
     ) -> Result<Vec<T>, PreconditionViolation> {
         let PlanScratch { v, buf } = scratch;
+        self.warm_scratch(buf);
         self.load_row(lists, v);
         self.exec_ops(v, buf, mode, self.ops.len())?;
         Ok(self.out_pos.iter().map(|&p| v[p as usize]).collect())
@@ -389,6 +470,7 @@ impl CompiledPlan {
             return Ok(None);
         };
         let PlanScratch { v, buf } = scratch;
+        self.warm_scratch(buf);
         self.load_row(lists, v);
         self.exec_ops(v, buf, mode, self.op_end(Some(stop)))?;
         Ok(Some(v[pos]))
@@ -397,9 +479,9 @@ impl CompiledPlan {
     /// Execute a whole row-major batch — the exact shape
     /// [`crate::coordinator::Backend::execute`] receives: `lists[l]` is
     /// `(batch, list_sizes[l])` flattened, the merged rows are appended
-    /// to `out` as `(batch, total_outputs)`. One flat row buffer is
-    /// reused across rows; nothing is allocated per row once `out` and
-    /// `scratch` are warm.
+    /// to `out` as `(batch, total_outputs)`. On a strict-mode error
+    /// nothing is appended. One flat row buffer is reused across rows;
+    /// nothing is allocated per row once `out` and `scratch` are warm.
     pub fn run_batch<T: Copy + Ord + Default>(
         &self,
         lists: &[Vec<T>],
@@ -408,14 +490,37 @@ impl CompiledPlan {
         scratch: &mut PlanScratch<T>,
         out: &mut Vec<T>,
     ) -> Result<(), PreconditionViolation> {
+        let slices: Vec<&[T]> = lists.iter().map(Vec::as_slice).collect();
+        append_rows(out, batch, self.out_pos.len(), |dst| {
+            self.run_batch_into(&slices, batch, mode, scratch, dst)
+        })
+    }
+
+    /// Slice-level batch executor behind [`Self::run_batch`]: rows are
+    /// read from `lists[l]` (row-major `(batch, list_sizes[l])`) and
+    /// written to `dst` (`batch * total_outputs()`, fully overwritten).
+    /// The lane executor's scalar tail and the sharded backend call this
+    /// directly on sub-ranges. Strict-mode errors carry the failing
+    /// [`PreconditionViolation::row`], so a poisoned batch names the
+    /// request that tripped it.
+    pub fn run_batch_into<T: Copy + Ord + Default>(
+        &self,
+        lists: &[&[T]],
+        batch: usize,
+        mode: ExecMode,
+        scratch: &mut PlanScratch<T>,
+        dst: &mut [T],
+    ) -> Result<(), PreconditionViolation> {
         assert_eq!(lists.len(), self.list_sizes.len(), "{}: wrong list count", self.name);
         for (l, &s) in self.list_sizes.iter().enumerate() {
             assert_eq!(lists[l].len(), batch * s, "{}: list {l} flat length", self.name);
         }
+        let outs = self.out_pos.len();
+        assert_eq!(dst.len(), batch * outs, "{}: output buffer length", self.name);
         let PlanScratch { v, buf } = scratch;
         v.clear();
         v.resize(self.n, T::default());
-        out.reserve(batch * self.out_pos.len());
+        self.warm_scratch(buf);
         let end = self.ops.len();
         for row in 0..batch {
             let mut ip = 0usize;
@@ -426,8 +531,11 @@ impl CompiledPlan {
                 }
                 ip += s;
             }
-            self.exec_ops(v, buf, mode, end)?;
-            out.extend(self.out_pos.iter().map(|&p| v[p as usize]));
+            self.exec_ops(v, buf, mode, end).map_err(|e| e.with_row(row))?;
+            let row_dst = &mut dst[row * outs..(row + 1) * outs];
+            for (t, &p) in self.out_pos.iter().enumerate() {
+                row_dst[t] = v[p as usize];
+            }
         }
         Ok(())
     }
@@ -572,6 +680,29 @@ mod tests {
         // Fast mode tolerates garbage-in, like the hardware.
         plan.run_row(&mut vec![7u32, 2, 1, 9], ExecMode::Fast, None, &mut PlanScratch::new())
             .unwrap();
+    }
+
+    #[test]
+    fn strict_batch_error_carries_failing_row() {
+        // Rows 0 and 1 are valid; row 2's UP run descends, so the batch
+        // must be rejected with the row index in the violation context.
+        let d = s2ms::s2ms(2, 2);
+        let plan = CompiledPlan::compile(&d).unwrap();
+        let lists = vec![vec![1u32, 2, 3, 4, 9, 1], vec![5, 6, 7, 8, 2, 3]];
+        let mut out = Vec::new();
+        let err = plan
+            .run_batch(&lists, 3, ExecMode::Strict, &mut PlanScratch::new(), &mut out)
+            .unwrap_err();
+        assert_eq!(err.row, Some(2));
+        assert!(err.to_string().contains("row 2"), "{err}");
+        // A poisoned batch appends nothing.
+        assert!(out.is_empty());
+        // Single-row entry points leave the row context unset.
+        let mut v = vec![9u32, 1, 2, 3];
+        let e = plan
+            .run_row(&mut v, ExecMode::Strict, None, &mut PlanScratch::new())
+            .unwrap_err();
+        assert_eq!(e.row, None);
     }
 
     #[test]

@@ -4,9 +4,16 @@
 //! and exhaustive sorted-0-1 patterns, in both `Fast` and `Strict`
 //! modes. The full flat vector is compared (not just the output ranks),
 //! so every intermediate mux write must agree bit-for-bit.
+//!
+//! A second tier covers the lane executor (`sortnet::lanes`): every
+//! family's [`LanePlan`] — pruned and unpruned — must be bit-exact with
+//! `CompiledPlan::run_batch` on whole batches, including batch sizes
+//! that are *not* multiples of `LANES` (the scalar-tail path) and
+//! multi-thread sharding.
 
 use loms::sortnet::exec::{ExecMode, ExecScratch};
-use loms::sortnet::loms::{loms_2way, loms_kway};
+use loms::sortnet::lanes::{self, LanePlan, LaneScratch, LANES};
+use loms::sortnet::loms::{loms_2way, loms_3way_median, loms_kway};
 use loms::sortnet::mwms::mwms_3way;
 use loms::sortnet::plan::{CompiledPlan, PlanScratch};
 use loms::sortnet::{batcher, s2ms, MergeDevice};
@@ -128,6 +135,134 @@ fn pruned_plans_match_unpruned_outputs() {
             let a = plain.merge_row(&lists, ExecMode::Fast, &mut s1).unwrap();
             let b = pruned.merge_row(&lists, ExecMode::Strict, &mut s2).unwrap();
             assert_eq!(a, b, "{}", d.name);
+        }
+    }
+}
+
+/// Row-major flat batch of sorted random lists for a device.
+fn flat_batch(rng: &mut Rng, d: &MergeDevice, batch: usize) -> Vec<Vec<u32>> {
+    d.list_sizes
+        .iter()
+        .map(|&s| {
+            let mut flat = Vec::with_capacity(batch * s);
+            for _ in 0..batch {
+                flat.extend(rng.sorted_list(s, 1 << 16));
+            }
+            flat
+        })
+        .collect()
+}
+
+/// The scalar reference: `CompiledPlan::run_batch` in Fast mode.
+fn scalar_batch(plan: &CompiledPlan, lists: &[Vec<u32>], batch: usize) -> Vec<u32> {
+    let mut out = Vec::new();
+    plan.run_batch(lists, batch, ExecMode::Fast, &mut PlanScratch::new(), &mut out)
+        .unwrap_or_else(|e| panic!("{}: {e}", plan.name));
+    out
+}
+
+/// Scalar plans to test a device's lane expansion against: always the
+/// plain lowering, plus the pruned one when the auto policy prunes
+/// (exercising FilterN shadow slots and tap cones).
+fn plans_for(d: &MergeDevice) -> Vec<CompiledPlan> {
+    let mut plans = vec![CompiledPlan::compile(d).unwrap_or_else(|e| panic!("{e}"))];
+    let auto = CompiledPlan::compile_auto(d).unwrap_or_else(|e| panic!("{e}"));
+    if auto.is_pruned() {
+        plans.push(auto);
+    }
+    plans
+}
+
+#[test]
+fn lane_executor_bit_exact_with_plan_run_batch() {
+    // Every family, ragged sizes included; batch sizes straddle tile
+    // boundaries so both the transposed path and the scalar tail run
+    // (batch < LANES → tail only; multiples of LANES → tiles only).
+    let mut rng = Rng::new(0x1A5E5);
+    let mut devices = family_devices();
+    devices.push(loms_3way_median(5)); // native FilterN (stale untapped positions)
+    for d in devices {
+        for plan in plans_for(&d) {
+            let lane = LanePlan::compile(&plan);
+            assert_eq!(lane.total_outputs(), plan.total_outputs(), "{}", d.name);
+            assert_eq!(lane.list_sizes(), plan.list_sizes(), "{}", d.name);
+            for batch in [1usize, LANES - 1, LANES, LANES + 3, 2 * LANES, 3 * LANES + 7] {
+                let lists = flat_batch(&mut rng, &d, batch);
+                let want = scalar_batch(&plan, &lists, batch);
+                let mut got = Vec::new();
+                lane.run_batch(&plan, &lists, batch, &mut LaneScratch::new(), &mut got)
+                    .unwrap_or_else(|e| panic!("{}: {e}", d.name));
+                assert_eq!(
+                    got,
+                    want,
+                    "{} pruned={} batch={batch}",
+                    d.name,
+                    plan.is_pruned()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn lane_executor_matches_on_all_sorted01_patterns_as_one_batch() {
+    // Exhaustive: every sorted-0-1 pattern of every family, packed into
+    // a single batch (whose size is in general NOT a multiple of LANES —
+    // the tail rows get exhaustive coverage too).
+    for d in family_devices() {
+        for plan in plans_for(&d) {
+            let lane = LanePlan::compile(&plan);
+            let sizes = d.list_sizes.clone();
+            let mut rows: Vec<Vec<Vec<u32>>> = Vec::new();
+            let mut zeros = vec![0usize; sizes.len()];
+            'patterns: loop {
+                rows.push(
+                    sizes
+                        .iter()
+                        .zip(&zeros)
+                        .map(|(&s, &z)| (0..s).map(|i| u32::from(i >= z)).collect())
+                        .collect(),
+                );
+                let mut l = 0;
+                loop {
+                    if l == sizes.len() {
+                        break 'patterns;
+                    }
+                    zeros[l] += 1;
+                    if zeros[l] <= sizes[l] {
+                        break;
+                    }
+                    zeros[l] = 0;
+                    l += 1;
+                }
+            }
+            let batch = rows.len();
+            let lists: Vec<Vec<u32>> = (0..sizes.len())
+                .map(|l| rows.iter().flat_map(|r| r[l].iter().copied()).collect())
+                .collect();
+            let want = scalar_batch(&plan, &lists, batch);
+            let mut got = Vec::new();
+            lane.run_batch(&plan, &lists, batch, &mut LaneScratch::new(), &mut got)
+                .unwrap_or_else(|e| panic!("{}: {e}", d.name));
+            assert_eq!(got, want, "{} pruned={} ({batch} patterns)", d.name, plan.is_pruned());
+        }
+    }
+}
+
+#[test]
+fn sharded_lane_execution_matches_scalar_for_any_thread_count() {
+    let mut rng = Rng::new(0xCAFE);
+    for d in [loms_2way(8, 8, 2), loms_2way(7, 5, 3), loms_kway(&[7, 7, 7])] {
+        let plan = CompiledPlan::compile_auto(&d).unwrap();
+        let lane = LanePlan::compile(&plan);
+        let batch = 7 * LANES + 9; // several tiles + a tail in the last shard
+        let lists = flat_batch(&mut rng, &d, batch);
+        let want = scalar_batch(&plan, &lists, batch);
+        for threads in [1usize, 2, 3, 5, 16] {
+            let mut got = Vec::new();
+            lanes::run_batch_sharded(&lane, &plan, &lists, batch, threads, &mut got)
+                .unwrap_or_else(|e| panic!("{}: {e}", d.name));
+            assert_eq!(got, want, "{} threads={threads}", d.name);
         }
     }
 }
