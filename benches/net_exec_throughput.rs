@@ -116,6 +116,29 @@ fn main() {
             std::hint::black_box(&out);
         });
         println!("{}   ({:.2}x vs interp)", sharded.row(), per_row.mean_ns / sharded.mean_ns);
+
+        // Tile-direct view path — the serving executor's call shape
+        // (ragged per-request views in, per-row response buffers out).
+        // Exact-shape rows here, so any delta vs [lanes] is pure data
+        // path: scatter-from-views + per-row gather instead of flat
+        // row-major input and a whole-batch output vector.
+        let reqs: Vec<Vec<Vec<u32>>> = (0..batch)
+            .map(|row| {
+                sizes
+                    .iter()
+                    .enumerate()
+                    .map(|(l, &s)| lists[l][row * s..(row + 1) * s].to_vec())
+                    .collect()
+            })
+            .collect();
+        let rows: Vec<&[Vec<u32>]> = reqs.iter().map(|r| r.as_slice()).collect();
+        let mut merged: Vec<Vec<u32>> = (0..batch).map(|_| vec![0u32; total]).collect();
+        let viewed = timing::bench(&format!("{tag} [lanes view-direct]"), || {
+            let mut outs: Vec<&mut [u32]> = merged.iter_mut().map(|v| v.as_mut_slice()).collect();
+            lane.run_view_batch_into(&plan, &rows, u32::MAX, &mut ls, &mut outs).unwrap();
+            std::hint::black_box(&merged);
+        });
+        println!("{}   ({:.2}x vs interp)", viewed.row(), per_row.mean_ns / viewed.mean_ns);
         println!(
             "{tag}: plan {:.2}x | lanes {:.2}x | lanes+{}thr {:.2}x vs per-row interpreter \
              ({} CAS + {} copy steps/tile, {} slots, pruned={}, auto_threads would use {})",

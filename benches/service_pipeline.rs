@@ -1,0 +1,198 @@
+//! End-to-end service benchmark: the perf trajectory of the serving
+//! data path, emitted as `BENCH_service.json` (requests/s, p50/p99
+//! latency, payload copies per batch).
+//!
+//! Three variants of the same ragged 32+32 workload against the
+//! `loms2_up32_dn32_b256` software artifact:
+//!
+//! 1. `old_assemble_then_execute` — the pre-tile-direct data path:
+//!    request lists → padded list-major/row-major assembly → row-major
+//!    lane batch (tile scatter + whole-batch output vector) →
+//!    per-response `to_vec` — four payload copies per batch.
+//! 2. `tile_direct` — [`Backend::execute_direct`]: request slices →
+//!    transposed lane tile → per-response buffers — two copies.
+//! 3. `tile_direct_pipelined` — the full [`MergeService`] round trip:
+//!    the tile-direct executor overlapped with dynamic batching on the
+//!    engine thread (depth-1 pipeline), latency percentiles from the
+//!    service's own histogram.
+//!
+//! For the two backend-level variants, each request's latency is its
+//! batch's service time, so percentiles are taken over per-batch
+//! durations. CI compile-checks this harness via `cargo bench
+//! --no-run`; run `cargo bench --bench service_pipeline` to refresh the
+//! JSON.
+
+use loms::coordinator::{Backend, MergeService, ServiceConfig, SoftwareBackend};
+use loms::runtime::ArtifactMeta;
+use loms::util::Rng;
+use std::time::Instant;
+
+const ARTIFACT: &str = "loms2_up32_dn32_b256";
+
+struct Variant {
+    name: &'static str,
+    requests_per_s: f64,
+    p50_latency_us: f64,
+    p99_latency_us: f64,
+    copies_per_batch: usize,
+}
+
+fn percentile(sorted_us: &[f64], q: f64) -> f64 {
+    if sorted_us.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_us.len() as f64 * q).ceil() as usize).saturating_sub(1);
+    sorted_us[idx.min(sorted_us.len() - 1)]
+}
+
+/// Ragged request batches for the artifact shape.
+fn workload(rng: &mut Rng, meta: &ArtifactMeta, batches: usize) -> Vec<Vec<Vec<Vec<u32>>>> {
+    (0..batches)
+        .map(|_| {
+            (0..meta.batch)
+                .map(|_| {
+                    meta.list_sizes
+                        .iter()
+                        .map(|&cap| {
+                            let len = rng.range(1, cap + 1);
+                            rng.sorted_list(len, 1 << 22)
+                        })
+                        .collect()
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn batch_percentiles(mut durations_us: Vec<f64>) -> (f64, f64) {
+    durations_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (percentile(&durations_us, 0.50), percentile(&durations_us, 0.99))
+}
+
+fn main() {
+    let batches: usize = std::env::var("BENCH_BATCHES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(40);
+    let mut rng = Rng::new(0xB5EC);
+    let mut backend = SoftwareBackend::default_set();
+    let meta = backend.artifacts().into_iter().find(|m| &*m.name == ARTIFACT).unwrap();
+    let reqs = workload(&mut rng, &meta, batches);
+    let n_requests = batches * meta.batch;
+
+    // Warm the plan + lane-plan caches outside the timed region.
+    {
+        let rows: Vec<&[Vec<u32>]> = reqs[0].iter().map(|r| r.as_slice()).collect();
+        let mut merged: Vec<Vec<u32>> =
+            reqs[0].iter().map(|r| vec![0u32; r.iter().map(Vec::len).sum()]).collect();
+        let mut outs: Vec<&mut [u32]> = merged.iter_mut().map(|v| v.as_mut_slice()).collect();
+        backend.execute_direct(ARTIFACT, &rows, &mut outs).unwrap();
+    }
+
+    // Variant 1: assemble-then-execute (the old four-copy data path,
+    // via the shared reference implementation on the backend).
+    let mut durations = Vec::with_capacity(batches);
+    let t_old = Instant::now();
+    for batch_reqs in &reqs {
+        let t0 = Instant::now();
+        let responses = backend.execute_padded_reference(ARTIFACT, batch_reqs).unwrap();
+        std::hint::black_box(&responses);
+        durations.push(t0.elapsed().as_nanos() as f64 / 1_000.0);
+    }
+    let old_total = t_old.elapsed();
+    let (old_p50, old_p99) = batch_percentiles(durations);
+
+    // Variant 2: tile-direct (two copies, no padding rows).
+    let mut durations = Vec::with_capacity(batches);
+    let t_direct = Instant::now();
+    for batch_reqs in &reqs {
+        let t0 = Instant::now();
+        let rows: Vec<&[Vec<u32>]> = batch_reqs.iter().map(|r| r.as_slice()).collect();
+        let mut merged: Vec<Vec<u32>> = batch_reqs
+            .iter()
+            .map(|r| vec![0u32; r.iter().map(Vec::len).sum()])
+            .collect();
+        let mut outs: Vec<&mut [u32]> = merged.iter_mut().map(|v| v.as_mut_slice()).collect();
+        backend.execute_direct(ARTIFACT, &rows, &mut outs).unwrap();
+        std::hint::black_box(&merged);
+        durations.push(t0.elapsed().as_nanos() as f64 / 1_000.0);
+    }
+    let direct_total = t_direct.elapsed();
+    let (direct_p50, direct_p99) = batch_percentiles(durations);
+
+    // Variant 3: the full pipelined service round trip.
+    let svc = MergeService::start(|| Ok(SoftwareBackend::default_set()), ServiceConfig::default())
+        .unwrap();
+    // Warm the service-side plan caches off the clock.
+    svc.merge_blocking(vec![vec![1, 2], vec![3, 4]]).unwrap();
+    // Variant 3 is the last user of the workload, so the requests are
+    // moved into `submit` — no payload clone inside the timed region
+    // (variants 1–2 only borrow `reqs`).
+    let t_svc = Instant::now();
+    let mut rxs = Vec::with_capacity(n_requests);
+    for batch_reqs in reqs {
+        for r in batch_reqs {
+            rxs.push(svc.submit(r));
+        }
+    }
+    for rx in rxs {
+        rx.recv().expect("service response");
+    }
+    let svc_total = t_svc.elapsed();
+    let snap = svc.metrics().snapshot();
+    svc.shutdown();
+
+    let variants = [
+        Variant {
+            name: "old_assemble_then_execute",
+            requests_per_s: n_requests as f64 / old_total.as_secs_f64(),
+            p50_latency_us: old_p50,
+            p99_latency_us: old_p99,
+            copies_per_batch: 4,
+        },
+        Variant {
+            name: "tile_direct",
+            requests_per_s: n_requests as f64 / direct_total.as_secs_f64(),
+            p50_latency_us: direct_p50,
+            p99_latency_us: direct_p99,
+            copies_per_batch: 2,
+        },
+        Variant {
+            name: "tile_direct_pipelined",
+            requests_per_s: n_requests as f64 / svc_total.as_secs_f64(),
+            p50_latency_us: snap.p50_latency_us,
+            p99_latency_us: snap.p99_latency_us,
+            copies_per_batch: 2,
+        },
+    ];
+    for v in &variants {
+        println!(
+            "{:<28} {:>12.0} req/s   p50 {:>9.1}µs   p99 {:>9.1}µs   {} copies/batch",
+            v.name, v.requests_per_s, v.p50_latency_us, v.p99_latency_us, v.copies_per_batch
+        );
+    }
+    println!(
+        "service stages/batch: queue-wait={:.0}µs assemble={:.1}µs execute={:.1}µs respond={:.1}µs",
+        snap.queue_wait_us_mean, snap.assemble_us_mean, snap.execute_us_mean, snap.respond_us_mean
+    );
+
+    let rows: Vec<String> = variants
+        .iter()
+        .map(|v| {
+            format!(
+                "    {{\"name\": \"{}\", \"requests_per_s\": {:.0}, \"p50_latency_us\": {:.1}, \
+                 \"p99_latency_us\": {:.1}, \"copies_per_batch\": {}}}",
+                v.name, v.requests_per_s, v.p50_latency_us, v.p99_latency_us, v.copies_per_batch
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"service_pipeline\",\n  \"artifact\": \"{ARTIFACT}\",\n  \
+         \"batch\": {},\n  \"requests\": {},\n  \"variants\": [\n{}\n  ]\n}}\n",
+        meta.batch,
+        n_requests,
+        rows.join(",\n")
+    );
+    std::fs::write("BENCH_service.json", &json).expect("write BENCH_service.json");
+    println!("wrote BENCH_service.json");
+}

@@ -6,6 +6,7 @@
 //!   devices (used when artifacts are absent, for unroutable shapes, and
 //!   as the differential oracle in tests).
 
+use super::router::PAD;
 use crate::runtime::{ArtifactMeta, Runtime};
 use crate::sortnet::lanes::{self, LanePlan, LaneScratch};
 use crate::sortnet::network::MergeDevice;
@@ -13,30 +14,88 @@ use crate::sortnet::plan::CompiledPlan;
 use crate::sortnet::{loms, s2ms};
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Accounting for one executed batch.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BatchRun {
+    /// Padding rows the backend actually executed alongside the real
+    /// ones (the tile-direct software path executes none; PJRT pads to
+    /// the compiled batch shape).
+    pub padded_rows: usize,
+}
 
 /// A batch executor over a fixed artifact set.
 ///
 /// Not `Send`: PJRT handles are thread-confined (`Rc` internally), so
-/// the service constructs its backend *inside* the engine thread via a
-/// factory — see [`super::service::MergeService::start`].
+/// the service constructs its backend *inside* the executor thread via
+/// a factory — see [`super::service::MergeService::start`].
 pub trait Backend {
     /// The artifact shapes this backend serves.
     fn artifacts(&self) -> Vec<ArtifactMeta>;
-    /// Execute one full batch for artifact `name`. `lists[l]` is
-    /// row-major `(batch, list_sizes[l])`; returns `(batch, total)`.
-    fn execute(&mut self, name: &str, lists: &[Vec<u32>]) -> Result<Vec<u32>>;
+    /// Execute one batch for artifact `name` **straight between request
+    /// and response buffers** (the two-copy serving contract). `rows[r]`
+    /// is request `r`'s un-padded lists (each sorted ascending, at most
+    /// `list_sizes[l]` long, at most `batch` rows); `outs[r]` is the
+    /// caller-provided destination for row `r`'s merged prefix
+    /// (`outs[r].len()` ≤ `total`, normally the request's real output
+    /// width — `PAD` sentinels sort to the tail). Rows beyond
+    /// `rows.len()` are implicit padding the backend supplies if its
+    /// execution shape demands it.
+    fn execute_direct(
+        &mut self,
+        name: &str,
+        rows: &[&[Vec<u32>]],
+        outs: &mut [&mut [u32]],
+    ) -> Result<BatchRun>;
     /// Backend label for metrics.
     fn label(&self) -> &'static str;
+}
+
+/// Pad each ragged request view to the artifact shape and flatten into
+/// reusable list-major row-major buffers (`dst[l]` is cleared and
+/// refilled, never shrunk — steady-state assembly allocates nothing).
+/// The one shared implementation of the pad-and-flatten contract: the
+/// PJRT batch path and the assemble-then-execute reference both call
+/// it.
+fn assemble_padded_lists(
+    name: &str,
+    sizes: &[usize],
+    batch: usize,
+    rows: &[&[Vec<u32>]],
+    dst: &mut Vec<Vec<u32>>,
+) -> Result<()> {
+    if dst.len() < sizes.len() {
+        dst.resize_with(sizes.len(), Vec::new);
+    }
+    for (l, &cap) in sizes.iter().enumerate() {
+        let flat = &mut dst[l];
+        flat.clear();
+        flat.reserve(batch * cap);
+        for (r, row) in rows.iter().enumerate() {
+            anyhow::ensure!(row.len() == sizes.len(), "{name}: row {r} list count");
+            anyhow::ensure!(row[l].len() <= cap, "{name}: row {r} list {l} exceeds slot");
+            flat.extend_from_slice(&row[l]);
+            flat.resize(flat.len() + (cap - row[l].len()), PAD);
+        }
+        flat.resize(batch * cap, PAD);
+    }
+    Ok(())
 }
 
 /// PJRT-backed execution of `artifacts/*.hlo.txt`.
 pub struct PjrtBackend {
     runtime: Runtime,
+    /// Reusable padded list-major assembly buffers — the compiled HLO
+    /// consumes fixed row-major shapes, so the request view is
+    /// assembled per batch, but into the same buffers every time
+    /// (§Perf: no per-batch reallocation on the production path).
+    assembly: Vec<Vec<u32>>,
 }
 
 impl PjrtBackend {
     pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Self> {
-        Ok(PjrtBackend { runtime: Runtime::load(dir)? })
+        Ok(PjrtBackend { runtime: Runtime::load(dir)?, assembly: Vec::new() })
     }
 
     pub fn runtime(&self) -> &Runtime {
@@ -49,8 +108,23 @@ impl Backend for PjrtBackend {
         self.runtime.manifest.artifacts.clone()
     }
 
-    fn execute(&mut self, name: &str, lists: &[Vec<u32>]) -> Result<Vec<u32>> {
-        self.runtime.executable_mut(name)?.execute_batch(lists)
+    fn execute_direct(
+        &mut self,
+        name: &str,
+        rows: &[&[Vec<u32>]],
+        outs: &mut [&mut [u32]],
+    ) -> Result<BatchRun> {
+        let exe = self.runtime.executable_mut(name)?;
+        let (batch, total, k) = (exe.meta.batch, exe.meta.total, exe.meta.list_sizes.len());
+        anyhow::ensure!(rows.len() == outs.len(), "{name}: rows vs output buffers");
+        anyhow::ensure!(rows.len() <= batch, "{name}: {} rows exceed batch {batch}", rows.len());
+        assemble_padded_lists(name, &exe.meta.list_sizes, batch, rows, &mut self.assembly)?;
+        let out = exe.execute_batch(&self.assembly[..k])?;
+        for (r, dst) in outs.iter_mut().enumerate() {
+            anyhow::ensure!(dst.len() <= total, "{name}: row {r} output too wide");
+            dst.copy_from_slice(&out[r * total..r * total + dst.len()]);
+        }
+        Ok(BatchRun { padded_rows: batch - rows.len() })
     }
 
     fn label(&self) -> &'static str {
@@ -90,21 +164,24 @@ pub fn device_for_meta(meta: &ArtifactMeta) -> Result<MergeDevice> {
 /// Software twin of the artifact set (same shapes, bit-exact semantics).
 /// Devices are lowered twice — to a [`CompiledPlan`] (scalar IR) and a
 /// [`LanePlan`] (transposed pure-CAS schedule), both compiled on first
-/// use and cached per artifact. Fast-mode batches run through the lane
-/// executor, [`LANES`](crate::sortnet::LANES) rows per tile with a
-/// scalar tail, sharded across cores when the batch is large enough
+/// use and cached per artifact. Batches arrive as ragged request views
+/// and leave through per-row response buffers
+/// ([`Backend::execute_direct`]): the lane executor scatters straight
+/// from the views into the transposed tile (pad fill inline) and
+/// gathers straight into the response buffers — two copies total, no
+/// padding rows, sharded across cores when the batch is large enough
 /// ([`lanes::auto_threads`]); the scalar plan remains the strict-mode /
-/// median / validation engine.
+/// median / validation engine and runs the sub-tile tail.
 pub struct SoftwareBackend {
     metas: Vec<ArtifactMeta>,
-    /// `name → metas` index — `execute` is on the hot path, so batch
-    /// lookup must not linearly scan the artifact set per call.
-    meta_idx: HashMap<String, usize>,
-    devices: HashMap<String, MergeDevice>,
+    /// `name → metas` index — batch lookup is on the hot path, so it
+    /// must not linearly scan the artifact set per call.
+    meta_idx: HashMap<Arc<str>, usize>,
+    devices: HashMap<Arc<str>, MergeDevice>,
     /// Per-artifact compiled-plan cache (filled lazily on first execute).
-    plans: HashMap<String, CompiledPlan>,
+    plans: HashMap<Arc<str>, CompiledPlan>,
     /// Lane-expanded twin of each compiled plan (Fast-mode batch path).
-    lane_plans: HashMap<String, LanePlan>,
+    lane_plans: HashMap<Arc<str>, LanePlan>,
     lane_scratch: LaneScratch<u32>,
 }
 
@@ -173,10 +250,10 @@ impl SoftwareBackend {
             .ok_or_else(|| anyhow!("no software device {name:?}"))?;
         if !self.plans.contains_key(name) {
             let plan = CompiledPlan::compile_auto(d).map_err(|e| anyhow!("{name}: {e}"))?;
-            self.plans.insert(name.to_string(), plan);
+            self.plans.insert(Arc::from(name), plan);
         }
         let lane = LanePlan::compile(&self.plans[name]);
-        self.lane_plans.insert(name.to_string(), lane);
+        self.lane_plans.insert(Arc::from(name), lane);
         Ok(())
     }
 
@@ -186,20 +263,20 @@ impl SoftwareBackend {
     /// request — production deployments should warm at startup; tests
     /// that touch one artifact keep the cheap lazy path.
     pub fn warm(&mut self) -> Result<()> {
-        let names: Vec<String> = self.devices.keys().cloned().collect();
+        let names: Vec<Arc<str>> = self.devices.keys().cloned().collect();
         for name in names {
             self.ensure_compiled(&name)?;
         }
         Ok(())
     }
-}
 
-impl Backend for SoftwareBackend {
-    fn artifacts(&self) -> Vec<ArtifactMeta> {
-        self.metas.clone()
-    }
-
-    fn execute(&mut self, name: &str, lists: &[Vec<u32>]) -> Result<Vec<u32>> {
+    /// The pre-tile-direct row-major batch path: `lists[l]` must be a
+    /// fully assembled, padded `(batch, list_sizes[l])` buffer and the
+    /// whole `(batch, total)` output is returned. Kept as the
+    /// assemble-then-execute **reference** for the tile-direct
+    /// differential tests and the `service_pipeline` bench baseline —
+    /// the serving path itself runs [`Backend::execute_direct`].
+    pub fn execute_rowmajor(&mut self, name: &str, lists: &[Vec<u32>]) -> Result<Vec<u32>> {
         let batch = self
             .meta_idx
             .get(name)
@@ -220,6 +297,73 @@ impl Backend for SoftwareBackend {
         Ok(out)
     }
 
+    /// Assemble-then-execute convenience over [`Self::execute_rowmajor`]
+    /// — the **old serving data path**, end to end: pad each ragged
+    /// request to the artifact shape, pad the batch with sentinel rows,
+    /// execute row-major, slice each request's real prefix back out.
+    /// The single shared reference implementation the tile-direct
+    /// differential tests and the `service_pipeline` bench baseline
+    /// compare [`Backend::execute_direct`] against.
+    pub fn execute_padded_reference(
+        &mut self,
+        name: &str,
+        reqs: &[Vec<Vec<u32>>],
+    ) -> Result<Vec<Vec<u32>>> {
+        let meta = self
+            .meta_idx
+            .get(name)
+            .map(|&i| self.metas[i].clone())
+            .ok_or_else(|| anyhow!("no software device {name:?}"))?;
+        anyhow::ensure!(reqs.len() <= meta.batch, "{name}: {} rows exceed batch", reqs.len());
+        let rows: Vec<&[Vec<u32>]> = reqs.iter().map(|r| r.as_slice()).collect();
+        let mut lists = Vec::new();
+        assemble_padded_lists(name, &meta.list_sizes, meta.batch, &rows, &mut lists)?;
+        let out = self.execute_rowmajor(name, &lists)?;
+        Ok(reqs
+            .iter()
+            .enumerate()
+            .map(|(row, r)| {
+                let want: usize = r.iter().map(Vec::len).sum();
+                out[row * meta.total..row * meta.total + want].to_vec()
+            })
+            .collect())
+    }
+}
+
+impl Backend for SoftwareBackend {
+    fn artifacts(&self) -> Vec<ArtifactMeta> {
+        self.metas.clone()
+    }
+
+    fn execute_direct(
+        &mut self,
+        name: &str,
+        rows: &[&[Vec<u32>]],
+        outs: &mut [&mut [u32]],
+    ) -> Result<BatchRun> {
+        let batch = self
+            .meta_idx
+            .get(name)
+            .map(|&i| self.metas[i].batch)
+            .ok_or_else(|| anyhow!("no software device {name:?}"))?;
+        anyhow::ensure!(rows.len() == outs.len(), "{name}: rows vs output buffers");
+        anyhow::ensure!(rows.len() <= batch, "{name}: {} rows exceed batch {batch}", rows.len());
+        self.ensure_compiled(name)?;
+        let SoftwareBackend { plans, lane_plans, lane_scratch, .. } = self;
+        let plan = &plans[name];
+        let lane = &lane_plans[name];
+        let threads = lanes::auto_threads(rows.len(), plan.n());
+        let res = if threads > 1 {
+            lanes::run_view_batch_sharded(lane, plan, rows, PAD, threads, outs)
+        } else {
+            lane.run_view_batch_into(plan, rows, PAD, lane_scratch, outs)
+        };
+        res.map_err(|e| anyhow!("{name}: {e}"))?;
+        // Tile-direct executes only the real rows (full tiles + scalar
+        // tail) — unlike the row-major path, which padded to `batch`.
+        Ok(BatchRun { padded_rows: 0 })
+    }
+
     fn label(&self) -> &'static str {
         "software"
     }
@@ -237,7 +381,7 @@ mod tests {
         let name = "loms2_up32_dn32_b256";
         let mut b = SoftwareBackend::default_set();
         assert!(b.lane_plan(name).is_none());
-        let meta = b.artifacts().into_iter().find(|m| m.name == name).unwrap();
+        let meta = b.artifacts().into_iter().find(|m| &*m.name == name).unwrap();
         let mut rng = Rng::new(17);
         let lists: Vec<Vec<u32>> = meta
             .list_sizes
@@ -250,7 +394,7 @@ mod tests {
                 flat
             })
             .collect();
-        let out = b.execute(name, &lists).unwrap();
+        let out = b.execute_rowmajor(name, &lists).unwrap();
         let lane = b.lane_plan(name).expect("lane plan cached after first execute");
         assert_eq!(lane.total_outputs(), meta.total);
         // The Fast-mode lane path must be bit-exact with the scalar plan.
@@ -263,25 +407,53 @@ mod tests {
     }
 
     #[test]
+    fn execute_direct_matches_rowmajor_reference() {
+        // Backend-level two-copy differential: ragged requests through
+        // execute_direct must equal the padded row-major reference path
+        // sliced to each request's real width — including partial
+        // batches (scalar tail) and tile-straddling sizes.
+        let name = "loms2_up32_dn32_b256";
+        let mut b = SoftwareBackend::default_set();
+        let meta = b.artifacts().into_iter().find(|m| &*m.name == name).unwrap();
+        let mut rng = Rng::new(0x2C0B);
+        for real in [1usize, 7, 16, 37, 256] {
+            let reqs: Vec<Vec<Vec<u32>>> = (0..real)
+                .map(|_| {
+                    meta.list_sizes
+                        .iter()
+                        .map(|&cap| {
+                            let len = rng.range(1, cap + 1);
+                            rng.sorted_list(len, 1 << 20)
+                        })
+                        .collect()
+                })
+                .collect();
+            let reference = b.execute_padded_reference(name, &reqs).unwrap();
+            let rows: Vec<&[Vec<u32>]> = reqs.iter().map(|r| r.as_slice()).collect();
+            let mut merged: Vec<Vec<u32>> =
+                reqs.iter().map(|r| vec![0u32; r.iter().map(Vec::len).sum()]).collect();
+            let mut outs: Vec<&mut [u32]> =
+                merged.iter_mut().map(|v| v.as_mut_slice()).collect();
+            let run = b.execute_direct(name, &rows, &mut outs).unwrap();
+            assert_eq!(run.padded_rows, 0, "tile-direct pads no rows");
+            assert_eq!(merged, reference, "{name} real={real}");
+        }
+    }
+
+    #[test]
     fn software_backend_merges() {
         let mut b = SoftwareBackend::default_set();
         let metas = b.artifacts();
-        let meta = metas.iter().find(|m| m.name == "loms2_up32_dn32_b256").unwrap();
+        let meta = metas.iter().find(|m| &*m.name == "loms2_up32_dn32_b256").unwrap();
         let mut rng = Rng::new(9);
-        let lists: Vec<Vec<u32>> = meta
-            .list_sizes
-            .iter()
-            .map(|&s| {
-                let mut flat = Vec::new();
-                for _ in 0..meta.batch {
-                    flat.extend(rng.sorted_list(s, 10_000));
-                }
-                flat
-            })
+        let reqs: Vec<Vec<Vec<u32>>> = (0..meta.batch)
+            .map(|_| meta.list_sizes.iter().map(|&s| rng.sorted_list(s, 10_000)).collect())
             .collect();
-        let out = b.execute("loms2_up32_dn32_b256", &lists).unwrap();
-        for row in 0..meta.batch {
-            let got = &out[row * meta.total..(row + 1) * meta.total];
+        let rows: Vec<&[Vec<u32>]> = reqs.iter().map(|r| r.as_slice()).collect();
+        let mut merged: Vec<Vec<u32>> = reqs.iter().map(|_| vec![0u32; meta.total]).collect();
+        let mut outs: Vec<&mut [u32]> = merged.iter_mut().map(|v| v.as_mut_slice()).collect();
+        b.execute_direct("loms2_up32_dn32_b256", &rows, &mut outs).unwrap();
+        for (row, got) in merged.iter().enumerate() {
             assert!(got.windows(2).all(|w| w[0] <= w[1]), "row {row}");
         }
     }
@@ -332,7 +504,7 @@ mod tests {
         let name = "loms2_up32_dn32_b256";
         let mut b = SoftwareBackend::default_set();
         assert!(b.plan(name).is_none());
-        let meta = b.artifacts().into_iter().find(|m| m.name == name).unwrap();
+        let meta = b.artifacts().into_iter().find(|m| &*m.name == name).unwrap();
         let mut rng = Rng::new(3);
         let lists: Vec<Vec<u32>> = meta
             .list_sizes
@@ -345,14 +517,14 @@ mod tests {
                 flat
             })
             .collect();
-        b.execute(name, &lists).unwrap();
+        b.execute_rowmajor(name, &lists).unwrap();
         let plan = b.plan(name).expect("plan cached after first execute");
         // Small untapped shape (33*33 patterns): the auto policy runs
         // the pruning analysis.
         assert!(plan.is_pruned());
         // Second execute reuses the cached plan (same pointer).
         let p0 = plan as *const _;
-        b.execute(name, &lists).unwrap();
+        b.execute_rowmajor(name, &lists).unwrap();
         assert_eq!(b.plan(name).unwrap() as *const _, p0);
         // warm() fills the remaining artifacts (median-tapped loms3
         // lowers unpruned — its tap stage index must stay valid).
@@ -364,6 +536,7 @@ mod tests {
     #[test]
     fn unknown_artifact_rejected() {
         let mut b = SoftwareBackend::default_set();
-        assert!(b.execute("nope", &[]).is_err());
+        assert!(b.execute_direct("nope", &[], &mut []).is_err());
+        assert!(b.execute_rowmajor("nope", &[]).is_err());
     }
 }

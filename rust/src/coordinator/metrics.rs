@@ -19,6 +19,14 @@ struct Inner {
     rejected: u64,
     latency_buckets: [u64; BUCKETS],
     latency_sum_ns: u128,
+    /// Batches with per-stage timing recorded (pipeline observability:
+    /// the serving path is queue wait → assemble → execute → respond,
+    /// and overlap only shows up when each stage is measured).
+    stage_batches: u64,
+    queue_wait_ns: u128,
+    assemble_ns: u128,
+    execute_ns: u128,
+    respond_ns: u128,
 }
 
 /// Shared metrics handle.
@@ -40,6 +48,14 @@ pub struct Snapshot {
     pub mean_latency_us: f64,
     pub p50_latency_us: f64,
     pub p99_latency_us: f64,
+    /// Mean per-batch stage timings (µs): how long the oldest request
+    /// waited for its batch to flush, view/buffer assembly, backend
+    /// execution, and response fan-out. With the pipelined engine,
+    /// queue wait of batch N+1 overlaps execution of batch N.
+    pub queue_wait_us_mean: f64,
+    pub assemble_us_mean: f64,
+    pub execute_us_mean: f64,
+    pub respond_us_mean: f64,
 }
 
 impl Metrics {
@@ -64,6 +80,23 @@ impl Metrics {
 
     pub fn on_software(&self) {
         self.inner.lock().unwrap().software_served += 1;
+    }
+
+    /// Record one executed batch's per-stage timing (queue wait /
+    /// assemble / execute / respond).
+    pub fn on_batch_stages(
+        &self,
+        queue_wait: Duration,
+        assemble: Duration,
+        execute: Duration,
+        respond: Duration,
+    ) {
+        let mut g = self.inner.lock().unwrap();
+        g.stage_batches += 1;
+        g.queue_wait_ns += queue_wait.as_nanos();
+        g.assemble_ns += assemble.as_nanos();
+        g.execute_ns += execute.as_nanos();
+        g.respond_ns += respond.as_nanos();
     }
 
     pub fn on_response(&self, latency: Duration) {
@@ -109,6 +142,18 @@ impl Metrics {
             },
             p50_latency_us: Self::percentile(&g.latency_buckets, g.responses, 0.50),
             p99_latency_us: Self::percentile(&g.latency_buckets, g.responses, 0.99),
+            queue_wait_us_mean: Self::stage_mean(g.queue_wait_ns, g.stage_batches),
+            assemble_us_mean: Self::stage_mean(g.assemble_ns, g.stage_batches),
+            execute_us_mean: Self::stage_mean(g.execute_ns, g.stage_batches),
+            respond_us_mean: Self::stage_mean(g.respond_ns, g.stage_batches),
+        }
+    }
+
+    fn stage_mean(sum_ns: u128, batches: u64) -> f64 {
+        if batches == 0 {
+            0.0
+        } else {
+            sum_ns as f64 / batches as f64 / 1_000.0
         }
     }
 }
@@ -125,6 +170,12 @@ mod tests {
         m.on_batch(3, 1);
         m.on_response(Duration::from_micros(100));
         m.on_response(Duration::from_micros(200));
+        m.on_batch_stages(
+            Duration::from_micros(500),
+            Duration::from_micros(10),
+            Duration::from_micros(80),
+            Duration::from_micros(20),
+        );
         let s = m.snapshot();
         assert_eq!(s.requests, 2);
         assert_eq!(s.responses, 2);
@@ -134,6 +185,10 @@ mod tests {
         assert!(s.mean_latency_us >= 100.0 && s.mean_latency_us <= 200.0);
         assert!(s.p50_latency_us > 0.0);
         assert!(s.p99_latency_us >= s.p50_latency_us);
+        assert_eq!(s.queue_wait_us_mean, 500.0);
+        assert_eq!(s.assemble_us_mean, 10.0);
+        assert_eq!(s.execute_us_mean, 80.0);
+        assert_eq!(s.respond_us_mean, 20.0);
     }
 
     #[test]

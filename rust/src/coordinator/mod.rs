@@ -1,7 +1,9 @@
 //! Layer 3: the merge coordinator — a batched merge *service* in the
 //! mould of a serving-system router (request queue → shape router →
-//! dynamic batcher → PJRT worker), plus the hierarchical merge planner
-//! that turns the compiled LOMS ladder into an external sorter.
+//! dynamic batcher → pipelined tile-direct executor, with a software
+//! fallback pool), plus the hierarchical merge planner that turns the
+//! compiled LOMS ladder into an external sorter. See `rust/DESIGN.md`
+//! §"Serving data path" for the two-copy batch contract.
 
 pub mod backend;
 pub mod metrics;
@@ -10,7 +12,7 @@ pub mod request;
 pub mod router;
 pub mod service;
 
-pub use backend::{Backend, PjrtBackend, SoftwareBackend};
+pub use backend::{Backend, BatchRun, PjrtBackend, SoftwareBackend};
 pub use metrics::{Metrics, Snapshot};
 pub use request::{MergeRequest, MergeResponse};
 pub use router::{Route, Router};

@@ -1,6 +1,6 @@
 //! Merge request/response types of the coordinator (L3).
 
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
 /// A single k-way merge request: k sorted ascending u32 lists.
@@ -60,8 +60,10 @@ pub struct MergeResponse {
     pub merged: Vec<u32>,
     /// End-to-end latency in nanoseconds.
     pub latency_ns: u128,
-    /// Which artifact (or "software") served it.
-    pub served_by: String,
+    /// Which artifact (or "software") served it. Shared with the
+    /// artifact metadata (`Arc<str>`), so batch fan-out clones a
+    /// refcount instead of allocating a `String` per request.
+    pub served_by: Arc<str>,
 }
 
 /// Response channel handed back on submission.

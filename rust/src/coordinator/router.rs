@@ -107,18 +107,18 @@ mod tests {
     fn exact_match() {
         let r = router();
         let Route::Artifact { idx } = r.route(&[32, 32]) else { panic!() };
-        assert_eq!(r.artifacts()[idx].name, "m32");
+        assert_eq!(&*r.artifacts()[idx].name, "m32");
         let Route::Artifact { idx } = r.route(&[7, 7, 7]) else { panic!() };
-        assert_eq!(r.artifacts()[idx].name, "m3x7");
+        assert_eq!(&*r.artifacts()[idx].name, "m3x7");
     }
 
     #[test]
     fn smaller_requests_route_to_tightest_dominating() {
         let r = router();
         let Route::Artifact { idx } = r.route(&[10, 20]) else { panic!() };
-        assert_eq!(r.artifacts()[idx].name, "m32");
+        assert_eq!(&*r.artifacts()[idx].name, "m32");
         let Route::Artifact { idx } = r.route(&[33, 1]) else { panic!() };
-        assert_eq!(r.artifacts()[idx].name, "m64");
+        assert_eq!(&*r.artifacts()[idx].name, "m64");
     }
 
     #[test]

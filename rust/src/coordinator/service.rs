@@ -1,22 +1,41 @@
-//! The merge service: queue → shape router → dynamic batcher → backend.
+//! The merge service: queue → shape router → dynamic batcher → backend,
+//! **pipelined across three kinds of threads**.
 //!
-//! One engine thread owns the backend (PJRT handles are not shared
-//! across threads) and drains a channel of submitted requests. Requests
-//! routed to the same artifact accumulate in a per-artifact slot queue;
-//! a queue flushes when it reaches the artifact's compiled batch size or
-//! when its oldest entry exceeds `max_wait` (classic dynamic batching —
-//! the same policy a vLLM-style serving router uses). Partially filled
-//! batches are padded with sentinel rows; per-request padding to the
-//! artifact shape uses `u32::MAX` sentinels (see [`super::router`]).
+//! * `loms-engine` — admission, shape routing and dynamic batching.
+//!   Requests routed to the same artifact accumulate in a per-artifact
+//!   slot queue; a queue flushes when it reaches the artifact's compiled
+//!   batch size or when its oldest entry exceeds `max_wait` (classic
+//!   dynamic batching — the same policy a vLLM-style serving router
+//!   uses). A flush is *zero-copy*: the slots (owning the request lists)
+//!   are handed to the executor as-is.
+//! * `loms-exec` — owns the backend (PJRT handles are thread-confined,
+//!   so the backend is constructed *inside* this thread) and drains a
+//!   **depth-1 sync channel** of flushed batches: while it executes
+//!   batch N, the engine accumulates and flushes batch N+1 — the
+//!   two-deep pipeline the tile-direct data path is designed around.
+//!   Execution is tile-direct ([`Backend::execute_direct`]): request
+//!   lists are scattered straight into the transposed lane tile (pad
+//!   fill inline) and each row's output cone is gathered straight into
+//!   that response's `merged` vector — the batch payload is copied
+//!   exactly twice end to end.
+//! * `loms-fallback-*` — a small worker pool serving shapes no artifact
+//!   dominates with a software merge, so a single large fallback
+//!   `sort_unstable` never stalls dynamic batching for the artifact
+//!   queues.
+//!
+//! Per-request padding to the artifact shape uses `u32::MAX` sentinels
+//! (see [`super::router`]), applied inside the tile scatter — partially
+//! filled batches execute only their real rows on the software path.
 
 use super::backend::Backend;
 use super::metrics::Metrics;
 use super::request::{MergeRequest, MergeResponse, ResponseTx};
-use super::router::{Route, Router, PAD};
+use super::router::{Route, Router};
+use crate::runtime::ArtifactMeta;
 use anyhow::Result;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -28,11 +47,19 @@ pub struct ServiceConfig {
     /// Serve shapes no artifact dominates with the software fallback
     /// (reject them when false).
     pub software_fallback: bool,
+    /// Worker threads for software-fallback merges (clamped to ≥ 1).
+    /// Fallback merges run off the engine thread so a large
+    /// `sort_unstable` cannot stall dynamic batching.
+    pub fallback_threads: usize,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        ServiceConfig { max_wait: Duration::from_millis(2), software_fallback: true }
+        ServiceConfig {
+            max_wait: Duration::from_millis(2),
+            software_fallback: true,
+            fallback_threads: 2,
+        }
     }
 }
 
@@ -45,6 +72,8 @@ enum Msg {
 pub struct MergeService {
     tx: mpsc::Sender<Msg>,
     engine: Option<JoinHandle<()>>,
+    exec: Option<JoinHandle<()>>,
+    fallback: Vec<JoinHandle<()>>,
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
 }
@@ -54,24 +83,40 @@ struct Slot {
     tx: ResponseTx,
 }
 
-struct Engine<B: Backend> {
-    backend: B,
+/// A flushed batch in flight from the batcher to the executor. Carries
+/// the request slots untouched — assembly happens tile-direct inside
+/// the executor — plus the artifact name (an `Arc<str>` refcount bump,
+/// not a deep `ArtifactMeta` clone: the executor needs nothing else).
+struct ExecBatch {
+    name: Arc<str>,
+    slots: Vec<Slot>,
+    /// When the oldest slot entered its queue (queue-wait timing).
+    queued_at: Instant,
+}
+
+type FallbackJob = (Box<MergeRequest>, ResponseTx);
+
+/// The batcher: admission, routing, per-artifact queues, flush policy.
+struct Engine {
     router: Router,
     cfg: ServiceConfig,
     metrics: Arc<Metrics>,
     queues: HashMap<usize, Vec<Slot>>,
     oldest: HashMap<usize, Instant>,
-    /// Reusable batch-assembly buffers, one set per artifact (§Perf).
-    scratch: HashMap<usize, Vec<Vec<u32>>>,
+    /// Depth-1 pipeline to the executor thread: `send` blocks only when
+    /// a batch is already executing *and* another is queued.
+    batch_tx: mpsc::SyncSender<ExecBatch>,
+    /// Present iff `cfg.software_fallback`.
+    fallback_tx: Option<mpsc::Sender<FallbackJob>>,
 }
 
-impl<B: Backend> Engine<B> {
+impl Engine {
     fn run(mut self, rx: mpsc::Receiver<Msg>) {
         loop {
             // Wait up to the flush deadline for new work.
             let timeout = self.nearest_deadline().unwrap_or(self.cfg.max_wait);
             match rx.recv_timeout(timeout) {
-                Ok(Msg::Job(req, tx)) => self.admit(*req, tx),
+                Ok(Msg::Job(req, tx)) => self.admit(req, tx),
                 Ok(Msg::Shutdown) => break,
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
@@ -79,6 +124,8 @@ impl<B: Backend> Engine<B> {
             self.flush_due(false);
         }
         self.flush_due(true);
+        // Dropping the engine closes `batch_tx` and `fallback_tx`; the
+        // executor and fallback workers drain what is in flight and exit.
     }
 
     fn nearest_deadline(&self) -> Option<Duration> {
@@ -89,7 +136,7 @@ impl<B: Backend> Engine<B> {
             .min()
     }
 
-    fn admit(&mut self, req: MergeRequest, tx: ResponseTx) {
+    fn admit(&mut self, req: Box<MergeRequest>, tx: ResponseTx) {
         self.metrics.on_request();
         // Unsorted lists violate the hardware precondition; u32::MAX
         // values collide with the PAD sentinel and would be corrupted by
@@ -102,7 +149,7 @@ impl<B: Backend> Engine<B> {
         match self.router.route(&req.sizes()) {
             Route::Artifact { idx } => {
                 let q = self.queues.entry(idx).or_default();
-                q.push(Slot { req, tx });
+                q.push(Slot { req: *req, tx });
                 self.oldest.entry(idx).or_insert_with(Instant::now);
                 let batch = self.router.artifacts()[idx].batch;
                 if self.queues[&idx].len() >= batch {
@@ -110,23 +157,21 @@ impl<B: Backend> Engine<B> {
                 }
             }
             Route::Software => {
-                if !self.cfg.software_fallback {
+                let Some(fb) = &self.fallback_tx else {
                     self.metrics.on_rejected();
                     drop(tx);
                     return;
+                };
+                match fb.send((req, tx)) {
+                    Ok(()) => self.metrics.on_software(),
+                    Err(mpsc::SendError((_, tx))) => {
+                        // Fallback pool died: the caller sees a closed
+                        // channel (and the request counts rejected, not
+                        // software-served).
+                        self.metrics.on_rejected();
+                        drop(tx);
+                    }
                 }
-                self.metrics.on_software();
-                let mut merged: Vec<u32> = req.lists.concat();
-                merged.sort_unstable();
-                // Record before sending: a caller may observe the
-                // response and read the snapshot before we run again.
-                self.metrics.on_response(req.submitted.elapsed());
-                let _ = tx.send(MergeResponse {
-                    id: req.id,
-                    latency_ns: req.submitted.elapsed().as_nanos(),
-                    merged,
-                    served_by: "software".into(),
-                });
             }
         }
     }
@@ -144,63 +189,117 @@ impl<B: Backend> Engine<B> {
         }
     }
 
+    /// Hand a queue to the executor. No assembly happens here: the
+    /// slots move as-is, and the send blocks only when the pipeline is
+    /// already two batches deep (backpressure instead of queue growth).
     fn flush(&mut self, idx: usize) {
         let Some(slots) = self.queues.remove(&idx) else { return };
-        self.oldest.remove(&idx);
+        let queued_at = self.oldest.remove(&idx).unwrap_or_else(Instant::now);
         if slots.is_empty() {
             return;
         }
-        let meta = self.router.artifacts()[idx].clone();
-        let real = slots.len();
-        let k = meta.list_sizes.len();
-        // Assemble the batch directly into reused per-artifact buffers:
-        // each request's lists are copied once and padded in place with
-        // sentinels; remaining rows are sentinel-filled (§Perf — replaces
-        // a padded clone per request per flush).
-        let lists = self.scratch.entry(idx).or_insert_with(|| vec![Vec::new(); k]);
-        for (l, buf) in lists.iter_mut().enumerate() {
-            let cap = meta.list_sizes[l];
-            buf.clear();
-            buf.reserve(meta.batch * cap);
-            for slot in &slots {
-                buf.extend_from_slice(&slot.req.lists[l]);
-                buf.resize(buf.len() + (cap - slot.req.lists[l].len()), PAD);
-            }
-            buf.resize(meta.batch * cap, PAD);
-        }
-        self.metrics.on_batch(real, meta.batch - real);
-        let lists = &self.scratch[&idx];
-        match self.backend.execute(&meta.name, lists) {
-            Ok(out) => {
-                for (row, slot) in slots.into_iter().enumerate() {
-                    let want: usize = slot.req.sizes().iter().sum();
-                    let merged =
-                        out[row * meta.total..row * meta.total + want].to_vec();
-                    let latency = slot.req.submitted.elapsed();
-                    // Record before sending (snapshot-after-recv race).
-                    self.metrics.on_response(latency);
-                    let _ = slot.tx.send(MergeResponse {
-                        id: slot.req.id,
-                        merged,
-                        latency_ns: latency.as_nanos(),
-                        served_by: meta.name.clone(),
-                    });
-                }
-            }
-            Err(e) => {
-                eprintln!("merge batch {} failed: {e:#}", meta.name);
-                for slot in slots {
-                    self.metrics.on_rejected();
-                    drop(slot.tx);
-                }
+        let name = self.router.artifacts()[idx].name.clone();
+        if let Err(mpsc::SendError(batch)) = self.batch_tx.send(ExecBatch { name, slots, queued_at })
+        {
+            // Executor died: every caller sees a closed channel.
+            for slot in batch.slots {
+                self.metrics.on_rejected();
+                drop(slot.tx);
             }
         }
     }
 }
 
+/// The executor stage: owns the backend, drains flushed batches, runs
+/// them tile-direct and fans responses out.
+fn exec_loop<B: Backend>(mut backend: B, rx: mpsc::Receiver<ExecBatch>, metrics: Arc<Metrics>) {
+    while let Ok(ExecBatch { name, slots, queued_at }) = rx.recv() {
+        let t0 = Instant::now();
+        let queue_wait = t0.saturating_duration_since(queued_at);
+        let real = slots.len();
+        // Assemble = borrow the batch view and pre-size each response's
+        // `merged` vector (its length is the request's real output
+        // width). The only data copies happen inside `execute_direct`:
+        // request slices → lane tile, output tile slots → these vectors.
+        let mut merged: Vec<Vec<u32>> = slots
+            .iter()
+            .map(|s| vec![0u32; s.req.lists.iter().map(Vec::len).sum()])
+            .collect();
+        let (run, t1, t2) = {
+            let rows: Vec<&[Vec<u32>]> = slots.iter().map(|s| s.req.lists.as_slice()).collect();
+            let mut outs: Vec<&mut [u32]> = merged.iter_mut().map(|v| v.as_mut_slice()).collect();
+            let t1 = Instant::now();
+            let run = backend.execute_direct(&name, &rows, &mut outs);
+            (run, t1, Instant::now())
+        };
+        match run {
+            Ok(stats) => {
+                respond_batch(&metrics, name, slots, merged, real, stats.padded_rows);
+            }
+            Err(e) => {
+                eprintln!("merge batch {name} failed: {e:#}");
+                for slot in slots {
+                    metrics.on_rejected();
+                    drop(slot.tx);
+                }
+            }
+        }
+        metrics.on_batch_stages(queue_wait, t1 - t0, t2 - t1, t2.elapsed());
+    }
+}
+
+/// Response fan-out for one executed batch (split out of [`exec_loop`]
+/// to keep the borrow regions obvious).
+fn respond_batch(
+    metrics: &Metrics,
+    name: Arc<str>,
+    slots: Vec<Slot>,
+    merged: Vec<Vec<u32>>,
+    real: usize,
+    padded_rows: usize,
+) {
+    metrics.on_batch(real, padded_rows);
+    for (slot, out) in slots.into_iter().zip(merged) {
+        let latency = slot.req.submitted.elapsed();
+        // Record before sending: a caller may observe the response and
+        // read the snapshot before we run again.
+        metrics.on_response(latency);
+        let _ = slot.tx.send(MergeResponse {
+            id: slot.req.id,
+            merged: out,
+            latency_ns: latency.as_nanos(),
+            served_by: name.clone(),
+        });
+    }
+}
+
+/// One software-fallback worker: drains the shared job queue and serves
+/// each request with a concat + `sort_unstable` merge.
+fn fallback_loop(rx: Arc<Mutex<mpsc::Receiver<FallbackJob>>>, metrics: Arc<Metrics>) {
+    let label: Arc<str> = "software".into();
+    loop {
+        // Take one job while holding the lock, release it to merge.
+        let job = {
+            let Ok(guard) = rx.lock() else { return };
+            guard.recv()
+        };
+        let Ok((req, tx)) = job else { return };
+        let mut merged: Vec<u32> = req.lists.concat();
+        merged.sort_unstable();
+        let latency = req.submitted.elapsed();
+        metrics.on_response(latency);
+        let _ = tx.send(MergeResponse {
+            id: req.id,
+            merged,
+            latency_ns: latency.as_nanos(),
+            served_by: label.clone(),
+        });
+    }
+}
+
 impl MergeService {
     /// Start the service. The backend is constructed by `factory`
-    /// *inside* the engine thread — PJRT handles are thread-confined
+    /// *inside* the executor thread — PJRT handles are thread-confined
     /// (`Rc` internally), so they must be born where they run. Fails
     /// fast if the factory errors (e.g. artifacts missing).
     pub fn start<B, F>(factory: F, cfg: ServiceConfig) -> Result<MergeService>
@@ -210,14 +309,17 @@ impl MergeService {
     {
         let metrics = Arc::new(Metrics::new());
         let (tx, rx) = mpsc::channel();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let engine_metrics = Arc::clone(&metrics);
-        let handle = std::thread::Builder::new()
-            .name("loms-engine".into())
+        // Depth-1 pipeline: the engine assembles/queues batch N+1 while
+        // the executor runs batch N; a third flush blocks (backpressure).
+        let (batch_tx, batch_rx) = mpsc::sync_channel::<ExecBatch>(1);
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<Vec<ArtifactMeta>>>();
+        let exec_metrics = Arc::clone(&metrics);
+        let exec = std::thread::Builder::new()
+            .name("loms-exec".into())
             .spawn(move || {
                 let backend = match factory() {
                     Ok(b) => {
-                        let _ = ready_tx.send(Ok(()));
+                        let _ = ready_tx.send(Ok(b.artifacts()));
                         b
                     }
                     Err(e) => {
@@ -225,28 +327,60 @@ impl MergeService {
                         return;
                     }
                 };
-                let router = Router::new(backend.artifacts());
+                exec_loop(backend, batch_rx, exec_metrics);
+            })
+            .expect("spawn executor");
+        let artifacts = match ready_rx.recv() {
+            Ok(Ok(a)) => a,
+            Ok(Err(e)) => {
+                let _ = exec.join();
+                return Err(e);
+            }
+            Err(_) => anyhow::bail!("executor thread died during startup"),
+        };
+        let mut fallback = Vec::new();
+        let fallback_tx = if cfg.software_fallback {
+            let (ftx, frx) = mpsc::channel::<FallbackJob>();
+            let frx = Arc::new(Mutex::new(frx));
+            for i in 0..cfg.fallback_threads.max(1) {
+                let frx = Arc::clone(&frx);
+                let m = Arc::clone(&metrics);
+                fallback.push(
+                    std::thread::Builder::new()
+                        .name(format!("loms-fallback-{i}"))
+                        .spawn(move || fallback_loop(frx, m))
+                        .expect("spawn fallback worker"),
+                );
+            }
+            Some(ftx)
+        } else {
+            None
+        };
+        let engine_metrics = Arc::clone(&metrics);
+        let engine = std::thread::Builder::new()
+            .name("loms-engine".into())
+            .spawn(move || {
+                let router = Router::new(artifacts);
                 let engine = Engine {
-                    backend,
                     router,
                     cfg,
                     metrics: engine_metrics,
                     queues: HashMap::new(),
                     oldest: HashMap::new(),
-                    scratch: HashMap::new(),
+                    batch_tx,
+                    fallback_tx,
                 };
                 engine.run(rx);
             })
             .expect("spawn engine");
-        match ready_rx.recv() {
-            Ok(Ok(())) => {}
-            Ok(Err(e)) => {
-                let _ = handle.join();
-                return Err(e);
-            }
-            Err(_) => anyhow::bail!("engine thread died during startup"),
-        }
-        Ok(MergeService { tx, engine: Some(handle), metrics, next_id: AtomicU64::new(1) })
+        Ok(MergeService {
+            tx,
+            engine: Some(engine),
+            exec: Some(exec),
+            fallback,
+            metrics,
+            next_id: AtomicU64::new(1),
+        })
     }
 
     /// Submit a merge; returns the response channel.
@@ -267,21 +401,31 @@ impl MergeService {
         &self.metrics
     }
 
-    /// Stop the engine, flushing pending batches.
-    pub fn shutdown(mut self) {
+    /// Join every stage: engine first (its drop closes the batch and
+    /// fallback channels), then the executor and fallback workers drain
+    /// what is in flight and exit.
+    fn stop(&mut self) {
         let _ = self.tx.send(Msg::Shutdown);
         if let Some(h) = self.engine.take() {
             let _ = h.join();
         }
+        if let Some(h) = self.exec.take() {
+            let _ = h.join();
+        }
+        for h in self.fallback.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop the engine, flushing pending batches.
+    pub fn shutdown(mut self) {
+        self.stop();
     }
 }
 
 impl Drop for MergeService {
     fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.engine.take() {
-            let _ = h.join();
-        }
+        self.stop();
     }
 }
 
@@ -300,7 +444,7 @@ mod tests {
         let s = svc();
         let resp = s.merge_blocking(vec![vec![1, 3, 9], vec![2, 4]]).unwrap();
         assert_eq!(resp.merged, vec![1, 2, 3, 4, 9]);
-        assert_eq!(resp.served_by, "loms2_up32_dn32_b256");
+        assert_eq!(&*resp.served_by, "loms2_up32_dn32_b256");
     }
 
     #[test]
@@ -338,6 +482,26 @@ mod tests {
         // far fewer batches than requests.
         assert!(snap.batches >= 1, "batched: {}", snap.batches);
         assert!(snap.batches < 20, "must actually batch, got {}", snap.batches);
+        // Tile-direct: partial batches execute only real rows.
+        assert_eq!(snap.rows_padded, 0);
+        assert_eq!(snap.rows_real, 200);
+    }
+
+    #[test]
+    fn stage_timings_recorded_per_batch() {
+        let s = svc();
+        let mut rng = Rng::new(41);
+        for _ in 0..50 {
+            let a = rng.sorted_list(32, 10_000);
+            let b = rng.sorted_list(32, 10_000);
+            s.merge_blocking(vec![a, b]).unwrap();
+        }
+        let snap = s.metrics().snapshot();
+        // Every batch records its stage split; execution of a real
+        // batch takes measurable time.
+        assert!(snap.execute_us_mean > 0.0, "{snap:?}");
+        assert!(snap.queue_wait_us_mean >= 0.0);
+        assert!(snap.p99_latency_us >= snap.p50_latency_us);
     }
 
     #[test]
@@ -368,10 +532,49 @@ mod tests {
         let a: Vec<u32> = (0..1000).collect();
         let b: Vec<u32> = (500..1500).collect();
         let resp = s.merge_blocking(vec![a.clone(), b.clone()]).unwrap();
-        assert_eq!(resp.served_by, "software");
+        assert_eq!(&*resp.served_by, "software");
         let mut want = [a, b].concat();
         want.sort_unstable();
         assert_eq!(resp.merged, want);
+    }
+
+    #[test]
+    fn fallback_pool_runs_off_the_engine_thread() {
+        // A large software merge must not stall artifact batching: fire
+        // a big fallback request, then a burst of artifact-shaped
+        // requests; everything completes and both paths are counted.
+        let s = svc();
+        let big_a: Vec<u32> = (0..200_000).collect();
+        let big_b: Vec<u32> = (100_000..300_000).collect();
+        let big_rx = s.submit(vec![big_a, big_b]);
+        let mut rng = Rng::new(77);
+        let mut rxs = Vec::new();
+        for _ in 0..64 {
+            rxs.push(s.submit(vec![rng.sorted_list(32, 1000), rng.sorted_list(32, 1000)]));
+        }
+        for rx in rxs {
+            assert!(rx.recv().unwrap().merged.windows(2).all(|w| w[0] <= w[1]));
+        }
+        let big = big_rx.recv().unwrap();
+        assert_eq!(&*big.served_by, "software");
+        assert_eq!(big.merged.len(), 400_000);
+        let snap = s.metrics().snapshot();
+        assert_eq!(snap.software_served, 1);
+        assert_eq!(snap.responses, 65);
+    }
+
+    #[test]
+    fn fallback_disabled_rejects_unroutable() {
+        let s = MergeService::start(
+            || Ok(SoftwareBackend::default_set()),
+            ServiceConfig { software_fallback: false, ..ServiceConfig::default() },
+        )
+        .unwrap();
+        let a: Vec<u32> = (0..1000).collect();
+        let b: Vec<u32> = (500..1500).collect();
+        let rx = s.submit(vec![a, b]);
+        assert!(rx.recv().is_err());
+        assert_eq!(s.metrics().snapshot().rejected, 1);
     }
 
     #[test]

@@ -235,6 +235,13 @@ fn run(args: &[String]) -> Result<()> {
                 snap.p50_latency_us,
                 snap.p99_latency_us
             );
+            println!(
+                "stages/batch: queue-wait={:.0}µs assemble={:.1}µs execute={:.1}µs respond={:.1}µs",
+                snap.queue_wait_us_mean,
+                snap.assemble_us_mean,
+                snap.execute_us_mean,
+                snap.respond_us_mean
+            );
             svc.shutdown();
             Ok(())
         }

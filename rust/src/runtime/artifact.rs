@@ -5,11 +5,15 @@
 use crate::util::Json;
 use anyhow::{anyhow, Context, Result};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 /// Metadata of one AOT-compiled merge executable.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ArtifactMeta {
-    pub name: String,
+    /// Shared artifact name: every `MergeResponse` carries it, so it is
+    /// an `Arc<str>` the service clones by refcount instead of
+    /// allocating a `String` per request at batch fan-out.
+    pub name: Arc<str>,
     /// HLO text file, relative to the artifact directory.
     pub file: String,
     /// Sorted input list sizes (k lists).
@@ -59,7 +63,7 @@ impl Manifest {
                 a.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("artifact missing {k}"))
             };
             artifacts.push(ArtifactMeta {
-                name: get_str("name")?,
+                name: get_str("name")?.into(),
                 file: get_str("file")?,
                 list_sizes: a
                     .get_usizes("list_sizes")
@@ -76,7 +80,7 @@ impl Manifest {
     }
 
     pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
-        self.artifacts.iter().find(|a| a.name == name)
+        self.artifacts.iter().find(|a| &*a.name == name)
     }
 
     /// Absolute path of an artifact's HLO file.

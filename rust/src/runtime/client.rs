@@ -8,6 +8,7 @@
 use super::artifact::{ArtifactMeta, Manifest};
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Per-executable execution statistics.
@@ -78,7 +79,7 @@ impl MergeExecutable {
 pub struct Runtime {
     pub manifest: Manifest,
     client: xla::PjRtClient,
-    executables: HashMap<String, MergeExecutable>,
+    executables: HashMap<Arc<str>, MergeExecutable>,
 }
 
 impl Runtime {
@@ -110,14 +111,14 @@ impl Runtime {
     }
 
     pub fn names(&self) -> Vec<String> {
-        let mut v: Vec<String> = self.executables.keys().cloned().collect();
+        let mut v: Vec<String> = self.executables.keys().map(|k| k.to_string()).collect();
         v.sort();
         v
     }
 
     pub fn stats(&self) -> Vec<(String, ExecStats)> {
         let mut v: Vec<(String, ExecStats)> =
-            self.executables.iter().map(|(k, e)| (k.clone(), e.stats)).collect();
+            self.executables.iter().map(|(k, e)| (k.to_string(), e.stats)).collect();
         v.sort_by(|a, b| a.0.cmp(&b.0));
         v
     }

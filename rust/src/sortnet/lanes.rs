@@ -38,6 +38,18 @@
 //! (`std::thread::scope`, no added dependencies), each shard writing a
 //! disjoint range of the output buffer.
 //!
+//! Two batch entry points share the tile executor. The **row-major**
+//! path ([`LanePlan::run_batch_into`]) reads pre-assembled flat lists —
+//! the shape the PJRT artifacts consume. The **tile-direct view** path
+//! ([`LanePlan::run_view_batch_into`], [`run_view_batch_sharded`]) is
+//! the serving hot path: it scatters straight from ragged per-request
+//! list views into the tile (padding short lists inline) and gathers
+//! each lane's output cone straight into that row's caller-provided
+//! response buffer — the whole batch is copied exactly twice
+//! (request → tile, tile → response), with no list-major scratch,
+//! row-major assembly, padding rows, or whole-batch output buffer in
+//! between.
+//!
 //! Equality contract: on **valid inputs** (each list sorted ascending —
 //! what the service admits) the lane executor is bit-exact with
 //! [`CompiledPlan::run_batch`]; `rust/tests/plan_differential.rs`
@@ -278,6 +290,20 @@ impl LanePlan {
         );
     }
 
+    /// Run the CAS/copy schedule over a loaded tile.
+    #[inline]
+    fn exec_tile_ops<T: Copy + Ord>(&self, tile: &mut [T]) {
+        for op in &self.ops {
+            match *op {
+                LaneOp::Cas { lo, hi } => cas_lanes(tile, lo as usize, hi as usize),
+                LaneOp::Copy { dst, src } => {
+                    let s0 = src as usize * LANES;
+                    tile.copy_within(s0..s0 + LANES, dst as usize * LANES);
+                }
+            }
+        }
+    }
+
     /// Execute one full tile: scatter rows `row0 .. row0+LANES` into the
     /// value-major tile, run the CAS/copy schedule, gather the rows into
     /// `dst` (row-major, `LANES * total_outputs()` long).
@@ -292,15 +318,7 @@ impl LanePlan {
             }
             ip += s;
         }
-        for op in &self.ops {
-            match *op {
-                LaneOp::Cas { lo, hi } => cas_lanes(tile, lo as usize, hi as usize),
-                LaneOp::Copy { dst, src } => {
-                    let s0 = src as usize * LANES;
-                    tile.copy_within(s0..s0 + LANES, dst as usize * LANES);
-                }
-            }
-        }
+        self.exec_tile_ops(tile);
         let outs = self.out_slot.len();
         for lane in 0..LANES {
             let row_dst = &mut dst[lane * outs..(lane + 1) * outs];
@@ -308,6 +326,96 @@ impl LanePlan {
                 row_dst[r] = tile[sl as usize * LANES + lane];
             }
         }
+    }
+
+    /// Execute one full tile **straight from ragged request views**: the
+    /// tentpole of the tile-direct serving path. Rows
+    /// `row0 .. row0+LANES` (all real — callers only hand full tiles
+    /// here) are scattered from each request's un-padded lists into the
+    /// value-major tile with `pad` filling the short-list tail in the
+    /// same pass — the batch's *only* input copy. After the schedule
+    /// runs, each lane's output cone is gathered straight into that
+    /// row's caller-provided buffer (`outs[r].len()` values, typically
+    /// the request's real output width — `pad` sorts to the tail, so the
+    /// prefix is the true merge). No list-major scratch, no row-major
+    /// assembly, no whole-batch output buffer.
+    fn run_tile_view<T: Copy + Ord>(
+        &self,
+        rows: &[&[Vec<T>]],
+        row0: usize,
+        pad: T,
+        tile: &mut [T],
+        outs: &mut [&mut [T]],
+    ) {
+        let mut ip = 0usize;
+        for (l, &cap) in self.list_sizes.iter().enumerate() {
+            for lane in 0..LANES {
+                let src = &rows[row0 + lane][l];
+                for (i, &x) in src.iter().enumerate() {
+                    tile[self.in_slot[ip + i] as usize * LANES + lane] = x;
+                }
+                for i in src.len()..cap {
+                    tile[self.in_slot[ip + i] as usize * LANES + lane] = pad;
+                }
+            }
+            ip += cap;
+        }
+        self.exec_tile_ops(tile);
+        for lane in 0..LANES {
+            let dst = &mut *outs[row0 + lane];
+            for (t, &sl) in self.out_slot.iter().take(dst.len()).enumerate() {
+                dst[t] = tile[sl as usize * LANES + lane];
+            }
+        }
+    }
+
+    /// View-based batch executor — the two-copy serving path. `rows[r]`
+    /// is request `r`'s un-padded lists (each sorted, no longer than the
+    /// device's `list_sizes`); `outs[r]` is the destination for row
+    /// `r`'s merged prefix (at most `total_outputs()` wide). Full tiles
+    /// run through [`Self::run_tile_view`]; the `rows.len() % LANES`
+    /// tail runs through the scalar plan's matching view path
+    /// ([`CompiledPlan::run_view_batch_into`], Fast mode). Unlike the
+    /// row-major path there are **no padding rows at all** — partial
+    /// batches execute only their real rows.
+    pub fn run_view_batch_into<T: Copy + Ord + Default>(
+        &self,
+        scalar: &CompiledPlan,
+        rows: &[&[Vec<T>]],
+        pad: T,
+        scratch: &mut LaneScratch<T>,
+        outs: &mut [&mut [T]],
+    ) -> Result<(), PreconditionViolation> {
+        self.check_tail_plan(scalar);
+        assert_eq!(rows.len(), outs.len(), "{}: rows vs output buffers", self.name);
+        let total = self.out_slot.len();
+        for (r, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), self.list_sizes.len(), "{}: row {r} list count", self.name);
+            for (l, &cap) in self.list_sizes.iter().enumerate() {
+                assert!(row[l].len() <= cap, "{}: row {r} list {l} exceeds device slot", self.name);
+            }
+            assert!(outs[r].len() <= total, "{}: row {r} output too wide", self.name);
+        }
+        if scratch.tile.len() < self.slots * LANES {
+            scratch.tile.resize(self.slots * LANES, T::default());
+        }
+        let tiles = rows.len() / LANES;
+        for t in 0..tiles {
+            self.run_tile_view(rows, t * LANES, pad, &mut scratch.tile, outs);
+        }
+        let done = tiles * LANES;
+        if done < rows.len() {
+            scalar
+                .run_view_batch_into(
+                    &rows[done..],
+                    pad,
+                    ExecMode::Fast,
+                    &mut scratch.tail,
+                    &mut outs[done..],
+                )
+                .map_err(|e| e.offset_row(done))?;
+        }
+        Ok(())
     }
 
     /// Slice-level batch executor: `lists[l]` is row-major
@@ -455,6 +563,61 @@ pub fn run_batch_sharded<T: Copy + Ord + Default + Send + Sync>(
                 None => Ok(()),
             }
         })
+    })
+}
+
+/// Shard the **view-based** (tile-direct) batch across `threads` scoped
+/// OS threads: tile-aligned row ranges, one fresh [`LaneScratch`] per
+/// thread, each shard writing its own disjoint sub-slice of the per-row
+/// output buffers. `threads <= 1` degrades to the single-threaded view
+/// executor. The view twin of [`run_batch_sharded`].
+pub fn run_view_batch_sharded<T: Copy + Ord + Default + Send + Sync>(
+    lane: &LanePlan,
+    scalar: &CompiledPlan,
+    rows: &[&[Vec<T>]],
+    pad: T,
+    threads: usize,
+    outs: &mut [&mut [T]],
+) -> Result<(), PreconditionViolation> {
+    if threads <= 1 {
+        return lane.run_view_batch_into(scalar, rows, pad, &mut LaneScratch::new(), outs);
+    }
+    assert_eq!(rows.len(), outs.len(), "{}: rows vs output buffers", lane.name);
+    let real = rows.len();
+    let tiles = real / LANES;
+    let shards = if tiles == 0 { 1 } else { threads.min(tiles) };
+    let tiles_per = tiles.div_ceil(shards);
+    let mut ranges: Vec<(usize, usize)> = Vec::with_capacity(shards);
+    let mut row = 0usize;
+    for i in 0..shards {
+        let hi = if i == shards - 1 { real } else { ((i + 1) * tiles_per * LANES).min(real) };
+        if hi > row {
+            ranges.push((row, hi));
+            row = hi;
+        }
+    }
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(ranges.len());
+        let mut rest = outs;
+        for &(lo, hi) in &ranges {
+            let (chunk, tail) = rest.split_at_mut(hi - lo);
+            rest = tail;
+            let shard_rows = &rows[lo..hi];
+            handles.push(s.spawn(move || -> Result<(), PreconditionViolation> {
+                lane.run_view_batch_into(scalar, shard_rows, pad, &mut LaneScratch::new(), chunk)
+                    .map_err(|e| e.offset_row(lo))
+            }));
+        }
+        let mut first_err = None;
+        for h in handles {
+            if let Err(e) = h.join().expect("lane view shard panicked") {
+                first_err.get_or_insert(e);
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     })
 }
 
@@ -651,6 +814,101 @@ mod tests {
             let mut got = Vec::new();
             run_batch_sharded(&lane, &plan, &lists, batch, threads, &mut got).unwrap();
             assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    /// Ragged random requests for a device: per-row lists each at most
+    /// the device slot size.
+    fn ragged_rows(rng: &mut Rng, sizes: &[usize], real: usize, max: u32) -> Vec<Vec<Vec<u32>>> {
+        (0..real)
+            .map(|_| {
+                sizes
+                    .iter()
+                    .map(|&cap| {
+                        let len = rng.range(1, cap + 1);
+                        rng.sorted_list(len, max)
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// The old assemble-then-execute reference: pad each request to the
+    /// device shape, run the row-major lane batch, slice real prefixes.
+    fn padded_reference(
+        lane: &LanePlan,
+        plan: &CompiledPlan,
+        reqs: &[Vec<Vec<u32>>],
+        pad: u32,
+    ) -> Vec<Vec<u32>> {
+        let sizes = lane.list_sizes().to_vec();
+        let lists: Vec<Vec<u32>> = (0..sizes.len())
+            .map(|l| {
+                let mut flat = Vec::new();
+                for r in reqs {
+                    flat.extend_from_slice(&r[l]);
+                    flat.resize(flat.len() + (sizes[l] - r[l].len()), pad);
+                }
+                flat
+            })
+            .collect();
+        let mut out = Vec::new();
+        lane.run_batch(plan, &lists, reqs.len(), &mut LaneScratch::new(), &mut out).unwrap();
+        let total = lane.total_outputs();
+        reqs.iter()
+            .enumerate()
+            .map(|(row, r)| {
+                let want: usize = r.iter().map(Vec::len).sum();
+                out[row * total..row * total + want].to_vec()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn view_path_matches_padded_row_major_path() {
+        // The tile-direct path (ragged views, inline pad fill, per-row
+        // gather) must be byte-exact with assemble-then-execute across
+        // tile boundaries: tail-only, exact tiles, tiles + tail.
+        const PAD: u32 = u32::MAX;
+        let mut rng = Rng::new(0x71D1);
+        for d in [loms_2way(8, 8, 2), loms_2way(7, 5, 3), loms_kway(&[7, 7, 7]), s2ms::s2ms(6, 6)]
+        {
+            let plan = CompiledPlan::compile_auto(&d).unwrap();
+            let lane = LanePlan::compile(&plan);
+            for real in [1usize, LANES - 1, LANES, 2 * LANES, 2 * LANES + 5] {
+                let reqs = ragged_rows(&mut rng, &d.list_sizes, real, 1 << 20);
+                let want = padded_reference(&lane, &plan, &reqs, PAD);
+                let rows: Vec<&[Vec<u32>]> = reqs.iter().map(|r| r.as_slice()).collect();
+                let mut merged: Vec<Vec<u32>> = reqs
+                    .iter()
+                    .map(|r| vec![0u32; r.iter().map(Vec::len).sum()])
+                    .collect();
+                let mut outs: Vec<&mut [u32]> =
+                    merged.iter_mut().map(|v| v.as_mut_slice()).collect();
+                lane.run_view_batch_into(&plan, &rows, PAD, &mut LaneScratch::new(), &mut outs)
+                    .unwrap();
+                assert_eq!(merged, want, "{} real={real}", d.name);
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_view_path_matches_single_thread() {
+        const PAD: u32 = u32::MAX;
+        let d = loms_2way(8, 8, 2);
+        let plan = CompiledPlan::compile_auto(&d).unwrap();
+        let lane = LanePlan::compile(&plan);
+        let mut rng = Rng::new(0x5A4D);
+        let real = 5 * LANES + 11;
+        let reqs = ragged_rows(&mut rng, &d.list_sizes, real, 1 << 20);
+        let want = padded_reference(&lane, &plan, &reqs, PAD);
+        let rows: Vec<&[Vec<u32>]> = reqs.iter().map(|r| r.as_slice()).collect();
+        for threads in [1usize, 2, 3, 8, 64] {
+            let mut merged: Vec<Vec<u32>> =
+                reqs.iter().map(|r| vec![0u32; r.iter().map(Vec::len).sum()]).collect();
+            let mut outs: Vec<&mut [u32]> = merged.iter_mut().map(|v| v.as_mut_slice()).collect();
+            run_view_batch_sharded(&lane, &plan, &rows, PAD, threads, &mut outs).unwrap();
+            assert_eq!(merged, want, "threads={threads}");
         }
     }
 

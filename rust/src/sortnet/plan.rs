@@ -496,6 +496,55 @@ impl CompiledPlan {
         })
     }
 
+    /// View-based batch executor — the scalar half of the **tile-direct
+    /// serving path** (see [`super::lanes`]): each row is an un-padded
+    /// request view (`rows[r][l]` is request `r`'s sorted list `l`, no
+    /// longer than `list_sizes[l]`), loaded straight into the flat
+    /// vector with `pad` filling the short-list tail, and each row's
+    /// merged prefix is written straight into its caller-provided buffer
+    /// (`outs[r].len()` ≤ `total_outputs()` — typically the request's
+    /// real output width, since `pad` sentinels sort to the tail). No
+    /// intermediate row-major batch buffer exists on this path. Strict
+    /// mode checks every block precondition per row, exactly like
+    /// [`Self::run_batch_into`]; errors carry the failing row.
+    pub fn run_view_batch_into<T: Copy + Ord + Default>(
+        &self,
+        rows: &[&[Vec<T>]],
+        pad: T,
+        mode: ExecMode,
+        scratch: &mut PlanScratch<T>,
+        outs: &mut [&mut [T]],
+    ) -> Result<(), PreconditionViolation> {
+        assert_eq!(rows.len(), outs.len(), "{}: rows vs output buffers", self.name);
+        let PlanScratch { v, buf } = scratch;
+        v.clear();
+        v.resize(self.n, T::default());
+        self.warm_scratch(buf);
+        let end = self.ops.len();
+        for (row, lists) in rows.iter().enumerate() {
+            assert_eq!(lists.len(), self.list_sizes.len(), "{}: row {row} list count", self.name);
+            let mut ip = 0usize;
+            for (l, &cap) in self.list_sizes.iter().enumerate() {
+                let src = &lists[l];
+                assert!(src.len() <= cap, "{}: row {row} list {l} exceeds device slot", self.name);
+                for (i, &x) in src.iter().enumerate() {
+                    v[self.in_pos[ip + i] as usize] = x;
+                }
+                for i in src.len()..cap {
+                    v[self.in_pos[ip + i] as usize] = pad;
+                }
+                ip += cap;
+            }
+            self.exec_ops(v, buf, mode, end).map_err(|e| e.with_row(row))?;
+            let dst = &mut *outs[row];
+            assert!(dst.len() <= self.out_pos.len(), "{}: row {row} output too wide", self.name);
+            for (t, &p) in self.out_pos.iter().take(dst.len()).enumerate() {
+                dst[t] = v[p as usize];
+            }
+        }
+        Ok(())
+    }
+
     /// Slice-level batch executor behind [`Self::run_batch`]: rows are
     /// read from `lists[l]` (row-major `(batch, list_sizes[l])`) and
     /// written to `dst` (`batch * total_outputs()`, fully overwritten).
@@ -703,6 +752,71 @@ mod tests {
             .run_row(&mut v, ExecMode::Strict, None, &mut PlanScratch::new())
             .unwrap_err();
         assert_eq!(e.row, None);
+    }
+
+    #[test]
+    fn view_batch_matches_padded_row_major_batch() {
+        // The view-based path (ragged requests, inline pad fill, per-row
+        // output buffers) must be byte-exact with the old
+        // assemble-then-execute path: pad each request to the device
+        // shape, run the row-major batch, slice each row's real prefix.
+        const PAD: u32 = u32::MAX;
+        let d = loms_2way(8, 8, 2);
+        let plan = CompiledPlan::compile(&d).unwrap();
+        let mut rng = Rng::new(0x71EE);
+        for batch in [1usize, 5, 17] {
+            let reqs: Vec<Vec<Vec<u32>>> = (0..batch)
+                .map(|_| {
+                    let (la, lb) = (rng.range(1, 9), rng.range(1, 9));
+                    vec![rng.sorted_list(la, 1000), rng.sorted_list(lb, 1000)]
+                })
+                .collect();
+            // Old path: row-major assembly padded to the device shape.
+            let lists: Vec<Vec<u32>> = (0..2)
+                .map(|l| {
+                    let mut flat = Vec::new();
+                    for r in &reqs {
+                        flat.extend_from_slice(&r[l]);
+                        flat.resize(flat.len() + (8 - r[l].len()), PAD);
+                    }
+                    flat
+                })
+                .collect();
+            for mode in [ExecMode::Fast, ExecMode::Strict] {
+                let mut old = Vec::new();
+                plan.run_batch(&lists, batch, mode, &mut PlanScratch::new(), &mut old).unwrap();
+                let rows: Vec<&[Vec<u32>]> = reqs.iter().map(|r| r.as_slice()).collect();
+                let mut merged: Vec<Vec<u32>> =
+                    reqs.iter().map(|r| vec![0; r[0].len() + r[1].len()]).collect();
+                let mut outs: Vec<&mut [u32]> =
+                    merged.iter_mut().map(|v| v.as_mut_slice()).collect();
+                plan.run_view_batch_into(&rows, PAD, mode, &mut PlanScratch::new(), &mut outs)
+                    .unwrap();
+                for (row, got) in merged.iter().enumerate() {
+                    assert_eq!(
+                        &old[row * 16..row * 16 + got.len()],
+                        &got[..],
+                        "row {row} ({mode:?})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn view_batch_strict_error_carries_row() {
+        const PAD: u32 = u32::MAX;
+        let d = s2ms::s2ms(2, 2);
+        let plan = CompiledPlan::compile(&d).unwrap();
+        let good = vec![vec![1u32, 2], vec![3, 4]];
+        let bad = vec![vec![9u32, 1], vec![2, 3]]; // UP run descends
+        let rows: Vec<&[Vec<u32>]> = vec![&good[..], &bad[..]];
+        let mut merged = vec![vec![0u32; 4], vec![0u32; 4]];
+        let mut outs: Vec<&mut [u32]> = merged.iter_mut().map(|v| v.as_mut_slice()).collect();
+        let err = plan
+            .run_view_batch_into(&rows, PAD, ExecMode::Strict, &mut PlanScratch::new(), &mut outs)
+            .unwrap_err();
+        assert_eq!(err.row, Some(1));
     }
 
     #[test]

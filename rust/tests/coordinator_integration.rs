@@ -19,7 +19,7 @@ fn service_or_skip() -> Option<MergeService> {
     Some(
         MergeService::start(
             move || PjrtBackend::load(dir),
-            ServiceConfig { max_wait: Duration::from_millis(2), software_fallback: true },
+            ServiceConfig { max_wait: Duration::from_millis(2), ..ServiceConfig::default() },
         )
         .expect("service start"),
     )
@@ -51,7 +51,7 @@ fn pjrt_service_end_to_end() {
     for (rx, want) in rxs.into_iter().zip(wants) {
         let resp = rx.recv().expect("response");
         assert_eq!(resp.merged, want);
-        assert_ne!(resp.served_by, "software", "these shapes all route to artifacts");
+        assert_ne!(&*resp.served_by, "software", "these shapes all route to artifacts");
     }
     let snap = s.metrics().snapshot();
     assert_eq!(snap.responses, 300);

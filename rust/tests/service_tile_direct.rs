@@ -1,0 +1,184 @@
+//! Tile-direct serving-path differential suite.
+//!
+//! The serving contract after the two-copy redesign: a batch is copied
+//! exactly twice (request slices → transposed lane tile, output tile
+//! slots → response buffers), with no list-major scratch or row-major
+//! assembly in between — and the result must be **byte-exact** with the
+//! old assemble-then-execute path (pad each request to the artifact
+//! shape, pad the batch with sentinel rows, execute row-major, slice
+//! each row's real prefix). This file enforces that equality across
+//! every default artifact (all device families), ragged request sizes,
+//! partial batches and Strict mode, then drives the full pipelined
+//! service end to end over a mixed workload.
+
+use loms::coordinator::router::PAD;
+use loms::coordinator::{Backend, MergeService, ServiceConfig, SoftwareBackend};
+use loms::runtime::ArtifactMeta;
+use loms::sortnet::exec::ExecMode;
+use loms::sortnet::plan::PlanScratch;
+use loms::util::Rng;
+
+/// Ragged random requests for an artifact: per-row lists each between 1
+/// and the artifact slot size.
+fn ragged_requests(rng: &mut Rng, meta: &ArtifactMeta, real: usize) -> Vec<Vec<Vec<u32>>> {
+    (0..real)
+        .map(|_| {
+            meta.list_sizes
+                .iter()
+                .map(|&cap| {
+                    let len = rng.range(1, cap + 1);
+                    rng.sorted_list(len, 1 << 20)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// The new path: ragged views in, per-row response buffers out.
+fn tile_direct(
+    backend: &mut SoftwareBackend,
+    meta: &ArtifactMeta,
+    reqs: &[Vec<Vec<u32>>],
+) -> Vec<Vec<u32>> {
+    let rows: Vec<&[Vec<u32>]> = reqs.iter().map(|r| r.as_slice()).collect();
+    let mut merged: Vec<Vec<u32>> =
+        reqs.iter().map(|r| vec![0u32; r.iter().map(Vec::len).sum()]).collect();
+    let mut outs: Vec<&mut [u32]> = merged.iter_mut().map(|v| v.as_mut_slice()).collect();
+    let run = backend.execute_direct(&meta.name, &rows, &mut outs).unwrap();
+    assert_eq!(run.padded_rows, 0, "{}: tile-direct must pad no rows", meta.name);
+    merged
+}
+
+#[test]
+fn tile_direct_matches_assemble_then_execute_for_every_artifact() {
+    // Every default artifact — every served device family (2-way LOMS
+    // across column counts and sizes, 3-way k-way) — on ragged
+    // requests, partial batches (scalar tail), tile-straddling and full
+    // batches.
+    let mut backend = SoftwareBackend::default_set();
+    let mut rng = Rng::new(0x7D1F);
+    for meta in backend.artifacts() {
+        let reals: Vec<usize> = [1usize, 7, 16, 21, meta.batch / 2 + 1, meta.batch]
+            .into_iter()
+            .filter(|&r| r <= meta.batch)
+            .collect();
+        for real in reals {
+            let reqs = ragged_requests(&mut rng, &meta, real);
+            // The old assemble-then-execute path, via the shared
+            // reference implementation on the backend.
+            let want = backend.execute_padded_reference(&meta.name, &reqs).unwrap();
+            let got = tile_direct(&mut backend, &meta, &reqs);
+            assert_eq!(got, want, "{} real={real}", meta.name);
+        }
+    }
+}
+
+#[test]
+fn strict_mode_view_path_matches_padded_batch() {
+    // The scalar view path (used for the sub-tile tail, and the only
+    // executor Strict mode may run on) must match the padded row-major
+    // batch in Strict mode rank for rank.
+    let mut backend = SoftwareBackend::default_set();
+    backend.warm().unwrap();
+    let mut rng = Rng::new(0x57C1);
+    for name in ["loms2_up32_dn32_b256", "loms3_7r_b256"] {
+        let meta = backend.artifacts().into_iter().find(|m| &*m.name == name).unwrap();
+        let plan = backend.plan(name).expect("warmed");
+        for real in [1usize, 5, 40] {
+            let reqs = ragged_requests(&mut rng, &meta, real);
+            // Padded row-major reference, Strict mode, batch == real.
+            let lists: Vec<Vec<u32>> = (0..meta.list_sizes.len())
+                .map(|l| {
+                    let cap = meta.list_sizes[l];
+                    let mut flat = Vec::new();
+                    for r in &reqs {
+                        flat.extend_from_slice(&r[l]);
+                        flat.resize(flat.len() + (cap - r[l].len()), PAD);
+                    }
+                    flat
+                })
+                .collect();
+            let mut reference = Vec::new();
+            plan.run_batch(&lists, real, ExecMode::Strict, &mut PlanScratch::new(), &mut reference)
+                .unwrap();
+            let rows: Vec<&[Vec<u32>]> = reqs.iter().map(|r| r.as_slice()).collect();
+            let mut merged: Vec<Vec<u32>> =
+                reqs.iter().map(|r| vec![0u32; r.iter().map(Vec::len).sum()]).collect();
+            let mut outs: Vec<&mut [u32]> = merged.iter_mut().map(|v| v.as_mut_slice()).collect();
+            plan.run_view_batch_into(
+                &rows,
+                PAD,
+                ExecMode::Strict,
+                &mut PlanScratch::new(),
+                &mut outs,
+            )
+            .unwrap();
+            for (row, got) in merged.iter().enumerate() {
+                assert_eq!(
+                    &reference[row * meta.total..row * meta.total + got.len()],
+                    &got[..],
+                    "{name} real={real} row={row}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn mixed_load_end_to_end_batches_and_is_correct() {
+    // The full pipelined service (engine → depth-1 channel → executor,
+    // fallback pool) over a mixed workload: exact shapes, ragged padded
+    // shapes, 3-way, and unroutable software shapes. Every response
+    // must equal the std-sort merge, dynamic batching must engage, and
+    // the tile-direct path must report zero padding rows.
+    let s = MergeService::start(|| Ok(SoftwareBackend::default_set()), ServiceConfig::default())
+        .unwrap();
+    let mut rng = Rng::new(0xE2E7);
+    let total = 400usize;
+    let mut software = 0u64;
+    let mut rxs = Vec::new();
+    let mut wants = Vec::new();
+    for i in 0..total {
+        let lists: Vec<Vec<u32>> = match i % 8 {
+            0 | 1 | 2 => vec![rng.sorted_list(32, 1 << 20), rng.sorted_list(32, 1 << 20)],
+            3 | 4 => {
+                let la = rng.range(1, 33);
+                let lb = rng.range(1, 33);
+                vec![rng.sorted_list(la, 1 << 20), rng.sorted_list(lb, 1 << 20)]
+            }
+            5 => vec![rng.sorted_list(64, 1 << 20), rng.sorted_list(64, 1 << 20)],
+            6 => vec![
+                rng.sorted_list(7, 1 << 20),
+                rng.sorted_list(7, 1 << 20),
+                rng.sorted_list(7, 1 << 20),
+            ],
+            _ => {
+                // Unroutable (> largest artifact): software fallback.
+                software += 1;
+                vec![rng.sorted_list(400, 1 << 20), rng.sorted_list(400, 1 << 20)]
+            }
+        };
+        let mut want: Vec<u32> = lists.concat();
+        want.sort_unstable();
+        wants.push(want);
+        rxs.push(s.submit(lists));
+    }
+    for (rx, want) in rxs.into_iter().zip(wants) {
+        assert_eq!(rx.recv().expect("no request may be lost").merged, want);
+    }
+    let snap = s.metrics().snapshot();
+    assert_eq!(snap.responses, total as u64);
+    assert_eq!(snap.rejected, 0);
+    assert_eq!(snap.software_served, software);
+    // Dynamic batching engaged: far fewer batches than artifact-served
+    // requests.
+    let artifact_served = total as u64 - software;
+    assert!(snap.batches >= 1);
+    assert!(snap.batches < artifact_served / 2, "must batch: {snap:?}");
+    // Tile-direct partial batches execute only their real rows.
+    assert_eq!(snap.rows_padded, 0);
+    assert_eq!(snap.rows_real, artifact_served);
+    // Per-stage pipeline timings were recorded.
+    assert!(snap.execute_us_mean > 0.0, "{snap:?}");
+    s.shutdown();
+}
