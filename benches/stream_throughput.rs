@@ -1,0 +1,99 @@
+//! Streaming merge engine throughput, emitted as `BENCH_stream.json`.
+//!
+//! Three engines over the same workloads (keys/s, higher is better):
+//!
+//! 1. `heap_kway` — [`planner::kway_merge`], the scalar binary heap
+//!    that used to finish every external sort (log₂k branchy compares
+//!    per key).
+//! 2. `tile_kway` — [`stream::merge_runs`], the FLiMS-style merge tree
+//!    pumping R+R LOMS kernels: independent tree nodes batch into
+//!    transposed SIMD tiles, so per-key work is branchless CAS chains.
+//! 3. `extsort` — `stream::extsort` end to end (run formation +
+//!    streaming k-way) on unsorted input, the bounded-memory path
+//!    behind `loms sort`.
+//!
+//! The k-way engines run at k ∈ {4, 16, 64} over ≥1M-key workloads by
+//! default (`BENCH_KEYS` overrides). CI compile-checks this harness via
+//! `cargo bench --no-run`; run `cargo bench --bench stream_throughput`
+//! to refresh the JSON.
+
+use loms::coordinator::planner;
+use loms::stream::{self, ExtSortConfig};
+use loms::util::Rng;
+use std::time::Instant;
+
+struct Variant {
+    name: &'static str,
+    k: usize,
+    keys_per_s: f64,
+}
+
+/// Best keys/s over a warmup + 3 timed repetitions (same spirit as
+/// `bench::timing`, but each op here is huge). `prep` runs off the
+/// clock — the heap variant clones its consumable input there.
+fn best_rate<T>(keys: usize, mut prep: impl FnMut() -> T, mut run: impl FnMut(T) -> usize) -> f64 {
+    run(prep()); // warmup
+    let mut best = f64::MIN;
+    for _ in 0..3 {
+        let input = prep();
+        let t0 = Instant::now();
+        let produced = run(input);
+        assert_eq!(produced, keys);
+        best = best.max(keys as f64 / t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn main() {
+    let n: usize = std::env::var("BENCH_KEYS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1 << 20);
+    let r = stream::DEFAULT_R;
+    let mut rng = Rng::new(0x57B3);
+    let mut variants: Vec<Variant> = Vec::new();
+
+    for k in [4usize, 16, 64] {
+        // k pre-sorted runs of ~n/k keys (ragged by one).
+        let runs: Vec<Vec<u32>> = (0..k)
+            .map(|i| rng.sorted_list(n / k + (i % 2), u32::MAX - 1))
+            .collect();
+        let total: usize = runs.iter().map(Vec::len).sum();
+
+        let heap = best_rate(total, || runs.clone(), |input| planner::kway_merge(input).len());
+        variants.push(Variant { name: "heap_kway", k, keys_per_s: heap });
+
+        let tile = best_rate(total, || (), |()| stream::merge_runs(&runs, r).unwrap().len());
+        variants.push(Variant { name: "tile_kway", k, keys_per_s: tile });
+
+        println!(
+            "k={k:<3} heap {heap:>12.0} keys/s   tile {tile:>12.0} keys/s   ({:.2}x)",
+            tile / heap
+        );
+    }
+
+    // End-to-end external sort of unsorted input (in-memory runs).
+    let data: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+    let cfg = ExtSortConfig { r, ..Default::default() };
+    let ext = best_rate(n, || (), |()| stream::extsort(&data, &cfg).unwrap().0.len());
+    let ext_runs = n.div_ceil(cfg.run_len);
+    variants.push(Variant { name: "extsort", k: ext_runs, keys_per_s: ext });
+    println!("extsort (runs={ext_runs}) {ext:>12.0} keys/s");
+
+    let rows: Vec<String> = variants
+        .iter()
+        .map(|v| {
+            format!(
+                "    {{\"name\": \"{}\", \"k\": {}, \"keys_per_s\": {:.0}}}",
+                v.name, v.k, v.keys_per_s
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"stream_throughput\",\n  \"keys\": {n},\n  \"r\": {r},\n  \
+         \"variants\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    std::fs::write("BENCH_stream.json", &json).expect("write BENCH_stream.json");
+    println!("wrote BENCH_stream.json");
+}

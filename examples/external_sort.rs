@@ -1,8 +1,8 @@
 //! External sort through the compiled LOMS merge ladder: sort 1M
 //! synthetic keys by chunking into 32-value runs and merging level by
 //! level through the batched merge service (32+32 → 64 → … → 512), then
-//! a final k-way merge. Reports throughput and plan statistics, and
-//! verifies the output exactly.
+//! the final streaming k-way merge (`stream::merge_runs`). Reports
+//! throughput and plan statistics, and verifies the output exactly.
 //!
 //!     make artifacts && cargo run --release --example external_sort [n_keys]
 
@@ -37,7 +37,7 @@ fn main() -> anyhow::Result<()> {
 
     println!("sorted+verified in {dt:.2?} ({:.2} Mkeys/s)", n as f64 / dt.as_secs_f64() / 1e6);
     println!(
-        "plan: {} chunks, {} network levels, {} network merges, final {}-way software merge",
+        "plan: {} chunks, {} network levels, {} network merges, final {}-way streaming merge",
         stats.chunks, stats.network_levels, stats.network_merges, stats.final_kway_runs
     );
     let snap = svc.metrics().snapshot();

@@ -352,13 +352,8 @@ impl Backend for SoftwareBackend {
         let SoftwareBackend { plans, lane_plans, lane_scratch, .. } = self;
         let plan = &plans[name];
         let lane = &lane_plans[name];
-        let threads = lanes::auto_threads(rows.len(), plan.n());
-        let res = if threads > 1 {
-            lanes::run_view_batch_sharded(lane, plan, rows, PAD, threads, outs)
-        } else {
-            lane.run_view_batch_into(plan, rows, PAD, lane_scratch, outs)
-        };
-        res.map_err(|e| anyhow!("{name}: {e}"))?;
+        lanes::run_view_batch_auto(lane, plan, rows, PAD, lane_scratch, outs)
+            .map_err(|e| anyhow!("{name}: {e}"))?;
         // Tile-direct executes only the real rows (full tiles + scalar
         // tail) — unlike the row-major path, which padded to `batch`.
         Ok(BatchRun { padded_rows: 0 })

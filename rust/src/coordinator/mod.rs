@@ -2,8 +2,10 @@
 //! mould of a serving-system router (request queue → shape router →
 //! dynamic batcher → pipelined tile-direct executor, with a software
 //! fallback pool), plus the hierarchical merge planner that turns the
-//! compiled LOMS ladder into an external sorter. See `rust/DESIGN.md`
-//! §"Serving data path" for the two-copy batch contract.
+//! compiled LOMS ladder into an external sorter (windowed submissions,
+//! phase 3 on the [`crate::stream`] merge-tree engine). See
+//! `rust/DESIGN.md` §"Serving data path" for the two-copy batch
+//! contract and §"Streaming merge engine" for the phase-3 engine.
 
 pub mod backend;
 pub mod metrics;

@@ -4,12 +4,27 @@
 //! building blocks of larger sorters): split the keys into chunks, sort
 //! each chunk locally, then run a binary merge tree where every level's
 //! pairwise merges are *batched through the compiled LOMS ladder*
-//! (32+32 → 64, 64+64 → 128, …). Levels beyond the largest artifact fall
-//! back to a k-way software merge of the surviving runs.
+//! (32+32 → 64, 64+64 → 128, …). Submissions are capped by a sliding
+//! window ([`INFLIGHT_WINDOW`]) so queue memory stays bounded whatever
+//! the input size. Levels beyond the largest artifact hand the
+//! surviving runs to the **streaming merge engine**
+//! ([`crate::stream::merge_runs`]): a tile-pumped k-way merge tree in
+//! O(k·R) memory, replacing the scalar binary heap that used to finish
+//! the sort. The heap ([`kway_merge`]) is kept as the differential
+//! reference.
 
 use super::service::MergeService;
+use crate::stream;
 use anyhow::Result;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
+
+/// Maximum ladder merges in flight at once. Each pending response holds
+/// one merged run, so ladder memory is bounded by
+/// `INFLIGHT_WINDOW × max_network` keys instead of growing with the
+/// input (the old behavior submitted an entire tree level before
+/// receiving anything). Two full default artifact batches (2 × 256)
+/// keep dynamic batching saturated.
+pub const INFLIGHT_WINDOW: usize = 512;
 
 /// External-sort statistics.
 #[derive(Debug, Clone, Default)]
@@ -21,16 +36,17 @@ pub struct SortStats {
     pub final_kway_runs: usize,
 }
 
-/// Sort `data` by chunking + hierarchical merging through `service`.
-/// `chunk` is the initial run length (typically the smallest artifact's
-/// list size); `max_network` caps the list size sent through the merge
-/// network ladder.
-pub fn external_sort(
+/// Phases 1–2 of the external sort: chunk into sorted runs, then merge
+/// pairwise through the service's network ladder (windowed) until the
+/// runs reach `max_network` keys or one run remains. Shared by
+/// [`external_sort`] and the extsort ladder run-former
+/// ([`crate::stream::RunFormer::Ladder`]).
+pub fn ladder_runs(
     service: &MergeService,
     data: &[u32],
     chunk: usize,
     max_network: usize,
-) -> Result<(Vec<u32>, SortStats)> {
+) -> Result<(Vec<Vec<u32>>, SortStats)> {
     let mut stats = SortStats { keys: data.len(), ..Default::default() };
     if data.is_empty() {
         return Ok((Vec::new(), stats));
@@ -45,19 +61,31 @@ pub fn external_sort(
         })
         .collect();
     stats.chunks = runs.len();
-    // Phase 2: binary merge tree through the service, level by level.
+    // Phase 2: binary merge tree through the service, level by level,
+    // never more than INFLIGHT_WINDOW submissions outstanding.
     while runs.len() > 1 && runs[0].len() < max_network {
         let mut next: Vec<Vec<u32>> = Vec::with_capacity(runs.len().div_ceil(2));
-        let mut rxs = Vec::new();
+        let mut pending = VecDeque::with_capacity(INFLIGHT_WINDOW);
         let mut odd = None;
         let mut iter = runs.into_iter();
         while let Some(a) = iter.next() {
             match iter.next() {
-                Some(b) => rxs.push(service.submit(vec![a, b])),
+                Some(b) => {
+                    // Window full: retire the oldest merge before
+                    // submitting another (responses pop in submit
+                    // order, so `next` stays level-ordered).
+                    if pending.len() >= INFLIGHT_WINDOW {
+                        let rx = pending.pop_front().expect("window not empty");
+                        let resp = rx.recv().map_err(|_| anyhow::anyhow!("merge rejected"))?;
+                        stats.network_merges += 1;
+                        next.push(resp.merged);
+                    }
+                    pending.push_back(service.submit(vec![a, b]));
+                }
                 None => odd = Some(a),
             }
         }
-        for rx in rxs {
+        for rx in pending {
             let resp = rx.recv().map_err(|_| anyhow::anyhow!("merge rejected"))?;
             stats.network_merges += 1;
             next.push(resp.merged);
@@ -68,12 +96,28 @@ pub fn external_sort(
         stats.network_levels += 1;
         runs = next;
     }
-    // Phase 3: k-way software merge of the surviving runs.
-    stats.final_kway_runs = runs.len();
-    Ok((kway_merge(runs), stats))
+    Ok((runs, stats))
 }
 
-/// Heap-based k-way merge of sorted runs.
+/// Sort `data` by chunking + hierarchical merging through `service`.
+/// `chunk` is the initial run length (typically the smallest artifact's
+/// list size); `max_network` caps the list size sent through the merge
+/// network ladder. The surviving runs stream through the tile-pumped
+/// k-way merge tree (phase 3).
+pub fn external_sort(
+    service: &MergeService,
+    data: &[u32],
+    chunk: usize,
+    max_network: usize,
+) -> Result<(Vec<u32>, SortStats)> {
+    let (runs, mut stats) = ladder_runs(service, data, chunk, max_network)?;
+    stats.final_kway_runs = runs.len();
+    let merged = stream::merge_runs(&runs, stream::DEFAULT_R)?;
+    Ok((merged, stats))
+}
+
+/// Heap-based k-way merge of sorted runs — the scalar reference the
+/// streaming engine is tested against (and the bench baseline).
 pub fn kway_merge(runs: Vec<Vec<u32>>) -> Vec<u32> {
     let total: usize = runs.iter().map(Vec::len).sum();
     let mut out = Vec::with_capacity(total);
@@ -107,6 +151,18 @@ mod tests {
     }
 
     #[test]
+    fn stream_phase3_matches_heap_reference() {
+        // The tile-pumped phase-3 engine must be byte-identical to the
+        // scalar heap on the runs the ladder produces.
+        let mut rng = Rng::new(0x3A);
+        let runs: Vec<Vec<u32>> =
+            (0..9).map(|_| rng.sorted_list(rng.range(0, 700), 1 << 24)).collect();
+        let want = kway_merge(runs.clone());
+        let got = crate::stream::merge_runs(&runs, crate::stream::DEFAULT_R).unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
     fn external_sort_small() {
         let s = MergeService::start(|| Ok(SoftwareBackend::default_set()), ServiceConfig::default()).unwrap();
         let mut rng = Rng::new(11);
@@ -119,6 +175,21 @@ mod tests {
         assert_eq!(stats.chunks, 5000usize.div_ceil(32));
         assert!(stats.network_levels >= 3, "ladder used: {stats:?}");
         assert!(stats.network_merges > 50);
+    }
+
+    #[test]
+    fn external_sort_exceeding_the_inflight_window() {
+        // More pairs per level than INFLIGHT_WINDOW: the sliding window
+        // must throttle without losing or reordering any merge.
+        let s = MergeService::start(|| Ok(SoftwareBackend::default_set()), ServiceConfig::default()).unwrap();
+        let n = 32 * (2 * INFLIGHT_WINDOW + 77); // level 0: > window pairs
+        let mut rng = Rng::new(0x11D0);
+        let data: Vec<u32> = (0..n).map(|_| rng.next_u32() >> 2).collect();
+        let (sorted, stats) = external_sort(&s, &data, 32, 256).unwrap();
+        let mut want = data;
+        want.sort_unstable();
+        assert_eq!(sorted, want);
+        assert!(stats.chunks > 2 * INFLIGHT_WINDOW, "{stats:?}");
     }
 
     #[test]

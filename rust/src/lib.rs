@@ -17,6 +17,10 @@
 //!   merge kernels (`artifacts/*.hlo.txt`) and executes them.
 //! * [`coordinator`] — the batched merge service (router, dynamic
 //!   batcher, workers, metrics) and the hierarchical merge planner.
+//! * [`stream`] — the streaming merge engine: bounded-memory k-way
+//!   merging of unbounded sorted streams (FLiMS-style block mergers
+//!   composed into a lane-batched merge tree) and the run-formation +
+//!   spill external sorter behind `loms sort`.
 //! * [`bench`] — figure/table regeneration harness shared by `benches/`.
 //!
 //! See `rust/DESIGN.md` for the system inventory and
@@ -27,4 +31,5 @@ pub mod coordinator;
 pub mod fpga;
 pub mod runtime;
 pub mod sortnet;
+pub mod stream;
 pub mod util;

@@ -6,18 +6,26 @@
 //!   goldens  [--dir tests/golden]                  write the cross-check set
 //!   validate --kind K [options]                    exhaustive 0-1 validation
 //!   serve    [--artifacts DIR] [--requests N]      run the merge service demo
-//!   sort     [--n N] [--chunk C] [--artifacts DIR] external-sort driver
+//!   sort     [--engine stream|ladder] [--n N] [--input F [--output F]]
+//!            [--r R] [--run-len L] [--fanin F] [--spill DIR]
+//!            [--ladder-runs true] [--chunk C] [--artifacts DIR]
+//!            external sort: bounded-memory streaming engine (default)
+//!            or the service merge-ladder path
 //!   selftest                                       quick end-to-end check
 //!
 //! (Arg parsing is hand-rolled: the offline build vendors no clap.)
 
 use anyhow::{anyhow, bail, Context, Result};
 use loms::bench::figures;
-use loms::coordinator::{planner, MergeService, PjrtBackend, ServiceConfig, SoftwareBackend};
+use loms::coordinator::{
+    planner, Backend, MergeService, PjrtBackend, ServiceConfig, SoftwareBackend,
+};
 use loms::sortnet::validate::{validate_median_01, validate_merge_01};
 use loms::sortnet::{batcher, json, loms as lomsnet, mwms, s2ms, MergeDevice};
+use loms::stream::{self, ExtSortConfig, RunFormer};
 use loms::util::Rng;
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 fn main() {
@@ -98,6 +106,37 @@ fn golden_set() -> Vec<(&'static str, MergeDevice)> {
 
 fn artifacts_dir(o: &HashMap<String, String>) -> String {
     o.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into())
+}
+
+/// Block size R for the streaming engine: the smallest square 2-way
+/// shape in the artifact set (compiled artifacts when built, the
+/// default software set otherwise), so the stream kernel mirrors a
+/// shape the service actually serves.
+fn default_block_r(o: &HashMap<String, String>) -> usize {
+    let dir = artifacts_dir(o);
+    let metas = if Path::new(&dir).join("manifest.json").exists() {
+        match loms::runtime::Manifest::load(&dir) {
+            Ok(m) => m.artifacts,
+            Err(e) => {
+                eprintln!("note: ignoring unreadable artifact manifest for --r default: {e:#}");
+                Vec::new()
+            }
+        }
+    } else {
+        SoftwareBackend::default_set().artifacts()
+    };
+    metas.iter().filter_map(|m| m.square_2way()).min().unwrap_or(stream::DEFAULT_R)
+}
+
+/// Two ensure-and-report lines shared by every `sort` engine.
+fn report_sorted(sorted: &[u32], n: usize, label: &str, dt: Duration) -> Result<()> {
+    anyhow::ensure!(sorted.windows(2).all(|w| w[0] <= w[1]), "output not sorted!");
+    anyhow::ensure!(sorted.len() == n, "lost keys");
+    println!(
+        "{label} sorted {n} keys in {dt:?} ({:.2} Mkeys/s)",
+        n as f64 / dt.as_secs_f64() / 1e6
+    );
+    Ok(())
 }
 
 fn start_service(o: &HashMap<String, String>) -> Result<(MergeService, &'static str)> {
@@ -246,20 +285,85 @@ fn run(args: &[String]) -> Result<()> {
             Ok(())
         }
         "sort" => {
+            let engine = o.get("engine").map(String::as_str).unwrap_or("stream");
+            // Valued flag (`--ladder-runs true`): the opts parser always
+            // consumes the next token as the value, so a bare flag would
+            // swallow the following option.
+            let ladder_runs = o.get("ladder-runs").map(String::as_str) == Some("true");
+            if engine == "ladder" {
+                // The service merge-ladder path (phases 1–2 through the
+                // batched service, phase 3 on the stream engine). The
+                // stream-engine options don't apply here — reject them
+                // instead of silently ignoring them.
+                for flag in ["input", "output", "r", "run-len", "fanin", "spill", "ladder-runs"] {
+                    anyhow::ensure!(
+                        !o.contains_key(flag),
+                        "--{flag} only applies to --engine stream"
+                    );
+                }
+                let n = get_usize(&o, "n", 1_000_000)?;
+                let chunk = get_usize(&o, "chunk", 32)?;
+                let (svc, backend) = start_service(&o)?;
+                let mut rng = Rng::new(2);
+                let data: Vec<u32> = (0..n).map(|_| rng.next_u32() >> 1).collect();
+                let t0 = Instant::now();
+                let (sorted, stats) = planner::external_sort(&svc, &data, chunk, 512)?;
+                report_sorted(&sorted, n, &format!("backend={backend}"), t0.elapsed())?;
+                println!("{stats:?}");
+                return Ok(());
+            }
+            anyhow::ensure!(engine == "stream", "unknown --engine {engine:?} (stream|ladder)");
+            let r = match o.get("r") {
+                Some(v) => v.parse().with_context(|| format!("--r {v:?}"))?,
+                None => default_block_r(&o),
+            };
+            let cfg = ExtSortConfig {
+                run_len: get_usize(&o, "run-len", 1 << 16)?,
+                r,
+                max_fanin: get_usize(&o, "fanin", 64)?,
+                spill_dir: o.get("spill").map(PathBuf::from),
+            };
+            if let Some(input) = o.get("input") {
+                // File-to-file: bounded memory end to end.
+                anyhow::ensure!(!ladder_runs, "--ladder-runs does not apply to --input sorts");
+                let output = o.get("output").cloned().unwrap_or_else(|| format!("{input}.sorted"));
+                let t0 = Instant::now();
+                let stats = stream::extsort_file(Path::new(input), Path::new(&output), &cfg)?;
+                let dt = t0.elapsed();
+                println!(
+                    "sorted {} keys (R={r}) {input} → {output} in {dt:?} ({:.2} Mkeys/s)",
+                    stats.keys,
+                    stats.keys as f64 / dt.as_secs_f64() / 1e6
+                );
+                println!("{stats:?}");
+                return Ok(());
+            }
             let n = get_usize(&o, "n", 1_000_000)?;
-            let chunk = get_usize(&o, "chunk", 32)?;
-            let (svc, backend) = start_service(&o)?;
             let mut rng = Rng::new(2);
-            let data: Vec<u32> = (0..n).map(|_| rng.next_u32() >> 1).collect();
-            let t0 = Instant::now();
-            let (sorted, stats) = planner::external_sort(&svc, &data, chunk, 512)?;
-            let dt = t0.elapsed();
-            anyhow::ensure!(sorted.windows(2).all(|w| w[0] <= w[1]), "output not sorted!");
-            anyhow::ensure!(sorted.len() == n, "lost keys");
-            println!(
-                "backend={backend} sorted {n} keys in {dt:?} ({:.2} Mkeys/s)",
-                n as f64 / dt.as_secs_f64() / 1e6
-            );
+            // The pure stream engine handles the full u32 domain; the
+            // ladder run-former goes through the service, whose keys
+            // must stay below the PAD sentinel.
+            let shift = u32::from(ladder_runs);
+            let data: Vec<u32> = (0..n).map(|_| rng.next_u32() >> shift).collect();
+            let (sorted, stats, dt) = if ladder_runs {
+                let (svc, backend) = start_service(&o)?;
+                let chunk = get_usize(&o, "chunk", 32)?;
+                let t0 = Instant::now();
+                let (sorted, stats) = stream::extsort_with(
+                    &data,
+                    &cfg,
+                    &RunFormer::Ladder { service: &svc, chunk, max_network: 512 },
+                )?;
+                let dt = t0.elapsed();
+                println!("runs formed through the {backend} merge ladder");
+                svc.shutdown();
+                (sorted, stats, dt)
+            } else {
+                let t0 = Instant::now();
+                let (sorted, stats) = stream::extsort(&data, &cfg)?;
+                (sorted, stats, t0.elapsed())
+            };
+            report_sorted(&sorted, n, &format!("stream (R={r})"), dt)?;
             println!("{stats:?}");
             Ok(())
         }

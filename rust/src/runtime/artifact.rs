@@ -32,6 +32,19 @@ pub struct ArtifactMeta {
     pub device: String,
 }
 
+impl ArtifactMeta {
+    /// `Some(r)` when this artifact is a square 2-way merger (`r + r`
+    /// lists) — the shape the streaming engine's block kernel mirrors.
+    /// `loms sort` uses it to pick a block size R that matches a
+    /// compiled artifact instead of hard-coding one.
+    pub fn square_2way(&self) -> Option<usize> {
+        match self.list_sizes[..] {
+            [a, b] if a == b => Some(a),
+            _ => None,
+        }
+    }
+}
+
 /// The parsed manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
@@ -115,6 +128,26 @@ mod tests {
         assert_eq!(a.batch, 64);
         assert!(m.hlo_path(a).ends_with("m1.hlo.txt"));
         let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn square_2way_detection() {
+        let mut a = ArtifactMeta {
+            name: "x".into(),
+            file: String::new(),
+            list_sizes: vec![32, 32],
+            batch: 1,
+            total: 64,
+            block_b: 1,
+            plan_steps: 0,
+            hw_stages: 0,
+            device: String::new(),
+        };
+        assert_eq!(a.square_2way(), Some(32));
+        a.list_sizes = vec![32, 16];
+        assert_eq!(a.square_2way(), None);
+        a.list_sizes = vec![7, 7, 7];
+        assert_eq!(a.square_2way(), None);
     }
 
     #[test]

@@ -621,6 +621,30 @@ pub fn run_view_batch_sharded<T: Copy + Ord + Default + Send + Sync>(
     })
 }
 
+/// View-based batch execution with the standard shard policy applied:
+/// shards across cores when [`auto_threads`] says the batch amortizes
+/// thread spawn, otherwise runs single-threaded on the caller's
+/// `scratch`. The one entry point shared by every tile-direct consumer
+/// — [`crate::coordinator::SoftwareBackend`]'s serving path and the
+/// streaming merge engine's block kernel
+/// ([`crate::stream::merge2::BlockKernel`]) — so the policy lives in
+/// exactly one place.
+pub fn run_view_batch_auto<T: Copy + Ord + Default + Send + Sync>(
+    lane: &LanePlan,
+    scalar: &CompiledPlan,
+    rows: &[&[Vec<T>]],
+    pad: T,
+    scratch: &mut LaneScratch<T>,
+    outs: &mut [&mut [T]],
+) -> Result<(), PreconditionViolation> {
+    let threads = auto_threads(rows.len(), scalar.n());
+    if threads > 1 {
+        run_view_batch_sharded(lane, scalar, rows, pad, threads, outs)
+    } else {
+        lane.run_view_batch_into(scalar, rows, pad, scratch, outs)
+    }
+}
+
 /// Shard-count policy for [`crate::coordinator::SoftwareBackend`]: one
 /// shard per core, but only when every shard gets at least two full
 /// tiles AND each shard carries enough values (`batch * row_values`) to
@@ -909,6 +933,28 @@ mod tests {
             let mut outs: Vec<&mut [u32]> = merged.iter_mut().map(|v| v.as_mut_slice()).collect();
             run_view_batch_sharded(&lane, &plan, &rows, PAD, threads, &mut outs).unwrap();
             assert_eq!(merged, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn auto_view_path_matches_explicit_paths() {
+        // run_view_batch_auto must be byte-exact with the explicit view
+        // executors on both sides of the shard threshold.
+        const PAD: u32 = u32::MAX;
+        let d = loms_2way(8, 8, 2);
+        let plan = CompiledPlan::compile_auto(&d).unwrap();
+        let lane = LanePlan::compile(&plan);
+        let mut rng = Rng::new(0xA07);
+        for real in [3usize, 4 * LANES + 7] {
+            let reqs = ragged_rows(&mut rng, &d.list_sizes, real, 1 << 20);
+            let want = padded_reference(&lane, &plan, &reqs, PAD);
+            let rows: Vec<&[Vec<u32>]> = reqs.iter().map(|r| r.as_slice()).collect();
+            let mut merged: Vec<Vec<u32>> =
+                reqs.iter().map(|r| vec![0u32; r.iter().map(Vec::len).sum()]).collect();
+            let mut outs: Vec<&mut [u32]> = merged.iter_mut().map(|v| v.as_mut_slice()).collect();
+            run_view_batch_auto(&lane, &plan, &rows, PAD, &mut LaneScratch::new(), &mut outs)
+                .unwrap();
+            assert_eq!(merged, want, "real={real}");
         }
     }
 

@@ -1,0 +1,481 @@
+//! External sorting in bounded memory: run formation + spill + a
+//! streaming k-way merge through the LOMS tile kernels.
+//!
+//! Phase 1 chunks the input into `run_len`-key runs and sorts each —
+//! either directly ([`RunFormer::Std`]) or through the merge-network
+//! ladder of a running [`MergeService`] ([`RunFormer::Ladder`], the
+//! planner's batch sorters). Runs live in memory or spill to a file of
+//! little-endian `u32` keys. Phase 2 repeatedly merges groups of at
+//! most `max_fanin` runs through [`MergeTree`] — each pass streams run
+//! to run, never holding more than O(`max_fanin`·R) keys — until at
+//! most `max_fanin` runs remain. Phase 3 streams the final k-way merge
+//! to the caller (a `Vec` or an output file).
+//!
+//! With spilling enabled the resident set is O(`run_len` +
+//! `max_fanin`·R) keys however large the input — the bounded-memory
+//! story the fixed-width merge devices themselves cannot provide.
+
+use super::merge2::BlockKernel;
+use super::source::{boxed, FileRunStream, SliceStream, SortedStream};
+use super::tree::{MergeTree, DEFAULT_R};
+use crate::coordinator::{planner, MergeService};
+use anyhow::{Context, Result};
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Keys pulled from the merge tree per drain step.
+const DRAIN: usize = 4096;
+
+/// External-sort tuning.
+#[derive(Debug, Clone)]
+pub struct ExtSortConfig {
+    /// Phase-1 run length in keys.
+    pub run_len: usize,
+    /// Merge-tree block size R (the `loms2` R+R kernel shape).
+    pub r: usize,
+    /// Maximum runs merged per tree (≥ 2); more runs ⇒ extra passes.
+    pub max_fanin: usize,
+    /// Spill runs to files under this directory; `None` keeps runs in
+    /// memory (merge passes still stream block by block).
+    pub spill_dir: Option<PathBuf>,
+}
+
+impl Default for ExtSortConfig {
+    fn default() -> Self {
+        ExtSortConfig { run_len: 1 << 16, r: DEFAULT_R, max_fanin: 64, spill_dir: None }
+    }
+}
+
+impl ExtSortConfig {
+    /// Shape checks plus the one kernel compile every tree of this sort
+    /// will share (`r` is validated by the compile itself).
+    fn validate(&self) -> Result<BlockKernel> {
+        anyhow::ensure!(self.run_len >= 1, "run_len must be >= 1");
+        anyhow::ensure!(self.max_fanin >= 2, "max_fanin must be >= 2");
+        BlockKernel::new(self.r)
+    }
+}
+
+/// External-sort accounting.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExtSortStats {
+    pub keys: usize,
+    /// Phase-1 runs formed.
+    pub runs: usize,
+    /// Intermediate merge passes (0 when `runs ≤ max_fanin`).
+    pub merge_passes: usize,
+    /// Runs written to spill files (phase 1 + intermediate passes).
+    pub spilled_runs: usize,
+    /// Bytes written to spill files.
+    pub spill_bytes: u64,
+}
+
+/// How phase 1 sorts each run.
+pub enum RunFormer<'a> {
+    /// `sort_unstable` per run — handles the full `u32` domain.
+    Std,
+    /// The merge-network ladder through a running service (the
+    /// planner's batch sorters: chunk, merge level by level, stream the
+    /// survivors). Inherits the service's key-domain contract (real
+    /// keys < `u32::MAX`).
+    Ladder { service: &'a MergeService, chunk: usize, max_network: usize },
+}
+
+fn sort_run(former: &RunFormer<'_>, keys: &[u32]) -> Result<Vec<u32>> {
+    match former {
+        RunFormer::Std => {
+            let mut v = keys.to_vec();
+            v.sort_unstable();
+            Ok(v)
+        }
+        RunFormer::Ladder { service, chunk, max_network } => {
+            Ok(planner::external_sort(service, keys, *chunk, *max_network)?.0)
+        }
+    }
+}
+
+/// LE-encode `keys` into the reusable `bytes` buffer.
+fn encode_keys(keys: &[u32], bytes: &mut Vec<u8>) {
+    bytes.clear();
+    bytes.reserve(keys.len() * 4);
+    for &k in keys {
+        bytes.extend_from_slice(&k.to_le_bytes());
+    }
+}
+
+/// Monotonic spill-file id — unique across concurrent sorts in one
+/// process; the pid keeps parallel processes apart.
+fn next_spill_path(dir: &Path) -> PathBuf {
+    static NEXT: AtomicU64 = AtomicU64::new(0);
+    let id = NEXT.fetch_add(1, Ordering::Relaxed);
+    dir.join(format!("loms-spill-{}-{id}.u32", std::process::id()))
+}
+
+/// Append-only writer for a spill file of back-to-back sorted runs.
+struct SpillWriter {
+    w: BufWriter<File>,
+    path: PathBuf,
+    runs: Vec<(u64, u64)>,
+    /// Keys written so far.
+    pos: u64,
+    /// Start of the open run, if any.
+    cur: Option<u64>,
+    /// Reusable LE-encoding buffer — one `write_all` per chunk, not per
+    /// key (this sits on the disk hot path of every pass).
+    bytes: Vec<u8>,
+}
+
+impl SpillWriter {
+    fn create(path: PathBuf) -> Result<SpillWriter> {
+        let f = File::create(&path)
+            .with_context(|| format!("creating spill file {}", path.display()))?;
+        Ok(SpillWriter {
+            w: BufWriter::new(f),
+            path,
+            runs: Vec::new(),
+            pos: 0,
+            cur: None,
+            bytes: Vec::new(),
+        })
+    }
+
+    fn begin_run(&mut self) {
+        debug_assert!(self.cur.is_none());
+        self.cur = Some(self.pos);
+    }
+
+    fn write_keys(&mut self, keys: &[u32]) -> Result<()> {
+        encode_keys(keys, &mut self.bytes);
+        self.w.write_all(&self.bytes)?;
+        self.pos += keys.len() as u64;
+        Ok(())
+    }
+
+    fn end_run(&mut self) {
+        let start = self.cur.take().expect("end_run without begin_run");
+        self.runs.push((start, self.pos - start));
+    }
+
+    fn push_run(&mut self, keys: &[u32]) -> Result<()> {
+        self.begin_run();
+        self.write_keys(keys)?;
+        self.end_run();
+        Ok(())
+    }
+
+    fn finish(mut self) -> Result<(PathBuf, Vec<(u64, u64)>)> {
+        self.w.flush()?;
+        Ok((self.path, self.runs))
+    }
+}
+
+/// Where the current generation of runs lives.
+enum RunStore {
+    Mem(Vec<Vec<u32>>),
+    File { path: PathBuf, runs: Vec<(u64, u64)> },
+}
+
+impl RunStore {
+    fn count(&self) -> usize {
+        match self {
+            RunStore::Mem(runs) => runs.len(),
+            RunStore::File { runs, .. } => runs.len(),
+        }
+    }
+
+    /// Open streams over runs `[lo, hi)`.
+    fn open(&self, lo: usize, hi: usize) -> Result<Vec<Box<dyn SortedStream + '_>>> {
+        match self {
+            RunStore::Mem(runs) => {
+                Ok(runs[lo..hi].iter().map(|r| boxed(SliceStream::new(r))).collect())
+            }
+            RunStore::File { path, runs } => runs[lo..hi]
+                .iter()
+                .map(|&(start, len)| Ok(boxed(FileRunStream::open(path, start, len)?)))
+                .collect(),
+        }
+    }
+
+    fn cleanup(self) {
+        if let RunStore::File { path, .. } = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// Drain a tree into `out`, handing the shared kernel back for the
+/// next tree.
+fn drain_to_vec(mut tree: MergeTree<'_>, out: &mut Vec<u32>) -> Result<BlockKernel> {
+    while tree.next_chunk(DRAIN, out)? > 0 {}
+    Ok(tree.into_kernel())
+}
+
+/// One intermediate pass: merge groups of `max_fanin` runs into the
+/// next generation (memory→memory or spill→spill), then drop the old
+/// generation. The kernel threads through every tree of the pass.
+fn merge_pass(
+    store: RunStore,
+    cfg: &ExtSortConfig,
+    stats: &mut ExtSortStats,
+    mut kernel: BlockKernel,
+) -> Result<(RunStore, BlockKernel)> {
+    let count = store.count();
+    let next = match &store {
+        RunStore::Mem(_) => {
+            let mut runs = Vec::with_capacity(count.div_ceil(cfg.max_fanin));
+            let mut lo = 0;
+            while lo < count {
+                let hi = (lo + cfg.max_fanin).min(count);
+                let mut run = Vec::new();
+                let tree = MergeTree::with_kernel(store.open(lo, hi)?, kernel);
+                kernel = drain_to_vec(tree, &mut run)?;
+                runs.push(run);
+                lo = hi;
+            }
+            RunStore::Mem(runs)
+        }
+        RunStore::File { path, .. } => {
+            let dir = path.parent().map(Path::to_path_buf).unwrap_or_else(|| PathBuf::from("."));
+            let mut w = SpillWriter::create(next_spill_path(&dir))?;
+            let mut chunk = Vec::with_capacity(DRAIN);
+            let mut lo = 0;
+            while lo < count {
+                let hi = (lo + cfg.max_fanin).min(count);
+                let mut tree = MergeTree::with_kernel(store.open(lo, hi)?, kernel);
+                w.begin_run();
+                loop {
+                    chunk.clear();
+                    if tree.next_chunk(DRAIN, &mut chunk)? == 0 {
+                        break;
+                    }
+                    w.write_keys(&chunk)?;
+                }
+                w.end_run();
+                kernel = tree.into_kernel();
+                lo = hi;
+            }
+            let (path, runs) = w.finish()?;
+            stats.spilled_runs += runs.len();
+            stats.spill_bytes += runs.iter().map(|&(_, len)| len * 4).sum::<u64>();
+            RunStore::File { path, runs }
+        }
+    };
+    store.cleanup();
+    Ok((next, kernel))
+}
+
+/// Sort `data` with default run formation (`sort_unstable` per run).
+pub fn extsort(data: &[u32], cfg: &ExtSortConfig) -> Result<(Vec<u32>, ExtSortStats)> {
+    extsort_with(data, cfg, &RunFormer::Std)
+}
+
+/// Sort `data`: form runs with `former`, optionally spill them, merge
+/// pass by pass, stream the final k-way merge into a `Vec`.
+pub fn extsort_with(
+    data: &[u32],
+    cfg: &ExtSortConfig,
+    former: &RunFormer<'_>,
+) -> Result<(Vec<u32>, ExtSortStats)> {
+    let mut kernel = cfg.validate()?;
+    let mut stats = ExtSortStats { keys: data.len(), ..Default::default() };
+    if data.is_empty() {
+        return Ok((Vec::new(), stats));
+    }
+    let mut store = match &cfg.spill_dir {
+        None => {
+            let runs: Vec<Vec<u32>> = data
+                .chunks(cfg.run_len)
+                .map(|c| sort_run(former, c))
+                .collect::<Result<_>>()?;
+            RunStore::Mem(runs)
+        }
+        Some(dir) => {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating spill dir {}", dir.display()))?;
+            let mut w = SpillWriter::create(next_spill_path(dir))?;
+            for c in data.chunks(cfg.run_len) {
+                w.push_run(&sort_run(former, c)?)?;
+            }
+            let (path, runs) = w.finish()?;
+            stats.spilled_runs += runs.len();
+            stats.spill_bytes += 4 * data.len() as u64;
+            RunStore::File { path, runs }
+        }
+    };
+    stats.runs = store.count();
+    while store.count() > cfg.max_fanin {
+        (store, kernel) = merge_pass(store, cfg, &mut stats, kernel)?;
+        stats.merge_passes += 1;
+    }
+    let mut out = Vec::with_capacity(data.len());
+    drain_to_vec(MergeTree::with_kernel(store.open(0, store.count())?, kernel), &mut out)?;
+    store.cleanup();
+    Ok((out, stats))
+}
+
+/// Sort a file of little-endian `u32` keys into `output`, never holding
+/// more than O(`run_len` + `max_fanin`·R) keys in memory. Runs spill
+/// under `cfg.spill_dir` (defaulting to `output`'s directory). Backs
+/// the `loms sort --input/--output` CLI path.
+pub fn extsort_file(input: &Path, output: &Path, cfg: &ExtSortConfig) -> Result<ExtSortStats> {
+    let mut kernel = cfg.validate()?;
+    let bytes = std::fs::metadata(input)
+        .with_context(|| format!("stat {}", input.display()))?
+        .len();
+    anyhow::ensure!(bytes % 4 == 0, "{}: not a whole number of u32 keys", input.display());
+    let total = bytes / 4;
+    let mut stats = ExtSortStats { keys: total as usize, ..Default::default() };
+    let dir = cfg
+        .spill_dir
+        .clone()
+        .or_else(|| output.parent().map(Path::to_path_buf).filter(|p| !p.as_os_str().is_empty()))
+        .unwrap_or_else(|| PathBuf::from("."));
+    std::fs::create_dir_all(&dir).with_context(|| format!("creating spill dir {}", dir.display()))?;
+    // Phase 1: read run_len-key windows, sort, spill.
+    let mut store = {
+        let mut rd = BufReader::new(
+            File::open(input).with_context(|| format!("opening {}", input.display()))?,
+        );
+        let mut w = SpillWriter::create(next_spill_path(&dir))?;
+        let mut buf = vec![0u8; cfg.run_len * 4];
+        let mut remaining = total;
+        while remaining > 0 {
+            let n = (cfg.run_len as u64).min(remaining) as usize;
+            rd.read_exact(&mut buf[..n * 4]).context("reading input keys")?;
+            let mut run: Vec<u32> = buf[..n * 4]
+                .chunks_exact(4)
+                .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            run.sort_unstable();
+            w.push_run(&run)?;
+            remaining -= n as u64;
+        }
+        let (path, runs) = w.finish()?;
+        stats.spilled_runs += runs.len();
+        stats.spill_bytes += bytes;
+        RunStore::File { path, runs }
+    };
+    stats.runs = store.count();
+    while store.count() > cfg.max_fanin {
+        (store, kernel) = merge_pass(store, cfg, &mut stats, kernel)?;
+        stats.merge_passes += 1;
+    }
+    // Phase 3: stream the final merge straight into the output file.
+    {
+        let mut w = BufWriter::new(
+            File::create(output).with_context(|| format!("creating {}", output.display()))?,
+        );
+        let mut tree = MergeTree::with_kernel(store.open(0, store.count())?, kernel);
+        let mut chunk = Vec::with_capacity(DRAIN);
+        let mut out_bytes = Vec::new();
+        loop {
+            chunk.clear();
+            if tree.next_chunk(DRAIN, &mut chunk)? == 0 {
+                break;
+            }
+            encode_keys(&chunk, &mut out_bytes);
+            w.write_all(&out_bytes)?;
+        }
+        w.flush()?;
+    }
+    store.cleanup();
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("loms_extsort_{tag}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn in_memory_sort_matches_std() {
+        let mut rng = Rng::new(0xE5);
+        let data: Vec<u32> = (0..10_000).map(|_| rng.next_u32()).collect();
+        let cfg = ExtSortConfig { run_len: 700, r: 8, ..Default::default() };
+        let (got, stats) = extsort(&data, &cfg).unwrap();
+        let mut want = data;
+        want.sort_unstable();
+        assert_eq!(got, want);
+        assert_eq!(stats.runs, 10_000usize.div_ceil(700));
+        assert_eq!(stats.merge_passes, 0);
+        assert_eq!(stats.spilled_runs, 0);
+    }
+
+    #[test]
+    fn multi_pass_spill_sort_matches_std() {
+        let dir = tmp_dir("multipass");
+        let mut rng = Rng::new(0x5111);
+        // Full-domain keys, u32::MAX included (Std former).
+        let mut data: Vec<u32> = (0..20_000).map(|_| rng.next_u32()).collect();
+        data.extend([u32::MAX, u32::MAX - 1, u32::MAX]);
+        let cfg = ExtSortConfig {
+            run_len: 512,
+            r: 8,
+            max_fanin: 3,
+            spill_dir: Some(dir.clone()),
+        };
+        let (got, stats) = extsort(&data, &cfg).unwrap();
+        let mut want = data;
+        want.sort_unstable();
+        assert_eq!(got, want);
+        assert!(stats.merge_passes >= 2, "fanin 3 over {} runs: {stats:?}", stats.runs);
+        assert!(stats.spilled_runs > stats.runs, "intermediate runs spilled too");
+        assert!(stats.spill_bytes > 0);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn file_to_file_round_trip() {
+        let dir = tmp_dir("file");
+        std::fs::create_dir_all(&dir).unwrap();
+        let input = dir.join("input.u32");
+        let output = dir.join("sorted.u32");
+        let mut rng = Rng::new(0xF17E);
+        let data: Vec<u32> = (0..5_000).map(|_| rng.next_u32()).collect();
+        let mut f = File::create(&input).unwrap();
+        for &k in &data {
+            f.write_all(&k.to_le_bytes()).unwrap();
+        }
+        drop(f);
+        let cfg = ExtSortConfig {
+            run_len: 333,
+            r: 8,
+            max_fanin: 4,
+            spill_dir: Some(dir.clone()),
+        };
+        let stats = extsort_file(&input, &output, &cfg).unwrap();
+        assert_eq!(stats.keys, data.len());
+        assert!(stats.merge_passes >= 1);
+        let got: Vec<u32> = std::fs::read(&output)
+            .unwrap()
+            .chunks_exact(4)
+            .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        let mut want = data;
+        want.sort_unstable();
+        assert_eq!(got, want);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        let cfg = ExtSortConfig { r: 4, ..Default::default() };
+        assert_eq!(extsort(&[], &cfg).unwrap().0, Vec::<u32>::new());
+        assert_eq!(extsort(&[9], &cfg).unwrap().0, vec![9]);
+        let dup = vec![7u32; 500];
+        assert_eq!(extsort(&dup, &cfg).unwrap().0, dup);
+    }
+
+    #[test]
+    fn config_validation_rejects_nonsense() {
+        assert!(ExtSortConfig { run_len: 0, ..Default::default() }.validate().is_err());
+        assert!(ExtSortConfig { max_fanin: 1, ..Default::default() }.validate().is_err());
+        assert!(ExtSortConfig { r: 0, ..Default::default() }.validate().is_err());
+    }
+}

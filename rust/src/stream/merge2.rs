@@ -1,0 +1,339 @@
+//! FLiMS-style 2-way block merging: bounded head buffers pumped through
+//! the compiled `loms2` R+R kernel.
+//!
+//! The paper's merge networks are fixed-width block devices; this module
+//! deploys one the way FLiMS (Papaphilippou et al.) deploys its R+R
+//! merger — as the kernel inside an *unbounded* 2-way merge. Each merge
+//! node keeps a retained **high buffer** (≤ R keys) and repeatedly:
+//!
+//! 1. picks the input whose next unconsumed key is smaller (the classic
+//!    refill rule — exhausted inputs count as +∞),
+//! 2. takes a block of up to R keys from it,
+//! 3. merges `high ∪ block` through the R+R network in one pass,
+//! 4. **emits the low cone** (a provably safe prefix, see
+//!    [`BlockMerger2::emit_count`]) and **retains the high cone** as the
+//!    next high buffer — one kernel run yields both.
+//!
+//! Padding never uses an interpreted sentinel: the kernel's ragged view
+//! path fills short slots with `u32::MAX` *values*, but the merger
+//! tracks real fill counts (`h`, `m`) and slices the sorted output by
+//! count. Since the output of a merge network is determined by its
+//! input multiset, the first `h + m` outputs equal the real multiset
+//! even when genuine `u32::MAX` keys are present — so, unlike the
+//! serving path, the full `u32` domain is legal here.
+//!
+//! [`BlockKernel`] owns the compiled artifacts ([`CompiledPlan`] +
+//! [`LanePlan`]) and executes *batches* of independent node steps as
+//! ragged view rows, so a merge tree fills SIMD lanes with unrelated
+//! nodes ([`super::tree`]).
+
+use crate::sortnet::lanes::{self, LanePlan, LaneScratch};
+use crate::sortnet::loms;
+use crate::sortnet::plan::CompiledPlan;
+use anyhow::{anyhow, Result};
+
+/// Value filling unused kernel slots. Never interpreted on read — the
+/// merger slices outputs by tracked fill count — so real `u32::MAX`
+/// keys are indistinguishable from fill only where that is harmless
+/// (sorted outputs are determined by the input multiset).
+pub(crate) const FILL: u32 = u32::MAX;
+
+/// The compiled `loms2` R+R block kernel shared by every node of a
+/// merge tree: scalar plan (sub-tile tails), lane plan (SIMD tiles) and
+/// reusable scratch.
+pub struct BlockKernel {
+    r: usize,
+    plan: CompiledPlan,
+    lane: LanePlan,
+    scratch: LaneScratch<u32>,
+}
+
+impl BlockKernel {
+    /// Compile the `loms_2way(r, r, 2)` device into the two-tier
+    /// executable form (pruned where the auto policy allows).
+    pub fn new(r: usize) -> Result<Self> {
+        anyhow::ensure!(r >= 1, "block size R must be >= 1");
+        let d = loms::loms_2way(r, r, 2);
+        let plan = CompiledPlan::compile_auto(&d).map_err(|e| anyhow!("{}: {e}", d.name))?;
+        let lane = LanePlan::compile(&plan);
+        Ok(BlockKernel { r, plan, lane, scratch: LaneScratch::new() })
+    }
+
+    /// Block size R (each input slot of the kernel).
+    pub fn r(&self) -> usize {
+        self.r
+    }
+
+    /// Compiled device name (diagnostics / stats).
+    pub fn device_name(&self) -> &str {
+        &self.plan.name
+    }
+
+    /// Execute one batch of independent node steps. `rows[i]` is a node's
+    /// `[high, block]` pair (each list sorted, ≤ R keys); `outs[i]` must
+    /// be exactly `h_i + m_i` wide and receives that node's merged keys.
+    /// Rows from different tree nodes batch together — full tiles run
+    /// lane-parallel (sharded across cores for large batches), the
+    /// remainder through the scalar plan's view path.
+    pub fn merge_rows(&mut self, rows: &[&[Vec<u32>]], outs: &mut [&mut [u32]]) {
+        let BlockKernel { plan, lane, scratch, .. } = self;
+        lanes::run_view_batch_auto(lane, plan, rows, FILL, scratch, outs)
+            .expect("fast-mode lane execution is infallible on sorted blocks");
+    }
+
+    /// Scalar single-pair convenience (tests, tiny merges): merge two
+    /// sorted lists (each ≤ R) and append the result to `out`.
+    #[cfg(test)]
+    fn merge_pair(&mut self, a: &[u32], b: &[u32], out: &mut Vec<u32>) {
+        use crate::sortnet::exec::ExecMode;
+        let lists = [a.to_vec(), b.to_vec()];
+        let row: &[Vec<u32>] = &lists;
+        let start = out.len();
+        out.resize(start + a.len() + b.len(), 0);
+        let dst = &mut out[start..];
+        let mut scratch = crate::sortnet::plan::PlanScratch::new();
+        self.plan
+            .run_view_batch_into(&[row], FILL, ExecMode::Fast, &mut scratch, &mut [dst])
+            .expect("fast-mode execution is infallible");
+    }
+}
+
+/// One streaming 2-way merge node: the retained high buffer, the staged
+/// input block, and the emit/retain arithmetic. Kernel-agnostic — the
+/// caller runs `[high, block]` through [`BlockKernel::merge_rows`] (or
+/// any bit-exact substitute) and hands the sorted result to
+/// [`Self::apply`].
+///
+/// Caller contract (the refill rule): a block is always taken from the
+/// input whose next unconsumed key is ≤ the other input's next key
+/// (exhausted-and-empty inputs count as +∞). [`super::tree::MergeTree`]
+/// enforces this; the safety proof below depends on it.
+#[derive(Debug, Default)]
+pub struct BlockMerger2 {
+    /// `lists[0]` = high buffer (sorted, ≤ R), `lists[1]` = staged block
+    /// (sorted, ≤ R) — exactly the kernel's two input slots.
+    lists: [Vec<u32>; 2],
+}
+
+impl BlockMerger2 {
+    pub fn new() -> Self {
+        BlockMerger2::default()
+    }
+
+    /// The retained high buffer.
+    pub fn high(&self) -> &[u32] {
+        &self.lists[0]
+    }
+
+    /// The kernel row view (`[high, block]`).
+    pub fn lists(&self) -> &[Vec<u32>] {
+        &self.lists
+    }
+
+    /// Clear and return the staging buffer for the next block; the
+    /// caller fills it with up to R keys from the chosen input.
+    pub fn stage_buf(&mut self) -> &mut Vec<u32> {
+        self.lists[1].clear();
+        &mut self.lists[1]
+    }
+
+    /// Keys in flight (`h + m`) — the kernel output width for this row.
+    pub fn width(&self) -> usize {
+        self.lists[0].len() + self.lists[1].len()
+    }
+
+    /// How many of the merged `h + m` keys may be emitted this step.
+    /// `other_head` is the non-chosen input's next unconsumed key
+    /// (`None` when that input is exhausted with nothing buffered).
+    ///
+    /// Safety argument — with `S = high ∪ block`, emitted = the `k`
+    /// smallest of `S`, every emitted key must precede every unconsumed
+    /// key `u`:
+    ///
+    /// * `u` from the chosen input: the input is ascending, so
+    ///   `u ≥ max(block)`; the k-th smallest of `S` is ≤ the k-th
+    ///   smallest of `block` whenever `k ≤ m` — hence the `k ≤ m` cap.
+    /// * `u` from the other input: `u ≥ other_head`. Every high-buffer
+    ///   key is ≤ `other_head` (each was consumed while its origin's
+    ///   head — then ≤ the other head by the refill rule — had not been
+    ///   passed), and `cnt` block keys are ≤ `other_head` by direct
+    ///   comparison; so ≥ `h + cnt` keys of `S` are ≤ `other_head`,
+    ///   and any `k ≤ h + cnt` is safe.
+    ///
+    /// `k = min(m, h + cnt)` also bounds the retained tail: the new
+    /// high buffer has `h + m − k ≤ max(h, m − 1) ≤ R` keys. In steady
+    /// state (full R-blocks, both inputs live) this is the classic
+    /// FLiMS schedule: emit R, retain R.
+    pub fn emit_count(&self, other_head: Option<u32>) -> usize {
+        let h = self.lists[0].len();
+        let m = self.lists[1].len();
+        let cnt = match other_head {
+            None => m,
+            Some(v) => self.lists[1].partition_point(|&x| x <= v),
+        };
+        m.min(h + cnt)
+    }
+
+    /// Consume one kernel output: `merged` is the sorted `h + m` keys of
+    /// this node's row, `k` the emit count chosen at staging time. The
+    /// low cone `merged[..k]` is appended to `emit`; the high cone
+    /// becomes the new high buffer; the staged block is cleared.
+    pub fn apply(&mut self, merged: &[u32], k: usize, emit: &mut Vec<u32>) {
+        debug_assert_eq!(merged.len(), self.width());
+        debug_assert!(k <= merged.len());
+        emit.extend_from_slice(&merged[..k]);
+        self.lists[0].clear();
+        self.lists[0].extend_from_slice(&merged[k..]);
+        self.lists[1].clear();
+    }
+
+    /// Endgame: both inputs exhausted and empty — the high buffer is the
+    /// sorted remainder. Appends it to `emit` and leaves the node empty.
+    pub fn flush(&mut self, emit: &mut Vec<u32>) {
+        debug_assert!(self.lists[1].is_empty(), "flush with a staged block");
+        emit.append(&mut self.lists[0]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn kernel_merges_ragged_pairs_exactly() {
+        let mut k = BlockKernel::new(8).unwrap();
+        assert_eq!(k.r(), 8);
+        assert!(k.device_name().contains("loms"));
+        let mut rng = Rng::new(0x57EA);
+        for _ in 0..50 {
+            let a = rng.sorted_list(rng.range(0, 9), 1000);
+            let b = rng.sorted_list(rng.range(0, 9), 1000);
+            let mut got = Vec::new();
+            k.merge_pair(&a, &b, &mut got);
+            let mut want = [a, b].concat();
+            want.sort_unstable();
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn kernel_batches_independent_rows() {
+        // Rows from unrelated "nodes" (different widths) through one
+        // batch call, across the tile boundary.
+        let mut kern = BlockKernel::new(4).unwrap();
+        let mut rng = Rng::new(0xBA7C);
+        let n_rows = crate::sortnet::lanes::LANES + 5;
+        let pairs: Vec<[Vec<u32>; 2]> = (0..n_rows)
+            .map(|_| {
+                [rng.sorted_list(rng.range(0, 5), 100), rng.sorted_list(rng.range(1, 5), 100)]
+            })
+            .collect();
+        let rows: Vec<&[Vec<u32>]> = pairs.iter().map(|p| &p[..]).collect();
+        let mut merged: Vec<Vec<u32>> =
+            pairs.iter().map(|p| vec![0u32; p[0].len() + p[1].len()]).collect();
+        let mut outs: Vec<&mut [u32]> = merged.iter_mut().map(|v| v.as_mut_slice()).collect();
+        kern.merge_rows(&rows, &mut outs);
+        for (p, got) in pairs.iter().zip(&merged) {
+            let mut want = [p[0].clone(), p[1].clone()].concat();
+            want.sort_unstable();
+            assert_eq!(&want, got);
+        }
+    }
+
+    #[test]
+    fn kernel_handles_max_value_keys_by_count() {
+        // u32::MAX keys collide with the internal fill value; slicing by
+        // count must still produce the exact multiset.
+        let mut k = BlockKernel::new(4).unwrap();
+        let a = vec![1, u32::MAX - 1, u32::MAX];
+        let b = vec![u32::MAX - 1, u32::MAX];
+        let mut got = Vec::new();
+        k.merge_pair(&a, &b, &mut got);
+        assert_eq!(got, vec![1, u32::MAX - 1, u32::MAX - 1, u32::MAX, u32::MAX]);
+    }
+
+    /// Drive the full refill loop over two in-memory streams with the
+    /// real kernel — the mathematical core of the streaming engine,
+    /// checked against std sort. Exercises ragged tails, duplicates,
+    /// one-sided exhaustion and `u32::MAX` keys.
+    fn run_two_stream(r: usize, a: &[u32], b: &[u32]) -> Vec<u32> {
+        let mut kern = BlockKernel::new(r).unwrap();
+        let mut node = BlockMerger2::new();
+        let (mut pa, mut pb) = (0usize, 0usize);
+        let mut out = Vec::new();
+        loop {
+            let (ha, hb) = (a.get(pa).copied(), b.get(pb).copied());
+            let (src, pos, other) = match (ha, hb) {
+                (None, None) => {
+                    node.flush(&mut out);
+                    return out;
+                }
+                (Some(x), Some(y)) if x <= y => (a, &mut pa, hb),
+                (Some(_), Some(_)) => (b, &mut pb, ha),
+                (Some(_), None) => (a, &mut pa, None),
+                (None, Some(_)) => (b, &mut pb, None),
+            };
+            let m = r.min(src.len() - *pos);
+            node.stage_buf().extend_from_slice(&src[*pos..*pos + m]);
+            *pos += m;
+            let k = node.emit_count(other);
+            let mut merged = vec![0u32; node.width()];
+            {
+                let rows: Vec<&[Vec<u32>]> = vec![node.lists()];
+                kern.merge_rows(&rows, &mut [&mut merged[..]]);
+            }
+            node.apply(&merged, k, &mut out);
+            assert!(node.high().len() <= r, "retained tail exceeds R");
+        }
+    }
+
+    #[test]
+    fn block_merger_matches_sort_on_random_streams() {
+        let mut rng = Rng::new(0xF11);
+        for case in 0..40 {
+            let r = [2usize, 3, 4, 8][rng.range(0, 4)];
+            let la = rng.range(0, 200);
+            let lb = rng.range(0, 200);
+            let max = if case % 3 == 0 { 8 } else { 1 << 20 }; // duplicate-heavy mix
+            let a = rng.sorted_list(la, max);
+            let b = rng.sorted_list(lb, max);
+            let got = run_two_stream(r, &a, &b);
+            let mut want = [a, b].concat();
+            want.sort_unstable();
+            assert_eq!(got, want, "case {case} r={r} la={la} lb={lb}");
+        }
+    }
+
+    #[test]
+    fn block_merger_survives_sentinel_adjacent_keys() {
+        // Regression: u32::MAX-1 / u32::MAX adjacent keys flow through
+        // the count-tracked fill path without corruption.
+        let a = vec![5, u32::MAX - 1, u32::MAX - 1, u32::MAX];
+        let b = vec![u32::MAX - 1, u32::MAX, u32::MAX];
+        let got = run_two_stream(2, &a, &b);
+        let mut want = [a, b].concat();
+        want.sort_unstable();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn steady_state_emits_full_blocks() {
+        // Balanced long inputs: after warmup every step runs the classic
+        // full schedule — emit R, retain R.
+        let r = 8;
+        let a: Vec<u32> = (0..512).map(|x| x * 2).collect();
+        let b: Vec<u32> = (0..512).map(|x| x * 2 + 1).collect();
+        let mut node = BlockMerger2::new();
+        node.stage_buf().extend_from_slice(&a[..r]);
+        let mut scratch = Vec::new();
+        let k0 = node.emit_count(Some(b[0]));
+        let mut merged: Vec<u32> = node.lists().concat();
+        merged.sort_unstable();
+        node.apply(&merged, k0, &mut scratch);
+        // Second step onward: full block staged against a full-ish high.
+        node.stage_buf().extend_from_slice(&b[..r]);
+        let k1 = node.emit_count(Some(a[r]));
+        assert_eq!(k1, r, "steady state emits a full low block");
+    }
+}

@@ -1,0 +1,34 @@
+//! Streaming merge engine: bounded-memory k-way merging of unbounded
+//! sorted streams through the compiled LOMS tile kernels.
+//!
+//! The paper's devices are fixed-width block mergers; their classic
+//! deployment (§II) is as the kernel inside a larger sorter. This
+//! subsystem is that deployment in software, the way FLiMS
+//! (Papaphilippou et al., arXiv:2112.05607) turns a fixed R+R merger
+//! into a streaming 2-way merger and hardware merge trees compose fixed
+//! mergers into k-way pipelines (arXiv:2310.07903):
+//!
+//! * [`source`] — the [`SortedStream`] trait and adapters (slices,
+//!   owned runs, ascending iterators, file-of-runs spill windows).
+//! * [`merge2`] — the FLiMS-style block merger: R-key head buffers, one
+//!   `loms2` R+R kernel pass per step, emit the low cone / retain the
+//!   high cone, refill from the consumed side. Fill is tracked by
+//!   count, never by sentinel, so the full `u32` domain is legal.
+//! * [`tree`] — [`MergeTree`]: a binary tree of block mergers with
+//!   bounded inter-node FIFOs; every scheduling round batches all ready
+//!   nodes through one lane-executor call, so independent tree nodes
+//!   fill SIMD lanes together. O(k·R) resident keys, any stream length.
+//! * [`extsort`] — run formation + spill + multi-pass streaming merge:
+//!   sorts arbitrarily large inputs (in-memory slices or files of
+//!   little-endian `u32` keys) in bounded memory. Backs the `loms sort`
+//!   CLI and replaces the planner's scalar heap as its phase-3 engine.
+
+pub mod extsort;
+pub mod merge2;
+pub mod source;
+pub mod tree;
+
+pub use extsort::{extsort, extsort_file, extsort_with, ExtSortConfig, ExtSortStats, RunFormer};
+pub use merge2::{BlockKernel, BlockMerger2};
+pub use source::{boxed, FileRunStream, IterStream, SliceStream, SortedStream, VecStream};
+pub use tree::{merge_k, merge_runs, MergeTree, TreeStats, DEFAULT_R};

@@ -1,0 +1,208 @@
+//! Sorted input sources for the streaming merge engine.
+//!
+//! A [`SortedStream`] is a pull-based producer of ascending `u32` keys —
+//! the streaming twin of the one-shot sorted lists the merge service
+//! accepts. Streams may be unbounded; consumers pull bounded chunks and
+//! never materialize the whole input. Unlike the service path, the full
+//! `u32` domain is legal here, `u32::MAX` included: the engine tracks
+//! fill counts instead of interpreting any sentinel value (see
+//! [`super::merge2`]).
+//!
+//! Adapters cover the three deployment shapes:
+//!
+//! * [`SliceStream`] / [`VecStream`] — in-memory sorted runs (the
+//!   planner's surviving runs, test fixtures).
+//! * [`IterStream`] — any ascending iterator, including infinite ones
+//!   (generators, decoded network feeds).
+//! * [`FileRunStream`] — one sorted run inside a file of little-endian
+//!   `u32` keys (the extsort spill format): seeks once, then reads
+//!   sequentially through its own handle.
+
+use anyhow::{Context, Result};
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom};
+use std::path::Path;
+
+/// A stream of ascending `u32` keys, pulled in bounded chunks.
+///
+/// Contract: keys are ascending across the *whole* stream (duplicates
+/// allowed), and `next_chunk` appends at most `max` keys to `out`,
+/// returning how many it appended. Returning `0` means the stream is
+/// exhausted — implementations must not return `0` transiently. A call
+/// may return fewer than `max` keys while data remains (e.g. a read
+/// straddling an internal buffer); callers that need a full block loop
+/// until satisfied or exhausted.
+pub trait SortedStream {
+    fn next_chunk(&mut self, max: usize, out: &mut Vec<u32>) -> Result<usize>;
+}
+
+/// Box an adapter for [`super::tree::MergeTree`]'s input list.
+pub fn boxed<'a>(s: impl SortedStream + 'a) -> Box<dyn SortedStream + 'a> {
+    Box::new(s)
+}
+
+/// A borrowed sorted slice as a stream.
+#[derive(Debug)]
+pub struct SliceStream<'a> {
+    data: &'a [u32],
+    pos: usize,
+}
+
+impl<'a> SliceStream<'a> {
+    pub fn new(data: &'a [u32]) -> Self {
+        debug_assert!(data.windows(2).all(|w| w[0] <= w[1]), "slice not sorted");
+        SliceStream { data, pos: 0 }
+    }
+}
+
+impl SortedStream for SliceStream<'_> {
+    fn next_chunk(&mut self, max: usize, out: &mut Vec<u32>) -> Result<usize> {
+        let n = max.min(self.data.len() - self.pos);
+        out.extend_from_slice(&self.data[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+/// An owned sorted run as a stream.
+#[derive(Debug)]
+pub struct VecStream {
+    data: Vec<u32>,
+    pos: usize,
+}
+
+impl VecStream {
+    pub fn new(data: Vec<u32>) -> Self {
+        debug_assert!(data.windows(2).all(|w| w[0] <= w[1]), "run not sorted");
+        VecStream { data, pos: 0 }
+    }
+}
+
+impl SortedStream for VecStream {
+    fn next_chunk(&mut self, max: usize, out: &mut Vec<u32>) -> Result<usize> {
+        let n = max.min(self.data.len() - self.pos);
+        out.extend_from_slice(&self.data[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+/// Any ascending iterator as a stream — the unbounded-input adapter.
+#[derive(Debug)]
+pub struct IterStream<I> {
+    iter: I,
+    #[cfg(debug_assertions)]
+    last: Option<u32>,
+}
+
+impl<I: Iterator<Item = u32>> IterStream<I> {
+    pub fn new(iter: I) -> Self {
+        IterStream {
+            iter,
+            #[cfg(debug_assertions)]
+            last: None,
+        }
+    }
+}
+
+impl<I: Iterator<Item = u32>> SortedStream for IterStream<I> {
+    fn next_chunk(&mut self, max: usize, out: &mut Vec<u32>) -> Result<usize> {
+        let mut n = 0;
+        while n < max {
+            let Some(x) = self.iter.next() else { break };
+            #[cfg(debug_assertions)]
+            {
+                debug_assert!(self.last.map_or(true, |p| p <= x), "iterator not ascending");
+                self.last = Some(x);
+            }
+            out.push(x);
+            n += 1;
+        }
+        Ok(n)
+    }
+}
+
+/// One sorted run inside a file of little-endian `u32` keys — the
+/// extsort spill format. Each run stream owns its own handle (one seek
+/// at open, sequential reads after), so any number of runs of the same
+/// file merge concurrently.
+#[derive(Debug)]
+pub struct FileRunStream {
+    file: File,
+    /// Keys left to read.
+    remaining: u64,
+    /// Reusable byte buffer for bulk reads.
+    buf: Vec<u8>,
+}
+
+impl FileRunStream {
+    /// Open the run spanning keys `[start, start + keys)` of `path`.
+    pub fn open(path: &Path, start: u64, keys: u64) -> Result<Self> {
+        let mut file =
+            File::open(path).with_context(|| format!("opening run file {}", path.display()))?;
+        file.seek(SeekFrom::Start(start * 4))
+            .with_context(|| format!("seeking run at key {start} in {}", path.display()))?;
+        Ok(FileRunStream { file, remaining: keys, buf: Vec::new() })
+    }
+}
+
+impl SortedStream for FileRunStream {
+    fn next_chunk(&mut self, max: usize, out: &mut Vec<u32>) -> Result<usize> {
+        let n = (max as u64).min(self.remaining) as usize;
+        if n == 0 {
+            return Ok(0);
+        }
+        self.buf.resize(n * 4, 0);
+        self.file.read_exact(&mut self.buf).context("reading spill run")?;
+        out.extend(self.buf.chunks_exact(4).map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]])));
+        self.remaining -= n as u64;
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    fn drain(s: &mut dyn SortedStream, chunk: usize) -> Vec<u32> {
+        let mut out = Vec::new();
+        while s.next_chunk(chunk, &mut out).unwrap() > 0 {}
+        out
+    }
+
+    #[test]
+    fn slice_and_vec_streams_drain_in_chunks() {
+        let data: Vec<u32> = (0..100).collect();
+        assert_eq!(drain(&mut SliceStream::new(&data), 7), data);
+        assert_eq!(drain(&mut VecStream::new(data.clone()), 100), data);
+        assert_eq!(drain(&mut SliceStream::new(&[]), 4), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn iter_stream_supports_unbounded_sources() {
+        // An infinite ascending iterator: pull a bounded prefix only.
+        let mut s = IterStream::new((0u32..).map(|x| x * 2));
+        let mut out = Vec::new();
+        assert_eq!(s.next_chunk(5, &mut out).unwrap(), 5);
+        assert_eq!(s.next_chunk(3, &mut out).unwrap(), 3);
+        assert_eq!(out, vec![0, 2, 4, 6, 8, 10, 12, 14]);
+    }
+
+    #[test]
+    fn file_run_stream_reads_its_window() {
+        let path = std::env::temp_dir().join(format!("loms_runfile_{}.u32", std::process::id()));
+        let keys: Vec<u32> = (0..50).map(|x| x * 3).collect();
+        let mut f = File::create(&path).unwrap();
+        for &k in &keys {
+            f.write_all(&k.to_le_bytes()).unwrap();
+        }
+        drop(f);
+        // Two runs over disjoint windows of the same file.
+        let mut a = FileRunStream::open(&path, 0, 20).unwrap();
+        let mut b = FileRunStream::open(&path, 20, 30).unwrap();
+        assert_eq!(drain(&mut a, 7), keys[..20].to_vec());
+        assert_eq!(drain(&mut b, 9), keys[20..].to_vec());
+        let _ = std::fs::remove_file(path);
+    }
+}

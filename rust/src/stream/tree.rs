@@ -1,0 +1,500 @@
+//! Bounded-memory k-way merging: a binary tree of FLiMS-style block
+//! mergers pumped through one shared R+R kernel.
+//!
+//! k sorted input streams feed the leaves; every internal node is a
+//! [`BlockMerger2`] with a bounded output FIFO (2R keys). A scheduling
+//! round scans nodes children-first, stages every node that can step —
+//! both inputs resolvable (a key buffered, or provably exhausted) and
+//! ≥ R keys of output space — and executes **all staged node steps as
+//! one ragged batch** through the shared [`BlockKernel`]: independent
+//! tree nodes fill SIMD lanes together, the way a hardware merge tree
+//! keeps every pipeline stage busy (cf. the merge-tree compositions in
+//! the sorting-hardware survey, arXiv:2310.07903).
+//!
+//! Memory is O(k·R) regardless of stream length: each leaf buffers ≤ R
+//! keys, each node holds ≤ R retained + ≤ R staged + ≤ 2R FIFO keys,
+//! and nothing is ever materialized whole — [`MergeTree`] is itself a
+//! [`SortedStream`], so trees compose and the external sorter drains
+//! the root incrementally ([`super::extsort`]).
+
+use super::merge2::{BlockKernel, BlockMerger2};
+use super::source::{boxed, SliceStream, SortedStream};
+use anyhow::{bail, Result};
+
+/// Default block size R — matches the smallest compiled 2-way artifact
+/// shape (`loms2_up32_dn32`).
+pub const DEFAULT_R: usize = 32;
+
+/// Where a node (or the root) pulls keys from.
+#[derive(Debug, Clone, Copy)]
+enum Input {
+    Leaf(usize),
+    Node(usize),
+}
+
+/// What an input looks like at staging time.
+#[derive(Debug, Clone, Copy)]
+enum Peek {
+    /// Next unconsumed key.
+    Key(u32),
+    /// Exhausted with nothing buffered (counts as +∞ for the refill rule).
+    Exhausted,
+    /// A child node that has not produced yet — wait for it.
+    Pending,
+}
+
+/// A leaf: one input stream plus a ≤ R-key pull buffer.
+struct LeafSource<'a> {
+    stream: Box<dyn SortedStream + 'a>,
+    buf: Vec<u32>,
+    pos: usize,
+    done: bool,
+}
+
+impl LeafSource<'_> {
+    fn avail(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Buffer at least `want` keys, or everything left in the stream.
+    fn fill_to(&mut self, want: usize) -> Result<()> {
+        if self.done || self.avail() >= want {
+            return Ok(());
+        }
+        if self.pos > 0 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        while self.buf.len() < want {
+            let got = self.stream.next_chunk(want - self.buf.len(), &mut self.buf)?;
+            if got == 0 {
+                self.done = true;
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// Next unconsumed key (`None` once the stream is drained).
+    fn head(&mut self) -> Result<Option<u32>> {
+        self.fill_to(1)?;
+        Ok(self.buf.get(self.pos).copied())
+    }
+
+    /// Move up to `max` keys into `dst`; refills first so a live stream
+    /// hands out full blocks.
+    fn take(&mut self, max: usize, dst: &mut Vec<u32>) -> Result<usize> {
+        self.fill_to(max)?;
+        let n = max.min(self.avail());
+        dst.extend_from_slice(&self.buf[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+/// One internal merge node: the block merger plus its bounded output
+/// FIFO (capacity 2R — the parent consumes ≤ R per step, the node
+/// produces ≤ R per step, so 2R never deadlocks).
+struct Node {
+    left: Input,
+    right: Input,
+    merger: BlockMerger2,
+    out: Vec<u32>,
+    start: usize,
+    /// Set when both inputs are exhausted and the retained tail has been
+    /// flushed — the FIFO remainder is the node's final output.
+    done: bool,
+}
+
+impl Node {
+    fn avail(&self) -> usize {
+        self.out.len() - self.start
+    }
+
+    fn head(&self) -> Option<u32> {
+        self.out.get(self.start).copied()
+    }
+
+    fn compact(&mut self) {
+        if self.start > 0 {
+            self.out.drain(..self.start);
+            self.start = 0;
+        }
+    }
+
+    fn take(&mut self, max: usize, dst: &mut Vec<u32>) -> usize {
+        let n = max.min(self.avail());
+        dst.extend_from_slice(&self.out[self.start..self.start + n]);
+        self.start += n;
+        if self.start == self.out.len() {
+            self.out.clear();
+            self.start = 0;
+        }
+        n
+    }
+}
+
+/// One staged node step, recorded between staging and apply.
+struct Staged {
+    node: usize,
+    /// Emit count fixed at staging time (see [`BlockMerger2::emit_count`]).
+    k: usize,
+    /// Kernel output width (`h + m`).
+    width: usize,
+}
+
+/// Scheduling counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TreeStats {
+    /// Kernel batch calls (one per scheduling round with work).
+    pub kernel_batches: u64,
+    /// Node steps executed (rows across all kernel batches).
+    pub kernel_rows: u64,
+    /// Endgame tail flushes.
+    pub flushes: u64,
+}
+
+/// A k-way streaming merge: [`SortedStream`] in, [`SortedStream`] out,
+/// O(k·R) resident keys.
+pub struct MergeTree<'a> {
+    r: usize,
+    kernel: BlockKernel,
+    leaves: Vec<LeafSource<'a>>,
+    nodes: Vec<Node>,
+    root: Option<Input>,
+    staged: Vec<Staged>,
+    /// Reusable per-row kernel output buffers.
+    round_out: Vec<Vec<u32>>,
+    stats: TreeStats,
+}
+
+/// Balanced binary tree over `leaves[lo..hi)`, children pushed before
+/// parents so a scheduling scan in index order is children-first.
+fn build(lo: usize, hi: usize, nodes: &mut Vec<Node>) -> Input {
+    if hi - lo == 1 {
+        return Input::Leaf(lo);
+    }
+    let mid = lo + (hi - lo) / 2;
+    let left = build(lo, mid, nodes);
+    let right = build(mid, hi, nodes);
+    nodes.push(Node {
+        left,
+        right,
+        merger: BlockMerger2::new(),
+        out: Vec::new(),
+        start: 0,
+        done: false,
+    });
+    Input::Node(nodes.len() - 1)
+}
+
+fn peek_input(nodes: &[Node], leaves: &mut [LeafSource<'_>], inp: Input) -> Result<Peek> {
+    Ok(match inp {
+        Input::Leaf(l) => match leaves[l].head()? {
+            Some(x) => Peek::Key(x),
+            None => Peek::Exhausted,
+        },
+        Input::Node(c) => match nodes[c].head() {
+            Some(x) => Peek::Key(x),
+            None if nodes[c].done => Peek::Exhausted,
+            None => Peek::Pending,
+        },
+    })
+}
+
+impl<'a> MergeTree<'a> {
+    /// Build a merge tree over `streams` with block size `r`. `k = 0`
+    /// yields an empty stream; `k = 1` passes the single input through.
+    pub fn new(streams: Vec<Box<dyn SortedStream + 'a>>, r: usize) -> Result<MergeTree<'a>> {
+        Ok(Self::with_kernel(streams, BlockKernel::new(r)?))
+    }
+
+    /// Build a tree around an already-compiled kernel — sequential
+    /// trees of the same R (extsort's merge passes) hand one kernel
+    /// from tree to tree via [`Self::into_kernel`] instead of paying
+    /// the plan + lane compile per tree.
+    pub fn with_kernel(
+        streams: Vec<Box<dyn SortedStream + 'a>>,
+        kernel: BlockKernel,
+    ) -> MergeTree<'a> {
+        let leaves: Vec<LeafSource<'a>> = streams
+            .into_iter()
+            .map(|s| LeafSource { stream: s, buf: Vec::new(), pos: 0, done: false })
+            .collect();
+        let mut nodes = Vec::new();
+        let root = match leaves.len() {
+            0 => None,
+            n => Some(build(0, n, &mut nodes)),
+        };
+        MergeTree {
+            r: kernel.r(),
+            kernel,
+            leaves,
+            nodes,
+            root,
+            staged: Vec::new(),
+            round_out: Vec::new(),
+            stats: TreeStats::default(),
+        }
+    }
+
+    /// Tear the tree down, recovering the kernel for the next tree.
+    pub fn into_kernel(self) -> BlockKernel {
+        self.kernel
+    }
+
+    pub fn stats(&self) -> TreeStats {
+        self.stats
+    }
+
+    /// Block size R.
+    pub fn r(&self) -> usize {
+        self.r
+    }
+
+    /// Live keys held across all buffers right now — the working set.
+    /// Bounded by O(k·R) whatever the input lengths (each leaf ≤ R,
+    /// each node ≤ 4R counting FIFO + merger, each row buffer ≤ 2R).
+    pub fn resident_keys(&self) -> usize {
+        self.leaves.iter().map(|l| l.buf.len() - l.pos).sum::<usize>()
+            + self.nodes.iter().map(|n| n.avail() + n.merger.width()).sum::<usize>()
+            + self.round_out.iter().map(Vec::len).sum::<usize>()
+    }
+
+    /// One scheduling round: stage every steppable node, run one kernel
+    /// batch over all staged rows, split each row into emit + retain.
+    /// Returns whether anything progressed (a step or a flush).
+    fn pump_round(&mut self) -> Result<bool> {
+        let r = self.r;
+        let cap = 2 * r;
+        let MergeTree { kernel, leaves, nodes, staged, round_out, stats, .. } = self;
+        staged.clear();
+        let mut flushed = false;
+        for n in 0..nodes.len() {
+            if nodes[n].done {
+                continue;
+            }
+            nodes[n].compact();
+            if cap - nodes[n].avail() < r {
+                continue; // output backpressure: wait for the parent
+            }
+            let (li, ri) = (nodes[n].left, nodes[n].right);
+            let pl = peek_input(nodes, leaves, li)?;
+            let pr = peek_input(nodes, leaves, ri)?;
+            // The refill rule: take the next block from the input whose
+            // head is smaller (ties to the left; exhausted = +∞).
+            let (chosen, other_head) = match (pl, pr) {
+                (Peek::Pending, _) | (_, Peek::Pending) => continue,
+                (Peek::Exhausted, Peek::Exhausted) => {
+                    let node = &mut nodes[n];
+                    let Node { merger, out, done, .. } = node;
+                    merger.flush(out);
+                    *done = true;
+                    stats.flushes += 1;
+                    flushed = true;
+                    continue;
+                }
+                (Peek::Key(x), Peek::Key(y)) => {
+                    if x <= y {
+                        (li, Some(y))
+                    } else {
+                        (ri, Some(x))
+                    }
+                }
+                (Peek::Key(_), Peek::Exhausted) => (li, None),
+                (Peek::Exhausted, Peek::Key(_)) => (ri, None),
+            };
+            let taken = match chosen {
+                Input::Leaf(l) => {
+                    let node = &mut nodes[n];
+                    leaves[l].take(r, node.merger.stage_buf())?
+                }
+                Input::Node(c) => {
+                    // Children index below parents (post-order build).
+                    let (head, tail) = nodes.split_at_mut(n);
+                    head[c].take(r, tail[0].merger.stage_buf())
+                }
+            };
+            debug_assert!(taken >= 1, "chosen input had a peeked key");
+            let k = nodes[n].merger.emit_count(other_head);
+            let width = nodes[n].merger.width();
+            staged.push(Staged { node: n, k, width });
+        }
+        if staged.is_empty() {
+            return Ok(flushed);
+        }
+        // One ragged kernel batch over every staged node step.
+        if round_out.len() < staged.len() {
+            round_out.resize_with(staged.len(), Vec::new);
+        }
+        for (s, st) in staged.iter().enumerate() {
+            round_out[s].clear();
+            round_out[s].resize(st.width, 0);
+        }
+        let rows: Vec<&[Vec<u32>]> =
+            staged.iter().map(|st| nodes[st.node].merger.lists()).collect();
+        let mut outs: Vec<&mut [u32]> =
+            round_out[..staged.len()].iter_mut().map(|v| v.as_mut_slice()).collect();
+        kernel.merge_rows(&rows, &mut outs);
+        stats.kernel_batches += 1;
+        stats.kernel_rows += staged.len() as u64;
+        for (s, st) in staged.iter().enumerate() {
+            let Node { merger, out, .. } = &mut nodes[st.node];
+            merger.apply(&round_out[s], st.k, out);
+        }
+        Ok(true)
+    }
+}
+
+impl SortedStream for MergeTree<'_> {
+    fn next_chunk(&mut self, max: usize, out: &mut Vec<u32>) -> Result<usize> {
+        let Some(root) = self.root else { return Ok(0) };
+        match root {
+            // k = 1: pass the single stream through its leaf buffer.
+            Input::Leaf(l) => self.leaves[l].take(max, out),
+            Input::Node(ri) => loop {
+                let n = self.nodes[ri].take(max, out);
+                if n > 0 {
+                    return Ok(n);
+                }
+                if self.nodes[ri].done {
+                    return Ok(0);
+                }
+                if !self.pump_round()? {
+                    // Unreachable by construction (an empty-FIFO node
+                    // always has space, recursing to always-resolvable
+                    // leaves) — fail loudly rather than spin.
+                    bail!("streaming merge tree stalled");
+                }
+            },
+        }
+    }
+}
+
+/// Merge k sorted streams into a `Vec` (convenience over [`MergeTree`]
+/// for bounded inputs — the tree itself never materializes the input).
+pub fn merge_k<'a>(streams: Vec<Box<dyn SortedStream + 'a>>, r: usize) -> Result<Vec<u32>> {
+    let mut tree = MergeTree::new(streams, r)?;
+    let mut out = Vec::new();
+    while tree.next_chunk(4096, &mut out)? > 0 {}
+    Ok(out)
+}
+
+/// Merge in-memory sorted runs — the planner's phase-3 entry point
+/// (replaces the scalar binary heap with the tile-pumped tree).
+pub fn merge_runs(runs: &[Vec<u32>], r: usize) -> Result<Vec<u32>> {
+    let total: usize = runs.iter().map(Vec::len).sum();
+    let streams: Vec<Box<dyn SortedStream + '_>> =
+        runs.iter().map(|run| boxed(SliceStream::new(run))).collect();
+    let mut tree = MergeTree::new(streams, r)?;
+    let mut out = Vec::with_capacity(total);
+    while tree.next_chunk(4096, &mut out)? > 0 {}
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::source::{IterStream, VecStream};
+    use crate::util::Rng;
+
+    fn sorted_concat(runs: &[Vec<u32>]) -> Vec<u32> {
+        let mut all: Vec<u32> = runs.concat();
+        all.sort_unstable();
+        all
+    }
+
+    #[test]
+    fn merges_small_k_exactly() {
+        let runs = vec![vec![1, 5, 9], vec![2, 6], vec![], vec![3, 4, 7, 8]];
+        assert_eq!(merge_runs(&runs, 4).unwrap(), sorted_concat(&runs));
+    }
+
+    #[test]
+    fn degenerate_k() {
+        assert_eq!(merge_k(vec![], 8).unwrap(), Vec::<u32>::new());
+        let one: Vec<Box<dyn SortedStream>> = vec![boxed(VecStream::new(vec![3, 4, 5]))];
+        assert_eq!(merge_k(one, 8).unwrap(), vec![3, 4, 5]);
+        let runs = vec![vec![], vec![], vec![]];
+        assert_eq!(merge_runs(&runs, 8).unwrap(), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn random_runs_across_k_and_r() {
+        let mut rng = Rng::new(0x7EE);
+        for &k in &[2usize, 3, 5, 8, 17] {
+            for &r in &[2usize, 8, 32] {
+                let runs: Vec<Vec<u32>> =
+                    (0..k).map(|_| rng.sorted_list(rng.range(0, 300), 5000)).collect();
+                let got = merge_runs(&runs, r).unwrap();
+                assert_eq!(got, sorted_concat(&runs), "k={k} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn unbounded_streams_drain_lazily_in_bounded_memory() {
+        // Two infinite interleaved streams; pull a fixed prefix and
+        // check the working set stays O(k·R).
+        let r = 8;
+        let streams: Vec<Box<dyn SortedStream>> = vec![
+            boxed(IterStream::new((0u32..).map(|x| x * 2))),
+            boxed(IterStream::new((0u32..).map(|x| x * 2 + 1))),
+            boxed(IterStream::new((0u32..).map(|x| x * 4))),
+        ];
+        let mut tree = MergeTree::new(streams, r).unwrap();
+        let mut out = Vec::new();
+        while out.len() < 10_000 {
+            assert!(tree.next_chunk(512, &mut out).unwrap() > 0);
+            assert!(
+                tree.resident_keys() <= 8 * 3 * 2 * r,
+                "working set {} exceeds O(k·R)",
+                tree.resident_keys()
+            );
+        }
+        assert!(out.windows(2).all(|w| w[0] <= w[1]));
+        // Exact prefix: every generator key up to the last drained key.
+        let hi = *out.last().unwrap();
+        let mut want: Vec<u32> = (0u32..).map(|x| x * 2).take_while(|&x| x <= hi).collect();
+        want.extend((0u32..).map(|x| x * 2 + 1).take_while(|&x| x <= hi));
+        want.extend((0u32..).map(|x| x * 4).take_while(|&x| x <= hi));
+        want.sort_unstable();
+        assert_eq!(out, want[..out.len()]);
+    }
+
+    #[test]
+    fn trees_compose_as_streams() {
+        // A MergeTree is itself a SortedStream: feed one as a leaf of
+        // another.
+        let mut rng = Rng::new(0xC0);
+        let inner_runs: Vec<Vec<u32>> = (0..3).map(|_| rng.sorted_list(100, 1000)).collect();
+        let outer_run = rng.sorted_list(150, 1000);
+        let inner_streams: Vec<Box<dyn SortedStream + '_>> = inner_runs
+            .iter()
+            .map(|r| boxed(SliceStream::new(r)))
+            .collect();
+        let inner = MergeTree::new(inner_streams, 8).unwrap();
+        let outer: Vec<Box<dyn SortedStream + '_>> =
+            vec![boxed(inner), boxed(SliceStream::new(&outer_run))];
+        let got = merge_k(outer, 8).unwrap();
+        let mut want = inner_runs.concat();
+        want.extend_from_slice(&outer_run);
+        want.sort_unstable();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn stats_count_batched_rows() {
+        let mut rng = Rng::new(9);
+        let runs: Vec<Vec<u32>> = (0..17).map(|_| rng.sorted_list(500, 1 << 20)).collect();
+        let streams: Vec<Box<dyn SortedStream + '_>> =
+            runs.iter().map(|r| boxed(SliceStream::new(r))).collect();
+        let mut tree = MergeTree::new(streams, 8).unwrap();
+        let mut out = Vec::new();
+        while tree.next_chunk(4096, &mut out).unwrap() > 0 {}
+        assert_eq!(out, sorted_concat(&runs));
+        let st = tree.stats();
+        assert!(st.kernel_rows > st.kernel_batches, "rounds batch multiple nodes: {st:?}");
+        assert_eq!(st.flushes, 16, "every internal node flushes once");
+    }
+}

@@ -1,0 +1,221 @@
+//! Differential tests of the streaming merge engine (hand-rolled
+//! property style over `util::Rng`, like `proptest_suite.rs`): every
+//! output must be byte-identical to `sort_unstable` over the
+//! concatenated inputs AND to the scalar heap merge — across ragged
+//! stream lengths, duplicates, empty streams, k ∈ {2, 3, 4, 8, 17},
+//! block sizes, spill configurations and the full `u32` key domain.
+
+use loms::coordinator::planner;
+use loms::coordinator::{MergeService, ServiceConfig, SoftwareBackend};
+use loms::stream::{
+    boxed, extsort, extsort_with, merge_k, merge_runs, ExtSortConfig, FileRunStream, IterStream,
+    MergeTree, RunFormer, SliceStream, SortedStream,
+};
+use loms::util::Rng;
+use std::io::Write as _;
+
+fn sorted_concat(runs: &[Vec<u32>]) -> Vec<u32> {
+    let mut all: Vec<u32> = runs.concat();
+    all.sort_unstable();
+    all
+}
+
+/// Property: `merge_k` equals std sort AND the heap merge for every
+/// (k, r) mix of ragged, duplicate-heavy, sometimes-empty streams.
+#[test]
+fn prop_merge_k_matches_sort_and_heap() {
+    let mut rng = Rng::new(0x2024_0731);
+    for &k in &[2usize, 3, 4, 8, 17] {
+        for &r in &[2usize, 8, 32] {
+            for case in 0..6 {
+                let max = if case % 2 == 0 { 1 << 24 } else { 64 }; // dup-heavy half
+                let runs: Vec<Vec<u32>> = (0..k)
+                    .map(|i| {
+                        // Force some empty and length-1 streams into
+                        // every mix.
+                        let len = match (case + i) % 5 {
+                            0 => 0,
+                            1 => 1,
+                            _ => rng.range(2, 400),
+                        };
+                        rng.sorted_list(len, max)
+                    })
+                    .collect();
+                let got = merge_runs(&runs, r).unwrap();
+                assert_eq!(got, sorted_concat(&runs), "k={k} r={r} case={case}");
+                // Last use consumes the runs: byte-identical to the heap.
+                let heap = planner::kway_merge(runs);
+                assert_eq!(got, heap, "heap differential k={k} r={r} case={case}");
+            }
+        }
+    }
+}
+
+/// Regression (PAD-sentinel safety): the service rejects `u32::MAX`,
+/// but the streaming path pads by tracked fill count, so adjacent
+/// `u32::MAX - 1` / `u32::MAX` keys — including cross-stream ties —
+/// must merge exactly.
+#[test]
+fn sentinel_adjacent_keys_merge_exactly() {
+    let runs = vec![
+        vec![1, u32::MAX - 1, u32::MAX - 1, u32::MAX],
+        vec![u32::MAX - 1, u32::MAX, u32::MAX],
+        vec![0, 2, u32::MAX],
+        vec![],
+        vec![u32::MAX - 1],
+    ];
+    for &r in &[2usize, 8, 32] {
+        let got = merge_runs(&runs, r).unwrap();
+        assert_eq!(got, sorted_concat(&runs), "r={r}");
+        assert_eq!(got, planner::kway_merge(runs.clone()), "r={r}");
+    }
+    // And through the external sorter end to end.
+    let mut data: Vec<u32> = runs.concat();
+    data.push(u32::MAX);
+    let cfg = ExtSortConfig { run_len: 3, r: 4, ..Default::default() };
+    let (sorted, _) = extsort(&data, &cfg).unwrap();
+    data.sort_unstable();
+    assert_eq!(sorted, data);
+}
+
+/// Property: `extsort` equals std sort across run lengths, fan-in caps
+/// and spill modes — including multi-pass merges.
+#[test]
+fn prop_extsort_matches_sort() {
+    let mut rng = Rng::new(0xE5077);
+    let spill_root =
+        std::env::temp_dir().join(format!("loms_stream_diff_{}", std::process::id()));
+    for case in 0..8 {
+        let n = [0usize, 1, 7, 1000, 5003, 20_000][case % 6];
+        let data: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+        let cfg = ExtSortConfig {
+            run_len: [64usize, 333, 1024][case % 3],
+            r: [4usize, 8, 32][case % 3],
+            max_fanin: [2usize, 3, 64][case % 3],
+            spill_dir: if case % 2 == 0 { Some(spill_root.clone()) } else { None },
+        };
+        let (got, stats) = extsort(&data, &cfg).unwrap();
+        let mut want = data;
+        want.sort_unstable();
+        assert_eq!(got, want, "case {case} n={n} cfg={cfg:?}");
+        assert_eq!(stats.keys, n);
+        if n > 0 {
+            assert_eq!(stats.runs, n.div_ceil(cfg.run_len));
+        }
+    }
+    let _ = std::fs::remove_dir_all(spill_root);
+}
+
+/// The merge phase works in O(k·R) without materializing its input:
+/// merge unbounded generators, drain a fixed prefix, watch the
+/// resident working set.
+#[test]
+fn merge_phase_is_bounded_memory() {
+    let r = 32;
+    let k = 8;
+    let streams: Vec<Box<dyn SortedStream>> = (0..k as u32)
+        .map(|i| boxed(IterStream::new((0u32..).map(move |x| x * k as u32 + i))))
+        .collect();
+    let mut tree = MergeTree::new(streams, r).unwrap();
+    let mut out = Vec::new();
+    let mut peak = 0usize;
+    while out.len() < 200_000 {
+        assert!(tree.next_chunk(1024, &mut out).unwrap() > 0);
+        peak = peak.max(tree.resident_keys());
+    }
+    // Every key 0..200k in order (the k generators partition 0..).
+    assert!(out.iter().enumerate().all(|(i, &x)| x == i as u32));
+    assert!(peak <= 16 * k * r, "peak working set {peak} not O(k·R)");
+}
+
+/// File-of-runs adapter: sorted windows of one spill-format file merge
+/// byte-identically to the in-memory merge of the same runs.
+#[test]
+fn file_runs_merge_like_memory_runs() {
+    let mut rng = Rng::new(0xF11E);
+    let runs: Vec<Vec<u32>> = (0..5).map(|_| rng.sorted_list(rng.range(0, 500), 1 << 30)).collect();
+    let path = std::env::temp_dir()
+        .join(format!("loms_stream_diff_runs_{}.u32", std::process::id()));
+    let mut f = std::fs::File::create(&path).unwrap();
+    for run in &runs {
+        for &k in run {
+            f.write_all(&k.to_le_bytes()).unwrap();
+        }
+    }
+    drop(f);
+    let mut start = 0u64;
+    let mut streams: Vec<Box<dyn SortedStream>> = Vec::new();
+    for run in &runs {
+        streams.push(boxed(FileRunStream::open(&path, start, run.len() as u64).unwrap()));
+        start += run.len() as u64;
+    }
+    let got = merge_k(streams, 8).unwrap();
+    assert_eq!(got, merge_runs(&runs, 8).unwrap());
+    assert_eq!(got, sorted_concat(&runs));
+    let _ = std::fs::remove_file(path);
+}
+
+/// Run formation through the live merge service (the planner's batch
+/// sorters) composed with the streaming final merge — the full
+/// "batch sorters form runs, tile kernels stream the k-way" pipeline.
+#[test]
+fn extsort_with_ladder_run_formation() {
+    let svc =
+        MergeService::start(|| Ok(SoftwareBackend::default_set()), ServiceConfig::default())
+            .unwrap();
+    let mut rng = Rng::new(0x1ADD);
+    // Service keys must stay below the PAD sentinel.
+    let data: Vec<u32> = (0..6000).map(|_| rng.next_u32() >> 1).collect();
+    let cfg = ExtSortConfig { run_len: 2048, r: 32, ..Default::default() };
+    let former = RunFormer::Ladder { service: &svc, chunk: 32, max_network: 512 };
+    let (got, stats) = extsort_with(&data, &cfg, &former).unwrap();
+    let mut want = data;
+    want.sort_unstable();
+    assert_eq!(got, want);
+    assert_eq!(stats.runs, 3);
+    assert!(svc.metrics().snapshot().responses > 0, "runs went through the service");
+    svc.shutdown();
+}
+
+/// The planner's phase 3 (now the stream engine) stays byte-identical
+/// to the retired heap path on service-produced runs, and the windowed
+/// ladder never loses or reorders a merge.
+#[test]
+fn planner_reroute_is_byte_identical() {
+    let svc =
+        MergeService::start(|| Ok(SoftwareBackend::default_set()), ServiceConfig::default())
+            .unwrap();
+    let mut rng = Rng::new(0x9E9E);
+    let data: Vec<u32> = (0..30_000).map(|_| rng.next_u32() >> 2).collect();
+    let (runs, _) = planner::ladder_runs(&svc, &data, 32, 256).unwrap();
+    assert!(runs.len() > 1, "several surviving runs");
+    assert_eq!(merge_runs(&runs, 32).unwrap(), planner::kway_merge(runs.clone()));
+    let (sorted, stats) = planner::external_sort(&svc, &data, 32, 256).unwrap();
+    let mut want = data;
+    want.sort_unstable();
+    assert_eq!(sorted, want);
+    assert_eq!(stats.final_kway_runs, runs.len());
+    svc.shutdown();
+}
+
+/// Composability: slice streams, an inner tree and an iterator stream
+/// merged together behave like one flat sorted multiset.
+#[test]
+fn mixed_adapters_compose() {
+    let a: Vec<u32> = (0..400).map(|x| x * 3).collect();
+    let b: Vec<u32> = (0..300).map(|x| x * 5).collect();
+    let c: Vec<u32> = (0..200).map(|x| x * 7).collect();
+    let inner_streams: Vec<Box<dyn SortedStream + '_>> =
+        vec![boxed(SliceStream::new(&a)), boxed(SliceStream::new(&b))];
+    let inner = MergeTree::new(inner_streams, 8).unwrap();
+    let outer: Vec<Box<dyn SortedStream + '_>> = vec![
+        boxed(inner),
+        boxed(SliceStream::new(&c)),
+        boxed(IterStream::new((0u32..50).map(|x| x * 11))),
+    ];
+    let got = merge_k(outer, 8).unwrap();
+    let mut want = [a, b, c].concat();
+    want.extend((0u32..50).map(|x| x * 11));
+    want.sort_unstable();
+    assert_eq!(got, want);
+}
