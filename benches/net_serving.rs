@@ -1,0 +1,135 @@
+//! Networked serving benchmark: the cost of the wire, emitted as
+//! `BENCH_net.json`.
+//!
+//! One software-backed [`MergeService`] behind a [`NetServer`] on an
+//! ephemeral loopback port. Variants over the same ragged 32+32
+//! workload ([`loms::net::client::workload_lists`]):
+//!
+//! * `in_process` — the baseline: requests submitted straight into the
+//!   service from this process (no sockets, no frames), latency
+//!   measured per request with the same pipelined window the network
+//!   clients use — so the delta to the next rows is purely transport.
+//! * `net_1conn` / `net_8conn` / `net_32conn` — the framed TCP path at
+//!   increasing connection counts, each connection keeping
+//!   `INFLIGHT` requests pipelined.
+//!
+//! Every response (both variants) is verified byte-exact against a
+//! `sort_unstable` oracle — a bench run that returns wrong bytes
+//! panics rather than reporting a throughput. CI compile-checks this
+//! harness via `cargo bench --no-run`; run
+//! `cargo bench --bench net_serving` to refresh the JSON.
+
+use loms::coordinator::{MergeService, ServiceConfig, SoftwareBackend};
+use loms::net::client::{percentile_us, workload_lists};
+use loms::net::{run_load, NetServer, NetServerConfig};
+use loms::util::Rng;
+use std::collections::VecDeque;
+use std::time::Instant;
+
+const INFLIGHT: usize = 16;
+
+struct Variant {
+    name: String,
+    requests_per_s: f64,
+    p50_latency_us: f64,
+    p99_latency_us: f64,
+}
+
+/// The in-process baseline: same workload, same pipelined window, no
+/// wire. Returns (req/s, p50 µs, p99 µs).
+fn run_in_process(svc: &MergeService, requests: usize, seed: u64) -> Variant {
+    let mut rng = Rng::new(seed);
+    let mut pending: VecDeque<(std::sync::mpsc::Receiver<_>, Vec<u32>, Instant)> =
+        VecDeque::new();
+    let mut lat_us = Vec::with_capacity(requests);
+    let t0 = Instant::now();
+    for _ in 0..requests {
+        let lists = workload_lists(&mut rng);
+        let mut want: Vec<u32> = lists.concat();
+        want.sort_unstable();
+        pending.push_back((svc.submit(lists), want, Instant::now()));
+        if pending.len() >= INFLIGHT {
+            let (rx, want, sent) = pending.pop_front().unwrap();
+            let resp = rx.recv().expect("in-process response");
+            assert_eq!(resp.merged, want, "in-process oracle mismatch");
+            lat_us.push(sent.elapsed().as_nanos() as f64 / 1_000.0);
+        }
+    }
+    while let Some((rx, want, sent)) = pending.pop_front() {
+        let resp = rx.recv().expect("in-process response");
+        assert_eq!(resp.merged, want, "in-process oracle mismatch");
+        lat_us.push(sent.elapsed().as_nanos() as f64 / 1_000.0);
+    }
+    let dt = t0.elapsed();
+    lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Variant {
+        name: "in_process".into(),
+        requests_per_s: requests as f64 / dt.as_secs_f64(),
+        p50_latency_us: percentile_us(&lat_us, 0.50),
+        p99_latency_us: percentile_us(&lat_us, 0.99),
+    }
+}
+
+fn main() {
+    let requests: usize = std::env::var("BENCH_NET_REQUESTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(40_000);
+    let svc = MergeService::start(|| Ok(SoftwareBackend::default_set()), ServiceConfig::default())
+        .expect("service");
+    // Warm the plan caches off the clock.
+    svc.merge_blocking(vec![vec![1, 2], vec![3, 4]]).expect("warmup");
+
+    let mut variants = vec![run_in_process(&svc, requests, 0xBE2C)];
+
+    // Same service, now behind the wire.
+    let server = NetServer::start(
+        "127.0.0.1:0",
+        svc,
+        NetServerConfig { workers: 32, ..NetServerConfig::default() },
+    )
+    .expect("server");
+    let addr = server.addr().to_string();
+    for conns in [1usize, 8, 32] {
+        let report =
+            run_load(&addr, conns, INFLIGHT, requests, 0x9E7 + conns as u64).expect("load run");
+        assert_eq!(report.errors, 0, "net oracle mismatches at {conns} conns");
+        variants.push(Variant {
+            name: format!("net_{conns}conn"),
+            requests_per_s: report.requests_per_s(),
+            p50_latency_us: report.p50_us,
+            p99_latency_us: report.p99_us,
+        });
+    }
+    let snap = server.service().metrics().snapshot();
+    server.shutdown();
+
+    for v in &variants {
+        println!(
+            "{:<12} {:>12.0} req/s   p50 {:>9.1}µs   p99 {:>9.1}µs",
+            v.name, v.requests_per_s, v.p50_latency_us, v.p99_latency_us
+        );
+    }
+    println!(
+        "server totals: conns={} frames_in={} responses={} errors={}",
+        snap.net_connections, snap.net_frames_in, snap.net_responses, snap.net_errors
+    );
+
+    let rows: Vec<String> = variants
+        .iter()
+        .map(|v| {
+            format!(
+                "    {{\"name\": \"{}\", \"requests_per_s\": {:.0}, \"p50_latency_us\": {:.1}, \
+                 \"p99_latency_us\": {:.1}}}",
+                v.name, v.requests_per_s, v.p50_latency_us, v.p99_latency_us
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"net_serving\",\n  \"requests_per_variant\": {requests},\n  \
+         \"inflight_per_conn\": {INFLIGHT},\n  \"variants\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    std::fs::write("BENCH_net.json", &json).expect("write BENCH_net.json");
+    println!("wrote BENCH_net.json");
+}

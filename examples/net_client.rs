@@ -1,0 +1,72 @@
+//! NETWORKED ROUND TRIP (DESIGN.md §Network serving): start a
+//! `MergeService` behind a framed-TCP `NetServer` on an ephemeral
+//! port, then talk to it like an external client — ping, a one-shot
+//! merge, and a pipelined burst, every response checked bit-exactly
+//! against a scalar oracle.
+//!
+//!     cargo run --release --example net_client
+//!
+//! This is the whole two-process deployment (`loms serve --listen` +
+//! `loms bench-net`) collapsed into one binary for a self-checking
+//! demo; the wire bytes are identical.
+
+use loms::coordinator::{MergeService, ServiceConfig, SoftwareBackend};
+use loms::net::{NetClient, NetServer, NetServerConfig};
+use loms::util::Rng;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let svc = MergeService::start(|| Ok(SoftwareBackend::default_set()), ServiceConfig::default())?;
+    let server = NetServer::start("127.0.0.1:0", svc, NetServerConfig::default())?;
+    let addr = server.addr();
+    println!("serving on {addr}");
+
+    let mut client = NetClient::connect(addr)?;
+    client.ping()?;
+    println!("ping ok");
+
+    let resp = client.merge(&[vec![1, 3, 9], vec![2, 4]])?;
+    assert_eq!(resp.merged, vec![1, 2, 3, 4, 9]);
+    println!("one-shot merge served by {:?}", resp.served_by);
+
+    // A pipelined burst: submit ahead, receive in order.
+    let mut rng = Rng::new(0x7C9);
+    let n = 2000usize;
+    let window = 32usize;
+    let mut wants: std::collections::VecDeque<Vec<u32>> = std::collections::VecDeque::new();
+    let t0 = Instant::now();
+    let mut checked = 0usize;
+    for _ in 0..n {
+        let la = rng.range(1, 33);
+        let lb = rng.range(1, 33);
+        let lists = vec![rng.sorted_list(la, 1 << 20), rng.sorted_list(lb, 1 << 20)];
+        let mut want: Vec<u32> = lists.concat();
+        want.sort_unstable();
+        client.submit(&lists)?;
+        wants.push_back(want);
+        if wants.len() >= window {
+            let resp = client.recv()?;
+            assert_eq!(resp.merged, wants.pop_front().unwrap(), "response mismatch");
+            checked += 1;
+        }
+    }
+    while let Some(want) = wants.pop_front() {
+        assert_eq!(client.recv()?.merged, want, "response mismatch");
+        checked += 1;
+    }
+    let dt = t0.elapsed();
+    println!(
+        "pipelined {checked} merges in {dt:.2?} ({:.0} req/s over one connection)",
+        checked as f64 / dt.as_secs_f64()
+    );
+
+    drop(client);
+    let snap = server.service().metrics().snapshot();
+    println!(
+        "server: conns={} frames_in={} responses={} errors={}",
+        snap.net_connections, snap.net_frames_in, snap.net_responses, snap.net_errors
+    );
+    server.shutdown();
+    println!("drained and stopped");
+    Ok(())
+}

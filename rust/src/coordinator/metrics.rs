@@ -27,6 +27,16 @@ struct Inner {
     assemble_ns: u128,
     execute_ns: u128,
     respond_ns: u128,
+    /// Network front-end counters (see `rust/src/net/server.rs`):
+    /// connections accepted, complete frames received, frames that
+    /// failed protocol decode, and reply frames produced (response vs
+    /// error). Steady-state invariant once a connection drains:
+    /// `net_frames_in == net_responses + net_errors`.
+    net_connections: u64,
+    net_frames_in: u64,
+    net_decode_errors: u64,
+    net_responses: u64,
+    net_errors: u64,
 }
 
 /// Shared metrics handle.
@@ -56,6 +66,22 @@ pub struct Snapshot {
     pub assemble_us_mean: f64,
     pub execute_us_mean: f64,
     pub respond_us_mean: f64,
+    /// Connections accepted by the network front-end.
+    pub net_connections: u64,
+    /// Frames received and answered: complete frames (requests, pings,
+    /// bodies that then failed to decode) plus unusable length
+    /// prefixes, each of which gets exactly one reply. Partial frames
+    /// cut off by a disconnect are not counted (no reply is possible).
+    pub net_frames_in: u64,
+    /// Frames whose body (or length prefix) failed protocol decode;
+    /// each was answered with an Error frame.
+    pub net_decode_errors: u64,
+    /// Reply frames produced with a payload (MergeResponse / Pong).
+    pub net_responses: u64,
+    /// Error frames produced (decode failures, rejected requests,
+    /// unsupported modes). Once every connection drains,
+    /// `net_frames_in == net_responses + net_errors`.
+    pub net_errors: u64,
 }
 
 impl Metrics {
@@ -97,6 +123,26 @@ impl Metrics {
         g.assemble_ns += assemble.as_nanos();
         g.execute_ns += execute.as_nanos();
         g.respond_ns += respond.as_nanos();
+    }
+
+    pub fn on_net_connection(&self) {
+        self.inner.lock().unwrap().net_connections += 1;
+    }
+
+    pub fn on_net_frame_in(&self) {
+        self.inner.lock().unwrap().net_frames_in += 1;
+    }
+
+    pub fn on_net_decode_error(&self) {
+        self.inner.lock().unwrap().net_decode_errors += 1;
+    }
+
+    pub fn on_net_response(&self) {
+        self.inner.lock().unwrap().net_responses += 1;
+    }
+
+    pub fn on_net_error(&self) {
+        self.inner.lock().unwrap().net_errors += 1;
     }
 
     pub fn on_response(&self, latency: Duration) {
@@ -146,6 +192,11 @@ impl Metrics {
             assemble_us_mean: Self::stage_mean(g.assemble_ns, g.stage_batches),
             execute_us_mean: Self::stage_mean(g.execute_ns, g.stage_batches),
             respond_us_mean: Self::stage_mean(g.respond_ns, g.stage_batches),
+            net_connections: g.net_connections,
+            net_frames_in: g.net_frames_in,
+            net_decode_errors: g.net_decode_errors,
+            net_responses: g.net_responses,
+            net_errors: g.net_errors,
         }
     }
 
@@ -189,6 +240,27 @@ mod tests {
         assert_eq!(s.assemble_us_mean, 10.0);
         assert_eq!(s.execute_us_mean, 80.0);
         assert_eq!(s.respond_us_mean, 20.0);
+    }
+
+    #[test]
+    fn net_counters_accumulate_and_balance() {
+        let m = Metrics::new();
+        m.on_net_connection();
+        // Three frames: a served request, a ping, a malformed body.
+        m.on_net_frame_in();
+        m.on_net_response();
+        m.on_net_frame_in();
+        m.on_net_response();
+        m.on_net_frame_in();
+        m.on_net_decode_error();
+        m.on_net_error();
+        let s = m.snapshot();
+        assert_eq!(s.net_connections, 1);
+        assert_eq!(s.net_frames_in, 3);
+        assert_eq!(s.net_decode_errors, 1);
+        assert_eq!(s.net_responses, 2);
+        assert_eq!(s.net_errors, 1);
+        assert_eq!(s.net_frames_in, s.net_responses + s.net_errors);
     }
 
     #[test]

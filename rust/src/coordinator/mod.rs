@@ -18,4 +18,4 @@ pub use backend::{Backend, BatchRun, PjrtBackend, SoftwareBackend};
 pub use metrics::{Metrics, Snapshot};
 pub use request::{MergeRequest, MergeResponse};
 pub use router::{Route, Router};
-pub use service::{MergeService, ServiceConfig};
+pub use service::{ConfigError, MergeService, ServiceConfig};

@@ -156,7 +156,7 @@ mod tests {
         // scalar heap on the runs the ladder produces.
         let mut rng = Rng::new(0x3A);
         let runs: Vec<Vec<u32>> =
-            (0..9).map(|_| rng.sorted_list(rng.range(0, 700), 1 << 24)).collect();
+            (0..9).map(|_| rng.sorted_list_ragged(0, 700, 1 << 24)).collect();
         let want = kway_merge(runs.clone());
         let got = crate::stream::merge_runs(&runs, crate::stream::DEFAULT_R).unwrap();
         assert_eq!(got, want);

@@ -47,11 +47,43 @@ pub struct ServiceConfig {
     /// Serve shapes no artifact dominates with the software fallback
     /// (reject them when false).
     pub software_fallback: bool,
-    /// Worker threads for software-fallback merges (clamped to ≥ 1).
-    /// Fallback merges run off the engine thread so a large
-    /// `sort_unstable` cannot stall dynamic batching.
+    /// Worker threads for software-fallback merges. Must be ≥ 1 when
+    /// `software_fallback` is set — validated at construction
+    /// ([`ConfigError::ZeroFallbackThreads`]). Fallback merges run off
+    /// the engine thread so a large `sort_unstable` cannot stall
+    /// dynamic batching.
     pub fallback_threads: usize,
 }
+
+/// Typed construction-time rejections of configurations that would
+/// otherwise surface as a runtime stall or panic deep inside the
+/// engine/executor threads.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ConfigError {
+    /// `software_fallback` enabled with zero worker threads: every
+    /// unroutable shape would queue on a channel nobody drains.
+    ZeroFallbackThreads,
+    /// An artifact advertises `batch == 0`: its queue could never hold
+    /// a request without flushing an empty batch schedule, and the
+    /// backend's `rows <= batch` precondition would reject every flush
+    /// at execute time.
+    ZeroArtifactBatch { name: String },
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::ZeroFallbackThreads => {
+                write!(f, "software_fallback requires fallback_threads >= 1 (got 0)")
+            }
+            ConfigError::ZeroArtifactBatch { name } => {
+                write!(f, "artifact {name:?} has batch size 0")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 impl Default for ServiceConfig {
     fn default() -> Self {
@@ -301,12 +333,16 @@ impl MergeService {
     /// Start the service. The backend is constructed by `factory`
     /// *inside* the executor thread — PJRT handles are thread-confined
     /// (`Rc` internally), so they must be born where they run. Fails
-    /// fast if the factory errors (e.g. artifacts missing).
+    /// fast if the factory errors (e.g. artifacts missing) or the
+    /// configuration is unusable ([`ConfigError`]).
     pub fn start<B, F>(factory: F, cfg: ServiceConfig) -> Result<MergeService>
     where
         B: Backend + 'static,
         F: FnOnce() -> Result<B> + Send + 'static,
     {
+        if cfg.software_fallback && cfg.fallback_threads == 0 {
+            return Err(ConfigError::ZeroFallbackThreads.into());
+        }
         let metrics = Arc::new(Metrics::new());
         let (tx, rx) = mpsc::channel();
         // Depth-1 pipeline: the engine assembles/queues batch N+1 while
@@ -338,11 +374,19 @@ impl MergeService {
             }
             Err(_) => anyhow::bail!("executor thread died during startup"),
         };
+        if let Some(bad) = artifacts.iter().find(|m| m.batch == 0) {
+            let err = ConfigError::ZeroArtifactBatch { name: bad.name.to_string() };
+            // Dropping the batch channel ends the executor loop; join
+            // it so the thread never outlives the failed constructor.
+            drop(batch_tx);
+            let _ = exec.join();
+            return Err(err.into());
+        }
         let mut fallback = Vec::new();
         let fallback_tx = if cfg.software_fallback {
             let (ftx, frx) = mpsc::channel::<FallbackJob>();
             let frx = Arc::new(Mutex::new(frx));
-            for i in 0..cfg.fallback_threads.max(1) {
+            for i in 0..cfg.fallback_threads {
                 let frx = Arc::clone(&frx);
                 let m = Arc::clone(&metrics);
                 fallback.push(
@@ -584,6 +628,61 @@ mod tests {
             .merge_blocking(vec![vec![1, 4, 7], vec![2, 5, 8], vec![3, 6, 9]])
             .unwrap();
         assert_eq!(resp.merged, (1..=9).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn zero_fallback_threads_rejected_at_construction() {
+        // Regression: fallback_threads = 0 used to be silently clamped
+        // to 1; with software_fallback it must be a typed error (a
+        // zero-worker pool would strand every unroutable request).
+        let err = MergeService::start(
+            || Ok(SoftwareBackend::default_set()),
+            ServiceConfig { fallback_threads: 0, ..ServiceConfig::default() },
+        )
+        .unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<ConfigError>(),
+            Some(&ConfigError::ZeroFallbackThreads)
+        );
+        // Without the fallback path the same setting is legal.
+        let s = MergeService::start(
+            || Ok(SoftwareBackend::default_set()),
+            ServiceConfig {
+                software_fallback: false,
+                fallback_threads: 0,
+                ..ServiceConfig::default()
+            },
+        )
+        .unwrap();
+        let resp = s.merge_blocking(vec![vec![1, 3], vec![2, 4]]).unwrap();
+        assert_eq!(resp.merged, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn zero_batch_artifact_rejected_at_construction() {
+        use crate::runtime::ArtifactMeta;
+        let meta = ArtifactMeta {
+            name: "loms2_up8_dn8_b0".into(),
+            file: String::new(),
+            list_sizes: vec![8, 8],
+            batch: 0,
+            total: 16,
+            block_b: 0,
+            plan_steps: 0,
+            hw_stages: 0,
+            device: "loms2-2col-up8-dn8".into(),
+        };
+        let err = MergeService::start(
+            move || SoftwareBackend::new(vec![meta]),
+            ServiceConfig::default(),
+        )
+        .unwrap_err();
+        match err.downcast_ref::<ConfigError>() {
+            Some(ConfigError::ZeroArtifactBatch { name }) => {
+                assert_eq!(name, "loms2_up8_dn8_b0")
+            }
+            other => panic!("expected ZeroArtifactBatch, got {other:?} ({err:#})"),
+        }
     }
 
     #[test]

@@ -21,6 +21,10 @@
 //!   merging of unbounded sorted streams (FLiMS-style block mergers
 //!   composed into a lane-batched merge tree) and the run-formation +
 //!   spill external sorter behind `loms sort`.
+//! * [`net`] — the networked serving front-end: versioned framed-TCP
+//!   protocol, [`net::NetServer`] (acceptor + bounded worker pool over
+//!   the pipelined service) and the pipelined [`net::NetClient`] /
+//!   load generator behind `loms serve --listen` and `loms bench-net`.
 //! * [`bench`] — figure/table regeneration harness shared by `benches/`.
 //!
 //! See `rust/DESIGN.md` for the system inventory and
@@ -29,6 +33,7 @@
 pub mod bench;
 pub mod coordinator;
 pub mod fpga;
+pub mod net;
 pub mod runtime;
 pub mod sortnet;
 pub mod stream;

@@ -6,6 +6,11 @@
 //!   goldens  [--dir tests/golden]                  write the cross-check set
 //!   validate --kind K [options]                    exhaustive 0-1 validation
 //!   serve    [--artifacts DIR] [--requests N]      run the merge service demo
+//!            [--listen ADDR [--workers N] [--duration-secs S]]
+//!            with --listen: serve the framed TCP protocol on ADDR
+//!            (e.g. 127.0.0.1:7474) instead of the in-process demo
+//!   bench-net --addr ADDR [--conns N] [--inflight M] [--requests R]
+//!            load-generate against a running `serve --listen`
 //!   sort     [--engine stream|ladder] [--n N] [--input F [--output F]]
 //!            [--r R] [--run-len L] [--fanin F] [--spill DIR]
 //!            [--ladder-runs true] [--chunk C] [--artifacts DIR]
@@ -20,6 +25,7 @@ use loms::bench::figures;
 use loms::coordinator::{
     planner, Backend, MergeService, PjrtBackend, ServiceConfig, SoftwareBackend,
 };
+use loms::net::{self, NetServer, NetServerConfig};
 use loms::sortnet::validate::{validate_median_01, validate_merge_01};
 use loms::sortnet::{batcher, json, loms as lomsnet, mwms, s2ms, MergeDevice};
 use loms::stream::{self, ExtSortConfig, RunFormer};
@@ -158,7 +164,9 @@ fn start_service(o: &HashMap<String, String>) -> Result<(MergeService, &'static 
 
 fn run(args: &[String]) -> Result<()> {
     let Some(cmd) = args.first() else {
-        bail!("usage: loms <report|netgen|goldens|validate|serve|sort|selftest> [options]");
+        bail!(
+            "usage: loms <report|netgen|goldens|validate|serve|bench-net|sort|selftest> [options]"
+        );
     };
     let o = opts(&args[1..])?;
     match cmd.as_str() {
@@ -232,6 +240,79 @@ fn run(args: &[String]) -> Result<()> {
                 d.name,
                 loms::sortnet::validate::merge_01_pattern_count(&d.list_sizes),
                 t0.elapsed()
+            );
+            Ok(())
+        }
+        "serve" if o.contains_key("listen") => {
+            let listen = o.get("listen").expect("guarded").clone();
+            let workers = get_usize(&o, "workers", NetServerConfig::default().workers)?;
+            let (svc, backend) = start_service(&o)?;
+            let server = NetServer::start(
+                &listen,
+                svc,
+                NetServerConfig { workers, ..NetServerConfig::default() },
+            )?;
+            println!("backend={backend} listening on {} ({workers} workers)", server.addr());
+            let duration = o
+                .get("duration-secs")
+                .map(|v| v.parse::<u64>().with_context(|| format!("--duration-secs {v:?}")))
+                .transpose()?
+                .map(Duration::from_secs);
+            let t0 = Instant::now();
+            // Periodic one-line snapshot until the deadline (forever
+            // when none was given — kill the process to stop).
+            loop {
+                std::thread::sleep(Duration::from_secs(10).min(
+                    duration.map_or(Duration::from_secs(10), |d| {
+                        d.saturating_sub(t0.elapsed()).max(Duration::from_millis(10))
+                    }),
+                ));
+                let s = server.service().metrics().snapshot();
+                println!(
+                    "conns={} frames_in={} responses={} errors={} decode_errors={} \
+                     batches={} p50={:.0}µs p99={:.0}µs",
+                    s.net_connections,
+                    s.net_frames_in,
+                    s.net_responses,
+                    s.net_errors,
+                    s.net_decode_errors,
+                    s.batches,
+                    s.p50_latency_us,
+                    s.p99_latency_us
+                );
+                if duration.is_some_and(|d| t0.elapsed() >= d) {
+                    break;
+                }
+            }
+            server.shutdown();
+            println!("drained and stopped");
+            Ok(())
+        }
+        "bench-net" => {
+            let addr = o
+                .get("addr")
+                .ok_or_else(|| anyhow!("bench-net requires --addr HOST:PORT"))?;
+            let conns = get_usize(&o, "conns", 8)?;
+            let inflight = get_usize(&o, "inflight", 16)?;
+            let requests = get_usize(&o, "requests", 20_000)?;
+            let seed = get_usize(&o, "seed", 0xBE7)? as u64;
+            let report = net::run_load(addr, conns, inflight, requests, seed)?;
+            println!(
+                "{} conns × {} inflight: {} ok / {} errors in {:?} \
+                 ({:.0} req/s, p50 {:.0}µs, p99 {:.0}µs)",
+                report.connections,
+                report.inflight,
+                report.ok,
+                report.errors,
+                report.elapsed,
+                report.requests_per_s(),
+                report.p50_us,
+                report.p99_us
+            );
+            anyhow::ensure!(
+                report.errors == 0,
+                "{} responses failed the oracle check",
+                report.errors
             );
             Ok(())
         }

@@ -1,0 +1,266 @@
+//! Blocking client for the framed merge protocol, plus the multi-
+//! connection load generator behind `loms bench-net` and
+//! `benches/net_serving.rs`.
+//!
+//! [`NetClient`] supports *pipelined* submission: any number of
+//! [`NetClient::submit`] calls may be outstanding before the matching
+//! [`NetClient::recv`] calls — responses arrive strictly in request
+//! order (the protocol carries no ids; ordering is the correlation).
+//! Encoding reuses one write buffer, so a steady-state client
+//! allocates only the decoded response vectors.
+
+use super::protocol::{
+    self, code, encode_merge_request, Frame, FrameReader, ReadFrame, MAX_K, MAX_LIST_LEN,
+    MAX_REQUEST_BYTES, MODE_MERGE,
+};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::VecDeque;
+use std::io::Write;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+/// One merged response off the wire.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NetMerge {
+    pub merged: Vec<u32>,
+    /// Which artifact (or `"software"`) served it, per the server.
+    pub served_by: String,
+}
+
+/// A blocking connection to a [`super::NetServer`].
+pub struct NetClient {
+    stream: TcpStream,
+    reader: FrameReader,
+    wbuf: Vec<u8>,
+    /// Requests submitted but not yet received (sanity accounting).
+    inflight: usize,
+}
+
+impl NetClient {
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<NetClient> {
+        let stream = TcpStream::connect(addr).context("connecting to merge server")?;
+        let _ = stream.set_nodelay(true);
+        Ok(NetClient { stream, reader: FrameReader::new(), wbuf: Vec::new(), inflight: 0 })
+    }
+
+    /// Liveness probe: Ping, expect Pong. Must not be interleaved with
+    /// outstanding merges (the Pong would arrive in their order).
+    pub fn ping(&mut self) -> Result<()> {
+        anyhow::ensure!(self.inflight == 0, "ping with {} merges in flight", self.inflight);
+        protocol::encode_frame(&Frame::Ping, &mut self.wbuf);
+        self.stream.write_all(&self.wbuf).context("sending ping")?;
+        match self.read_reply()? {
+            Frame::Pong => Ok(()),
+            other => bail!("expected Pong, got {other:?}"),
+        }
+    }
+
+    /// Send one merge request without waiting (pipelined submission).
+    pub fn submit(&mut self, lists: &[Vec<u32>]) -> Result<()> {
+        anyhow::ensure!(
+            !lists.is_empty() && lists.len() <= MAX_K,
+            "k = {} outside 1..={MAX_K}",
+            lists.len()
+        );
+        for (l, list) in lists.iter().enumerate() {
+            anyhow::ensure!(
+                list.len() <= MAX_LIST_LEN,
+                "list {l} length {} exceeds {MAX_LIST_LEN}",
+                list.len()
+            );
+        }
+        // Per-list limits alone don't bound the frame (64 lists ×
+        // 2^20 keys ≫ the frame cap): enforce the decoder's payload
+        // limit here too, so an oversized request is a clean local
+        // error instead of a server-side Corrupt + connection close
+        // that discards every other pipelined request.
+        let payload = 3 + 4 * lists.len() + 4 * lists.iter().map(Vec::len).sum::<usize>();
+        anyhow::ensure!(
+            payload <= MAX_REQUEST_BYTES,
+            "request payload {payload} bytes exceeds {MAX_REQUEST_BYTES}"
+        );
+        encode_merge_request(MODE_MERGE, lists, &mut self.wbuf);
+        self.stream.write_all(&self.wbuf).context("sending merge request")?;
+        self.inflight += 1;
+        Ok(())
+    }
+
+    /// Receive the next in-order response. An error frame surfaces as
+    /// `Err` carrying the server's code and message.
+    pub fn recv(&mut self) -> Result<NetMerge> {
+        anyhow::ensure!(self.inflight > 0, "recv with nothing in flight");
+        self.inflight -= 1;
+        match self.read_reply()? {
+            Frame::MergeResponse { served_by, merged } => Ok(NetMerge { merged, served_by }),
+            Frame::Error { code, message } => {
+                bail!("server error {}: {message}", code_name(code))
+            }
+            other => bail!("expected MergeResponse, got {other:?}"),
+        }
+    }
+
+    /// Submit and wait — the one-shot convenience.
+    pub fn merge(&mut self, lists: &[Vec<u32>]) -> Result<NetMerge> {
+        self.submit(lists)?;
+        self.recv()
+    }
+
+    /// Outstanding pipelined requests.
+    pub fn inflight(&self) -> usize {
+        self.inflight
+    }
+
+    fn read_reply(&mut self) -> Result<Frame> {
+        loop {
+            match self.reader.read_frame(&mut self.stream) {
+                Ok(ReadFrame::Frame(f)) => return Ok(f),
+                Ok(ReadFrame::Pending) => continue, // frame still arriving
+                Ok(ReadFrame::Eof) => bail!("server closed the connection"),
+                Ok(ReadFrame::Malformed(m)) | Ok(ReadFrame::Corrupt(m)) => {
+                    bail!("undecodable server frame: {m}")
+                }
+                // The client sets no read timeout, but tolerate one if
+                // the caller configured the socket directly.
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    continue
+                }
+                Err(e) => return Err(anyhow!(e).context("reading server reply")),
+            }
+        }
+    }
+}
+
+fn code_name(c: u8) -> &'static str {
+    match c {
+        code::MALFORMED => "MALFORMED",
+        code::REJECTED => "REJECTED",
+        code::UNSUPPORTED => "UNSUPPORTED",
+        _ => "UNKNOWN",
+    }
+}
+
+/// Load-generator output (one run over all connections).
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub connections: usize,
+    pub inflight: usize,
+    /// Responses byte-identical to the scalar oracle.
+    pub ok: usize,
+    /// Error replies or oracle mismatches.
+    pub errors: usize,
+    pub elapsed: Duration,
+    pub p50_us: f64,
+    pub p99_us: f64,
+}
+
+impl LoadReport {
+    pub fn requests_per_s(&self) -> f64 {
+        (self.ok + self.errors) as f64 / self.elapsed.as_secs_f64().max(1e-9)
+    }
+}
+
+/// Ceil-index percentile over an ascending slice (µs). The one
+/// definition shared by the load generator and `benches/net_serving.rs`
+/// so both report identically-defined p50/p99.
+pub fn percentile_us(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 * q).ceil() as usize).saturating_sub(1);
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// The bench-net workload: ragged 2-way requests shaped for the
+/// `loms2_up32_dn32_b256` artifact (lengths 1..=32, keys < 2^20 — well
+/// clear of the PAD sentinel).
+pub fn workload_lists(rng: &mut crate::util::Rng) -> Vec<Vec<u32>> {
+    let la = rng.range(1, 33);
+    let lb = rng.range(1, 33);
+    vec![rng.sorted_list(la, 1 << 20), rng.sorted_list(lb, 1 << 20)]
+}
+
+/// Receive one in-order response and score it against its oracle
+/// (shared by the submit-loop window and the tail drain).
+fn drain_one(
+    client: &mut NetClient,
+    pending: &mut VecDeque<(Vec<u32>, Instant)>,
+    ok: &mut usize,
+    errors: &mut usize,
+    lat_us: &mut Vec<f64>,
+) {
+    let (want, sent_at) = pending.pop_front().expect("drain with nothing pending");
+    match client.recv() {
+        Ok(resp) if resp.merged == want => *ok += 1,
+        Ok(_) | Err(_) => *errors += 1,
+    }
+    lat_us.push(sent_at.elapsed().as_nanos() as f64 / 1_000.0);
+}
+
+/// Drive `total_requests` requests through `connections` parallel
+/// clients, each keeping up to `inflight` requests pipelined. Every
+/// response is checked byte-exact against a `sort_unstable` oracle
+/// computed at submit time; mismatches and error replies count as
+/// `errors`. Latency is measured per request, submit to receive.
+pub fn run_load(
+    addr: &str,
+    connections: usize,
+    inflight: usize,
+    total_requests: usize,
+    seed: u64,
+) -> Result<LoadReport> {
+    anyhow::ensure!(connections >= 1 && inflight >= 1, "need >=1 connection and inflight");
+    let per_conn = total_requests.div_ceil(connections);
+    let t0 = Instant::now();
+    let results: Vec<Result<(usize, usize, Vec<f64>)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..connections)
+            .map(|c| {
+                s.spawn(move || -> Result<(usize, usize, Vec<f64>)> {
+                    let mut client = NetClient::connect(addr)?;
+                    let mut rng = crate::util::Rng::new(seed ^ (c as u64).wrapping_mul(0x9E37));
+                    let mut pending: VecDeque<(Vec<u32>, Instant)> = VecDeque::new();
+                    let (mut ok, mut errors) = (0usize, 0usize);
+                    let mut lat_us = Vec::with_capacity(per_conn);
+                    for _ in 0..per_conn {
+                        let lists = workload_lists(&mut rng);
+                        let mut want: Vec<u32> = lists.concat();
+                        want.sort_unstable();
+                        client.submit(&lists)?;
+                        pending.push_back((want, Instant::now()));
+                        if pending.len() >= inflight {
+                            drain_one(
+                                &mut client, &mut pending, &mut ok, &mut errors, &mut lat_us,
+                            );
+                        }
+                    }
+                    while !pending.is_empty() {
+                        drain_one(&mut client, &mut pending, &mut ok, &mut errors, &mut lat_us);
+                    }
+                    Ok((ok, errors, lat_us))
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("load thread panicked")).collect()
+    });
+    let elapsed = t0.elapsed();
+    let (mut ok, mut errors) = (0usize, 0usize);
+    let mut lat_us: Vec<f64> = Vec::new();
+    for r in results {
+        let (o, e, l) = r?;
+        ok += o;
+        errors += e;
+        lat_us.extend(l);
+    }
+    lat_us.sort_by(|a, b| a.partial_cmp(b).expect("finite latency"));
+    Ok(LoadReport {
+        connections,
+        inflight,
+        ok,
+        errors,
+        elapsed,
+        p50_us: percentile_us(&lat_us, 0.50),
+        p99_us: percentile_us(&lat_us, 0.99),
+    })
+}

@@ -1,0 +1,36 @@
+//! Networked merge serving: a dependency-free (`std::net`) framed-TCP
+//! front-end over the batched [`crate::coordinator::MergeService`].
+//!
+//! The paper's LOMS devices earn their speedup only when kept
+//! saturated with batches; this layer is what saturates them from
+//! *outside* the process — the same thin-transport-over-batch-engine
+//! split hardware merge services use (cf. FLiMS and the micro-blossom
+//! hardware/service architecture). Three modules:
+//!
+//! * [`protocol`] — versioned length-prefixed binary frames
+//!   (MergeRequest / MergeResponse / Error / Ping / Pong) with
+//!   explicit size, k and list-length limits and an incremental,
+//!   timeout-tolerant [`protocol::FrameReader`]. Request keys decode
+//!   straight into the `Vec<u32>` lists service admission takes.
+//! * [`server`] — [`NetServer`]: acceptor thread + bounded worker
+//!   pool; per-connection reader/writer pair so pipelined requests
+//!   overlap with response write-back; error *replies* (never
+//!   disconnects) on malformed frames; graceful shutdown that drains
+//!   in-flight batches.
+//! * [`client`] — blocking [`NetClient`] with pipelined multi-request
+//!   submission, plus the multi-connection load generator behind
+//!   `loms bench-net` and `benches/net_serving.rs`.
+//!
+//! See `rust/DESIGN.md` §"Network serving" for the frame grammar and
+//! the socket-to-tile copy count.
+
+pub mod client;
+pub mod protocol;
+pub mod server;
+
+pub use client::{run_load, LoadReport, NetClient, NetMerge};
+pub use protocol::{
+    Frame, FrameReader, ReadFrame, MAX_FRAME_BYTES, MAX_K, MAX_LIST_LEN, MAX_REQUEST_BYTES,
+    PROTOCOL_VERSION,
+};
+pub use server::{NetServer, NetServerConfig};

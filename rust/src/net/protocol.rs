@@ -1,0 +1,608 @@
+//! The wire protocol of the networked merge service: versioned,
+//! length-prefixed binary frames over a byte stream (TCP in practice —
+//! nothing here touches a socket).
+//!
+//! ## Frame grammar
+//!
+//! ```text
+//! frame   := len:u32le body            (len = body length, 2..=MAX_FRAME_BYTES)
+//! body    := version:u8 type:u8 payload
+//!
+//! payload by type:
+//!   1 MergeRequest   mode:u8 k:u16le len[0]:u32le .. len[k-1]:u32le
+//!                    keys of list 0 .. keys of list k-1   (each key u32le)
+//!   2 MergeResponse  served_by_len:u8 served_by:bytes n:u32le key*n:u32le
+//!   3 Error          code:u8 msg_len:u16le msg:bytes (UTF-8)
+//!   4 Ping           (empty)
+//!   5 Pong           (empty)
+//! ```
+//!
+//! All integers are little-endian — the same byte order as the extsort
+//! spill format ([`crate::stream::source::FileRunStream`]), so a spill
+//! run can be framed without per-key byte swapping.
+//!
+//! ## Limits (enforced by the decoder, not just documented)
+//!
+//! * [`MAX_FRAME_BYTES`] — hard cap on `len`; a larger prefix is
+//!   unrecoverable corruption ([`ReadFrame::Corrupt`]) because the
+//!   reader cannot know where the next frame boundary would be.
+//! * [`MAX_REQUEST_BYTES`] — cap on a MergeRequest payload, held
+//!   slightly *below* the frame cap so the response to a maximal
+//!   request (same keys plus a served-by label) still frames.
+//! * [`MAX_K`] / [`MAX_LIST_LEN`] — per-request shape caps.
+//!
+//! ## Decode semantics
+//!
+//! [`FrameReader`] accumulates bytes and yields one [`ReadFrame`] per
+//! call. A body that fails to decode under an intact length prefix is
+//! [`ReadFrame::Malformed`]: the reader has already consumed the frame,
+//! so the connection can answer with an [`Frame::Error`] and keep
+//! going. Only a corrupt length prefix or a mid-frame disconnect kills
+//! the connection. Request keys are decoded straight from the receive
+//! buffer into per-list `Vec<u32>`s — the exact vectors handed to
+//! [`crate::coordinator::MergeService::submit`] — so the socket-to-tile
+//! path stays at one copy on the way in (see `rust/DESIGN.md`
+//! §"Network serving").
+//!
+//! Sortedness is deliberately *not* checked here: admission validation
+//! (sorted ascending, no `u32::MAX` sentinel) is the service's
+//! contract, and the server answers violations with a
+//! [`code::REJECTED`] error frame rather than a protocol error.
+
+use std::io::{self, Read};
+
+/// Protocol version carried in every frame body.
+pub const PROTOCOL_VERSION: u8 = 1;
+
+/// Hard cap on a frame body (`len` field). Includes headroom above
+/// [`MAX_REQUEST_BYTES`] so a maximal request's response — the same
+/// keys plus the served-by label and count — still fits in one frame.
+pub const MAX_FRAME_BYTES: usize = (16 << 20) + 4096;
+
+/// Cap on a MergeRequest payload (mode + k + lens + keys).
+pub const MAX_REQUEST_BYTES: usize = 16 << 20;
+
+/// Maximum lists per merge request.
+pub const MAX_K: usize = 64;
+
+/// Maximum keys per list.
+pub const MAX_LIST_LEN: usize = 1 << 20;
+
+/// Longest error message the encoder will put on the wire.
+pub const MAX_ERROR_MSG: usize = 512;
+
+/// Request mode byte: a plain k-way merge. Other values are reserved;
+/// the server answers them with [`code::UNSUPPORTED`].
+pub const MODE_MERGE: u8 = 0;
+
+/// Frame type bytes.
+const TYPE_MERGE_REQUEST: u8 = 1;
+const TYPE_MERGE_RESPONSE: u8 = 2;
+const TYPE_ERROR: u8 = 3;
+const TYPE_PING: u8 = 4;
+const TYPE_PONG: u8 = 5;
+
+/// Error frame codes.
+pub mod code {
+    /// The frame did not decode (bad version, type, shape or size).
+    pub const MALFORMED: u8 = 1;
+    /// The service refused the request (unsorted list, `u32::MAX`
+    /// sentinel key, or the service is shutting down).
+    pub const REJECTED: u8 = 2;
+    /// Well-formed but not servable here (reserved mode byte, or a
+    /// frame type this endpoint never accepts).
+    pub const UNSUPPORTED: u8 = 3;
+}
+
+/// One decoded frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Frame {
+    MergeRequest { mode: u8, lists: Vec<Vec<u32>> },
+    MergeResponse { served_by: String, merged: Vec<u32> },
+    Error { code: u8, message: String },
+    Ping,
+    Pong,
+}
+
+/// Outcome of one [`FrameReader::read_frame`] call.
+#[derive(Debug)]
+pub enum ReadFrame {
+    /// A well-formed frame.
+    Frame(Frame),
+    /// Bytes arrived but no complete frame is buffered yet — call
+    /// again. Surfacing between socket reads (instead of looping
+    /// internally) lets the server re-check its shutdown flag even
+    /// against a peer that trickles a large frame one byte at a time.
+    Pending,
+    /// Clean close at a frame boundary.
+    Eof,
+    /// The length prefix was intact but the body failed to decode. The
+    /// bytes are consumed — the stream is still in sync and the caller
+    /// may reply with an error frame and continue reading.
+    Malformed(String),
+    /// The length prefix itself is unusable (outside
+    /// `2..=MAX_FRAME_BYTES`). Resynchronisation is impossible; the
+    /// caller must close the connection after an optional error reply.
+    Corrupt(String),
+}
+
+/// How many bytes one [`FrameReader::read_frame`] call asks the
+/// transport for.
+const READ_CHUNK: usize = 16 * 1024;
+
+/// Incremental frame reader: accumulates stream bytes and parses one
+/// frame at a time, performing at most **one** transport read per call
+/// ([`ReadFrame::Pending`] when the frame is still incomplete).
+/// Reads land directly in the accumulation buffer's tail — no
+/// intermediate chunk copy. Tolerates read timeouts (`WouldBlock` /
+/// `TimedOut` surface as `Err` with partial bytes retained), which is
+/// how the server polls its shutdown flag without losing frame sync.
+/// A disconnect mid-frame surfaces as `ErrorKind::UnexpectedEof`.
+#[derive(Debug, Default)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+    /// Consumed prefix of `buf`. Parsing advances this cursor instead
+    /// of draining per frame (a per-frame drain would memmove the
+    /// whole residual buffer once per pipelined frame — quadratic in
+    /// frames per read); the buffer compacts once per transport read.
+    pos: usize,
+}
+
+impl FrameReader {
+    pub fn new() -> Self {
+        FrameReader::default()
+    }
+
+    pub fn read_frame<R: Read>(&mut self, r: &mut R) -> io::Result<ReadFrame> {
+        if let Some(out) = self.try_parse() {
+            return Ok(out);
+        }
+        // Compact once per transport read, not once per frame.
+        if self.pos > 0 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        let old = self.buf.len();
+        self.buf.resize(old + READ_CHUNK, 0);
+        let n = match r.read(&mut self.buf[old..]) {
+            Ok(n) => n,
+            Err(e) => {
+                self.buf.truncate(old); // keep frame sync across timeouts
+                return Err(e);
+            }
+        };
+        self.buf.truncate(old + n);
+        if n == 0 {
+            return if old == 0 {
+                Ok(ReadFrame::Eof)
+            } else {
+                Err(io::Error::new(io::ErrorKind::UnexpectedEof, "peer disconnected mid-frame"))
+            };
+        }
+        Ok(self.try_parse().unwrap_or(ReadFrame::Pending))
+    }
+
+    fn try_parse(&mut self) -> Option<ReadFrame> {
+        let start = self.pos;
+        if self.buf.len() - start < 4 {
+            return None;
+        }
+        let len = u32::from_le_bytes([
+            self.buf[start],
+            self.buf[start + 1],
+            self.buf[start + 2],
+            self.buf[start + 3],
+        ]) as usize;
+        if len < 2 || len > MAX_FRAME_BYTES {
+            // Deliberately not consumed: the stream cannot be resynced.
+            return Some(ReadFrame::Corrupt(format!(
+                "frame length {len} outside 2..={MAX_FRAME_BYTES}"
+            )));
+        }
+        if self.buf.len() - start < 4 + len {
+            return None;
+        }
+        let result = match decode_body(&self.buf[start + 4..start + 4 + len]) {
+            Ok(f) => ReadFrame::Frame(f),
+            Err(msg) => ReadFrame::Malformed(msg),
+        };
+        self.pos = start + 4 + len;
+        Some(result)
+    }
+}
+
+/// Decode one frame body (`version type payload`, length already
+/// validated against [`MAX_FRAME_BYTES`]).
+fn decode_body(body: &[u8]) -> Result<Frame, String> {
+    debug_assert!(body.len() >= 2);
+    let version = body[0];
+    if version != PROTOCOL_VERSION {
+        return Err(format!("unsupported protocol version {version} (expected {PROTOCOL_VERSION})"));
+    }
+    let ty = body[1];
+    let mut c = Cur { b: &body[2..], i: 0 };
+    match ty {
+        TYPE_MERGE_REQUEST => {
+            if c.b.len() > MAX_REQUEST_BYTES {
+                return Err(format!(
+                    "merge request payload {} exceeds {MAX_REQUEST_BYTES} bytes",
+                    c.b.len()
+                ));
+            }
+            let mode = c.u8("mode")?;
+            let k = c.u16("k")? as usize;
+            if k == 0 || k > MAX_K {
+                return Err(format!("k = {k} outside 1..={MAX_K}"));
+            }
+            let mut lens = Vec::with_capacity(k);
+            for l in 0..k {
+                let n = c.u32("list length")? as usize;
+                if n > MAX_LIST_LEN {
+                    return Err(format!("list {l} length {n} exceeds {MAX_LIST_LEN}"));
+                }
+                lens.push(n);
+            }
+            let mut lists = Vec::with_capacity(k);
+            for (l, &n) in lens.iter().enumerate() {
+                let raw = c.bytes(n * 4, "list keys")?;
+                // The one inbound copy: receive buffer → the request
+                // vector that goes straight into service admission.
+                let list: Vec<u32> = raw
+                    .chunks_exact(4)
+                    .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                    .collect();
+                debug_assert_eq!(list.len(), n, "list {l}");
+                lists.push(list);
+            }
+            c.done()?;
+            Ok(Frame::MergeRequest { mode, lists })
+        }
+        TYPE_MERGE_RESPONSE => {
+            let label_len = c.u8("served_by length")? as usize;
+            let label = c.bytes(label_len, "served_by")?;
+            let served_by = std::str::from_utf8(label)
+                .map_err(|_| "served_by is not UTF-8".to_string())?
+                .to_string();
+            let n = c.u32("key count")? as usize;
+            if n > MAX_FRAME_BYTES / 4 {
+                return Err(format!("response key count {n} exceeds the frame cap"));
+            }
+            let raw = c.bytes(n * 4, "response keys")?;
+            let merged: Vec<u32> = raw
+                .chunks_exact(4)
+                .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            c.done()?;
+            Ok(Frame::MergeResponse { served_by, merged })
+        }
+        TYPE_ERROR => {
+            let code = c.u8("error code")?;
+            let msg_len = c.u16("message length")? as usize;
+            let msg = c.bytes(msg_len, "message")?;
+            let message = std::str::from_utf8(msg)
+                .map_err(|_| "error message is not UTF-8".to_string())?
+                .to_string();
+            c.done()?;
+            Ok(Frame::Error { code, message })
+        }
+        TYPE_PING => {
+            c.done()?;
+            Ok(Frame::Ping)
+        }
+        TYPE_PONG => {
+            c.done()?;
+            Ok(Frame::Pong)
+        }
+        other => Err(format!("unknown frame type {other}")),
+    }
+}
+
+/// Bounds-checked little-endian cursor over a frame payload.
+struct Cur<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn bytes(&mut self, n: usize, what: &str) -> Result<&'a [u8], String> {
+        match self.b.get(self.i..self.i + n) {
+            Some(s) => {
+                self.i += n;
+                Ok(s)
+            }
+            None => Err(format!("truncated payload reading {what} ({n} bytes at {})", self.i)),
+        }
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8, String> {
+        Ok(self.bytes(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &str) -> Result<u16, String> {
+        let b = self.bytes(2, what)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32, String> {
+        let b = self.bytes(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn done(&self) -> Result<(), String> {
+        if self.i == self.b.len() {
+            Ok(())
+        } else {
+            Err(format!("{} trailing bytes after payload", self.b.len() - self.i))
+        }
+    }
+}
+
+/// Truncate to `max` bytes on a char boundary (error/label clamping).
+fn clamp_str(s: &str, max: usize) -> &str {
+    if s.len() <= max {
+        return s;
+    }
+    let mut end = max;
+    while !s.is_char_boundary(end) {
+        end -= 1;
+    }
+    &s[..end]
+}
+
+fn begin(out: &mut Vec<u8>, ty: u8) {
+    out.clear();
+    out.extend_from_slice(&[0u8; 4]); // length, patched by finish()
+    out.push(PROTOCOL_VERSION);
+    out.push(ty);
+}
+
+fn finish(out: &mut Vec<u8>) {
+    let len = (out.len() - 4) as u32;
+    out[..4].copy_from_slice(&len.to_le_bytes());
+}
+
+/// Encode a merge request directly from borrowed lists — the client's
+/// hot path, which never builds a [`Frame`] (that would clone every
+/// key). `out` is cleared and refilled, so a reused buffer allocates
+/// nothing in steady state.
+pub fn encode_merge_request(mode: u8, lists: &[Vec<u32>], out: &mut Vec<u8>) {
+    debug_assert!(!lists.is_empty() && lists.len() <= MAX_K);
+    begin(out, TYPE_MERGE_REQUEST);
+    out.push(mode);
+    out.extend_from_slice(&(lists.len() as u16).to_le_bytes());
+    for l in lists {
+        debug_assert!(l.len() <= MAX_LIST_LEN);
+        out.extend_from_slice(&(l.len() as u32).to_le_bytes());
+    }
+    for l in lists {
+        for &x in l {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    finish(out);
+}
+
+/// Encode a merge response directly from the served-by label and the
+/// merged keys — the server's hot path (no intermediate [`Frame`]).
+pub fn encode_merge_response(served_by: &str, merged: &[u32], out: &mut Vec<u8>) {
+    let label = clamp_str(served_by, u8::MAX as usize);
+    begin(out, TYPE_MERGE_RESPONSE);
+    out.push(label.len() as u8);
+    out.extend_from_slice(label.as_bytes());
+    out.extend_from_slice(&(merged.len() as u32).to_le_bytes());
+    for &x in merged {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    finish(out);
+}
+
+/// Encode an error frame (message clamped to [`MAX_ERROR_MSG`]).
+pub fn encode_error(code: u8, message: &str, out: &mut Vec<u8>) {
+    let msg = clamp_str(message, MAX_ERROR_MSG);
+    begin(out, TYPE_ERROR);
+    out.push(code);
+    out.extend_from_slice(&(msg.len() as u16).to_le_bytes());
+    out.extend_from_slice(msg.as_bytes());
+    finish(out);
+}
+
+/// Encode any frame (tests and the non-hot control frames; the data
+/// paths use the borrowing encoders above).
+pub fn encode_frame(f: &Frame, out: &mut Vec<u8>) {
+    match f {
+        Frame::MergeRequest { mode, lists } => encode_merge_request(*mode, lists, out),
+        Frame::MergeResponse { served_by, merged } => {
+            encode_merge_response(served_by, merged, out)
+        }
+        Frame::Error { code, message } => encode_error(*code, message, out),
+        Frame::Ping => {
+            begin(out, TYPE_PING);
+            finish(out);
+        }
+        Frame::Pong => {
+            begin(out, TYPE_PONG);
+            finish(out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    /// Drive `read_frame` past `Pending` ticks to the next outcome.
+    fn read_one<R: Read>(rd: &mut FrameReader, r: &mut R) -> io::Result<ReadFrame> {
+        loop {
+            match rd.read_frame(r)? {
+                ReadFrame::Pending => continue,
+                other => return Ok(other),
+            }
+        }
+    }
+
+    fn roundtrip(f: &Frame) -> Frame {
+        let mut bytes = Vec::new();
+        encode_frame(f, &mut bytes);
+        let mut rd = FrameReader::new();
+        match read_one(&mut rd, &mut Cursor::new(bytes)).unwrap() {
+            ReadFrame::Frame(g) => g,
+            other => panic!("{f:?} decoded to {other:?}"),
+        }
+    }
+
+    #[test]
+    fn roundtrip_every_frame_type() {
+        for f in [
+            Frame::MergeRequest { mode: MODE_MERGE, lists: vec![vec![1, 2, 3], vec![2, 9]] },
+            Frame::MergeRequest { mode: 7, lists: vec![vec![], vec![u32::MAX], vec![0]] },
+            Frame::MergeResponse { served_by: "loms2_up32_dn32_b256".into(), merged: vec![1, 2] },
+            Frame::MergeResponse { served_by: String::new(), merged: vec![] },
+            Frame::Error { code: code::REJECTED, message: "list 0 is not sorted".into() },
+            Frame::Ping,
+            Frame::Pong,
+        ] {
+            assert_eq!(roundtrip(&f), f);
+        }
+    }
+
+    #[test]
+    fn frames_split_across_reads_reassemble() {
+        let f = Frame::MergeRequest { mode: MODE_MERGE, lists: vec![vec![5; 100], vec![7; 33]] };
+        let mut bytes = Vec::new();
+        encode_frame(&f, &mut bytes);
+        // A reader that hands out one byte at a time.
+        struct OneByte(Cursor<Vec<u8>>);
+        impl std::io::Read for OneByte {
+            fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+                self.0.read(&mut buf[..1.min(buf.len())])
+            }
+        }
+        let mut rd = FrameReader::new();
+        match read_one(&mut rd, &mut OneByte(Cursor::new(bytes))).unwrap() {
+            ReadFrame::Frame(g) => assert_eq!(g, f),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn eof_and_midframe_disconnect() {
+        let mut rd = FrameReader::new();
+        assert!(matches!(
+            read_one(&mut rd, &mut Cursor::new(Vec::new())).unwrap(),
+            ReadFrame::Eof
+        ));
+        // A valid prefix followed by disconnect.
+        let mut bytes = Vec::new();
+        encode_frame(&Frame::Ping, &mut bytes);
+        bytes.truncate(bytes.len() - 1);
+        let mut rd = FrameReader::new();
+        let err = read_one(&mut rd, &mut Cursor::new(bytes)).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_corrupt() {
+        let mut bytes = ((MAX_FRAME_BYTES + 1) as u32).to_le_bytes().to_vec();
+        bytes.extend_from_slice(&[0u8; 16]);
+        let mut rd = FrameReader::new();
+        assert!(matches!(
+            read_one(&mut rd, &mut Cursor::new(bytes)).unwrap(),
+            ReadFrame::Corrupt(_)
+        ));
+        // Too-short bodies (< version + type) are corrupt as well.
+        let mut rd = FrameReader::new();
+        let bytes = 1u32.to_le_bytes().to_vec();
+        assert!(matches!(
+            read_one(&mut rd, &mut Cursor::new(bytes)).unwrap(),
+            ReadFrame::Corrupt(_)
+        ));
+    }
+
+    #[test]
+    fn wrong_version_and_shape_violations_are_malformed() {
+        let mut base = Vec::new();
+        encode_frame(&Frame::Ping, &mut base);
+        let mut wrong_version = base.clone();
+        wrong_version[4] = PROTOCOL_VERSION + 1;
+        let mut unknown_type = base.clone();
+        unknown_type[5] = 200;
+        for bytes in [wrong_version, unknown_type] {
+            let mut rd = FrameReader::new();
+            assert!(matches!(
+                read_one(&mut rd, &mut Cursor::new(bytes)).unwrap(),
+                ReadFrame::Malformed(_)
+            ));
+        }
+        // k = 0, k > MAX_K, oversized list length, truncated keys,
+        // trailing bytes: all body-level malformations.
+        let reqs: Vec<Vec<u8>> = vec![
+            request_bytes(0, &[]),
+            request_bytes((MAX_K + 1) as u16, &[]),
+            request_bytes(1, &[(MAX_LIST_LEN + 1) as u32]),
+            request_bytes(1, &[3]), // claims 3 keys, carries none
+        ];
+        for bytes in reqs {
+            let mut rd = FrameReader::new();
+            assert!(
+                matches!(
+                    read_one(&mut rd, &mut Cursor::new(bytes.clone())).unwrap(),
+                    ReadFrame::Malformed(_)
+                ),
+                "{bytes:?}"
+            );
+        }
+    }
+
+    /// Hand-build a request frame with an arbitrary header (no keys).
+    fn request_bytes(k: u16, lens: &[u32]) -> Vec<u8> {
+        let mut body = vec![PROTOCOL_VERSION, 1, MODE_MERGE];
+        body.extend_from_slice(&k.to_le_bytes());
+        for &l in lens {
+            body.extend_from_slice(&l.to_le_bytes());
+        }
+        let mut out = (body.len() as u32).to_le_bytes().to_vec();
+        out.extend_from_slice(&body);
+        out
+    }
+
+    #[test]
+    fn malformed_frame_does_not_desync_the_stream() {
+        // A malformed body followed by a good frame: the reader must
+        // consume the bad frame and still deliver the good one.
+        let mut stream = request_bytes(0, &[]);
+        let mut good = Vec::new();
+        encode_frame(&Frame::Ping, &mut good);
+        stream.extend_from_slice(&good);
+        let mut rd = FrameReader::new();
+        let mut cur = Cursor::new(stream);
+        assert!(matches!(read_one(&mut rd, &mut cur).unwrap(), ReadFrame::Malformed(_)));
+        assert!(matches!(
+            read_one(&mut rd, &mut cur).unwrap(),
+            ReadFrame::Frame(Frame::Ping)
+        ));
+    }
+
+    #[test]
+    fn clamps_labels_and_messages() {
+        let mut out = Vec::new();
+        encode_error(code::MALFORMED, &"x".repeat(MAX_ERROR_MSG + 100), &mut out);
+        let mut rd = FrameReader::new();
+        match read_one(&mut rd, &mut Cursor::new(out)).unwrap() {
+            ReadFrame::Frame(Frame::Error { message, .. }) => {
+                assert_eq!(message.len(), MAX_ERROR_MSG)
+            }
+            other => panic!("{other:?}"),
+        }
+        let mut out = Vec::new();
+        encode_merge_response(&"é".repeat(200), &[1], &mut out); // 2-byte chars
+        let mut rd = FrameReader::new();
+        match read_one(&mut rd, &mut Cursor::new(out)).unwrap() {
+            ReadFrame::Frame(Frame::MergeResponse { served_by, .. }) => {
+                assert!(served_by.len() <= 255);
+                assert!(served_by.chars().all(|c| c == 'é')); // boundary-safe clamp
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

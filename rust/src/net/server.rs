@@ -1,0 +1,361 @@
+//! The networked serving front-end: a framed-TCP listener over a
+//! running [`MergeService`].
+//!
+//! Thread shape:
+//!
+//! * `loms-net-accept` — accepts connections and hands them to the
+//!   worker pool over a bounded channel (backpressure: when every
+//!   worker is busy and the backlog is full, `accept` stalls and the
+//!   kernel's listen queue absorbs the burst).
+//! * `loms-net-worker-*` — a fixed pool; each worker owns one
+//!   connection at a time. Per connection the worker runs a *reader*
+//!   (its own thread of control) and spawns a scoped *writer* thread,
+//!   so pipelined requests decode and enter service admission while
+//!   earlier responses are still being written — the wire front-end
+//!   inherits the service's depth-1 execution pipeline instead of
+//!   serialising it.
+//!
+//! Data path: frame bytes decode straight into the `Vec<u32>` lists
+//! handed to [`MergeService::submit`] (one inbound copy), the service
+//! runs its two-copy tile-direct path, and the response keys are
+//! encoded from the response vector into the write buffer (one
+//! outbound copy). No intermediate request/response structs exist on
+//! the server side of the wire.
+//!
+//! Error policy: a malformed frame body gets an [`Frame::Error`] reply
+//! on the same connection and the stream keeps going (the length
+//! prefix kept it in sync); only an unusable length prefix or a
+//! mid-frame disconnect closes the connection. The server never
+//! panics on wire input — every decode failure is a typed reply.
+//!
+//! Overload policy: the per-connection reply queue is bounded
+//! ([`NetServerConfig::max_inflight_per_conn`]) — a client that
+//! pipelines faster than it reads stops being *read*, so backpressure
+//! reaches it through TCP instead of growing server memory; a peer
+//! that stops reading entirely trips the write timeout and is
+//! disconnected.
+//!
+//! Shutdown: [`NetServer::shutdown`] stops accepting, lets every
+//! worker finish its in-flight frames (readers poll the flag at
+//! `read_timeout` granularity; writers drain every response already
+//! admitted to the service), then joins the pool and finally shuts the
+//! service down — in-flight batches are never dropped.
+
+use super::protocol::{
+    self, code, encode_error, encode_merge_response, Frame, FrameReader, ReadFrame, MODE_MERGE,
+};
+use crate::coordinator::request::MergeResponse;
+use crate::coordinator::{Metrics, MergeService};
+use anyhow::{Context, Result};
+use std::io::{self, Write};
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Listener tuning.
+#[derive(Debug, Clone)]
+pub struct NetServerConfig {
+    /// Worker threads — the maximum number of concurrently served
+    /// connections (clamped to ≥ 1).
+    pub workers: usize,
+    /// Socket read timeout: how often a blocked reader wakes to check
+    /// the shutdown flag. Frame sync is kept across timeouts.
+    pub read_timeout: Duration,
+    /// Socket write timeout: how long a reply write may block on a
+    /// peer that stopped reading before the connection is declared
+    /// dead. Bounds how long one slow-loris client can delay worker
+    /// (and therefore server) shutdown.
+    pub write_timeout: Duration,
+    /// Maximum replies a connection may have in flight (admitted to
+    /// the service or queued for the writer). When the writer falls
+    /// this far behind, the reader stops decoding new frames —
+    /// backpressure reaches the client through TCP instead of growing
+    /// server memory without bound (clamped to ≥ 1).
+    pub max_inflight_per_conn: usize,
+}
+
+impl Default for NetServerConfig {
+    fn default() -> Self {
+        NetServerConfig {
+            workers: 8,
+            read_timeout: Duration::from_millis(50),
+            write_timeout: Duration::from_secs(10),
+            max_inflight_per_conn: 256,
+        }
+    }
+}
+
+/// A running framed-TCP front-end over a [`MergeService`].
+pub struct NetServer {
+    addr: SocketAddr,
+    service: Option<Arc<MergeService>>,
+    shutdown: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `listen` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// serve `service` until [`Self::shutdown`]. Takes ownership of the
+    /// service; reach it through [`Self::service`] for in-process
+    /// submission and metrics.
+    pub fn start(listen: &str, service: MergeService, cfg: NetServerConfig) -> Result<NetServer> {
+        let listener =
+            TcpListener::bind(listen).with_context(|| format!("binding {listen:?}"))?;
+        let addr = listener.local_addr().context("resolving listen address")?;
+        let service = Arc::new(service);
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let n_workers = cfg.workers.max(1);
+        // Bounded hand-off: a full backlog pushes backpressure into the
+        // kernel listen queue instead of growing an unbounded Vec.
+        let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(n_workers);
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let mut workers = Vec::with_capacity(n_workers);
+        for i in 0..n_workers {
+            let conn_rx = Arc::clone(&conn_rx);
+            let service = Arc::clone(&service);
+            let shutdown = Arc::clone(&shutdown);
+            let cfg = cfg.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("loms-net-worker-{i}"))
+                    .spawn(move || loop {
+                        // Take one connection while holding the lock,
+                        // release it to serve.
+                        let conn = {
+                            let Ok(guard) = conn_rx.lock() else { return };
+                            guard.recv()
+                        };
+                        let Ok(stream) = conn else { return };
+                        serve_conn(stream, &service, &shutdown, &cfg);
+                    })
+                    .expect("spawn net worker"),
+            );
+        }
+        let accept_shutdown = Arc::clone(&shutdown);
+        let accept_metrics = Arc::clone(&service);
+        let acceptor = std::thread::Builder::new()
+            .name("loms-net-accept".into())
+            .spawn(move || {
+                loop {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            if accept_shutdown.load(Ordering::SeqCst) {
+                                break; // the shutdown wake-up connection
+                            }
+                            accept_metrics.metrics().on_net_connection();
+                            if conn_tx.send(stream).is_err() {
+                                break;
+                            }
+                        }
+                        Err(_) => {
+                            if accept_shutdown.load(Ordering::SeqCst) {
+                                break;
+                            }
+                            // Transient accept errors (EMFILE, aborted
+                            // handshake): back off briefly instead of
+                            // busy-spinning on a persistent condition.
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                    }
+                }
+                // Dropping conn_tx here releases the worker pool.
+            })
+            .expect("spawn net acceptor");
+        Ok(NetServer { addr, service: Some(service), shutdown, acceptor: Some(acceptor), workers })
+    }
+
+    /// The bound address (resolves `:0` to the real ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The service behind the listener (in-process submission, metrics).
+    pub fn service(&self) -> &MergeService {
+        self.service.as_ref().expect("server not shut down")
+    }
+
+    fn stop(&mut self) {
+        if self.acceptor.is_none() && self.workers.is_empty() {
+            return; // already stopped (shutdown() runs before Drop)
+        }
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Wake the acceptor out of `accept()`; it sees the flag and
+        // exits, dropping the connection channel. A wildcard bind
+        // (0.0.0.0 / ::) is not self-connectable everywhere, so the
+        // wake-up targets loopback on the same port, with a bounded
+        // connect so a refused wake can never hang the join.
+        let mut wake = self.addr;
+        if wake.ip().is_unspecified() {
+            wake.set_ip(match wake.ip() {
+                IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+                IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+            });
+        }
+        let _ = TcpStream::connect_timeout(&wake, Duration::from_secs(1));
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    /// Graceful shutdown: stop accepting, drain every in-flight frame
+    /// and batch, then stop the service itself.
+    pub fn shutdown(mut self) {
+        self.stop();
+        if let Some(service) = self.service.take() {
+            if let Ok(svc) = Arc::try_unwrap(service) {
+                svc.shutdown();
+            }
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop();
+        // `service` (if still held) stops via its own Drop.
+    }
+}
+
+/// What the reader hands the writer, in request order.
+enum Reply {
+    /// A merge admitted to the service — the writer awaits the
+    /// response channel (closed channel = rejected).
+    Merge(mpsc::Receiver<MergeResponse>),
+    Pong,
+    Err { code: u8, message: String },
+}
+
+/// Serve one connection to completion (peer close, fatal frame, or
+/// server shutdown). Reader runs here; the writer runs in a scoped
+/// thread so responses stream back while later frames decode.
+fn serve_conn(
+    mut stream: TcpStream,
+    service: &MergeService,
+    shutdown: &AtomicBool,
+    cfg: &NetServerConfig,
+) {
+    let metrics = service.metrics();
+    let _ = stream.set_nodelay(true);
+    if stream.set_read_timeout(Some(cfg.read_timeout)).is_err() {
+        return;
+    }
+    let Ok(write_half) = stream.try_clone() else { return };
+    // A peer that stops reading must not pin this worker forever: the
+    // write timeout turns it into a dead-peer close.
+    let _ = write_half.set_write_timeout(Some(cfg.write_timeout));
+    // Bounded reply queue: when the writer falls `max_inflight` behind
+    // (slow or stalled peer), the reader blocks here instead of
+    // admitting more work — backpressure reaches the client via TCP,
+    // and per-connection memory stays bounded.
+    let (reply_tx, reply_rx) = mpsc::sync_channel::<Reply>(cfg.max_inflight_per_conn.max(1));
+    std::thread::scope(|s| {
+        let writer = s.spawn(|| writer_loop(write_half, reply_rx, metrics));
+        let mut reader = FrameReader::new();
+        loop {
+            if shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            match reader.read_frame(&mut stream) {
+                Err(e)
+                    if e.kind() == io::ErrorKind::WouldBlock
+                        || e.kind() == io::ErrorKind::TimedOut =>
+                {
+                    continue; // shutdown poll tick; frame sync is kept
+                }
+                Err(_) => break, // disconnect (possibly mid-frame)
+                // Partial frame: loop so the shutdown check above runs
+                // between every chunk, even against a trickling peer.
+                Ok(ReadFrame::Pending) => continue,
+                Ok(ReadFrame::Eof) => break,
+                Ok(ReadFrame::Corrupt(msg)) => {
+                    // The stream cannot be resynced: answer and close.
+                    metrics.on_net_frame_in();
+                    metrics.on_net_decode_error();
+                    let _ = reply_tx.send(Reply::Err { code: code::MALFORMED, message: msg });
+                    break;
+                }
+                Ok(ReadFrame::Malformed(msg)) => {
+                    // Framing intact: answer on the same connection and
+                    // keep serving (no disconnect on bad frames).
+                    metrics.on_net_frame_in();
+                    metrics.on_net_decode_error();
+                    let _ = reply_tx.send(Reply::Err { code: code::MALFORMED, message: msg });
+                }
+                Ok(ReadFrame::Frame(frame)) => {
+                    metrics.on_net_frame_in();
+                    let reply = match frame {
+                        Frame::Ping => Reply::Pong,
+                        Frame::MergeRequest { mode, .. } if mode != MODE_MERGE => Reply::Err {
+                            code: code::UNSUPPORTED,
+                            message: format!("unsupported request mode {mode}"),
+                        },
+                        // The decoded lists go into admission as-is —
+                        // no re-copy between socket and service.
+                        Frame::MergeRequest { lists, .. } => Reply::Merge(service.submit(lists)),
+                        Frame::MergeResponse { .. } | Frame::Error { .. } | Frame::Pong => {
+                            Reply::Err {
+                                code: code::UNSUPPORTED,
+                                message: "client-only frame type sent to server".into(),
+                            }
+                        }
+                    };
+                    let _ = reply_tx.send(reply);
+                }
+            }
+        }
+        // Closing the reply channel lets the writer drain what is in
+        // flight (including service responses not yet produced) and
+        // exit — graceful per-connection shutdown.
+        drop(reply_tx);
+        let _ = writer.join();
+    });
+}
+
+/// Drain replies in request order and write response frames. Counts
+/// every frame *produced* even if the peer vanished mid-reply, so the
+/// `frames_in == responses + errors` account stays balanced.
+fn writer_loop(mut w: TcpStream, rx: mpsc::Receiver<Reply>, metrics: &Metrics) {
+    let mut buf = Vec::new();
+    let mut peer_gone = false;
+    while let Ok(reply) = rx.recv() {
+        match reply {
+            Reply::Pong => {
+                metrics.on_net_response();
+                protocol::encode_frame(&Frame::Pong, &mut buf);
+            }
+            Reply::Err { code, message } => {
+                metrics.on_net_error();
+                encode_error(code, &message, &mut buf);
+            }
+            Reply::Merge(resp_rx) => match resp_rx.recv() {
+                Ok(resp) => {
+                    metrics.on_net_response();
+                    // The one outbound copy: response keys → frame bytes.
+                    encode_merge_response(&resp.served_by, &resp.merged, &mut buf);
+                }
+                Err(_) => {
+                    metrics.on_net_error();
+                    encode_error(
+                        code::REJECTED,
+                        "request rejected (unsorted list, u32::MAX key, or shutdown)",
+                        &mut buf,
+                    );
+                }
+            },
+        }
+        if !peer_gone && w.write_all(&buf).is_err() {
+            // Keep draining so in-flight service responses are still
+            // consumed and the metric account balances.
+            peer_gone = true;
+        }
+    }
+    if !peer_gone {
+        let _ = w.flush();
+    }
+}

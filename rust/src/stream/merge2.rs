@@ -207,8 +207,8 @@ mod tests {
         assert!(k.device_name().contains("loms"));
         let mut rng = Rng::new(0x57EA);
         for _ in 0..50 {
-            let a = rng.sorted_list(rng.range(0, 9), 1000);
-            let b = rng.sorted_list(rng.range(0, 9), 1000);
+            let a = rng.sorted_list_ragged(0, 9, 1000);
+            let b = rng.sorted_list_ragged(0, 9, 1000);
             let mut got = Vec::new();
             k.merge_pair(&a, &b, &mut got);
             let mut want = [a, b].concat();
@@ -226,7 +226,7 @@ mod tests {
         let n_rows = crate::sortnet::lanes::LANES + 5;
         let pairs: Vec<[Vec<u32>; 2]> = (0..n_rows)
             .map(|_| {
-                [rng.sorted_list(rng.range(0, 5), 100), rng.sorted_list(rng.range(1, 5), 100)]
+                [rng.sorted_list_ragged(0, 5, 100), rng.sorted_list_ragged(1, 5, 100)]
             })
             .collect();
         let rows: Vec<&[Vec<u32>]> = pairs.iter().map(|p| &p[..]).collect();

@@ -425,7 +425,7 @@ mod tests {
         for &k in &[2usize, 3, 5, 8, 17] {
             for &r in &[2usize, 8, 32] {
                 let runs: Vec<Vec<u32>> =
-                    (0..k).map(|_| rng.sorted_list(rng.range(0, 300), 5000)).collect();
+                    (0..k).map(|_| rng.sorted_list_ragged(0, 300, 5000)).collect();
                 let got = merge_runs(&runs, r).unwrap();
                 assert_eq!(got, sorted_concat(&runs), "k={k} r={r}");
             }

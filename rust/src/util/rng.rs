@@ -75,6 +75,15 @@ impl Rng {
         v
     }
 
+    /// A sorted list whose length is itself uniform in `[lo, hi)` — the
+    /// common ragged-workload generator. One method because the nested
+    /// form `rng.sorted_list(rng.range(lo, hi), max)` is E0499 (two
+    /// overlapping `&mut self` borrows).
+    pub fn sorted_list_ragged(&mut self, lo: usize, hi: usize, max: u32) -> Vec<u32> {
+        let len = self.range(lo, hi);
+        self.sorted_list(len, max)
+    }
+
     /// Fisher-Yates shuffle.
     pub fn shuffle<T>(&mut self, v: &mut [T]) {
         for i in (1..v.len()).rev() {
@@ -132,6 +141,16 @@ mod tests {
         assert_eq!(l.len(), 100);
         assert!(l.windows(2).all(|w| w[0] <= w[1]));
         assert!(l.iter().all(|&x| x < 1000));
+    }
+
+    #[test]
+    fn sorted_list_ragged_bounds_length() {
+        let mut r = Rng::new(8);
+        for _ in 0..200 {
+            let l = r.sorted_list_ragged(3, 10, 50);
+            assert!((3..10).contains(&l.len()));
+            assert!(l.windows(2).all(|w| w[0] <= w[1]));
+        }
     }
 
     #[test]

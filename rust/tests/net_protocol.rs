@@ -1,0 +1,272 @@
+//! Protocol robustness suite: frame round-trips over the real wire and
+//! a deterministic-seed malformed-frame fuzzer against a live
+//! [`NetServer`]. The server-side contract under test: **no byte
+//! sequence a client can send panics the server** — every malformed
+//! frame is answered with an Error frame on the same connection (or a
+//! clean close when the stream cannot be resynced), and the server
+//! keeps serving fresh connections afterwards.
+
+use loms::coordinator::{MergeService, ServiceConfig, SoftwareBackend};
+use loms::net::protocol::{
+    self, code, encode_merge_request, Frame, FrameReader, ReadFrame, MAX_FRAME_BYTES, MAX_K,
+    MAX_LIST_LEN, MODE_MERGE, PROTOCOL_VERSION,
+};
+use loms::net::{NetClient, NetServer, NetServerConfig};
+use loms::util::Rng;
+use std::io::{Cursor, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+fn start_server() -> NetServer {
+    let svc = MergeService::start(|| Ok(SoftwareBackend::default_set()), ServiceConfig::default())
+        .expect("service");
+    NetServer::start("127.0.0.1:0", svc, NetServerConfig::default()).expect("server")
+}
+
+/// Pure codec round-trip (no socket): encode → FrameReader → equal.
+/// (`read_frame` does one read per call, yielding `Pending` while a
+/// multi-chunk frame is still arriving — loop like a real consumer.)
+fn codec_roundtrip(f: &Frame) {
+    let mut bytes = Vec::new();
+    protocol::encode_frame(f, &mut bytes);
+    let mut rd = FrameReader::new();
+    let mut cur = Cursor::new(bytes);
+    loop {
+        match rd.read_frame(&mut cur).unwrap() {
+            ReadFrame::Pending => continue,
+            ReadFrame::Frame(g) => {
+                assert_eq!(&g, f);
+                return;
+            }
+            other => panic!("{f:?} decoded to {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn codec_round_trips_extreme_shapes() {
+    // Ragged k, empty lists, a max-length list, keys including
+    // u32::MAX (legal on the wire — the *service* rejects the
+    // sentinel, the protocol does not).
+    let ragged: Vec<Vec<u32>> = (0..7).map(|l| (0..l * 3).map(|x| x as u32).collect()).collect();
+    codec_roundtrip(&Frame::MergeRequest { mode: MODE_MERGE, lists: ragged });
+    codec_roundtrip(&Frame::MergeRequest {
+        mode: MODE_MERGE,
+        lists: vec![vec![], vec![0, 1, u32::MAX - 1, u32::MAX], vec![]],
+    });
+    codec_roundtrip(&Frame::MergeRequest {
+        mode: MODE_MERGE,
+        lists: vec![(0..MAX_LIST_LEN as u32).collect()],
+    });
+    codec_roundtrip(&Frame::MergeResponse {
+        served_by: "loms2_up32_dn32_b256".into(),
+        merged: vec![0, u32::MAX],
+    });
+    codec_roundtrip(&Frame::Error { code: code::MALFORMED, message: "truncated payload".into() });
+    codec_roundtrip(&Frame::Ping);
+    codec_roundtrip(&Frame::Pong);
+}
+
+#[test]
+fn wire_round_trips_ragged_and_empty_and_max() {
+    let server = start_server();
+    let mut client = NetClient::connect(server.addr()).unwrap();
+    client.ping().unwrap();
+    // Ragged k ∈ {1, 2, 3}, including empty lists.
+    for lists in [
+        vec![vec![5u32, 9, 9]],
+        vec![vec![], vec![1, 2, 3]],
+        vec![vec![1, 4, 7], vec![2, 5], vec![3]],
+        vec![vec![], vec![], vec![]],
+    ] {
+        let mut want: Vec<u32> = lists.concat();
+        want.sort_unstable();
+        let resp = client.merge(&lists).unwrap();
+        assert_eq!(resp.merged, want, "{lists:?}");
+    }
+    // A max-length list (k = 1 routes to the software fallback).
+    let big: Vec<u32> = (0..MAX_LIST_LEN as u32).collect();
+    let resp = client.merge(std::slice::from_ref(&big)).unwrap();
+    assert_eq!(resp.merged, big);
+    assert_eq!(resp.served_by, "software");
+    // u32::MAX keys: protocol-legal, service-rejected — the reply is a
+    // typed REJECTED error, not a disconnect, and the connection still
+    // serves afterwards.
+    let err = client.merge(&[vec![1, u32::MAX], vec![2]]).unwrap_err().to_string();
+    assert!(err.contains("REJECTED"), "{err}");
+    let resp = client.merge(&[vec![1, u32::MAX - 1], vec![2]]).unwrap();
+    assert_eq!(resp.merged, vec![1, 2, u32::MAX - 1]);
+    server.shutdown();
+}
+
+#[test]
+fn oversized_request_shapes_rejected_client_side() {
+    let server = start_server();
+    let mut client = NetClient::connect(server.addr()).unwrap();
+    assert!(client.submit(&[]).is_err());
+    assert!(client.submit(&vec![vec![1u32]; MAX_K + 1]).is_err());
+    assert!(client.submit(&[vec![0u32; MAX_LIST_LEN + 1]]).is_err());
+    // Per-list-legal but over the total payload cap (8 × 4 MiB keys).
+    assert!(client.submit(&vec![vec![0u32; MAX_LIST_LEN]; 8]).is_err());
+    // The connection is untouched by local validation failures.
+    client.ping().unwrap();
+    server.shutdown();
+}
+
+/// Read the first reply frame, if any arrives within the deadline. A
+/// server frame that fails to decode is itself a bug (the server
+/// never sends garbage) and panics; timeout, EOF and resets return
+/// `None`.
+fn read_first_reply(stream: &mut TcpStream) -> Option<Frame> {
+    stream.set_read_timeout(Some(Duration::from_millis(150))).unwrap();
+    let deadline = std::time::Instant::now() + Duration::from_millis(450);
+    let mut rd = FrameReader::new();
+    loop {
+        match rd.read_frame(stream) {
+            Ok(ReadFrame::Frame(f)) => return Some(f),
+            Ok(ReadFrame::Pending) => {
+                if std::time::Instant::now() >= deadline {
+                    return None; // trickle with no complete frame
+                }
+            }
+            Ok(ReadFrame::Eof) => return None,
+            Ok(other) => panic!("server sent undecodable bytes: {other:?}"),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // Keep waiting until the deadline: a loaded CI runner
+                // may take more than one read-timeout tick to schedule
+                // the server's reply.
+                if std::time::Instant::now() >= deadline {
+                    return None;
+                }
+            }
+            Err(_) => return None, // reset mid-frame: treated as close
+        }
+    }
+}
+
+/// A valid request frame as raw bytes.
+fn valid_request_bytes(rng: &mut Rng) -> Vec<u8> {
+    let k = rng.range(1, 4);
+    let lists: Vec<Vec<u32>> = (0..k).map(|_| rng.sorted_list_ragged(0, 40, 1 << 20)).collect();
+    let mut out = Vec::new();
+    encode_merge_request(MODE_MERGE, &lists, &mut out);
+    out
+}
+
+#[test]
+fn malformed_frame_fuzzer_never_panics_the_server() {
+    let server = start_server();
+    let addr = server.addr();
+    let mut rng = Rng::new(0xF422); // deterministic: failures reproduce
+    for case in 0..120 {
+        let mut bytes = valid_request_bytes(&mut rng);
+        // Mutation categories from the issue list: truncated frames,
+        // oversized length prefixes, wrong version, unknown type,
+        // shape-limit violations, mid-frame disconnects, random flips.
+        let expect_error_reply = match case % 8 {
+            0 => {
+                // Truncate mid-frame and disconnect.
+                let cut = rng.range(1, bytes.len());
+                bytes.truncate(cut);
+                false
+            }
+            1 => {
+                // Oversized length prefix: unrecoverable corruption.
+                let len = (MAX_FRAME_BYTES as u32) + 1 + rng.below(1 << 20) as u32;
+                bytes[..4].copy_from_slice(&len.to_le_bytes());
+                true
+            }
+            2 => {
+                bytes[4] = PROTOCOL_VERSION.wrapping_add(1 + rng.below(200) as u8);
+                true
+            }
+            3 => {
+                bytes[5] = 100 + rng.below(100) as u8; // unknown frame type
+                true
+            }
+            4 => {
+                // k = 0 or k > MAX_K.
+                let k: u16 = if rng.below(2) == 0 { 0 } else { (MAX_K + 1) as u16 };
+                bytes[7..9].copy_from_slice(&k.to_le_bytes());
+                true
+            }
+            5 => {
+                // First list length beyond MAX_LIST_LEN.
+                let n = (MAX_LIST_LEN as u32) + 1 + rng.below(1000) as u32;
+                bytes[9..13].copy_from_slice(&n.to_le_bytes());
+                true
+            }
+            6 => {
+                // Shrink the length prefix under the real body: the
+                // remainder desyncs into garbage "frames".
+                let len = u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]);
+                let len = len.saturating_sub(1 + rng.below(8) as u32).max(2);
+                bytes[..4].copy_from_slice(&len.to_le_bytes());
+                false // replies depend on how the tail re-parses
+            }
+            _ => {
+                // Random single-byte flip anywhere (may stay valid).
+                let i = rng.range(0, bytes.len());
+                bytes[i] ^= 1 << rng.below(8);
+                false
+            }
+        };
+        let mut stream = TcpStream::connect(addr).expect("connect");
+        stream.write_all(&bytes).expect("write mutated frame");
+        let reply = read_first_reply(&mut stream);
+        // Whatever came back decodes, and is only ever a response or
+        // an error — the server never relays garbage.
+        if let Some(f) = &reply {
+            assert!(
+                matches!(f, Frame::MergeResponse { .. } | Frame::Error { .. }),
+                "case {case}: unexpected reply {f:?}"
+            );
+        }
+        if expect_error_reply {
+            assert!(
+                matches!(reply, Some(Frame::Error { .. })),
+                "case {case}: expected an Error reply, got {reply:?}"
+            );
+        }
+        drop(stream);
+        // The server must still be alive and correct: a fresh, valid
+        // round trip after every mutation.
+        if case % 10 == 9 {
+            let mut probe = NetClient::connect(addr).expect("server died");
+            let resp = probe.merge(&[vec![1, 3], vec![2, 4]]).expect("server unhealthy");
+            assert_eq!(resp.merged, vec![1, 2, 3, 4]);
+        }
+    }
+    // Final health check + the decode-error counter actually moved.
+    let mut probe = NetClient::connect(addr).unwrap();
+    probe.ping().unwrap();
+    assert_eq!(probe.merge(&[vec![9], vec![1]]).unwrap().merged, vec![1, 9]);
+    let snap = server.service().metrics().snapshot();
+    assert!(snap.net_decode_errors > 0, "fuzzer produced no decode errors? {snap:?}");
+    server.shutdown();
+}
+
+#[test]
+fn mid_frame_disconnect_storm_leaves_server_healthy() {
+    let server = start_server();
+    let addr = server.addr();
+    let mut rng = Rng::new(0xD15C);
+    for _ in 0..20 {
+        let bytes = valid_request_bytes(&mut rng);
+        let cut = rng.range(1, bytes.len());
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(&bytes[..cut]).unwrap();
+        drop(stream); // vanish mid-frame
+    }
+    let mut probe = NetClient::connect(addr).unwrap();
+    assert_eq!(probe.merge(&[vec![2, 4], vec![1, 3]]).unwrap().merged, vec![1, 2, 3, 4]);
+    // Partial frames never count as received, so the account still
+    // balances: every counted frame got exactly one reply.
+    drop(probe);
+    let snap = server.service().metrics().snapshot();
+    assert_eq!(snap.net_frames_in, snap.net_responses + snap.net_errors, "{snap:?}");
+    server.shutdown();
+}

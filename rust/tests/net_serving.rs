@@ -1,0 +1,209 @@
+//! Concurrency differential for the networked serving path: N client
+//! threads × M pipelined requests against a live [`NetServer`] on an
+//! ephemeral port, every response byte-exact against a scalar
+//! `sort_unstable` oracle, plus [`Snapshot`] accounting under load
+//! (`net_frames_in == net_responses + net_errors`) and drain-on-
+//! shutdown semantics.
+
+use loms::coordinator::{MergeService, ServiceConfig, SoftwareBackend};
+use loms::net::{NetClient, NetServer, NetServerConfig};
+use loms::util::Rng;
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+fn start_server(workers: usize) -> NetServer {
+    let svc = MergeService::start(|| Ok(SoftwareBackend::default_set()), ServiceConfig::default())
+        .expect("service");
+    NetServer::start(
+        "127.0.0.1:0",
+        svc,
+        NetServerConfig { workers, ..NetServerConfig::default() },
+    )
+    .expect("server")
+}
+
+/// A mixed workload shape: artifact-routed 2-way/3-way, ragged sizes,
+/// and software-fallback shapes (lengths beyond every artifact cap).
+fn mixed_lists(rng: &mut Rng, i: usize) -> Vec<Vec<u32>> {
+    match i % 5 {
+        0 | 1 => {
+            let la = rng.range(1, 33);
+            let lb = rng.range(1, 33);
+            vec![rng.sorted_list(la, 1 << 20), rng.sorted_list(lb, 1 << 20)]
+        }
+        2 => vec![
+            rng.sorted_list(7, 1 << 20),
+            rng.sorted_list(7, 1 << 20),
+            rng.sorted_list(7, 1 << 20),
+        ],
+        3 => vec![rng.sorted_list(300, 1 << 20), rng.sorted_list(300, 1 << 20)],
+        _ => (0..8).map(|_| rng.sorted_list_ragged(0, 20, 1 << 20)).collect(),
+    }
+}
+
+#[test]
+fn concurrent_pipelined_clients_match_scalar_oracle() {
+    const CLIENTS: usize = 6;
+    const PER_CLIENT: usize = 64;
+    const WINDOW: usize = 8;
+    let server = start_server(CLIENTS);
+    let addr = server.addr();
+    std::thread::scope(|s| {
+        for c in 0..CLIENTS {
+            s.spawn(move || {
+                let mut client = NetClient::connect(addr).expect("connect");
+                let mut rng = Rng::new(0x5E21 + c as u64);
+                let mut pending: VecDeque<Vec<u32>> = VecDeque::new();
+                for i in 0..PER_CLIENT {
+                    let lists = mixed_lists(&mut rng, i);
+                    let mut want: Vec<u32> = lists.concat();
+                    want.sort_unstable();
+                    client.submit(&lists).expect("submit");
+                    pending.push_back(want);
+                    if pending.len() >= WINDOW {
+                        let resp = client.recv().expect("recv");
+                        assert_eq!(resp.merged, pending.pop_front().unwrap(), "client {c}");
+                    }
+                }
+                while let Some(want) = pending.pop_front() {
+                    assert_eq!(client.recv().expect("drain").merged, want, "client {c}");
+                }
+            });
+        }
+    });
+    // Every client received every response before its thread exited,
+    // so the counters are settled: one reply per frame, no errors.
+    let snap = server.service().metrics().snapshot();
+    let total = (CLIENTS * PER_CLIENT) as u64;
+    assert_eq!(snap.net_connections, CLIENTS as u64, "{snap:?}");
+    assert_eq!(snap.net_frames_in, total, "{snap:?}");
+    assert_eq!(snap.net_responses, total, "{snap:?}");
+    assert_eq!(snap.net_errors, 0, "{snap:?}");
+    assert_eq!(snap.net_decode_errors, 0, "{snap:?}");
+    assert_eq!(snap.net_frames_in, snap.net_responses + snap.net_errors);
+    // The service behind the wire actually served them all.
+    assert_eq!(snap.responses, total, "{snap:?}");
+    server.shutdown();
+}
+
+#[test]
+fn rejected_and_served_mix_accounts_exactly() {
+    let server = start_server(2);
+    let mut client = NetClient::connect(server.addr()).unwrap();
+    let mut rng = Rng::new(0xACC7);
+    let (mut good, mut bad) = (0u64, 0u64);
+    for i in 0..60usize {
+        if i % 3 == 2 {
+            // Admission-rejected payloads: unsorted, or carrying the
+            // u32::MAX sentinel. Wire-valid, so they count as frames
+            // and come back as typed error replies.
+            let lists = if i % 2 == 0 {
+                vec![vec![5, 1], vec![2, 3]]
+            } else {
+                vec![vec![1, u32::MAX], vec![2]]
+            };
+            let err = client.merge(&lists).unwrap_err().to_string();
+            assert!(err.contains("REJECTED"), "{err}");
+            bad += 1;
+        } else {
+            let lists = mixed_lists(&mut rng, i);
+            let mut want: Vec<u32> = lists.concat();
+            want.sort_unstable();
+            assert_eq!(client.merge(&lists).unwrap().merged, want);
+            good += 1;
+        }
+    }
+    // A ping rides the same accounting (Pong counts as a response).
+    client.ping().unwrap();
+    let snap = server.service().metrics().snapshot();
+    assert_eq!(snap.net_frames_in, good + bad + 1, "{snap:?}");
+    assert_eq!(snap.net_responses, good + 1, "{snap:?}");
+    assert_eq!(snap.net_errors, bad, "{snap:?}");
+    assert_eq!(snap.net_decode_errors, 0, "{snap:?}");
+    assert_eq!(snap.rejected, bad, "service-level rejections match {snap:?}");
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_drains_written_responses() {
+    const N: usize = 16;
+    let server = start_server(2);
+    let mut client = NetClient::connect(server.addr()).unwrap();
+    let mut rng = Rng::new(0xD2A1);
+    let mut wants = Vec::new();
+    for _ in 0..N {
+        let lists = vec![rng.sorted_list(16, 1 << 20), rng.sorted_list(16, 1 << 20)];
+        let mut want: Vec<u32> = lists.concat();
+        want.sort_unstable();
+        client.submit(&lists).unwrap();
+        wants.push(want);
+    }
+    // Wait until the server has *written* every reply (the client has
+    // read none yet — they sit in socket buffers), then shut down.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while server.service().metrics().snapshot().net_responses < N as u64 {
+        assert!(Instant::now() < deadline, "server never wrote the replies");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    server.shutdown();
+    // Graceful shutdown means those responses survive the close: all N
+    // arrive, in order, byte-exact.
+    for want in wants {
+        assert_eq!(client.recv().expect("drained response").merged, want);
+    }
+    // After the drain the connection really is closed (ping fails on
+    // write or on the EOF reply — not on in-flight accounting).
+    assert!(client.ping().is_err(), "connection should be closed after the drain");
+}
+
+#[test]
+fn racy_shutdown_never_panics_or_deadlocks() {
+    // Shut the server down while clients are mid-burst: responses may
+    // be lost to the close, but nothing panics, every client either
+    // gets a valid in-order response or a clean failure, and no thread
+    // deadlocks (the test completing is the assertion).
+    let server = start_server(4);
+    let addr = server.addr();
+    let stop = std::sync::atomic::AtomicBool::new(false);
+    std::thread::scope(|s| {
+        for c in 0..4u64 {
+            let stop = &stop;
+            s.spawn(move || {
+                let Ok(mut client) = NetClient::connect(addr) else { return };
+                let mut rng = Rng::new(0x0DD + c);
+                let mut pending: VecDeque<Vec<u32>> = VecDeque::new();
+                for _ in 0..200 {
+                    if stop.load(std::sync::atomic::Ordering::Relaxed) {
+                        break;
+                    }
+                    let lists = vec![rng.sorted_list(8, 1 << 20), rng.sorted_list(8, 1 << 20)];
+                    let mut want: Vec<u32> = lists.concat();
+                    want.sort_unstable();
+                    if client.submit(&lists).is_err() {
+                        return; // server gone mid-write: fine
+                    }
+                    pending.push_back(want);
+                    if pending.len() >= 4 {
+                        match client.recv() {
+                            Ok(resp) => {
+                                assert_eq!(resp.merged, pending.pop_front().unwrap())
+                            }
+                            Err(_) => return, // clean close mid-drain: fine
+                        }
+                    }
+                }
+                while let Some(want) = pending.pop_front() {
+                    match client.recv() {
+                        Ok(resp) => assert_eq!(resp.merged, want),
+                        Err(_) => return,
+                    }
+                }
+            });
+        }
+        s.spawn(|| {
+            std::thread::sleep(Duration::from_millis(30));
+            server.shutdown();
+            stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        });
+    });
+}

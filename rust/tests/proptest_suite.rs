@@ -2,9 +2,11 @@
 //! offline build has no proptest crate). Each property runs hundreds of
 //! randomized cases with deterministic seeds — failures print the seed.
 
+use loms::coordinator::planner::kway_merge;
 use loms::coordinator::{MergeService, Route, Router, ServiceConfig, SoftwareBackend};
 use loms::sortnet::exec::{merge, ExecMode};
 use loms::sortnet::{batcher, loms as lm, s2ms};
+use loms::stream::{boxed, BlockKernel, BlockMerger2, MergeTree, SliceStream, SortedStream};
 use loms::util::Rng;
 
 /// Property: every LOMS 2-way configuration merges arbitrary sorted
@@ -157,6 +159,101 @@ fn prop_router_invariants() {
                 }
             }
         }
+    }
+}
+
+/// A sorted run in one of three value regimes: duplicate-heavy small
+/// values, the wide domain, or keys crowded against `u32::MAX` (the
+/// stream engine's count-tracked fill must keep genuine `u32::MAX`
+/// keys exact — unlike the serving path, the full domain is legal).
+fn stream_run(rng: &mut Rng, len: usize, regime: usize) -> Vec<u32> {
+    let mut v: Vec<u32> = match regime % 3 {
+        0 => (0..len).map(|_| rng.below(16) as u32).collect(),
+        1 => (0..len).map(|_| rng.next_u32()).collect(),
+        _ => (0..len).map(|_| u32::MAX - rng.below(5) as u32).collect(),
+    };
+    v.sort_unstable();
+    v
+}
+
+/// Property: a [`MergeTree`] over k random streams, drained with
+/// random chunk sizes, equals the scalar binary-heap merge — across
+/// ragged lengths, duplicates, empty runs and `u32::MAX`-adjacent
+/// keys, for every block size R. (The stream subsystem previously had
+/// example-based tests only; this is its randomized differential.)
+#[test]
+fn prop_merge_tree_matches_heap_merge() {
+    let mut rng = Rng::new(0x5742EA);
+    for case in 0..120 {
+        let k = rng.range(2, 10);
+        let r = [2usize, 3, 8, 32][rng.range(0, 4)];
+        let runs: Vec<Vec<u32>> = (0..k)
+            .map(|_| {
+                let len = rng.range(0, 250);
+                stream_run(&mut rng, len, case + k)
+            })
+            .collect();
+        let streams: Vec<Box<dyn SortedStream + '_>> =
+            runs.iter().map(|run| boxed(SliceStream::new(run))).collect();
+        let mut tree = MergeTree::new(streams, r).unwrap_or_else(|e| panic!("case {case}: {e}"));
+        let mut got = Vec::new();
+        // Random pull pattern: chunk sizes from 1 to well over R.
+        loop {
+            let chunk = rng.range(1, 4 * r + 7);
+            if tree.next_chunk(chunk, &mut got).unwrap() == 0 {
+                break;
+            }
+            assert!(
+                tree.resident_keys() <= 8 * k * r,
+                "case {case}: working set {} exceeds O(k·R)",
+                tree.resident_keys()
+            );
+        }
+        let want = kway_merge(runs.clone());
+        assert_eq!(got, want, "case {case} k={k} r={r}");
+    }
+}
+
+/// Property: the raw [`BlockMerger2`] refill loop (stage a block from
+/// the min-head input, emit `min(m, h + cnt)`, retain the high cone)
+/// driven through the real R+R kernel equals the heap merge, and the
+/// retained tail never exceeds R. This pins the emit-safety arithmetic
+/// itself, below the tree scheduler.
+#[test]
+fn prop_block_merger_refill_loop_matches_heap_merge() {
+    let mut rng = Rng::new(0xB10C);
+    for case in 0..60 {
+        let r = [1usize, 2, 5, 8][rng.range(0, 4)];
+        let mut kern = BlockKernel::new(r).unwrap();
+        let la = rng.range(0, 160);
+        let a = stream_run(&mut rng, la, case);
+        let lb = rng.range(0, 160);
+        let b = stream_run(&mut rng, lb, case + 1);
+        let mut node = BlockMerger2::new();
+        let (mut pa, mut pb) = (0usize, 0usize);
+        let mut got = Vec::new();
+        loop {
+            let (ha, hb) = (a.get(pa).copied(), b.get(pb).copied());
+            let (src, pos, other) = match (ha, hb) {
+                (None, None) => break,
+                (Some(x), Some(y)) if x <= y => (&a, &mut pa, hb),
+                (Some(_), Some(_)) => (&b, &mut pb, ha),
+                (Some(_), None) => (&a, &mut pa, None),
+                (None, Some(_)) => (&b, &mut pb, None),
+            };
+            let m = r.min(src.len() - *pos);
+            node.stage_buf().extend_from_slice(&src[*pos..*pos + m]);
+            *pos += m;
+            let emit = node.emit_count(other);
+            let mut merged = vec![0u32; node.width()];
+            let rows: Vec<&[Vec<u32>]> = vec![node.lists()];
+            kern.merge_rows(&rows, &mut [&mut merged[..]]);
+            node.apply(&merged, emit, &mut got);
+            assert!(node.high().len() <= r, "case {case}: retained tail exceeds R={r}");
+        }
+        node.flush(&mut got);
+        let want = kway_merge(vec![a.clone(), b.clone()]);
+        assert_eq!(got, want, "case {case} r={r} la={} lb={}", a.len(), b.len());
     }
 }
 

@@ -133,7 +133,8 @@ fn merge_phase_is_bounded_memory() {
 #[test]
 fn file_runs_merge_like_memory_runs() {
     let mut rng = Rng::new(0xF11E);
-    let runs: Vec<Vec<u32>> = (0..5).map(|_| rng.sorted_list(rng.range(0, 500), 1 << 30)).collect();
+    let runs: Vec<Vec<u32>> =
+        (0..5).map(|_| rng.sorted_list_ragged(0, 500, 1 << 30)).collect();
     let path = std::env::temp_dir()
         .join(format!("loms_stream_diff_runs_{}.u32", std::process::id()));
     let mut f = std::fs::File::create(&path).unwrap();
