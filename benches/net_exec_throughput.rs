@@ -19,7 +19,12 @@ use loms::util::Rng;
 
 fn main() {
     let mut rng = Rng::new(9);
-    for outs in [16usize, 64, 256] {
+    // Smoke mode (`--smoke` / `BENCH_SMOKE=1`): fewer device sizes and
+    // only the serving batch shape, with `timing::bench`'s reduced
+    // budgets — every variant still executes once.
+    let smoke = loms::bench::smoke_mode();
+    let out_sizes: &[usize] = if smoke { &[16, 64] } else { &[16, 64, 256] };
+    for &outs in out_sizes {
         let m = outs / 2;
         let devices = vec![
             (format!("batcher-oem {outs}-out"), batcher::odd_even_merge(m)),
@@ -56,7 +61,8 @@ fn main() {
     // shape; the 4096-row shape shows where multi-core sharding pays
     // (thread spawn amortises only past ~tens of µs of work, which is
     // why `lanes::auto_threads` keeps small batches inline).
-    for (m, batch) in [(32usize, 256usize), (32, 4096)] {
+    let shapes: &[(usize, usize)] = if smoke { &[(32, 256)] } else { &[(32, 256), (32, 4096)] };
+    for &(m, batch) in shapes {
         let d = lm::loms_2way(m, m, 2);
         let tag = format!("loms2_up{m}_dn{m}_b{batch}");
         let sizes = [m, m];
@@ -155,7 +161,7 @@ fn main() {
     }
 
     // Reference: std two-pointer merge of the same sizes.
-    for outs in [16usize, 64, 256] {
+    for &outs in out_sizes {
         let m = outs / 2;
         let a = rng.sorted_list(m, 1 << 20);
         let b = rng.sorted_list(m, 1 << 20);

@@ -12,12 +12,15 @@
 //! * `net_1conn` / `net_8conn` / `net_32conn` — the framed TCP path at
 //!   increasing connection counts, each connection keeping
 //!   `INFLIGHT` requests pipelined.
+//! * `net_8conn_kv` — the same wire path carrying v1.1 key-value
+//!   frames (one `u64` payload per key, both directions); the delta to
+//!   `net_8conn` is the payload's wire + permute cost.
 //!
-//! Every response (both variants) is verified byte-exact against a
-//! `sort_unstable` oracle — a bench run that returns wrong bytes
-//! panics rather than reporting a throughput. CI compile-checks this
-//! harness via `cargo bench --no-run`; run
-//! `cargo bench --bench net_serving` to refresh the JSON.
+//! Every response (all variants) is verified byte-exact against a sort
+//! oracle — a bench run that returns wrong bytes panics rather than
+//! reporting a throughput. CI runs this harness in smoke mode
+//! (`--smoke` / `BENCH_SMOKE=1`) and uploads the JSON; run
+//! `cargo bench --bench net_serving` for full-size numbers.
 
 use loms::coordinator::{MergeService, ServiceConfig, SoftwareBackend};
 use loms::net::client::{percentile_us, workload_lists};
@@ -74,7 +77,7 @@ fn main() {
     let requests: usize = std::env::var("BENCH_NET_REQUESTS")
         .ok()
         .and_then(|s| s.parse().ok())
-        .unwrap_or(40_000);
+        .unwrap_or(if loms::bench::smoke_mode() { 2_000 } else { 40_000 });
     let svc = MergeService::start(|| Ok(SoftwareBackend::default_set()), ServiceConfig::default())
         .expect("service");
     // Warm the plan caches off the clock.
@@ -91,8 +94,8 @@ fn main() {
     .expect("server");
     let addr = server.addr().to_string();
     for conns in [1usize, 8, 32] {
-        let report =
-            run_load(&addr, conns, INFLIGHT, requests, 0x9E7 + conns as u64).expect("load run");
+        let report = run_load(&addr, conns, INFLIGHT, requests, 0x9E7 + conns as u64, false)
+            .expect("load run");
         assert_eq!(report.errors, 0, "net oracle mismatches at {conns} conns");
         variants.push(Variant {
             name: format!("net_{conns}conn"),
@@ -101,6 +104,15 @@ fn main() {
             p99_latency_us: report.p99_us,
         });
     }
+    // The same wire path carrying v1.1 key-value frames.
+    let report = run_load(&addr, 8, INFLIGHT, requests, 0xA11E, true).expect("KV load run");
+    assert_eq!(report.errors, 0, "KV net oracle mismatches");
+    variants.push(Variant {
+        name: "net_8conn_kv".into(),
+        requests_per_s: report.requests_per_s(),
+        p50_latency_us: report.p50_us,
+        p99_latency_us: report.p99_us,
+    });
     let snap = server.service().metrics().snapshot();
     server.shutdown();
 

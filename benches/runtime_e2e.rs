@@ -51,7 +51,8 @@ fn main() {
         )
     };
     let mut rng = Rng::new(12);
-    let n = 20_000usize;
+    // Smoke mode keeps the same round-trip path at 1/10th the volume.
+    let n = if loms::bench::smoke_mode() { 2_000usize } else { 20_000usize };
     // Pre-generate the workload: the timer measures the service, not rng.
     let workload: Vec<Vec<Vec<u32>>> = (0..n)
         .map(|_| vec![rng.sorted_list(32, 1 << 22), rng.sorted_list(32, 1 << 22)])

@@ -15,12 +15,18 @@
 //!    the tile-direct executor overlapped with dynamic batching on the
 //!    engine thread (depth-1 pipeline), latency percentiles from the
 //!    service's own histogram.
+//! 4. `tile_direct_kv` — [`Backend::execute_direct_kv`]: the same
+//!    requests with one `u64` payload per key, keys through the packed
+//!    rank-then-permute tiles, payloads gathered once per row. The
+//!    delta to `tile_direct` is the cost of carrying payloads.
+//! 5. `kv_pipelined` — the full service round trip in key-value mode
+//!    (`submit_kv`), batched per `(artifact, kv)` queue.
 //!
-//! For the two backend-level variants, each request's latency is its
+//! For the backend-level variants, each request's latency is its
 //! batch's service time, so percentiles are taken over per-batch
-//! durations. CI compile-checks this harness via `cargo bench
-//! --no-run`; run `cargo bench --bench service_pipeline` to refresh the
-//! JSON.
+//! durations. CI runs this harness in smoke mode (`--smoke` /
+//! `BENCH_SMOKE=1`: few batches) and uploads the JSON; run
+//! `cargo bench --bench service_pipeline` for full-size numbers.
 
 use loms::coordinator::{Backend, MergeService, ServiceConfig, SoftwareBackend};
 use loms::runtime::ArtifactMeta;
@@ -31,6 +37,7 @@ const ARTIFACT: &str = "loms2_up32_dn32_b256";
 
 struct Variant {
     name: &'static str,
+    mode: &'static str,
     requests_per_s: f64,
     p50_latency_us: f64,
     p99_latency_us: f64,
@@ -73,7 +80,7 @@ fn main() {
     let batches: usize = std::env::var("BENCH_BATCHES")
         .ok()
         .and_then(|s| s.parse().ok())
-        .unwrap_or(40);
+        .unwrap_or(if loms::bench::smoke_mode() { 6 } else { 40 });
     let mut rng = Rng::new(0xB5EC);
     let mut backend = SoftwareBackend::default_set();
     let meta = backend.artifacts().into_iter().find(|m| &*m.name == ARTIFACT).unwrap();
@@ -120,6 +127,40 @@ fn main() {
     let direct_total = t_direct.elapsed();
     let (direct_p50, direct_p99) = batch_percentiles(durations);
 
+    // Variant 4 (timed here, reported after): tile-direct key-value —
+    // the same requests with one u64 payload per key. Payload columns
+    // are prepared off the clock; the timed region is the engine.
+    let kv_pays: Vec<Vec<Vec<u64>>> = reqs
+        .iter()
+        .map(|batch_reqs| {
+            batch_reqs
+                .iter()
+                .map(|r| (0..r.iter().map(Vec::len).sum::<usize>() as u64).collect())
+                .collect()
+        })
+        .collect();
+    let mut durations = Vec::with_capacity(batches);
+    let t_kv = Instant::now();
+    for (batch_reqs, batch_pays) in reqs.iter().zip(&kv_pays) {
+        let t0 = Instant::now();
+        let rows: Vec<&[Vec<u32>]> = batch_reqs.iter().map(|r| r.as_slice()).collect();
+        let pays: Vec<&[u64]> = batch_pays.iter().map(|p| p.as_slice()).collect();
+        let mut merged: Vec<Vec<u32>> = batch_reqs
+            .iter()
+            .map(|r| vec![0u32; r.iter().map(Vec::len).sum()])
+            .collect();
+        let mut merged_pays: Vec<Vec<u64>> =
+            merged.iter().map(|m| vec![0u64; m.len()]).collect();
+        let mut outs: Vec<&mut [u32]> = merged.iter_mut().map(|v| v.as_mut_slice()).collect();
+        let mut pay_outs: Vec<&mut [u64]> =
+            merged_pays.iter_mut().map(|v| v.as_mut_slice()).collect();
+        backend.execute_direct_kv(ARTIFACT, &rows, &pays, &mut outs, &mut pay_outs).unwrap();
+        std::hint::black_box((&merged, &merged_pays));
+        durations.push(t0.elapsed().as_nanos() as f64 / 1_000.0);
+    }
+    let kv_total = t_kv.elapsed();
+    let (kv_p50, kv_p99) = batch_percentiles(durations);
+
     // Variant 3: the full pipelined service round trip.
     let svc = MergeService::start(|| Ok(SoftwareBackend::default_set()), ServiceConfig::default())
         .unwrap();
@@ -142,9 +183,34 @@ fn main() {
     let snap = svc.metrics().snapshot();
     svc.shutdown();
 
+    // Variant 5: the full service round trip in key-value mode — its
+    // own service instance so the latency histogram holds KV requests
+    // only.
+    let svc_kv =
+        MergeService::start(|| Ok(SoftwareBackend::default_set()), ServiceConfig::default())
+            .unwrap();
+    svc_kv.merge_blocking_kv(vec![vec![1, 2], vec![3, 4]], vec![10, 20, 30, 40]).unwrap();
+    let kv_reqs = workload(&mut rng, &meta, batches);
+    let t_svckv = Instant::now();
+    let mut rxs = Vec::with_capacity(n_requests);
+    for batch_reqs in kv_reqs {
+        for r in batch_reqs {
+            let width: usize = r.iter().map(Vec::len).sum();
+            rxs.push(svc_kv.submit_kv(r, (0..width as u64).collect()));
+        }
+    }
+    for rx in rxs {
+        let resp = rx.recv().expect("service KV response");
+        assert_eq!(resp.payloads.as_ref().map(Vec::len), Some(resp.merged.len()));
+    }
+    let svckv_total = t_svckv.elapsed();
+    let snap_kv = svc_kv.metrics().snapshot();
+    svc_kv.shutdown();
+
     let variants = [
         Variant {
             name: "old_assemble_then_execute",
+            mode: "key_only",
             requests_per_s: n_requests as f64 / old_total.as_secs_f64(),
             p50_latency_us: old_p50,
             p99_latency_us: old_p99,
@@ -152,6 +218,7 @@ fn main() {
         },
         Variant {
             name: "tile_direct",
+            mode: "key_only",
             requests_per_s: n_requests as f64 / direct_total.as_secs_f64(),
             p50_latency_us: direct_p50,
             p99_latency_us: direct_p99,
@@ -159,16 +226,36 @@ fn main() {
         },
         Variant {
             name: "tile_direct_pipelined",
+            mode: "key_only",
             requests_per_s: n_requests as f64 / svc_total.as_secs_f64(),
             p50_latency_us: snap.p50_latency_us,
             p99_latency_us: snap.p99_latency_us,
             copies_per_batch: 2,
         },
+        Variant {
+            name: "tile_direct_kv",
+            mode: "key_value",
+            requests_per_s: n_requests as f64 / kv_total.as_secs_f64(),
+            p50_latency_us: kv_p50,
+            p99_latency_us: kv_p99,
+            // Keys: in + out, as tile_direct. The payload column moves
+            // exactly once per row (permutation gather).
+            copies_per_batch: 3,
+        },
+        Variant {
+            name: "kv_pipelined",
+            mode: "key_value",
+            requests_per_s: n_requests as f64 / svckv_total.as_secs_f64(),
+            p50_latency_us: snap_kv.p50_latency_us,
+            p99_latency_us: snap_kv.p99_latency_us,
+            copies_per_batch: 3,
+        },
     ];
     for v in &variants {
         println!(
-            "{:<28} {:>12.0} req/s   p50 {:>9.1}µs   p99 {:>9.1}µs   {} copies/batch",
-            v.name, v.requests_per_s, v.p50_latency_us, v.p99_latency_us, v.copies_per_batch
+            "{:<28} [{:>9}] {:>12.0} req/s   p50 {:>9.1}µs   p99 {:>9.1}µs   {} copies/batch",
+            v.name, v.mode, v.requests_per_s, v.p50_latency_us, v.p99_latency_us,
+            v.copies_per_batch
         );
     }
     println!(
@@ -180,9 +267,11 @@ fn main() {
         .iter()
         .map(|v| {
             format!(
-                "    {{\"name\": \"{}\", \"requests_per_s\": {:.0}, \"p50_latency_us\": {:.1}, \
-                 \"p99_latency_us\": {:.1}, \"copies_per_batch\": {}}}",
-                v.name, v.requests_per_s, v.p50_latency_us, v.p99_latency_us, v.copies_per_batch
+                "    {{\"name\": \"{}\", \"mode\": \"{}\", \"requests_per_s\": {:.0}, \
+                 \"p50_latency_us\": {:.1}, \"p99_latency_us\": {:.1}, \
+                 \"copies_per_batch\": {}}}",
+                v.name, v.mode, v.requests_per_s, v.p50_latency_us, v.p99_latency_us,
+                v.copies_per_batch
             )
         })
         .collect();

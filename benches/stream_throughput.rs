@@ -1,6 +1,7 @@
 //! Streaming merge engine throughput, emitted as `BENCH_stream.json`.
 //!
-//! Three engines over the same workloads (keys/s, higher is better):
+//! Key-only and key-value engines over the same workloads (keys/s,
+//! higher is better):
 //!
 //! 1. `heap_kway` — [`planner::kway_merge`], the scalar binary heap
 //!    that used to finish every external sort (log₂k branchy compares
@@ -8,14 +9,20 @@
 //! 2. `tile_kway` — [`stream::merge_runs`], the FLiMS-style merge tree
 //!    pumping R+R LOMS kernels: independent tree nodes batch into
 //!    transposed SIMD tiles, so per-key work is branchless CAS chains.
-//! 3. `extsort` — `stream::extsort` end to end (run formation +
-//!    streaming k-way) on unsorted input, the bounded-memory path
-//!    behind `loms sort`.
+//! 3. `tile_kway_kv` — [`stream::merge_runs_kv`], the same tree on the
+//!    rank-then-permute lowering: keys packed with origin ranks run the
+//!    u64 CAS stream, one `u64` payload per key moves exactly once per
+//!    node step through the emitted permutation. The delta to
+//!    `tile_kway` is the price of carrying payloads.
+//! 4. `extsort` / `extsort_kv` — the end-to-end external sorts on
+//!    unsorted input, the bounded-memory paths behind `loms sort`
+//!    (`--payload true` for the KV row).
 //!
 //! The k-way engines run at k ∈ {4, 16, 64} over ≥1M-key workloads by
-//! default (`BENCH_KEYS` overrides). CI compile-checks this harness via
-//! `cargo bench --no-run`; run `cargo bench --bench stream_throughput`
-//! to refresh the JSON.
+//! default (`BENCH_KEYS` overrides; `--smoke` / `BENCH_SMOKE=1` drops
+//! to 2^16 keys for CI). CI runs this harness in smoke mode and
+//! uploads the JSON; run `cargo bench --bench stream_throughput` for
+//! full-size numbers.
 
 use loms::coordinator::planner;
 use loms::stream::{self, ExtSortConfig};
@@ -24,6 +31,7 @@ use std::time::Instant;
 
 struct Variant {
     name: &'static str,
+    mode: &'static str,
     k: usize,
     keys_per_s: f64,
 }
@@ -48,7 +56,7 @@ fn main() {
     let n: usize = std::env::var("BENCH_KEYS")
         .ok()
         .and_then(|s| s.parse().ok())
-        .unwrap_or(1 << 20);
+        .unwrap_or(if loms::bench::smoke_mode() { 1 << 16 } else { 1 << 20 });
     let r = stream::DEFAULT_R;
     let mut rng = Rng::new(0x57B3);
     let mut variants: Vec<Variant> = Vec::new();
@@ -59,39 +67,75 @@ fn main() {
             .map(|i| rng.sorted_list(n / k + (i % 2), u32::MAX - 1))
             .collect();
         let total: usize = runs.iter().map(Vec::len).sum();
+        // The same runs with a payload column per key (tags unique
+        // across the whole workload).
+        let kv_runs: Vec<(Vec<u32>, Vec<u64>)> = runs
+            .iter()
+            .enumerate()
+            .map(|(i, keys)| {
+                let pays = (0..keys.len() as u64).map(|t| ((i as u64) << 32) | t).collect();
+                (keys.clone(), pays)
+            })
+            .collect();
 
         let heap = best_rate(total, || runs.clone(), |input| planner::kway_merge(input).len());
-        variants.push(Variant { name: "heap_kway", k, keys_per_s: heap });
+        variants.push(Variant { name: "heap_kway", mode: "key_only", k, keys_per_s: heap });
 
         let tile = best_rate(total, || (), |()| stream::merge_runs(&runs, r).unwrap().len());
-        variants.push(Variant { name: "tile_kway", k, keys_per_s: tile });
+        variants.push(Variant { name: "tile_kway", mode: "key_only", k, keys_per_s: tile });
+
+        let tile_kv = best_rate(total, || (), |()| {
+            let (keys, pays) = stream::merge_runs_kv(&kv_runs, r).unwrap();
+            assert_eq!(pays.len(), keys.len());
+            keys.len()
+        });
+        variants.push(Variant { name: "tile_kway_kv", mode: "key_value", k, keys_per_s: tile_kv });
 
         println!(
-            "k={k:<3} heap {heap:>12.0} keys/s   tile {tile:>12.0} keys/s   ({:.2}x)",
-            tile / heap
+            "k={k:<3} heap {heap:>12.0} keys/s   tile {tile:>12.0} keys/s ({:.2}x)   \
+             tile-kv {tile_kv:>12.0} keys/s ({:.2}x of tile)",
+            tile / heap,
+            tile_kv / tile
         );
     }
 
-    // End-to-end external sort of unsorted input (in-memory runs).
+    // End-to-end external sorts of unsorted input (in-memory runs).
     let data: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+    let pays: Vec<u64> = (0..n as u64).collect();
     let cfg = ExtSortConfig { r, ..Default::default() };
     let ext = best_rate(n, || (), |()| stream::extsort(&data, &cfg).unwrap().0.len());
     let ext_runs = n.div_ceil(cfg.run_len);
-    variants.push(Variant { name: "extsort", k: ext_runs, keys_per_s: ext });
-    println!("extsort (runs={ext_runs}) {ext:>12.0} keys/s");
+    variants.push(Variant { name: "extsort", mode: "key_only", k: ext_runs, keys_per_s: ext });
+    let ext_kv = best_rate(n, || (), |()| {
+        let (keys, sorted_pays, _) = stream::extsort_kv(&data, &pays, &cfg).unwrap();
+        assert_eq!(sorted_pays.len(), keys.len());
+        keys.len()
+    });
+    variants.push(Variant {
+        name: "extsort_kv",
+        mode: "key_value",
+        k: ext_runs,
+        keys_per_s: ext_kv,
+    });
+    println!(
+        "extsort (runs={ext_runs}) {ext:>12.0} keys/s   extsort-kv {ext_kv:>12.0} keys/s \
+         ({:.2}x of key-only)",
+        ext_kv / ext
+    );
 
     let rows: Vec<String> = variants
         .iter()
         .map(|v| {
             format!(
-                "    {{\"name\": \"{}\", \"k\": {}, \"keys_per_s\": {:.0}}}",
-                v.name, v.k, v.keys_per_s
+                "    {{\"name\": \"{}\", \"mode\": \"{}\", \"k\": {}, \"keys_per_s\": {:.0}}}",
+                v.name, v.mode, v.k, v.keys_per_s
             )
         })
         .collect();
     let json = format!(
         "{{\n  \"bench\": \"stream_throughput\",\n  \"keys\": {n},\n  \"r\": {r},\n  \
-         \"variants\": [\n{}\n  ]\n}}\n",
+         \"simd_tier\": \"{:?}\",\n  \"variants\": [\n{}\n  ]\n}}\n",
+        loms::sortnet::lanes::active_tier(),
         rows.join(",\n")
     );
     std::fs::write("BENCH_stream.json", &json).expect("write BENCH_stream.json");

@@ -6,7 +6,16 @@ use loms::bench::figures;
 
 fn main() {
     let deep = std::env::args().any(|a| a == "--deep");
-    let f = figures::table1_to(if deep { 14 } else { 12 });
+    // --deep > default > --smoke: exhaustive 0-1 validation is 3^k, so
+    // smoke stops at k = 10 (still ~59k patterns at the top).
+    let hi = if deep {
+        14
+    } else if loms::bench::smoke_mode() {
+        10
+    } else {
+        12
+    };
+    let f = figures::table1_to(hi);
     println!("{}", f.to_table());
     let p = f.save_csv("bench_out").expect("csv");
     println!("   csv → {}", p.display());

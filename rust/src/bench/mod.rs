@@ -8,6 +8,17 @@ pub mod timing;
 
 use std::fmt::Write as _;
 
+/// Whether this bench invocation asked for smoke mode (`--smoke` on
+/// the bench binary's argv — e.g. `cargo bench --bench X -- --smoke` —
+/// or `BENCH_SMOKE=1` in the environment). Smoke mode runs the same
+/// code paths over tiny shapes so CI can execute every harness in
+/// seconds; explicit `BENCH_*` size overrides still win where a bench
+/// honours them.
+pub fn smoke_mode() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+        || std::env::var("BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0")
+}
+
 /// One plotted series.
 #[derive(Debug, Clone)]
 pub struct Series {

@@ -26,17 +26,21 @@ impl Measurement {
 /// Time `f` (which should perform one operation) with auto-scaled
 /// iteration counts: warms up, then runs enough iterations to pass
 /// ~200 ms of total measurement, batched to amortise timer overhead.
+/// Under [`super::smoke_mode`] the budgets shrink ~20x (same code
+/// path, noisier numbers) so CI can execute every harness in seconds.
 pub fn bench<F: FnMut()>(name: &str, mut f: F) -> Measurement {
+    let smoke = super::smoke_mode();
+    let (warmup_ms, sample_ns, samples) =
+        if smoke { (5, 500_000.0, 8usize) } else { (50, 5_000_000.0, 40usize) };
     // Warmup + calibration.
     let t0 = Instant::now();
     let mut calib_iters = 0usize;
-    while t0.elapsed().as_millis() < 50 {
+    while t0.elapsed().as_millis() < warmup_ms {
         f();
         calib_iters += 1;
     }
     let per_op = t0.elapsed().as_nanos() as f64 / calib_iters as f64;
-    let batch = ((5_000_000.0 / per_op).ceil() as usize).clamp(1, 100_000);
-    let samples = 40usize;
+    let batch = ((sample_ns / per_op).ceil() as usize).clamp(1, 100_000);
     let mut times: Vec<f64> = Vec::with_capacity(samples);
     for _ in 0..samples {
         let t = Instant::now();

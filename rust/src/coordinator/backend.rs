@@ -48,6 +48,31 @@ pub trait Backend {
         rows: &[&[Vec<u32>]],
         outs: &mut [&mut [u32]],
     ) -> Result<BatchRun>;
+    /// Whether [`Backend::execute_direct_kv`] is implemented. The
+    /// service reads this once at startup and routes key-value jobs to
+    /// its software fallback when the backend is key-only (PJRT
+    /// artifacts compile bare-key HLO today).
+    fn supports_kv(&self) -> bool {
+        false
+    }
+    /// Key-value twin of [`Backend::execute_direct`] — the
+    /// rank-then-permute serving contract. `payloads[r]` is request
+    /// `r`'s payload column, list-major concatenated to exactly the
+    /// row's total key count; `out_keys[r]` / `out_payloads[r]` are the
+    /// equal-width destinations for the merged prefix. Keys run through
+    /// the comparator stream packed with their origin ranks; each
+    /// payload moves **exactly once**, gathered through the emitted
+    /// permutation — payload bytes never enter a compare-exchange.
+    fn execute_direct_kv(
+        &mut self,
+        name: &str,
+        _rows: &[&[Vec<u32>]],
+        _payloads: &[&[u64]],
+        _out_keys: &mut [&mut [u32]],
+        _out_payloads: &mut [&mut [u64]],
+    ) -> Result<BatchRun> {
+        Err(anyhow!("{name}: backend {:?} does not execute key-value batches", self.label()))
+    }
     /// Backend label for metrics.
     fn label(&self) -> &'static str;
 }
@@ -183,6 +208,10 @@ pub struct SoftwareBackend {
     /// Lane-expanded twin of each compiled plan (Fast-mode batch path).
     lane_plans: HashMap<Arc<str>, LanePlan>,
     lane_scratch: LaneScratch<u32>,
+    /// Packed `(key, origin)` tile scratch for the key-value path.
+    kv_scratch: LaneScratch<u64>,
+    /// Reusable flat permutation buffer (split per row per KV batch).
+    perm_buf: Vec<u32>,
 }
 
 impl SoftwareBackend {
@@ -202,6 +231,8 @@ impl SoftwareBackend {
             plans: HashMap::new(),
             lane_plans: HashMap::new(),
             lane_scratch: LaneScratch::new(),
+            kv_scratch: LaneScratch::new(),
+            perm_buf: Vec::new(),
         })
     }
 
@@ -359,6 +390,68 @@ impl Backend for SoftwareBackend {
         Ok(BatchRun { padded_rows: 0 })
     }
 
+    fn supports_kv(&self) -> bool {
+        true
+    }
+
+    fn execute_direct_kv(
+        &mut self,
+        name: &str,
+        rows: &[&[Vec<u32>]],
+        payloads: &[&[u64]],
+        out_keys: &mut [&mut [u32]],
+        out_payloads: &mut [&mut [u64]],
+    ) -> Result<BatchRun> {
+        let batch = self
+            .meta_idx
+            .get(name)
+            .map(|&i| self.metas[i].batch)
+            .ok_or_else(|| anyhow!("no software device {name:?}"))?;
+        anyhow::ensure!(rows.len() == payloads.len(), "{name}: rows vs payload columns");
+        anyhow::ensure!(rows.len() == out_keys.len(), "{name}: rows vs key buffers");
+        anyhow::ensure!(rows.len() == out_payloads.len(), "{name}: rows vs payload buffers");
+        anyhow::ensure!(rows.len() <= batch, "{name}: {} rows exceed batch {batch}", rows.len());
+        for (r, row) in rows.iter().enumerate() {
+            let width: usize = row.iter().map(Vec::len).sum();
+            anyhow::ensure!(
+                payloads[r].len() == width,
+                "{name}: row {r} payload column is {} for {width} keys",
+                payloads[r].len()
+            );
+            anyhow::ensure!(
+                out_keys[r].len() == out_payloads[r].len(),
+                "{name}: row {r} key/payload output widths differ"
+            );
+        }
+        self.ensure_compiled(name)?;
+        let SoftwareBackend { plans, lane_plans, kv_scratch, perm_buf, .. } = self;
+        let plan = &plans[name];
+        let lane = &lane_plans[name];
+        // Split one flat reusable buffer into per-row permutation slices.
+        let total: usize = out_keys.iter().map(|o| o.len()).sum();
+        perm_buf.clear();
+        perm_buf.resize(total, 0);
+        let mut perm_outs: Vec<&mut [u32]> = Vec::with_capacity(rows.len());
+        let mut rest = perm_buf.as_mut_slice();
+        for o in out_keys.iter() {
+            let (head, tail) = rest.split_at_mut(o.len());
+            perm_outs.push(head);
+            rest = tail;
+        }
+        lanes::run_view_batch_perm_auto(lane, plan, rows, kv_scratch, out_keys, &mut perm_outs)
+            .map_err(|e| anyhow!("{name}: {e}"))?;
+        // The single payload move: gather each row's column through its
+        // permutation straight into the response buffer.
+        for (r, perm) in perm_outs.iter().enumerate() {
+            let src = payloads[r];
+            let dst = &mut *out_payloads[r];
+            for (t, &p) in perm.iter().enumerate() {
+                dst[t] = src[p as usize];
+            }
+        }
+        Ok(BatchRun { padded_rows: 0 })
+    }
+
     fn label(&self) -> &'static str {
         "software"
     }
@@ -433,6 +526,72 @@ mod tests {
             assert_eq!(run.padded_rows, 0, "tile-direct pads no rows");
             assert_eq!(merged, reference, "{name} real={real}");
         }
+    }
+
+    #[test]
+    fn execute_direct_kv_carries_payloads_stably() {
+        // Duplicate-heavy keys with origin-tagged payloads: the merged
+        // (key, payload) rows must equal a stable sort of the
+        // list-major concatenation — i.e. every duplicate key keeps the
+        // payload it arrived with, in arrival order.
+        let name = "loms2_up32_dn32_b256";
+        let mut b = SoftwareBackend::default_set();
+        let meta = b.artifacts().into_iter().find(|m| &*m.name == name).unwrap();
+        let mut rng = Rng::new(0xFACE);
+        for real in [1usize, 15, 16, 37] {
+            let reqs: Vec<Vec<Vec<u32>>> = (0..real)
+                .map(|_| {
+                    meta.list_sizes
+                        .iter()
+                        .map(|&cap| {
+                            let len = rng.range(1, cap + 1);
+                            rng.sorted_list(len, 8) // max 8 => heavy duplication
+                        })
+                        .collect()
+                })
+                .collect();
+            // Payload = (row << 16) | arrival index: globally unique.
+            let pay_cols: Vec<Vec<u64>> = reqs
+                .iter()
+                .enumerate()
+                .map(|(r, req)| {
+                    let w: usize = req.iter().map(Vec::len).sum();
+                    (0..w).map(|i| ((r as u64) << 16) | i as u64).collect()
+                })
+                .collect();
+            let rows: Vec<&[Vec<u32>]> = reqs.iter().map(|r| r.as_slice()).collect();
+            let pays: Vec<&[u64]> = pay_cols.iter().map(|p| p.as_slice()).collect();
+            let widths: Vec<usize> = pay_cols.iter().map(Vec::len).collect();
+            let mut keys: Vec<Vec<u32>> = widths.iter().map(|&w| vec![0u32; w]).collect();
+            let mut outp: Vec<Vec<u64>> = widths.iter().map(|&w| vec![0u64; w]).collect();
+            let mut key_outs: Vec<&mut [u32]> =
+                keys.iter_mut().map(|v| v.as_mut_slice()).collect();
+            let mut pay_outs: Vec<&mut [u64]> =
+                outp.iter_mut().map(|v| v.as_mut_slice()).collect();
+            let run = b
+                .execute_direct_kv(name, &rows, &pays, &mut key_outs, &mut pay_outs)
+                .unwrap();
+            assert_eq!(run.padded_rows, 0);
+            for (r, req) in reqs.iter().enumerate() {
+                let mut want: Vec<(u32, u64)> = req
+                    .iter()
+                    .flatten()
+                    .zip(&pay_cols[r])
+                    .map(|(&k, &p)| (k, p))
+                    .collect();
+                want.sort_by_key(|&(k, _)| k); // stable: arrival order kept
+                let got: Vec<(u32, u64)> =
+                    keys[r].iter().zip(&outp[r]).map(|(&k, &p)| (k, p)).collect();
+                assert_eq!(got, want, "row {r} real={real}");
+            }
+        }
+    }
+
+    #[test]
+    fn pjrt_less_backends_reject_kv_by_default() {
+        // The trait default refuses; the software backend opts in.
+        let b = SoftwareBackend::default_set();
+        assert!(b.supports_kv());
     }
 
     #[test]

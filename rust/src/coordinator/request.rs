@@ -3,18 +3,36 @@
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
-/// A single k-way merge request: k sorted ascending u32 lists.
+/// A single k-way merge request: k sorted ascending u32 lists, plus an
+/// optional payload column for key-value merges.
 #[derive(Debug, Clone)]
 pub struct MergeRequest {
     pub id: u64,
     pub lists: Vec<Vec<u32>>,
+    /// Key-value mode: one `u64` payload per key, list-major
+    /// concatenated (`payloads.len()` equals the total key count).
+    /// Payloads ride beside the comparator stream — the backend merges
+    /// keys packed with origin ranks and moves each payload exactly
+    /// once through the emitted permutation.
+    pub payloads: Option<Vec<u64>>,
     /// Submission time (for latency accounting).
     pub submitted: Instant,
 }
 
 impl MergeRequest {
     pub fn new(id: u64, lists: Vec<Vec<u32>>) -> Self {
-        MergeRequest { id, lists, submitted: Instant::now() }
+        MergeRequest { id, lists, payloads: None, submitted: Instant::now() }
+    }
+
+    /// A key-value request: `payloads` is the list-major column beside
+    /// the keys (validated against the key count at admission).
+    pub fn new_kv(id: u64, lists: Vec<Vec<u32>>, payloads: Vec<u64>) -> Self {
+        MergeRequest { id, lists, payloads: Some(payloads), submitted: Instant::now() }
+    }
+
+    /// Whether this request carries a payload column.
+    pub fn is_kv(&self) -> bool {
+        self.payloads.is_some()
     }
 
     /// Shape signature used for routing.
@@ -49,6 +67,16 @@ impl MergeRequest {
                 ));
             }
         }
+        if let Some(p) = &self.payloads {
+            let width: usize = self.lists.iter().map(Vec::len).sum();
+            if p.len() != width {
+                return Err(format!(
+                    "request {}: payload column holds {} values for {width} keys",
+                    self.id,
+                    p.len()
+                ));
+            }
+        }
         Ok(())
     }
 }
@@ -58,6 +86,9 @@ impl MergeRequest {
 pub struct MergeResponse {
     pub id: u64,
     pub merged: Vec<u32>,
+    /// Key-value mode only: the merged payload column, `payloads[t]`
+    /// riding with `merged[t]` (stable for duplicate keys).
+    pub payloads: Option<Vec<u64>>,
     /// End-to-end latency in nanoseconds.
     pub latency_ns: u128,
     /// Which artifact (or "software") served it. Shared with the
@@ -81,6 +112,17 @@ mod tests {
         r.check_sorted().unwrap();
         let bad = MergeRequest::new(2, vec![vec![3, 1]]);
         assert!(bad.check_sorted().is_err());
+    }
+
+    #[test]
+    fn kv_payload_width_checked() {
+        let ok = MergeRequest::new_kv(1, vec![vec![1, 2], vec![3]], vec![10, 20, 30]);
+        assert!(ok.is_kv());
+        ok.check_valid().unwrap();
+        let short = MergeRequest::new_kv(2, vec![vec![1, 2], vec![3]], vec![10]);
+        assert!(short.check_valid().unwrap_err().contains("payload"));
+        // Key-only requests never trip the payload check.
+        assert!(!MergeRequest::new(3, vec![vec![1]]).is_kv());
     }
 
     #[test]

@@ -122,6 +122,12 @@ struct Slot {
 struct ExecBatch {
     name: Arc<str>,
     slots: Vec<Slot>,
+    /// Key-value batch: every slot carries a payload column and the
+    /// executor runs the rank-then-permute path
+    /// ([`Backend::execute_direct_kv`]). Key-only and key-value
+    /// requests for the same artifact batch separately — their
+    /// execution contracts differ.
+    kv: bool,
     /// When the oldest slot entered its queue (queue-wait timing).
     queued_at: Instant,
 }
@@ -133,8 +139,15 @@ struct Engine {
     router: Router,
     cfg: ServiceConfig,
     metrics: Arc<Metrics>,
-    queues: HashMap<usize, Vec<Slot>>,
-    oldest: HashMap<usize, Instant>,
+    /// Whether the backend executes key-value batches (read once from
+    /// the executor at startup). When false, key-value requests routed
+    /// to an artifact are served by the software fallback instead —
+    /// PJRT artifacts compile bare-key HLO today.
+    backend_kv: bool,
+    /// Per-(artifact, kv-mode) slot queues: key-only and key-value
+    /// requests never share a batch.
+    queues: HashMap<(usize, bool), Vec<Slot>>,
+    oldest: HashMap<(usize, bool), Instant>,
     /// Depth-1 pipeline to the executor thread: `send` blocks only when
     /// a batch is already executing *and* another is queued.
     batch_tx: mpsc::SyncSender<ExecBatch>,
@@ -178,17 +191,24 @@ impl Engine {
             drop(tx); // receiver sees a closed channel
             return;
         }
-        match self.router.route(&req.sizes()) {
-            Route::Artifact { idx } => {
-                let q = self.queues.entry(idx).or_default();
+        let kv = req.is_kv();
+        let route = self.router.route(&req.sizes());
+        match route {
+            // Key-value requests only batch onto an artifact when the
+            // backend executes the rank-then-permute contract;
+            // otherwise they take the software fallback like any
+            // unroutable shape.
+            Route::Artifact { idx } if !kv || self.backend_kv => {
+                let key = (idx, kv);
+                let q = self.queues.entry(key).or_default();
                 q.push(Slot { req: *req, tx });
-                self.oldest.entry(idx).or_insert_with(Instant::now);
+                self.oldest.entry(key).or_insert_with(Instant::now);
                 let batch = self.router.artifacts()[idx].batch;
-                if self.queues[&idx].len() >= batch {
-                    self.flush(idx);
+                if self.queues[&key].len() >= batch {
+                    self.flush(key);
                 }
             }
-            Route::Software => {
+            Route::Artifact { .. } | Route::Software => {
                 let Some(fb) = &self.fallback_tx else {
                     self.metrics.on_rejected();
                     drop(tx);
@@ -210,28 +230,29 @@ impl Engine {
 
     fn flush_due(&mut self, all: bool) {
         let now = Instant::now();
-        let due: Vec<usize> = self
+        let due: Vec<(usize, bool)> = self
             .oldest
             .iter()
             .filter(|(_, &t)| all || now >= t + self.cfg.max_wait)
-            .map(|(&i, _)| i)
+            .map(|(&k, _)| k)
             .collect();
-        for idx in due {
-            self.flush(idx);
+        for key in due {
+            self.flush(key);
         }
     }
 
     /// Hand a queue to the executor. No assembly happens here: the
     /// slots move as-is, and the send blocks only when the pipeline is
     /// already two batches deep (backpressure instead of queue growth).
-    fn flush(&mut self, idx: usize) {
-        let Some(slots) = self.queues.remove(&idx) else { return };
-        let queued_at = self.oldest.remove(&idx).unwrap_or_else(Instant::now);
+    fn flush(&mut self, key: (usize, bool)) {
+        let Some(slots) = self.queues.remove(&key) else { return };
+        let queued_at = self.oldest.remove(&key).unwrap_or_else(Instant::now);
         if slots.is_empty() {
             return;
         }
-        let name = self.router.artifacts()[idx].name.clone();
-        if let Err(mpsc::SendError(batch)) = self.batch_tx.send(ExecBatch { name, slots, queued_at })
+        let name = self.router.artifacts()[key.0].name.clone();
+        if let Err(mpsc::SendError(batch)) =
+            self.batch_tx.send(ExecBatch { name, slots, kv: key.1, queued_at })
         {
             // Executor died: every caller sees a closed channel.
             for slot in batch.slots {
@@ -245,7 +266,7 @@ impl Engine {
 /// The executor stage: owns the backend, drains flushed batches, runs
 /// them tile-direct and fans responses out.
 fn exec_loop<B: Backend>(mut backend: B, rx: mpsc::Receiver<ExecBatch>, metrics: Arc<Metrics>) {
-    while let Ok(ExecBatch { name, slots, queued_at }) = rx.recv() {
+    while let Ok(ExecBatch { name, slots, kv, queued_at }) = rx.recv() {
         let t0 = Instant::now();
         let queue_wait = t0.saturating_duration_since(queued_at);
         let real = slots.len();
@@ -257,16 +278,35 @@ fn exec_loop<B: Backend>(mut backend: B, rx: mpsc::Receiver<ExecBatch>, metrics:
             .iter()
             .map(|s| vec![0u32; s.req.lists.iter().map(Vec::len).sum()])
             .collect();
+        // Key-value batches additionally pre-size one payload column
+        // per response; the single payload move happens inside
+        // `execute_direct_kv` (gather through the permutation).
+        let mut merged_pay: Vec<Vec<u64>> = if kv {
+            merged.iter().map(|m| vec![0u64; m.len()]).collect()
+        } else {
+            Vec::new()
+        };
         let (run, t1, t2) = {
             let rows: Vec<&[Vec<u32>]> = slots.iter().map(|s| s.req.lists.as_slice()).collect();
             let mut outs: Vec<&mut [u32]> = merged.iter_mut().map(|v| v.as_mut_slice()).collect();
             let t1 = Instant::now();
-            let run = backend.execute_direct(&name, &rows, &mut outs);
+            let run = if kv {
+                let pays: Vec<&[u64]> = slots
+                    .iter()
+                    .map(|s| s.req.payloads.as_deref().unwrap_or(&[]))
+                    .collect();
+                let mut pay_outs: Vec<&mut [u64]> =
+                    merged_pay.iter_mut().map(|v| v.as_mut_slice()).collect();
+                backend.execute_direct_kv(&name, &rows, &pays, &mut outs, &mut pay_outs)
+            } else {
+                backend.execute_direct(&name, &rows, &mut outs)
+            };
             (run, t1, Instant::now())
         };
         match run {
             Ok(stats) => {
-                respond_batch(&metrics, name, slots, merged, real, stats.padded_rows);
+                let pay = kv.then_some(merged_pay);
+                respond_batch(&metrics, name, slots, merged, pay, real, stats.padded_rows);
             }
             Err(e) => {
                 eprintln!("merge batch {name} failed: {e:#}");
@@ -287,11 +327,12 @@ fn respond_batch(
     name: Arc<str>,
     slots: Vec<Slot>,
     merged: Vec<Vec<u32>>,
+    mut payloads: Option<Vec<Vec<u64>>>,
     real: usize,
     padded_rows: usize,
 ) {
     metrics.on_batch(real, padded_rows);
-    for (slot, out) in slots.into_iter().zip(merged) {
+    for (r, (slot, out)) in slots.into_iter().zip(merged).enumerate() {
         let latency = slot.req.submitted.elapsed();
         // Record before sending: a caller may observe the response and
         // read the snapshot before we run again.
@@ -299,6 +340,7 @@ fn respond_batch(
         let _ = slot.tx.send(MergeResponse {
             id: slot.req.id,
             merged: out,
+            payloads: payloads.as_mut().map(|p| std::mem::take(&mut p[r])),
             latency_ns: latency.as_nanos(),
             served_by: name.clone(),
         });
@@ -306,7 +348,11 @@ fn respond_batch(
 }
 
 /// One software-fallback worker: drains the shared job queue and serves
-/// each request with a concat + `sort_unstable` merge.
+/// each request with a concat + sort merge. Key-only requests use
+/// `sort_unstable`; key-value requests zip the payload column beside the
+/// keys and sort **stably** by key — the same (key, arrival-order)
+/// semantics the rank-then-permute artifact path produces, so a request
+/// gets identical bytes whichever path serves it.
 fn fallback_loop(rx: Arc<Mutex<mpsc::Receiver<FallbackJob>>>, metrics: Arc<Metrics>) {
     let label: Arc<str> = "software".into();
     loop {
@@ -316,13 +362,28 @@ fn fallback_loop(rx: Arc<Mutex<mpsc::Receiver<FallbackJob>>>, metrics: Arc<Metri
             guard.recv()
         };
         let Ok((req, tx)) = job else { return };
-        let mut merged: Vec<u32> = req.lists.concat();
-        merged.sort_unstable();
+        let (merged, payloads) = match &req.payloads {
+            None => {
+                let mut merged: Vec<u32> = req.lists.concat();
+                merged.sort_unstable();
+                (merged, None)
+            }
+            Some(pay) => {
+                let keys: Vec<u32> = req.lists.concat();
+                let mut pairs: Vec<(u32, u64)> =
+                    keys.into_iter().zip(pay.iter().copied()).collect();
+                pairs.sort_by_key(|&(k, _)| k); // stable: ties keep arrival order
+                let merged = pairs.iter().map(|&(k, _)| k).collect();
+                let payloads = pairs.iter().map(|&(_, p)| p).collect();
+                (merged, Some(payloads))
+            }
+        };
         let latency = req.submitted.elapsed();
         metrics.on_response(latency);
         let _ = tx.send(MergeResponse {
             id: req.id,
             merged,
+            payloads,
             latency_ns: latency.as_nanos(),
             served_by: label.clone(),
         });
@@ -348,14 +409,14 @@ impl MergeService {
         // Depth-1 pipeline: the engine assembles/queues batch N+1 while
         // the executor runs batch N; a third flush blocks (backpressure).
         let (batch_tx, batch_rx) = mpsc::sync_channel::<ExecBatch>(1);
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<Vec<ArtifactMeta>>>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(Vec<ArtifactMeta>, bool)>>();
         let exec_metrics = Arc::clone(&metrics);
         let exec = std::thread::Builder::new()
             .name("loms-exec".into())
             .spawn(move || {
                 let backend = match factory() {
                     Ok(b) => {
-                        let _ = ready_tx.send(Ok(b.artifacts()));
+                        let _ = ready_tx.send(Ok((b.artifacts(), b.supports_kv())));
                         b
                     }
                     Err(e) => {
@@ -366,7 +427,7 @@ impl MergeService {
                 exec_loop(backend, batch_rx, exec_metrics);
             })
             .expect("spawn executor");
-        let artifacts = match ready_rx.recv() {
+        let (artifacts, backend_kv) = match ready_rx.recv() {
             Ok(Ok(a)) => a,
             Ok(Err(e)) => {
                 let _ = exec.join();
@@ -409,6 +470,7 @@ impl MergeService {
                     router,
                     cfg,
                     metrics: engine_metrics,
+                    backend_kv,
                     queues: HashMap::new(),
                     oldest: HashMap::new(),
                     batch_tx,
@@ -435,9 +497,34 @@ impl MergeService {
         rx
     }
 
+    /// Submit a key-value merge: `payloads` is the list-major column
+    /// beside the keys (one `u64` per key). The response carries the
+    /// merged keys plus the payload column permuted to match, stable
+    /// for duplicate keys.
+    pub fn submit_kv(
+        &self,
+        lists: Vec<Vec<u32>>,
+        payloads: Vec<u64>,
+    ) -> mpsc::Receiver<MergeResponse> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let _ = self.tx.send(Msg::Job(Box::new(MergeRequest::new_kv(id, lists, payloads)), tx));
+        rx
+    }
+
     /// Submit and wait.
     pub fn merge_blocking(&self, lists: Vec<Vec<u32>>) -> Result<MergeResponse> {
         let rx = self.submit(lists);
+        rx.recv().map_err(|_| anyhow::anyhow!("request rejected or service stopped"))
+    }
+
+    /// Submit a key-value merge and wait.
+    pub fn merge_blocking_kv(
+        &self,
+        lists: Vec<Vec<u32>>,
+        payloads: Vec<u64>,
+    ) -> Result<MergeResponse> {
+        let rx = self.submit_kv(lists, payloads);
         rx.recv().map_err(|_| anyhow::anyhow!("request rejected or service stopped"))
     }
 
@@ -501,6 +588,80 @@ mod tests {
         let mut want = [a, b].concat();
         want.sort_unstable();
         assert_eq!(resp.merged, want);
+    }
+
+    /// Stable key-value oracle: sort the zipped pairs by key.
+    fn kv_oracle(lists: &[Vec<u32>], payloads: &[u64]) -> (Vec<u32>, Vec<u64>) {
+        let keys: Vec<u32> = lists.concat();
+        let mut pairs: Vec<(u32, u64)> = keys.into_iter().zip(payloads.iter().copied()).collect();
+        pairs.sort_by_key(|&(k, _)| k);
+        (pairs.iter().map(|&(k, _)| k).collect(), pairs.iter().map(|&(_, p)| p).collect())
+    }
+
+    #[test]
+    fn kv_request_round_trip_on_artifact_path() {
+        let s = svc();
+        let mut rng = Rng::new(0x1234);
+        // Artifact-shaped (32+32) with heavy key duplication.
+        let lists = vec![rng.sorted_list(32, 50), rng.sorted_list(32, 50)];
+        let payloads: Vec<u64> = (0..64).map(|i| 1000 + i).collect();
+        let resp = s.merge_blocking_kv(lists.clone(), payloads.clone()).unwrap();
+        assert_eq!(&*resp.served_by, "loms2_up32_dn32_b256", "KV batches on the artifact");
+        let (want_k, want_p) = kv_oracle(&lists, &payloads);
+        assert_eq!(resp.merged, want_k);
+        assert_eq!(resp.payloads.as_deref(), Some(want_p.as_slice()));
+    }
+
+    #[test]
+    fn kv_request_falls_back_for_unroutable_shapes() {
+        let s = svc();
+        let lists = vec![(0..500).collect::<Vec<u32>>(), (250..750).collect()];
+        let payloads: Vec<u64> = (0..1000).map(|i| i * 3).collect();
+        let resp = s.merge_blocking_kv(lists.clone(), payloads.clone()).unwrap();
+        assert_eq!(&*resp.served_by, "software");
+        let (want_k, want_p) = kv_oracle(&lists, &payloads);
+        assert_eq!(resp.merged, want_k);
+        assert_eq!(resp.payloads.as_deref(), Some(want_p.as_slice()));
+    }
+
+    #[test]
+    fn kv_payload_width_mismatch_rejected() {
+        let s = svc();
+        let rx = s.submit_kv(vec![vec![1, 2], vec![3]], vec![10]);
+        assert!(rx.recv().is_err());
+        assert_eq!(s.metrics().snapshot().rejected, 1);
+    }
+
+    #[test]
+    fn kv_and_key_only_share_the_service() {
+        // Interleaved key-only and KV submissions against the same
+        // artifact shape: they batch separately but both come back
+        // correct.
+        let s = svc();
+        let mut rng = Rng::new(0xABCD);
+        let mut expect = Vec::new();
+        let mut rxs = Vec::new();
+        for i in 0..60 {
+            let lists = vec![rng.sorted_list(32, 200), rng.sorted_list(32, 200)];
+            if i % 2 == 0 {
+                let payloads: Vec<u64> = (0..64).map(|j| ((i as u64) << 32) | j).collect();
+                expect.push(kv_oracle(&lists, &payloads));
+                rxs.push((true, s.submit_kv(lists, payloads)));
+            } else {
+                let (want_k, _) = kv_oracle(&lists, &[0; 64]);
+                expect.push((want_k, Vec::new()));
+                rxs.push((false, s.submit(lists)));
+            }
+        }
+        for ((kv, rx), (want_k, want_p)) in rxs.into_iter().zip(expect) {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.merged, want_k);
+            if kv {
+                assert_eq!(resp.payloads.as_deref(), Some(want_p.as_slice()));
+            } else {
+                assert!(resp.payloads.is_none());
+            }
+        }
     }
 
     #[test]

@@ -5,17 +5,23 @@
 //!   netgen   --kind K [options] [--out FILE]       export a device as JSON
 //!   goldens  [--dir tests/golden]                  write the cross-check set
 //!   validate --kind K [options]                    exhaustive 0-1 validation
-//!   serve    [--artifacts DIR] [--requests N]      run the merge service demo
+//!   serve    [--artifacts DIR] [--requests N] [--payload true]
 //!            [--listen ADDR [--workers N] [--duration-secs S]]
 //!            with --listen: serve the framed TCP protocol on ADDR
-//!            (e.g. 127.0.0.1:7474) instead of the in-process demo
+//!            (e.g. 127.0.0.1:7474) instead of the in-process demo;
+//!            --payload true drives the demo with key-value requests
 //!   bench-net --addr ADDR [--conns N] [--inflight M] [--requests R]
+//!            [--payload true]
 //!            load-generate against a running `serve --listen`
+//!            (--payload true sends v1.1 key-value requests)
 //!   sort     [--engine stream|ladder] [--n N] [--input F [--output F]]
 //!            [--r R] [--run-len L] [--fanin F] [--spill DIR]
 //!            [--ladder-runs true] [--chunk C] [--artifacts DIR]
+//!            [--payload true]
 //!            external sort: bounded-memory streaming engine (default)
-//!            or the service merge-ladder path
+//!            or the service merge-ladder path; --payload true sorts
+//!            (u32 key, u64 payload) pairs through rank-then-permute
+//!            (--input/--output files hold 12-byte LE records)
 //!   selftest                                       quick end-to-end check
 //!
 //! (Arg parsing is hand-rolled: the offline build vendors no clap.)
@@ -296,10 +302,13 @@ fn run(args: &[String]) -> Result<()> {
             let inflight = get_usize(&o, "inflight", 16)?;
             let requests = get_usize(&o, "requests", 20_000)?;
             let seed = get_usize(&o, "seed", 0xBE7)? as u64;
-            let report = net::run_load(addr, conns, inflight, requests, seed)?;
+            // Valued flag (`--payload true`): see the --ladder-runs note.
+            let kv = o.get("payload").map(String::as_str) == Some("true");
+            let report = net::run_load(addr, conns, inflight, requests, seed, kv)?;
             println!(
-                "{} conns × {} inflight: {} ok / {} errors in {:?} \
+                "mode={} {} conns × {} inflight: {} ok / {} errors in {:?} \
                  ({:.0} req/s, p50 {:.0}µs, p99 {:.0}µs)",
+                if kv { "key-value" } else { "key-only" },
                 report.connections,
                 report.inflight,
                 report.ok,
@@ -318,6 +327,8 @@ fn run(args: &[String]) -> Result<()> {
         }
         "serve" => {
             let n = get_usize(&o, "requests", 2000)?;
+            // Valued flag (`--payload true`): see the --ladder-runs note.
+            let kv = o.get("payload").map(String::as_str) == Some("true");
             let (svc, backend) = start_service(&o)?;
             let mut rng = Rng::new(1);
             let t0 = Instant::now();
@@ -332,18 +343,33 @@ fn run(args: &[String]) -> Result<()> {
                 } else {
                     vec![rng.sorted_list(32, 1 << 20), rng.sorted_list(32, 1 << 20)]
                 };
-                rxs.push(svc.submit(lists));
+                if kv {
+                    let width: usize = lists.iter().map(Vec::len).sum();
+                    let payloads: Vec<u64> =
+                        (0..width as u64).map(|t| ((i as u64) << 16) | t).collect();
+                    rxs.push(svc.submit_kv(lists, payloads));
+                } else {
+                    rxs.push(svc.submit(lists));
+                }
             }
             let mut ok = 0;
             for rx in rxs {
-                if rx.recv_timeout(Duration::from_secs(30)).is_ok() {
-                    ok += 1;
+                match rx.recv_timeout(Duration::from_secs(30)) {
+                    // KV responses must carry a full payload column.
+                    Ok(resp)
+                        if !kv
+                            || resp.payloads.as_ref().map(Vec::len) == Some(resp.merged.len()) =>
+                    {
+                        ok += 1
+                    }
+                    _ => {}
                 }
             }
             let dt = t0.elapsed();
             let snap = svc.metrics().snapshot();
             println!(
-                "backend={backend} served {ok}/{n} in {dt:?} ({:.0} merges/s)",
+                "backend={backend} mode={} served {ok}/{n} in {dt:?} ({:.0} merges/s)",
+                if kv { "key-value" } else { "key-only" },
                 ok as f64 / dt.as_secs_f64()
             );
             println!(
@@ -371,12 +397,15 @@ fn run(args: &[String]) -> Result<()> {
             // consumes the next token as the value, so a bare flag would
             // swallow the following option.
             let ladder_runs = o.get("ladder-runs").map(String::as_str) == Some("true");
+            let kv = o.get("payload").map(String::as_str) == Some("true");
             if engine == "ladder" {
                 // The service merge-ladder path (phases 1–2 through the
                 // batched service, phase 3 on the stream engine). The
                 // stream-engine options don't apply here — reject them
                 // instead of silently ignoring them.
-                for flag in ["input", "output", "r", "run-len", "fanin", "spill", "ladder-runs"] {
+                for flag in
+                    ["input", "output", "r", "run-len", "fanin", "spill", "ladder-runs", "payload"]
+                {
                     anyhow::ensure!(
                         !o.contains_key(flag),
                         "--{flag} only applies to --engine stream"
@@ -409,11 +438,17 @@ fn run(args: &[String]) -> Result<()> {
                 anyhow::ensure!(!ladder_runs, "--ladder-runs does not apply to --input sorts");
                 let output = o.get("output").cloned().unwrap_or_else(|| format!("{input}.sorted"));
                 let t0 = Instant::now();
-                let stats = stream::extsort_file(Path::new(input), Path::new(&output), &cfg)?;
+                let stats = if kv {
+                    // 12-byte LE (u32 key, u64 payload) records in and out.
+                    stream::extsort_kv_file(Path::new(input), Path::new(&output), &cfg)?
+                } else {
+                    stream::extsort_file(Path::new(input), Path::new(&output), &cfg)?
+                };
                 let dt = t0.elapsed();
                 println!(
-                    "sorted {} keys (R={r}) {input} → {output} in {dt:?} ({:.2} Mkeys/s)",
+                    "sorted {} {} (R={r}) {input} → {output} in {dt:?} ({:.2} Mkeys/s)",
                     stats.keys,
+                    if kv { "key-value pairs" } else { "keys" },
                     stats.keys as f64 / dt.as_secs_f64() / 1e6
                 );
                 println!("{stats:?}");
@@ -421,6 +456,18 @@ fn run(args: &[String]) -> Result<()> {
             }
             let n = get_usize(&o, "n", 1_000_000)?;
             let mut rng = Rng::new(2);
+            if kv {
+                anyhow::ensure!(!ladder_runs, "--ladder-runs does not apply to --payload sorts");
+                let keys: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+                let pays: Vec<u64> = (0..n as u64).collect();
+                let t0 = Instant::now();
+                let (sorted, sorted_pays, stats) = stream::extsort_kv(&keys, &pays, &cfg)?;
+                let dt = t0.elapsed();
+                anyhow::ensure!(sorted_pays.len() == sorted.len(), "lost payloads");
+                report_sorted(&sorted, n, &format!("stream key-value (R={r})"), dt)?;
+                println!("{stats:?}");
+                return Ok(());
+            }
             // The pure stream engine handles the full u32 domain; the
             // ladder run-former goes through the service, whose keys
             // must stay below the PAD sentinel.

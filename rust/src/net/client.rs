@@ -10,8 +10,8 @@
 //! allocates only the decoded response vectors.
 
 use super::protocol::{
-    self, code, encode_merge_request, Frame, FrameReader, ReadFrame, MAX_K, MAX_LIST_LEN,
-    MAX_REQUEST_BYTES, MODE_MERGE,
+    self, code, encode_merge_request, encode_merge_request_kv, Frame, FrameReader, ReadFrame,
+    MAX_K, MAX_LIST_LEN, MAX_REQUEST_BYTES, MODE_MERGE,
 };
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::VecDeque;
@@ -23,6 +23,9 @@ use std::time::{Duration, Instant};
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct NetMerge {
     pub merged: Vec<u32>,
+    /// Key-value requests only: the merged payload column,
+    /// `payloads[t]` riding with `merged[t]`.
+    pub payloads: Option<Vec<u64>>,
     /// Which artifact (or `"software"`) served it, per the server.
     pub served_by: String,
 }
@@ -85,13 +88,52 @@ impl NetClient {
         Ok(())
     }
 
+    /// Send one v1.1 key-value merge request without waiting:
+    /// `payloads` is the list-major column, one `u64` per key.
+    pub fn submit_kv(&mut self, lists: &[Vec<u32>], payloads: &[u64]) -> Result<()> {
+        anyhow::ensure!(
+            !lists.is_empty() && lists.len() <= MAX_K,
+            "k = {} outside 1..={MAX_K}",
+            lists.len()
+        );
+        let total: usize = lists.iter().map(Vec::len).sum();
+        anyhow::ensure!(
+            payloads.len() == total,
+            "payload column holds {} values for {total} keys",
+            payloads.len()
+        );
+        for (l, list) in lists.iter().enumerate() {
+            anyhow::ensure!(
+                list.len() <= MAX_LIST_LEN,
+                "list {l} length {} exceeds {MAX_LIST_LEN}",
+                list.len()
+            );
+        }
+        // Same local enforcement of the decoder's payload cap as
+        // `submit` — KV keys cost 12 wire bytes each.
+        let payload = 3 + 4 * lists.len() + 12 * total;
+        anyhow::ensure!(
+            payload <= MAX_REQUEST_BYTES,
+            "request payload {payload} bytes exceeds {MAX_REQUEST_BYTES}"
+        );
+        encode_merge_request_kv(MODE_MERGE, lists, payloads, &mut self.wbuf);
+        self.stream.write_all(&self.wbuf).context("sending KV merge request")?;
+        self.inflight += 1;
+        Ok(())
+    }
+
     /// Receive the next in-order response. An error frame surfaces as
     /// `Err` carrying the server's code and message.
     pub fn recv(&mut self) -> Result<NetMerge> {
         anyhow::ensure!(self.inflight > 0, "recv with nothing in flight");
         self.inflight -= 1;
         match self.read_reply()? {
-            Frame::MergeResponse { served_by, merged } => Ok(NetMerge { merged, served_by }),
+            Frame::MergeResponse { served_by, merged } => {
+                Ok(NetMerge { merged, payloads: None, served_by })
+            }
+            Frame::MergeResponseKV { served_by, merged, payloads } => {
+                Ok(NetMerge { merged, payloads: Some(payloads), served_by })
+            }
             Frame::Error { code, message } => {
                 bail!("server error {}: {message}", code_name(code))
             }
@@ -102,6 +144,12 @@ impl NetClient {
     /// Submit and wait — the one-shot convenience.
     pub fn merge(&mut self, lists: &[Vec<u32>]) -> Result<NetMerge> {
         self.submit(lists)?;
+        self.recv()
+    }
+
+    /// Key-value submit-and-wait.
+    pub fn merge_kv(&mut self, lists: &[Vec<u32>], payloads: &[u64]) -> Result<NetMerge> {
+        self.submit_kv(lists, payloads)?;
         self.recv()
     }
 
@@ -182,34 +230,42 @@ pub fn workload_lists(rng: &mut crate::util::Rng) -> Vec<Vec<u32>> {
     vec![rng.sorted_list(la, 1 << 20), rng.sorted_list(lb, 1 << 20)]
 }
 
+/// One oracle entry: the expected keys, the expected payload column
+/// (key-value mode only), and the submit timestamp.
+type Pending = (Vec<u32>, Option<Vec<u64>>, Instant);
+
 /// Receive one in-order response and score it against its oracle
 /// (shared by the submit-loop window and the tail drain).
 fn drain_one(
     client: &mut NetClient,
-    pending: &mut VecDeque<(Vec<u32>, Instant)>,
+    pending: &mut VecDeque<Pending>,
     ok: &mut usize,
     errors: &mut usize,
     lat_us: &mut Vec<f64>,
 ) {
-    let (want, sent_at) = pending.pop_front().expect("drain with nothing pending");
+    let (want, want_pays, sent_at) = pending.pop_front().expect("drain with nothing pending");
     match client.recv() {
-        Ok(resp) if resp.merged == want => *ok += 1,
+        Ok(resp) if resp.merged == want && resp.payloads == want_pays => *ok += 1,
         Ok(_) | Err(_) => *errors += 1,
     }
     lat_us.push(sent_at.elapsed().as_nanos() as f64 / 1_000.0);
 }
 
 /// Drive `total_requests` requests through `connections` parallel
-/// clients, each keeping up to `inflight` requests pipelined. Every
-/// response is checked byte-exact against a `sort_unstable` oracle
-/// computed at submit time; mismatches and error replies count as
-/// `errors`. Latency is measured per request, submit to receive.
+/// clients, each keeping up to `inflight` requests pipelined. With
+/// `kv`, every request carries a unique-tagged payload column. Every
+/// response is checked byte-exact against a sort oracle computed at
+/// submit time (`sort_unstable` of the keys; a *stable* pair sort for
+/// the payload column — the protocol's duplicate-key contract);
+/// mismatches and error replies count as `errors`. Latency is measured
+/// per request, submit to receive.
 pub fn run_load(
     addr: &str,
     connections: usize,
     inflight: usize,
     total_requests: usize,
     seed: u64,
+    kv: bool,
 ) -> Result<LoadReport> {
     anyhow::ensure!(connections >= 1 && inflight >= 1, "need >=1 connection and inflight");
     let per_conn = total_requests.div_ceil(connections);
@@ -220,15 +276,31 @@ pub fn run_load(
                 s.spawn(move || -> Result<(usize, usize, Vec<f64>)> {
                     let mut client = NetClient::connect(addr)?;
                     let mut rng = crate::util::Rng::new(seed ^ (c as u64).wrapping_mul(0x9E37));
-                    let mut pending: VecDeque<(Vec<u32>, Instant)> = VecDeque::new();
+                    let mut pending: VecDeque<Pending> = VecDeque::new();
                     let (mut ok, mut errors) = (0usize, 0usize);
                     let mut lat_us = Vec::with_capacity(per_conn);
-                    for _ in 0..per_conn {
+                    for r in 0..per_conn {
                         let lists = workload_lists(&mut rng);
-                        let mut want: Vec<u32> = lists.concat();
-                        want.sort_unstable();
-                        client.submit(&lists)?;
-                        pending.push_back((want, Instant::now()));
+                        if kv {
+                            let keys: Vec<u32> = lists.concat();
+                            // Unique tags so the oracle discriminates
+                            // payload routing exactly.
+                            let pays: Vec<u64> = (0..keys.len() as u64)
+                                .map(|i| ((r as u64) << 16) | i)
+                                .collect();
+                            let mut pairs: Vec<(u32, u64)> =
+                                keys.into_iter().zip(pays.iter().copied()).collect();
+                            pairs.sort_by_key(|&(k, _)| k); // stable
+                            let want: Vec<u32> = pairs.iter().map(|&(k, _)| k).collect();
+                            let want_pays: Vec<u64> = pairs.iter().map(|&(_, p)| p).collect();
+                            client.submit_kv(&lists, &pays)?;
+                            pending.push_back((want, Some(want_pays), Instant::now()));
+                        } else {
+                            let mut want: Vec<u32> = lists.concat();
+                            want.sort_unstable();
+                            client.submit(&lists)?;
+                            pending.push_back((want, None, Instant::now()));
+                        }
                         if pending.len() >= inflight {
                             drain_one(
                                 &mut client, &mut pending, &mut ok, &mut errors, &mut lat_us,

@@ -15,7 +15,19 @@
 //!   3 Error          code:u8 msg_len:u16le msg:bytes (UTF-8)
 //!   4 Ping           (empty)
 //!   5 Pong           (empty)
+//!   6 MergeRequestKV  (v1.1) mode:u8 k:u16le len[0..k):u32le
+//!                    keys of list 0 .. keys of list k-1   (each key u32le)
+//!                    payload*Σlen: u64le   (list-major, one per key)
+//!   7 MergeResponseKV (v1.1) served_by_len:u8 served_by:bytes
+//!                    n:u32le key*n:u32le payload*n:u64le
 //! ```
+//!
+//! Frame types 6/7 are the **v1.1** key-value extension. The version
+//! byte stays `1` and every v1 frame is byte-identical, so a v1 client
+//! works unchanged against a v1.1 server; a v1 *server* answers type
+//! 6 with a `MALFORMED` error frame (unknown type) without dropping
+//! the connection — exactly the forward-compatibility the `Malformed`
+//! decode semantics were designed for.
 //!
 //! All integers are little-endian — the same byte order as the extsort
 //! spill format ([`crate::stream::source::FileRunStream`]), so a spill
@@ -81,6 +93,8 @@ const TYPE_MERGE_RESPONSE: u8 = 2;
 const TYPE_ERROR: u8 = 3;
 const TYPE_PING: u8 = 4;
 const TYPE_PONG: u8 = 5;
+const TYPE_MERGE_REQUEST_KV: u8 = 6;
+const TYPE_MERGE_RESPONSE_KV: u8 = 7;
 
 /// Error frame codes.
 pub mod code {
@@ -102,6 +116,11 @@ pub enum Frame {
     Error { code: u8, message: String },
     Ping,
     Pong,
+    /// v1.1 key-value merge request: `payloads` is the list-major
+    /// column, exactly one `u64` per key across all lists.
+    MergeRequestKV { mode: u8, lists: Vec<Vec<u32>>, payloads: Vec<u64> },
+    /// v1.1 key-value response: `payloads[t]` rides with `merged[t]`.
+    MergeResponseKV { served_by: String, merged: Vec<u32>, payloads: Vec<u64> },
 }
 
 /// Outcome of one [`FrameReader::read_frame`] call.
@@ -293,6 +312,74 @@ fn decode_body(body: &[u8]) -> Result<Frame, String> {
             c.done()?;
             Ok(Frame::Pong)
         }
+        TYPE_MERGE_REQUEST_KV => {
+            // Same payload cap as key-only requests — KV keys are 12
+            // bytes each on the wire, so the shape cap shrinks
+            // accordingly rather than the frame growing.
+            if c.b.len() > MAX_REQUEST_BYTES {
+                return Err(format!(
+                    "merge request payload {} exceeds {MAX_REQUEST_BYTES} bytes",
+                    c.b.len()
+                ));
+            }
+            let mode = c.u8("mode")?;
+            let k = c.u16("k")? as usize;
+            if k == 0 || k > MAX_K {
+                return Err(format!("k = {k} outside 1..={MAX_K}"));
+            }
+            let mut lens = Vec::with_capacity(k);
+            for l in 0..k {
+                let n = c.u32("list length")? as usize;
+                if n > MAX_LIST_LEN {
+                    return Err(format!("list {l} length {n} exceeds {MAX_LIST_LEN}"));
+                }
+                lens.push(n);
+            }
+            let mut lists = Vec::with_capacity(k);
+            for (l, &n) in lens.iter().enumerate() {
+                let raw = c.bytes(n * 4, "list keys")?;
+                let list: Vec<u32> = raw
+                    .chunks_exact(4)
+                    .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                    .collect();
+                debug_assert_eq!(list.len(), n, "list {l}");
+                lists.push(list);
+            }
+            // Exactly one payload per key; `done()` below rejects any
+            // shorter or longer column, so width is enforced by the
+            // wire format itself.
+            let total: usize = lens.iter().sum();
+            let raw = c.bytes(total * 8, "payload column")?;
+            let payloads: Vec<u64> = raw
+                .chunks_exact(8)
+                .map(|b| u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+                .collect();
+            c.done()?;
+            Ok(Frame::MergeRequestKV { mode, lists, payloads })
+        }
+        TYPE_MERGE_RESPONSE_KV => {
+            let label_len = c.u8("served_by length")? as usize;
+            let label = c.bytes(label_len, "served_by")?;
+            let served_by = std::str::from_utf8(label)
+                .map_err(|_| "served_by is not UTF-8".to_string())?
+                .to_string();
+            let n = c.u32("pair count")? as usize;
+            if n > MAX_FRAME_BYTES / 12 {
+                return Err(format!("response pair count {n} exceeds the frame cap"));
+            }
+            let raw = c.bytes(n * 4, "response keys")?;
+            let merged: Vec<u32> = raw
+                .chunks_exact(4)
+                .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            let raw = c.bytes(n * 8, "response payloads")?;
+            let payloads: Vec<u64> = raw
+                .chunks_exact(8)
+                .map(|b| u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+                .collect();
+            c.done()?;
+            Ok(Frame::MergeResponseKV { served_by, merged, payloads })
+        }
         other => Err(format!("unknown frame type {other}")),
     }
 }
@@ -396,6 +483,52 @@ pub fn encode_merge_response(served_by: &str, merged: &[u32], out: &mut Vec<u8>)
     finish(out);
 }
 
+/// Encode a v1.1 key-value merge request from borrowed columns —
+/// `payloads` list-major, one `u64` per key (debug-asserted; the
+/// decoder enforces it on the wire).
+pub fn encode_merge_request_kv(mode: u8, lists: &[Vec<u32>], payloads: &[u64], out: &mut Vec<u8>) {
+    debug_assert!(!lists.is_empty() && lists.len() <= MAX_K);
+    debug_assert_eq!(payloads.len(), lists.iter().map(Vec::len).sum::<usize>());
+    begin(out, TYPE_MERGE_REQUEST_KV);
+    out.push(mode);
+    out.extend_from_slice(&(lists.len() as u16).to_le_bytes());
+    for l in lists {
+        debug_assert!(l.len() <= MAX_LIST_LEN);
+        out.extend_from_slice(&(l.len() as u32).to_le_bytes());
+    }
+    for l in lists {
+        for &x in l {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    for &p in payloads {
+        out.extend_from_slice(&p.to_le_bytes());
+    }
+    finish(out);
+}
+
+/// Encode a v1.1 key-value merge response (the server's KV hot path).
+pub fn encode_merge_response_kv(
+    served_by: &str,
+    merged: &[u32],
+    payloads: &[u64],
+    out: &mut Vec<u8>,
+) {
+    debug_assert_eq!(merged.len(), payloads.len());
+    let label = clamp_str(served_by, u8::MAX as usize);
+    begin(out, TYPE_MERGE_RESPONSE_KV);
+    out.push(label.len() as u8);
+    out.extend_from_slice(label.as_bytes());
+    out.extend_from_slice(&(merged.len() as u32).to_le_bytes());
+    for &x in merged {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    for &p in payloads {
+        out.extend_from_slice(&p.to_le_bytes());
+    }
+    finish(out);
+}
+
 /// Encode an error frame (message clamped to [`MAX_ERROR_MSG`]).
 pub fn encode_error(code: u8, message: &str, out: &mut Vec<u8>) {
     let msg = clamp_str(message, MAX_ERROR_MSG);
@@ -415,6 +548,12 @@ pub fn encode_frame(f: &Frame, out: &mut Vec<u8>) {
             encode_merge_response(served_by, merged, out)
         }
         Frame::Error { code, message } => encode_error(*code, message, out),
+        Frame::MergeRequestKV { mode, lists, payloads } => {
+            encode_merge_request_kv(*mode, lists, payloads, out)
+        }
+        Frame::MergeResponseKV { served_by, merged, payloads } => {
+            encode_merge_response_kv(served_by, merged, payloads, out)
+        }
         Frame::Ping => {
             begin(out, TYPE_PING);
             finish(out);
@@ -461,8 +600,73 @@ mod tests {
             Frame::Error { code: code::REJECTED, message: "list 0 is not sorted".into() },
             Frame::Ping,
             Frame::Pong,
+            Frame::MergeRequestKV {
+                mode: MODE_MERGE,
+                lists: vec![vec![1, 2, 3], vec![2, 9]],
+                payloads: vec![10, 20, 30, 40, 50],
+            },
+            Frame::MergeRequestKV {
+                mode: MODE_MERGE,
+                lists: vec![vec![], vec![7]],
+                payloads: vec![u64::MAX],
+            },
+            Frame::MergeResponseKV {
+                served_by: "loms2_up32_dn32_b256".into(),
+                merged: vec![1, 2, 2],
+                payloads: vec![10, 30, 40],
+            },
+            Frame::MergeResponseKV { served_by: String::new(), merged: vec![], payloads: vec![] },
         ] {
             assert_eq!(roundtrip(&f), f);
+        }
+    }
+
+    #[test]
+    fn v1_frames_are_byte_identical_under_v1_1() {
+        // The KV extension must not move a single v1 byte: same
+        // version byte, same type bytes, same layouts.
+        let f = Frame::MergeRequest { mode: MODE_MERGE, lists: vec![vec![3, 5], vec![4]] };
+        let mut bytes = Vec::new();
+        encode_frame(&f, &mut bytes);
+        assert_eq!(
+            bytes,
+            vec![
+                25, 0, 0, 0, // len = 25 (version+type+mode+k+2 lens+3 keys)
+                1, 1, // version 1, type MergeRequest
+                0, // mode
+                2, 0, // k = 2
+                2, 0, 0, 0, 1, 0, 0, 0, // lens
+                3, 0, 0, 0, 5, 0, 0, 0, 4, 0, 0, 0, // keys
+            ]
+        );
+    }
+
+    #[test]
+    fn kv_payload_width_is_enforced_by_the_wire() {
+        // A KV request whose payload column is short or long fails
+        // decode (truncated read or trailing bytes) — width mismatches
+        // cannot reach the service from the wire.
+        let good = Frame::MergeRequestKV {
+            mode: MODE_MERGE,
+            lists: vec![vec![1, 2], vec![3]],
+            payloads: vec![10, 20, 30],
+        };
+        let mut bytes = Vec::new();
+        encode_frame(&good, &mut bytes);
+        let mut short = bytes.clone();
+        short.truncate(bytes.len() - 8); // drop one payload
+        let len = (short.len() - 4) as u32;
+        short[..4].copy_from_slice(&len.to_le_bytes());
+        let mut long = bytes.clone();
+        long.extend_from_slice(&[0u8; 8]); // extra payload
+        let len = (long.len() - 4) as u32;
+        long[..4].copy_from_slice(&len.to_le_bytes());
+        for bad in [short, long] {
+            let mut rd = FrameReader::new();
+            assert!(matches!(
+                read_one(&mut rd, &mut Cursor::new(bad)).unwrap(),
+                ReadFrame::Malformed(_)
+            ));
         }
     }
 

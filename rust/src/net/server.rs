@@ -42,7 +42,8 @@
 //! service down — in-flight batches are never dropped.
 
 use super::protocol::{
-    self, code, encode_error, encode_merge_response, Frame, FrameReader, ReadFrame, MODE_MERGE,
+    self, code, encode_error, encode_merge_response, encode_merge_response_kv, Frame, FrameReader,
+    ReadFrame, MODE_MERGE,
 };
 use crate::coordinator::request::MergeResponse;
 use crate::coordinator::{Metrics, MergeService};
@@ -295,15 +296,25 @@ fn serve_conn(
                             code: code::UNSUPPORTED,
                             message: format!("unsupported request mode {mode}"),
                         },
+                        Frame::MergeRequestKV { mode, .. } if mode != MODE_MERGE => Reply::Err {
+                            code: code::UNSUPPORTED,
+                            message: format!("unsupported request mode {mode}"),
+                        },
                         // The decoded lists go into admission as-is —
                         // no re-copy between socket and service.
                         Frame::MergeRequest { lists, .. } => Reply::Merge(service.submit(lists)),
-                        Frame::MergeResponse { .. } | Frame::Error { .. } | Frame::Pong => {
-                            Reply::Err {
-                                code: code::UNSUPPORTED,
-                                message: "client-only frame type sent to server".into(),
-                            }
+                        // v1.1: the decoded payload column rides into
+                        // admission beside the keys, same single copy.
+                        Frame::MergeRequestKV { lists, payloads, .. } => {
+                            Reply::Merge(service.submit_kv(lists, payloads))
                         }
+                        Frame::MergeResponse { .. }
+                        | Frame::MergeResponseKV { .. }
+                        | Frame::Error { .. }
+                        | Frame::Pong => Reply::Err {
+                            code: code::UNSUPPORTED,
+                            message: "client-only frame type sent to server".into(),
+                        },
                     };
                     let _ = reply_tx.send(reply);
                 }
@@ -336,8 +347,15 @@ fn writer_loop(mut w: TcpStream, rx: mpsc::Receiver<Reply>, metrics: &Metrics) {
             Reply::Merge(resp_rx) => match resp_rx.recv() {
                 Ok(resp) => {
                     metrics.on_net_response();
-                    // The one outbound copy: response keys → frame bytes.
-                    encode_merge_response(&resp.served_by, &resp.merged, &mut buf);
+                    // The one outbound copy: response columns → frame
+                    // bytes. A KV request gets the v1.1 response frame;
+                    // key-only responses stay byte-identical to v1.
+                    match &resp.payloads {
+                        Some(pays) => {
+                            encode_merge_response_kv(&resp.served_by, &resp.merged, pays, &mut buf)
+                        }
+                        None => encode_merge_response(&resp.served_by, &resp.merged, &mut buf),
+                    }
                 }
                 Err(_) => {
                     metrics.on_net_error();

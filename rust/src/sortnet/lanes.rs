@@ -59,15 +59,357 @@
 //! garbage than the scalar two-pointer merge, exactly as the physical
 //! S2MS would; Strict mode, medians and the validators therefore stay
 //! on [`CompiledPlan`].
+//!
+//! **Explicit SIMD dispatch.** The per-chunk min/max kernel is no
+//! longer left to autovectorization: [`LaneElem`] carries explicit
+//! `std::arch` kernels (AVX2 `_mm256_min_epu32`/`_mm256_max_epu32`,
+//! NEON `vminq_u32`/`vmaxq_u32`, and biased-compare 64-bit variants)
+//! behind a [`SimdTier`] chosen once per process — runtime feature
+//! detection, overridable via the `LOMS_SIMD` env var (`scalar`,
+//! `portable`, `avx2`, `neon`) and [`force_tier`] for differential
+//! tests. Every tier is bit-exact with every other; the dispatch tests
+//! prove it across all default artifacts.
+//!
+//! **Key-value rows.** Payloads never enter the tile. The
+//! rank-then-permute path ([`LanePlan::run_view_batch_perm_into`])
+//! packs each key with its list-major origin index into one `u64`
+//! (`key << 32 | origin`), runs the *same* CAS schedule over `u64`
+//! chunks — all elements distinct, so the network computes the stable
+//! (key, origin)-lexicographic merge — and unpacks each output into the
+//! merged key plus the output **permutation**. The caller applies that
+//! permutation to the payload column once per row; payload bytes move
+//! exactly once and no compare-exchange ever touches them.
 
 use super::exec::{ExecMode, PreconditionViolation};
 use super::plan::{append_rows, CompiledPlan, PlanOp, PlanScratch};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
 
 /// Rows per tile. 16 × `u32` = 64 bytes: one AVX-512 register or two
 /// AVX2 registers per chunk — wide enough to keep the min/max stream
 /// vectorized, small enough that a tile of any characterized device
 /// stays in L1.
 pub const LANES: usize = 16;
+
+/// Which compare-exchange kernel executes the CAS schedule. Every tier
+/// produces bit-identical output; they differ only in how the
+/// per-chunk min/max is issued.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum SimdTier {
+    /// Per-element compare-and-swap reference (branchy, never
+    /// vectorized) — the differential baseline.
+    Scalar = 0,
+    /// Branchless select loop over `[T; LANES]` — safe code the
+    /// compiler may autovectorize; the fallback on every host.
+    Portable = 1,
+    /// Explicit 256-bit x86 kernels (`_mm256_min_epu32` /
+    /// `_mm256_max_epu32`; biased `_mm256_cmpgt_epi64` + blend for
+    /// `u64`). Selected only when runtime detection proves AVX2.
+    Avx2 = 2,
+    /// Explicit 128-bit aarch64 kernels (`vminq_u32` / `vmaxq_u32`;
+    /// `vcgtq_u64` + `vbslq_u64` for `u64`).
+    Neon = 3,
+}
+
+impl SimdTier {
+    fn from_u8(raw: u8) -> SimdTier {
+        match raw {
+            0 => SimdTier::Scalar,
+            1 => SimdTier::Portable,
+            2 => SimdTier::Avx2,
+            _ => SimdTier::Neon,
+        }
+    }
+
+    /// Parse the `LOMS_SIMD` spelling.
+    pub fn parse(s: &str) -> Option<SimdTier> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Some(SimdTier::Scalar),
+            "portable" => Some(SimdTier::Portable),
+            "avx2" => Some(SimdTier::Avx2),
+            "neon" => Some(SimdTier::Neon),
+            _ => None,
+        }
+    }
+
+    /// Whether this tier's kernels may run on this host. `Scalar` and
+    /// `Portable` always can; the explicit tiers require their
+    /// architecture (and, for AVX2, runtime CPU feature detection).
+    pub fn available(self) -> bool {
+        match self {
+            SimdTier::Scalar | SimdTier::Portable => true,
+            SimdTier::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    std::arch::is_x86_feature_detected!("avx2")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            SimdTier::Neon => cfg!(target_arch = "aarch64"),
+        }
+    }
+}
+
+/// Best tier this host supports (feature detection runs once).
+fn best_tier() -> SimdTier {
+    if SimdTier::Avx2.available() {
+        SimdTier::Avx2
+    } else if SimdTier::Neon.available() {
+        SimdTier::Neon
+    } else {
+        SimdTier::Portable
+    }
+}
+
+/// Every tier runnable on this host, `Scalar` first — the set the
+/// dispatch differential tests iterate.
+pub fn available_tiers() -> Vec<SimdTier> {
+    let mut tiers = vec![SimdTier::Scalar, SimdTier::Portable];
+    let best = best_tier();
+    if best != SimdTier::Portable {
+        tiers.push(best);
+    }
+    tiers
+}
+
+static DEFAULT_TIER: OnceLock<SimdTier> = OnceLock::new();
+/// `u8::MAX` = no override; otherwise a forced tier ([`force_tier`]).
+static FORCED_TIER: AtomicU8 = AtomicU8::new(u8::MAX);
+
+fn default_tier() -> SimdTier {
+    *DEFAULT_TIER.get_or_init(|| {
+        let best = best_tier();
+        match std::env::var("LOMS_SIMD") {
+            Ok(v) => match SimdTier::parse(&v) {
+                Some(t) if t.available() => t,
+                Some(t) => {
+                    eprintln!("LOMS_SIMD={v}: {t:?} unavailable on this host; using {best:?}");
+                    best
+                }
+                None => {
+                    eprintln!(
+                        "LOMS_SIMD={v}: unknown tier (scalar|portable|avx2|neon); using {best:?}"
+                    );
+                    best
+                }
+            },
+            Err(_) => best,
+        }
+    })
+}
+
+/// The tier the executors dispatch on, resolved once per batch entry:
+/// a [`force_tier`] override if set, else `LOMS_SIMD`, else the best
+/// detected kernel. Invariant relied on by the `unsafe` kernels: this
+/// never returns a tier whose [`SimdTier::available`] is false.
+pub fn active_tier() -> SimdTier {
+    match FORCED_TIER.load(Ordering::Relaxed) {
+        u8::MAX => default_tier(),
+        raw => SimdTier::from_u8(raw),
+    }
+}
+
+/// Force a dispatch tier process-wide (`None` clears the override) —
+/// the hook the dispatch-tier differential tests use to run the same
+/// batch through every kernel. Returns `false` (and changes nothing)
+/// if the tier cannot run on this host, preserving the
+/// [`active_tier`] availability invariant.
+pub fn force_tier(tier: Option<SimdTier>) -> bool {
+    match tier {
+        None => {
+            FORCED_TIER.store(u8::MAX, Ordering::Relaxed);
+            true
+        }
+        Some(t) if t.available() => {
+            FORCED_TIER.store(t as u8, Ordering::Relaxed);
+            true
+        }
+        Some(_) => false,
+    }
+}
+
+/// A tile element the lane executors can run: carries the per-tier
+/// compare-exchange kernels and the scratch pool for its type. `u32`
+/// is the key path; `u64` is the packed (key, origin) rank-then-permute
+/// path.
+pub trait LaneElem: Copy + Ord + Default + Send + Sync + 'static {
+    /// Elementwise compare-exchange of two [`LANES`]-wide chunks under
+    /// `tier`: per lane, `min → x`, `max → y`. Must be bit-exact across
+    /// tiers. Callers guarantee `tier.available()` (the [`active_tier`]
+    /// invariant).
+    fn cas_chunks(tier: SimdTier, x: &mut [Self; LANES], y: &mut [Self; LANES]);
+
+    /// The process-wide pool of reusable [`LaneScratch`]es for this
+    /// element type (see [`LaneScratch::take`]).
+    fn scratch_pool() -> &'static Mutex<Vec<LaneScratch<Self>>>;
+}
+
+/// Per-element reference kernel: branchy compare-and-swap. Never
+/// vectorizes — the tier every other kernel is differenced against.
+#[inline]
+fn cas_chunks_scalar<T: Copy + Ord>(x: &mut [T; LANES], y: &mut [T; LANES]) {
+    for (p, q) in x.iter_mut().zip(y.iter_mut()) {
+        if *q < *p {
+            std::mem::swap(p, q);
+        }
+    }
+}
+
+/// Branchless select loop — safe portable code with a compile-time
+/// trip count (the shape rustc autovectorizes when it can).
+#[inline]
+fn cas_chunks_portable<T: Copy + Ord>(x: &mut [T; LANES], y: &mut [T; LANES]) {
+    for (p, q) in x.iter_mut().zip(y.iter_mut()) {
+        let (a, b) = (*p, *q);
+        let swap = b < a;
+        *p = if swap { b } else { a };
+        *q = if swap { a } else { b };
+    }
+}
+
+/// 16 × u32 min/max as two 256-bit AVX2 vector pairs.
+///
+/// # Safety
+/// The CPU must support AVX2 (callers check via the [`active_tier`]
+/// availability invariant). Loads/stores use the unaligned intrinsics,
+/// so no alignment precondition — though tile chunks are 64-byte
+/// aligned ([`LaneScratch`]), making every access aligned in practice.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn cas_chunks_u32_avx2(x: &mut [u32; LANES], y: &mut [u32; LANES]) {
+    use std::arch::x86_64::*;
+    let px = x.as_mut_ptr().cast::<__m256i>();
+    let py = y.as_mut_ptr().cast::<__m256i>();
+    for i in 0..LANES / 8 {
+        // SAFETY: i ∈ {0, 1}; both arrays hold LANES = 16 u32s, so each
+        // 8-wide load/store stays in bounds.
+        let a = _mm256_loadu_si256(px.add(i));
+        let b = _mm256_loadu_si256(py.add(i));
+        _mm256_storeu_si256(px.add(i), _mm256_min_epu32(a, b));
+        _mm256_storeu_si256(py.add(i), _mm256_max_epu32(a, b));
+    }
+}
+
+/// 16 × u64 min/max as four 256-bit AVX2 vector pairs. AVX2 has no
+/// unsigned 64-bit min/max (those are AVX-512), so both operands are
+/// biased into signed order, compared with `_mm256_cmpgt_epi64`, and
+/// the originals blended by the mask.
+///
+/// # Safety
+/// The CPU must support AVX2 (callers check via the [`active_tier`]
+/// availability invariant); unaligned intrinsics, no alignment
+/// precondition.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn cas_chunks_u64_avx2(x: &mut [u64; LANES], y: &mut [u64; LANES]) {
+    use std::arch::x86_64::*;
+    let px = x.as_mut_ptr().cast::<__m256i>();
+    let py = y.as_mut_ptr().cast::<__m256i>();
+    let bias = _mm256_set1_epi64x(i64::MIN);
+    for i in 0..LANES / 4 {
+        // SAFETY: i ∈ 0..4; both arrays hold LANES = 16 u64s, so each
+        // 4-wide load/store stays in bounds.
+        let a = _mm256_loadu_si256(px.add(i));
+        let b = _mm256_loadu_si256(py.add(i));
+        let gt = _mm256_cmpgt_epi64(_mm256_xor_si256(a, bias), _mm256_xor_si256(b, bias));
+        _mm256_storeu_si256(px.add(i), _mm256_blendv_epi8(a, b, gt));
+        _mm256_storeu_si256(py.add(i), _mm256_blendv_epi8(b, a, gt));
+    }
+}
+
+/// 16 × u32 min/max as four 128-bit NEON vector pairs.
+///
+/// # Safety
+/// aarch64 baseline includes NEON; both arrays hold LANES = 16 u32s, so
+/// each 4-wide load/store stays in bounds.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn cas_chunks_u32_neon(x: &mut [u32; LANES], y: &mut [u32; LANES]) {
+    use std::arch::aarch64::*;
+    let px = x.as_mut_ptr();
+    let py = y.as_mut_ptr();
+    for i in 0..LANES / 4 {
+        let a = vld1q_u32(px.add(4 * i));
+        let b = vld1q_u32(py.add(4 * i));
+        vst1q_u32(px.add(4 * i), vminq_u32(a, b));
+        vst1q_u32(py.add(4 * i), vmaxq_u32(a, b));
+    }
+}
+
+/// 16 × u64 min/max as eight 128-bit NEON vector pairs (`vcgtq_u64`
+/// compare + `vbslq_u64` select — NEON has no 64-bit min/max either).
+///
+/// # Safety
+/// aarch64 baseline includes NEON; both arrays hold LANES = 16 u64s, so
+/// each 2-wide load/store stays in bounds.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn cas_chunks_u64_neon(x: &mut [u64; LANES], y: &mut [u64; LANES]) {
+    use std::arch::aarch64::*;
+    let px = x.as_mut_ptr();
+    let py = y.as_mut_ptr();
+    for i in 0..LANES / 2 {
+        let a = vld1q_u64(px.add(2 * i));
+        let b = vld1q_u64(py.add(2 * i));
+        let gt = vcgtq_u64(a, b);
+        vst1q_u64(px.add(2 * i), vbslq_u64(gt, b, a));
+        vst1q_u64(py.add(2 * i), vbslq_u64(gt, a, b));
+    }
+}
+
+impl LaneElem for u32 {
+    #[inline]
+    fn cas_chunks(tier: SimdTier, x: &mut [u32; LANES], y: &mut [u32; LANES]) {
+        match tier {
+            SimdTier::Scalar => cas_chunks_scalar(x, y),
+            SimdTier::Portable => cas_chunks_portable(x, y),
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: the active_tier invariant — Avx2 is dispatched
+            // only after runtime detection proved the feature.
+            SimdTier::Avx2 => unsafe { cas_chunks_u32_avx2(x, y) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: NEON is part of the aarch64 baseline.
+            SimdTier::Neon => unsafe { cas_chunks_u32_neon(x, y) },
+            // A tier compiled out on this architecture can only appear
+            // if the availability invariant were broken — stay correct.
+            _ => cas_chunks_portable(x, y),
+        }
+    }
+
+    fn scratch_pool() -> &'static Mutex<Vec<LaneScratch<u32>>> {
+        static POOL: Mutex<Vec<LaneScratch<u32>>> = Mutex::new(Vec::new());
+        &POOL
+    }
+}
+
+impl LaneElem for u64 {
+    #[inline]
+    fn cas_chunks(tier: SimdTier, x: &mut [u64; LANES], y: &mut [u64; LANES]) {
+        match tier {
+            SimdTier::Scalar => cas_chunks_scalar(x, y),
+            SimdTier::Portable => cas_chunks_portable(x, y),
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: the active_tier invariant — Avx2 is dispatched
+            // only after runtime detection proved the feature.
+            SimdTier::Avx2 => unsafe { cas_chunks_u64_avx2(x, y) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: NEON is part of the aarch64 baseline.
+            SimdTier::Neon => unsafe { cas_chunks_u64_neon(x, y) },
+            // A tier compiled out on this architecture can only appear
+            // if the availability invariant were broken — stay correct.
+            _ => cas_chunks_portable(x, y),
+        }
+    }
+
+    fn scratch_pool() -> &'static Mutex<Vec<LaneScratch<u64>>> {
+        static POOL: Mutex<Vec<LaneScratch<u64>>> = Mutex::new(Vec::new());
+        &POOL
+    }
+}
 
 /// One step of the lane schedule. Slot indices address tile chunks
 /// (`slot * LANES`).
@@ -79,17 +421,72 @@ enum LaneOp {
     Copy { dst: u32, src: u32 },
 }
 
-/// Reusable lane-execution buffers: the transposed tile plus a scalar
-/// [`PlanScratch`] for the tail rows. Grows to the largest plan seen.
+/// One tile slot's worth of values, pinned to a cache line: the SIMD
+/// kernels' loads and stores all land 64-byte aligned (`LANES` × u32 =
+/// one line, `LANES` × u64 = two).
+#[repr(C, align(64))]
+#[derive(Debug, Clone, Copy)]
+struct TileChunk<T>([T; LANES]);
+
+/// Reusable lane-execution buffers: the transposed tile (64-byte
+/// aligned, chunk per slot) plus a scalar [`PlanScratch`] for the tail
+/// rows. Grows to the largest plan seen; shard workers recycle them
+/// through the per-type pool ([`Self::take`] / [`Self::put`]) instead
+/// of reallocating per batch.
 #[derive(Debug, Default)]
 pub struct LaneScratch<T> {
-    tile: Vec<T>,
+    chunks: Vec<TileChunk<T>>,
     tail: PlanScratch<T>,
 }
 
+/// Pool cap per element type — far above any realistic shard count;
+/// overflow returns are simply dropped.
+const MAX_POOLED_SCRATCHES: usize = 64;
+
 impl<T> LaneScratch<T> {
     pub fn new() -> Self {
-        LaneScratch { tile: Vec::new(), tail: PlanScratch::new() }
+        LaneScratch { chunks: Vec::new(), tail: PlanScratch::new() }
+    }
+}
+
+impl<T: Copy + Default> LaneScratch<T> {
+    /// The flat value-major tile, grown to `slots` chunks. The base
+    /// pointer is 64-byte aligned and every slot chunk starts on an
+    /// aligned boundary.
+    fn tile_mut(&mut self, slots: usize) -> &mut [T] {
+        assert_eq!(
+            std::mem::size_of::<TileChunk<T>>(),
+            LANES * std::mem::size_of::<T>(),
+            "TileChunk<T> must be padding-free"
+        );
+        if self.chunks.len() < slots {
+            self.chunks.resize(slots, TileChunk([T::default(); LANES]));
+        }
+        let chunks = &mut self.chunks[..slots];
+        // SAFETY: TileChunk is repr(C) around a single [T; LANES] array
+        // and the assert above proves its stride equals LANES values, so
+        // `slots` contiguous chunks are exactly `slots * LANES`
+        // contiguous, initialized `T`s.
+        unsafe {
+            std::slice::from_raw_parts_mut(chunks.as_mut_ptr().cast::<T>(), slots * LANES)
+        }
+    }
+}
+
+impl<T: LaneElem> LaneScratch<T> {
+    /// Grab a pooled scratch — warmed tiles are recycled across batches
+    /// and shard workers instead of being reallocated per call.
+    pub fn take() -> LaneScratch<T> {
+        T::scratch_pool().lock().ok().and_then(|mut p| p.pop()).unwrap_or_default()
+    }
+
+    /// Return a scratch to the pool (bounded; overflow is dropped).
+    pub fn put(self) {
+        if let Ok(mut pool) = T::scratch_pool().lock() {
+            if pool.len() < MAX_POOLED_SCRATCHES {
+                pool.push(self);
+            }
+        }
     }
 }
 
@@ -290,12 +687,13 @@ impl LanePlan {
         );
     }
 
-    /// Run the CAS/copy schedule over a loaded tile.
+    /// Run the CAS/copy schedule over a loaded tile with `tier`'s
+    /// kernels.
     #[inline]
-    fn exec_tile_ops<T: Copy + Ord>(&self, tile: &mut [T]) {
+    fn exec_tile_ops<T: LaneElem>(&self, tier: SimdTier, tile: &mut [T]) {
         for op in &self.ops {
             match *op {
-                LaneOp::Cas { lo, hi } => cas_lanes(tile, lo as usize, hi as usize),
+                LaneOp::Cas { lo, hi } => cas_lanes(tier, tile, lo as usize, hi as usize),
                 LaneOp::Copy { dst, src } => {
                     let s0 = src as usize * LANES;
                     tile.copy_within(s0..s0 + LANES, dst as usize * LANES);
@@ -307,7 +705,14 @@ impl LanePlan {
     /// Execute one full tile: scatter rows `row0 .. row0+LANES` into the
     /// value-major tile, run the CAS/copy schedule, gather the rows into
     /// `dst` (row-major, `LANES * total_outputs()` long).
-    fn run_tile<T: Copy + Ord>(&self, lists: &[&[T]], row0: usize, tile: &mut [T], dst: &mut [T]) {
+    fn run_tile<T: LaneElem>(
+        &self,
+        tier: SimdTier,
+        lists: &[&[T]],
+        row0: usize,
+        tile: &mut [T],
+        dst: &mut [T],
+    ) {
         let mut ip = 0usize;
         for (l, &s) in self.list_sizes.iter().enumerate() {
             for lane in 0..LANES {
@@ -318,7 +723,7 @@ impl LanePlan {
             }
             ip += s;
         }
-        self.exec_tile_ops(tile);
+        self.exec_tile_ops(tier, tile);
         let outs = self.out_slot.len();
         for lane in 0..LANES {
             let row_dst = &mut dst[lane * outs..(lane + 1) * outs];
@@ -339,8 +744,9 @@ impl LanePlan {
     /// the request's real output width — `pad` sorts to the tail, so the
     /// prefix is the true merge). No list-major scratch, no row-major
     /// assembly, no whole-batch output buffer.
-    fn run_tile_view<T: Copy + Ord>(
+    fn run_tile_view<T: LaneElem>(
         &self,
+        tier: SimdTier,
         rows: &[&[Vec<T>]],
         row0: usize,
         pad: T,
@@ -360,11 +766,58 @@ impl LanePlan {
             }
             ip += cap;
         }
-        self.exec_tile_ops(tile);
+        self.exec_tile_ops(tier, tile);
         for lane in 0..LANES {
             let dst = &mut *outs[row0 + lane];
             for (t, &sl) in self.out_slot.iter().take(dst.len()).enumerate() {
                 dst[t] = tile[sl as usize * LANES + lane];
+            }
+        }
+    }
+
+    /// The rank-then-permute twin of [`Self::run_tile_view`]: scatter
+    /// each row's **keys packed with their list-major origin index**
+    /// (`key << 32 | origin`, pad slots = `u64::MAX`) into a `u64`
+    /// tile, run the identical CAS schedule — every element distinct,
+    /// so the network computes the stable (key, origin) merge — and
+    /// unpack each output slot into the merged key and the origin that
+    /// produced it. Payloads are never scattered, compared, or moved
+    /// here; the caller applies `perm` to its payload column once.
+    fn run_tile_view_perm(
+        &self,
+        tier: SimdTier,
+        rows: &[&[Vec<u32>]],
+        row0: usize,
+        tile: &mut [u64],
+        out_keys: &mut [&mut [u32]],
+        out_perm: &mut [&mut [u32]],
+    ) {
+        let mut ip = 0usize;
+        for (l, &cap) in self.list_sizes.iter().enumerate() {
+            for lane in 0..LANES {
+                let row = rows[row0 + lane];
+                // Origin base: keys of this row's earlier lists (the
+                // permutation indexes the row's concatenated column).
+                let base: usize = row[..l].iter().map(Vec::len).sum();
+                let src = &row[l];
+                for (i, &x) in src.iter().enumerate() {
+                    tile[self.in_slot[ip + i] as usize * LANES + lane] =
+                        pack_kv(x, (base + i) as u32);
+                }
+                for i in src.len()..cap {
+                    tile[self.in_slot[ip + i] as usize * LANES + lane] = KV_PAD;
+                }
+            }
+            ip += cap;
+        }
+        self.exec_tile_ops(tier, tile);
+        for lane in 0..LANES {
+            let keys = &mut *out_keys[row0 + lane];
+            let perm = &mut *out_perm[row0 + lane];
+            for (t, &sl) in self.out_slot.iter().take(keys.len()).enumerate() {
+                let v = tile[sl as usize * LANES + lane];
+                keys[t] = (v >> 32) as u32;
+                perm[t] = v as u32;
             }
         }
     }
@@ -378,7 +831,7 @@ impl LanePlan {
     /// ([`CompiledPlan::run_view_batch_into`], Fast mode). Unlike the
     /// row-major path there are **no padding rows at all** — partial
     /// batches execute only their real rows.
-    pub fn run_view_batch_into<T: Copy + Ord + Default>(
+    pub fn run_view_batch_into<T: LaneElem>(
         &self,
         scalar: &CompiledPlan,
         rows: &[&[Vec<T>]],
@@ -396,12 +849,11 @@ impl LanePlan {
             }
             assert!(outs[r].len() <= total, "{}: row {r} output too wide", self.name);
         }
-        if scratch.tile.len() < self.slots * LANES {
-            scratch.tile.resize(self.slots * LANES, T::default());
-        }
+        let tier = active_tier();
+        let tile = scratch.tile_mut(self.slots);
         let tiles = rows.len() / LANES;
         for t in 0..tiles {
-            self.run_tile_view(rows, t * LANES, pad, &mut scratch.tile, outs);
+            self.run_tile_view(tier, rows, t * LANES, pad, tile, outs);
         }
         let done = tiles * LANES;
         if done < rows.len() {
@@ -418,12 +870,74 @@ impl LanePlan {
         Ok(())
     }
 
+    /// Rank-then-permute batch executor — the key-value serving path.
+    /// `rows[r]` is request `r`'s un-padded **key** lists (sorted, no
+    /// longer than the device's `list_sizes`); `out_keys[r]` receives
+    /// row `r`'s merged key prefix and `out_perm[r]` (same width) the
+    /// **output permutation**: `out_perm[r][t]` is the index into row
+    /// `r`'s concatenated list-major input column whose key landed at
+    /// output rank `t`. Apply it to a payload column of the same
+    /// concatenation order (`payload_out[t] = payload[perm[t]]`) to
+    /// move every payload exactly once.
+    ///
+    /// Duplicate keys resolve by origin — list-major, i.e. the first
+    /// list's occurrence wins ties, matching the scalar stable merge —
+    /// so the emitted permutation is deterministic, and the key stream
+    /// equals [`Self::run_view_batch_into`]'s output on the same rows.
+    /// Full tiles run packed `u64` chunks; the tail runs the scalar
+    /// plan's matching packed path
+    /// ([`CompiledPlan::run_view_batch_perm_into`]).
+    pub fn run_view_batch_perm_into(
+        &self,
+        scalar: &CompiledPlan,
+        rows: &[&[Vec<u32>]],
+        scratch: &mut LaneScratch<u64>,
+        out_keys: &mut [&mut [u32]],
+        out_perm: &mut [&mut [u32]],
+    ) -> Result<(), PreconditionViolation> {
+        self.check_tail_plan(scalar);
+        assert_eq!(rows.len(), out_keys.len(), "{}: rows vs key buffers", self.name);
+        assert_eq!(rows.len(), out_perm.len(), "{}: rows vs perm buffers", self.name);
+        let total = self.out_slot.len();
+        for (r, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), self.list_sizes.len(), "{}: row {r} list count", self.name);
+            for (l, &cap) in self.list_sizes.iter().enumerate() {
+                assert!(row[l].len() <= cap, "{}: row {r} list {l} exceeds device slot", self.name);
+            }
+            assert!(out_keys[r].len() <= total, "{}: row {r} output too wide", self.name);
+            assert_eq!(
+                out_keys[r].len(),
+                out_perm[r].len(),
+                "{}: row {r} key/perm width mismatch",
+                self.name
+            );
+        }
+        let tier = active_tier();
+        let tile = scratch.tile_mut(self.slots);
+        let tiles = rows.len() / LANES;
+        for t in 0..tiles {
+            self.run_tile_view_perm(tier, rows, t * LANES, tile, out_keys, out_perm);
+        }
+        let done = tiles * LANES;
+        if done < rows.len() {
+            scalar
+                .run_view_batch_perm_into(
+                    &rows[done..],
+                    &mut scratch.tail,
+                    &mut out_keys[done..],
+                    &mut out_perm[done..],
+                )
+                .map_err(|e| e.offset_row(done))?;
+        }
+        Ok(())
+    }
+
     /// Slice-level batch executor: `lists[l]` is row-major
     /// `(batch, list_sizes[l])`, `dst` is `batch * total_outputs()` and
     /// fully overwritten. Full tiles run transposed; the `batch % LANES`
     /// tail runs through `scalar` ([`CompiledPlan::run_batch_into`],
     /// Fast mode). Infallible on admitted (sorted) inputs.
-    pub fn run_batch_into<T: Copy + Ord + Default>(
+    pub fn run_batch_into<T: LaneElem>(
         &self,
         scalar: &CompiledPlan,
         lists: &[&[T]],
@@ -438,15 +952,15 @@ impl LanePlan {
         }
         let outs = self.out_slot.len();
         assert_eq!(dst.len(), batch * outs, "{}: output buffer length", self.name);
-        if scratch.tile.len() < self.slots * LANES {
-            scratch.tile.resize(self.slots * LANES, T::default());
-        }
+        let tier = active_tier();
+        let tile = scratch.tile_mut(self.slots);
         let tiles = batch / LANES;
         for t in 0..tiles {
             self.run_tile(
+                tier,
                 lists,
                 t * LANES,
-                &mut scratch.tile,
+                tile,
                 &mut dst[t * LANES * outs..(t + 1) * LANES * outs],
             );
         }
@@ -464,7 +978,7 @@ impl LanePlan {
 
     /// Vec-append convenience over [`Self::run_batch_into`] — the same
     /// call shape as [`CompiledPlan::run_batch`].
-    pub fn run_batch<T: Copy + Ord + Default>(
+    pub fn run_batch<T: LaneElem>(
         &self,
         scalar: &CompiledPlan,
         lists: &[Vec<T>],
@@ -479,11 +993,11 @@ impl LanePlan {
     }
 }
 
-/// Elementwise branchless compare-exchange of two [`LANES`]-wide tile
-/// chunks: per lane, `min → lo`, `max → hi`. Fixed-size array views give
-/// rustc a compile-time trip count (vectorizes to pminu/pmaxu for u32).
+/// Elementwise compare-exchange of two [`LANES`]-wide tile chunks: per
+/// lane, `min → lo`, `max → hi`, through `tier`'s explicit kernel
+/// ([`LaneElem::cas_chunks`]).
 #[inline]
-fn cas_lanes<T: Copy + Ord>(tile: &mut [T], lo: usize, hi: usize) {
+fn cas_lanes<T: LaneElem>(tier: SimdTier, tile: &mut [T], lo: usize, hi: usize) {
     debug_assert_ne!(lo, hi);
     let (lo_off, hi_off) = (lo * LANES, hi * LANES);
     let (x, y) = if lo_off < hi_off {
@@ -495,19 +1009,31 @@ fn cas_lanes<T: Copy + Ord>(tile: &mut [T], lo: usize, hi: usize) {
     };
     let x: &mut [T; LANES] = x.try_into().expect("lo chunk is LANES wide");
     let y: &mut [T; LANES] = y.try_into().expect("hi chunk is LANES wide");
-    for (p, q) in x.iter_mut().zip(y.iter_mut()) {
-        let (a, b) = (*p, *q);
-        let swap = b < a;
-        *p = if swap { b } else { a };
-        *q = if swap { a } else { b };
-    }
+    T::cas_chunks(tier, x, y);
 }
+
+/// Pack a key with its origin for the rank-then-permute path: the key
+/// occupies the high 32 bits (drives the ordering), the origin the low
+/// 32 (breaks every tie deterministically — origins are distinct per
+/// row, so packed elements are distinct and the comparator network's
+/// output is the unique stable (key, origin) merge).
+#[inline]
+pub(crate) fn pack_kv(key: u32, origin: u32) -> u64 {
+    (u64::from(key) << 32) | u64::from(origin)
+}
+
+/// Packed pad for unused key-value slots: sorts after every real
+/// element (equality would need `key == u32::MAX` AND `origin ==
+/// u32::MAX`; real origins are row ranks, far below `u32::MAX`).
+pub(crate) const KV_PAD: u64 = u64::MAX;
 
 /// Shard a batch across `threads` scoped OS threads: tile-aligned row
 /// ranges (the `batch % LANES` tail rows land in the last non-empty
-/// shard), one fresh [`LaneScratch`] per thread, disjoint output
-/// slices. `threads <= 1` degrades to the single-threaded executor.
-pub fn run_batch_sharded<T: Copy + Ord + Default + Send + Sync>(
+/// shard), one **pooled** [`LaneScratch`] per thread (taken at shard
+/// start, returned at shard end — no per-call tile reallocation),
+/// disjoint output slices. `threads <= 1` degrades to the
+/// single-threaded executor.
+pub fn run_batch_sharded<T: LaneElem>(
     lane: &LanePlan,
     scalar: &CompiledPlan,
     lists: &[Vec<T>],
@@ -516,24 +1042,16 @@ pub fn run_batch_sharded<T: Copy + Ord + Default + Send + Sync>(
     out: &mut Vec<T>,
 ) -> Result<(), PreconditionViolation> {
     if threads <= 1 {
-        return lane.run_batch(scalar, lists, batch, &mut LaneScratch::new(), out);
+        let mut scratch = LaneScratch::take();
+        let res = lane.run_batch(scalar, lists, batch, &mut scratch, out);
+        scratch.put();
+        return res;
     }
     let outs = lane.total_outputs();
     let slices: Vec<&[T]> = lists.iter().map(Vec::as_slice).collect();
-    let tiles = batch / LANES;
     // One shard per thread at most, at least one tile per shard; with no
     // full tile at all, a single shard just runs the scalar tail.
-    let shards = if tiles == 0 { 1 } else { threads.min(tiles) };
-    let tiles_per = tiles.div_ceil(shards);
-    let mut ranges: Vec<(usize, usize)> = Vec::with_capacity(shards);
-    let mut row = 0usize;
-    for i in 0..shards {
-        let hi = if i == shards - 1 { batch } else { ((i + 1) * tiles_per * LANES).min(batch) };
-        if hi > row {
-            ranges.push((row, hi));
-            row = hi;
-        }
-    }
+    let ranges = shard_ranges(batch, threads);
     let slices_ref = &slices;
     append_rows(out, batch, outs, |dst| {
         std::thread::scope(|s| {
@@ -548,8 +1066,12 @@ pub fn run_batch_sharded<T: Copy + Ord + Default + Send + Sync>(
                         .zip(lane.list_sizes())
                         .map(|(l, &sz)| &l[lo * sz..hi * sz])
                         .collect();
-                    lane.run_batch_into(scalar, &shard, hi - lo, &mut LaneScratch::new(), chunk)
-                        .map_err(|e| e.offset_row(lo))
+                    let mut scratch = LaneScratch::take();
+                    let res = lane
+                        .run_batch_into(scalar, &shard, hi - lo, &mut scratch, chunk)
+                        .map_err(|e| e.offset_row(lo));
+                    scratch.put();
+                    res
                 }));
             }
             let mut first_err = None;
@@ -566,24 +1088,9 @@ pub fn run_batch_sharded<T: Copy + Ord + Default + Send + Sync>(
     })
 }
 
-/// Shard the **view-based** (tile-direct) batch across `threads` scoped
-/// OS threads: tile-aligned row ranges, one fresh [`LaneScratch`] per
-/// thread, each shard writing its own disjoint sub-slice of the per-row
-/// output buffers. `threads <= 1` degrades to the single-threaded view
-/// executor. The view twin of [`run_batch_sharded`].
-pub fn run_view_batch_sharded<T: Copy + Ord + Default + Send + Sync>(
-    lane: &LanePlan,
-    scalar: &CompiledPlan,
-    rows: &[&[Vec<T>]],
-    pad: T,
-    threads: usize,
-    outs: &mut [&mut [T]],
-) -> Result<(), PreconditionViolation> {
-    if threads <= 1 {
-        return lane.run_view_batch_into(scalar, rows, pad, &mut LaneScratch::new(), outs);
-    }
-    assert_eq!(rows.len(), outs.len(), "{}: rows vs output buffers", lane.name);
-    let real = rows.len();
+/// Tile-aligned shard ranges for a `real`-row batch: at most `threads`
+/// shards, at least one tile each, tail rows in the last shard.
+fn shard_ranges(real: usize, threads: usize) -> Vec<(usize, usize)> {
     let tiles = real / LANES;
     let shards = if tiles == 0 { 1 } else { threads.min(tiles) };
     let tiles_per = tiles.div_ceil(shards);
@@ -596,6 +1103,31 @@ pub fn run_view_batch_sharded<T: Copy + Ord + Default + Send + Sync>(
             row = hi;
         }
     }
+    ranges
+}
+
+/// Shard the **view-based** (tile-direct) batch across `threads` scoped
+/// OS threads: tile-aligned row ranges, one **pooled** [`LaneScratch`]
+/// per thread, each shard writing its own disjoint sub-slice of the
+/// per-row output buffers. `threads <= 1` degrades to the
+/// single-threaded view executor. The view twin of
+/// [`run_batch_sharded`].
+pub fn run_view_batch_sharded<T: LaneElem>(
+    lane: &LanePlan,
+    scalar: &CompiledPlan,
+    rows: &[&[Vec<T>]],
+    pad: T,
+    threads: usize,
+    outs: &mut [&mut [T]],
+) -> Result<(), PreconditionViolation> {
+    if threads <= 1 {
+        let mut scratch = LaneScratch::take();
+        let res = lane.run_view_batch_into(scalar, rows, pad, &mut scratch, outs);
+        scratch.put();
+        return res;
+    }
+    assert_eq!(rows.len(), outs.len(), "{}: rows vs output buffers", lane.name);
+    let ranges = shard_ranges(rows.len(), threads);
     std::thread::scope(|s| {
         let mut handles = Vec::with_capacity(ranges.len());
         let mut rest = outs;
@@ -604,13 +1136,76 @@ pub fn run_view_batch_sharded<T: Copy + Ord + Default + Send + Sync>(
             rest = tail;
             let shard_rows = &rows[lo..hi];
             handles.push(s.spawn(move || -> Result<(), PreconditionViolation> {
-                lane.run_view_batch_into(scalar, shard_rows, pad, &mut LaneScratch::new(), chunk)
-                    .map_err(|e| e.offset_row(lo))
+                let mut scratch = LaneScratch::take();
+                let res = lane
+                    .run_view_batch_into(scalar, shard_rows, pad, &mut scratch, chunk)
+                    .map_err(|e| e.offset_row(lo));
+                scratch.put();
+                res
             }));
         }
         let mut first_err = None;
         for h in handles {
             if let Err(e) = h.join().expect("lane view shard panicked") {
+                first_err.get_or_insert(e);
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    })
+}
+
+/// Shard the rank-then-permute batch across `threads` scoped OS
+/// threads — the key-value twin of [`run_view_batch_sharded`], with
+/// both the key and permutation output arrays split into the same
+/// disjoint shard sub-slices.
+pub fn run_view_batch_perm_sharded(
+    lane: &LanePlan,
+    scalar: &CompiledPlan,
+    rows: &[&[Vec<u32>]],
+    threads: usize,
+    out_keys: &mut [&mut [u32]],
+    out_perm: &mut [&mut [u32]],
+) -> Result<(), PreconditionViolation> {
+    if threads <= 1 {
+        let mut scratch = LaneScratch::take();
+        let res = lane.run_view_batch_perm_into(scalar, rows, &mut scratch, out_keys, out_perm);
+        scratch.put();
+        return res;
+    }
+    assert_eq!(rows.len(), out_keys.len(), "{}: rows vs key buffers", lane.name);
+    assert_eq!(rows.len(), out_perm.len(), "{}: rows vs perm buffers", lane.name);
+    let ranges = shard_ranges(rows.len(), threads);
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(ranges.len());
+        let mut rest_keys = out_keys;
+        let mut rest_perm = out_perm;
+        for &(lo, hi) in &ranges {
+            let (key_chunk, key_tail) = rest_keys.split_at_mut(hi - lo);
+            let (perm_chunk, perm_tail) = rest_perm.split_at_mut(hi - lo);
+            rest_keys = key_tail;
+            rest_perm = perm_tail;
+            let shard_rows = &rows[lo..hi];
+            handles.push(s.spawn(move || -> Result<(), PreconditionViolation> {
+                let mut scratch = LaneScratch::take();
+                let res = lane
+                    .run_view_batch_perm_into(
+                        scalar,
+                        shard_rows,
+                        &mut scratch,
+                        key_chunk,
+                        perm_chunk,
+                    )
+                    .map_err(|e| e.offset_row(lo));
+                scratch.put();
+                res
+            }));
+        }
+        let mut first_err = None;
+        for h in handles {
+            if let Err(e) = h.join().expect("lane perm shard panicked") {
                 first_err.get_or_insert(e);
             }
         }
@@ -629,7 +1224,7 @@ pub fn run_view_batch_sharded<T: Copy + Ord + Default + Send + Sync>(
 /// streaming merge engine's block kernel
 /// ([`crate::stream::merge2::BlockKernel`]) — so the policy lives in
 /// exactly one place.
-pub fn run_view_batch_auto<T: Copy + Ord + Default + Send + Sync>(
+pub fn run_view_batch_auto<T: LaneElem>(
     lane: &LanePlan,
     scalar: &CompiledPlan,
     rows: &[&[Vec<T>]],
@@ -642,6 +1237,25 @@ pub fn run_view_batch_auto<T: Copy + Ord + Default + Send + Sync>(
         run_view_batch_sharded(lane, scalar, rows, pad, threads, outs)
     } else {
         lane.run_view_batch_into(scalar, rows, pad, scratch, outs)
+    }
+}
+
+/// Rank-then-permute batch execution under the same shard policy —
+/// the key-value twin of [`run_view_batch_auto`], shared by the
+/// serving backend and the streaming key-value kernel.
+pub fn run_view_batch_perm_auto(
+    lane: &LanePlan,
+    scalar: &CompiledPlan,
+    rows: &[&[Vec<u32>]],
+    scratch: &mut LaneScratch<u64>,
+    out_keys: &mut [&mut [u32]],
+    out_perm: &mut [&mut [u32]],
+) -> Result<(), PreconditionViolation> {
+    let threads = auto_threads(rows.len(), scalar.n());
+    if threads > 1 {
+        run_view_batch_perm_sharded(lane, scalar, rows, threads, out_keys, out_perm)
+    } else {
+        lane.run_view_batch_perm_into(scalar, rows, scratch, out_keys, out_perm)
     }
 }
 
@@ -977,6 +1591,154 @@ mod tests {
             assert_eq!(lane.copy_count(), 0, "{}", d.name);
             assert!(lane.cas_count() > 0, "{}", d.name);
             assert_eq!(lane.slots(), lane.n(), "{}", d.name);
+        }
+    }
+
+    #[test]
+    fn tile_chunks_are_cache_line_aligned() {
+        let mut s32: LaneScratch<u32> = LaneScratch::new();
+        let t = s32.tile_mut(7);
+        assert_eq!(t.len(), 7 * LANES);
+        assert_eq!(t.as_ptr() as usize % 64, 0, "u32 tile base must be 64B aligned");
+        let mut s64: LaneScratch<u64> = LaneScratch::new();
+        let t = s64.tile_mut(5);
+        assert_eq!(t.len(), 5 * LANES);
+        assert_eq!(t.as_ptr() as usize % 64, 0, "u64 tile base must be 64B aligned");
+        // Growing keeps contiguity and alignment.
+        let t = s64.tile_mut(11);
+        assert_eq!(t.len(), 11 * LANES);
+        assert_eq!(t.as_ptr() as usize % 64, 0);
+    }
+
+    #[test]
+    fn scratch_pool_recycles() {
+        let mut s: LaneScratch<u32> = LaneScratch::take();
+        s.tile_mut(3)[0] = 7;
+        s.put();
+        // The pooled scratch comes back with its allocation intact.
+        let mut again: LaneScratch<u32> = LaneScratch::take();
+        let _ = again.tile_mut(3);
+        again.put();
+    }
+
+    #[test]
+    fn every_available_tier_matches_the_scalar_plan() {
+        // The dispatch differential in miniature (the full artifact
+        // sweep lives in rust/tests/simd_dispatch.rs): every tier this
+        // host can run must be byte-exact with CompiledPlan::run_batch.
+        let mut rng = Rng::new(0x51D);
+        let d = loms_2way(8, 8, 2);
+        let plan = CompiledPlan::compile_auto(&d).unwrap();
+        let lane = LanePlan::compile(&plan);
+        let batch = 2 * LANES + 5;
+        let lists = flat_batch(&mut rng, &d.list_sizes, batch, 1 << 20);
+        let want = scalar_outputs(&plan, &lists, batch);
+        for tier in available_tiers() {
+            assert!(force_tier(Some(tier)), "{tier:?} reported available");
+            assert_eq!(active_tier(), tier);
+            let mut got = Vec::new();
+            lane.run_batch(&plan, &lists, batch, &mut LaneScratch::new(), &mut got).unwrap();
+            assert_eq!(got, want, "{tier:?}");
+        }
+        force_tier(None);
+    }
+
+    #[test]
+    fn forcing_an_unavailable_tier_is_refused() {
+        let all = [SimdTier::Scalar, SimdTier::Portable, SimdTier::Avx2, SimdTier::Neon];
+        for t in all {
+            if !t.available() {
+                assert!(!force_tier(Some(t)), "{t:?}");
+            }
+        }
+        assert!(force_tier(None));
+        // Parsing covers the documented spellings, case-insensitively.
+        assert_eq!(SimdTier::parse("AVX2"), Some(SimdTier::Avx2));
+        assert_eq!(SimdTier::parse("portable"), Some(SimdTier::Portable));
+        assert_eq!(SimdTier::parse("nope"), None);
+    }
+
+    /// Stable (key, origin) reference for the rank-then-permute path:
+    /// sort the concatenated (key, origin) pairs of one row.
+    fn perm_reference(row: &[Vec<u32>]) -> (Vec<u32>, Vec<u32>) {
+        let mut pairs: Vec<(u32, u32)> = Vec::new();
+        for list in row {
+            for &k in list {
+                pairs.push((k, pairs.len() as u32));
+            }
+        }
+        pairs.sort_unstable(); // distinct (key, origin) pairs: total order
+        (pairs.iter().map(|p| p.0).collect(), pairs.iter().map(|p| p.1).collect())
+    }
+
+    #[test]
+    fn perm_path_emits_the_stable_permutation() {
+        // Duplicate-heavy rows across tile boundaries: merged keys must
+        // equal the key-only path and the permutation must be the
+        // stable list-major order, on every available tier.
+        let mut rng = Rng::new(0x4B56);
+        for d in [loms_2way(8, 8, 2), loms_2way(7, 5, 3), loms_kway(&[7, 7, 7])] {
+            let plan = CompiledPlan::compile_auto(&d).unwrap();
+            let lane = LanePlan::compile(&plan);
+            for real in [1usize, LANES - 1, LANES, 2 * LANES + 5] {
+                // max = 8 forces heavy key duplication.
+                let reqs = ragged_rows(&mut rng, &d.list_sizes, real, 8);
+                let rows: Vec<&[Vec<u32>]> = reqs.iter().map(|r| r.as_slice()).collect();
+                let widths: Vec<usize> =
+                    reqs.iter().map(|r| r.iter().map(Vec::len).sum()).collect();
+                for tier in available_tiers() {
+                    assert!(force_tier(Some(tier)));
+                    let mut keys: Vec<Vec<u32>> =
+                        widths.iter().map(|&w| vec![0u32; w]).collect();
+                    let mut perms: Vec<Vec<u32>> =
+                        widths.iter().map(|&w| vec![0u32; w]).collect();
+                    let mut key_outs: Vec<&mut [u32]> =
+                        keys.iter_mut().map(|v| v.as_mut_slice()).collect();
+                    let mut perm_outs: Vec<&mut [u32]> =
+                        perms.iter_mut().map(|v| v.as_mut_slice()).collect();
+                    lane.run_view_batch_perm_into(
+                        &plan,
+                        &rows,
+                        &mut LaneScratch::new(),
+                        &mut key_outs,
+                        &mut perm_outs,
+                    )
+                    .unwrap();
+                    for (r, req) in reqs.iter().enumerate() {
+                        let (want_keys, want_perm) = perm_reference(req);
+                        assert_eq!(keys[r], want_keys, "{} row {r} {tier:?}", d.name);
+                        assert_eq!(perms[r], want_perm, "{} row {r} {tier:?}", d.name);
+                    }
+                }
+                force_tier(None);
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_perm_path_matches_single_thread() {
+        let d = loms_2way(8, 8, 2);
+        let plan = CompiledPlan::compile_auto(&d).unwrap();
+        let lane = LanePlan::compile(&plan);
+        let mut rng = Rng::new(0x9E12);
+        let real = 5 * LANES + 11;
+        let reqs = ragged_rows(&mut rng, &d.list_sizes, real, 16);
+        let rows: Vec<&[Vec<u32>]> = reqs.iter().map(|r| r.as_slice()).collect();
+        let widths: Vec<usize> = reqs.iter().map(|r| r.iter().map(Vec::len).sum()).collect();
+        for threads in [1usize, 2, 3, 8, 64] {
+            let mut keys: Vec<Vec<u32>> = widths.iter().map(|&w| vec![0u32; w]).collect();
+            let mut perms: Vec<Vec<u32>> = widths.iter().map(|&w| vec![0u32; w]).collect();
+            let mut key_outs: Vec<&mut [u32]> =
+                keys.iter_mut().map(|v| v.as_mut_slice()).collect();
+            let mut perm_outs: Vec<&mut [u32]> =
+                perms.iter_mut().map(|v| v.as_mut_slice()).collect();
+            run_view_batch_perm_sharded(&lane, &plan, &rows, threads, &mut key_outs, &mut perm_outs)
+                .unwrap();
+            for (r, req) in reqs.iter().enumerate() {
+                let (want_keys, want_perm) = perm_reference(req);
+                assert_eq!(keys[r], want_keys, "row {r} threads={threads}");
+                assert_eq!(perms[r], want_perm, "row {r} threads={threads}");
+            }
         }
     }
 }

@@ -545,6 +545,64 @@ impl CompiledPlan {
         Ok(())
     }
 
+    /// Rank-then-permute twin of [`Self::run_view_batch_into`] — the
+    /// scalar tail of the key-value serving path (see
+    /// [`super::lanes::LanePlan::run_view_batch_perm_into`]). Each key
+    /// is packed with its list-major origin rank into a `u64`
+    /// ([`super::lanes::pack_kv`]); the unmodified comparator stream
+    /// orders the packed values, and the gathered output prefix unpacks
+    /// into the merged keys plus the permutation carrying each output
+    /// slot's origin index. Payloads never enter the flat vector — the
+    /// caller applies the permutation to its payload column once per
+    /// row. Runs in fast mode: packed inputs satisfy the sortedness
+    /// preconditions exactly when the raw keys do, and the distinct
+    /// origins make the packed elements unique, so the network output is
+    /// the one stable (key, origin)-lexicographic merge.
+    pub fn run_view_batch_perm_into(
+        &self,
+        rows: &[&[Vec<u32>]],
+        scratch: &mut PlanScratch<u64>,
+        out_keys: &mut [&mut [u32]],
+        out_perm: &mut [&mut [u32]],
+    ) -> Result<(), PreconditionViolation> {
+        use super::lanes::{pack_kv, KV_PAD};
+        assert_eq!(rows.len(), out_keys.len(), "{}: rows vs key buffers", self.name);
+        assert_eq!(rows.len(), out_perm.len(), "{}: rows vs perm buffers", self.name);
+        let PlanScratch { v, buf } = scratch;
+        v.clear();
+        v.resize(self.n, 0u64);
+        self.warm_scratch(buf);
+        let end = self.ops.len();
+        for (row, lists) in rows.iter().enumerate() {
+            assert_eq!(lists.len(), self.list_sizes.len(), "{}: row {row} list count", self.name);
+            let mut ip = 0usize;
+            let mut origin = 0u32;
+            for (l, &cap) in self.list_sizes.iter().enumerate() {
+                let src = &lists[l];
+                assert!(src.len() <= cap, "{}: row {row} list {l} exceeds device slot", self.name);
+                for (i, &x) in src.iter().enumerate() {
+                    v[self.in_pos[ip + i] as usize] = pack_kv(x, origin + i as u32);
+                }
+                for i in src.len()..cap {
+                    v[self.in_pos[ip + i] as usize] = KV_PAD;
+                }
+                origin += src.len() as u32;
+                ip += cap;
+            }
+            self.exec_ops(v, buf, ExecMode::Fast, end).map_err(|e| e.with_row(row))?;
+            let keys = &mut *out_keys[row];
+            let perm = &mut *out_perm[row];
+            assert_eq!(keys.len(), perm.len(), "{}: row {row} key/perm widths", self.name);
+            assert!(keys.len() <= self.out_pos.len(), "{}: row {row} output too wide", self.name);
+            for (t, &p) in self.out_pos.iter().take(keys.len()).enumerate() {
+                let packed = v[p as usize];
+                keys[t] = (packed >> 32) as u32;
+                perm[t] = packed as u32;
+            }
+        }
+        Ok(())
+    }
+
     /// Slice-level batch executor behind [`Self::run_batch`]: rows are
     /// read from `lists[l]` (row-major `(batch, list_sizes[l])`) and
     /// written to `dst` (`batch * total_outputs()`, fully overwritten).

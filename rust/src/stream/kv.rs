@@ -1,0 +1,1299 @@
+//! Key-value streaming merge: the [`super::merge2`] / [`super::tree`] /
+//! [`super::extsort`] engine with a `u64` payload riding beside every
+//! key — payloads never enter a compare-exchange.
+//!
+//! The kernel is the **rank-then-permute** lowering
+//! ([`crate::sortnet::lanes::LanePlan::run_view_batch_perm_into`]): keys
+//! packed with list-major origin ranks run through the unmodified CAS
+//! stream, and the emitted permutation gathers each payload column once
+//! per row. Everything above the kernel — the FLiMS emit/retain
+//! arithmetic, the children-first tree scheduler, run formation and
+//! spill passes — is the key-only engine with a payload vector carried
+//! in lock-step beside every key buffer.
+//!
+//! Like the key-only stream engine (and unlike the serving path), fill
+//! is tracked by count, so the full `u32` key domain is legal: a real
+//! `u32::MAX` key packs below the `u64::MAX` pad because its origin
+//! rank stays far below `u32::MAX`.
+//!
+//! Spill format: back-to-back 12-byte little-endian records, `u32` key
+//! then `u64` payload ([`FileRunKvStream`]).
+
+use crate::sortnet::lanes::{self, LanePlan, LaneScratch};
+use crate::sortnet::loms;
+use crate::sortnet::plan::CompiledPlan;
+use anyhow::{anyhow, bail, Context, Result};
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::extsort::{ExtSortConfig, ExtSortStats};
+use super::tree::TreeStats;
+
+/// Record pairs pulled from the merge tree per drain step.
+const DRAIN: usize = 4096;
+
+/// Bytes per spilled `(key, payload)` record.
+const REC_BYTES: u64 = 12;
+
+/// A stream of ascending `u32` keys with one `u64` payload each, pulled
+/// in bounded chunks. Same contract as [`super::source::SortedStream`]:
+/// keys ascending across the whole stream (duplicates allowed, payloads
+/// ride with their key), `next_chunk` appends at most `max` pairs to
+/// `keys`/`pays` in lock-step and returns the count; `0` means
+/// exhausted, never transient.
+pub trait SortedKvStream {
+    fn next_chunk(&mut self, max: usize, keys: &mut Vec<u32>, pays: &mut Vec<u64>)
+        -> Result<usize>;
+}
+
+/// Box an adapter for [`MergeTreeKv`]'s input list.
+pub fn boxed_kv<'a>(s: impl SortedKvStream + 'a) -> Box<dyn SortedKvStream + 'a> {
+    Box::new(s)
+}
+
+/// Borrowed sorted key/payload columns as a stream.
+#[derive(Debug)]
+pub struct SliceKvStream<'a> {
+    keys: &'a [u32],
+    pays: &'a [u64],
+    pos: usize,
+}
+
+impl<'a> SliceKvStream<'a> {
+    pub fn new(keys: &'a [u32], pays: &'a [u64]) -> Self {
+        assert_eq!(keys.len(), pays.len(), "key/payload columns differ in length");
+        debug_assert!(keys.windows(2).all(|w| w[0] <= w[1]), "keys not sorted");
+        SliceKvStream { keys, pays, pos: 0 }
+    }
+}
+
+impl SortedKvStream for SliceKvStream<'_> {
+    fn next_chunk(
+        &mut self,
+        max: usize,
+        keys: &mut Vec<u32>,
+        pays: &mut Vec<u64>,
+    ) -> Result<usize> {
+        let n = max.min(self.keys.len() - self.pos);
+        keys.extend_from_slice(&self.keys[self.pos..self.pos + n]);
+        pays.extend_from_slice(&self.pays[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+/// Owned sorted key/payload columns as a stream.
+#[derive(Debug)]
+pub struct VecKvStream {
+    keys: Vec<u32>,
+    pays: Vec<u64>,
+    pos: usize,
+}
+
+impl VecKvStream {
+    pub fn new(keys: Vec<u32>, pays: Vec<u64>) -> Self {
+        assert_eq!(keys.len(), pays.len(), "key/payload columns differ in length");
+        debug_assert!(keys.windows(2).all(|w| w[0] <= w[1]), "keys not sorted");
+        VecKvStream { keys, pays, pos: 0 }
+    }
+}
+
+impl SortedKvStream for VecKvStream {
+    fn next_chunk(
+        &mut self,
+        max: usize,
+        keys: &mut Vec<u32>,
+        pays: &mut Vec<u64>,
+    ) -> Result<usize> {
+        let n = max.min(self.keys.len() - self.pos);
+        keys.extend_from_slice(&self.keys[self.pos..self.pos + n]);
+        pays.extend_from_slice(&self.pays[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+/// One sorted run inside a file of 12-byte little-endian `(u32 key,
+/// u64 payload)` records — the key-value spill format. Mirrors
+/// [`super::source::FileRunStream`]: one seek at open, sequential reads
+/// after, each run stream owning its handle.
+#[derive(Debug)]
+pub struct FileRunKvStream {
+    file: File,
+    /// Records left to read.
+    remaining: u64,
+    /// Reusable byte buffer for bulk reads.
+    buf: Vec<u8>,
+}
+
+impl FileRunKvStream {
+    /// Open the run spanning records `[start, start + records)` of `path`.
+    pub fn open(path: &Path, start: u64, records: u64) -> Result<Self> {
+        let mut file =
+            File::open(path).with_context(|| format!("opening KV run file {}", path.display()))?;
+        file.seek(SeekFrom::Start(start * REC_BYTES))
+            .with_context(|| format!("seeking KV run at record {start} in {}", path.display()))?;
+        Ok(FileRunKvStream { file, remaining: records, buf: Vec::new() })
+    }
+}
+
+impl SortedKvStream for FileRunKvStream {
+    fn next_chunk(
+        &mut self,
+        max: usize,
+        keys: &mut Vec<u32>,
+        pays: &mut Vec<u64>,
+    ) -> Result<usize> {
+        let n = (max as u64).min(self.remaining) as usize;
+        if n == 0 {
+            return Ok(0);
+        }
+        self.buf.resize(n * REC_BYTES as usize, 0);
+        self.file.read_exact(&mut self.buf).context("reading KV spill run")?;
+        for rec in self.buf.chunks_exact(REC_BYTES as usize) {
+            keys.push(u32::from_le_bytes([rec[0], rec[1], rec[2], rec[3]]));
+            pays.push(u64::from_le_bytes([
+                rec[4], rec[5], rec[6], rec[7], rec[8], rec[9], rec[10], rec[11],
+            ]));
+        }
+        self.remaining -= n as u64;
+        Ok(n)
+    }
+}
+
+/// The compiled `loms2` R+R kernel on the rank-then-permute path:
+/// scalar plan, lane plan, the packed `u64` tile scratch, and the
+/// reusable flat permutation buffer the payload gather reads through.
+pub struct BlockKernelKv {
+    r: usize,
+    plan: CompiledPlan,
+    lane: LanePlan,
+    scratch: LaneScratch<u64>,
+    perm_buf: Vec<u32>,
+}
+
+impl BlockKernelKv {
+    /// Compile the `loms_2way(r, r, 2)` device — the same device the
+    /// key-only [`super::merge2::BlockKernel`] runs; only the lowering
+    /// differs (packed keys + permutation output).
+    pub fn new(r: usize) -> Result<Self> {
+        anyhow::ensure!(r >= 1, "block size R must be >= 1");
+        let d = loms::loms_2way(r, r, 2);
+        let plan = CompiledPlan::compile_auto(&d).map_err(|e| anyhow!("{}: {e}", d.name))?;
+        let lane = LanePlan::compile(&plan);
+        Ok(BlockKernelKv { r, plan, lane, scratch: LaneScratch::new(), perm_buf: Vec::new() })
+    }
+
+    /// Block size R.
+    pub fn r(&self) -> usize {
+        self.r
+    }
+
+    /// Compiled device name (diagnostics / stats).
+    pub fn device_name(&self) -> &str {
+        &self.plan.name
+    }
+
+    /// Execute one batch of independent node steps. `rows[i]` is a
+    /// node's `[high, block]` key pair; `pay_rows[i]` the matching
+    /// payload pair; `out_keys[i]` / `out_pays[i]` are the equal-width
+    /// (`h_i + m_i`) destinations. Keys run through the packed
+    /// comparator tiles; each payload moves exactly once, gathered
+    /// through the emitted permutation.
+    pub fn merge_rows(
+        &mut self,
+        rows: &[&[Vec<u32>]],
+        pay_rows: &[[&[u64]; 2]],
+        out_keys: &mut [&mut [u32]],
+        out_pays: &mut [&mut [u64]],
+    ) {
+        debug_assert_eq!(rows.len(), pay_rows.len());
+        debug_assert_eq!(rows.len(), out_pays.len());
+        let BlockKernelKv { plan, lane, scratch, perm_buf, .. } = self;
+        // Split one flat reusable buffer into per-row permutation slices.
+        let total: usize = out_keys.iter().map(|o| o.len()).sum();
+        perm_buf.clear();
+        perm_buf.resize(total, 0);
+        let mut perm_outs: Vec<&mut [u32]> = Vec::with_capacity(rows.len());
+        let mut rest = perm_buf.as_mut_slice();
+        for o in out_keys.iter() {
+            let (head, tail) = rest.split_at_mut(o.len());
+            perm_outs.push(head);
+            rest = tail;
+        }
+        lanes::run_view_batch_perm_auto(lane, plan, rows, scratch, out_keys, &mut perm_outs)
+            .expect("fast-mode perm execution is infallible on sorted blocks");
+        // The single payload move: origin ranks index the row's
+        // list-major concatenation `[high, block]`.
+        for (i, perm) in perm_outs.iter().enumerate() {
+            let [p0, p1] = pay_rows[i];
+            let dst = &mut *out_pays[i];
+            for (t, &p) in perm.iter().enumerate() {
+                let p = p as usize;
+                dst[t] = if p < p0.len() { p0[p] } else { p1[p - p0.len()] };
+            }
+        }
+    }
+}
+
+/// One streaming 2-way key-value merge node: [`super::merge2::BlockMerger2`]
+/// with a payload vector in lock-step beside each key buffer. The
+/// emit/retain arithmetic ([`Self::emit_count`]) reads keys only — its
+/// safety proof is unchanged — and [`Self::apply`] moves the merged
+/// payload column alongside the merged keys.
+#[derive(Debug, Default)]
+pub struct BlockMerger2Kv {
+    /// `lists[0]` = high buffer, `lists[1]` = staged block — the
+    /// kernel's two key slots.
+    lists: [Vec<u32>; 2],
+    /// Payload columns in lock-step with `lists`.
+    pays: [Vec<u64>; 2],
+}
+
+impl BlockMerger2Kv {
+    pub fn new() -> Self {
+        BlockMerger2Kv::default()
+    }
+
+    /// The retained high-buffer keys.
+    pub fn high(&self) -> &[u32] {
+        &self.lists[0]
+    }
+
+    /// The kernel key-row view (`[high, block]`).
+    pub fn lists(&self) -> &[Vec<u32>] {
+        &self.lists
+    }
+
+    /// The kernel payload-row view (`[high, block]`).
+    pub fn pay_slices(&self) -> [&[u64]; 2] {
+        [&self.pays[0], &self.pays[1]]
+    }
+
+    /// Clear and return the staging buffers for the next block; the
+    /// caller fills both in lock-step with up to R pairs.
+    pub fn stage_bufs(&mut self) -> (&mut Vec<u32>, &mut Vec<u64>) {
+        self.lists[1].clear();
+        self.pays[1].clear();
+        (&mut self.lists[1], &mut self.pays[1])
+    }
+
+    /// Pairs in flight (`h + m`) — the kernel output width for this row.
+    pub fn width(&self) -> usize {
+        self.lists[0].len() + self.lists[1].len()
+    }
+
+    /// How many merged pairs may be emitted this step — identical to
+    /// [`super::merge2::BlockMerger2::emit_count`]: the bound depends
+    /// only on key order, so the payload column cannot change it.
+    pub fn emit_count(&self, other_head: Option<u32>) -> usize {
+        let h = self.lists[0].len();
+        let m = self.lists[1].len();
+        let cnt = match other_head {
+            None => m,
+            Some(v) => self.lists[1].partition_point(|&x| x <= v),
+        };
+        m.min(h + cnt)
+    }
+
+    /// Consume one kernel output: the low cones of both columns are
+    /// appended to `emit_k`/`emit_p`, the high cones become the new
+    /// high buffers, the staged block is cleared.
+    pub fn apply(
+        &mut self,
+        merged_keys: &[u32],
+        merged_pays: &[u64],
+        k: usize,
+        emit_k: &mut Vec<u32>,
+        emit_p: &mut Vec<u64>,
+    ) {
+        debug_assert_eq!(merged_keys.len(), self.width());
+        debug_assert_eq!(merged_pays.len(), merged_keys.len());
+        debug_assert!(k <= merged_keys.len());
+        emit_k.extend_from_slice(&merged_keys[..k]);
+        emit_p.extend_from_slice(&merged_pays[..k]);
+        self.lists[0].clear();
+        self.lists[0].extend_from_slice(&merged_keys[k..]);
+        self.pays[0].clear();
+        self.pays[0].extend_from_slice(&merged_pays[k..]);
+        self.lists[1].clear();
+        self.pays[1].clear();
+    }
+
+    /// Endgame: both inputs exhausted and empty — the high buffers are
+    /// the sorted remainder.
+    pub fn flush(&mut self, emit_k: &mut Vec<u32>, emit_p: &mut Vec<u64>) {
+        debug_assert!(self.lists[1].is_empty(), "flush with a staged block");
+        emit_k.append(&mut self.lists[0]);
+        emit_p.append(&mut self.pays[0]);
+    }
+}
+
+/// Where a node (or the root) pulls pairs from.
+#[derive(Debug, Clone, Copy)]
+enum Input {
+    Leaf(usize),
+    Node(usize),
+}
+
+/// What an input looks like at staging time.
+#[derive(Debug, Clone, Copy)]
+enum Peek {
+    Key(u32),
+    Exhausted,
+    Pending,
+}
+
+/// A leaf: one input stream plus a ≤ R-pair pull buffer.
+struct LeafKvSource<'a> {
+    stream: Box<dyn SortedKvStream + 'a>,
+    keys: Vec<u32>,
+    pays: Vec<u64>,
+    pos: usize,
+    done: bool,
+}
+
+impl LeafKvSource<'_> {
+    fn avail(&self) -> usize {
+        self.keys.len() - self.pos
+    }
+
+    fn fill_to(&mut self, want: usize) -> Result<()> {
+        if self.done || self.avail() >= want {
+            return Ok(());
+        }
+        if self.pos > 0 {
+            self.keys.drain(..self.pos);
+            self.pays.drain(..self.pos);
+            self.pos = 0;
+        }
+        while self.keys.len() < want {
+            let got =
+                self.stream.next_chunk(want - self.keys.len(), &mut self.keys, &mut self.pays)?;
+            if got == 0 {
+                self.done = true;
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    fn head(&mut self) -> Result<Option<u32>> {
+        self.fill_to(1)?;
+        Ok(self.keys.get(self.pos).copied())
+    }
+
+    fn take(&mut self, max: usize, dst_k: &mut Vec<u32>, dst_p: &mut Vec<u64>) -> Result<usize> {
+        self.fill_to(max)?;
+        let n = max.min(self.avail());
+        dst_k.extend_from_slice(&self.keys[self.pos..self.pos + n]);
+        dst_p.extend_from_slice(&self.pays[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+/// One internal merge node: the KV block merger plus its bounded output
+/// FIFO (capacity 2R pairs, same deadlock-freedom argument as
+/// [`super::tree`]).
+struct NodeKv {
+    left: Input,
+    right: Input,
+    merger: BlockMerger2Kv,
+    out_k: Vec<u32>,
+    out_p: Vec<u64>,
+    start: usize,
+    done: bool,
+}
+
+impl NodeKv {
+    fn avail(&self) -> usize {
+        self.out_k.len() - self.start
+    }
+
+    fn head(&self) -> Option<u32> {
+        self.out_k.get(self.start).copied()
+    }
+
+    fn compact(&mut self) {
+        if self.start > 0 {
+            self.out_k.drain(..self.start);
+            self.out_p.drain(..self.start);
+            self.start = 0;
+        }
+    }
+
+    fn take(&mut self, max: usize, dst_k: &mut Vec<u32>, dst_p: &mut Vec<u64>) -> usize {
+        let n = max.min(self.avail());
+        dst_k.extend_from_slice(&self.out_k[self.start..self.start + n]);
+        dst_p.extend_from_slice(&self.out_p[self.start..self.start + n]);
+        self.start += n;
+        if self.start == self.out_k.len() {
+            self.out_k.clear();
+            self.out_p.clear();
+            self.start = 0;
+        }
+        n
+    }
+}
+
+/// One staged node step, recorded between staging and apply.
+struct Staged {
+    node: usize,
+    k: usize,
+    width: usize,
+}
+
+/// A k-way streaming key-value merge: [`SortedKvStream`] in,
+/// [`SortedKvStream`] out, O(k·R) resident pairs. The scheduler is
+/// [`super::tree::MergeTree`]'s, verbatim — children-first scan, refill
+/// rule with ties to the left, one ragged kernel batch per round — over
+/// the rank-then-permute kernel.
+pub struct MergeTreeKv<'a> {
+    r: usize,
+    kernel: BlockKernelKv,
+    leaves: Vec<LeafKvSource<'a>>,
+    nodes: Vec<NodeKv>,
+    root: Option<Input>,
+    staged: Vec<Staged>,
+    round_out_k: Vec<Vec<u32>>,
+    round_out_p: Vec<Vec<u64>>,
+    stats: TreeStats,
+}
+
+/// Balanced binary tree over `leaves[lo..hi)`, children pushed before
+/// parents so an index-order scan is children-first.
+fn build(lo: usize, hi: usize, nodes: &mut Vec<NodeKv>) -> Input {
+    if hi - lo == 1 {
+        return Input::Leaf(lo);
+    }
+    let mid = lo + (hi - lo) / 2;
+    let left = build(lo, mid, nodes);
+    let right = build(mid, hi, nodes);
+    nodes.push(NodeKv {
+        left,
+        right,
+        merger: BlockMerger2Kv::new(),
+        out_k: Vec::new(),
+        out_p: Vec::new(),
+        start: 0,
+        done: false,
+    });
+    Input::Node(nodes.len() - 1)
+}
+
+fn peek_input(nodes: &[NodeKv], leaves: &mut [LeafKvSource<'_>], inp: Input) -> Result<Peek> {
+    Ok(match inp {
+        Input::Leaf(l) => match leaves[l].head()? {
+            Some(x) => Peek::Key(x),
+            None => Peek::Exhausted,
+        },
+        Input::Node(c) => match nodes[c].head() {
+            Some(x) => Peek::Key(x),
+            None if nodes[c].done => Peek::Exhausted,
+            None => Peek::Pending,
+        },
+    })
+}
+
+impl<'a> MergeTreeKv<'a> {
+    /// Build a merge tree over `streams` with block size `r`. `k = 0`
+    /// yields an empty stream; `k = 1` passes the single input through.
+    pub fn new(streams: Vec<Box<dyn SortedKvStream + 'a>>, r: usize) -> Result<MergeTreeKv<'a>> {
+        Ok(Self::with_kernel(streams, BlockKernelKv::new(r)?))
+    }
+
+    /// Build a tree around an already-compiled kernel (sequential trees
+    /// of the same R hand it from tree to tree via [`Self::into_kernel`]).
+    pub fn with_kernel(
+        streams: Vec<Box<dyn SortedKvStream + 'a>>,
+        kernel: BlockKernelKv,
+    ) -> MergeTreeKv<'a> {
+        let leaves: Vec<LeafKvSource<'a>> = streams
+            .into_iter()
+            .map(|s| LeafKvSource {
+                stream: s,
+                keys: Vec::new(),
+                pays: Vec::new(),
+                pos: 0,
+                done: false,
+            })
+            .collect();
+        let mut nodes = Vec::new();
+        let root = match leaves.len() {
+            0 => None,
+            n => Some(build(0, n, &mut nodes)),
+        };
+        MergeTreeKv {
+            r: kernel.r(),
+            kernel,
+            leaves,
+            nodes,
+            root,
+            staged: Vec::new(),
+            round_out_k: Vec::new(),
+            round_out_p: Vec::new(),
+            stats: TreeStats::default(),
+        }
+    }
+
+    /// Tear the tree down, recovering the kernel for the next tree.
+    pub fn into_kernel(self) -> BlockKernelKv {
+        self.kernel
+    }
+
+    pub fn stats(&self) -> TreeStats {
+        self.stats
+    }
+
+    /// Block size R.
+    pub fn r(&self) -> usize {
+        self.r
+    }
+
+    /// One scheduling round — [`super::tree::MergeTree::pump_round`]
+    /// with the payload columns carried beside every key buffer.
+    fn pump_round(&mut self) -> Result<bool> {
+        let r = self.r;
+        let cap = 2 * r;
+        let MergeTreeKv { kernel, leaves, nodes, staged, round_out_k, round_out_p, stats, .. } =
+            self;
+        staged.clear();
+        let mut flushed = false;
+        for n in 0..nodes.len() {
+            if nodes[n].done {
+                continue;
+            }
+            nodes[n].compact();
+            if cap - nodes[n].avail() < r {
+                continue; // output backpressure: wait for the parent
+            }
+            let (li, ri) = (nodes[n].left, nodes[n].right);
+            let pl = peek_input(nodes, leaves, li)?;
+            let pr = peek_input(nodes, leaves, ri)?;
+            // The refill rule: take the next block from the input whose
+            // head is smaller (ties to the left; exhausted = +∞).
+            let (chosen, other_head) = match (pl, pr) {
+                (Peek::Pending, _) | (_, Peek::Pending) => continue,
+                (Peek::Exhausted, Peek::Exhausted) => {
+                    let node = &mut nodes[n];
+                    let NodeKv { merger, out_k, out_p, done, .. } = node;
+                    merger.flush(out_k, out_p);
+                    *done = true;
+                    stats.flushes += 1;
+                    flushed = true;
+                    continue;
+                }
+                (Peek::Key(x), Peek::Key(y)) => {
+                    if x <= y {
+                        (li, Some(y))
+                    } else {
+                        (ri, Some(x))
+                    }
+                }
+                (Peek::Key(_), Peek::Exhausted) => (li, None),
+                (Peek::Exhausted, Peek::Key(_)) => (ri, None),
+            };
+            let taken = match chosen {
+                Input::Leaf(l) => {
+                    let node = &mut nodes[n];
+                    let (bk, bp) = node.merger.stage_bufs();
+                    leaves[l].take(r, bk, bp)?
+                }
+                Input::Node(c) => {
+                    // Children index below parents (post-order build).
+                    let (head, tail) = nodes.split_at_mut(n);
+                    let (bk, bp) = tail[0].merger.stage_bufs();
+                    head[c].take(r, bk, bp)
+                }
+            };
+            debug_assert!(taken >= 1, "chosen input had a peeked key");
+            let k = nodes[n].merger.emit_count(other_head);
+            let width = nodes[n].merger.width();
+            staged.push(Staged { node: n, k, width });
+        }
+        if staged.is_empty() {
+            return Ok(flushed);
+        }
+        // One ragged kernel batch over every staged node step.
+        if round_out_k.len() < staged.len() {
+            round_out_k.resize_with(staged.len(), Vec::new);
+            round_out_p.resize_with(staged.len(), Vec::new);
+        }
+        for (s, st) in staged.iter().enumerate() {
+            round_out_k[s].clear();
+            round_out_k[s].resize(st.width, 0);
+            round_out_p[s].clear();
+            round_out_p[s].resize(st.width, 0);
+        }
+        let rows: Vec<&[Vec<u32>]> =
+            staged.iter().map(|st| nodes[st.node].merger.lists()).collect();
+        let pay_rows: Vec<[&[u64]; 2]> =
+            staged.iter().map(|st| nodes[st.node].merger.pay_slices()).collect();
+        let mut out_keys: Vec<&mut [u32]> =
+            round_out_k[..staged.len()].iter_mut().map(|v| v.as_mut_slice()).collect();
+        let mut out_pays: Vec<&mut [u64]> =
+            round_out_p[..staged.len()].iter_mut().map(|v| v.as_mut_slice()).collect();
+        kernel.merge_rows(&rows, &pay_rows, &mut out_keys, &mut out_pays);
+        stats.kernel_batches += 1;
+        stats.kernel_rows += staged.len() as u64;
+        for (s, st) in staged.iter().enumerate() {
+            let NodeKv { merger, out_k, out_p, .. } = &mut nodes[st.node];
+            merger.apply(&round_out_k[s], &round_out_p[s], st.k, out_k, out_p);
+        }
+        Ok(true)
+    }
+}
+
+impl SortedKvStream for MergeTreeKv<'_> {
+    fn next_chunk(
+        &mut self,
+        max: usize,
+        keys: &mut Vec<u32>,
+        pays: &mut Vec<u64>,
+    ) -> Result<usize> {
+        let Some(root) = self.root else { return Ok(0) };
+        match root {
+            // k = 1: pass the single stream through its leaf buffer.
+            Input::Leaf(l) => self.leaves[l].take(max, keys, pays),
+            Input::Node(ri) => loop {
+                let n = self.nodes[ri].take(max, keys, pays);
+                if n > 0 {
+                    return Ok(n);
+                }
+                if self.nodes[ri].done {
+                    return Ok(0);
+                }
+                if !self.pump_round()? {
+                    // Unreachable by construction — fail loudly rather
+                    // than spin (same argument as the key-only tree).
+                    bail!("streaming KV merge tree stalled");
+                }
+            },
+        }
+    }
+}
+
+/// Merge k sorted key-value streams into owned columns.
+pub fn merge_k_kv<'a>(
+    streams: Vec<Box<dyn SortedKvStream + 'a>>,
+    r: usize,
+) -> Result<(Vec<u32>, Vec<u64>)> {
+    let mut tree = MergeTreeKv::new(streams, r)?;
+    let mut keys = Vec::new();
+    let mut pays = Vec::new();
+    while tree.next_chunk(DRAIN, &mut keys, &mut pays)? > 0 {}
+    Ok((keys, pays))
+}
+
+/// Merge in-memory sorted key-value runs.
+pub fn merge_runs_kv(runs: &[(Vec<u32>, Vec<u64>)], r: usize) -> Result<(Vec<u32>, Vec<u64>)> {
+    let streams: Vec<Box<dyn SortedKvStream + '_>> =
+        runs.iter().map(|(k, p)| boxed_kv(SliceKvStream::new(k, p))).collect();
+    merge_k_kv(streams, r)
+}
+
+/// LE-encode `(key, payload)` records into the reusable `bytes` buffer.
+fn encode_records(keys: &[u32], pays: &[u64], bytes: &mut Vec<u8>) {
+    debug_assert_eq!(keys.len(), pays.len());
+    bytes.clear();
+    bytes.reserve(keys.len() * REC_BYTES as usize);
+    for (&k, &p) in keys.iter().zip(pays) {
+        bytes.extend_from_slice(&k.to_le_bytes());
+        bytes.extend_from_slice(&p.to_le_bytes());
+    }
+}
+
+/// Monotonic KV spill-file id (pid keeps parallel processes apart).
+fn next_spill_path(dir: &Path) -> PathBuf {
+    static NEXT: AtomicU64 = AtomicU64::new(0);
+    let id = NEXT.fetch_add(1, Ordering::Relaxed);
+    dir.join(format!("loms-kvspill-{}-{id}.kv12", std::process::id()))
+}
+
+/// Append-only writer for a spill file of back-to-back sorted KV runs.
+struct SpillWriterKv {
+    w: BufWriter<File>,
+    path: PathBuf,
+    runs: Vec<(u64, u64)>,
+    /// Records written so far.
+    pos: u64,
+    cur: Option<u64>,
+    bytes: Vec<u8>,
+}
+
+impl SpillWriterKv {
+    fn create(path: PathBuf) -> Result<SpillWriterKv> {
+        let f = File::create(&path)
+            .with_context(|| format!("creating KV spill file {}", path.display()))?;
+        Ok(SpillWriterKv {
+            w: BufWriter::new(f),
+            path,
+            runs: Vec::new(),
+            pos: 0,
+            cur: None,
+            bytes: Vec::new(),
+        })
+    }
+
+    fn begin_run(&mut self) {
+        debug_assert!(self.cur.is_none());
+        self.cur = Some(self.pos);
+    }
+
+    fn write_records(&mut self, keys: &[u32], pays: &[u64]) -> Result<()> {
+        encode_records(keys, pays, &mut self.bytes);
+        self.w.write_all(&self.bytes)?;
+        self.pos += keys.len() as u64;
+        Ok(())
+    }
+
+    fn end_run(&mut self) {
+        let start = self.cur.take().expect("end_run without begin_run");
+        self.runs.push((start, self.pos - start));
+    }
+
+    fn push_run(&mut self, keys: &[u32], pays: &[u64]) -> Result<()> {
+        self.begin_run();
+        self.write_records(keys, pays)?;
+        self.end_run();
+        Ok(())
+    }
+
+    fn finish(mut self) -> Result<(PathBuf, Vec<(u64, u64)>)> {
+        self.w.flush()?;
+        Ok((self.path, self.runs))
+    }
+}
+
+/// Where the current generation of KV runs lives.
+enum RunStoreKv {
+    Mem(Vec<(Vec<u32>, Vec<u64>)>),
+    File { path: PathBuf, runs: Vec<(u64, u64)> },
+}
+
+impl RunStoreKv {
+    fn count(&self) -> usize {
+        match self {
+            RunStoreKv::Mem(runs) => runs.len(),
+            RunStoreKv::File { runs, .. } => runs.len(),
+        }
+    }
+
+    fn open(&self, lo: usize, hi: usize) -> Result<Vec<Box<dyn SortedKvStream + '_>>> {
+        match self {
+            RunStoreKv::Mem(runs) => Ok(runs[lo..hi]
+                .iter()
+                .map(|(k, p)| boxed_kv(SliceKvStream::new(k, p)))
+                .collect()),
+            RunStoreKv::File { path, runs } => runs[lo..hi]
+                .iter()
+                .map(|&(start, len)| Ok(boxed_kv(FileRunKvStream::open(path, start, len)?)))
+                .collect(),
+        }
+    }
+
+    fn cleanup(self) {
+        if let RunStoreKv::File { path, .. } = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// Sort one run's pairs **stably** by key (duplicate keys keep their
+/// arrival order, matching the rank-then-permute merge semantics).
+fn sort_run(keys: &[u32], pays: &[u64]) -> (Vec<u32>, Vec<u64>) {
+    let mut pairs: Vec<(u32, u64)> =
+        keys.iter().copied().zip(pays.iter().copied()).collect();
+    pairs.sort_by_key(|&(k, _)| k);
+    (pairs.iter().map(|&(k, _)| k).collect(), pairs.iter().map(|&(_, p)| p).collect())
+}
+
+fn drain_to_vecs(
+    mut tree: MergeTreeKv<'_>,
+    keys: &mut Vec<u32>,
+    pays: &mut Vec<u64>,
+) -> Result<BlockKernelKv> {
+    while tree.next_chunk(DRAIN, keys, pays)? > 0 {}
+    Ok(tree.into_kernel())
+}
+
+/// One intermediate KV pass: merge groups of `max_fanin` runs into the
+/// next generation (memory→memory or spill→spill).
+fn merge_pass_kv(
+    store: RunStoreKv,
+    cfg: &ExtSortConfig,
+    stats: &mut ExtSortStats,
+    mut kernel: BlockKernelKv,
+) -> Result<(RunStoreKv, BlockKernelKv)> {
+    let count = store.count();
+    let next = match &store {
+        RunStoreKv::Mem(_) => {
+            let mut runs = Vec::with_capacity(count.div_ceil(cfg.max_fanin));
+            let mut lo = 0;
+            while lo < count {
+                let hi = (lo + cfg.max_fanin).min(count);
+                let (mut rk, mut rp) = (Vec::new(), Vec::new());
+                let tree = MergeTreeKv::with_kernel(store.open(lo, hi)?, kernel);
+                kernel = drain_to_vecs(tree, &mut rk, &mut rp)?;
+                runs.push((rk, rp));
+                lo = hi;
+            }
+            RunStoreKv::Mem(runs)
+        }
+        RunStoreKv::File { path, .. } => {
+            let dir = path.parent().map(Path::to_path_buf).unwrap_or_else(|| PathBuf::from("."));
+            let mut w = SpillWriterKv::create(next_spill_path(&dir))?;
+            let (mut ck, mut cp) = (Vec::with_capacity(DRAIN), Vec::with_capacity(DRAIN));
+            let mut lo = 0;
+            while lo < count {
+                let hi = (lo + cfg.max_fanin).min(count);
+                let mut tree = MergeTreeKv::with_kernel(store.open(lo, hi)?, kernel);
+                w.begin_run();
+                loop {
+                    ck.clear();
+                    cp.clear();
+                    if tree.next_chunk(DRAIN, &mut ck, &mut cp)? == 0 {
+                        break;
+                    }
+                    w.write_records(&ck, &cp)?;
+                }
+                w.end_run();
+                kernel = tree.into_kernel();
+                lo = hi;
+            }
+            let (path, runs) = w.finish()?;
+            stats.spilled_runs += runs.len();
+            stats.spill_bytes += runs.iter().map(|&(_, len)| len * REC_BYTES).sum::<u64>();
+            RunStoreKv::File { path, runs }
+        }
+    };
+    store.cleanup();
+    Ok((next, kernel))
+}
+
+/// External key-value sort: form stable runs, optionally spill them as
+/// 12-byte records, merge pass by pass through [`MergeTreeKv`], stream
+/// the final k-way merge into owned columns. Each payload is moved by
+/// I/O and the per-row permutation gather only — never by a
+/// compare-exchange.
+pub fn extsort_kv(
+    keys: &[u32],
+    pays: &[u64],
+    cfg: &ExtSortConfig,
+) -> Result<(Vec<u32>, Vec<u64>, ExtSortStats)> {
+    anyhow::ensure!(keys.len() == pays.len(), "key/payload columns differ in length");
+    anyhow::ensure!(cfg.run_len >= 1, "run_len must be >= 1");
+    anyhow::ensure!(cfg.max_fanin >= 2, "max_fanin must be >= 2");
+    let mut kernel = BlockKernelKv::new(cfg.r)?;
+    let mut stats = ExtSortStats { keys: keys.len(), ..Default::default() };
+    if keys.is_empty() {
+        return Ok((Vec::new(), Vec::new(), stats));
+    }
+    let mut store = match &cfg.spill_dir {
+        None => {
+            let runs: Vec<(Vec<u32>, Vec<u64>)> = keys
+                .chunks(cfg.run_len)
+                .zip(pays.chunks(cfg.run_len))
+                .map(|(ck, cp)| sort_run(ck, cp))
+                .collect();
+            RunStoreKv::Mem(runs)
+        }
+        Some(dir) => {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating spill dir {}", dir.display()))?;
+            let mut w = SpillWriterKv::create(next_spill_path(dir))?;
+            for (ck, cp) in keys.chunks(cfg.run_len).zip(pays.chunks(cfg.run_len)) {
+                let (rk, rp) = sort_run(ck, cp);
+                w.push_run(&rk, &rp)?;
+            }
+            let (path, runs) = w.finish()?;
+            stats.spilled_runs += runs.len();
+            stats.spill_bytes += REC_BYTES * keys.len() as u64;
+            RunStoreKv::File { path, runs }
+        }
+    };
+    stats.runs = store.count();
+    while store.count() > cfg.max_fanin {
+        (store, kernel) = merge_pass_kv(store, cfg, &mut stats, kernel)?;
+        stats.merge_passes += 1;
+    }
+    let (mut out_k, mut out_p) =
+        (Vec::with_capacity(keys.len()), Vec::with_capacity(keys.len()));
+    drain_to_vecs(
+        MergeTreeKv::with_kernel(store.open(0, store.count())?, kernel),
+        &mut out_k,
+        &mut out_p,
+    )?;
+    store.cleanup();
+    Ok((out_k, out_p, stats))
+}
+
+/// Sort a file of 12-byte little-endian `(u32 key, u64 payload)`
+/// records into `output` in bounded memory — the key-value twin of
+/// [`super::extsort::extsort_file`]. Backs `loms sort --payload`.
+pub fn extsort_kv_file(input: &Path, output: &Path, cfg: &ExtSortConfig) -> Result<ExtSortStats> {
+    anyhow::ensure!(cfg.run_len >= 1, "run_len must be >= 1");
+    anyhow::ensure!(cfg.max_fanin >= 2, "max_fanin must be >= 2");
+    let mut kernel = BlockKernelKv::new(cfg.r)?;
+    let bytes = std::fs::metadata(input)
+        .with_context(|| format!("stat {}", input.display()))?
+        .len();
+    anyhow::ensure!(
+        bytes % REC_BYTES == 0,
+        "{}: not a whole number of 12-byte key-value records",
+        input.display()
+    );
+    let total = bytes / REC_BYTES;
+    let mut stats = ExtSortStats { keys: total as usize, ..Default::default() };
+    let dir = cfg
+        .spill_dir
+        .clone()
+        .or_else(|| output.parent().map(Path::to_path_buf).filter(|p| !p.as_os_str().is_empty()))
+        .unwrap_or_else(|| PathBuf::from("."));
+    std::fs::create_dir_all(&dir)
+        .with_context(|| format!("creating spill dir {}", dir.display()))?;
+    // Phase 1: read run_len-record windows, stable-sort, spill.
+    let mut store = {
+        let mut rd = BufReader::new(
+            File::open(input).with_context(|| format!("opening {}", input.display()))?,
+        );
+        let mut w = SpillWriterKv::create(next_spill_path(&dir))?;
+        let mut buf = vec![0u8; cfg.run_len * REC_BYTES as usize];
+        let mut remaining = total;
+        while remaining > 0 {
+            let n = (cfg.run_len as u64).min(remaining) as usize;
+            rd.read_exact(&mut buf[..n * REC_BYTES as usize]).context("reading input records")?;
+            let (mut ck, mut cp) = (Vec::with_capacity(n), Vec::with_capacity(n));
+            for rec in buf[..n * REC_BYTES as usize].chunks_exact(REC_BYTES as usize) {
+                ck.push(u32::from_le_bytes([rec[0], rec[1], rec[2], rec[3]]));
+                cp.push(u64::from_le_bytes([
+                    rec[4], rec[5], rec[6], rec[7], rec[8], rec[9], rec[10], rec[11],
+                ]));
+            }
+            let (rk, rp) = sort_run(&ck, &cp);
+            w.push_run(&rk, &rp)?;
+            remaining -= n as u64;
+        }
+        let (path, runs) = w.finish()?;
+        stats.spilled_runs += runs.len();
+        stats.spill_bytes += bytes;
+        RunStoreKv::File { path, runs }
+    };
+    stats.runs = store.count();
+    while store.count() > cfg.max_fanin {
+        (store, kernel) = merge_pass_kv(store, cfg, &mut stats, kernel)?;
+        stats.merge_passes += 1;
+    }
+    // Phase 3: stream the final merge straight into the output file.
+    {
+        let mut w = BufWriter::new(
+            File::create(output).with_context(|| format!("creating {}", output.display()))?,
+        );
+        let mut tree = MergeTreeKv::with_kernel(store.open(0, store.count())?, kernel);
+        let (mut ck, mut cp) = (Vec::with_capacity(DRAIN), Vec::with_capacity(DRAIN));
+        let mut out_bytes = Vec::new();
+        loop {
+            ck.clear();
+            cp.clear();
+            if tree.next_chunk(DRAIN, &mut ck, &mut cp)? == 0 {
+                break;
+            }
+            encode_records(&ck, &cp, &mut out_bytes);
+            w.write_all(&out_bytes)?;
+        }
+        w.flush()?;
+    }
+    store.cleanup();
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Full-discrimination oracle: merged keys equal the sorted key
+    /// concat AND the (key, payload) pair multiset is preserved — with
+    /// globally unique payloads this proves every duplicate key carried
+    /// exactly the payload it arrived with.
+    fn check_kv(got_k: &[u32], got_p: &[u64], inputs: &[(Vec<u32>, Vec<u64>)]) {
+        let mut want_k: Vec<u32> =
+            inputs.iter().flat_map(|(k, _)| k.iter().copied()).collect();
+        want_k.sort_unstable();
+        assert_eq!(got_k, want_k.as_slice(), "merged keys");
+        assert_eq!(got_k.len(), got_p.len(), "column widths");
+        let mut got_pairs: Vec<(u32, u64)> =
+            got_k.iter().copied().zip(got_p.iter().copied()).collect();
+        let mut want_pairs: Vec<(u32, u64)> = inputs
+            .iter()
+            .flat_map(|(k, p)| k.iter().copied().zip(p.iter().copied()))
+            .collect();
+        got_pairs.sort_unstable();
+        want_pairs.sort_unstable();
+        assert_eq!(got_pairs, want_pairs, "(key, payload) pair multiset");
+    }
+
+    /// Random sorted keys with globally unique payload tags.
+    fn tagged_run(rng: &mut Rng, len: usize, max: u32, tag: u64) -> (Vec<u32>, Vec<u64>) {
+        let keys = rng.sorted_list(len, max);
+        let pays = (0..keys.len() as u64).map(|i| (tag << 32) | i).collect();
+        (keys, pays)
+    }
+
+    #[test]
+    fn kernel_merges_pairs_with_payloads_intact() {
+        let mut kern = BlockKernelKv::new(8).unwrap();
+        assert_eq!(kern.r(), 8);
+        assert!(kern.device_name().contains("loms"));
+        let mut rng = Rng::new(0x1257);
+        for case in 0..40 {
+            // Duplicate-heavy small key domain every few cases.
+            let max = if case % 3 == 0 { 6 } else { 1 << 20 };
+            let (ak, ap) = tagged_run(&mut rng, rng.range(0, 9), max, 1);
+            let (bk, bp) = tagged_run(&mut rng, rng.range(0, 9), max, 2);
+            let lists = [ak.clone(), bk.clone()];
+            let width = ak.len() + bk.len();
+            let mut out_k = vec![0u32; width];
+            let mut out_p = vec![0u64; width];
+            kern.merge_rows(
+                &[&lists],
+                &[[&ap, &bp]],
+                &mut [&mut out_k[..]],
+                &mut [&mut out_p[..]],
+            );
+            check_kv(&out_k, &out_p, &[(ak.clone(), ap.clone()), (bk.clone(), bp.clone())]);
+            // The node merge is stable: equal keys emit list 0 first,
+            // each list in arrival order — exactly a stable sort of the
+            // zipped concat.
+            let mut pairs: Vec<(u32, u64)> = ak
+                .iter()
+                .copied()
+                .zip(ap.iter().copied())
+                .chain(bk.iter().copied().zip(bp.iter().copied()))
+                .collect();
+            pairs.sort_by_key(|&(k, _)| k);
+            let want_p: Vec<u64> = pairs.iter().map(|&(_, p)| p).collect();
+            assert_eq!(out_p, want_p, "case {case}: stable payload order");
+        }
+    }
+
+    #[test]
+    fn kernel_batches_independent_rows() {
+        let mut kern = BlockKernelKv::new(4).unwrap();
+        let mut rng = Rng::new(0xBA7D);
+        let n_rows = crate::sortnet::lanes::LANES + 5;
+        let pairs: Vec<[(Vec<u32>, Vec<u64>); 2]> = (0..n_rows)
+            .map(|i| {
+                [
+                    tagged_run(&mut rng, rng.range(0, 5), 100, 2 * i as u64),
+                    tagged_run(&mut rng, rng.range(1, 5), 100, 2 * i as u64 + 1),
+                ]
+            })
+            .collect();
+        let key_rows: Vec<[Vec<u32>; 2]> =
+            pairs.iter().map(|p| [p[0].0.clone(), p[1].0.clone()]).collect();
+        let rows: Vec<&[Vec<u32>]> = key_rows.iter().map(|p| &p[..]).collect();
+        let pay_rows: Vec<[&[u64]; 2]> =
+            pairs.iter().map(|p| [p[0].1.as_slice(), p[1].1.as_slice()]).collect();
+        let widths: Vec<usize> = pairs.iter().map(|p| p[0].0.len() + p[1].0.len()).collect();
+        let mut out_k: Vec<Vec<u32>> = widths.iter().map(|&w| vec![0u32; w]).collect();
+        let mut out_p: Vec<Vec<u64>> = widths.iter().map(|&w| vec![0u64; w]).collect();
+        let mut key_outs: Vec<&mut [u32]> = out_k.iter_mut().map(|v| v.as_mut_slice()).collect();
+        let mut pay_outs: Vec<&mut [u64]> = out_p.iter_mut().map(|v| v.as_mut_slice()).collect();
+        kern.merge_rows(&rows, &pay_rows, &mut key_outs, &mut pay_outs);
+        for (i, p) in pairs.iter().enumerate() {
+            check_kv(&out_k[i], &out_p[i], &[p[0].clone(), p[1].clone()]);
+        }
+    }
+
+    #[test]
+    fn max_value_keys_are_legal() {
+        // Unlike the serving path, u32::MAX is a legal stream key: it
+        // packs below the u64::MAX pad because origins stay small.
+        let mut kern = BlockKernelKv::new(4).unwrap();
+        let ak = vec![1, u32::MAX - 1, u32::MAX];
+        let ap = vec![10, 11, 12];
+        let bk = vec![u32::MAX - 1, u32::MAX];
+        let bp = vec![20, 21];
+        let lists = [ak.clone(), bk.clone()];
+        let mut out_k = vec![0u32; 5];
+        let mut out_p = vec![0u64; 5];
+        kern.merge_rows(&[&lists], &[[&ap, &bp]], &mut [&mut out_k[..]], &mut [&mut out_p[..]]);
+        assert_eq!(out_k, vec![1, u32::MAX - 1, u32::MAX - 1, u32::MAX, u32::MAX]);
+        assert_eq!(out_p, vec![10, 11, 20, 12, 21]);
+    }
+
+    #[test]
+    fn merge_runs_matches_oracle_across_k_and_r() {
+        let mut rng = Rng::new(0x7EF);
+        for &k in &[2usize, 3, 5, 8, 17] {
+            for &r in &[2usize, 8, 32] {
+                let runs: Vec<(Vec<u32>, Vec<u64>)> = (0..k)
+                    .map(|i| tagged_run(&mut rng, rng.range(0, 300), 5000, i as u64))
+                    .collect();
+                let (gk, gp) = merge_runs_kv(&runs, r).unwrap();
+                check_kv(&gk, &gp, &runs);
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_k() {
+        let (k0, p0) = merge_k_kv(vec![], 8).unwrap();
+        assert!(k0.is_empty() && p0.is_empty());
+        let one: Vec<Box<dyn SortedKvStream>> =
+            vec![boxed_kv(VecKvStream::new(vec![3, 4, 5], vec![30, 40, 50]))];
+        assert_eq!(merge_k_kv(one, 8).unwrap(), (vec![3, 4, 5], vec![30, 40, 50]));
+        let runs = vec![(vec![], vec![]), (vec![], vec![])];
+        let (k2, p2) = merge_runs_kv(&runs, 8).unwrap();
+        assert!(k2.is_empty() && p2.is_empty());
+    }
+
+    #[test]
+    fn trees_compose_as_streams() {
+        let mut rng = Rng::new(0xC1);
+        let inner_runs: Vec<(Vec<u32>, Vec<u64>)> =
+            (0..3).map(|i| tagged_run(&mut rng, 100, 1000, i as u64)).collect();
+        let outer_run = tagged_run(&mut rng, 150, 1000, 99);
+        let inner_streams: Vec<Box<dyn SortedKvStream + '_>> = inner_runs
+            .iter()
+            .map(|(k, p)| boxed_kv(SliceKvStream::new(k, p)))
+            .collect();
+        let inner = MergeTreeKv::new(inner_streams, 8).unwrap();
+        let outer: Vec<Box<dyn SortedKvStream + '_>> = vec![
+            boxed_kv(inner),
+            boxed_kv(SliceKvStream::new(&outer_run.0, &outer_run.1)),
+        ];
+        let (gk, gp) = merge_k_kv(outer, 8).unwrap();
+        let mut all = inner_runs;
+        all.push(outer_run);
+        check_kv(&gk, &gp, &all);
+    }
+
+    #[test]
+    fn stats_count_batched_rows() {
+        let mut rng = Rng::new(0x91);
+        let runs: Vec<(Vec<u32>, Vec<u64>)> =
+            (0..17).map(|i| tagged_run(&mut rng, 500, 1 << 20, i as u64)).collect();
+        let streams: Vec<Box<dyn SortedKvStream + '_>> = runs
+            .iter()
+            .map(|(k, p)| boxed_kv(SliceKvStream::new(k, p)))
+            .collect();
+        let mut tree = MergeTreeKv::new(streams, 8).unwrap();
+        let (mut gk, mut gp) = (Vec::new(), Vec::new());
+        while tree.next_chunk(DRAIN, &mut gk, &mut gp).unwrap() > 0 {}
+        check_kv(&gk, &gp, &runs);
+        let st = tree.stats();
+        assert!(st.kernel_rows > st.kernel_batches, "rounds batch multiple nodes: {st:?}");
+        assert_eq!(st.flushes, 16, "every internal node flushes once");
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("loms_kvsort_{tag}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn in_memory_kv_sort_matches_stable_std() {
+        let mut rng = Rng::new(0xE6);
+        let keys: Vec<u32> = (0..10_000).map(|_| rng.next_u32() % 997).collect();
+        let pays: Vec<u64> = (0..keys.len() as u64).collect();
+        let cfg = ExtSortConfig { run_len: 700, r: 8, ..Default::default() };
+        let (gk, gp, stats) = extsort_kv(&keys, &pays, &cfg).unwrap();
+        check_kv(&gk, &gp, &[(keys, pays)]);
+        assert_eq!(stats.runs, 10_000usize.div_ceil(700));
+        assert_eq!(stats.merge_passes, 0);
+        assert_eq!(stats.spilled_runs, 0);
+        assert_eq!(gp.len(), gk.len());
+    }
+
+    #[test]
+    fn multi_pass_spill_kv_sort_round_trips() {
+        let dir = tmp_dir("multipass");
+        let mut rng = Rng::new(0x5112);
+        let mut keys: Vec<u32> = (0..20_000).map(|_| rng.next_u32()).collect();
+        keys.extend([u32::MAX, u32::MAX - 1, u32::MAX]); // full domain legal
+        let pays: Vec<u64> = (0..keys.len() as u64).map(|i| i ^ 0xDEAD_BEEF).collect();
+        let cfg = ExtSortConfig {
+            run_len: 512,
+            r: 8,
+            max_fanin: 3,
+            spill_dir: Some(dir.clone()),
+        };
+        let (gk, gp, stats) = extsort_kv(&keys, &pays, &cfg).unwrap();
+        check_kv(&gk, &gp, &[(keys, pays)]);
+        assert!(stats.merge_passes >= 2, "fanin 3 over {} runs: {stats:?}", stats.runs);
+        assert!(stats.spilled_runs > stats.runs, "intermediate runs spilled too");
+        assert!(stats.spill_bytes > 0);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn file_to_file_kv_round_trip() {
+        let dir = tmp_dir("file");
+        std::fs::create_dir_all(&dir).unwrap();
+        let input = dir.join("input.kv12");
+        let output = dir.join("sorted.kv12");
+        let mut rng = Rng::new(0xF17F);
+        let keys: Vec<u32> = (0..5_000).map(|_| rng.next_u32() % 4099).collect();
+        let pays: Vec<u64> = (0..keys.len() as u64).collect();
+        let mut bytes = Vec::new();
+        encode_records(&keys, &pays, &mut bytes);
+        std::fs::write(&input, &bytes).unwrap();
+        let cfg = ExtSortConfig {
+            run_len: 333,
+            r: 8,
+            max_fanin: 4,
+            spill_dir: Some(dir.clone()),
+        };
+        let stats = extsort_kv_file(&input, &output, &cfg).unwrap();
+        assert_eq!(stats.keys, keys.len());
+        assert!(stats.merge_passes >= 1);
+        let out = std::fs::read(&output).unwrap();
+        let (mut gk, mut gp) = (Vec::new(), Vec::new());
+        for rec in out.chunks_exact(12) {
+            gk.push(u32::from_le_bytes([rec[0], rec[1], rec[2], rec[3]]));
+            gp.push(u64::from_le_bytes([
+                rec[4], rec[5], rec[6], rec[7], rec[8], rec[9], rec[10], rec[11],
+            ]));
+        }
+        check_kv(&gk, &gp, &[(keys, pays)]);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn file_run_kv_stream_reads_its_window() {
+        let dir = tmp_dir("window");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("runs.kv12");
+        let keys: Vec<u32> = (0..50).map(|x| x * 3).collect();
+        let pays: Vec<u64> = (0..50).map(|x| x * 7).collect();
+        let mut bytes = Vec::new();
+        encode_records(&keys, &pays, &mut bytes);
+        std::fs::write(&path, &bytes).unwrap();
+        let mut a = FileRunKvStream::open(&path, 0, 20).unwrap();
+        let mut b = FileRunKvStream::open(&path, 20, 30).unwrap();
+        let (mut ak, mut ap) = (Vec::new(), Vec::new());
+        while a.next_chunk(7, &mut ak, &mut ap).unwrap() > 0 {}
+        assert_eq!(ak, keys[..20]);
+        assert_eq!(ap, pays[..20]);
+        let (mut bk, mut bp) = (Vec::new(), Vec::new());
+        while b.next_chunk(9, &mut bk, &mut bp).unwrap() > 0 {}
+        assert_eq!(bk, keys[20..]);
+        assert_eq!(bp, pays[20..]);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn degenerate_sorts() {
+        let cfg = ExtSortConfig { r: 4, ..Default::default() };
+        let (k, p, _) = extsort_kv(&[], &[], &cfg).unwrap();
+        assert!(k.is_empty() && p.is_empty());
+        let (k, p, _) = extsort_kv(&[9], &[90], &cfg).unwrap();
+        assert_eq!((k, p), (vec![9], vec![90]));
+        // Mismatched columns rejected up front.
+        assert!(extsort_kv(&[1, 2], &[1], &cfg).is_err());
+    }
+}

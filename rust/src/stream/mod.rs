@@ -22,13 +22,23 @@
 //!   sorts arbitrarily large inputs (in-memory slices or files of
 //!   little-endian `u32` keys) in bounded memory. Backs the `loms sort`
 //!   CLI and replaces the planner's scalar heap as its phase-3 engine.
+//! * [`kv`] — the key-value twin of the whole stack: every key carries
+//!   a `u64` payload that never enters a compare-exchange. Keys run the
+//!   rank-then-permute lowering (packed with origin ranks through the
+//!   unmodified CAS stream); the emitted permutation gathers each
+//!   payload column once per node step.
 
 pub mod extsort;
+pub mod kv;
 pub mod merge2;
 pub mod source;
 pub mod tree;
 
 pub use extsort::{extsort, extsort_file, extsort_with, ExtSortConfig, ExtSortStats, RunFormer};
+pub use kv::{
+    boxed_kv, extsort_kv, extsort_kv_file, merge_k_kv, merge_runs_kv, BlockKernelKv,
+    BlockMerger2Kv, FileRunKvStream, MergeTreeKv, SliceKvStream, SortedKvStream, VecKvStream,
+};
 pub use merge2::{BlockKernel, BlockMerger2};
 pub use source::{boxed, FileRunStream, IterStream, SliceStream, SortedStream, VecStream};
 pub use tree::{merge_k, merge_runs, MergeTree, TreeStats, DEFAULT_R};

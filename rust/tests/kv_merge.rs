@@ -1,0 +1,195 @@
+//! Key-value oracle suite: duplicate keys must carry the *right*
+//! payloads through every layer of the rank-then-permute lowering —
+//! backend tile execution, the merge service (tile route and software
+//! fallback), the streaming engines, and the v1.1 wire. The serving
+//! layers additionally promise stability — equal keys emit in
+//! list-major arrival order, so the payload column equals a stable
+//! `sort_by_key` of the zipped list-major concatenation — while the
+//! streaming tree promises pair integrity (see [`check_pairs`]).
+//!
+//! Payload tags are globally unique per test, so a single swapped pair
+//! anywhere in the permutation is a hard mismatch, not a coin flip.
+
+use loms::coordinator::{Backend, MergeService, ServiceConfig, SoftwareBackend};
+use loms::net::{NetClient, NetServer, NetServerConfig};
+use loms::stream::{self, ExtSortConfig};
+use loms::util::Rng;
+
+/// Stable oracle: zip the list-major concatenation with its payload
+/// column and stable-sort by key.
+fn stable_oracle(lists: &[Vec<u32>], pays: &[u64]) -> (Vec<u32>, Vec<u64>) {
+    let concat: Vec<u32> = lists.concat();
+    assert_eq!(concat.len(), pays.len(), "test bug: payload column width");
+    let mut pairs: Vec<(u32, u64)> = concat.into_iter().zip(pays.iter().copied()).collect();
+    pairs.sort_by_key(|&(k, _)| k);
+    pairs.into_iter().unzip()
+}
+
+/// Duplicate-heavy ragged lists (tiny key domain) plus a globally
+/// unique payload per key: `(salt << 32) | ordinal`.
+fn dup_workload(rng: &mut Rng, k: usize, max_len: usize, salt: u64) -> (Vec<Vec<u32>>, Vec<u64>) {
+    let lists: Vec<Vec<u32>> =
+        (0..k).map(|_| rng.sorted_list_ragged(0, max_len + 1, 7)).collect();
+    let total: usize = lists.iter().map(Vec::len).sum();
+    let pays: Vec<u64> = (0..total as u64).map(|t| (salt << 32) | t).collect();
+    (lists, pays)
+}
+
+#[test]
+fn backend_tile_kv_is_stable_for_duplicate_keys() {
+    let mut backend = SoftwareBackend::default_set();
+    let mut rng = Rng::new(0xCB0);
+    // A full tail-heavy batch of ragged 32+32 rows on the default
+    // serving artifact.
+    let reqs: Vec<(Vec<Vec<u32>>, Vec<u64>)> =
+        (0..37).map(|i| dup_workload(&mut rng, 2, 32, i as u64)).collect();
+    let rows: Vec<&[Vec<u32>]> = reqs.iter().map(|(l, _)| l.as_slice()).collect();
+    let pay_cols: Vec<&[u64]> = reqs.iter().map(|(_, p)| p.as_slice()).collect();
+    let widths: Vec<usize> = pay_cols.iter().map(|p| p.len()).collect();
+    let mut out_keys: Vec<Vec<u32>> = widths.iter().map(|&w| vec![0u32; w]).collect();
+    let mut out_pays: Vec<Vec<u64>> = widths.iter().map(|&w| vec![0u64; w]).collect();
+    {
+        let mut ko: Vec<&mut [u32]> = out_keys.iter_mut().map(|v| v.as_mut_slice()).collect();
+        let mut po: Vec<&mut [u64]> = out_pays.iter_mut().map(|v| v.as_mut_slice()).collect();
+        backend
+            .execute_direct_kv("loms2_up32_dn32_b256", &rows, &pay_cols, &mut ko, &mut po)
+            .expect("kv batch");
+    }
+    for (r, (lists, pays)) in reqs.iter().enumerate() {
+        let (want_k, want_p) = stable_oracle(lists, pays);
+        assert_eq!(out_keys[r], want_k, "row {r} keys");
+        assert_eq!(out_pays[r], want_p, "row {r} payloads not the stable permutation");
+    }
+}
+
+#[test]
+fn service_kv_is_stable_on_tile_route_and_software_fallback() {
+    let svc = MergeService::start(|| Ok(SoftwareBackend::default_set()), ServiceConfig::default())
+        .expect("service");
+    let mut rng = Rng::new(0x5EC);
+    // Shapes chosen to hit: the 32+32 artifact route, the 3-way
+    // artifact, an oversized 2-way (beyond every artifact cap → software
+    // fallback), and a ragged k=8 (planner route).
+    let shapes: [(usize, usize); 4] = [(2, 32), (3, 7), (2, 300), (8, 20)];
+    for (i, &(k, max_len)) in shapes.iter().enumerate() {
+        let (lists, pays) = dup_workload(&mut rng, k, max_len, 0x100 + i as u64);
+        let (want_k, want_p) = stable_oracle(&lists, &pays);
+        let resp = svc.merge_blocking_kv(lists, pays).expect("kv merge");
+        assert_eq!(resp.merged, want_k, "shape {i} keys (served_by={})", resp.served_by);
+        assert_eq!(
+            resp.payloads.as_deref(),
+            Some(want_p.as_slice()),
+            "shape {i} payloads (served_by={})",
+            resp.served_by
+        );
+    }
+    // Key-only requests on the same service still answer without a
+    // payload column.
+    let resp = svc.merge_blocking(vec![vec![1, 5, 9], vec![2, 5, 8]]).expect("key-only merge");
+    assert_eq!(resp.merged, vec![1, 2, 5, 5, 8, 9]);
+    assert!(resp.payloads.is_none(), "key-only response grew a payload column");
+    svc.shutdown();
+}
+
+/// Pair-integrity oracle for the streaming engines: the merge tree's
+/// emit bound may release right-side ties before a left sibling's equal
+/// keys (only the serving path promises global tie order), so the
+/// contract here is merged keys == sorted concat AND the (key, payload)
+/// pair multiset is preserved — with globally unique payloads that
+/// still pins every duplicate key to exactly the payload it arrived
+/// with.
+fn check_pairs(got_k: &[u32], got_p: &[u64], lists: &[Vec<u32>], pays: &[u64]) {
+    let mut want_k: Vec<u32> = lists.concat();
+    want_k.sort_unstable();
+    assert_eq!(got_k, want_k.as_slice(), "merged keys");
+    assert_eq!(got_k.len(), got_p.len(), "column widths");
+    let mut got_pairs: Vec<(u32, u64)> =
+        got_k.iter().copied().zip(got_p.iter().copied()).collect();
+    let mut want_pairs: Vec<(u32, u64)> =
+        lists.concat().into_iter().zip(pays.iter().copied()).collect();
+    got_pairs.sort_unstable();
+    want_pairs.sort_unstable();
+    assert_eq!(got_pairs, want_pairs, "(key, payload) pair multiset");
+}
+
+#[test]
+fn stream_kv_engines_keep_every_duplicate_key_paired() {
+    let mut rng = Rng::new(0x57AB);
+    for k in [2usize, 5, 9] {
+        let runs: Vec<(Vec<u32>, Vec<u64>)> = (0..k)
+            .map(|i| {
+                let keys = rng.sorted_list_ragged(0, 200, 11);
+                let pays =
+                    (0..keys.len() as u64).map(|t| ((i as u64) << 32) | t).collect();
+                (keys, pays)
+            })
+            .collect();
+        let lists: Vec<Vec<u32>> = runs.iter().map(|(k, _)| k.clone()).collect();
+        let pays: Vec<u64> = runs.iter().flat_map(|(_, p)| p.iter().copied()).collect();
+        let (got_k, got_p) = stream::merge_runs_kv(&runs, 8).expect("merge_runs_kv");
+        check_pairs(&got_k, &got_p, &lists, &pays);
+    }
+    // extsort_kv on unsorted duplicate-heavy input, forced multi-pass.
+    let keys: Vec<u32> = (0..10_000).map(|_| rng.next_u32() % 64).collect();
+    let pays: Vec<u64> = (0..keys.len() as u64).collect();
+    let cfg = ExtSortConfig { run_len: 512, max_fanin: 4, ..Default::default() };
+    let (got_k, got_p, stats) = stream::extsort_kv(&keys, &pays, &cfg).expect("extsort_kv");
+    check_pairs(&got_k, &got_p, &[keys], &pays);
+    assert!(stats.merge_passes >= 1, "fanin 4 over ~20 runs must multi-pass");
+}
+
+/// One server, both protocols: a v1 client flow (plain `submit`) must
+/// behave exactly as before against a v1.1 server, and the KV flow must
+/// round-trip payload columns over real sockets — including both frame
+/// kinds interleaved on one connection.
+#[test]
+fn v1_and_kv_clients_round_trip_against_one_server() {
+    let svc = MergeService::start(|| Ok(SoftwareBackend::default_set()), ServiceConfig::default())
+        .expect("service");
+    let server = NetServer::start(
+        "127.0.0.1:0",
+        svc,
+        NetServerConfig { workers: 4, ..NetServerConfig::default() },
+    )
+    .expect("server");
+    let mut client = NetClient::connect(server.addr()).expect("connect");
+    let mut rng = Rng::new(0xE7);
+
+    // v1 client unchanged: key-only request, key-only response.
+    let (lists, _) = dup_workload(&mut rng, 2, 32, 1);
+    let mut want: Vec<u32> = lists.concat();
+    want.sort_unstable();
+    let resp = client.merge(&lists).expect("v1 merge");
+    assert_eq!(resp.merged, want);
+    assert!(resp.payloads.is_none(), "v1 response must not carry payloads");
+
+    // KV round trip, duplicate keys, stable payload oracle.
+    let (lists, pays) = dup_workload(&mut rng, 2, 32, 2);
+    let (want_k, want_p) = stable_oracle(&lists, &pays);
+    let resp = client.merge_kv(&lists, &pays).expect("kv merge");
+    assert_eq!(resp.merged, want_k);
+    assert_eq!(resp.payloads, Some(want_p), "wire payloads not the stable permutation");
+
+    // Interleaved pipelining on one connection: v1, kv, v1, kv — FIFO
+    // responses with the right shape each.
+    let mut expected: Vec<(Vec<u32>, Option<Vec<u64>>)> = Vec::new();
+    for i in 0..8usize {
+        let (lists, pays) = dup_workload(&mut rng, 2 + i % 3, 24, 0x40 + i as u64);
+        if i % 2 == 0 {
+            let mut want: Vec<u32> = lists.concat();
+            want.sort_unstable();
+            client.submit(&lists).expect("submit v1");
+            expected.push((want, None));
+        } else {
+            let (want_k, want_p) = stable_oracle(&lists, &pays);
+            client.submit_kv(&lists, &pays).expect("submit kv");
+            expected.push((want_k, Some(want_p)));
+        }
+    }
+    for (i, (want_k, want_p)) in expected.into_iter().enumerate() {
+        let resp = client.recv().expect("pipelined recv");
+        assert_eq!(resp.merged, want_k, "pipelined response {i} keys");
+        assert_eq!(resp.payloads, want_p, "pipelined response {i} payloads");
+    }
+    server.shutdown();
+}

@@ -1,0 +1,197 @@
+//! Dispatch-tier differential suite: the explicit SIMD kernels
+//! (`std::arch` AVX2/NEON) and the portable fallback must be
+//! byte-indistinguishable from the scalar compare-exchange reference on
+//! every default artifact family, every ragged view shape, and every
+//! `batch % LANES` tail — for both the key-only path and the
+//! rank-then-permute key-value path.
+//!
+//! [`lanes::force_tier`] is a process-wide override, so every test that
+//! forces a tier serializes on [`TIER_LOCK`] and restores the default
+//! on drop (panic included) — a failing differential must not leak a
+//! forced tier into a concurrently scheduled test.
+
+use loms::sortnet::exec::ExecMode;
+use loms::sortnet::lanes::{self, LanePlan, LaneScratch, SimdTier, LANES};
+use loms::sortnet::loms as lm;
+use loms::sortnet::plan::{CompiledPlan, PlanScratch};
+use loms::util::Rng;
+use std::sync::Mutex;
+
+static TIER_LOCK: Mutex<()> = Mutex::new(());
+
+/// Holds the tier lock and clears any forced tier when dropped.
+struct TierGuard<'a>(#[allow(dead_code)] std::sync::MutexGuard<'a, ()>);
+
+impl Drop for TierGuard<'_> {
+    fn drop(&mut self) {
+        lanes::force_tier(None);
+    }
+}
+
+fn lock_tiers() -> TierGuard<'static> {
+    TierGuard(TIER_LOCK.lock().unwrap_or_else(|e| e.into_inner()))
+}
+
+/// The device families behind `SoftwareBackend::default_set()`'s
+/// artifacts (2-col/4-col/8-col 2-way at each serving size, plus the
+/// 3-way), compiled fresh so the differential is against the scalar
+/// plan, not against another lane execution.
+fn artifact_family_plans() -> Vec<(&'static str, CompiledPlan, LanePlan)> {
+    let devices = vec![
+        ("loms2_up32_dn32", lm::loms_2way(32, 32, 2)),
+        ("loms2_up64_dn64", lm::loms_2way(64, 64, 2)),
+        ("loms2_up128_dn128", lm::loms_2way(128, 128, 4)),
+        ("loms2_up256_dn256", lm::loms_2way(256, 256, 8)),
+        ("loms3_7r", lm::loms_kway(&[7, 7, 7])),
+    ];
+    devices
+        .into_iter()
+        .map(|(name, d)| {
+            let plan = CompiledPlan::compile_auto(&d).expect("valid device");
+            let lane = LanePlan::compile(&plan);
+            (name, plan, lane)
+        })
+        .collect()
+}
+
+fn flat_batch(rng: &mut Rng, sizes: &[usize], batch: usize, max: u32) -> Vec<Vec<u32>> {
+    sizes
+        .iter()
+        .map(|&s| {
+            let mut flat = Vec::with_capacity(batch * s);
+            for _ in 0..batch {
+                flat.extend(rng.sorted_list(s, max));
+            }
+            flat
+        })
+        .collect()
+}
+
+/// Every available tier × every default artifact family × tail-heavy
+/// batch sizes: lane output must be byte-equal to the scalar
+/// `CompiledPlan` reference.
+#[test]
+fn every_tier_matches_scalar_plan_on_default_artifact_families() {
+    let _guard = lock_tiers();
+    let tiers = lanes::available_tiers();
+    assert!(tiers.contains(&SimdTier::Scalar) && tiers.contains(&SimdTier::Portable));
+    let mut rng = Rng::new(0xD15F);
+    for (name, plan, lane) in artifact_family_plans() {
+        for batch in [1usize, LANES - 1, LANES, LANES + 1, 3 * LANES + 5] {
+            let lists = flat_batch(&mut rng, lane.list_sizes(), batch, 1 << 20);
+            let mut want = Vec::new();
+            plan.run_batch(&lists, batch, ExecMode::Fast, &mut PlanScratch::new(), &mut want)
+                .expect("scalar reference");
+            for &tier in &tiers {
+                assert!(lanes::force_tier(Some(tier)), "{tier:?} listed as available");
+                assert_eq!(lanes::active_tier(), tier);
+                let mut got = Vec::new();
+                lane.run_batch(&plan, &lists, batch, &mut LaneScratch::new(), &mut got)
+                    .expect("lane batch");
+                assert_eq!(got, want, "{name} batch={batch} tier={tier:?} diverged");
+            }
+        }
+    }
+}
+
+/// The ragged serving path (`run_view_batch_into`): per-row views of
+/// uneven sizes, exact-width outputs, every tier against the sorted
+/// concat oracle and against each other.
+#[test]
+fn ragged_views_are_tier_invariant() {
+    let _guard = lock_tiers();
+    let d = lm::loms_2way(32, 32, 2);
+    let plan = CompiledPlan::compile_auto(&d).expect("valid device");
+    let lane = LanePlan::compile(&plan);
+    let mut rng = Rng::new(0x7A66);
+    let reqs: Vec<Vec<Vec<u32>>> = (0..3 * LANES + 7)
+        .map(|_| {
+            vec![rng.sorted_list_ragged(0, 33, 1 << 20), rng.sorted_list_ragged(0, 33, 1 << 20)]
+        })
+        .collect();
+    let rows: Vec<&[Vec<u32>]> = reqs.iter().map(|r| r.as_slice()).collect();
+    let widths: Vec<usize> = reqs.iter().map(|r| r.iter().map(Vec::len).sum()).collect();
+    for &tier in &lanes::available_tiers() {
+        assert!(lanes::force_tier(Some(tier)));
+        let mut merged: Vec<Vec<u32>> = widths.iter().map(|&w| vec![0u32; w]).collect();
+        let mut outs: Vec<&mut [u32]> = merged.iter_mut().map(|v| v.as_mut_slice()).collect();
+        lane.run_view_batch_into(&plan, &rows, u32::MAX, &mut LaneScratch::new(), &mut outs)
+            .expect("ragged view batch");
+        for (r, req) in reqs.iter().enumerate() {
+            let mut want: Vec<u32> = req.concat();
+            want.sort_unstable();
+            assert_eq!(merged[r], want, "row {r} tier={tier:?} diverged from sorted oracle");
+        }
+    }
+}
+
+/// The rank-then-permute path is tier-invariant too: identical keys
+/// AND identical permutations (the packed (key, origin) merge is fully
+/// deterministic, so even equal-key orders must not differ by tier).
+#[test]
+fn kv_permutations_are_tier_invariant() {
+    let _guard = lock_tiers();
+    let d = lm::loms_2way(32, 32, 2);
+    let plan = CompiledPlan::compile_auto(&d).expect("valid device");
+    let lane = LanePlan::compile(&plan);
+    let mut rng = Rng::new(0xBEAD);
+    // Tiny key domain → dense duplicates, so tie handling is exercised.
+    let reqs: Vec<Vec<Vec<u32>>> = (0..2 * LANES + 3)
+        .map(|_| vec![rng.sorted_list_ragged(0, 33, 8), rng.sorted_list_ragged(0, 33, 8)])
+        .collect();
+    let rows: Vec<&[Vec<u32>]> = reqs.iter().map(|r| r.as_slice()).collect();
+    let widths: Vec<usize> = reqs.iter().map(|r| r.iter().map(Vec::len).sum()).collect();
+    let mut reference: Option<(Vec<Vec<u32>>, Vec<Vec<u32>>)> = None;
+    for &tier in &lanes::available_tiers() {
+        assert!(lanes::force_tier(Some(tier)));
+        let mut keys: Vec<Vec<u32>> = widths.iter().map(|&w| vec![0u32; w]).collect();
+        let mut perms: Vec<Vec<u32>> = widths.iter().map(|&w| vec![0u32; w]).collect();
+        {
+            let mut key_outs: Vec<&mut [u32]> = keys.iter_mut().map(|v| v.as_mut_slice()).collect();
+            let mut perm_outs: Vec<&mut [u32]> =
+                perms.iter_mut().map(|v| v.as_mut_slice()).collect();
+            lanes::run_view_batch_perm_auto(
+                &lane,
+                &plan,
+                &rows,
+                &mut LaneScratch::new(),
+                &mut key_outs,
+                &mut perm_outs,
+            )
+            .expect("perm view batch");
+        }
+        for (r, req) in reqs.iter().enumerate() {
+            // The permutation must be the stable (key, origin) merge of
+            // the list-major concatenation.
+            let concat: Vec<u32> = req.concat();
+            let mut want: Vec<(u32, u32)> =
+                concat.iter().enumerate().map(|(o, &k)| (k, o as u32)).collect();
+            want.sort_unstable();
+            let got: Vec<(u32, u32)> =
+                keys[r].iter().zip(&perms[r]).map(|(&k, &p)| (k, p)).collect();
+            assert_eq!(got, want, "row {r} tier={tier:?} perm diverged");
+        }
+        match &reference {
+            None => reference = Some((keys, perms)),
+            Some((rk, rp)) => {
+                assert_eq!((&keys, &perms), (rk, rp), "tier={tier:?} vs first tier");
+            }
+        }
+    }
+}
+
+/// Forcing a tier the host cannot run must fail closed — the dispatch
+/// invariant (`active_tier` is always available) is what makes the
+/// `unsafe` kernel entries sound.
+#[test]
+fn unavailable_tiers_cannot_be_forced() {
+    let _guard = lock_tiers();
+    let before = lanes::active_tier();
+    for tier in [SimdTier::Avx2, SimdTier::Neon] {
+        if !tier.available() {
+            assert!(!lanes::force_tier(Some(tier)), "{tier:?} forced despite unavailability");
+            assert_eq!(lanes::active_tier(), before, "{tier:?} refusal must not change dispatch");
+        }
+    }
+    assert!(lanes::active_tier().available());
+}
