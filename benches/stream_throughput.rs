@@ -17,6 +17,14 @@
 //! 4. `extsort` / `extsort_kv` — the end-to-end external sorts on
 //!    unsorted input, the bounded-memory paths behind `loms sort`
 //!    (`--payload true` for the KV row).
+//! 5. `encode_*` — the bulk LE spill codecs against the naive per-key
+//!    loop they replaced, as a regression guard (the bulk path must
+//!    stay within 2x of naive even on pessimal allocators; in practice
+//!    it's the faster one).
+//! 6. `extsort_e2e` — disk-to-disk external sorts (`extsort_file` /
+//!    `extsort_kv_file`) over a (sort_threads, partitions) matrix,
+//!    reported as `extsort_e2e_bytes_per_sec` (input bytes through the
+//!    full read → sort → spill → merge → write pipeline).
 //!
 //! The k-way engines run at k ∈ {4, 16, 64} over ≥1M-key workloads by
 //! default (`BENCH_KEYS` overrides; `--smoke` / `BENCH_SMOKE=1` drops
@@ -25,8 +33,9 @@
 //! full-size numbers.
 
 use loms::coordinator::planner;
-use loms::stream::{self, ExtSortConfig};
+use loms::stream::{self, encode_keys_into, encode_records_into, ExtSortConfig};
 use loms::util::Rng;
+use std::path::Path;
 use std::time::Instant;
 
 struct Variant {
@@ -50,6 +59,75 @@ fn best_rate<T>(keys: usize, mut prep: impl FnMut() -> T, mut run: impl FnMut(T)
         best = best.max(keys as f64 / t0.elapsed().as_secs_f64());
     }
     best
+}
+
+/// Disk-to-disk rate for one matrix cell: warmup + best of 2 timed
+/// runs, input bytes over wall time for the whole pipeline.
+fn e2e_rate(
+    input: &Path,
+    output: &Path,
+    cfg: &ExtSortConfig,
+    bytes: usize,
+    keys: usize,
+    kv: bool,
+) -> f64 {
+    let mut best = f64::MIN;
+    for rep in 0..3 {
+        let t0 = Instant::now();
+        let stats = if kv {
+            stream::extsort_kv_file(input, output, cfg).unwrap()
+        } else {
+            stream::extsort_file(input, output, cfg).unwrap()
+        };
+        assert_eq!(stats.keys, keys);
+        if rep > 0 {
+            best = best.max(bytes as f64 / t0.elapsed().as_secs_f64());
+        }
+    }
+    best
+}
+
+/// The `extsort_e2e` matrix: key-only and KV file sorts at three
+/// (sort_threads, partitions) settings (serial baseline, explicit 2×2,
+/// auto). Returns pre-formatted JSON rows.
+fn bench_e2e(data: &[u32], pays: &[u64]) -> Vec<String> {
+    let n = data.len();
+    let dir = std::env::temp_dir().join(format!("loms_bench_e2e_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let key_in = dir.join("keys.u32");
+    let kv_in = dir.join("pairs.kv12");
+    let mut bytes = Vec::new();
+    encode_keys_into(data, &mut bytes);
+    std::fs::write(&key_in, &bytes).unwrap();
+    encode_records_into(data, pays, &mut bytes);
+    std::fs::write(&kv_in, &bytes).unwrap();
+    // ~8 phase-1 runs so the matrix exercises a real merge even at
+    // smoke scale; fan-in 4 forces one intermediate (rolling) pass.
+    let base = ExtSortConfig {
+        run_len: (n / 8).max(1024),
+        max_fanin: 4,
+        spill_dir: Some(dir.clone()),
+        ..Default::default()
+    };
+    let mut rows = Vec::new();
+    for (sort_threads, partitions) in [(1usize, 1usize), (2, 2), (0, 0)] {
+        let cfg = ExtSortConfig { sort_threads, partitions, ..base.clone() };
+        for (mode, input, kv) in [("key_only", &key_in, false), ("key_value", &kv_in, true)] {
+            let in_bytes = std::fs::metadata(input).unwrap().len() as usize;
+            let out = dir.join("out.tmp");
+            let rate = e2e_rate(input, &out, &cfg, in_bytes, n, kv);
+            println!(
+                "extsort-e2e {mode:<9} threads={sort_threads} parts={partitions} \
+                 {rate:>12.0} bytes/s"
+            );
+            rows.push(format!(
+                "    {{\"mode\": \"{mode}\", \"sort_threads\": {sort_threads}, \
+                 \"partitions\": {partitions}, \"extsort_e2e_bytes_per_sec\": {rate:.0}}}"
+            ));
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    rows
 }
 
 fn main() {
@@ -123,6 +201,53 @@ fn main() {
         ext_kv / ext
     );
 
+    // Spill-codec guard: the bulk LE encoders vs the per-key loop they
+    // replaced. A loose floor (bulk ≥ 0.5× naive) catches accidental
+    // regressions to quadratic or per-key-allocating behavior without
+    // flaking on noisy CI machines.
+    let naive_keys = best_rate(n, Vec::new, |mut out: Vec<u8>| {
+        for &k in &data {
+            out.extend_from_slice(&k.to_le_bytes());
+        }
+        out.len() / 4
+    });
+    let bulk_keys = best_rate(n, Vec::new, |mut out: Vec<u8>| {
+        encode_keys_into(&data, &mut out);
+        out.len() / 4
+    });
+    let naive_recs = best_rate(n, Vec::new, |mut out: Vec<u8>| {
+        for (&k, &p) in data.iter().zip(&pays) {
+            out.extend_from_slice(&k.to_le_bytes());
+            out.extend_from_slice(&p.to_le_bytes());
+        }
+        out.len() / 12
+    });
+    let bulk_recs = best_rate(n, Vec::new, |mut out: Vec<u8>| {
+        encode_records_into(&data, &pays, &mut out);
+        out.len() / 12
+    });
+    assert!(bulk_keys >= 0.5 * naive_keys, "bulk key encode regressed: {bulk_keys} vs {naive_keys}");
+    assert!(bulk_recs >= 0.5 * naive_recs, "bulk record encode regressed: {bulk_recs} vs {naive_recs}");
+    for (name, rate) in [
+        ("encode_keys_naive", naive_keys),
+        ("encode_keys_bulk", bulk_keys),
+        ("encode_records_naive", naive_recs),
+        ("encode_records_bulk", bulk_recs),
+    ] {
+        variants.push(Variant { name, mode: "codec", k: 1, keys_per_s: rate });
+    }
+    println!(
+        "encode keys {bulk_keys:>12.0}/s ({:.2}x of naive)   records {bulk_recs:>12.0}/s \
+         ({:.2}x of naive)",
+        bulk_keys / naive_keys,
+        bulk_recs / naive_recs
+    );
+
+    // Disk-to-disk external sorts over a (sort_threads, partitions)
+    // matrix: the full read → parallel run formation → spill → rolling
+    // merge passes → range-partitioned final merge → write pipeline.
+    let e2e_rows = bench_e2e(&data, &pays);
+
     let rows: Vec<String> = variants
         .iter()
         .map(|v| {
@@ -134,9 +259,11 @@ fn main() {
         .collect();
     let json = format!(
         "{{\n  \"bench\": \"stream_throughput\",\n  \"keys\": {n},\n  \"r\": {r},\n  \
-         \"simd_tier\": \"{:?}\",\n  \"variants\": [\n{}\n  ]\n}}\n",
+         \"simd_tier\": \"{:?}\",\n  \"variants\": [\n{}\n  ],\n  \
+         \"extsort_e2e\": [\n{}\n  ]\n}}\n",
         loms::sortnet::lanes::active_tier(),
-        rows.join(",\n")
+        rows.join(",\n"),
+        e2e_rows.join(",\n")
     );
     std::fs::write("BENCH_stream.json", &json).expect("write BENCH_stream.json");
     println!("wrote BENCH_stream.json");

@@ -8,10 +8,10 @@
 //! window ([`INFLIGHT_WINDOW`]) so queue memory stays bounded whatever
 //! the input size. Levels beyond the largest artifact hand the
 //! surviving runs to the **streaming merge engine**
-//! ([`crate::stream::merge_runs`]): a tile-pumped k-way merge tree in
-//! O(k·R) memory, replacing the scalar binary heap that used to finish
-//! the sort. The heap ([`kway_merge`]) is kept as the differential
-//! reference.
+//! ([`crate::stream::merge_runs_parallel`]): tile-pumped k-way merge
+//! trees in O(k·R) memory, range-partitioned across cores for the final
+//! pass, replacing the scalar binary heap that used to finish the sort.
+//! The heap ([`kway_merge`]) is kept as the differential reference.
 
 use super::service::MergeService;
 use crate::stream;
@@ -112,7 +112,9 @@ pub fn external_sort(
 ) -> Result<(Vec<u32>, SortStats)> {
     let (runs, mut stats) = ladder_runs(service, data, chunk, max_network)?;
     stats.final_kway_runs = runs.len();
-    let merged = stream::merge_runs(&runs, stream::DEFAULT_R)?;
+    // Range-partitioned final merge (0 = one partition per core);
+    // byte-identical to the single-tree merge whatever the core count.
+    let merged = stream::merge_runs_parallel(&runs, stream::DEFAULT_R, 0)?;
     Ok((merged, stats))
 }
 

@@ -16,12 +16,17 @@
 //!            (--payload true sends v1.1 key-value requests)
 //!   sort     [--engine stream|ladder] [--n N] [--input F [--output F]]
 //!            [--r R] [--run-len L] [--fanin F] [--spill DIR]
+//!            [--sort-threads T] [--partitions P] [--prefetch-buf K]
 //!            [--ladder-runs true] [--chunk C] [--artifacts DIR]
-//!            [--payload true]
+//!            [--payload true] [--stats true]
 //!            external sort: bounded-memory streaming engine (default)
 //!            or the service merge-ladder path; --payload true sorts
 //!            (u32 key, u64 payload) pairs through rank-then-permute
-//!            (--input/--output files hold 12-byte LE records)
+//!            (--input/--output files hold 12-byte LE records);
+//!            --sort-threads/--partitions default 0 = one per core,
+//!            --prefetch-buf is keys per spill read-ahead buffer
+//!            (0 = synchronous reads); --stats true prints phase
+//!            timings and kernel counters
 //!   selftest                                       quick end-to-end check
 //!
 //! (Arg parsing is hand-rolled: the offline build vendors no clap.)
@@ -149,6 +154,27 @@ fn report_sorted(sorted: &[u32], n: usize, label: &str, dt: Duration) -> Result<
         n as f64 / dt.as_secs_f64() / 1e6
     );
     Ok(())
+}
+
+/// Print extsort stats: one Debug line always, phase-level breakdown
+/// under `--stats true`.
+fn report_extsort_stats(stats: &stream::ExtSortStats, verbose: bool) {
+    println!("{stats:?}");
+    if !verbose {
+        return;
+    }
+    println!(
+        "phases: run-form={:.3}s merge={:.3}s io-wait={:.3}s",
+        stats.run_form_secs, stats.merge_secs, stats.io_wait_secs
+    );
+    println!(
+        "final merge: partitions={} passes={} spilled-runs={} spill-bytes={}",
+        stats.partitions, stats.merge_passes, stats.spilled_runs, stats.spill_bytes
+    );
+    println!(
+        "kernel: batches={} rows={} flushes={}",
+        stats.tree.kernel_batches, stats.tree.kernel_rows, stats.tree.flushes
+    );
 }
 
 fn start_service(o: &HashMap<String, String>) -> Result<(MergeService, &'static str)> {
@@ -403,9 +429,20 @@ fn run(args: &[String]) -> Result<()> {
                 // batched service, phase 3 on the stream engine). The
                 // stream-engine options don't apply here — reject them
                 // instead of silently ignoring them.
-                for flag in
-                    ["input", "output", "r", "run-len", "fanin", "spill", "ladder-runs", "payload"]
-                {
+                for flag in [
+                    "input",
+                    "output",
+                    "r",
+                    "run-len",
+                    "fanin",
+                    "spill",
+                    "sort-threads",
+                    "partitions",
+                    "prefetch-buf",
+                    "ladder-runs",
+                    "payload",
+                    "stats",
+                ] {
                     anyhow::ensure!(
                         !o.contains_key(flag),
                         "--{flag} only applies to --engine stream"
@@ -427,11 +464,16 @@ fn run(args: &[String]) -> Result<()> {
                 Some(v) => v.parse().with_context(|| format!("--r {v:?}"))?,
                 None => default_block_r(&o),
             };
+            // Valued flag (`--stats true`): see the --ladder-runs note.
+            let verbose_stats = o.get("stats").map(String::as_str) == Some("true");
             let cfg = ExtSortConfig {
                 run_len: get_usize(&o, "run-len", 1 << 16)?,
                 r,
                 max_fanin: get_usize(&o, "fanin", 64)?,
                 spill_dir: o.get("spill").map(PathBuf::from),
+                sort_threads: get_usize(&o, "sort-threads", 0)?,
+                partitions: get_usize(&o, "partitions", 0)?,
+                prefetch_buf: get_usize(&o, "prefetch-buf", 1 << 15)?,
             };
             if let Some(input) = o.get("input") {
                 // File-to-file: bounded memory end to end.
@@ -451,7 +493,7 @@ fn run(args: &[String]) -> Result<()> {
                     if kv { "key-value pairs" } else { "keys" },
                     stats.keys as f64 / dt.as_secs_f64() / 1e6
                 );
-                println!("{stats:?}");
+                report_extsort_stats(&stats, verbose_stats);
                 return Ok(());
             }
             let n = get_usize(&o, "n", 1_000_000)?;
@@ -465,7 +507,7 @@ fn run(args: &[String]) -> Result<()> {
                 let dt = t0.elapsed();
                 anyhow::ensure!(sorted_pays.len() == sorted.len(), "lost payloads");
                 report_sorted(&sorted, n, &format!("stream key-value (R={r})"), dt)?;
-                println!("{stats:?}");
+                report_extsort_stats(&stats, verbose_stats);
                 return Ok(());
             }
             // The pure stream engine handles the full u32 domain; the
@@ -492,7 +534,7 @@ fn run(args: &[String]) -> Result<()> {
                 (sorted, stats, t0.elapsed())
             };
             report_sorted(&sorted, n, &format!("stream (R={r})"), dt)?;
-            println!("{stats:?}");
+            report_extsort_stats(&stats, verbose_stats);
             Ok(())
         }
         "selftest" => {

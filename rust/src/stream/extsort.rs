@@ -1,29 +1,46 @@
-//! External sorting in bounded memory: run formation + spill + a
-//! streaming k-way merge through the LOMS tile kernels.
+//! External sorting in bounded memory: pipelined run formation + spill
+//! + a streaming k-way merge through the LOMS tile kernels, with a
+//! range-partitioned final pass.
 //!
 //! Phase 1 chunks the input into `run_len`-key runs and sorts each —
 //! either directly ([`RunFormer::Std`]) or through the merge-network
 //! ladder of a running [`MergeService`] ([`RunFormer::Ladder`], the
-//! planner's batch sorters). Runs live in memory or spill to a file of
-//! little-endian `u32` keys. Phase 2 repeatedly merges groups of at
-//! most `max_fanin` runs through [`MergeTree`] — each pass streams run
-//! to run, never holding more than O(`max_fanin`·R) keys — until at
-//! most `max_fanin` runs remain. Phase 3 streams the final k-way merge
-//! to the caller (a `Vec` or an output file).
+//! planner's batch sorters). With `sort_threads > 1` (the default
+//! resolves to one per core) the Std path shards run sorting across a
+//! worker pool behind a bounded chunk queue, with spill writes on a
+//! dedicated sink thread ([`super::io::pipeline`]) — the serial spill
+//! layout is reproduced exactly. Runs live in memory or spill to
+//! **segmented** files of little-endian `u32` keys, one segment per
+//! future merge group, so each pass can unlink consumed segments as it
+//! goes instead of holding a full second copy of the data (the rolling
+//! ~1·input disk footprint, vs ~2× for a monolithic spill).
 //!
-//! With spilling enabled the resident set is O(`run_len` +
-//! `max_fanin`·R) keys however large the input — the bounded-memory
-//! story the fixed-width merge devices themselves cannot provide.
+//! Phase 2 repeatedly merges groups of at most `max_fanin` runs through
+//! [`MergeTree`]; spill reads go through per-run prefetch threads
+//! (double buffering, [`super::source::PrefetchRunStream`]) and spill
+//! writes through a write-behind thread, so the merge tree never blocks
+//! on disk. Phase 3 range-partitions the final merge across
+//! `partitions` independent trees ([`super::part`]) writing disjoint
+//! regions of the output — byte-identical to the single-tree merge,
+//! but scaling with cores.
+//!
+//! With spilling enabled the resident set is O(`sort_threads`·`run_len`
+//! + `partitions`·`max_fanin`·(R + `prefetch_buf`)) keys however large
+//! the input — the bounded-memory story the fixed-width merge devices
+//! themselves cannot provide.
 
+use super::io::{self, encode_keys_into, IoWait, SpillGuard, WriteBehind};
 use super::merge2::BlockKernel;
-use super::source::{boxed, FileRunStream, SliceStream, SortedStream};
-use super::tree::{MergeTree, DEFAULT_R};
+use super::part;
+use super::source::{boxed, FileRunStream, PrefetchRunStream, SliceStream, SortedStream};
+use super::tree::{MergeTree, TreeStats, DEFAULT_R};
 use crate::coordinator::{planner, MergeService};
 use anyhow::{Context, Result};
 use std::fs::File;
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
 
 /// Keys pulled from the merge tree per drain step.
 const DRAIN: usize = 4096;
@@ -36,15 +53,36 @@ pub struct ExtSortConfig {
     /// Merge-tree block size R (the `loms2` R+R kernel shape).
     pub r: usize,
     /// Maximum runs merged per tree (≥ 2); more runs ⇒ extra passes.
+    /// Also the spill-segment size: each segment holds the input of one
+    /// future merge group, so passes can unlink segments as they go.
     pub max_fanin: usize,
     /// Spill runs to files under this directory; `None` keeps runs in
     /// memory (merge passes still stream block by block).
     pub spill_dir: Option<PathBuf>,
+    /// Phase-1 sort worker threads; `0` = one per core. Applies to
+    /// [`RunFormer::Std`] (the ladder former stays serial — it owns the
+    /// batching service).
+    pub sort_threads: usize,
+    /// Final-pass range partitions; `0` = auto (per core, sized by
+    /// input), `1` = single merge tree. Output bytes are identical
+    /// whatever the value.
+    pub partitions: usize,
+    /// Keys per prefetch buffer for spill reads; `0` disables the
+    /// read-ahead threads (synchronous reads).
+    pub prefetch_buf: usize,
 }
 
 impl Default for ExtSortConfig {
     fn default() -> Self {
-        ExtSortConfig { run_len: 1 << 16, r: DEFAULT_R, max_fanin: 64, spill_dir: None }
+        ExtSortConfig {
+            run_len: 1 << 16,
+            r: DEFAULT_R,
+            max_fanin: 64,
+            spill_dir: None,
+            sort_threads: 0,
+            partitions: 0,
+            prefetch_buf: 1 << 15,
+        }
     }
 }
 
@@ -70,6 +108,18 @@ pub struct ExtSortStats {
     pub spilled_runs: usize,
     /// Bytes written to spill files.
     pub spill_bytes: u64,
+    /// Phase-1 (run formation) wall seconds.
+    pub run_form_secs: f64,
+    /// Merge wall seconds (intermediate passes + final pass).
+    pub merge_secs: f64,
+    /// Seconds compute threads spent blocked on disk — synchronous
+    /// reads/writes plus stalls waiting on prefetch / write-behind
+    /// threads — summed across threads (may exceed wall time).
+    pub io_wait_secs: f64,
+    /// Range partitions the final pass ran (1 = single merge tree).
+    pub partitions: usize,
+    /// Merge-tree scheduling counters pooled across passes/partitions.
+    pub tree: TreeStats,
 }
 
 /// How phase 1 sorts each run.
@@ -96,15 +146,6 @@ fn sort_run(former: &RunFormer<'_>, keys: &[u32]) -> Result<Vec<u32>> {
     }
 }
 
-/// LE-encode `keys` into the reusable `bytes` buffer.
-fn encode_keys(keys: &[u32], bytes: &mut Vec<u8>) {
-    bytes.clear();
-    bytes.reserve(keys.len() * 4);
-    for &k in keys {
-        bytes.extend_from_slice(&k.to_le_bytes());
-    }
-}
-
 /// Monotonic spill-file id — unique across concurrent sorts in one
 /// process; the pid keeps parallel processes apart.
 fn next_spill_path(dir: &Path) -> PathBuf {
@@ -113,138 +154,275 @@ fn next_spill_path(dir: &Path) -> PathBuf {
     dir.join(format!("loms-spill-{}-{id}.u32", std::process::id()))
 }
 
-/// Append-only writer for a spill file of back-to-back sorted runs.
+/// One spill segment: a file of back-to-back sorted runs, sized to one
+/// merge group so the consuming pass can unlink it the moment its last
+/// run drains. `runs` are `(start, len)` in records of the segment.
+pub(crate) struct SpillSeg {
+    pub(crate) path: PathBuf,
+    pub(crate) runs: Vec<(u64, u64)>,
+}
+
+/// Where encoded spill bytes go: buffered synchronous writes (phase 1's
+/// dedicated sink thread is already off the compute path) or a
+/// write-behind thread (merge passes, whose writer IS the compute
+/// thread).
+enum SegSink {
+    Buf(BufWriter<File>),
+    Behind(WriteBehind),
+}
+
+/// Append-only writer for segmented spill files of sorted runs.
+/// Rotates to a fresh file every `cap` runs and registers every file
+/// with the [`SpillGuard`] so error paths leave no stragglers.
 struct SpillWriter {
-    w: BufWriter<File>,
-    path: PathBuf,
+    dir: PathBuf,
+    guard: SpillGuard,
+    wait: IoWait,
+    behind: bool,
+    /// Runs per segment before rotating (`usize::MAX` = one segment).
+    cap: usize,
+    sink: Option<(SegSink, PathBuf)>,
+    /// Runs of the open segment.
     runs: Vec<(u64, u64)>,
-    /// Keys written so far.
+    segs: Vec<SpillSeg>,
+    /// Keys written into the open segment.
     pos: u64,
     /// Start of the open run, if any.
     cur: Option<u64>,
-    /// Reusable LE-encoding buffer — one `write_all` per chunk, not per
-    /// key (this sits on the disk hot path of every pass).
+    /// Reusable LE-encoding buffer for the synchronous sink.
     bytes: Vec<u8>,
 }
 
 impl SpillWriter {
-    fn create(path: PathBuf) -> Result<SpillWriter> {
-        let f = File::create(&path)
-            .with_context(|| format!("creating spill file {}", path.display()))?;
-        Ok(SpillWriter {
-            w: BufWriter::new(f),
-            path,
+    fn new(dir: PathBuf, cap: usize, behind: bool, guard: SpillGuard, wait: IoWait) -> SpillWriter {
+        SpillWriter {
+            dir,
+            guard,
+            wait,
+            behind,
+            cap: cap.max(1),
+            sink: None,
             runs: Vec::new(),
+            segs: Vec::new(),
             pos: 0,
             cur: None,
             bytes: Vec::new(),
-        })
+        }
     }
 
-    fn begin_run(&mut self) {
+    fn open_seg(&mut self) -> Result<()> {
+        let path = next_spill_path(&self.dir);
+        let f = File::create(&path)
+            .with_context(|| format!("creating spill file {}", path.display()))?;
+        self.guard.register(&path);
+        let sink = if self.behind {
+            SegSink::Behind(WriteBehind::spawn(f, self.wait.clone())?)
+        } else {
+            SegSink::Buf(BufWriter::new(f))
+        };
+        self.sink = Some((sink, path));
+        Ok(())
+    }
+
+    fn begin_run(&mut self) -> Result<()> {
         debug_assert!(self.cur.is_none());
+        if self.sink.is_none() {
+            self.open_seg()?;
+        }
         self.cur = Some(self.pos);
+        Ok(())
     }
 
     fn write_keys(&mut self, keys: &[u32]) -> Result<()> {
-        encode_keys(keys, &mut self.bytes);
-        self.w.write_all(&self.bytes)?;
-        self.pos += keys.len() as u64;
+        let SpillWriter { sink, bytes, wait, pos, .. } = self;
+        let (sink, _) = sink.as_mut().expect("write_keys outside a run");
+        match sink {
+            SegSink::Buf(w) => {
+                encode_keys_into(keys, bytes);
+                wait.timed(|| w.write_all(bytes)).context("writing spill run")?;
+            }
+            SegSink::Behind(wb) => {
+                let mut b = wb.buffer();
+                encode_keys_into(keys, &mut b);
+                wb.submit(b)?;
+            }
+        }
+        *pos += keys.len() as u64;
         Ok(())
     }
 
-    fn end_run(&mut self) {
+    fn end_run(&mut self) -> Result<()> {
         let start = self.cur.take().expect("end_run without begin_run");
         self.runs.push((start, self.pos - start));
+        if self.runs.len() >= self.cap {
+            self.close_seg()?;
+        }
+        Ok(())
     }
 
     fn push_run(&mut self, keys: &[u32]) -> Result<()> {
-        self.begin_run();
+        self.begin_run()?;
         self.write_keys(keys)?;
-        self.end_run();
+        self.end_run()
+    }
+
+    fn close_seg(&mut self) -> Result<()> {
+        let Some((sink, path)) = self.sink.take() else { return Ok(()) };
+        match sink {
+            SegSink::Buf(mut w) => {
+                self.wait.timed(|| w.flush()).context("flushing spill segment")?
+            }
+            SegSink::Behind(wb) => wb.finish()?,
+        }
+        self.segs.push(SpillSeg { path, runs: std::mem::take(&mut self.runs) });
+        self.pos = 0;
         Ok(())
     }
 
-    fn finish(mut self) -> Result<(PathBuf, Vec<(u64, u64)>)> {
-        self.w.flush()?;
-        Ok((self.path, self.runs))
+    fn finish(mut self) -> Result<Vec<SpillSeg>> {
+        self.close_seg()?;
+        Ok(std::mem::take(&mut self.segs))
     }
 }
 
 /// Where the current generation of runs lives.
 enum RunStore {
     Mem(Vec<Vec<u32>>),
-    File { path: PathBuf, runs: Vec<(u64, u64)> },
+    Files(Vec<SpillSeg>),
+}
+
+/// Open one spill run as a stream: prefetched (double-buffered reader
+/// thread) when a buffer is configured and the run outgrows it,
+/// synchronous otherwise.
+fn open_key_run(
+    path: &Path,
+    start: u64,
+    len: u64,
+    prefetch: usize,
+    wait: &IoWait,
+) -> Result<Box<dyn SortedStream + 'static>> {
+    if prefetch == 0 || len <= prefetch as u64 {
+        Ok(boxed(FileRunStream::open(path, start, len)?))
+    } else {
+        Ok(boxed(PrefetchRunStream::open(path, start, len, prefetch, wait.clone())?))
+    }
 }
 
 impl RunStore {
     fn count(&self) -> usize {
         match self {
             RunStore::Mem(runs) => runs.len(),
-            RunStore::File { runs, .. } => runs.len(),
+            RunStore::Files(segs) => segs.iter().map(|s| s.runs.len()).sum(),
         }
     }
 
-    /// Open streams over runs `[lo, hi)`.
-    fn open(&self, lo: usize, hi: usize) -> Result<Vec<Box<dyn SortedStream + '_>>> {
+    /// Flatten the segmented layout into `(path, start, len)` per run,
+    /// in global run order.
+    fn flat_runs(&self) -> Vec<(&Path, u64, u64)> {
         match self {
-            RunStore::Mem(runs) => {
-                Ok(runs[lo..hi].iter().map(|r| boxed(SliceStream::new(r))).collect())
-            }
-            RunStore::File { path, runs } => runs[lo..hi]
+            RunStore::Mem(_) => Vec::new(),
+            RunStore::Files(segs) => segs
                 .iter()
-                .map(|&(start, len)| Ok(boxed(FileRunStream::open(path, start, len)?)))
+                .flat_map(|s| s.runs.iter().map(|&(start, len)| (s.path.as_path(), start, len)))
                 .collect(),
         }
     }
 
-    fn cleanup(self) {
-        if let RunStore::File { path, .. } = self {
-            let _ = std::fs::remove_file(path);
+    /// Open streams over runs `[lo, hi)`.
+    fn open(
+        &self,
+        lo: usize,
+        hi: usize,
+        prefetch: usize,
+        wait: &IoWait,
+    ) -> Result<Vec<Box<dyn SortedStream + '_>>> {
+        match self {
+            RunStore::Mem(runs) => {
+                Ok(runs[lo..hi].iter().map(|r| boxed(SliceStream::new(r))).collect())
+            }
+            RunStore::Files(_) => self.flat_runs()[lo..hi]
+                .iter()
+                .map(|&(path, start, len)| open_key_run(path, start, len, prefetch, wait))
+                .collect(),
+        }
+    }
+
+    /// Unlink any remaining spill segments (the clean-finish path; the
+    /// guard also covers them on early exits).
+    fn cleanup(self, guard: &SpillGuard) {
+        if let RunStore::Files(segs) = self {
+            for seg in segs {
+                guard.remove_now(&seg.path);
+            }
         }
     }
 }
 
-/// Drain a tree into `out`, handing the shared kernel back for the
-/// next tree.
-fn drain_to_vec(mut tree: MergeTree<'_>, out: &mut Vec<u32>) -> Result<BlockKernel> {
+/// Drain a tree into `out`, pooling its scheduling counters and handing
+/// the shared kernel back for the next tree.
+fn drain_to_vec(
+    mut tree: MergeTree<'_>,
+    out: &mut Vec<u32>,
+    tstats: &mut TreeStats,
+) -> Result<BlockKernel> {
     while tree.next_chunk(DRAIN, out)? > 0 {}
+    tstats.absorb(tree.stats());
     Ok(tree.into_kernel())
 }
 
 /// One intermediate pass: merge groups of `max_fanin` runs into the
-/// next generation (memory→memory or spill→spill), then drop the old
-/// generation. The kernel threads through every tree of the pass.
+/// next generation (memory→memory or spill→spill), unlinking each
+/// consumed spill segment as soon as its last run drains — the rolling
+/// pass that keeps the disk footprint near one copy of the data. The
+/// kernel threads through every tree of the pass.
 fn merge_pass(
     store: RunStore,
     cfg: &ExtSortConfig,
     stats: &mut ExtSortStats,
     mut kernel: BlockKernel,
+    guard: &SpillGuard,
+    wait: &IoWait,
 ) -> Result<(RunStore, BlockKernel)> {
     let count = store.count();
-    let next = match &store {
+    match store {
         RunStore::Mem(_) => {
             let mut runs = Vec::with_capacity(count.div_ceil(cfg.max_fanin));
             let mut lo = 0;
             while lo < count {
                 let hi = (lo + cfg.max_fanin).min(count);
                 let mut run = Vec::new();
-                let tree = MergeTree::with_kernel(store.open(lo, hi)?, kernel);
-                kernel = drain_to_vec(tree, &mut run)?;
+                let tree =
+                    MergeTree::with_kernel(store.open(lo, hi, cfg.prefetch_buf, wait)?, kernel);
+                kernel = drain_to_vec(tree, &mut run, &mut stats.tree)?;
                 runs.push(run);
                 lo = hi;
             }
-            RunStore::Mem(runs)
+            Ok((RunStore::Mem(runs), kernel))
         }
-        RunStore::File { path, .. } => {
-            let dir = path.parent().map(Path::to_path_buf).unwrap_or_else(|| PathBuf::from("."));
-            let mut w = SpillWriter::create(next_spill_path(&dir))?;
+        RunStore::Files(ref segs) => {
+            let dir = segs
+                .first()
+                .and_then(|s| s.path.parent())
+                .map(Path::to_path_buf)
+                .unwrap_or_else(|| PathBuf::from("."));
+            // Per-segment global end index, for unlink-as-consumed.
+            let seg_ends: Vec<usize> = segs
+                .iter()
+                .scan(0usize, |acc, s| {
+                    *acc += s.runs.len();
+                    Some(*acc)
+                })
+                .collect();
+            let mut w =
+                SpillWriter::new(dir, cfg.max_fanin, true, guard.clone(), wait.clone());
             let mut chunk = Vec::with_capacity(DRAIN);
             let mut lo = 0;
+            let mut consumed_segs = 0;
             while lo < count {
                 let hi = (lo + cfg.max_fanin).min(count);
-                let mut tree = MergeTree::with_kernel(store.open(lo, hi)?, kernel);
-                w.begin_run();
+                let mut tree =
+                    MergeTree::with_kernel(store.open(lo, hi, cfg.prefetch_buf, wait)?, kernel);
+                w.begin_run()?;
                 loop {
                     chunk.clear();
                     if tree.next_chunk(DRAIN, &mut chunk)? == 0 {
@@ -252,18 +430,29 @@ fn merge_pass(
                     }
                     w.write_keys(&chunk)?;
                 }
-                w.end_run();
+                w.end_run()?;
+                stats.tree.absorb(tree.stats());
                 kernel = tree.into_kernel();
+                // Roll the footprint: every segment whose runs are all
+                // merged is dead weight — unlink it now, not pass-end.
+                if let RunStore::Files(segs) = &store {
+                    while consumed_segs < segs.len() && seg_ends[consumed_segs] <= hi {
+                        guard.remove_now(&segs[consumed_segs].path);
+                        consumed_segs += 1;
+                    }
+                }
                 lo = hi;
             }
-            let (path, runs) = w.finish()?;
-            stats.spilled_runs += runs.len();
-            stats.spill_bytes += runs.iter().map(|&(_, len)| len * 4).sum::<u64>();
-            RunStore::File { path, runs }
+            let segs_out = w.finish()?;
+            stats.spilled_runs += segs_out.iter().map(|s| s.runs.len()).sum::<usize>();
+            stats.spill_bytes += segs_out
+                .iter()
+                .flat_map(|s| s.runs.iter())
+                .map(|&(_, len)| len * 4)
+                .sum::<u64>();
+            Ok((RunStore::Files(segs_out), kernel))
         }
-    };
-    store.cleanup();
-    Ok((next, kernel))
+    }
 }
 
 /// Sort `data` with default run formation (`sort_unstable` per run).
@@ -271,8 +460,35 @@ pub fn extsort(data: &[u32], cfg: &ExtSortConfig) -> Result<(Vec<u32>, ExtSortSt
     extsort_with(data, cfg, &RunFormer::Std)
 }
 
+/// Phase-1 run formation over an in-memory slice, sharded across
+/// `threads` scoped workers on contiguous chunk groups (order
+/// preserved by construction).
+fn form_runs_mem(data: &[u32], run_len: usize, threads: usize) -> Vec<Vec<u32>> {
+    let chunks: Vec<&[u32]> = data.chunks(run_len).collect();
+    let sort_one = |c: &&[u32]| {
+        let mut v = c.to_vec();
+        v.sort_unstable();
+        v
+    };
+    if threads <= 1 || chunks.len() <= 1 {
+        return chunks.iter().map(sort_one).collect();
+    }
+    let per = chunks.len().div_ceil(threads);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = chunks
+            .chunks(per)
+            .map(|group| s.spawn(move || group.iter().map(sort_one).collect::<Vec<_>>()))
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("run-sort worker panicked"))
+            .collect()
+    })
+}
+
 /// Sort `data`: form runs with `former`, optionally spill them, merge
-/// pass by pass, stream the final k-way merge into a `Vec`.
+/// pass by pass, stream the final k-way merge into a `Vec` (the final
+/// pass range-partitions across cores when the runs are in memory).
 pub fn extsort_with(
     data: &[u32],
     cfg: &ExtSortConfig,
@@ -281,44 +497,217 @@ pub fn extsort_with(
     let mut kernel = cfg.validate()?;
     let mut stats = ExtSortStats { keys: data.len(), ..Default::default() };
     if data.is_empty() {
+        stats.partitions = 1;
         return Ok((Vec::new(), stats));
     }
+    let guard = SpillGuard::new();
+    let wait = IoWait::new();
+    let threads = part::resolve_threads(cfg.sort_threads);
+    let parallel_std = threads > 1 && matches!(former, RunFormer::Std);
+    let t0 = Instant::now();
     let mut store = match &cfg.spill_dir {
-        None => {
-            let runs: Vec<Vec<u32>> = data
+        None => RunStore::Mem(match former {
+            RunFormer::Std => form_runs_mem(data, cfg.run_len, threads),
+            RunFormer::Ladder { .. } => data
                 .chunks(cfg.run_len)
                 .map(|c| sort_run(former, c))
-                .collect::<Result<_>>()?;
-            RunStore::Mem(runs)
-        }
+                .collect::<Result<_>>()?,
+        }),
         Some(dir) => {
             std::fs::create_dir_all(dir)
                 .with_context(|| format!("creating spill dir {}", dir.display()))?;
-            let mut w = SpillWriter::create(next_spill_path(dir))?;
-            for c in data.chunks(cfg.run_len) {
-                w.push_run(&sort_run(former, c)?)?;
-            }
-            let (path, runs) = w.finish()?;
-            stats.spilled_runs += runs.len();
+            let w = SpillWriter::new(
+                dir.clone(),
+                cfg.max_fanin,
+                false,
+                guard.clone(),
+                wait.clone(),
+            );
+            let segs = if parallel_std {
+                let mut chunks = data.chunks(cfg.run_len);
+                io::pipeline(
+                    threads,
+                    || Ok(chunks.next()),
+                    |c: &[u32]| {
+                        let mut v = c.to_vec();
+                        v.sort_unstable();
+                        v
+                    },
+                    w,
+                    |w, run| w.push_run(&run),
+                )?
+                .finish()?
+            } else {
+                let mut w = w;
+                for c in data.chunks(cfg.run_len) {
+                    w.push_run(&sort_run(former, c)?)?;
+                }
+                w.finish()?
+            };
+            stats.spilled_runs += segs.iter().map(|s| s.runs.len()).sum::<usize>();
             stats.spill_bytes += 4 * data.len() as u64;
-            RunStore::File { path, runs }
+            RunStore::Files(segs)
         }
     };
     stats.runs = store.count();
+    stats.run_form_secs = t0.elapsed().as_secs_f64();
+    let tm = Instant::now();
     while store.count() > cfg.max_fanin {
-        (store, kernel) = merge_pass(store, cfg, &mut stats, kernel)?;
+        (store, kernel) = merge_pass(store, cfg, &mut stats, kernel, &guard, &wait)?;
         stats.merge_passes += 1;
     }
-    let mut out = Vec::with_capacity(data.len());
-    drain_to_vec(MergeTree::with_kernel(store.open(0, store.count())?, kernel), &mut out)?;
-    store.cleanup();
+    let out = match &store {
+        RunStore::Mem(runs)
+            if runs.len() > 1 && part::resolve_partitions(cfg.partitions, data.len()) > 1 =>
+        {
+            let (out, nparts, tstats) =
+                part::merge_runs_parallel_stats(runs, cfg.r, cfg.partitions)?;
+            stats.partitions = nparts;
+            stats.tree.absorb(tstats);
+            out
+        }
+        _ => {
+            let mut out = Vec::with_capacity(data.len());
+            let streams = store.open(0, store.count(), cfg.prefetch_buf, &wait)?;
+            let _ = drain_to_vec(MergeTree::with_kernel(streams, kernel), &mut out, &mut stats.tree)?;
+            stats.partitions = 1;
+            out
+        }
+    };
+    store.cleanup(&guard);
+    stats.merge_secs = tm.elapsed().as_secs_f64();
+    stats.io_wait_secs = wait.secs();
     Ok((out, stats))
 }
 
+/// Phase 3 of a file sort: merge the surviving runs straight into
+/// `output`. With more than one partition, sample the runs, cut every
+/// run at the pivot boundaries (exact — runs are sorted), pre-size the
+/// output, and merge each key range on its own thread into its own
+/// disjoint region of the file; otherwise one tree + write-behind.
+fn final_merge_file(
+    store: &RunStore,
+    output: &Path,
+    total: u64,
+    cfg: &ExtSortConfig,
+    stats: &mut ExtSortStats,
+    wait: &IoWait,
+    kernel: BlockKernel,
+) -> Result<()> {
+    let runs = store.flat_runs();
+    let parts = part::resolve_partitions(cfg.partitions, total as usize);
+    if parts <= 1 || runs.len() <= 1 || total == 0 {
+        let f = File::create(output)
+            .with_context(|| format!("creating {}", output.display()))?;
+        let mut wb = WriteBehind::spawn(f, wait.clone())?;
+        let mut tree =
+            MergeTree::with_kernel(store.open(0, store.count(), cfg.prefetch_buf, wait)?, kernel);
+        let mut chunk = Vec::with_capacity(DRAIN);
+        loop {
+            chunk.clear();
+            if tree.next_chunk(DRAIN, &mut chunk)? == 0 {
+                break;
+            }
+            let mut b = wb.buffer();
+            encode_keys_into(&chunk, &mut b);
+            wb.submit(b)?;
+        }
+        stats.tree.absorb(tree.stats());
+        wb.finish()?;
+        stats.partitions = 1;
+        return Ok(());
+    }
+    // Sample every run, pick pivots at the pooled quantiles, cut.
+    let mut samples = Vec::new();
+    for &(path, start, len) in &runs {
+        part::FileCutter::open(path, start, len, 4)?.sample_into(&mut samples)?;
+    }
+    let pivots = part::pivots_from_samples(samples, parts);
+    let cuts: Vec<Vec<u64>> = runs
+        .iter()
+        .map(|&(path, start, len)| part::FileCutter::open(path, start, len, 4)?.cuts(&pivots))
+        .collect::<Result<_>>()?;
+    let nparts = pivots.len() + 1;
+    let sizes: Vec<u64> =
+        (0..nparts).map(|p| cuts.iter().map(|c| c[p + 1] - c[p]).sum()).collect();
+    let mut offs = Vec::with_capacity(nparts);
+    let mut acc = 0u64;
+    for &sz in &sizes {
+        offs.push(acc);
+        acc += sz;
+    }
+    anyhow::ensure!(acc == total, "partition cuts lost keys ({acc} of {total})");
+    // Pre-size the output so P writers can target disjoint regions.
+    File::create(output)
+        .and_then(|f| f.set_len(total * 4))
+        .with_context(|| format!("creating {}", output.display()))?;
+    let (runs, cuts, sizes, offs) = (&runs, &cuts, &sizes, &offs);
+    let part_stats = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..nparts)
+            .filter(|&p| sizes[p] > 0)
+            .map(|p| {
+                s.spawn(move || -> Result<TreeStats> {
+                    let mut f = File::options()
+                        .write(true)
+                        .open(output)
+                        .with_context(|| format!("opening {} region", output.display()))?;
+                    f.seek(SeekFrom::Start(offs[p] * 4))?;
+                    let mut wb = WriteBehind::spawn(f, wait.clone())?;
+                    let streams: Vec<Box<dyn SortedStream + '_>> = runs
+                        .iter()
+                        .enumerate()
+                        .filter(|(i, _)| cuts[*i][p + 1] > cuts[*i][p])
+                        .map(|(i, &(path, start, _))| {
+                            open_key_run(
+                                path,
+                                start + cuts[i][p],
+                                cuts[i][p + 1] - cuts[i][p],
+                                cfg.prefetch_buf,
+                                wait,
+                            )
+                        })
+                        .collect::<Result<_>>()?;
+                    let mut tree = MergeTree::new(streams, cfg.r)?;
+                    let mut chunk = Vec::with_capacity(DRAIN);
+                    let mut written = 0u64;
+                    loop {
+                        chunk.clear();
+                        let n = tree.next_chunk(DRAIN, &mut chunk)?;
+                        if n == 0 {
+                            break;
+                        }
+                        let mut b = wb.buffer();
+                        encode_keys_into(&chunk, &mut b);
+                        wb.submit(b)?;
+                        written += n as u64;
+                    }
+                    anyhow::ensure!(
+                        written == sizes[p],
+                        "partition {p} wrote {written} of {} keys",
+                        sizes[p]
+                    );
+                    wb.finish()?;
+                    Ok(tree.stats())
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().map_err(|_| anyhow::anyhow!("partition merge panicked"))?)
+            .collect::<Result<Vec<TreeStats>>>()
+    })?;
+    for st in part_stats {
+        stats.tree.absorb(st);
+    }
+    stats.partitions = nparts;
+    Ok(())
+}
+
 /// Sort a file of little-endian `u32` keys into `output`, never holding
-/// more than O(`run_len` + `max_fanin`·R) keys in memory. Runs spill
-/// under `cfg.spill_dir` (defaulting to `output`'s directory). Backs
-/// the `loms sort --input/--output` CLI path.
+/// more than O(`sort_threads`·`run_len` + `partitions`·`max_fanin`·R)
+/// keys in memory. Runs spill under `cfg.spill_dir` (defaulting to
+/// `output`'s directory); spill files are unlinked even when the sort
+/// fails partway. Backs the `loms sort --input/--output` CLI path.
 pub fn extsort_file(input: &Path, output: &Path, cfg: &ExtSortConfig) -> Result<ExtSortStats> {
     let mut kernel = cfg.validate()?;
     let bytes = std::fs::metadata(input)
@@ -333,54 +722,74 @@ pub fn extsort_file(input: &Path, output: &Path, cfg: &ExtSortConfig) -> Result<
         .or_else(|| output.parent().map(Path::to_path_buf).filter(|p| !p.as_os_str().is_empty()))
         .unwrap_or_else(|| PathBuf::from("."));
     std::fs::create_dir_all(&dir).with_context(|| format!("creating spill dir {}", dir.display()))?;
-    // Phase 1: read run_len-key windows, sort, spill.
+    let guard = SpillGuard::new();
+    let wait = IoWait::new();
+    let threads = part::resolve_threads(cfg.sort_threads);
+    let t0 = Instant::now();
+    // Phase 1: read run_len-key windows in order, sort across the
+    // worker pool, spill in order from the sink thread.
     let mut store = {
-        let mut rd = BufReader::new(
+        let mut rd = BufReader::with_capacity(
+            1 << 20,
             File::open(input).with_context(|| format!("opening {}", input.display()))?,
         );
-        let mut w = SpillWriter::create(next_spill_path(&dir))?;
-        let mut buf = vec![0u8; cfg.run_len * 4];
         let mut remaining = total;
-        while remaining > 0 {
+        let produce = || -> Result<Option<Vec<u32>>> {
+            if remaining == 0 {
+                return Ok(None);
+            }
             let n = (cfg.run_len as u64).min(remaining) as usize;
-            rd.read_exact(&mut buf[..n * 4]).context("reading input keys")?;
-            let mut run: Vec<u32> = buf[..n * 4]
-                .chunks_exact(4)
-                .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
-                .collect();
-            run.sort_unstable();
-            w.push_run(&run)?;
+            let mut buf = vec![0u8; n * 4];
+            wait.timed(|| rd.read_exact(&mut buf)).context("reading input keys")?;
+            let mut keys = Vec::with_capacity(n);
+            io::decode_keys_into(&buf, &mut keys);
             remaining -= n as u64;
-        }
-        let (path, runs) = w.finish()?;
-        stats.spilled_runs += runs.len();
+            Ok(Some(keys))
+        };
+        let w = SpillWriter::new(
+            dir.clone(),
+            cfg.max_fanin,
+            false,
+            guard.clone(),
+            wait.clone(),
+        );
+        let segs = if threads > 1 {
+            io::pipeline(
+                threads,
+                produce,
+                |mut keys: Vec<u32>| {
+                    keys.sort_unstable();
+                    keys
+                },
+                w,
+                |w, run| w.push_run(&run),
+            )?
+            .finish()?
+        } else {
+            let mut w = w;
+            let mut produce = produce;
+            while let Some(mut keys) = produce()? {
+                keys.sort_unstable();
+                w.push_run(&keys)?;
+            }
+            w.finish()?
+        };
+        stats.spilled_runs += segs.iter().map(|s| s.runs.len()).sum::<usize>();
         stats.spill_bytes += bytes;
-        RunStore::File { path, runs }
+        RunStore::Files(segs)
     };
     stats.runs = store.count();
+    stats.run_form_secs = t0.elapsed().as_secs_f64();
+    let tm = Instant::now();
     while store.count() > cfg.max_fanin {
-        (store, kernel) = merge_pass(store, cfg, &mut stats, kernel)?;
+        (store, kernel) = merge_pass(store, cfg, &mut stats, kernel, &guard, &wait)?;
         stats.merge_passes += 1;
     }
-    // Phase 3: stream the final merge straight into the output file.
-    {
-        let mut w = BufWriter::new(
-            File::create(output).with_context(|| format!("creating {}", output.display()))?,
-        );
-        let mut tree = MergeTree::with_kernel(store.open(0, store.count())?, kernel);
-        let mut chunk = Vec::with_capacity(DRAIN);
-        let mut out_bytes = Vec::new();
-        loop {
-            chunk.clear();
-            if tree.next_chunk(DRAIN, &mut chunk)? == 0 {
-                break;
-            }
-            encode_keys(&chunk, &mut out_bytes);
-            w.write_all(&out_bytes)?;
-        }
-        w.flush()?;
-    }
-    store.cleanup();
+    // Phase 3: partition-parallel merge straight into the output file.
+    final_merge_file(&store, output, total, cfg, &mut stats, &wait, kernel)?;
+    store.cleanup(&guard);
+    stats.merge_secs = tm.elapsed().as_secs_f64();
+    stats.io_wait_secs = wait.secs();
     Ok(stats)
 }
 
@@ -419,6 +828,7 @@ mod tests {
             r: 8,
             max_fanin: 3,
             spill_dir: Some(dir.clone()),
+            ..Default::default()
         };
         let (got, stats) = extsort(&data, &cfg).unwrap();
         let mut want = data;
@@ -448,10 +858,12 @@ mod tests {
             r: 8,
             max_fanin: 4,
             spill_dir: Some(dir.clone()),
+            ..Default::default()
         };
         let stats = extsort_file(&input, &output, &cfg).unwrap();
         assert_eq!(stats.keys, data.len());
         assert!(stats.merge_passes >= 1);
+        assert!(stats.partitions >= 1);
         let got: Vec<u32> = std::fs::read(&output)
             .unwrap()
             .chunks_exact(4)
@@ -477,5 +889,28 @@ mod tests {
         assert!(ExtSortConfig { run_len: 0, ..Default::default() }.validate().is_err());
         assert!(ExtSortConfig { max_fanin: 1, ..Default::default() }.validate().is_err());
         assert!(ExtSortConfig { r: 0, ..Default::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn phase_timings_are_populated() {
+        let dir = tmp_dir("timings");
+        let mut rng = Rng::new(0x7131);
+        let data: Vec<u32> = (0..30_000).map(|_| rng.next_u32()).collect();
+        let cfg = ExtSortConfig {
+            run_len: 1024,
+            r: 8,
+            max_fanin: 4,
+            spill_dir: Some(dir.clone()),
+            sort_threads: 2,
+            ..Default::default()
+        };
+        let (got, stats) = extsort(&data, &cfg).unwrap();
+        assert_eq!(got.len(), data.len());
+        assert!(stats.run_form_secs > 0.0);
+        assert!(stats.merge_secs > 0.0);
+        assert!(stats.io_wait_secs >= 0.0);
+        assert!(stats.partitions >= 1);
+        assert!(stats.tree.kernel_rows > 0, "{:?}", stats.tree);
+        let _ = std::fs::remove_dir_all(dir);
     }
 }

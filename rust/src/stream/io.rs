@@ -1,0 +1,381 @@
+//! Disk plumbing for the external sorter: bulk little-endian codecs,
+//! overlap primitives (prefetch + write-behind threads), spill-file
+//! lifecycle guards, and the bounded producer/worker/sink pipeline that
+//! shards run formation across cores.
+//!
+//! Everything here is format-agnostic bytes: the key-only engine
+//! ([`super::extsort`]) and the key-value twin ([`super::kv`]) share
+//! one prefetcher and one write-behind by choosing their record stride
+//! (4-byte keys vs 12-byte records) at the decode/encode layer.
+
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender, TryRecvError};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Stack size for I/O helper threads (prefetchers, write-behind,
+/// pipeline workers). They run no deep recursion, and a partitioned
+/// final merge may hold `partitions · fan-in` of them at once.
+const IO_STACK: usize = 128 * 1024;
+
+/// LE-encode `keys` into `bytes` (cleared first) as one bulk append —
+/// `resize` + fixed-width `chunks_exact_mut` stores, not a per-key
+/// `extend_from_slice` loop. This sits on the disk hot path of every
+/// spill and output write.
+pub fn encode_keys_into(keys: &[u32], bytes: &mut Vec<u8>) {
+    bytes.clear();
+    bytes.resize(keys.len() * 4, 0);
+    for (dst, &k) in bytes.chunks_exact_mut(4).zip(keys) {
+        dst.copy_from_slice(&k.to_le_bytes());
+    }
+}
+
+/// Decode a whole buffer of LE `u32` keys, appending to `out`.
+/// `bytes.len()` must be a multiple of 4.
+pub fn decode_keys_into(bytes: &[u8], out: &mut Vec<u32>) {
+    debug_assert_eq!(bytes.len() % 4, 0);
+    out.reserve(bytes.len() / 4);
+    out.extend(bytes.chunks_exact(4).map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]])));
+}
+
+/// LE-encode 12-byte `(u32 key, u64 payload)` records into `bytes`
+/// (cleared first), bulk like [`encode_keys_into`].
+pub fn encode_records_into(keys: &[u32], pays: &[u64], bytes: &mut Vec<u8>) {
+    debug_assert_eq!(keys.len(), pays.len());
+    bytes.clear();
+    bytes.resize(keys.len() * 12, 0);
+    for ((dst, &k), &p) in bytes.chunks_exact_mut(12).zip(keys).zip(pays) {
+        dst[..4].copy_from_slice(&k.to_le_bytes());
+        dst[4..].copy_from_slice(&p.to_le_bytes());
+    }
+}
+
+/// Decode a whole buffer of 12-byte records, appending to the columns.
+/// `bytes.len()` must be a multiple of 12.
+pub fn decode_records_into(bytes: &[u8], keys: &mut Vec<u32>, pays: &mut Vec<u64>) {
+    debug_assert_eq!(bytes.len() % 12, 0);
+    keys.reserve(bytes.len() / 12);
+    pays.reserve(bytes.len() / 12);
+    for rec in bytes.chunks_exact(12) {
+        keys.push(u32::from_le_bytes([rec[0], rec[1], rec[2], rec[3]]));
+        pays.push(u64::from_le_bytes([
+            rec[4], rec[5], rec[6], rec[7], rec[8], rec[9], rec[10], rec[11],
+        ]));
+    }
+}
+
+/// Shared I/O-wait accounting: nanoseconds compute threads spent
+/// blocked on disk — synchronous reads/writes plus stalls waiting for a
+/// prefetcher or the write-behind thread. Cloned into every helper;
+/// drained into [`super::extsort::ExtSortStats::io_wait_secs`].
+#[derive(Clone, Default)]
+pub struct IoWait(Arc<AtomicU64>);
+
+impl IoWait {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Run `f`, charging its wall time to the counter.
+    pub fn timed<T>(&self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.0.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        out
+    }
+
+    /// Total accumulated wait in seconds.
+    pub fn secs(&self) -> f64 {
+        self.0.load(Ordering::Relaxed) as f64 / 1e9
+    }
+}
+
+/// Unlinks every registered spill file when dropped — the error-path
+/// (and panic-path) lifecycle for spill files. The owning sort
+/// registers each spill file at creation and calls [`Self::remove_now`]
+/// as files are consumed; on a clean finish nothing is left to unlink,
+/// on any early exit the guard sweeps the stragglers.
+#[derive(Clone, Default)]
+pub struct SpillGuard(Arc<GuardInner>);
+
+#[derive(Default)]
+struct GuardInner(Mutex<Vec<PathBuf>>);
+
+impl Drop for GuardInner {
+    fn drop(&mut self) {
+        for p in self.0.get_mut().unwrap_or_else(|e| e.into_inner()).drain(..) {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+impl SpillGuard {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Track `path` for unlink-on-drop.
+    pub fn register(&self, path: &Path) {
+        self.0 .0.lock().unwrap().push(path.to_path_buf());
+    }
+
+    /// Unlink `path` now and stop tracking it (the consumed-segment /
+    /// clean-finish path).
+    pub fn remove_now(&self, path: &Path) {
+        let _ = std::fs::remove_file(path);
+        self.0 .0.lock().unwrap().retain(|p| p != path);
+    }
+}
+
+/// Double-buffered read-ahead over one byte region of a file: a reader
+/// thread fills buffer B while the consumer drains buffer A (channel
+/// capacity 1 ⇒ at most two buffers in flight). Reads are sequential
+/// after one seek, in `buf_bytes` chunks — callers pick a chunk size
+/// that is a multiple of their record stride so records never straddle
+/// buffers.
+pub struct FilePrefetch {
+    rx: Option<Receiver<std::io::Result<Vec<u8>>>>,
+    handle: Option<JoinHandle<()>>,
+    wait: IoWait,
+}
+
+impl FilePrefetch {
+    pub fn spawn(
+        path: &Path,
+        start_byte: u64,
+        len_bytes: u64,
+        buf_bytes: usize,
+        wait: IoWait,
+    ) -> Result<FilePrefetch> {
+        debug_assert!(buf_bytes > 0);
+        let mut file =
+            File::open(path).with_context(|| format!("opening run file {}", path.display()))?;
+        file.seek(SeekFrom::Start(start_byte))
+            .with_context(|| format!("seeking run at byte {start_byte} in {}", path.display()))?;
+        let (tx, rx) = mpsc::sync_channel::<std::io::Result<Vec<u8>>>(1);
+        let handle = std::thread::Builder::new()
+            .name("loms-prefetch".into())
+            .stack_size(IO_STACK)
+            .spawn(move || {
+                let mut remaining = len_bytes;
+                while remaining > 0 {
+                    let n = (buf_bytes as u64).min(remaining) as usize;
+                    let mut buf = vec![0u8; n];
+                    let res = file.read_exact(&mut buf).map(|()| buf);
+                    let failed = res.is_err();
+                    if tx.send(res).is_err() || failed {
+                        return; // consumer gone, or error delivered
+                    }
+                    remaining -= n as u64;
+                }
+            })
+            .context("spawning prefetch thread")?;
+        Ok(FilePrefetch { rx: Some(rx), handle: Some(handle), wait })
+    }
+
+    /// Next filled buffer, `None` once the region is exhausted. Blocks
+    /// only when the reader is behind (charged to the wait counter).
+    pub fn next_buf(&mut self) -> Result<Option<Vec<u8>>> {
+        let Some(rx) = &self.rx else { return Ok(None) };
+        match self.wait.timed(|| rx.recv()) {
+            Ok(Ok(buf)) => Ok(Some(buf)),
+            Ok(Err(e)) => {
+                self.rx = None;
+                Err(e).context("prefetching spill run")
+            }
+            Err(_) => {
+                // Sender exited: region fully delivered.
+                self.rx = None;
+                Ok(None)
+            }
+        }
+    }
+}
+
+impl Drop for FilePrefetch {
+    fn drop(&mut self) {
+        // Closing the channel unblocks a sender mid-`send`; then join so
+        // no reader outlives its file region.
+        self.rx = None;
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Write-behind for one already-positioned file handle: the compute
+/// thread hands off encoded buffers and keeps merging while a writer
+/// thread drains them (channel capacity 2). Buffers recycle back to the
+/// submitter to keep allocation off the steady state.
+pub struct WriteBehind {
+    tx: Option<SyncSender<Vec<u8>>>,
+    recycle: Receiver<Vec<u8>>,
+    handle: Option<JoinHandle<std::io::Result<()>>>,
+    wait: IoWait,
+}
+
+impl WriteBehind {
+    /// `file` should already be seeked to where writing starts; writes
+    /// proceed sequentially from there.
+    pub fn spawn(mut file: File, wait: IoWait) -> Result<WriteBehind> {
+        let (tx, rx) = mpsc::sync_channel::<Vec<u8>>(2);
+        let (rtx, recycle) = mpsc::sync_channel::<Vec<u8>>(4);
+        let handle = std::thread::Builder::new()
+            .name("loms-writebehind".into())
+            .stack_size(IO_STACK)
+            .spawn(move || -> std::io::Result<()> {
+                for buf in rx {
+                    file.write_all(&buf)?;
+                    let _ = rtx.try_send(buf); // recycle if there's room
+                }
+                file.flush()
+            })
+            .context("spawning write-behind thread")?;
+        Ok(WriteBehind { tx: Some(tx), recycle, handle: Some(handle), wait })
+    }
+
+    /// A cleared buffer to encode into — recycled when available.
+    pub fn buffer(&self) -> Vec<u8> {
+        match self.recycle.try_recv() {
+            Ok(mut b) => {
+                b.clear();
+                b
+            }
+            Err(TryRecvError::Empty | TryRecvError::Disconnected) => Vec::new(),
+        }
+    }
+
+    /// Queue `buf` for writing; blocks (charged to the wait counter)
+    /// when two buffers are already in flight. A dead writer thread
+    /// surfaces its I/O error here.
+    pub fn submit(&mut self, buf: Vec<u8>) -> Result<()> {
+        let tx = self.tx.as_ref().expect("submit after finish");
+        if self.wait.timed(|| tx.send(buf)).is_err() {
+            // Writer exited early: it can only have done so on error.
+            self.join().context("write-behind failed")?;
+            anyhow::bail!("write-behind thread exited before finish");
+        }
+        Ok(())
+    }
+
+    fn join(&mut self) -> Result<()> {
+        self.tx = None;
+        match self.handle.take() {
+            Some(h) => match h.join() {
+                Ok(res) => res.context("writing sorted output"),
+                Err(_) => anyhow::bail!("write-behind thread panicked"),
+            },
+            None => Ok(()),
+        }
+    }
+
+    /// Drain the queue, flush, and surface any pending write error.
+    pub fn finish(mut self) -> Result<()> {
+        self.wait.clone().timed(|| self.join())
+    }
+}
+
+impl Drop for WriteBehind {
+    fn drop(&mut self) {
+        let _ = self.join();
+    }
+}
+
+/// Bounded producer / worker-pool / ordered-sink pipeline — phase-1 run
+/// formation sharded across cores.
+///
+/// The calling thread runs `produce` (reading input chunks in order);
+/// `threads` workers apply `work` (the CPU-bound per-run sort); a
+/// dedicated sink thread applies `consume` in **production order**
+/// (reordering out-of-order worker completions through a small map), so
+/// spill writes land on disk exactly as the serial path would write
+/// them. Channels are bounded (`2·threads` each way), capping resident
+/// chunks at O(threads · run_len) however large the input.
+///
+/// The sink value is moved into the sink thread and handed back on
+/// success; any producer or sink error tears the pipeline down (channel
+/// closure unblocks every side) and is propagated.
+pub(crate) fn pipeline<C, R, W>(
+    threads: usize,
+    mut produce: impl FnMut() -> Result<Option<C>>,
+    work: impl Fn(C) -> R + Sync,
+    sink: W,
+    mut consume: impl FnMut(&mut W, R) -> Result<()> + Send,
+) -> Result<W>
+where
+    C: Send,
+    R: Send,
+    W: Send,
+{
+    debug_assert!(threads >= 1);
+    std::thread::scope(|s| {
+        let (work_tx, work_rx) = mpsc::sync_channel::<(u64, C)>(2 * threads);
+        let work_rx = Mutex::new(work_rx);
+        let (done_tx, done_rx) = mpsc::sync_channel::<(u64, R)>(2 * threads);
+        let work = &work;
+        let work_rx = &work_rx;
+        for _ in 0..threads {
+            let done_tx = done_tx.clone();
+            std::thread::Builder::new()
+                .name("loms-runsort".into())
+                .spawn_scoped(s, move || loop {
+                    // Hold the lock only to take the next chunk.
+                    let msg = work_rx.lock().unwrap().recv();
+                    let Ok((seq, c)) = msg else { return };
+                    if done_tx.send((seq, work(c))).is_err() {
+                        return; // sink gone (error path)
+                    }
+                })
+                .expect("spawning run-sort worker");
+        }
+        drop(done_tx);
+        let sink_handle = s.spawn(move || -> Result<W> {
+            let mut sink = sink;
+            let mut next = 0u64;
+            let mut pending: BTreeMap<u64, R> = BTreeMap::new();
+            for (seq, r) in done_rx {
+                pending.insert(seq, r);
+                while let Some(r) = pending.remove(&next) {
+                    consume(&mut sink, r)?;
+                    next += 1;
+                }
+            }
+            anyhow::ensure!(pending.is_empty(), "run pipeline lost sorted chunks");
+            Ok(sink)
+        });
+        // Produce on the calling thread; a failed send means the sink
+        // (or every worker) exited early — stop and let join report it.
+        let mut produce_err = None;
+        let mut seq = 0u64;
+        loop {
+            match produce() {
+                Ok(Some(c)) => {
+                    if work_tx.send((seq, c)).is_err() {
+                        break;
+                    }
+                    seq += 1;
+                }
+                Ok(None) => break,
+                Err(e) => {
+                    produce_err = Some(e);
+                    break;
+                }
+            }
+        }
+        drop(work_tx); // workers drain and exit; then the sink's queue closes
+        let sink_res = match sink_handle.join() {
+            Ok(res) => res,
+            Err(_) => Err(anyhow::anyhow!("run pipeline sink thread panicked")),
+        };
+        match produce_err {
+            Some(e) => Err(e),
+            None => sink_res,
+        }
+    })
+}

@@ -27,8 +27,14 @@ use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
 
-use super::extsort::{ExtSortConfig, ExtSortStats};
+use super::extsort::{ExtSortConfig, ExtSortStats, SpillSeg};
+use super::io::{
+    decode_records_into, encode_records_into, pipeline, FilePrefetch, IoWait, SpillGuard,
+    WriteBehind,
+};
+use super::part::{self, FileCutter};
 use super::tree::TreeStats;
 
 /// Record pairs pulled from the merge tree per drain step.
@@ -152,13 +158,58 @@ impl SortedKvStream for FileRunKvStream {
         }
         self.buf.resize(n * REC_BYTES as usize, 0);
         self.file.read_exact(&mut self.buf).context("reading KV spill run")?;
-        for rec in self.buf.chunks_exact(REC_BYTES as usize) {
-            keys.push(u32::from_le_bytes([rec[0], rec[1], rec[2], rec[3]]));
-            pays.push(u64::from_le_bytes([
-                rec[4], rec[5], rec[6], rec[7], rec[8], rec[9], rec[10], rec[11],
-            ]));
-        }
+        decode_records_into(&self.buf, keys, pays);
         self.remaining -= n as u64;
+        Ok(n)
+    }
+}
+
+/// [`FileRunKvStream`] with a dedicated read-ahead thread: buffer B
+/// fills while the merge tree drains buffer A ([`FilePrefetch`]), so
+/// the tree never blocks on a cold read. Buffers hold whole records.
+pub struct PrefetchRunKvStream {
+    fetch: FilePrefetch,
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl PrefetchRunKvStream {
+    /// Read ahead over records `[start, start + records)` of `path`,
+    /// `buf_records` records per buffer.
+    pub fn open(
+        path: &Path,
+        start: u64,
+        records: u64,
+        buf_records: usize,
+        wait: IoWait,
+    ) -> Result<Self> {
+        let buf_bytes = buf_records.max(1) * REC_BYTES as usize;
+        let fetch =
+            FilePrefetch::spawn(path, start * REC_BYTES, records * REC_BYTES, buf_bytes, wait)?;
+        Ok(PrefetchRunKvStream { fetch, buf: Vec::new(), pos: 0 })
+    }
+}
+
+impl SortedKvStream for PrefetchRunKvStream {
+    fn next_chunk(
+        &mut self,
+        max: usize,
+        keys: &mut Vec<u32>,
+        pays: &mut Vec<u64>,
+    ) -> Result<usize> {
+        if self.pos == self.buf.len() {
+            match self.fetch.next_buf()? {
+                Some(b) => {
+                    self.buf = b;
+                    self.pos = 0;
+                }
+                None => return Ok(0),
+            }
+        }
+        let rec = REC_BYTES as usize;
+        let n = max.min((self.buf.len() - self.pos) / rec);
+        decode_records_into(&self.buf[self.pos..self.pos + n * rec], keys, pays);
+        self.pos += n * rec;
         Ok(n)
     }
 }
@@ -695,17 +746,6 @@ pub fn merge_runs_kv(runs: &[(Vec<u32>, Vec<u64>)], r: usize) -> Result<(Vec<u32
     merge_k_kv(streams, r)
 }
 
-/// LE-encode `(key, payload)` records into the reusable `bytes` buffer.
-fn encode_records(keys: &[u32], pays: &[u64], bytes: &mut Vec<u8>) {
-    debug_assert_eq!(keys.len(), pays.len());
-    bytes.clear();
-    bytes.reserve(keys.len() * REC_BYTES as usize);
-    for (&k, &p) in keys.iter().zip(pays) {
-        bytes.extend_from_slice(&k.to_le_bytes());
-        bytes.extend_from_slice(&p.to_le_bytes());
-    }
-}
-
 /// Monotonic KV spill-file id (pid keeps parallel processes apart).
 fn next_spill_path(dir: &Path) -> PathBuf {
     static NEXT: AtomicU64 = AtomicU64::new(0);
@@ -713,91 +753,191 @@ fn next_spill_path(dir: &Path) -> PathBuf {
     dir.join(format!("loms-kvspill-{}-{id}.kv12", std::process::id()))
 }
 
-/// Append-only writer for a spill file of back-to-back sorted KV runs.
+/// Where encoded KV spill bytes go — see the key-only twin in
+/// [`super::extsort`]: buffered synchronous writes when the caller is
+/// already a dedicated sink thread, write-behind when the caller is the
+/// merge thread itself.
+enum SegSinkKv {
+    Buf(BufWriter<File>),
+    Behind(WriteBehind),
+}
+
+/// Append-only writer for segmented KV spill files of sorted runs —
+/// the key-only `SpillWriter` with 12-byte records. Rotates to a fresh
+/// file every `cap` runs and registers every file with the
+/// [`SpillGuard`].
 struct SpillWriterKv {
-    w: BufWriter<File>,
-    path: PathBuf,
+    dir: PathBuf,
+    guard: SpillGuard,
+    wait: IoWait,
+    behind: bool,
+    cap: usize,
+    sink: Option<(SegSinkKv, PathBuf)>,
     runs: Vec<(u64, u64)>,
-    /// Records written so far.
+    segs: Vec<SpillSeg>,
+    /// Records written into the open segment.
     pos: u64,
     cur: Option<u64>,
     bytes: Vec<u8>,
 }
 
 impl SpillWriterKv {
-    fn create(path: PathBuf) -> Result<SpillWriterKv> {
-        let f = File::create(&path)
-            .with_context(|| format!("creating KV spill file {}", path.display()))?;
-        Ok(SpillWriterKv {
-            w: BufWriter::new(f),
-            path,
+    fn new(dir: PathBuf, cap: usize, behind: bool, guard: SpillGuard, wait: IoWait) -> SpillWriterKv {
+        SpillWriterKv {
+            dir,
+            guard,
+            wait,
+            behind,
+            cap: cap.max(1),
+            sink: None,
             runs: Vec::new(),
+            segs: Vec::new(),
             pos: 0,
             cur: None,
             bytes: Vec::new(),
-        })
+        }
     }
 
-    fn begin_run(&mut self) {
+    fn open_seg(&mut self) -> Result<()> {
+        let path = next_spill_path(&self.dir);
+        let f = File::create(&path)
+            .with_context(|| format!("creating KV spill file {}", path.display()))?;
+        self.guard.register(&path);
+        let sink = if self.behind {
+            SegSinkKv::Behind(WriteBehind::spawn(f, self.wait.clone())?)
+        } else {
+            SegSinkKv::Buf(BufWriter::new(f))
+        };
+        self.sink = Some((sink, path));
+        Ok(())
+    }
+
+    fn begin_run(&mut self) -> Result<()> {
         debug_assert!(self.cur.is_none());
+        if self.sink.is_none() {
+            self.open_seg()?;
+        }
         self.cur = Some(self.pos);
+        Ok(())
     }
 
     fn write_records(&mut self, keys: &[u32], pays: &[u64]) -> Result<()> {
-        encode_records(keys, pays, &mut self.bytes);
-        self.w.write_all(&self.bytes)?;
-        self.pos += keys.len() as u64;
+        let SpillWriterKv { sink, bytes, wait, pos, .. } = self;
+        let (sink, _) = sink.as_mut().expect("write_records outside a run");
+        match sink {
+            SegSinkKv::Buf(w) => {
+                encode_records_into(keys, pays, bytes);
+                wait.timed(|| w.write_all(bytes)).context("writing KV spill run")?;
+            }
+            SegSinkKv::Behind(wb) => {
+                let mut b = wb.buffer();
+                encode_records_into(keys, pays, &mut b);
+                wb.submit(b)?;
+            }
+        }
+        *pos += keys.len() as u64;
         Ok(())
     }
 
-    fn end_run(&mut self) {
+    fn end_run(&mut self) -> Result<()> {
         let start = self.cur.take().expect("end_run without begin_run");
         self.runs.push((start, self.pos - start));
+        if self.runs.len() >= self.cap {
+            self.close_seg()?;
+        }
+        Ok(())
     }
 
     fn push_run(&mut self, keys: &[u32], pays: &[u64]) -> Result<()> {
-        self.begin_run();
+        self.begin_run()?;
         self.write_records(keys, pays)?;
-        self.end_run();
+        self.end_run()
+    }
+
+    fn close_seg(&mut self) -> Result<()> {
+        let Some((sink, path)) = self.sink.take() else { return Ok(()) };
+        match sink {
+            SegSinkKv::Buf(mut w) => {
+                self.wait.timed(|| w.flush()).context("flushing KV spill segment")?
+            }
+            SegSinkKv::Behind(wb) => wb.finish()?,
+        }
+        self.segs.push(SpillSeg { path, runs: std::mem::take(&mut self.runs) });
+        self.pos = 0;
         Ok(())
     }
 
-    fn finish(mut self) -> Result<(PathBuf, Vec<(u64, u64)>)> {
-        self.w.flush()?;
-        Ok((self.path, self.runs))
+    fn finish(mut self) -> Result<Vec<SpillSeg>> {
+        self.close_seg()?;
+        Ok(std::mem::take(&mut self.segs))
     }
 }
 
 /// Where the current generation of KV runs lives.
 enum RunStoreKv {
     Mem(Vec<(Vec<u32>, Vec<u64>)>),
-    File { path: PathBuf, runs: Vec<(u64, u64)> },
+    Files(Vec<SpillSeg>),
+}
+
+/// Open one KV spill run as a stream: prefetched when a buffer is
+/// configured and the run outgrows it, synchronous otherwise.
+fn open_kv_run(
+    path: &Path,
+    start: u64,
+    len: u64,
+    prefetch: usize,
+    wait: &IoWait,
+) -> Result<Box<dyn SortedKvStream + 'static>> {
+    if prefetch == 0 || len <= prefetch as u64 {
+        Ok(boxed_kv(FileRunKvStream::open(path, start, len)?))
+    } else {
+        Ok(boxed_kv(PrefetchRunKvStream::open(path, start, len, prefetch, wait.clone())?))
+    }
 }
 
 impl RunStoreKv {
     fn count(&self) -> usize {
         match self {
             RunStoreKv::Mem(runs) => runs.len(),
-            RunStoreKv::File { runs, .. } => runs.len(),
+            RunStoreKv::Files(segs) => segs.iter().map(|s| s.runs.len()).sum(),
         }
     }
 
-    fn open(&self, lo: usize, hi: usize) -> Result<Vec<Box<dyn SortedKvStream + '_>>> {
+    /// Flatten the segmented layout into `(path, start, len)` per run.
+    fn flat_runs(&self) -> Vec<(&Path, u64, u64)> {
+        match self {
+            RunStoreKv::Mem(_) => Vec::new(),
+            RunStoreKv::Files(segs) => segs
+                .iter()
+                .flat_map(|s| s.runs.iter().map(|&(start, len)| (s.path.as_path(), start, len)))
+                .collect(),
+        }
+    }
+
+    fn open(
+        &self,
+        lo: usize,
+        hi: usize,
+        prefetch: usize,
+        wait: &IoWait,
+    ) -> Result<Vec<Box<dyn SortedKvStream + '_>>> {
         match self {
             RunStoreKv::Mem(runs) => Ok(runs[lo..hi]
                 .iter()
                 .map(|(k, p)| boxed_kv(SliceKvStream::new(k, p)))
                 .collect()),
-            RunStoreKv::File { path, runs } => runs[lo..hi]
+            RunStoreKv::Files(_) => self.flat_runs()[lo..hi]
                 .iter()
-                .map(|&(start, len)| Ok(boxed_kv(FileRunKvStream::open(path, start, len)?)))
+                .map(|&(path, start, len)| open_kv_run(path, start, len, prefetch, wait))
                 .collect(),
         }
     }
 
-    fn cleanup(self) {
-        if let RunStoreKv::File { path, .. } = self {
-            let _ = std::fs::remove_file(path);
+    fn cleanup(self, guard: &SpillGuard) {
+        if let RunStoreKv::Files(segs) = self {
+            for seg in segs {
+                guard.remove_now(&seg.path);
+            }
         }
     }
 }
@@ -815,43 +955,64 @@ fn drain_to_vecs(
     mut tree: MergeTreeKv<'_>,
     keys: &mut Vec<u32>,
     pays: &mut Vec<u64>,
+    tstats: &mut TreeStats,
 ) -> Result<BlockKernelKv> {
     while tree.next_chunk(DRAIN, keys, pays)? > 0 {}
+    tstats.absorb(tree.stats());
     Ok(tree.into_kernel())
 }
 
 /// One intermediate KV pass: merge groups of `max_fanin` runs into the
-/// next generation (memory→memory or spill→spill).
+/// next generation (memory→memory or spill→spill), unlinking each
+/// consumed spill segment as soon as its last run drains — the rolling
+/// pass that keeps the disk footprint near one copy of the data.
 fn merge_pass_kv(
     store: RunStoreKv,
     cfg: &ExtSortConfig,
     stats: &mut ExtSortStats,
     mut kernel: BlockKernelKv,
+    guard: &SpillGuard,
+    wait: &IoWait,
 ) -> Result<(RunStoreKv, BlockKernelKv)> {
     let count = store.count();
-    let next = match &store {
+    match store {
         RunStoreKv::Mem(_) => {
             let mut runs = Vec::with_capacity(count.div_ceil(cfg.max_fanin));
             let mut lo = 0;
             while lo < count {
                 let hi = (lo + cfg.max_fanin).min(count);
                 let (mut rk, mut rp) = (Vec::new(), Vec::new());
-                let tree = MergeTreeKv::with_kernel(store.open(lo, hi)?, kernel);
-                kernel = drain_to_vecs(tree, &mut rk, &mut rp)?;
+                let tree =
+                    MergeTreeKv::with_kernel(store.open(lo, hi, cfg.prefetch_buf, wait)?, kernel);
+                kernel = drain_to_vecs(tree, &mut rk, &mut rp, &mut stats.tree)?;
                 runs.push((rk, rp));
                 lo = hi;
             }
-            RunStoreKv::Mem(runs)
+            Ok((RunStoreKv::Mem(runs), kernel))
         }
-        RunStoreKv::File { path, .. } => {
-            let dir = path.parent().map(Path::to_path_buf).unwrap_or_else(|| PathBuf::from("."));
-            let mut w = SpillWriterKv::create(next_spill_path(&dir))?;
+        RunStoreKv::Files(ref segs) => {
+            let dir = segs
+                .first()
+                .and_then(|s| s.path.parent())
+                .map(Path::to_path_buf)
+                .unwrap_or_else(|| PathBuf::from("."));
+            let seg_ends: Vec<usize> = segs
+                .iter()
+                .scan(0usize, |acc, s| {
+                    *acc += s.runs.len();
+                    Some(*acc)
+                })
+                .collect();
+            let mut w =
+                SpillWriterKv::new(dir, cfg.max_fanin, true, guard.clone(), wait.clone());
             let (mut ck, mut cp) = (Vec::with_capacity(DRAIN), Vec::with_capacity(DRAIN));
             let mut lo = 0;
+            let mut consumed_segs = 0;
             while lo < count {
                 let hi = (lo + cfg.max_fanin).min(count);
-                let mut tree = MergeTreeKv::with_kernel(store.open(lo, hi)?, kernel);
-                w.begin_run();
+                let mut tree =
+                    MergeTreeKv::with_kernel(store.open(lo, hi, cfg.prefetch_buf, wait)?, kernel);
+                w.begin_run()?;
                 loop {
                     ck.clear();
                     cp.clear();
@@ -860,25 +1021,63 @@ fn merge_pass_kv(
                     }
                     w.write_records(&ck, &cp)?;
                 }
-                w.end_run();
+                w.end_run()?;
+                stats.tree.absorb(tree.stats());
                 kernel = tree.into_kernel();
+                if let RunStoreKv::Files(segs) = &store {
+                    while consumed_segs < segs.len() && seg_ends[consumed_segs] <= hi {
+                        guard.remove_now(&segs[consumed_segs].path);
+                        consumed_segs += 1;
+                    }
+                }
                 lo = hi;
             }
-            let (path, runs) = w.finish()?;
-            stats.spilled_runs += runs.len();
-            stats.spill_bytes += runs.iter().map(|&(_, len)| len * REC_BYTES).sum::<u64>();
-            RunStoreKv::File { path, runs }
+            let segs_out = w.finish()?;
+            stats.spilled_runs += segs_out.iter().map(|s| s.runs.len()).sum::<usize>();
+            stats.spill_bytes += segs_out
+                .iter()
+                .flat_map(|s| s.runs.iter())
+                .map(|&(_, len)| len * REC_BYTES)
+                .sum::<u64>();
+            Ok((RunStoreKv::Files(segs_out), kernel))
         }
-    };
-    store.cleanup();
-    Ok((next, kernel))
+    }
 }
 
-/// External key-value sort: form stable runs, optionally spill them as
-/// 12-byte records, merge pass by pass through [`MergeTreeKv`], stream
-/// the final k-way merge into owned columns. Each payload is moved by
-/// I/O and the per-row permutation gather only — never by a
-/// compare-exchange.
+/// Phase-1 stable run formation over in-memory columns, sharded across
+/// `threads` scoped workers on contiguous chunk groups.
+fn form_runs_mem_kv(
+    keys: &[u32],
+    pays: &[u64],
+    run_len: usize,
+    threads: usize,
+) -> Vec<(Vec<u32>, Vec<u64>)> {
+    let chunks: Vec<(&[u32], &[u64])> =
+        keys.chunks(run_len).zip(pays.chunks(run_len)).collect();
+    if threads <= 1 || chunks.len() <= 1 {
+        return chunks.iter().map(|&(ck, cp)| sort_run(ck, cp)).collect();
+    }
+    let per = chunks.len().div_ceil(threads);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = chunks
+            .chunks(per)
+            .map(|group| {
+                s.spawn(move || group.iter().map(|&(ck, cp)| sort_run(ck, cp)).collect::<Vec<_>>())
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("KV run-sort worker panicked"))
+            .collect()
+    })
+}
+
+/// External key-value sort: form stable runs (sharded across
+/// `sort_threads`), optionally spill them as 12-byte records, merge
+/// pass by pass through [`MergeTreeKv`], stream the final k-way merge
+/// into owned columns (range-partitioned across cores when the runs
+/// are in memory). Each payload is moved by I/O and the per-row
+/// permutation gather only — never by a compare-exchange.
 pub fn extsort_kv(
     keys: &[u32],
     pays: &[u64],
@@ -890,50 +1089,219 @@ pub fn extsort_kv(
     let mut kernel = BlockKernelKv::new(cfg.r)?;
     let mut stats = ExtSortStats { keys: keys.len(), ..Default::default() };
     if keys.is_empty() {
+        stats.partitions = 1;
         return Ok((Vec::new(), Vec::new(), stats));
     }
+    let guard = SpillGuard::new();
+    let wait = IoWait::new();
+    let threads = part::resolve_threads(cfg.sort_threads);
+    let t0 = Instant::now();
     let mut store = match &cfg.spill_dir {
-        None => {
-            let runs: Vec<(Vec<u32>, Vec<u64>)> = keys
-                .chunks(cfg.run_len)
-                .zip(pays.chunks(cfg.run_len))
-                .map(|(ck, cp)| sort_run(ck, cp))
-                .collect();
-            RunStoreKv::Mem(runs)
-        }
+        None => RunStoreKv::Mem(form_runs_mem_kv(keys, pays, cfg.run_len, threads)),
         Some(dir) => {
             std::fs::create_dir_all(dir)
                 .with_context(|| format!("creating spill dir {}", dir.display()))?;
-            let mut w = SpillWriterKv::create(next_spill_path(dir))?;
-            for (ck, cp) in keys.chunks(cfg.run_len).zip(pays.chunks(cfg.run_len)) {
-                let (rk, rp) = sort_run(ck, cp);
-                w.push_run(&rk, &rp)?;
-            }
-            let (path, runs) = w.finish()?;
-            stats.spilled_runs += runs.len();
+            let w = SpillWriterKv::new(
+                dir.clone(),
+                cfg.max_fanin,
+                false,
+                guard.clone(),
+                wait.clone(),
+            );
+            let segs = if threads > 1 {
+                let mut chunks = keys.chunks(cfg.run_len).zip(pays.chunks(cfg.run_len));
+                pipeline(
+                    threads,
+                    || Ok(chunks.next()),
+                    |(ck, cp): (&[u32], &[u64])| sort_run(ck, cp),
+                    w,
+                    |w, (rk, rp)| w.push_run(&rk, &rp),
+                )?
+                .finish()?
+            } else {
+                let mut w = w;
+                for (ck, cp) in keys.chunks(cfg.run_len).zip(pays.chunks(cfg.run_len)) {
+                    let (rk, rp) = sort_run(ck, cp);
+                    w.push_run(&rk, &rp)?;
+                }
+                w.finish()?
+            };
+            stats.spilled_runs += segs.iter().map(|s| s.runs.len()).sum::<usize>();
             stats.spill_bytes += REC_BYTES * keys.len() as u64;
-            RunStoreKv::File { path, runs }
+            RunStoreKv::Files(segs)
         }
     };
     stats.runs = store.count();
+    stats.run_form_secs = t0.elapsed().as_secs_f64();
+    let tm = Instant::now();
     while store.count() > cfg.max_fanin {
-        (store, kernel) = merge_pass_kv(store, cfg, &mut stats, kernel)?;
+        (store, kernel) = merge_pass_kv(store, cfg, &mut stats, kernel, &guard, &wait)?;
         stats.merge_passes += 1;
     }
-    let (mut out_k, mut out_p) =
-        (Vec::with_capacity(keys.len()), Vec::with_capacity(keys.len()));
-    drain_to_vecs(
-        MergeTreeKv::with_kernel(store.open(0, store.count())?, kernel),
-        &mut out_k,
-        &mut out_p,
-    )?;
-    store.cleanup();
+    let (out_k, out_p) = match &store {
+        RunStoreKv::Mem(runs)
+            if runs.len() > 1 && part::resolve_partitions(cfg.partitions, keys.len()) > 1 =>
+        {
+            let (ok, op, nparts, tstats) =
+                part::merge_runs_kv_parallel_stats(runs, cfg.r, cfg.partitions)?;
+            stats.partitions = nparts;
+            stats.tree.absorb(tstats);
+            (ok, op)
+        }
+        _ => {
+            let (mut ok, mut op) =
+                (Vec::with_capacity(keys.len()), Vec::with_capacity(keys.len()));
+            let streams = store.open(0, store.count(), cfg.prefetch_buf, &wait)?;
+            let _ = drain_to_vecs(
+                MergeTreeKv::with_kernel(streams, kernel),
+                &mut ok,
+                &mut op,
+                &mut stats.tree,
+            )?;
+            stats.partitions = 1;
+            (ok, op)
+        }
+    };
+    store.cleanup(&guard);
+    stats.merge_secs = tm.elapsed().as_secs_f64();
+    stats.io_wait_secs = wait.secs();
     Ok((out_k, out_p, stats))
+}
+
+/// Phase 3 of a KV file sort — the key-value twin of the key-only
+/// partitioned final pass: cut every run at the sampled pivots (stride
+/// 12), pre-size the output, and merge each key range on its own thread
+/// into its own disjoint region. The cut rule sends all duplicates of a
+/// pivot to one partition, so arrival order among equal keys (and hence
+/// the output bytes) is identical to the single-tree merge.
+fn final_merge_kv_file(
+    store: &RunStoreKv,
+    output: &Path,
+    total: u64,
+    cfg: &ExtSortConfig,
+    stats: &mut ExtSortStats,
+    wait: &IoWait,
+    kernel: BlockKernelKv,
+) -> Result<()> {
+    let runs = store.flat_runs();
+    let parts = part::resolve_partitions(cfg.partitions, total as usize);
+    if parts <= 1 || runs.len() <= 1 || total == 0 {
+        let f = File::create(output)
+            .with_context(|| format!("creating {}", output.display()))?;
+        let mut wb = WriteBehind::spawn(f, wait.clone())?;
+        let mut tree = MergeTreeKv::with_kernel(
+            store.open(0, store.count(), cfg.prefetch_buf, wait)?,
+            kernel,
+        );
+        let (mut ck, mut cp) = (Vec::with_capacity(DRAIN), Vec::with_capacity(DRAIN));
+        loop {
+            ck.clear();
+            cp.clear();
+            if tree.next_chunk(DRAIN, &mut ck, &mut cp)? == 0 {
+                break;
+            }
+            let mut b = wb.buffer();
+            encode_records_into(&ck, &cp, &mut b);
+            wb.submit(b)?;
+        }
+        stats.tree.absorb(tree.stats());
+        wb.finish()?;
+        stats.partitions = 1;
+        return Ok(());
+    }
+    let mut samples = Vec::new();
+    for &(path, start, len) in &runs {
+        FileCutter::open(path, start, len, REC_BYTES)?.sample_into(&mut samples)?;
+    }
+    let pivots = part::pivots_from_samples(samples, parts);
+    let cuts: Vec<Vec<u64>> = runs
+        .iter()
+        .map(|&(path, start, len)| FileCutter::open(path, start, len, REC_BYTES)?.cuts(&pivots))
+        .collect::<Result<_>>()?;
+    let nparts = pivots.len() + 1;
+    let sizes: Vec<u64> =
+        (0..nparts).map(|p| cuts.iter().map(|c| c[p + 1] - c[p]).sum()).collect();
+    let mut offs = Vec::with_capacity(nparts);
+    let mut acc = 0u64;
+    for &sz in &sizes {
+        offs.push(acc);
+        acc += sz;
+    }
+    anyhow::ensure!(acc == total, "KV partition cuts lost records ({acc} of {total})");
+    File::create(output)
+        .and_then(|f| f.set_len(total * REC_BYTES))
+        .with_context(|| format!("creating {}", output.display()))?;
+    let (runs, cuts, sizes, offs) = (&runs, &cuts, &sizes, &offs);
+    let part_stats = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..nparts)
+            .filter(|&p| sizes[p] > 0)
+            .map(|p| {
+                s.spawn(move || -> Result<TreeStats> {
+                    let mut f = File::options()
+                        .write(true)
+                        .open(output)
+                        .with_context(|| format!("opening {} region", output.display()))?;
+                    f.seek(SeekFrom::Start(offs[p] * REC_BYTES))?;
+                    let mut wb = WriteBehind::spawn(f, wait.clone())?;
+                    let streams: Vec<Box<dyn SortedKvStream + '_>> = runs
+                        .iter()
+                        .enumerate()
+                        .filter(|(i, _)| cuts[*i][p + 1] > cuts[*i][p])
+                        .map(|(i, &(path, start, _))| {
+                            open_kv_run(
+                                path,
+                                start + cuts[i][p],
+                                cuts[i][p + 1] - cuts[i][p],
+                                cfg.prefetch_buf,
+                                wait,
+                            )
+                        })
+                        .collect::<Result<_>>()?;
+                    let mut tree = MergeTreeKv::new(streams, cfg.r)?;
+                    let (mut ck, mut cp) =
+                        (Vec::with_capacity(DRAIN), Vec::with_capacity(DRAIN));
+                    let mut written = 0u64;
+                    loop {
+                        ck.clear();
+                        cp.clear();
+                        let n = tree.next_chunk(DRAIN, &mut ck, &mut cp)?;
+                        if n == 0 {
+                            break;
+                        }
+                        let mut b = wb.buffer();
+                        encode_records_into(&ck, &cp, &mut b);
+                        wb.submit(b)?;
+                        written += n as u64;
+                    }
+                    anyhow::ensure!(
+                        written == sizes[p],
+                        "KV partition {p} wrote {written} of {} records",
+                        sizes[p]
+                    );
+                    wb.finish()?;
+                    Ok(tree.stats())
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().map_err(|_| anyhow!("KV partition merge panicked"))?)
+            .collect::<Result<Vec<TreeStats>>>()
+    })?;
+    for st in part_stats {
+        stats.tree.absorb(st);
+    }
+    stats.partitions = nparts;
+    Ok(())
 }
 
 /// Sort a file of 12-byte little-endian `(u32 key, u64 payload)`
 /// records into `output` in bounded memory — the key-value twin of
-/// [`super::extsort::extsort_file`]. Backs `loms sort --payload`.
+/// [`super::extsort::extsort_file`]: pipelined run formation across
+/// `sort_threads`, prefetched spill reads, write-behind spill writes,
+/// rolling segment deletion, and a range-partitioned final pass. Spill
+/// files are unlinked even when the sort fails partway. Backs
+/// `loms sort --payload`.
 pub fn extsort_kv_file(input: &Path, output: &Path, cfg: &ExtSortConfig) -> Result<ExtSortStats> {
     anyhow::ensure!(cfg.run_len >= 1, "run_len must be >= 1");
     anyhow::ensure!(cfg.max_fanin >= 2, "max_fanin must be >= 2");
@@ -955,58 +1323,71 @@ pub fn extsort_kv_file(input: &Path, output: &Path, cfg: &ExtSortConfig) -> Resu
         .unwrap_or_else(|| PathBuf::from("."));
     std::fs::create_dir_all(&dir)
         .with_context(|| format!("creating spill dir {}", dir.display()))?;
-    // Phase 1: read run_len-record windows, stable-sort, spill.
+    let guard = SpillGuard::new();
+    let wait = IoWait::new();
+    let threads = part::resolve_threads(cfg.sort_threads);
+    let t0 = Instant::now();
+    // Phase 1: read run_len-record windows in order, stable-sort across
+    // the worker pool, spill in order from the sink thread.
     let mut store = {
-        let mut rd = BufReader::new(
+        let mut rd = BufReader::with_capacity(
+            1 << 20,
             File::open(input).with_context(|| format!("opening {}", input.display()))?,
         );
-        let mut w = SpillWriterKv::create(next_spill_path(&dir))?;
-        let mut buf = vec![0u8; cfg.run_len * REC_BYTES as usize];
         let mut remaining = total;
-        while remaining > 0 {
-            let n = (cfg.run_len as u64).min(remaining) as usize;
-            rd.read_exact(&mut buf[..n * REC_BYTES as usize]).context("reading input records")?;
-            let (mut ck, mut cp) = (Vec::with_capacity(n), Vec::with_capacity(n));
-            for rec in buf[..n * REC_BYTES as usize].chunks_exact(REC_BYTES as usize) {
-                ck.push(u32::from_le_bytes([rec[0], rec[1], rec[2], rec[3]]));
-                cp.push(u64::from_le_bytes([
-                    rec[4], rec[5], rec[6], rec[7], rec[8], rec[9], rec[10], rec[11],
-                ]));
+        let produce = || -> Result<Option<(Vec<u32>, Vec<u64>)>> {
+            if remaining == 0 {
+                return Ok(None);
             }
-            let (rk, rp) = sort_run(&ck, &cp);
-            w.push_run(&rk, &rp)?;
+            let n = (cfg.run_len as u64).min(remaining) as usize;
+            let mut buf = vec![0u8; n * REC_BYTES as usize];
+            wait.timed(|| rd.read_exact(&mut buf)).context("reading input records")?;
+            let (mut ck, mut cp) = (Vec::with_capacity(n), Vec::with_capacity(n));
+            decode_records_into(&buf, &mut ck, &mut cp);
             remaining -= n as u64;
-        }
-        let (path, runs) = w.finish()?;
-        stats.spilled_runs += runs.len();
+            Ok(Some((ck, cp)))
+        };
+        let w = SpillWriterKv::new(
+            dir.clone(),
+            cfg.max_fanin,
+            false,
+            guard.clone(),
+            wait.clone(),
+        );
+        let segs = if threads > 1 {
+            pipeline(
+                threads,
+                produce,
+                |(ck, cp): (Vec<u32>, Vec<u64>)| sort_run(&ck, &cp),
+                w,
+                |w, (rk, rp)| w.push_run(&rk, &rp),
+            )?
+            .finish()?
+        } else {
+            let mut w = w;
+            let mut produce = produce;
+            while let Some((ck, cp)) = produce()? {
+                let (rk, rp) = sort_run(&ck, &cp);
+                w.push_run(&rk, &rp)?;
+            }
+            w.finish()?
+        };
+        stats.spilled_runs += segs.iter().map(|s| s.runs.len()).sum::<usize>();
         stats.spill_bytes += bytes;
-        RunStoreKv::File { path, runs }
+        RunStoreKv::Files(segs)
     };
     stats.runs = store.count();
+    stats.run_form_secs = t0.elapsed().as_secs_f64();
+    let tm = Instant::now();
     while store.count() > cfg.max_fanin {
-        (store, kernel) = merge_pass_kv(store, cfg, &mut stats, kernel)?;
+        (store, kernel) = merge_pass_kv(store, cfg, &mut stats, kernel, &guard, &wait)?;
         stats.merge_passes += 1;
     }
-    // Phase 3: stream the final merge straight into the output file.
-    {
-        let mut w = BufWriter::new(
-            File::create(output).with_context(|| format!("creating {}", output.display()))?,
-        );
-        let mut tree = MergeTreeKv::with_kernel(store.open(0, store.count())?, kernel);
-        let (mut ck, mut cp) = (Vec::with_capacity(DRAIN), Vec::with_capacity(DRAIN));
-        let mut out_bytes = Vec::new();
-        loop {
-            ck.clear();
-            cp.clear();
-            if tree.next_chunk(DRAIN, &mut ck, &mut cp)? == 0 {
-                break;
-            }
-            encode_records(&ck, &cp, &mut out_bytes);
-            w.write_all(&out_bytes)?;
-        }
-        w.flush()?;
-    }
-    store.cleanup();
+    // Phase 3: partition-parallel merge straight into the output file.
+    final_merge_kv_file(&store, output, total, cfg, &mut stats, &wait, kernel)?;
+    store.cleanup(&guard);
+    stats.merge_secs = tm.elapsed().as_secs_f64();
+    stats.io_wait_secs = wait.secs();
     Ok(stats)
 }
 
@@ -1221,6 +1602,7 @@ mod tests {
             r: 8,
             max_fanin: 3,
             spill_dir: Some(dir.clone()),
+            ..Default::default()
         };
         let (gk, gp, stats) = extsort_kv(&keys, &pays, &cfg).unwrap();
         check_kv(&gk, &gp, &[(keys, pays)]);
@@ -1240,17 +1622,19 @@ mod tests {
         let keys: Vec<u32> = (0..5_000).map(|_| rng.next_u32() % 4099).collect();
         let pays: Vec<u64> = (0..keys.len() as u64).collect();
         let mut bytes = Vec::new();
-        encode_records(&keys, &pays, &mut bytes);
+        encode_records_into(&keys, &pays, &mut bytes);
         std::fs::write(&input, &bytes).unwrap();
         let cfg = ExtSortConfig {
             run_len: 333,
             r: 8,
             max_fanin: 4,
             spill_dir: Some(dir.clone()),
+            ..Default::default()
         };
         let stats = extsort_kv_file(&input, &output, &cfg).unwrap();
         assert_eq!(stats.keys, keys.len());
         assert!(stats.merge_passes >= 1);
+        assert!(stats.partitions >= 1);
         let out = std::fs::read(&output).unwrap();
         let (mut gk, mut gp) = (Vec::new(), Vec::new());
         for rec in out.chunks_exact(12) {
@@ -1271,7 +1655,7 @@ mod tests {
         let keys: Vec<u32> = (0..50).map(|x| x * 3).collect();
         let pays: Vec<u64> = (0..50).map(|x| x * 7).collect();
         let mut bytes = Vec::new();
-        encode_records(&keys, &pays, &mut bytes);
+        encode_records_into(&keys, &pays, &mut bytes);
         std::fs::write(&path, &bytes).unwrap();
         let mut a = FileRunKvStream::open(&path, 0, 20).unwrap();
         let mut b = FileRunKvStream::open(&path, 20, 30).unwrap();

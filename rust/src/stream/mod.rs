@@ -18,10 +18,18 @@
 //!   bounded inter-node FIFOs; every scheduling round batches all ready
 //!   nodes through one lane-executor call, so independent tree nodes
 //!   fill SIMD lanes together. O(k·R) resident keys, any stream length.
-//! * [`extsort`] — run formation + spill + multi-pass streaming merge:
-//!   sorts arbitrarily large inputs (in-memory slices or files of
-//!   little-endian `u32` keys) in bounded memory. Backs the `loms sort`
-//!   CLI and replaces the planner's scalar heap as its phase-3 engine.
+//! * [`extsort`] — pipelined run formation (sharded across cores behind
+//!   a bounded chunk queue) + segmented spill + multi-pass streaming
+//!   merge with rolling segment deletion: sorts arbitrarily large
+//!   inputs (in-memory slices or files of little-endian `u32` keys) in
+//!   bounded memory. Backs the `loms sort` CLI and replaces the
+//!   planner's scalar heap as its phase-3 engine.
+//! * [`io`] — the disk plumbing underneath: bulk LE codecs, prefetch /
+//!   write-behind overlap threads, spill-file drop guards, and the
+//!   producer/worker/sink run-formation pipeline.
+//! * [`part`] — sampling-based range partitioning for the final pass:
+//!   P independent merge trees over exact per-run cuts produce the
+//!   byte-identical output of one tree, on P cores.
 //! * [`kv`] — the key-value twin of the whole stack: every key carries
 //!   a `u64` payload that never enters a compare-exchange. Keys run the
 //!   rank-then-permute lowering (packed with origin ranks through the
@@ -29,16 +37,23 @@
 //!   payload column once per node step.
 
 pub mod extsort;
+pub mod io;
 pub mod kv;
 pub mod merge2;
+pub mod part;
 pub mod source;
 pub mod tree;
 
 pub use extsort::{extsort, extsort_file, extsort_with, ExtSortConfig, ExtSortStats, RunFormer};
+pub use io::{encode_keys_into, encode_records_into, IoWait, SpillGuard};
 pub use kv::{
     boxed_kv, extsort_kv, extsort_kv_file, merge_k_kv, merge_runs_kv, BlockKernelKv,
-    BlockMerger2Kv, FileRunKvStream, MergeTreeKv, SliceKvStream, SortedKvStream, VecKvStream,
+    BlockMerger2Kv, FileRunKvStream, MergeTreeKv, PrefetchRunKvStream, SliceKvStream,
+    SortedKvStream, VecKvStream,
 };
 pub use merge2::{BlockKernel, BlockMerger2};
-pub use source::{boxed, FileRunStream, IterStream, SliceStream, SortedStream, VecStream};
+pub use part::{merge_runs_kv_parallel, merge_runs_parallel};
+pub use source::{
+    boxed, FileRunStream, IterStream, PrefetchRunStream, SliceStream, SortedStream, VecStream,
+};
 pub use tree::{merge_k, merge_runs, MergeTree, TreeStats, DEFAULT_R};

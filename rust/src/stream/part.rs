@@ -1,0 +1,406 @@
+//! Sampling-based range partitioning for the final merge pass.
+//!
+//! The last pass of an external sort merges k sorted runs once — the
+//! one place a single merge tree serializes the whole output. Because
+//! every run is sorted, the key domain splits exactly: sample each
+//! run's keys, pick P−1 pivots at the sample quantiles, and cut every
+//! run at `partition_point(key < pivot)`. Partition p then holds
+//! precisely the keys in `[pivot[p−1], pivot[p])` from every run, so P
+//! independent [`MergeTree`]s produce disjoint, contiguous spans of the
+//! global output — concatenation (or P seeked writers into one
+//! pre-sized file) reproduces the single-tree output **byte for byte**.
+//! Duplicates of a pivot all land in the right-hand partition, so equal
+//! keys never straddle a boundary and the key-value engine's stability
+//! (arrival order among equal keys) survives partitioning.
+//!
+//! This is the software rendering of the IPS2Ra-style sampling
+//! classifier the ROADMAP grounds phase 3 in; the merge inside each
+//! partition stays the paper's LOMS tile kernel.
+
+use super::kv::{boxed_kv, merge_runs_kv, MergeTreeKv, SliceKvStream, SortedKvStream};
+use super::source::{boxed, SliceStream, SortedStream};
+use super::tree::{merge_runs, MergeTree, TreeStats};
+use anyhow::{Context, Result};
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom};
+use std::path::Path;
+
+/// Keys drained from a partition tree per step.
+const DRAIN: usize = 4096;
+
+/// Keys sampled per run when picking pivots.
+const SAMPLES_PER_RUN: usize = 32;
+
+/// Smallest worthwhile partition (keys) when auto-sizing.
+const MIN_PART_KEYS: usize = 1 << 15;
+
+/// Resolve a partition-count request: `0` = auto (one per core, but
+/// never smaller than [`MIN_PART_KEYS`]-key partitions), explicit
+/// values honored as given.
+pub(crate) fn resolve_partitions(requested: usize, total_keys: usize) -> usize {
+    if requested != 0 {
+        return requested;
+    }
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    cores.min((total_keys / MIN_PART_KEYS).max(1)).min(64)
+}
+
+/// Resolve a worker-thread request: `0` = auto (one per core).
+pub(crate) fn resolve_threads(requested: usize) -> usize {
+    if requested != 0 {
+        return requested;
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(64)
+}
+
+/// P−1 ascending pivots from pooled run samples (sorted here), at the
+/// sample quantiles. Deduplicated — duplicate-heavy inputs yield fewer
+/// effective partitions rather than empty ones.
+pub(crate) fn pivots_from_samples(mut samples: Vec<u32>, parts: usize) -> Vec<u32> {
+    if samples.is_empty() || parts <= 1 {
+        return Vec::new();
+    }
+    samples.sort_unstable();
+    let mut pivots: Vec<u32> =
+        (1..parts).map(|p| samples[p * samples.len() / parts]).collect();
+    pivots.dedup();
+    pivots
+}
+
+/// Evenly spaced samples from one in-memory sorted run.
+pub(crate) fn sample_slice(run: &[u32], out: &mut Vec<u32>) {
+    let s = SAMPLES_PER_RUN.min(run.len());
+    for j in 0..s {
+        out.push(run[j * run.len() / s]);
+    }
+}
+
+/// Cut boundaries for one sorted run: `[0, c_1, …, c_{P−1}, len]` with
+/// `c_p = partition_point(key < pivot_p)` — exact because the run is
+/// sorted, monotone because the pivots are.
+pub(crate) fn cut_slice(run: &[u32], pivots: &[u32]) -> Vec<usize> {
+    let mut bounds = Vec::with_capacity(pivots.len() + 2);
+    bounds.push(0);
+    for &pv in pivots {
+        bounds.push(run.partition_point(|&k| k < pv));
+    }
+    bounds.push(run.len());
+    bounds
+}
+
+/// Sampling and boundary search over one sorted run inside a spill
+/// file, by seeked point reads — `stride` bytes per record, key in the
+/// first 4 bytes little-endian (4 = key-only spill, 12 = KV spill).
+/// O(samples + pivots·log len) reads, so cut discovery costs a few
+/// hundred random 4-byte reads per run however large the spill.
+pub(crate) struct FileCutter {
+    file: File,
+    start: u64,
+    len: u64,
+    stride: u64,
+}
+
+impl FileCutter {
+    pub(crate) fn open(path: &Path, start: u64, len: u64, stride: u64) -> Result<FileCutter> {
+        let file = File::open(path)
+            .with_context(|| format!("opening run file {} for cuts", path.display()))?;
+        Ok(FileCutter { file, start, len, stride })
+    }
+
+    fn key_at(&mut self, idx: u64) -> Result<u32> {
+        let mut b = [0u8; 4];
+        self.file
+            .seek(SeekFrom::Start((self.start + idx) * self.stride))
+            .and_then(|_| self.file.read_exact(&mut b))
+            .context("point-reading run key for partition cut")?;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    pub(crate) fn sample_into(&mut self, out: &mut Vec<u32>) -> Result<()> {
+        let s = (SAMPLES_PER_RUN as u64).min(self.len);
+        for j in 0..s {
+            let key = self.key_at(j * self.len / s)?;
+            out.push(key);
+        }
+        Ok(())
+    }
+
+    /// Record-index boundaries `[0, c_1, …, len]` for `pivots`.
+    pub(crate) fn cuts(&mut self, pivots: &[u32]) -> Result<Vec<u64>> {
+        let mut bounds = Vec::with_capacity(pivots.len() + 2);
+        bounds.push(0);
+        for &pv in pivots {
+            let (mut lo, mut hi) = (0u64, self.len);
+            while lo < hi {
+                let mid = lo + (hi - lo) / 2;
+                if self.key_at(mid)? < pv {
+                    lo = mid + 1;
+                } else {
+                    hi = mid;
+                }
+            }
+            bounds.push(lo);
+        }
+        bounds.push(self.len);
+        Ok(bounds)
+    }
+}
+
+/// Merge in-memory sorted runs across `partitions` range-partitioned
+/// merge trees on as many threads (`0` = auto). Output is identical to
+/// [`merge_runs`] — partitioning only parallelizes, never reorders.
+pub fn merge_runs_parallel(runs: &[Vec<u32>], r: usize, partitions: usize) -> Result<Vec<u32>> {
+    Ok(merge_runs_parallel_stats(runs, r, partitions)?.0)
+}
+
+/// [`merge_runs_parallel`] plus (effective partitions, pooled tree
+/// stats) — the external sorter's in-memory final pass.
+pub(crate) fn merge_runs_parallel_stats(
+    runs: &[Vec<u32>],
+    r: usize,
+    partitions: usize,
+) -> Result<(Vec<u32>, usize, TreeStats)> {
+    let total: usize = runs.iter().map(Vec::len).sum();
+    let parts = resolve_partitions(partitions, total);
+    if parts <= 1 || runs.len() <= 1 || total == 0 {
+        return Ok((merge_runs(runs, r)?, 1, TreeStats::default()));
+    }
+    let mut samples = Vec::new();
+    for run in runs {
+        sample_slice(run, &mut samples);
+    }
+    let pivots = pivots_from_samples(samples, parts);
+    let cuts: Vec<Vec<usize>> = runs.iter().map(|run| cut_slice(run, &pivots)).collect();
+    let nparts = pivots.len() + 1;
+    let sizes: Vec<usize> =
+        (0..nparts).map(|p| cuts.iter().map(|c| c[p + 1] - c[p]).sum()).collect();
+    let mut out = vec![0u32; total];
+    let mut stats = TreeStats::default();
+    {
+        let mut regions: Vec<&mut [u32]> = Vec::with_capacity(nparts);
+        let mut rest = out.as_mut_slice();
+        for &sz in &sizes {
+            let (a, b) = std::mem::take(&mut rest).split_at_mut(sz);
+            regions.push(a);
+            rest = b;
+        }
+        let cuts = &cuts;
+        let part_stats = std::thread::scope(|s| {
+            let handles: Vec<_> = regions
+                .into_iter()
+                .enumerate()
+                .map(|(p, region)| {
+                    s.spawn(move || -> Result<TreeStats> {
+                        let streams: Vec<Box<dyn SortedStream + '_>> = runs
+                            .iter()
+                            .enumerate()
+                            .filter(|(i, _)| cuts[*i][p + 1] > cuts[*i][p])
+                            .map(|(i, run)| boxed(SliceStream::new(&run[cuts[i][p]..cuts[i][p + 1]])))
+                            .collect();
+                        let mut tree = MergeTree::new(streams, r)?;
+                        drain_into_region(&mut tree, region)?;
+                        Ok(tree.stats())
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().map_err(|_| anyhow::anyhow!("partition merge panicked"))?)
+                .collect::<Result<Vec<TreeStats>>>()
+        })?;
+        for st in part_stats {
+            stats.absorb(st);
+        }
+    }
+    Ok((out, nparts, stats))
+}
+
+/// Drain `tree` exactly into `region`, erroring on any size mismatch
+/// (a cut bug would show up here, not as silent corruption).
+fn drain_into_region(tree: &mut MergeTree<'_>, region: &mut [u32]) -> Result<()> {
+    let mut filled = 0usize;
+    let mut chunk = Vec::with_capacity(DRAIN);
+    loop {
+        chunk.clear();
+        let n = tree.next_chunk(DRAIN, &mut chunk)?;
+        if n == 0 {
+            break;
+        }
+        anyhow::ensure!(filled + n <= region.len(), "partition produced too many keys");
+        region[filled..filled + n].copy_from_slice(&chunk);
+        filled += n;
+    }
+    anyhow::ensure!(filled == region.len(), "partition produced too few keys");
+    Ok(())
+}
+
+/// Key-value twin of [`merge_runs_parallel`]: identical output to
+/// [`merge_runs_kv`], including arrival order among equal keys (all
+/// duplicates of a pivot land in one partition).
+pub fn merge_runs_kv_parallel(
+    runs: &[(Vec<u32>, Vec<u64>)],
+    r: usize,
+    partitions: usize,
+) -> Result<(Vec<u32>, Vec<u64>)> {
+    let (k, p, _, _) = merge_runs_kv_parallel_stats(runs, r, partitions)?;
+    Ok((k, p))
+}
+
+/// [`merge_runs_kv_parallel`] plus (effective partitions, pooled tree
+/// stats) — the KV external sorter's in-memory final pass.
+pub(crate) fn merge_runs_kv_parallel_stats(
+    runs: &[(Vec<u32>, Vec<u64>)],
+    r: usize,
+    partitions: usize,
+) -> Result<(Vec<u32>, Vec<u64>, usize, TreeStats)> {
+    let total: usize = runs.iter().map(|(k, _)| k.len()).sum();
+    let parts = resolve_partitions(partitions, total);
+    if parts <= 1 || runs.len() <= 1 || total == 0 {
+        let (k, p) = merge_runs_kv(runs, r)?;
+        return Ok((k, p, 1, TreeStats::default()));
+    }
+    let mut samples = Vec::new();
+    for (keys, _) in runs {
+        sample_slice(keys, &mut samples);
+    }
+    let pivots = pivots_from_samples(samples, parts);
+    let cuts: Vec<Vec<usize>> = runs.iter().map(|(k, _)| cut_slice(k, &pivots)).collect();
+    let nparts = pivots.len() + 1;
+    let sizes: Vec<usize> =
+        (0..nparts).map(|p| cuts.iter().map(|c| c[p + 1] - c[p]).sum()).collect();
+    let mut out_k = vec![0u32; total];
+    let mut out_p = vec![0u64; total];
+    let mut stats = TreeStats::default();
+    {
+        let mut regions: Vec<(&mut [u32], &mut [u64])> = Vec::with_capacity(nparts);
+        let (mut rest_k, mut rest_p) = (out_k.as_mut_slice(), out_p.as_mut_slice());
+        for &sz in &sizes {
+            let (ak, bk) = std::mem::take(&mut rest_k).split_at_mut(sz);
+            let (ap, bp) = std::mem::take(&mut rest_p).split_at_mut(sz);
+            regions.push((ak, ap));
+            rest_k = bk;
+            rest_p = bp;
+        }
+        let cuts = &cuts;
+        let part_stats = std::thread::scope(|s| {
+            let handles: Vec<_> = regions
+                .into_iter()
+                .enumerate()
+                .map(|(p, (reg_k, reg_p))| {
+                    s.spawn(move || -> Result<TreeStats> {
+                        let streams: Vec<Box<dyn SortedKvStream + '_>> = runs
+                            .iter()
+                            .enumerate()
+                            .filter(|(i, _)| cuts[*i][p + 1] > cuts[*i][p])
+                            .map(|(i, (rk, rp))| {
+                                boxed_kv(SliceKvStream::new(
+                                    &rk[cuts[i][p]..cuts[i][p + 1]],
+                                    &rp[cuts[i][p]..cuts[i][p + 1]],
+                                ))
+                            })
+                            .collect();
+                        let mut tree = MergeTreeKv::new(streams, r)?;
+                        drain_into_regions_kv(&mut tree, reg_k, reg_p)?;
+                        Ok(tree.stats())
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().map_err(|_| anyhow::anyhow!("partition merge panicked"))?)
+                .collect::<Result<Vec<TreeStats>>>()
+        })?;
+        for st in part_stats {
+            stats.absorb(st);
+        }
+    }
+    Ok((out_k, out_p, nparts, stats))
+}
+
+/// KV twin of [`drain_into_region`].
+fn drain_into_regions_kv(
+    tree: &mut MergeTreeKv<'_>,
+    reg_k: &mut [u32],
+    reg_p: &mut [u64],
+) -> Result<()> {
+    let mut filled = 0usize;
+    let (mut ck, mut cp) = (Vec::with_capacity(DRAIN), Vec::with_capacity(DRAIN));
+    loop {
+        ck.clear();
+        cp.clear();
+        let n = tree.next_chunk(DRAIN, &mut ck, &mut cp)?;
+        if n == 0 {
+            break;
+        }
+        anyhow::ensure!(filled + n <= reg_k.len(), "partition produced too many pairs");
+        reg_k[filled..filled + n].copy_from_slice(&ck);
+        reg_p[filled..filled + n].copy_from_slice(&cp);
+        filled += n;
+    }
+    anyhow::ensure!(filled == reg_k.len(), "partition produced too few pairs");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn cuts_are_exact_and_monotone() {
+        let run = vec![1u32, 3, 3, 3, 7, 9, 9, 20];
+        let pivots = vec![3u32, 9, 15];
+        let c = cut_slice(&run, &pivots);
+        assert_eq!(c, vec![0, 1, 5, 7, 8]);
+        // Every key < pivot left of the cut, every key >= pivot right.
+        for (pi, &pv) in pivots.iter().enumerate() {
+            assert!(run[..c[pi + 1]].iter().all(|&k| k < pv));
+            assert!(run[c[pi + 1]..].iter().all(|&k| k >= pv));
+        }
+    }
+
+    #[test]
+    fn parallel_merge_matches_single_tree() {
+        let mut rng = Rng::new(0x9A37);
+        for &k in &[2usize, 5, 9] {
+            for &parts in &[2usize, 3, 7] {
+                let runs: Vec<Vec<u32>> =
+                    (0..k).map(|_| rng.sorted_list_ragged(0, 400, u32::MAX)).collect();
+                let want = merge_runs(&runs, 8).unwrap();
+                let got = merge_runs_parallel(&runs, 8, parts).unwrap();
+                assert_eq!(got, want, "k={k} parts={parts}");
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_heavy_runs_keep_stability_across_partitions() {
+        // Few distinct keys force duplicates to straddle naive splits;
+        // the cut rule must keep payload arrival order identical to the
+        // single tree.
+        let mut rng = Rng::new(0x9A38);
+        let runs: Vec<(Vec<u32>, Vec<u64>)> = (0..6)
+            .map(|i| {
+                let mut keys: Vec<u32> = (0..500).map(|_| rng.next_u32() % 5).collect();
+                keys.sort_unstable();
+                let pays = (0..keys.len() as u64).map(|t| ((i as u64) << 32) | t).collect();
+                (keys, pays)
+            })
+            .collect();
+        let want = merge_runs_kv(&runs, 8).unwrap();
+        for &parts in &[2usize, 4, 16] {
+            let got = merge_runs_kv_parallel(&runs, 8, parts).unwrap();
+            assert_eq!(got, want, "parts={parts}");
+        }
+    }
+
+    #[test]
+    fn degenerate_partition_requests() {
+        let runs = vec![vec![5u32, 6], vec![1u32, 9]];
+        let want = merge_runs(&runs, 4).unwrap();
+        for parts in [1usize, 2, 64] {
+            assert_eq!(merge_runs_parallel(&runs, 4, parts).unwrap(), want);
+        }
+        assert_eq!(merge_runs_parallel(&[], 4, 8).unwrap(), Vec::<u32>::new());
+    }
+}

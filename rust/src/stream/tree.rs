@@ -154,6 +154,16 @@ pub struct TreeStats {
     pub flushes: u64,
 }
 
+impl TreeStats {
+    /// Pool another tree's counters into this one — the external sorter
+    /// sums stats across passes and across partitioned final-merge trees.
+    pub fn absorb(&mut self, other: TreeStats) {
+        self.kernel_batches += other.kernel_batches;
+        self.kernel_rows += other.kernel_rows;
+        self.flushes += other.flushes;
+    }
+}
+
 /// A k-way streaming merge: [`SortedStream`] in, [`SortedStream`] out,
 /// O(k·R) resident keys.
 pub struct MergeTree<'a> {

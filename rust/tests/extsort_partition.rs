@@ -1,0 +1,293 @@
+//! Partitioned external sort vs the single-tree path, byte for byte.
+//!
+//! The range-partitioned final merge claims *byte-identical* output to
+//! one big merge tree — same keys, same order, same payload permutation
+//! — whatever the partition count, thread count or prefetch depth. This
+//! suite checks that claim on the file-to-file paths across the inputs
+//! most likely to break it: ragged partition sizes, duplicate-heavy
+//! keys straddling pivot boundaries, keys adjacent to `u32::MAX`, and
+//! inputs too small to partition at all. It also covers the spill-file
+//! lifecycle (concurrent sorts in one spill dir; failed sorts must not
+//! leak spill files) and the phase-timing stats surface.
+
+use loms::stream::{
+    self, encode_keys_into, encode_records_into, merge_runs_kv_parallel, merge_runs_parallel,
+    ExtSortConfig, ExtSortStats,
+};
+use loms::util::Rng;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Fresh scratch dir per test (process id + label keep parallel test
+/// binaries and parallel tests apart).
+fn scratch(label: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("loms_part_{}_{label}", std::process::id()));
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn write_keys(path: &Path, keys: &[u32]) {
+    let mut bytes = Vec::new();
+    encode_keys_into(keys, &mut bytes);
+    fs::write(path, bytes).unwrap();
+}
+
+fn write_records(path: &Path, keys: &[u32], pays: &[u64]) {
+    let mut bytes = Vec::new();
+    encode_records_into(keys, pays, &mut bytes);
+    fs::write(path, bytes).unwrap();
+}
+
+/// Sort `input` twice — forced single tree vs the partitioned/threaded
+/// config under test — and require bit-identical output files.
+fn assert_partitioned_matches_single(
+    dir: &Path,
+    label: &str,
+    keys: &[u32],
+    cfg: &ExtSortConfig,
+) -> ExtSortStats {
+    let input = dir.join(format!("{label}.u32"));
+    write_keys(&input, keys);
+    let out_single = dir.join(format!("{label}.single.u32"));
+    let out_part = dir.join(format!("{label}.part.u32"));
+    let single = ExtSortConfig { partitions: 1, sort_threads: 1, prefetch_buf: 0, ..cfg.clone() };
+    stream::extsort_file(&input, &out_single, &single).unwrap();
+    let stats = stream::extsort_file(&input, &out_part, cfg).unwrap();
+    assert_eq!(
+        fs::read(&out_single).unwrap(),
+        fs::read(&out_part).unwrap(),
+        "{label}: partitioned output differs from single-tree"
+    );
+    // Against std as well, so both paths can't share one bug.
+    let mut want = keys.to_vec();
+    want.sort_unstable();
+    let mut bytes = Vec::new();
+    encode_keys_into(&want, &mut bytes);
+    assert_eq!(fs::read(&out_part).unwrap(), bytes, "{label}: output != std sort");
+    stats
+}
+
+#[test]
+fn partitioned_file_sort_is_byte_identical() {
+    let dir = scratch("keys");
+    let mut rng = Rng::new(0xBA5E);
+    let cfg = ExtSortConfig {
+        run_len: 1 << 10,
+        r: 8,
+        max_fanin: 4,
+        spill_dir: Some(dir.clone()),
+        sort_threads: 3,
+        partitions: 4,
+        prefetch_buf: 256,
+        ..Default::default()
+    };
+    // Random over the full domain (ragged partition sizes fall where
+    // they may), including both domain edges.
+    let mut full: Vec<u32> = (0..40_000).map(|_| rng.next_u32()).collect();
+    full.extend([u32::MAX, u32::MAX - 1, 0, 1, u32::MAX]);
+    let stats = assert_partitioned_matches_single(&dir, "full", &full, &cfg);
+    assert!(stats.partitions >= 1 && stats.spilled_runs > 0, "{stats:?}");
+    // Duplicate-heavy: every pivot lands inside a duplicate plateau, so
+    // the cut rule (all duplicates of a pivot go right) is load-bearing.
+    let dups: Vec<u32> = (0..30_000).map(|_| rng.next_u32() % 7).collect();
+    assert_partitioned_matches_single(&dir, "dups", &dups, &cfg);
+    // Skewed: 90% of the mass in one narrow band.
+    let skew: Vec<u32> = (0..30_000)
+        .map(|i| if i % 10 == 0 { rng.next_u32() } else { 1_000_000 + rng.next_u32() % 64 })
+        .collect();
+    assert_partitioned_matches_single(&dir, "skew", &skew, &cfg);
+    // Tiny inputs fall back to one partition without fuss.
+    for (label, n) in [("one", 1usize), ("few", 37)] {
+        let tiny: Vec<u32> = (0..n as u32).map(|x| x.wrapping_mul(2_654_435_761)).collect();
+        let stats = assert_partitioned_matches_single(&dir, label, &tiny, &cfg);
+        assert_eq!(stats.keys, n);
+    }
+    fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn partitioned_kv_file_sort_keeps_pairs_and_stability() {
+    let dir = scratch("kv");
+    let mut rng = Rng::new(0x1D5);
+    // Duplicate-heavy keys + unique payload tags: any broken pair or
+    // unstable reorder within a duplicate plateau is a hard mismatch.
+    let keys: Vec<u32> = (0..25_000).map(|_| rng.next_u32() % 100).collect();
+    let pays: Vec<u64> = (0..keys.len() as u64).map(|t| t | (t << 32)).collect();
+    let input = dir.join("kv.rec");
+    write_records(&input, &keys, &pays);
+    let base = ExtSortConfig {
+        run_len: 1 << 10,
+        r: 8,
+        max_fanin: 4,
+        spill_dir: Some(dir.clone()),
+        ..Default::default()
+    };
+    let out_single = dir.join("kv.single.rec");
+    let single =
+        ExtSortConfig { partitions: 1, sort_threads: 1, prefetch_buf: 0, ..base.clone() };
+    stream::extsort_kv_file(&input, &out_single, &single).unwrap();
+    // Stable oracle: sort (key, tag) pairs by key only.
+    let mut want: Vec<(u32, u64)> = keys.iter().copied().zip(pays.iter().copied()).collect();
+    want.sort_by_key(|&(k, _)| k);
+    let (wk, wp): (Vec<u32>, Vec<u64>) = want.into_iter().unzip();
+    let mut want_bytes = Vec::new();
+    encode_records_into(&wk, &wp, &mut want_bytes);
+    assert_eq!(fs::read(&out_single).unwrap(), want_bytes, "single-tree KV != stable sort");
+    for (sort_threads, partitions, prefetch_buf) in [(2, 3, 128), (4, 5, 0), (0, 0, 1 << 12)] {
+        let cfg = ExtSortConfig { sort_threads, partitions, prefetch_buf, ..base.clone() };
+        let out = dir.join(format!("kv.t{sort_threads}p{partitions}.rec"));
+        let stats = stream::extsort_kv_file(&input, &out, &cfg).unwrap();
+        assert_eq!(
+            fs::read(&out).unwrap(),
+            want_bytes,
+            "t={sort_threads} p={partitions}: KV output differs"
+        );
+        assert_eq!(stats.keys, keys.len());
+    }
+    fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn concurrent_sorts_share_a_spill_dir() {
+    // Two sorts spilling into the same directory at once must not
+    // collide on spill names or delete each other's segments.
+    let dir = scratch("concurrent");
+    let mut rng = Rng::new(0xC0C0);
+    let a: Vec<u32> = (0..20_000).map(|_| rng.next_u32()).collect();
+    let b: Vec<u32> = (0..20_000).map(|_| rng.next_u32() % 1000).collect();
+    let ia = dir.join("a.u32");
+    let ib = dir.join("b.u32");
+    write_keys(&ia, &a);
+    write_keys(&ib, &b);
+    let cfg = ExtSortConfig {
+        run_len: 1 << 9,
+        r: 8,
+        max_fanin: 4,
+        spill_dir: Some(dir.clone()),
+        sort_threads: 2,
+        partitions: 2,
+        prefetch_buf: 64,
+        ..Default::default()
+    };
+    let (oa, ob) = (dir.join("a.sorted"), dir.join("b.sorted"));
+    std::thread::scope(|s| {
+        let ha = s.spawn(|| stream::extsort_file(&ia, &oa, &cfg).unwrap());
+        let hb = s.spawn(|| stream::extsort_file(&ib, &ob, &cfg).unwrap());
+        ha.join().unwrap();
+        hb.join().unwrap();
+    });
+    for (input, output, data) in [(&ia, &oa, &a), (&ib, &ob, &b)] {
+        let mut want = data.clone();
+        want.sort_unstable();
+        let mut bytes = Vec::new();
+        encode_keys_into(&want, &mut bytes);
+        assert_eq!(&fs::read(output).unwrap(), &bytes, "{}", input.display());
+    }
+    // Both sorts done: no spill segments may remain.
+    assert_eq!(count_spill_files(&dir), 0, "spill files left behind");
+    fs::remove_dir_all(&dir).unwrap();
+}
+
+fn count_spill_files(dir: &Path) -> usize {
+    fs::read_dir(dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| {
+            let n = e.file_name();
+            let n = n.to_string_lossy().into_owned();
+            n.contains("spill") && (n.ends_with(".u32") || n.ends_with(".kv12"))
+        })
+        .count()
+}
+
+#[test]
+fn failed_sort_leaves_the_spill_dir_empty() {
+    let dir = scratch("failure");
+    let mut rng = Rng::new(0xDEAD);
+    let keys: Vec<u32> = (0..20_000).map(|_| rng.next_u32()).collect();
+    let input = dir.join("in.u32");
+    write_keys(&input, &keys);
+    // The output's parent is a regular file, so creating the output
+    // fails *after* run formation has spilled segments. The drop guard
+    // must unlink every spill file on the error path.
+    let blocker = dir.join("blocker");
+    fs::write(&blocker, b"not a directory").unwrap();
+    let cfg = ExtSortConfig {
+        run_len: 1 << 9,
+        max_fanin: 4,
+        spill_dir: Some(dir.clone()),
+        sort_threads: 2,
+        ..Default::default()
+    };
+    let err = stream::extsort_file(&input, &blocker.join("out.u32"), &cfg);
+    assert!(err.is_err(), "sort into a file's child path must fail");
+    assert_eq!(count_spill_files(&dir), 0, "failed sort leaked spill files");
+    // KV twin of the same failure.
+    let pays: Vec<u64> = (0..keys.len() as u64).collect();
+    let kin = dir.join("in.rec");
+    write_records(&kin, &keys, &pays);
+    let err = stream::extsort_kv_file(&kin, &blocker.join("out.rec"), &cfg);
+    assert!(err.is_err());
+    assert_eq!(count_spill_files(&dir), 0, "failed KV sort leaked spill files");
+    fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn file_sort_reports_phase_timings() {
+    let dir = scratch("stats");
+    let mut rng = Rng::new(0x717);
+    let keys: Vec<u32> = (0..30_000).map(|_| rng.next_u32()).collect();
+    let input = dir.join("in.u32");
+    write_keys(&input, &keys);
+    let cfg = ExtSortConfig {
+        run_len: 1 << 10,
+        max_fanin: 4,
+        spill_dir: Some(dir.clone()),
+        sort_threads: 2,
+        partitions: 2,
+        prefetch_buf: 512,
+        ..Default::default()
+    };
+    let stats = stream::extsort_file(&input, &dir.join("out.u32"), &cfg).unwrap();
+    assert_eq!(stats.keys, keys.len());
+    assert!(stats.merge_passes >= 1, "{stats:?}");
+    assert!(stats.run_form_secs > 0.0, "{stats:?}");
+    assert!(stats.merge_secs > 0.0, "{stats:?}");
+    assert!(stats.io_wait_secs >= 0.0, "{stats:?}");
+    assert!(stats.partitions >= 1, "{stats:?}");
+    assert!(stats.tree.kernel_rows as usize >= keys.len(), "{stats:?}");
+    fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn in_memory_parallel_merge_matches_single_tree() {
+    // The library-level partitioned merge (planner phase 3) against the
+    // single tree, on ragged duplicate-heavy runs.
+    let mut rng = Rng::new(0x9A9);
+    let runs: Vec<Vec<u32>> =
+        (0..11).map(|_| rng.sorted_list_ragged(0, 4000, 50)).collect();
+    let want = stream::merge_runs(&runs, 8).unwrap();
+    for parts in [0, 1, 2, 5, 16] {
+        assert_eq!(merge_runs_parallel(&runs, 8, parts).unwrap(), want, "parts={parts}");
+    }
+    // KV: unique tags make stability violations visible.
+    let mut tag = 0u64;
+    let kv_runs: Vec<(Vec<u32>, Vec<u64>)> = (0..7)
+        .map(|_| {
+            let ks = rng.sorted_list_ragged(0, 3000, 40);
+            let ps: Vec<u64> = ks
+                .iter()
+                .map(|_| {
+                    tag += 1;
+                    tag
+                })
+                .collect();
+            (ks, ps)
+        })
+        .collect();
+    let want = stream::merge_runs_kv(&kv_runs, 8).unwrap();
+    for parts in [0, 2, 4, 9] {
+        let got = merge_runs_kv_parallel(&kv_runs, 8, parts).unwrap();
+        assert_eq!(got, want, "parts={parts}");
+    }
+}

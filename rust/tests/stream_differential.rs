@@ -93,6 +93,8 @@ fn prop_extsort_matches_sort() {
             r: [4usize, 8, 32][case % 3],
             max_fanin: [2usize, 3, 64][case % 3],
             spill_dir: if case % 2 == 0 { Some(spill_root.clone()) } else { None },
+            sort_threads: [1usize, 2, 0][case % 3],
+            ..Default::default()
         };
         let (got, stats) = extsort(&data, &cfg).unwrap();
         let mut want = data;
