@@ -24,7 +24,9 @@
 //! 6. `extsort_e2e` — disk-to-disk external sorts (`extsort_file` /
 //!    `extsort_kv_file`) over a (sort_threads, partitions) matrix,
 //!    reported as `extsort_e2e_bytes_per_sec` (input bytes through the
-//!    full read → sort → spill → merge → write pipeline).
+//!    full read → sort → spill → merge → write pipeline), plus one
+//!    checksum-on vs checksum-off pair guarding the CRC-32 spill
+//!    sidecar overhead (≤5% full-size, ≤25% in noisy smoke mode).
 //!
 //! The k-way engines run at k ∈ {4, 16, 64} over ≥1M-key workloads by
 //! default (`BENCH_KEYS` overrides; `--smoke` / `BENCH_SMOKE=1` drops
@@ -125,6 +127,37 @@ fn bench_e2e(data: &[u32], pays: &[u64]) -> Vec<String> {
                  \"partitions\": {partitions}, \"extsort_e2e_bytes_per_sec\": {rate:.0}}}"
             ));
         }
+    }
+    // Spill-integrity guard: the per-block CRC-32 sidecars (on by
+    // default) vs `verify_spill: false`, same cell of the matrix. The
+    // slicing-by-8 CRC runs at memory-bandwidth-adjacent rates, so the
+    // checksummed pipeline must stay within 5% of the raw one; smoke
+    // mode only sanity-checks at 25% because 2^16-key runs are noise-
+    // dominated on shared CI machines.
+    let in_bytes = std::fs::metadata(&key_in).unwrap().len() as usize;
+    let out = dir.join("out.tmp");
+    let cfg_on = ExtSortConfig { sort_threads: 2, partitions: 2, ..base.clone() };
+    let cfg_off = ExtSortConfig { verify_spill: false, ..cfg_on.clone() };
+    let rate_on = e2e_rate(&key_in, &out, &cfg_on, in_bytes, n, false);
+    let rate_off = e2e_rate(&key_in, &out, &cfg_off, in_bytes, n, false);
+    let floor = if loms::bench::smoke_mode() { 0.75 } else { 0.95 };
+    println!(
+        "extsort-e2e checksum on {rate_on:>12.0} bytes/s   off {rate_off:>12.0} bytes/s \
+         ({:.3}x, floor {floor})",
+        rate_on / rate_off
+    );
+    assert!(
+        rate_on >= floor * rate_off,
+        "spill checksum overhead too high: {rate_on:.0} vs {rate_off:.0} bytes/s \
+         ({:.1}% slower, allowed {:.0}%)",
+        100.0 * (1.0 - rate_on / rate_off),
+        100.0 * (1.0 - floor)
+    );
+    for (checksum, rate) in [("on", rate_on), ("off", rate_off)] {
+        rows.push(format!(
+            "    {{\"mode\": \"key_only\", \"sort_threads\": 2, \"partitions\": 2, \
+             \"checksum\": \"{checksum}\", \"extsort_e2e_bytes_per_sec\": {rate:.0}}}"
+        ));
     }
     let _ = std::fs::remove_dir_all(&dir);
     rows

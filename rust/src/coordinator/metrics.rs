@@ -37,6 +37,14 @@ struct Inner {
     net_decode_errors: u64,
     net_responses: u64,
     net_errors: u64,
+    /// Robustness counters (see `rust/src/util/fault.rs` and the
+    /// DESIGN.md failure model): injected faults observed, corrupt
+    /// spill blocks detected, retried operations (spill re-reads plus
+    /// transient exec retries), and requests shed at admission.
+    faults_injected: u64,
+    corrupt_detected: u64,
+    retries: u64,
+    sheds: u64,
 }
 
 /// Shared metrics handle.
@@ -79,9 +87,20 @@ pub struct Snapshot {
     /// Reply frames produced with a payload (MergeResponse / Pong).
     pub net_responses: u64,
     /// Error frames produced (decode failures, rejected requests,
-    /// unsupported modes). Once every connection drains,
-    /// `net_frames_in == net_responses + net_errors`.
+    /// unsupported modes, shed overloads). Once every connection
+    /// drains, `net_frames_in == net_responses + net_errors`.
     pub net_errors: u64,
+    /// Faults fired by the deterministic injection harness
+    /// (`LOMS_FAULTS`); always 0 in production runs.
+    pub faults_injected: u64,
+    /// Corrupt spill blocks detected by checksum verification.
+    pub corrupt_detected: u64,
+    /// Operations retried after a transient failure (spill block
+    /// re-reads, transient exec retries).
+    pub retries: u64,
+    /// Requests refused at admission because the service was over its
+    /// pending-work watermark (answered with an `OVERLOADED` error).
+    pub sheds: u64,
 }
 
 impl Metrics {
@@ -145,6 +164,33 @@ impl Metrics {
         self.inner.lock().unwrap().net_errors += 1;
     }
 
+    pub fn on_fault_injected(&self) {
+        self.inner.lock().unwrap().faults_injected += 1;
+    }
+
+    pub fn on_corrupt_detected(&self) {
+        self.inner.lock().unwrap().corrupt_detected += 1;
+    }
+
+    pub fn on_retry(&self) {
+        self.inner.lock().unwrap().retries += 1;
+    }
+
+    pub fn on_shed(&self) {
+        self.inner.lock().unwrap().sheds += 1;
+    }
+
+    /// Requests answered or rejected by the service so far — the cheap
+    /// half of the pending-work gauge the server's admission check
+    /// reads on every frame (`snapshot()` would be far too heavy
+    /// there). Sheds are deliberately excluded: a shed request is
+    /// refused *before* it is submitted, so it never enters the
+    /// submitted count this is subtracted from.
+    pub fn settled(&self) -> u64 {
+        let g = self.inner.lock().unwrap();
+        g.responses + g.rejected
+    }
+
     pub fn on_response(&self, latency: Duration) {
         let mut g = self.inner.lock().unwrap();
         g.responses += 1;
@@ -197,6 +243,10 @@ impl Metrics {
             net_decode_errors: g.net_decode_errors,
             net_responses: g.net_responses,
             net_errors: g.net_errors,
+            faults_injected: g.faults_injected,
+            corrupt_detected: g.corrupt_detected,
+            retries: g.retries,
+            sheds: g.sheds,
         }
     }
 
@@ -261,6 +311,33 @@ mod tests {
         assert_eq!(s.net_responses, 2);
         assert_eq!(s.net_errors, 1);
         assert_eq!(s.net_frames_in, s.net_responses + s.net_errors);
+    }
+
+    #[test]
+    fn robustness_counters_accumulate() {
+        let m = Metrics::new();
+        m.on_fault_injected();
+        m.on_corrupt_detected();
+        m.on_retry();
+        m.on_retry();
+        m.on_shed();
+        let s = m.snapshot();
+        assert_eq!(s.faults_injected, 1);
+        assert_eq!(s.corrupt_detected, 1);
+        assert_eq!(s.retries, 2);
+        assert_eq!(s.sheds, 1);
+        // Sheds happen before submission, so they never settle work.
+        assert_eq!(m.settled(), 0);
+        assert_eq!(s.rejected, 0);
+    }
+
+    #[test]
+    fn settled_counts_responses_and_rejections() {
+        let m = Metrics::new();
+        m.on_response(Duration::from_micros(10));
+        m.on_response(Duration::from_micros(10));
+        m.on_rejected();
+        assert_eq!(m.settled(), 3);
     }
 
     #[test]

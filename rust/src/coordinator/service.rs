@@ -32,7 +32,8 @@ use super::metrics::Metrics;
 use super::request::{MergeRequest, MergeResponse, ResponseTx};
 use super::router::{Route, Router};
 use crate::runtime::ArtifactMeta;
-use anyhow::Result;
+use crate::util::fault::{self, Site};
+use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -290,16 +291,28 @@ fn exec_loop<B: Backend>(mut backend: B, rx: mpsc::Receiver<ExecBatch>, metrics:
             let rows: Vec<&[Vec<u32>]> = slots.iter().map(|s| s.req.lists.as_slice()).collect();
             let mut outs: Vec<&mut [u32]> = merged.iter_mut().map(|v| v.as_mut_slice()).collect();
             let t1 = Instant::now();
-            let run = if kv {
-                let pays: Vec<&[u64]> = slots
-                    .iter()
-                    .map(|s| s.req.payloads.as_deref().unwrap_or(&[]))
-                    .collect();
-                let mut pay_outs: Vec<&mut [u64]> =
-                    merged_pay.iter_mut().map(|v| v.as_mut_slice()).collect();
-                backend.execute_direct_kv(&name, &rows, &pays, &mut outs, &mut pay_outs)
-            } else {
-                backend.execute_direct(&name, &rows, &mut outs)
+            // Transient executor faults (injected via `LOMS_FAULTS`)
+            // are absorbed in place: merges are pure and the batch
+            // fully overwrites its output buffers, so re-running it is
+            // byte-identical and invisible to callers.
+            let run = loop {
+                let r = if kv {
+                    let pays: Vec<&[u64]> = slots
+                        .iter()
+                        .map(|s| s.req.payloads.as_deref().unwrap_or(&[]))
+                        .collect();
+                    let mut pay_outs: Vec<&mut [u64]> =
+                        merged_pay.iter_mut().map(|v| v.as_mut_slice()).collect();
+                    backend.execute_direct_kv(&name, &rows, &pays, &mut outs, &mut pay_outs)
+                } else {
+                    backend.execute_direct(&name, &rows, &mut outs)
+                };
+                if r.is_ok() && fault::fires(Site::ExecTransient) {
+                    metrics.on_fault_injected();
+                    metrics.on_retry();
+                    continue;
+                }
+                break r;
             };
             (run, t1, Instant::now())
         };
@@ -426,7 +439,7 @@ impl MergeService {
                 };
                 exec_loop(backend, batch_rx, exec_metrics);
             })
-            .expect("spawn executor");
+            .context("spawning executor thread")?;
         let (artifacts, backend_kv) = match ready_rx.recv() {
             Ok(Ok(a)) => a,
             Ok(Err(e)) => {
@@ -454,7 +467,7 @@ impl MergeService {
                     std::thread::Builder::new()
                         .name(format!("loms-fallback-{i}"))
                         .spawn(move || fallback_loop(frx, m))
-                        .expect("spawn fallback worker"),
+                        .context("spawning fallback worker")?,
                 );
             }
             Some(ftx)
@@ -478,7 +491,7 @@ impl MergeService {
                 };
                 engine.run(rx);
             })
-            .expect("spawn engine");
+            .context("spawning engine thread")?;
         Ok(MergeService {
             tx,
             engine: Some(engine),
@@ -530,6 +543,15 @@ impl MergeService {
 
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
+    }
+
+    /// Requests submitted but not yet answered or rejected — the cheap
+    /// pending-work gauge the network server's admission shed reads on
+    /// every request frame. Shed requests are refused *before*
+    /// `submit`, so they never enter either side of the subtraction.
+    pub fn pending(&self) -> u64 {
+        let submitted = self.next_id.load(Ordering::Relaxed) - 1;
+        submitted.saturating_sub(self.metrics.settled())
     }
 
     /// Join every stage: engine first (its drop closes the batch and
@@ -852,5 +874,18 @@ mod tests {
         let rx = s.submit(vec![vec![1, 2], vec![3, 4]]);
         s.shutdown();
         assert_eq!(rx.recv().unwrap().merged, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn pending_gauge_settles_to_zero() {
+        let s = svc();
+        assert_eq!(s.pending(), 0);
+        s.merge_blocking(vec![vec![1, 3], vec![2, 4]]).unwrap();
+        assert_eq!(s.pending(), 0, "answered request settles");
+        // A rejected request settles too: on_rejected is recorded
+        // before the response channel is dropped.
+        let rx = s.submit(vec![vec![5, 1], vec![2]]);
+        assert!(rx.recv().is_err());
+        assert_eq!(s.pending(), 0, "rejected request settles");
     }
 }

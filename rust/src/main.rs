@@ -17,16 +17,17 @@
 //!   sort     [--engine stream|ladder] [--n N] [--input F [--output F]]
 //!            [--r R] [--run-len L] [--fanin F] [--spill DIR]
 //!            [--sort-threads T] [--partitions P] [--prefetch-buf K]
-//!            [--ladder-runs true] [--chunk C] [--artifacts DIR]
-//!            [--payload true] [--stats true]
+//!            [--verify-spill false] [--ladder-runs true] [--chunk C]
+//!            [--artifacts DIR] [--payload true] [--stats true]
 //!            external sort: bounded-memory streaming engine (default)
 //!            or the service merge-ladder path; --payload true sorts
 //!            (u32 key, u64 payload) pairs through rank-then-permute
 //!            (--input/--output files hold 12-byte LE records);
 //!            --sort-threads/--partitions default 0 = one per core,
 //!            --prefetch-buf is keys per spill read-ahead buffer
-//!            (0 = synchronous reads); --stats true prints phase
-//!            timings and kernel counters
+//!            (0 = synchronous reads); --verify-spill false disables
+//!            per-block CRC-32 spill checksums (on by default);
+//!            --stats true prints phase timings and kernel counters
 //!   selftest                                       quick end-to-end check
 //!
 //! (Arg parsing is hand-rolled: the offline build vendors no clap.)
@@ -302,12 +303,14 @@ fn run(args: &[String]) -> Result<()> {
                 let s = server.service().metrics().snapshot();
                 println!(
                     "conns={} frames_in={} responses={} errors={} decode_errors={} \
-                     batches={} p50={:.0}µs p99={:.0}µs",
+                     sheds={} retries={} batches={} p50={:.0}µs p99={:.0}µs",
                     s.net_connections,
                     s.net_frames_in,
                     s.net_responses,
                     s.net_errors,
                     s.net_decode_errors,
+                    s.sheds,
+                    s.retries,
                     s.batches,
                     s.p50_latency_us,
                     s.p99_latency_us
@@ -332,22 +335,27 @@ fn run(args: &[String]) -> Result<()> {
             let kv = o.get("payload").map(String::as_str) == Some("true");
             let report = net::run_load(addr, conns, inflight, requests, seed, kv)?;
             println!(
-                "mode={} {} conns × {} inflight: {} ok / {} errors in {:?} \
+                "mode={} {} conns × {} inflight: {} ok / {} errors / {} retries in {:?} \
                  ({:.0} req/s, p50 {:.0}µs, p99 {:.0}µs)",
                 if kv { "key-value" } else { "key-only" },
                 report.connections,
                 report.inflight,
                 report.ok,
                 report.errors,
+                report.retries,
                 report.elapsed,
                 report.requests_per_s(),
                 report.p50_us,
                 report.p99_us
             );
+            for line in &report.conn_errors {
+                eprintln!("note: {line}");
+            }
             anyhow::ensure!(
-                report.errors == 0,
-                "{} responses failed the oracle check",
-                report.errors
+                report.errors == 0 && report.failed_conns == 0,
+                "{} responses failed the oracle check, {} connections died",
+                report.errors,
+                report.failed_conns
             );
             Ok(())
         }
@@ -439,6 +447,7 @@ fn run(args: &[String]) -> Result<()> {
                     "sort-threads",
                     "partitions",
                     "prefetch-buf",
+                    "verify-spill",
                     "ladder-runs",
                     "payload",
                     "stats",
@@ -474,6 +483,9 @@ fn run(args: &[String]) -> Result<()> {
                 sort_threads: get_usize(&o, "sort-threads", 0)?,
                 partitions: get_usize(&o, "partitions", 0)?,
                 prefetch_buf: get_usize(&o, "prefetch-buf", 1 << 15)?,
+                // Valued flag (`--verify-spill false`): see the
+                // --ladder-runs note.
+                verify_spill: o.get("verify-spill").map(String::as_str) != Some("false"),
             };
             if let Some(input) = o.get("input") {
                 // File-to-file: bounded memory end to end.

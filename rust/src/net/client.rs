@@ -8,6 +8,22 @@
 //! order (the protocol carries no ids; ordering is the correlation).
 //! Encoding reuses one write buffer, so a steady-state client
 //! allocates only the decoded response vectors.
+//!
+//! # Retry and replay
+//!
+//! Armed with a [`RetryPolicy`] (see [`NetClient::with_retry`]), the
+//! client survives connection loss: it keeps every submitted-but-
+//! unanswered request *as encoded frame bytes*, and on a broken
+//! stream it reconnects (exponential backoff with decorrelated
+//! jitter, bounded by a per-operation deadline budget) and replays
+//! the whole unanswered window in order. This is sound because merge
+//! requests are **pure and idempotent** — re-executing one produces
+//! byte-identical output and mutates nothing server-side — and the
+//! protocol correlates replies by order, so a replayed stream is
+//! indistinguishable from a first transmission. Server-side
+//! [`code::OVERLOADED`] sheds are *not* replayed here (the reply did
+//! arrive); they surface as a typed [`ServerError`] so the caller can
+//! resubmit on its own schedule — [`run_load`] does exactly that.
 
 use super::protocol::{
     self, code, encode_merge_request, encode_merge_request_kv, Frame, FrameReader, ReadFrame,
@@ -16,7 +32,7 @@ use super::protocol::{
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::VecDeque;
 use std::io::Write;
-use std::net::{TcpStream, ToSocketAddrs};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
 use std::time::{Duration, Instant};
 
 /// One merged response off the wire.
@@ -30,6 +46,60 @@ pub struct NetMerge {
     pub served_by: String,
 }
 
+/// A typed server `Error` frame, surfaced from [`NetClient::recv`] so
+/// callers can branch on the code (e.g. retry [`code::OVERLOADED`],
+/// give up on [`code::REJECTED`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServerError {
+    pub code: u8,
+    pub message: String,
+}
+
+impl ServerError {
+    /// Retryable admission shed: the request was never submitted
+    /// server-side, so resending it is always safe.
+    pub fn is_overloaded(&self) -> bool {
+        self.code == code::OVERLOADED
+    }
+}
+
+impl std::fmt::Display for ServerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "server error {}: {}", code_name(self.code), self.message)
+    }
+}
+
+impl std::error::Error for ServerError {}
+
+/// Reconnect-and-replay tuning for [`NetClient::with_retry`].
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Reconnect attempts per logical operation (one submit or recv).
+    pub max_retries: u32,
+    /// First backoff sleep; later sleeps use decorrelated jitter
+    /// (`min(max_backoff, uniform(base, 3 × previous))`).
+    pub base_backoff: Duration,
+    /// Backoff ceiling.
+    pub max_backoff: Duration,
+    /// Total wall-clock budget for one logical operation, including
+    /// every reconnect and backoff sleep.
+    pub deadline: Duration,
+    /// Jitter seed — deterministic per client, so tests replay.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 8,
+            base_backoff: Duration::from_millis(2),
+            max_backoff: Duration::from_millis(250),
+            deadline: Duration::from_secs(30),
+            seed: 0x5EED,
+        }
+    }
+}
+
 /// A blocking connection to a [`super::NetServer`].
 pub struct NetClient {
     stream: TcpStream,
@@ -37,13 +107,56 @@ pub struct NetClient {
     wbuf: Vec<u8>,
     /// Requests submitted but not yet received (sanity accounting).
     inflight: usize,
+    /// Resolved target, kept for reconnects.
+    addr: Option<SocketAddr>,
+    retry: Option<RetryPolicy>,
+    jitter: crate::util::Rng,
+    /// Encoded request frames submitted but not yet answered — the
+    /// replay window for reconnects (one entry per in-flight merge).
+    unanswered: VecDeque<Vec<u8>>,
+    /// Previous backoff sleep (decorrelated jitter state).
+    last_backoff: Duration,
+    /// Successful reconnect-and-replay recoveries so far.
+    retries: u64,
 }
 
 impl NetClient {
     pub fn connect(addr: impl ToSocketAddrs) -> Result<NetClient> {
-        let stream = TcpStream::connect(addr).context("connecting to merge server")?;
+        let resolved = addr
+            .to_socket_addrs()
+            .context("resolving merge server address")?
+            .next();
+        let stream = match resolved {
+            Some(a) => TcpStream::connect(a).context("connecting to merge server")?,
+            None => bail!("merge server address resolved to nothing"),
+        };
         let _ = stream.set_nodelay(true);
-        Ok(NetClient { stream, reader: FrameReader::new(), wbuf: Vec::new(), inflight: 0 })
+        Ok(NetClient {
+            stream,
+            reader: FrameReader::new(),
+            wbuf: Vec::new(),
+            inflight: 0,
+            addr: resolved,
+            retry: None,
+            jitter: crate::util::Rng::new(0x5EED),
+            unanswered: VecDeque::new(),
+            last_backoff: Duration::ZERO,
+            retries: 0,
+        })
+    }
+
+    /// Arm reconnect-and-replay: after this, a broken connection is
+    /// recovered transparently (see the module docs for why replay is
+    /// sound) instead of surfacing as an error.
+    pub fn with_retry(mut self, policy: RetryPolicy) -> NetClient {
+        self.jitter = crate::util::Rng::new(policy.seed);
+        self.retry = Some(policy);
+        self
+    }
+
+    /// Successful reconnect-and-replay recoveries performed so far.
+    pub fn retries(&self) -> u64 {
+        self.retries
     }
 
     /// Liveness probe: Ping, expect Pong. Must not be interleaved with
@@ -51,10 +164,11 @@ impl NetClient {
     pub fn ping(&mut self) -> Result<()> {
         anyhow::ensure!(self.inflight == 0, "ping with {} merges in flight", self.inflight);
         protocol::encode_frame(&Frame::Ping, &mut self.wbuf);
-        self.stream.write_all(&self.wbuf).context("sending ping")?;
-        match self.read_reply()? {
-            Frame::Pong => Ok(()),
-            other => bail!("expected Pong, got {other:?}"),
+        self.write_wbuf(false, "sending ping")?;
+        match self.read_reply() {
+            Ok(Frame::Pong) => Ok(()),
+            Ok(other) => bail!("expected Pong, got {other:?}"),
+            Err(e) => Err(e.into_anyhow().context("awaiting pong")),
         }
     }
 
@@ -83,9 +197,7 @@ impl NetClient {
             "request payload {payload} bytes exceeds {MAX_REQUEST_BYTES}"
         );
         encode_merge_request(MODE_MERGE, lists, &mut self.wbuf);
-        self.stream.write_all(&self.wbuf).context("sending merge request")?;
-        self.inflight += 1;
-        Ok(())
+        self.write_wbuf(true, "sending merge request")
     }
 
     /// Send one v1.1 key-value merge request without waiting:
@@ -117,26 +229,42 @@ impl NetClient {
             "request payload {payload} bytes exceeds {MAX_REQUEST_BYTES}"
         );
         encode_merge_request_kv(MODE_MERGE, lists, payloads, &mut self.wbuf);
-        self.stream.write_all(&self.wbuf).context("sending KV merge request")?;
-        self.inflight += 1;
-        Ok(())
+        self.write_wbuf(true, "sending KV merge request")
     }
 
-    /// Receive the next in-order response. An error frame surfaces as
-    /// `Err` carrying the server's code and message.
+    /// Receive the next in-order response. A server `Error` frame
+    /// surfaces as a typed [`ServerError`] inside the `anyhow` chain —
+    /// downcast to branch on the code.
     pub fn recv(&mut self) -> Result<NetMerge> {
         anyhow::ensure!(self.inflight > 0, "recv with nothing in flight");
+        let deadline = self.op_deadline();
+        let mut attempts = 0u32;
+        let frame = loop {
+            match self.read_reply() {
+                Ok(f) => break f,
+                Err(ReadError::Protocol(m)) => bail!("undecodable server frame: {m}"),
+                Err(e) => {
+                    // Connection-level failure with requests in flight:
+                    // reconnect and replay the unanswered window, then
+                    // keep waiting for the front request's reply.
+                    self.reconnect_and_replay(&mut attempts, deadline, e.into_anyhow())?;
+                }
+            }
+        };
+        // Any frame answers the front unanswered request (ordering is
+        // the correlation), so the replay window shrinks even when the
+        // reply is an error.
         self.inflight -= 1;
-        match self.read_reply()? {
+        self.unanswered.pop_front();
+        self.last_backoff = Duration::ZERO;
+        match frame {
             Frame::MergeResponse { served_by, merged } => {
                 Ok(NetMerge { merged, payloads: None, served_by })
             }
             Frame::MergeResponseKV { served_by, merged, payloads } => {
                 Ok(NetMerge { merged, payloads: Some(payloads), served_by })
             }
-            Frame::Error { code, message } => {
-                bail!("server error {}: {message}", code_name(code))
-            }
+            Frame::Error { code, message } => Err(ServerError { code, message }.into()),
             other => bail!("expected MergeResponse, got {other:?}"),
         }
     }
@@ -158,14 +286,97 @@ impl NetClient {
         self.inflight
     }
 
-    fn read_reply(&mut self) -> Result<Frame> {
+    fn op_deadline(&self) -> Instant {
+        let budget = self
+            .retry
+            .as_ref()
+            .map(|p| p.deadline)
+            .unwrap_or(Duration::from_secs(86_400));
+        Instant::now() + budget
+    }
+
+    /// Write the encoded frame in `wbuf`; with a [`RetryPolicy`], a
+    /// failed write reconnects, replays the unanswered window, and
+    /// resends. `record` appends the frame to that window (merge
+    /// requests yes, pings no — pings require an empty window).
+    fn write_wbuf(&mut self, record: bool, what: &'static str) -> Result<()> {
+        let deadline = self.op_deadline();
+        let mut attempts = 0u32;
+        loop {
+            match self.stream.write_all(&self.wbuf) {
+                Ok(()) => {
+                    if record {
+                        self.unanswered.push_back(self.wbuf.clone());
+                        self.inflight += 1;
+                    }
+                    self.last_backoff = Duration::ZERO;
+                    return Ok(());
+                }
+                Err(e) => {
+                    self.reconnect_and_replay(&mut attempts, deadline, anyhow!(e).context(what))?
+                }
+            }
+        }
+    }
+
+    /// Decorrelated jitter: `min(cap, uniform(base, 3 × previous))`.
+    fn next_backoff(&mut self, p: &RetryPolicy) -> Duration {
+        let base = (p.base_backoff.as_nanos() as u64).max(1);
+        let prev = (self.last_backoff.as_nanos() as u64).max(base);
+        let hi = prev.saturating_mul(3).max(base + 1);
+        let d = Duration::from_nanos(base + self.jitter.below(hi - base)).min(p.max_backoff);
+        self.last_backoff = d;
+        d
+    }
+
+    /// Reconnect within the retry budget and replay every unanswered
+    /// request frame in order. Returns only with a healthy, replayed
+    /// connection — or the original error wrapped with the attempt
+    /// count once the budget is exhausted.
+    fn reconnect_and_replay(
+        &mut self,
+        attempts: &mut u32,
+        deadline: Instant,
+        cause: anyhow::Error,
+    ) -> Result<()> {
+        let (Some(policy), Some(addr)) = (self.retry.clone(), self.addr) else {
+            return Err(cause);
+        };
+        loop {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if *attempts >= policy.max_retries || left.is_zero() {
+                return Err(cause.context(format!(
+                    "connection not recovered after {attempts} reconnect attempts"
+                )));
+            }
+            *attempts += 1;
+            std::thread::sleep(self.next_backoff(&policy).min(left));
+            let left = deadline.saturating_duration_since(Instant::now());
+            let Ok(stream) =
+                TcpStream::connect_timeout(&addr, left.max(Duration::from_millis(10)))
+            else {
+                continue;
+            };
+            let _ = stream.set_nodelay(true);
+            self.stream = stream;
+            self.reader = FrameReader::new();
+            let NetClient { stream, unanswered, .. } = self;
+            if unanswered.iter().all(|f| stream.write_all(f).is_ok()) {
+                self.retries += 1;
+                return Ok(());
+            }
+            // Replay died mid-window: loop and reconnect again.
+        }
+    }
+
+    fn read_reply(&mut self) -> std::result::Result<Frame, ReadError> {
         loop {
             match self.reader.read_frame(&mut self.stream) {
                 Ok(ReadFrame::Frame(f)) => return Ok(f),
                 Ok(ReadFrame::Pending) => continue, // frame still arriving
-                Ok(ReadFrame::Eof) => bail!("server closed the connection"),
+                Ok(ReadFrame::Eof) => return Err(ReadError::Closed),
                 Ok(ReadFrame::Malformed(m)) | Ok(ReadFrame::Corrupt(m)) => {
-                    bail!("undecodable server frame: {m}")
+                    return Err(ReadError::Protocol(m))
                 }
                 // The client sets no read timeout, but tolerate one if
                 // the caller configured the socket directly.
@@ -175,8 +386,28 @@ impl NetClient {
                 {
                     continue
                 }
-                Err(e) => return Err(anyhow!(e).context("reading server reply")),
+                Err(e) => return Err(ReadError::Io(e)),
             }
+        }
+    }
+}
+
+/// Why a reply could not be read: connection-level failures
+/// (`Closed`/`Io`) are recoverable by reconnect-and-replay; a
+/// `Protocol` failure means the peer speaks garbage and retrying the
+/// same bytes cannot help.
+enum ReadError {
+    Closed,
+    Io(std::io::Error),
+    Protocol(String),
+}
+
+impl ReadError {
+    fn into_anyhow(self) -> anyhow::Error {
+        match self {
+            ReadError::Closed => anyhow!("server closed the connection"),
+            ReadError::Io(e) => anyhow!(e).context("reading server reply"),
+            ReadError::Protocol(m) => anyhow!("undecodable server frame: {m}"),
         }
     }
 }
@@ -186,6 +417,7 @@ fn code_name(c: u8) -> &'static str {
         code::MALFORMED => "MALFORMED",
         code::REJECTED => "REJECTED",
         code::UNSUPPORTED => "UNSUPPORTED",
+        code::OVERLOADED => "OVERLOADED",
         _ => "UNKNOWN",
     }
 }
@@ -199,6 +431,14 @@ pub struct LoadReport {
     pub ok: usize,
     /// Error replies or oracle mismatches.
     pub errors: usize,
+    /// Recoveries performed while driving the load: client
+    /// reconnect-and-replays plus `OVERLOADED` resubmissions.
+    pub retries: u64,
+    /// Connections that died unrecoverably mid-load (their remaining
+    /// requests are not counted in `ok`/`errors`).
+    pub failed_conns: usize,
+    /// One diagnostic line per failed connection.
+    pub conn_errors: Vec<String>,
     pub elapsed: Duration,
     pub p50_us: f64,
     pub p99_us: f64,
@@ -230,25 +470,76 @@ pub fn workload_lists(rng: &mut crate::util::Rng) -> Vec<Vec<u32>> {
     vec![rng.sorted_list(la, 1 << 20), rng.sorted_list(lb, 1 << 20)]
 }
 
-/// One oracle entry: the expected keys, the expected payload column
-/// (key-value mode only), and the submit timestamp.
-type Pending = (Vec<u32>, Option<Vec<u64>>, Instant);
+/// One in-flight load request: the original lists and payload column
+/// (kept so an `OVERLOADED` shed can be resubmitted), the expected
+/// output, the first-submit timestamp, and how many times it has been
+/// resubmitted.
+struct Pending {
+    lists: Vec<Vec<u32>>,
+    pays: Option<Vec<u64>>,
+    want: Vec<u32>,
+    want_pays: Option<Vec<u64>>,
+    sent_at: Instant,
+    resubmits: u32,
+}
+
+/// Most times one shed request is resubmitted before counting as an
+/// error — bounds the drain loop under a permanently overloaded server.
+const MAX_OVERLOAD_RESUBMITS: u32 = 64;
 
 /// Receive one in-order response and score it against its oracle
-/// (shared by the submit-loop window and the tail drain).
+/// (shared by the submit-loop window and the tail drain). An
+/// `OVERLOADED` shed is resubmitted (bounded) instead of counted;
+/// connection-level failures surface as `Err` and fail the connection.
 fn drain_one(
     client: &mut NetClient,
     pending: &mut VecDeque<Pending>,
     ok: &mut usize,
     errors: &mut usize,
+    resubmits: &mut u64,
     lat_us: &mut Vec<f64>,
-) {
-    let (want, want_pays, sent_at) = pending.pop_front().expect("drain with nothing pending");
+) -> Result<()> {
+    let Some(mut p) = pending.pop_front() else {
+        bail!("drain with nothing pending");
+    };
     match client.recv() {
-        Ok(resp) if resp.merged == want && resp.payloads == want_pays => *ok += 1,
-        Ok(_) | Err(_) => *errors += 1,
+        Ok(resp) if resp.merged == p.want && resp.payloads == p.want_pays => {
+            *ok += 1;
+            lat_us.push(p.sent_at.elapsed().as_nanos() as f64 / 1_000.0);
+        }
+        Err(e)
+            if e.downcast_ref::<ServerError>().is_some_and(ServerError::is_overloaded)
+                && p.resubmits < MAX_OVERLOAD_RESUBMITS =>
+        {
+            // Shed at admission: the request was never submitted, so
+            // resending is always safe. It goes to the back of this
+            // connection's window (ordering is the correlation), with
+            // its oracle and original timestamp riding along.
+            *resubmits += 1;
+            p.resubmits += 1;
+            std::thread::sleep(Duration::from_millis(1 << p.resubmits.min(5)));
+            match &p.pays {
+                Some(pays) => client.submit_kv(&p.lists, pays)?,
+                None => client.submit(&p.lists)?,
+            }
+            pending.push_back(p);
+        }
+        Ok(_) => {
+            *errors += 1;
+            lat_us.push(p.sent_at.elapsed().as_nanos() as f64 / 1_000.0);
+        }
+        Err(e) => {
+            // A non-overload server error settles the request; a
+            // connection-level error (retry budget exhausted) is fatal
+            // for the whole connection.
+            if e.downcast_ref::<ServerError>().is_none() {
+                return Err(e.context("receiving load response"));
+            }
+            *errors += 1;
+            lat_us.push(p.sent_at.elapsed().as_nanos() as f64 / 1_000.0);
+        }
     }
-    lat_us.push(sent_at.elapsed().as_nanos() as f64 / 1_000.0);
+    Ok(())
 }
 
 /// Drive `total_requests` requests through `connections` parallel
@@ -259,6 +550,12 @@ fn drain_one(
 /// the payload column — the protocol's duplicate-key contract);
 /// mismatches and error replies count as `errors`. Latency is measured
 /// per request, submit to receive.
+///
+/// Every client is armed with the default [`RetryPolicy`], so killed
+/// connections are reconnected and replayed and `OVERLOADED` sheds are
+/// resubmitted (both counted in [`LoadReport::retries`]). A connection
+/// that still fails is *recorded* — its diagnostic lands in
+/// [`LoadReport::conn_errors`] — instead of aborting the whole load.
 pub fn run_load(
     addr: &str,
     connections: usize,
@@ -270,18 +567,23 @@ pub fn run_load(
     anyhow::ensure!(connections >= 1 && inflight >= 1, "need >=1 connection and inflight");
     let per_conn = total_requests.div_ceil(connections);
     let t0 = Instant::now();
-    let results: Vec<Result<(usize, usize, Vec<f64>)>> = std::thread::scope(|s| {
+    type ConnResult = Result<(usize, usize, u64, Vec<f64>)>;
+    let results: Vec<std::thread::Result<ConnResult>> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..connections)
             .map(|c| {
-                s.spawn(move || -> Result<(usize, usize, Vec<f64>)> {
-                    let mut client = NetClient::connect(addr)?;
+                s.spawn(move || -> ConnResult {
+                    let mut client = NetClient::connect(addr)?.with_retry(RetryPolicy {
+                        seed: seed ^ (c as u64).wrapping_mul(0xD1B5),
+                        ..RetryPolicy::default()
+                    });
                     let mut rng = crate::util::Rng::new(seed ^ (c as u64).wrapping_mul(0x9E37));
                     let mut pending: VecDeque<Pending> = VecDeque::new();
                     let (mut ok, mut errors) = (0usize, 0usize);
+                    let mut resubmits = 0u64;
                     let mut lat_us = Vec::with_capacity(per_conn);
                     for r in 0..per_conn {
                         let lists = workload_lists(&mut rng);
-                        if kv {
+                        let p = if kv {
                             let keys: Vec<u32> = lists.concat();
                             // Unique tags so the oracle discriminates
                             // payload routing exactly.
@@ -294,43 +596,79 @@ pub fn run_load(
                             let want: Vec<u32> = pairs.iter().map(|&(k, _)| k).collect();
                             let want_pays: Vec<u64> = pairs.iter().map(|&(_, p)| p).collect();
                             client.submit_kv(&lists, &pays)?;
-                            pending.push_back((want, Some(want_pays), Instant::now()));
+                            Pending {
+                                lists,
+                                pays: Some(pays),
+                                want,
+                                want_pays: Some(want_pays),
+                                sent_at: Instant::now(),
+                                resubmits: 0,
+                            }
                         } else {
                             let mut want: Vec<u32> = lists.concat();
                             want.sort_unstable();
                             client.submit(&lists)?;
-                            pending.push_back((want, None, Instant::now()));
-                        }
+                            Pending {
+                                lists,
+                                pays: None,
+                                want,
+                                want_pays: None,
+                                sent_at: Instant::now(),
+                                resubmits: 0,
+                            }
+                        };
+                        pending.push_back(p);
                         if pending.len() >= inflight {
                             drain_one(
-                                &mut client, &mut pending, &mut ok, &mut errors, &mut lat_us,
-                            );
+                                &mut client, &mut pending, &mut ok, &mut errors, &mut resubmits,
+                                &mut lat_us,
+                            )?;
                         }
                     }
                     while !pending.is_empty() {
-                        drain_one(&mut client, &mut pending, &mut ok, &mut errors, &mut lat_us);
+                        drain_one(
+                            &mut client, &mut pending, &mut ok, &mut errors, &mut resubmits,
+                            &mut lat_us,
+                        )?;
                     }
-                    Ok((ok, errors, lat_us))
+                    Ok((ok, errors, resubmits + client.retries(), lat_us))
                 })
             })
             .collect();
-        handles.into_iter().map(|h| h.join().expect("load thread panicked")).collect()
+        handles.into_iter().map(|h| h.join()).collect()
     });
     let elapsed = t0.elapsed();
-    let (mut ok, mut errors) = (0usize, 0usize);
+    let (mut ok, mut errors, mut retries) = (0usize, 0usize, 0u64);
+    let mut failed_conns = 0usize;
+    let mut conn_errors = Vec::new();
     let mut lat_us: Vec<f64> = Vec::new();
-    for r in results {
-        let (o, e, l) = r?;
-        ok += o;
-        errors += e;
-        lat_us.extend(l);
+    for (c, r) in results.into_iter().enumerate() {
+        match r {
+            Ok(Ok((o, e, rt, l))) => {
+                ok += o;
+                errors += e;
+                retries += rt;
+                lat_us.extend(l);
+            }
+            Ok(Err(e)) => {
+                failed_conns += 1;
+                conn_errors.push(format!("connection {c}: {e:#}"));
+            }
+            Err(_) => {
+                failed_conns += 1;
+                conn_errors.push(format!("connection {c}: load thread panicked"));
+            }
+        }
     }
-    lat_us.sort_by(|a, b| a.partial_cmp(b).expect("finite latency"));
+    lat_us.sort_by(f64::total_cmp);
     Ok(LoadReport {
         connections,
         inflight,
         ok,
         errors,
+        retries,
+        failed_conns,
+        conn_errors,
         elapsed,
         p50_us: percentile_us(&lat_us, 0.50),
         p99_us: percentile_us(&lat_us, 0.99),

@@ -18,7 +18,9 @@
 //!   disconnects) on malformed frames; graceful shutdown that drains
 //!   in-flight batches.
 //! * [`client`] — blocking [`NetClient`] with pipelined multi-request
-//!   submission, plus the multi-connection load generator behind
+//!   submission, reconnect-and-replay recovery under a [`RetryPolicy`]
+//!   (exponential backoff, decorrelated jitter, per-operation deadline
+//!   budget), plus the multi-connection load generator behind
 //!   `loms bench-net` and `benches/net_serving.rs`.
 //!
 //! See `rust/DESIGN.md` §"Network serving" for the frame grammar and
@@ -28,7 +30,7 @@ pub mod client;
 pub mod protocol;
 pub mod server;
 
-pub use client::{run_load, LoadReport, NetClient, NetMerge};
+pub use client::{run_load, LoadReport, NetClient, NetMerge, RetryPolicy, ServerError};
 pub use protocol::{
     Frame, FrameReader, ReadFrame, MAX_FRAME_BYTES, MAX_K, MAX_LIST_LEN, MAX_REQUEST_BYTES,
     PROTOCOL_VERSION,

@@ -106,6 +106,11 @@ pub mod code {
     /// Well-formed but not servable here (reserved mode byte, or a
     /// frame type this endpoint never accepts).
     pub const UNSUPPORTED: u8 = 3;
+    /// The server refused the request at admission because its
+    /// pending-work gauge was over the shed watermark. Unlike the
+    /// other codes this one is *retryable*: the request was never
+    /// submitted, so resending it later is always safe.
+    pub const OVERLOADED: u8 = 4;
 }
 
 /// One decoded frame.

@@ -47,6 +47,7 @@ use super::protocol::{
 };
 use crate::coordinator::request::MergeResponse;
 use crate::coordinator::{Metrics, MergeService};
+use crate::util::fault::{self, Site};
 use anyhow::{Context, Result};
 use std::io::{self, Write};
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
@@ -75,6 +76,14 @@ pub struct NetServerConfig {
     /// backpressure reaches the client through TCP instead of growing
     /// server memory without bound (clamped to ≥ 1).
     pub max_inflight_per_conn: usize,
+    /// Admission-level overload shedding: when the service's pending
+    /// gauge ([`MergeService::pending`]) is at or above this watermark,
+    /// new merge requests are answered with an
+    /// [`code::OVERLOADED`] error frame instead of being
+    /// submitted — the client backs off and retries, and server-side
+    /// queues stay bounded under a request storm. `0` disables
+    /// shedding. Pings and error replies are never shed.
+    pub shed_pending: u64,
 }
 
 impl Default for NetServerConfig {
@@ -84,6 +93,7 @@ impl Default for NetServerConfig {
             read_timeout: Duration::from_millis(50),
             write_timeout: Duration::from_secs(10),
             max_inflight_per_conn: 256,
+            shed_pending: 4096,
         }
     }
 }
@@ -132,7 +142,7 @@ impl NetServer {
                         let Ok(stream) = conn else { return };
                         serve_conn(stream, &service, &shutdown, &cfg);
                     })
-                    .expect("spawn net worker"),
+                    .context("spawning net worker")?,
             );
         }
         let accept_shutdown = Arc::clone(&shutdown);
@@ -164,7 +174,7 @@ impl NetServer {
                 }
                 // Dropping conn_tx here releases the worker pool.
             })
-            .expect("spawn net acceptor");
+            .context("spawning net acceptor")?;
         Ok(NetServer { addr, service: Some(service), shutdown, acceptor: Some(acceptor), workers })
     }
 
@@ -289,6 +299,14 @@ fn serve_conn(
                     let _ = reply_tx.send(Reply::Err { code: code::MALFORMED, message: msg });
                 }
                 Ok(ReadFrame::Frame(frame)) => {
+                    // Injected connection kill: drop the connection
+                    // before this frame is counted or answered — the
+                    // client sees an abrupt close with requests
+                    // unanswered and must reconnect and replay.
+                    if fault::fires(Site::NetConnReset) {
+                        metrics.on_fault_injected();
+                        break;
+                    }
                     metrics.on_net_frame_in();
                     let reply = match frame {
                         Frame::Ping => Reply::Pong,
@@ -300,6 +318,19 @@ fn serve_conn(
                             code: code::UNSUPPORTED,
                             message: format!("unsupported request mode {mode}"),
                         },
+                        // Admission-level shed: refuse merge work while
+                        // the service is over its pending watermark.
+                        // The request was never submitted, so the
+                        // client can always safely retry.
+                        Frame::MergeRequest { .. } | Frame::MergeRequestKV { .. }
+                            if cfg.shed_pending > 0 && service.pending() >= cfg.shed_pending =>
+                        {
+                            metrics.on_shed();
+                            Reply::Err {
+                                code: code::OVERLOADED,
+                                message: "server overloaded, retry later".into(),
+                            }
+                        }
                         // The decoded lists go into admission as-is —
                         // no re-copy between socket and service.
                         Frame::MergeRequest { lists, .. } => Reply::Merge(service.submit(lists)),
@@ -366,6 +397,13 @@ fn writer_loop(mut w: TcpStream, rx: mpsc::Receiver<Reply>, metrics: &Metrics) {
                     );
                 }
             },
+        }
+        // Injected write stall: delay the reply long enough for the
+        // client's deadline/backoff machinery to be exercised, without
+        // corrupting the stream.
+        if fault::fires(Site::NetWriteStall) {
+            metrics.on_fault_injected();
+            std::thread::sleep(Duration::from_millis(50));
         }
         if !peer_gone && w.write_all(&buf).is_err() {
             // Keep draining so in-flight service responses are still

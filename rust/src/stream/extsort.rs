@@ -29,12 +29,17 @@
 //! the input — the bounded-memory story the fixed-width merge devices
 //! themselves cannot provide.
 
-use super::io::{self, encode_keys_into, IoWait, SpillGuard, WriteBehind};
+use super::io::{
+    self, encode_keys_into, sidecar_path, spill_io, IoWait, SpillChecksum, SpillGuard, WriteBehind,
+};
 use super::merge2::BlockKernel;
 use super::part;
-use super::source::{boxed, FileRunStream, PrefetchRunStream, SliceStream, SortedStream};
+use super::source::{
+    boxed, FileRunStream, PrefetchRunStream, SliceStream, SortedStream, SpillRunStream,
+};
 use super::tree::{MergeTree, TreeStats, DEFAULT_R};
 use crate::coordinator::{planner, MergeService};
+use crate::util::fault::{self, Site};
 use anyhow::{Context, Result};
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
@@ -70,6 +75,10 @@ pub struct ExtSortConfig {
     /// Keys per prefetch buffer for spill reads; `0` disables the
     /// read-ahead threads (synchronous reads).
     pub prefetch_buf: usize,
+    /// Checksum spill segments (per-block CRC-32 sidecars, verified on
+    /// read with one bounded re-read on failure). On by default; off
+    /// trades integrity for the last few percent of throughput.
+    pub verify_spill: bool,
 }
 
 impl Default for ExtSortConfig {
@@ -82,6 +91,7 @@ impl Default for ExtSortConfig {
             sort_threads: 0,
             partitions: 0,
             prefetch_buf: 1 << 15,
+            verify_spill: true,
         }
     }
 }
@@ -118,6 +128,11 @@ pub struct ExtSortStats {
     pub io_wait_secs: f64,
     /// Range partitions the final pass ran (1 = single merge tree).
     pub partitions: usize,
+    /// Spill blocks that failed their checksum (including ones the
+    /// bounded re-read then recovered).
+    pub corrupt_detected: u64,
+    /// Bounded re-reads of spill blocks (recovered or not).
+    pub read_retries: u64,
     /// Merge-tree scheduling counters pooled across passes/partitions.
     pub tree: TreeStats,
 }
@@ -173,15 +188,22 @@ enum SegSink {
 
 /// Append-only writer for segmented spill files of sorted runs.
 /// Rotates to a fresh file every `cap` runs and registers every file
-/// with the [`SpillGuard`] so error paths leave no stragglers.
+/// (and checksum sidecar) with the [`SpillGuard`] so error paths leave
+/// no stragglers. Every failure on this path is a typed
+/// [`io::ExtSortError::Spill`] — never a panic: an injected or real
+/// ENOSPC propagates out of the sort while the guard unlinks partials.
 struct SpillWriter {
     dir: PathBuf,
     guard: SpillGuard,
     wait: IoWait,
     behind: bool,
+    /// Checksum segments into `.crc` sidecars as they are written.
+    verify: bool,
     /// Runs per segment before rotating (`usize::MAX` = one segment).
     cap: usize,
     sink: Option<(SegSink, PathBuf)>,
+    /// Rolling per-block CRC of the open segment (when verifying).
+    sum: Option<SpillChecksum>,
     /// Runs of the open segment.
     runs: Vec<(u64, u64)>,
     segs: Vec<SpillSeg>,
@@ -194,14 +216,23 @@ struct SpillWriter {
 }
 
 impl SpillWriter {
-    fn new(dir: PathBuf, cap: usize, behind: bool, guard: SpillGuard, wait: IoWait) -> SpillWriter {
+    fn new(
+        dir: PathBuf,
+        cap: usize,
+        behind: bool,
+        verify: bool,
+        guard: SpillGuard,
+        wait: IoWait,
+    ) -> SpillWriter {
         SpillWriter {
             dir,
             guard,
             wait,
             behind,
+            verify,
             cap: cap.max(1),
             sink: None,
+            sum: None,
             runs: Vec::new(),
             segs: Vec::new(),
             pos: 0,
@@ -212,14 +243,17 @@ impl SpillWriter {
 
     fn open_seg(&mut self) -> Result<()> {
         let path = next_spill_path(&self.dir);
-        let f = File::create(&path)
-            .with_context(|| format!("creating spill file {}", path.display()))?;
+        let f = File::create(&path).map_err(|e| spill_io(e, "creating spill file", &path))?;
         self.guard.register(&path);
         let sink = if self.behind {
-            SegSink::Behind(WriteBehind::spawn(f, self.wait.clone())?)
+            SegSink::Behind(
+                WriteBehind::spawn(f, self.wait.clone())
+                    .map_err(|e| spill_io(e, "starting write-behind for", &path))?,
+            )
         } else {
             SegSink::Buf(BufWriter::new(f))
         };
+        self.sum = self.verify.then(|| SpillChecksum::new(4));
         self.sink = Some((sink, path));
         Ok(())
     }
@@ -234,17 +268,29 @@ impl SpillWriter {
     }
 
     fn write_keys(&mut self, keys: &[u32]) -> Result<()> {
-        let SpillWriter { sink, bytes, wait, pos, .. } = self;
-        let (sink, _) = sink.as_mut().expect("write_keys outside a run");
+        let SpillWriter { sink, bytes, wait, pos, sum, .. } = self;
+        let Some((sink, path)) = sink.as_mut() else {
+            anyhow::bail!("spill write outside an open segment");
+        };
+        if fault::fires(Site::SpillWriteEnospc) {
+            return Err(spill_io(fault::enospc(), "writing spill run to", path));
+        }
         match sink {
             SegSink::Buf(w) => {
                 encode_keys_into(keys, bytes);
-                wait.timed(|| w.write_all(bytes)).context("writing spill run")?;
+                if let Some(sum) = sum.as_mut() {
+                    sum.update(bytes);
+                }
+                wait.timed(|| w.write_all(bytes))
+                    .map_err(|e| spill_io(e, "writing spill run to", path))?;
             }
             SegSink::Behind(wb) => {
                 let mut b = wb.buffer();
                 encode_keys_into(keys, &mut b);
-                wb.submit(b)?;
+                if let Some(sum) = sum.as_mut() {
+                    sum.update(&b);
+                }
+                wb.submit(b).map_err(|e| spill_io(e, "writing spill run to", path))?;
             }
         }
         *pos += keys.len() as u64;
@@ -252,7 +298,9 @@ impl SpillWriter {
     }
 
     fn end_run(&mut self) -> Result<()> {
-        let start = self.cur.take().expect("end_run without begin_run");
+        let Some(start) = self.cur.take() else {
+            anyhow::bail!("spill run closed without begin_run");
+        };
         self.runs.push((start, self.pos - start));
         if self.runs.len() >= self.cap {
             self.close_seg()?;
@@ -269,10 +317,21 @@ impl SpillWriter {
     fn close_seg(&mut self) -> Result<()> {
         let Some((sink, path)) = self.sink.take() else { return Ok(()) };
         match sink {
-            SegSink::Buf(mut w) => {
-                self.wait.timed(|| w.flush()).context("flushing spill segment")?
+            SegSink::Buf(mut w) => self
+                .wait
+                .timed(|| w.flush())
+                .map_err(|e| spill_io(e, "flushing spill segment", &path))?,
+            SegSink::Behind(wb) => {
+                wb.finish().map_err(|e| spill_io(e, "flushing spill segment", &path))?
             }
-            SegSink::Behind(wb) => wb.finish()?,
+        }
+        if let Some(sum) = self.sum.take() {
+            let side = sidecar_path(&path);
+            self.guard.register(&side);
+            let entries = sum.finish();
+            self.wait
+                .timed(|| std::fs::write(&side, &entries))
+                .map_err(|e| spill_io(e, "writing spill sidecar", &side))?;
         }
         self.segs.push(SpillSeg { path, runs: std::mem::take(&mut self.runs) });
         self.pos = 0;
@@ -291,17 +350,23 @@ enum RunStore {
     Files(Vec<SpillSeg>),
 }
 
-/// Open one spill run as a stream: prefetched (double-buffered reader
-/// thread) when a buffer is configured and the run outgrows it,
+/// Open one spill run as a stream. With `verify` the read goes through
+/// the checksum-verifying [`SpillRunStream`] (block-aligned, bounded
+/// re-read recovery); otherwise raw reads — prefetched (double-buffered
+/// reader thread) when a buffer is configured and the run outgrows it,
 /// synchronous otherwise.
 fn open_key_run(
     path: &Path,
     start: u64,
     len: u64,
     prefetch: usize,
+    verify: bool,
     wait: &IoWait,
 ) -> Result<Box<dyn SortedStream + 'static>> {
-    if prefetch == 0 || len <= prefetch as u64 {
+    if verify {
+        let pf = if len <= prefetch as u64 { 0 } else { prefetch };
+        Ok(boxed(SpillRunStream::open(path, start, len, pf, wait.clone())?))
+    } else if prefetch == 0 || len <= prefetch as u64 {
         Ok(boxed(FileRunStream::open(path, start, len)?))
     } else {
         Ok(boxed(PrefetchRunStream::open(path, start, len, prefetch, wait.clone())?))
@@ -334,6 +399,7 @@ impl RunStore {
         lo: usize,
         hi: usize,
         prefetch: usize,
+        verify: bool,
         wait: &IoWait,
     ) -> Result<Vec<Box<dyn SortedStream + '_>>> {
         match self {
@@ -342,17 +408,17 @@ impl RunStore {
             }
             RunStore::Files(_) => self.flat_runs()[lo..hi]
                 .iter()
-                .map(|&(path, start, len)| open_key_run(path, start, len, prefetch, wait))
+                .map(|&(path, start, len)| open_key_run(path, start, len, prefetch, verify, wait))
                 .collect(),
         }
     }
 
-    /// Unlink any remaining spill segments (the clean-finish path; the
-    /// guard also covers them on early exits).
+    /// Unlink any remaining spill segments and sidecars (the
+    /// clean-finish path; the guard also covers them on early exits).
     fn cleanup(self, guard: &SpillGuard) {
         if let RunStore::Files(segs) = self {
             for seg in segs {
-                guard.remove_now(&seg.path);
+                io::remove_seg(guard, &seg.path);
             }
         }
     }
@@ -391,8 +457,10 @@ fn merge_pass(
             while lo < count {
                 let hi = (lo + cfg.max_fanin).min(count);
                 let mut run = Vec::new();
-                let tree =
-                    MergeTree::with_kernel(store.open(lo, hi, cfg.prefetch_buf, wait)?, kernel);
+                let tree = MergeTree::with_kernel(
+                    store.open(lo, hi, cfg.prefetch_buf, cfg.verify_spill, wait)?,
+                    kernel,
+                );
                 kernel = drain_to_vec(tree, &mut run, &mut stats.tree)?;
                 runs.push(run);
                 lo = hi;
@@ -413,15 +481,23 @@ fn merge_pass(
                     Some(*acc)
                 })
                 .collect();
-            let mut w =
-                SpillWriter::new(dir, cfg.max_fanin, true, guard.clone(), wait.clone());
+            let mut w = SpillWriter::new(
+                dir,
+                cfg.max_fanin,
+                true,
+                cfg.verify_spill,
+                guard.clone(),
+                wait.clone(),
+            );
             let mut chunk = Vec::with_capacity(DRAIN);
             let mut lo = 0;
             let mut consumed_segs = 0;
             while lo < count {
                 let hi = (lo + cfg.max_fanin).min(count);
-                let mut tree =
-                    MergeTree::with_kernel(store.open(lo, hi, cfg.prefetch_buf, wait)?, kernel);
+                let mut tree = MergeTree::with_kernel(
+                    store.open(lo, hi, cfg.prefetch_buf, cfg.verify_spill, wait)?,
+                    kernel,
+                );
                 w.begin_run()?;
                 loop {
                     chunk.clear();
@@ -437,7 +513,7 @@ fn merge_pass(
                 // merged is dead weight — unlink it now, not pass-end.
                 if let RunStore::Files(segs) = &store {
                     while consumed_segs < segs.len() && seg_ends[consumed_segs] <= hi {
-                        guard.remove_now(&segs[consumed_segs].path);
+                        io::remove_seg(guard, &segs[consumed_segs].path);
                         consumed_segs += 1;
                     }
                 }
@@ -463,7 +539,7 @@ pub fn extsort(data: &[u32], cfg: &ExtSortConfig) -> Result<(Vec<u32>, ExtSortSt
 /// Phase-1 run formation over an in-memory slice, sharded across
 /// `threads` scoped workers on contiguous chunk groups (order
 /// preserved by construction).
-fn form_runs_mem(data: &[u32], run_len: usize, threads: usize) -> Vec<Vec<u32>> {
+fn form_runs_mem(data: &[u32], run_len: usize, threads: usize) -> Result<Vec<Vec<u32>>> {
     let chunks: Vec<&[u32]> = data.chunks(run_len).collect();
     let sort_one = |c: &&[u32]| {
         let mut v = c.to_vec();
@@ -471,7 +547,7 @@ fn form_runs_mem(data: &[u32], run_len: usize, threads: usize) -> Vec<Vec<u32>> 
         v
     };
     if threads <= 1 || chunks.len() <= 1 {
-        return chunks.iter().map(sort_one).collect();
+        return Ok(chunks.iter().map(sort_one).collect());
     }
     let per = chunks.len().div_ceil(threads);
     std::thread::scope(|s| {
@@ -479,10 +555,11 @@ fn form_runs_mem(data: &[u32], run_len: usize, threads: usize) -> Vec<Vec<u32>> 
             .chunks(per)
             .map(|group| s.spawn(move || group.iter().map(sort_one).collect::<Vec<_>>()))
             .collect();
-        handles
-            .into_iter()
-            .flat_map(|h| h.join().expect("run-sort worker panicked"))
-            .collect()
+        let mut runs = Vec::with_capacity(chunks.len());
+        for h in handles {
+            runs.extend(h.join().map_err(|_| anyhow::anyhow!("run-sort worker panicked"))?);
+        }
+        Ok(runs)
     })
 }
 
@@ -507,7 +584,7 @@ pub fn extsort_with(
     let t0 = Instant::now();
     let mut store = match &cfg.spill_dir {
         None => RunStore::Mem(match former {
-            RunFormer::Std => form_runs_mem(data, cfg.run_len, threads),
+            RunFormer::Std => form_runs_mem(data, cfg.run_len, threads)?,
             RunFormer::Ladder { .. } => data
                 .chunks(cfg.run_len)
                 .map(|c| sort_run(former, c))
@@ -520,6 +597,7 @@ pub fn extsort_with(
                 dir.clone(),
                 cfg.max_fanin,
                 false,
+                cfg.verify_spill,
                 guard.clone(),
                 wait.clone(),
             );
@@ -568,7 +646,7 @@ pub fn extsort_with(
         }
         _ => {
             let mut out = Vec::with_capacity(data.len());
-            let streams = store.open(0, store.count(), cfg.prefetch_buf, &wait)?;
+            let streams = store.open(0, store.count(), cfg.prefetch_buf, cfg.verify_spill, &wait)?;
             let _ = drain_to_vec(MergeTree::with_kernel(streams, kernel), &mut out, &mut stats.tree)?;
             stats.partitions = 1;
             out
@@ -577,6 +655,8 @@ pub fn extsort_with(
     store.cleanup(&guard);
     stats.merge_secs = tm.elapsed().as_secs_f64();
     stats.io_wait_secs = wait.secs();
+    stats.corrupt_detected = wait.corrupt_detected();
+    stats.read_retries = wait.read_retries();
     Ok((out, stats))
 }
 
@@ -599,9 +679,11 @@ fn final_merge_file(
     if parts <= 1 || runs.len() <= 1 || total == 0 {
         let f = File::create(output)
             .with_context(|| format!("creating {}", output.display()))?;
-        let mut wb = WriteBehind::spawn(f, wait.clone())?;
-        let mut tree =
-            MergeTree::with_kernel(store.open(0, store.count(), cfg.prefetch_buf, wait)?, kernel);
+        let mut wb = WriteBehind::spawn(f, wait.clone()).context("starting output writer")?;
+        let mut tree = MergeTree::with_kernel(
+            store.open(0, store.count(), cfg.prefetch_buf, cfg.verify_spill, wait)?,
+            kernel,
+        );
         let mut chunk = Vec::with_capacity(DRAIN);
         loop {
             chunk.clear();
@@ -610,10 +692,10 @@ fn final_merge_file(
             }
             let mut b = wb.buffer();
             encode_keys_into(&chunk, &mut b);
-            wb.submit(b)?;
+            wb.submit(b).context("writing sorted output")?;
         }
         stats.tree.absorb(tree.stats());
-        wb.finish()?;
+        wb.finish().context("writing sorted output")?;
         stats.partitions = 1;
         return Ok(());
     }
@@ -627,6 +709,17 @@ fn final_merge_file(
         .iter()
         .map(|&(path, start, len)| part::FileCutter::open(path, start, len, 4)?.cuts(&pivots))
         .collect::<Result<_>>()?;
+    // Cut rows must be monotone — binary search over *unsorted* (i.e.
+    // corrupted-on-disk) run data can violate that, and the sizes below
+    // would underflow. Verified reads still catch the corruption; this
+    // guard just fails first with a diagnosis instead of wrapping.
+    for (c, &(path, _, len)) in cuts.iter().zip(&runs) {
+        anyhow::ensure!(
+            c.windows(2).all(|w| w[0] <= w[1]) && c.last().is_none_or(|&e| e <= len),
+            "non-monotone partition cuts for {} (corrupt spill data?)",
+            path.display()
+        );
+    }
     let nparts = pivots.len() + 1;
     let sizes: Vec<u64> =
         (0..nparts).map(|p| cuts.iter().map(|c| c[p + 1] - c[p]).sum()).collect();
@@ -652,7 +745,8 @@ fn final_merge_file(
                         .open(output)
                         .with_context(|| format!("opening {} region", output.display()))?;
                     f.seek(SeekFrom::Start(offs[p] * 4))?;
-                    let mut wb = WriteBehind::spawn(f, wait.clone())?;
+                    let mut wb =
+                        WriteBehind::spawn(f, wait.clone()).context("starting output writer")?;
                     let streams: Vec<Box<dyn SortedStream + '_>> = runs
                         .iter()
                         .enumerate()
@@ -663,6 +757,7 @@ fn final_merge_file(
                                 start + cuts[i][p],
                                 cuts[i][p + 1] - cuts[i][p],
                                 cfg.prefetch_buf,
+                                cfg.verify_spill,
                                 wait,
                             )
                         })
@@ -678,7 +773,7 @@ fn final_merge_file(
                         }
                         let mut b = wb.buffer();
                         encode_keys_into(&chunk, &mut b);
-                        wb.submit(b)?;
+                        wb.submit(b).context("writing sorted output")?;
                         written += n as u64;
                     }
                     anyhow::ensure!(
@@ -686,7 +781,7 @@ fn final_merge_file(
                         "partition {p} wrote {written} of {} keys",
                         sizes[p]
                     );
-                    wb.finish()?;
+                    wb.finish().context("writing sorted output")?;
                     Ok(tree.stats())
                 })
             })
@@ -750,6 +845,7 @@ pub fn extsort_file(input: &Path, output: &Path, cfg: &ExtSortConfig) -> Result<
             dir.clone(),
             cfg.max_fanin,
             false,
+            cfg.verify_spill,
             guard.clone(),
             wait.clone(),
         );
@@ -790,6 +886,8 @@ pub fn extsort_file(input: &Path, output: &Path, cfg: &ExtSortConfig) -> Result<
     store.cleanup(&guard);
     stats.merge_secs = tm.elapsed().as_secs_f64();
     stats.io_wait_secs = wait.secs();
+    stats.corrupt_detected = wait.corrupt_detected();
+    stats.read_retries = wait.read_retries();
     Ok(stats)
 }
 

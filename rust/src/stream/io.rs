@@ -1,13 +1,18 @@
 //! Disk plumbing for the external sorter: bulk little-endian codecs,
 //! overlap primitives (prefetch + write-behind threads), spill-file
-//! lifecycle guards, and the bounded producer/worker/sink pipeline that
-//! shards run formation across cores.
+//! lifecycle guards, spill-segment integrity (per-block CRC-32 sidecar
+//! + verified reader with bounded re-read recovery), and the bounded
+//! producer/worker/sink pipeline that shards run formation across
+//! cores.
 //!
 //! Everything here is format-agnostic bytes: the key-only engine
 //! ([`super::extsort`]) and the key-value twin ([`super::kv`]) share
-//! one prefetcher and one write-behind by choosing their record stride
-//! (4-byte keys vs 12-byte records) at the decode/encode layer.
+//! one prefetcher, one write-behind, and one verified reader by
+//! choosing their record stride (4-byte keys vs 12-byte records) at
+//! the decode/encode layer.
 
+use crate::util::crc32::{crc32, crc32_finish, crc32_update, CRC32_INIT};
+use crate::util::fault::{self, Site};
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::fs::File;
@@ -70,12 +75,19 @@ pub fn decode_records_into(bytes: &[u8], keys: &mut Vec<u32>, pays: &mut Vec<u64
     }
 }
 
-/// Shared I/O-wait accounting: nanoseconds compute threads spent
-/// blocked on disk — synchronous reads/writes plus stalls waiting for a
-/// prefetcher or the write-behind thread. Cloned into every helper;
-/// drained into [`super::extsort::ExtSortStats::io_wait_secs`].
+/// Shared I/O accounting, cloned into every helper thread: nanoseconds
+/// compute threads spent blocked on disk, plus the spill-integrity
+/// event counters (blocks that failed their checksum, bounded re-read
+/// retries). Drained into [`super::extsort::ExtSortStats`].
 #[derive(Clone, Default)]
-pub struct IoWait(Arc<AtomicU64>);
+pub struct IoWait(Arc<WaitInner>);
+
+#[derive(Default)]
+struct WaitInner {
+    nanos: AtomicU64,
+    corrupt: AtomicU64,
+    retries: AtomicU64,
+}
 
 impl IoWait {
     pub fn new() -> Self {
@@ -86,13 +98,31 @@ impl IoWait {
     pub fn timed<T>(&self, f: impl FnOnce() -> T) -> T {
         let t0 = Instant::now();
         let out = f();
-        self.0.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.0.nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         out
     }
 
     /// Total accumulated wait in seconds.
     pub fn secs(&self) -> f64 {
-        self.0.load(Ordering::Relaxed) as f64 / 1e9
+        self.0.nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Record one spill block that failed its checksum.
+    pub fn note_corrupt(&self) {
+        self.0.corrupt.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one bounded re-read of a spill block.
+    pub fn note_retry(&self) {
+        self.0.retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn corrupt_detected(&self) -> u64 {
+        self.0.corrupt.load(Ordering::Relaxed)
+    }
+
+    pub fn read_retries(&self) -> u64 {
+        self.0.retries.load(Ordering::Relaxed)
     }
 }
 
@@ -120,16 +150,456 @@ impl SpillGuard {
         Self::default()
     }
 
+    /// Poison-tolerant lock: the guard must keep cleaning up even after
+    /// a panic elsewhere — that is its whole job.
+    fn paths(&self) -> std::sync::MutexGuard<'_, Vec<PathBuf>> {
+        self.0 .0.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     /// Track `path` for unlink-on-drop.
     pub fn register(&self, path: &Path) {
-        self.0 .0.lock().unwrap().push(path.to_path_buf());
+        self.paths().push(path.to_path_buf());
     }
 
     /// Unlink `path` now and stop tracking it (the consumed-segment /
     /// clean-finish path).
     pub fn remove_now(&self, path: &Path) {
         let _ = std::fs::remove_file(path);
-        self.0 .0.lock().unwrap().retain(|p| p != path);
+        self.paths().retain(|p| p != path);
+    }
+}
+
+/// Unlink a spill segment *and* its checksum sidecar, dropping both
+/// from the guard. Safe when no sidecar exists (verification off).
+pub(crate) fn remove_seg(guard: &SpillGuard, path: &Path) {
+    guard.remove_now(path);
+    guard.remove_now(&sidecar_path(path));
+}
+
+/// Typed failure of the external sort's spill layer. Carried inside
+/// `anyhow::Error` chains (callers `downcast_ref::<ExtSortError>()`):
+/// corruption and disk-full become diagnosable conditions instead of
+/// panics, and the [`SpillGuard`] still sweeps partial segments on the
+/// way out.
+#[derive(Debug)]
+pub enum ExtSortError {
+    /// A spill block failed its checksum (or the segment/sidecar is
+    /// structurally invalid) and one bounded re-read did not recover
+    /// it. `offset` is the byte offset of the bad block in `run`.
+    CorruptSpill { run: PathBuf, offset: u64 },
+    /// An I/O error (ENOSPC, permissions, vanished file, ...) on a
+    /// spill read or write.
+    Spill(std::io::Error),
+}
+
+impl std::fmt::Display for ExtSortError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExtSortError::CorruptSpill { run, offset } => {
+                write!(f, "corrupt spill block at byte {offset} of {}", run.display())
+            }
+            ExtSortError::Spill(e) => write!(f, "spill I/O failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ExtSortError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ExtSortError::CorruptSpill { .. } => None,
+            ExtSortError::Spill(e) => Some(e),
+        }
+    }
+}
+
+/// Wrap a spill-path I/O error into a typed [`ExtSortError::Spill`]
+/// with a human-readable context line.
+pub(crate) fn spill_io(e: std::io::Error, what: &str, path: &Path) -> anyhow::Error {
+    let msg = format!("{what} {}", path.display());
+    anyhow::Error::new(ExtSortError::Spill(e)).context(msg)
+}
+
+// ---------------------------------------------------------------------------
+// Spill-segment integrity: out-of-band per-block checksum sidecar.
+//
+// Spill *data* files stay raw little-endian records — the partition
+// cutter and run addressing depend on byte-stable record offsets, so
+// integrity metadata lives out of band in a `<segment>.crc` sidecar:
+// one fixed-size entry per `SPILL_BLOCK_RECS`-record block, blocks
+// aligned to absolute data-file offsets (the last block may be
+// partial). A reader covering records [start, start+len) fetches the
+// sidecar entries for exactly the blocks that range touches, reads
+// block-aligned, verifies each block, and trims to the request.
+// ---------------------------------------------------------------------------
+
+/// Sidecar entry magic ("LSBK" on disk, little-endian).
+pub const SPILL_MAGIC: u32 = 0x4B42_534C;
+/// Sidecar format version.
+pub const SPILL_VERSION: u8 = 1;
+/// Records per checksum block. 16 Ki records = 64 KiB blocks for
+/// 4-byte keys, 192 KiB for 12-byte KV records — big enough that the
+/// CRC amortizes, small enough that a bounded re-read is cheap.
+pub const SPILL_BLOCK_RECS: usize = 16_384;
+/// Encoded size of one sidecar entry.
+pub const SPILL_META_BYTES: usize = 12;
+
+/// One decoded sidecar entry. Every encoded bit is covered by an exact
+/// check somewhere: magic and version at decode, `stride` and
+/// `rec_count` against values derived from the data-file size at
+/// verify, `crc` against the recomputed payload checksum — so any
+/// single-bit flip in an entry is caught deterministically.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpillBlockMeta {
+    /// Record stride in bytes (4 = keys, 12 = KV records).
+    pub stride: u8,
+    /// Records in this block (`SPILL_BLOCK_RECS` except a partial tail).
+    pub rec_count: u16,
+    /// CRC-32 over the block's raw payload bytes.
+    pub crc: u32,
+}
+
+/// Append the 12-byte wire form of `meta` to `out`:
+/// `magic u32 LE | version u8 | stride u8 | rec_count u16 LE | crc u32 LE`.
+pub fn encode_block_meta(meta: &SpillBlockMeta, out: &mut Vec<u8>) {
+    out.extend_from_slice(&SPILL_MAGIC.to_le_bytes());
+    out.push(SPILL_VERSION);
+    out.push(meta.stride);
+    out.extend_from_slice(&meta.rec_count.to_le_bytes());
+    out.extend_from_slice(&meta.crc.to_le_bytes());
+}
+
+/// Decode one sidecar entry, rejecting bad length, magic, or version.
+pub fn decode_block_meta(bytes: &[u8]) -> std::result::Result<SpillBlockMeta, &'static str> {
+    if bytes.len() != SPILL_META_BYTES {
+        return Err("truncated spill block meta");
+    }
+    if u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]) != SPILL_MAGIC {
+        return Err("bad spill block magic");
+    }
+    if bytes[4] != SPILL_VERSION {
+        return Err("unsupported spill block version");
+    }
+    Ok(SpillBlockMeta {
+        stride: bytes[5],
+        rec_count: u16::from_le_bytes([bytes[6], bytes[7]]),
+        crc: u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]),
+    })
+}
+
+/// Path of the checksum sidecar for a spill data file (`<data>.crc`).
+pub fn sidecar_path(data: &Path) -> PathBuf {
+    let mut s = data.as_os_str().to_os_string();
+    s.push(".crc");
+    PathBuf::from(s)
+}
+
+/// Writer-side rolling checksummer: fed every encoded buffer a spill
+/// writer emits (in file order), it walks block boundaries, accumulates
+/// a streaming CRC per block, and yields the encoded sidecar at segment
+/// close. Pure compute — it never touches the disk itself.
+pub(crate) struct SpillChecksum {
+    stride: u8,
+    block_bytes: usize,
+    fill: usize,
+    state: u32,
+    entries: Vec<u8>,
+}
+
+impl SpillChecksum {
+    pub(crate) fn new(stride: usize) -> SpillChecksum {
+        debug_assert!(stride > 0 && stride <= u8::MAX as usize);
+        SpillChecksum {
+            stride: stride as u8,
+            block_bytes: SPILL_BLOCK_RECS * stride,
+            fill: 0,
+            state: CRC32_INIT,
+            entries: Vec::new(),
+        }
+    }
+
+    /// Absorb the next `bytes` of the segment (must be fed in exact
+    /// file order; callers feed each buffer once, before or after the
+    /// physical write).
+    pub(crate) fn update(&mut self, mut bytes: &[u8]) {
+        while !bytes.is_empty() {
+            let take = (self.block_bytes - self.fill).min(bytes.len());
+            self.state = crc32_update(self.state, &bytes[..take]);
+            self.fill += take;
+            bytes = &bytes[take..];
+            if self.fill == self.block_bytes {
+                self.seal();
+            }
+        }
+    }
+
+    fn seal(&mut self) {
+        let meta = SpillBlockMeta {
+            stride: self.stride,
+            rec_count: (self.fill / self.stride as usize) as u16,
+            crc: crc32_finish(self.state),
+        };
+        encode_block_meta(&meta, &mut self.entries);
+        self.fill = 0;
+        self.state = CRC32_INIT;
+    }
+
+    /// Seal any partial tail block and return the encoded sidecar
+    /// bytes, ready to be written to [`sidecar_path`].
+    pub(crate) fn finish(mut self) -> Vec<u8> {
+        if self.fill > 0 {
+            self.seal();
+        }
+        self.entries
+    }
+}
+
+/// Where the current block's bytes live inside a [`SpillReader`].
+#[derive(Clone, Copy)]
+enum Loc {
+    /// In `scratch` (synchronous reads and all bounded re-reads).
+    Scratch,
+    /// In the prefetch buffer at this offset.
+    Buf(usize),
+}
+
+enum SpillSrc {
+    Sync(File),
+    Prefetch { pf: FilePrefetch, buf: Vec<u8>, pos: usize },
+}
+
+/// Verified reader over records `[start, start+len)` of a checksummed
+/// spill segment. Reads are block-aligned (rounding the range out to
+/// checksum-block boundaries, trimming the delivered slices back to
+/// the request); each block is verified against its sidecar entry.
+/// Any failure — I/O error, short read, checksum mismatch, or an
+/// injected fault — gets exactly one bounded recovery attempt: a
+/// synchronous re-read of that block through a fresh file handle. If
+/// the re-read verifies, the sort proceeds byte-identically (the event
+/// is counted); if not, a typed [`ExtSortError`] surfaces.
+pub(crate) struct SpillReader {
+    path: PathBuf,
+    stride: usize,
+    block_bytes: u64,
+    file_bytes: u64,
+    start_byte: u64,
+    end_byte: u64,
+    blk_lo: u64,
+    blk_hi: u64,
+    next_blk: u64,
+    metas: Vec<SpillBlockMeta>,
+    src: SpillSrc,
+    scratch: Vec<u8>,
+    wait: IoWait,
+}
+
+impl SpillReader {
+    /// `prefetch_recs == 0` selects synchronous reads; otherwise a
+    /// [`FilePrefetch`] thread streams whole blocks ahead (the buffer
+    /// is rounded up to a block multiple so blocks never straddle
+    /// buffers).
+    pub(crate) fn open(
+        path: &Path,
+        start_rec: u64,
+        len_recs: u64,
+        stride: usize,
+        prefetch_recs: usize,
+        wait: IoWait,
+    ) -> Result<SpillReader> {
+        let block_bytes = (SPILL_BLOCK_RECS * stride) as u64;
+        let file_bytes = std::fs::metadata(path)
+            .map_err(|e| spill_io(e, "stat of spill segment", path))?
+            .len();
+        let corrupt = |offset: u64| {
+            anyhow::Error::new(ExtSortError::CorruptSpill { run: path.to_path_buf(), offset })
+        };
+        if file_bytes % stride as u64 != 0 {
+            // A segment that is not a whole number of records was
+            // truncated or overwritten on disk.
+            return Err(corrupt(file_bytes).context("spill segment length is not record-aligned"));
+        }
+        let start_byte = start_rec * stride as u64;
+        let end_byte = (start_rec + len_recs) * stride as u64;
+        if end_byte > file_bytes {
+            return Err(corrupt(file_bytes).context("spill segment shorter than its run index"));
+        }
+        let blk_lo = start_byte / block_bytes;
+        let blk_hi = if len_recs == 0 { blk_lo } else { end_byte.div_ceil(block_bytes) };
+
+        // Sidecar entries for exactly the blocks this range touches.
+        // Sidecar problems are immediate typed errors (no retry): the
+        // sidecar is tiny, written once, and read in one gulp.
+        let side = sidecar_path(path);
+        let mut metas = Vec::with_capacity((blk_hi - blk_lo) as usize);
+        if blk_hi > blk_lo {
+            let mut f = File::open(&side)
+                .map_err(|e| spill_io(e, "opening spill checksum sidecar", &side))?;
+            f.seek(SeekFrom::Start(blk_lo * SPILL_META_BYTES as u64))
+                .map_err(|e| spill_io(e, "seeking spill checksum sidecar", &side))?;
+            let mut raw = vec![0u8; (blk_hi - blk_lo) as usize * SPILL_META_BYTES];
+            wait.timed(|| f.read_exact(&mut raw))
+                .map_err(|e| spill_io(e, "reading spill checksum sidecar", &side))?;
+            for (i, ent) in raw.chunks_exact(SPILL_META_BYTES).enumerate() {
+                let m = decode_block_meta(ent)
+                    .map_err(|why| corrupt((blk_lo + i as u64) * block_bytes).context(why))?;
+                metas.push(m);
+            }
+        }
+
+        let read_lo = blk_lo * block_bytes;
+        let read_hi = (blk_hi * block_bytes).min(file_bytes);
+        let src = if prefetch_recs == 0 || len_recs == 0 {
+            let mut f =
+                File::open(path).map_err(|e| spill_io(e, "opening spill segment", path))?;
+            f.seek(SeekFrom::Start(read_lo))
+                .map_err(|e| spill_io(e, "seeking spill segment", path))?;
+            SpillSrc::Sync(f)
+        } else {
+            let want = (prefetch_recs * stride) as u64;
+            let bufs = want.div_ceil(block_bytes).max(1);
+            let pf = FilePrefetch::spawn(
+                path,
+                read_lo,
+                read_hi - read_lo,
+                (bufs * block_bytes) as usize,
+                wait.clone(),
+            )?;
+            SpillSrc::Prefetch { pf, buf: Vec::new(), pos: 0 }
+        };
+
+        Ok(SpillReader {
+            path: path.to_path_buf(),
+            stride,
+            block_bytes,
+            file_bytes,
+            start_byte,
+            end_byte,
+            blk_lo,
+            blk_hi,
+            next_blk: blk_lo,
+            metas,
+            src,
+            scratch: Vec::new(),
+            wait,
+        })
+    }
+
+    /// The next verified block's in-range bytes (a whole number of
+    /// records), or `None` once the range is exhausted.
+    pub(crate) fn next_verified(&mut self) -> Result<Option<&[u8]>> {
+        if self.next_blk >= self.blk_hi {
+            return Ok(None);
+        }
+        let blk = self.next_blk;
+        let blk_start = blk * self.block_bytes;
+        let blk_len = self.block_bytes.min(self.file_bytes - blk_start) as usize;
+        let meta = self.metas[(blk - self.blk_lo) as usize];
+
+        // Attempt 0: bytes from the streaming source. Injected faults
+        // land here — after the physical read, so stream cursors stay
+        // consistent — and before verification, so injected corruption
+        // is detected, never trusted.
+        let mut checksum_failed = false;
+        let attempt0 = match self.fetch_block(blk_len) {
+            Ok(loc) => {
+                let short = fault::fires(Site::SpillReadShort);
+                if fault::fires(Site::SpillCorruptByte) {
+                    self.flip_byte(loc);
+                }
+                if !short && self.verify(loc, blk_len, &meta) {
+                    Some(loc)
+                } else {
+                    checksum_failed = !short;
+                    None
+                }
+            }
+            Err(_) => None,
+        };
+
+        let loc = match attempt0 {
+            Some(loc) => loc,
+            None => {
+                if checksum_failed {
+                    self.wait.note_corrupt();
+                }
+                // One bounded recovery: re-read this block through a
+                // fresh handle at its absolute offset, verify again.
+                self.wait.note_retry();
+                self.reread(blk_start, blk_len)
+                    .map_err(|e| spill_io(e, "re-reading spill block in", &self.path))?;
+                if !self.verify(Loc::Scratch, blk_len, &meta) {
+                    self.wait.note_corrupt();
+                    return Err(anyhow::Error::new(ExtSortError::CorruptSpill {
+                        run: self.path.clone(),
+                        offset: blk_start,
+                    }));
+                }
+                Loc::Scratch
+            }
+        };
+
+        self.next_blk += 1;
+        let lo = (self.start_byte.max(blk_start) - blk_start) as usize;
+        let hi = (self.end_byte.min(blk_start + blk_len as u64) - blk_start) as usize;
+        Ok(Some(&self.view(loc, blk_len)[lo..hi]))
+    }
+
+    /// Pull the next block's bytes off the streaming source, advancing
+    /// its cursor exactly one block regardless of later verification.
+    fn fetch_block(&mut self, blk_len: usize) -> std::io::Result<Loc> {
+        match &mut self.src {
+            SpillSrc::Sync(f) => {
+                self.scratch.clear();
+                self.scratch.resize(blk_len, 0);
+                let scratch = &mut self.scratch;
+                self.wait.timed(|| f.read_exact(scratch))?;
+                Ok(Loc::Scratch)
+            }
+            SpillSrc::Prefetch { pf, buf, pos } => {
+                if *pos == buf.len() {
+                    match pf.next_buf().map_err(std::io::Error::other)? {
+                        Some(b) => {
+                            *buf = b;
+                            *pos = 0;
+                        }
+                        None => return Err(std::io::ErrorKind::UnexpectedEof.into()),
+                    }
+                }
+                if buf.len() - *pos < blk_len {
+                    *pos = buf.len();
+                    return Err(std::io::ErrorKind::UnexpectedEof.into());
+                }
+                let p = *pos;
+                *pos += blk_len;
+                Ok(Loc::Buf(p))
+            }
+        }
+    }
+
+    fn view(&self, loc: Loc, blk_len: usize) -> &[u8] {
+        match (loc, &self.src) {
+            (Loc::Scratch, _) => &self.scratch[..blk_len],
+            (Loc::Buf(pos), SpillSrc::Prefetch { buf, .. }) => &buf[pos..pos + blk_len],
+            // Unreachable by construction (sync fetches land in
+            // scratch); an empty view simply fails verification.
+            (Loc::Buf(_), SpillSrc::Sync(_)) => &[],
+        }
+    }
+
+    fn verify(&self, loc: Loc, blk_len: usize, meta: &SpillBlockMeta) -> bool {
+        let bytes = self.view(loc, blk_len);
+        bytes.len() == blk_len
+            && meta.stride as usize == self.stride
+            && meta.rec_count as usize == blk_len / self.stride
+            && meta.crc == crc32(bytes)
+    }
+
+    fn reread(&mut self, blk_start: u64, blk_len: usize) -> std::io::Result<()> {
+        self.scratch.clear();
+        self.scratch.resize(blk_len, 0);
+        let mut f = File::open(&self.path)?;
+        f.seek(SeekFrom::Start(blk_start))?;
+        let scratch = &mut self.scratch;
+        self.wait.timed(|| f.read_exact(scratch))
     }
 }
 
@@ -222,8 +692,11 @@ pub struct WriteBehind {
 
 impl WriteBehind {
     /// `file` should already be seeked to where writing starts; writes
-    /// proceed sequentially from there.
-    pub fn spawn(mut file: File, wait: IoWait) -> Result<WriteBehind> {
+    /// proceed sequentially from there. Plain `io::Result` throughout
+    /// so spill-path callers can wrap failures into
+    /// [`ExtSortError::Spill`] and output-path callers can add their
+    /// own context.
+    pub fn spawn(mut file: File, wait: IoWait) -> std::io::Result<WriteBehind> {
         let (tx, rx) = mpsc::sync_channel::<Vec<u8>>(2);
         let (rtx, recycle) = mpsc::sync_channel::<Vec<u8>>(4);
         let handle = std::thread::Builder::new()
@@ -235,8 +708,7 @@ impl WriteBehind {
                     let _ = rtx.try_send(buf); // recycle if there's room
                 }
                 file.flush()
-            })
-            .context("spawning write-behind thread")?;
+            })?;
         Ok(WriteBehind { tx: Some(tx), recycle, handle: Some(handle), wait })
     }
 
@@ -254,29 +726,31 @@ impl WriteBehind {
     /// Queue `buf` for writing; blocks (charged to the wait counter)
     /// when two buffers are already in flight. A dead writer thread
     /// surfaces its I/O error here.
-    pub fn submit(&mut self, buf: Vec<u8>) -> Result<()> {
-        let tx = self.tx.as_ref().expect("submit after finish");
+    pub fn submit(&mut self, buf: Vec<u8>) -> std::io::Result<()> {
+        let Some(tx) = self.tx.as_ref() else {
+            return Err(std::io::Error::other("write-behind used after finish"));
+        };
         if self.wait.timed(|| tx.send(buf)).is_err() {
             // Writer exited early: it can only have done so on error.
-            self.join().context("write-behind failed")?;
-            anyhow::bail!("write-behind thread exited before finish");
+            self.join()?;
+            return Err(std::io::Error::other("write-behind thread exited before finish"));
         }
         Ok(())
     }
 
-    fn join(&mut self) -> Result<()> {
+    fn join(&mut self) -> std::io::Result<()> {
         self.tx = None;
         match self.handle.take() {
             Some(h) => match h.join() {
-                Ok(res) => res.context("writing sorted output"),
-                Err(_) => anyhow::bail!("write-behind thread panicked"),
+                Ok(res) => res,
+                Err(_) => Err(std::io::Error::other("write-behind thread panicked")),
             },
             None => Ok(()),
         }
     }
 
     /// Drain the queue, flush, and surface any pending write error.
-    pub fn finish(mut self) -> Result<()> {
+    pub fn finish(mut self) -> std::io::Result<()> {
         self.wait.clone().timed(|| self.join())
     }
 }
@@ -325,14 +799,18 @@ where
             std::thread::Builder::new()
                 .name("loms-runsort".into())
                 .spawn_scoped(s, move || loop {
-                    // Hold the lock only to take the next chunk.
-                    let msg = work_rx.lock().unwrap().recv();
+                    // Hold the lock only to take the next chunk. A
+                    // poisoned lock means a sibling panicked — exit
+                    // and let the pipeline tear down.
+                    let Ok(guard) = work_rx.lock() else { return };
+                    let msg = guard.recv();
+                    drop(guard);
                     let Ok((seq, c)) = msg else { return };
                     if done_tx.send((seq, work(c))).is_err() {
                         return; // sink gone (error path)
                     }
                 })
-                .expect("spawning run-sort worker");
+                .context("spawning run-sort worker")?;
         }
         drop(done_tx);
         let sink_handle = s.spawn(move || -> Result<W> {
@@ -378,4 +856,105 @@ where
             None => sink_res,
         }
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_seg(name: &str) -> PathBuf {
+        static N: AtomicU64 = AtomicU64::new(0);
+        let n = N.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir().join(format!("loms-io-{}-{name}-{n}.u32", std::process::id()))
+    }
+
+    /// Write a checksummed segment of `keys`, returning its data path.
+    fn write_seg(name: &str, keys: &[u32]) -> PathBuf {
+        let path = tmp_seg(name);
+        let mut bytes = Vec::new();
+        encode_keys_into(keys, &mut bytes);
+        let mut sum = SpillChecksum::new(4);
+        sum.update(&bytes);
+        std::fs::write(&path, &bytes).unwrap();
+        std::fs::write(sidecar_path(&path), sum.finish()).unwrap();
+        path
+    }
+
+    fn read_all(path: &Path, start: u64, len: u64, prefetch: usize) -> Result<Vec<u32>> {
+        let mut rd = SpillReader::open(path, start, len, 4, prefetch, IoWait::new())?;
+        let mut out = Vec::new();
+        while let Some(b) = rd.next_verified()? {
+            decode_keys_into(b, &mut out);
+        }
+        Ok(out)
+    }
+
+    fn cleanup(path: &Path) {
+        let _ = std::fs::remove_file(path);
+        let _ = std::fs::remove_file(sidecar_path(path));
+    }
+
+    #[test]
+    fn verified_round_trip_sync_and_prefetch() {
+        // Multi-block segment with a partial tail block.
+        let keys: Vec<u32> = (0..(SPILL_BLOCK_RECS as u32 * 2 + 1357)).collect();
+        let path = write_seg("round", &keys);
+        for prefetch in [0usize, 1 << 14, 1 << 18] {
+            assert_eq!(read_all(&path, 0, keys.len() as u64, prefetch).unwrap(), keys);
+            // Sub-range crossing a block boundary, misaligned both ends.
+            let (s, l) = (SPILL_BLOCK_RECS as u64 - 7, 4096u64);
+            assert_eq!(
+                read_all(&path, s, l, prefetch).unwrap(),
+                keys[s as usize..(s + l) as usize]
+            );
+        }
+        assert!(read_all(&path, 3, 0, 1024).unwrap().is_empty());
+        cleanup(&path);
+    }
+
+    #[test]
+    fn flipped_payload_byte_is_detected() {
+        let keys: Vec<u32> = (0..40_000u32).collect();
+        let path = write_seg("flip", &keys);
+        let mut raw = std::fs::read(&path).unwrap();
+        raw[5] ^= 0x10;
+        std::fs::write(&path, &raw).unwrap();
+        let err = read_all(&path, 0, keys.len() as u64, 0).unwrap_err();
+        match err.downcast_ref::<ExtSortError>() {
+            Some(ExtSortError::CorruptSpill { offset, .. }) => assert_eq!(*offset, 0),
+            other => panic!("expected CorruptSpill, got {other:?}"),
+        }
+        cleanup(&path);
+    }
+
+    #[test]
+    fn every_flipped_sidecar_byte_is_detected() {
+        let keys: Vec<u32> = (0..1000u32).collect();
+        let path = write_seg("side", &keys);
+        let side = sidecar_path(&path);
+        for byte in 0..SPILL_META_BYTES {
+            let mut raw = std::fs::read(&side).unwrap();
+            raw[byte] ^= 1;
+            std::fs::write(&side, &raw).unwrap();
+            assert!(
+                read_all(&path, 0, keys.len() as u64, 0).is_err(),
+                "flip in sidecar byte {byte} undetected"
+            );
+            raw[byte] ^= 1;
+            std::fs::write(&side, &raw).unwrap();
+        }
+        assert_eq!(read_all(&path, 0, keys.len() as u64, 0).unwrap(), keys);
+        cleanup(&path);
+    }
+
+    #[test]
+    fn truncated_segment_is_detected() {
+        let keys: Vec<u32> = (0..1000u32).collect();
+        let path = write_seg("trunc", &keys);
+        let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(999 * 4).unwrap();
+        drop(f);
+        assert!(read_all(&path, 0, keys.len() as u64, 0).is_err());
+        cleanup(&path);
+    }
 }

@@ -31,11 +31,12 @@ use std::time::Instant;
 
 use super::extsort::{ExtSortConfig, ExtSortStats, SpillSeg};
 use super::io::{
-    decode_records_into, encode_records_into, pipeline, FilePrefetch, IoWait, SpillGuard,
-    WriteBehind,
+    self, decode_records_into, encode_records_into, pipeline, sidecar_path, spill_io,
+    FilePrefetch, IoWait, SpillChecksum, SpillGuard, SpillReader, WriteBehind,
 };
 use super::part::{self, FileCutter};
 use super::tree::TreeStats;
+use crate::util::fault::{self, Site};
 
 /// Record pairs pulled from the merge tree per drain step.
 const DRAIN: usize = 4096;
@@ -210,6 +211,62 @@ impl SortedKvStream for PrefetchRunKvStream {
         let n = max.min((self.buf.len() - self.pos) / rec);
         decode_records_into(&self.buf[self.pos..self.pos + n * rec], keys, pays);
         self.pos += n * rec;
+        Ok(n)
+    }
+}
+
+/// A KV spill run read through the checksum-verifying
+/// [`SpillReader`] — same byte layout and delivered records as
+/// [`FileRunKvStream`]/[`PrefetchRunKvStream`], but every checksum
+/// block is validated against the segment's `.crc` sidecar (bounded
+/// re-read recovery, typed [`super::io::ExtSortError`] on
+/// unrecoverable corruption).
+pub struct SpillRunKvStream {
+    rd: SpillReader,
+    carry_k: Vec<u32>,
+    carry_p: Vec<u64>,
+    pos: usize,
+}
+
+impl SpillRunKvStream {
+    /// Verified reads over records `[start, start + records)` of
+    /// `path`. `prefetch_records == 0` selects synchronous block reads.
+    pub fn open(
+        path: &Path,
+        start: u64,
+        records: u64,
+        prefetch_records: usize,
+        wait: IoWait,
+    ) -> Result<Self> {
+        let rd =
+            SpillReader::open(path, start, records, REC_BYTES as usize, prefetch_records, wait)?;
+        Ok(SpillRunKvStream { rd, carry_k: Vec::new(), carry_p: Vec::new(), pos: 0 })
+    }
+}
+
+impl SortedKvStream for SpillRunKvStream {
+    fn next_chunk(
+        &mut self,
+        max: usize,
+        keys: &mut Vec<u32>,
+        pays: &mut Vec<u64>,
+    ) -> Result<usize> {
+        while self.pos == self.carry_k.len() {
+            self.carry_k.clear();
+            self.carry_p.clear();
+            self.pos = 0;
+            match self.rd.next_verified()? {
+                Some(bytes) if !bytes.is_empty() => {
+                    decode_records_into(bytes, &mut self.carry_k, &mut self.carry_p)
+                }
+                Some(_) => continue,
+                None => return Ok(0),
+            }
+        }
+        let n = max.min(self.carry_k.len() - self.pos);
+        keys.extend_from_slice(&self.carry_k[self.pos..self.pos + n]);
+        pays.extend_from_slice(&self.carry_p[self.pos..self.pos + n]);
+        self.pos += n;
         Ok(n)
     }
 }
@@ -764,15 +821,20 @@ enum SegSinkKv {
 
 /// Append-only writer for segmented KV spill files of sorted runs —
 /// the key-only `SpillWriter` with 12-byte records. Rotates to a fresh
-/// file every `cap` runs and registers every file with the
-/// [`SpillGuard`].
+/// file every `cap` runs and registers every file (and checksum
+/// sidecar) with the [`SpillGuard`]. Failures on this path are typed
+/// [`io::ExtSortError::Spill`]s, never panics.
 struct SpillWriterKv {
     dir: PathBuf,
     guard: SpillGuard,
     wait: IoWait,
     behind: bool,
+    /// Checksum segments into `.crc` sidecars as they are written.
+    verify: bool,
     cap: usize,
     sink: Option<(SegSinkKv, PathBuf)>,
+    /// Rolling per-block CRC of the open segment (when verifying).
+    sum: Option<SpillChecksum>,
     runs: Vec<(u64, u64)>,
     segs: Vec<SpillSeg>,
     /// Records written into the open segment.
@@ -782,14 +844,23 @@ struct SpillWriterKv {
 }
 
 impl SpillWriterKv {
-    fn new(dir: PathBuf, cap: usize, behind: bool, guard: SpillGuard, wait: IoWait) -> SpillWriterKv {
+    fn new(
+        dir: PathBuf,
+        cap: usize,
+        behind: bool,
+        verify: bool,
+        guard: SpillGuard,
+        wait: IoWait,
+    ) -> SpillWriterKv {
         SpillWriterKv {
             dir,
             guard,
             wait,
             behind,
+            verify,
             cap: cap.max(1),
             sink: None,
+            sum: None,
             runs: Vec::new(),
             segs: Vec::new(),
             pos: 0,
@@ -800,14 +871,17 @@ impl SpillWriterKv {
 
     fn open_seg(&mut self) -> Result<()> {
         let path = next_spill_path(&self.dir);
-        let f = File::create(&path)
-            .with_context(|| format!("creating KV spill file {}", path.display()))?;
+        let f = File::create(&path).map_err(|e| spill_io(e, "creating KV spill file", &path))?;
         self.guard.register(&path);
         let sink = if self.behind {
-            SegSinkKv::Behind(WriteBehind::spawn(f, self.wait.clone())?)
+            SegSinkKv::Behind(
+                WriteBehind::spawn(f, self.wait.clone())
+                    .map_err(|e| spill_io(e, "starting write-behind for", &path))?,
+            )
         } else {
             SegSinkKv::Buf(BufWriter::new(f))
         };
+        self.sum = self.verify.then(|| SpillChecksum::new(REC_BYTES as usize));
         self.sink = Some((sink, path));
         Ok(())
     }
@@ -822,17 +896,29 @@ impl SpillWriterKv {
     }
 
     fn write_records(&mut self, keys: &[u32], pays: &[u64]) -> Result<()> {
-        let SpillWriterKv { sink, bytes, wait, pos, .. } = self;
-        let (sink, _) = sink.as_mut().expect("write_records outside a run");
+        let SpillWriterKv { sink, bytes, wait, pos, sum, .. } = self;
+        let Some((sink, path)) = sink.as_mut() else {
+            bail!("KV spill write outside an open segment");
+        };
+        if fault::fires(Site::SpillWriteEnospc) {
+            return Err(spill_io(fault::enospc(), "writing KV spill run to", path));
+        }
         match sink {
             SegSinkKv::Buf(w) => {
                 encode_records_into(keys, pays, bytes);
-                wait.timed(|| w.write_all(bytes)).context("writing KV spill run")?;
+                if let Some(sum) = sum.as_mut() {
+                    sum.update(bytes);
+                }
+                wait.timed(|| w.write_all(bytes))
+                    .map_err(|e| spill_io(e, "writing KV spill run to", path))?;
             }
             SegSinkKv::Behind(wb) => {
                 let mut b = wb.buffer();
                 encode_records_into(keys, pays, &mut b);
-                wb.submit(b)?;
+                if let Some(sum) = sum.as_mut() {
+                    sum.update(&b);
+                }
+                wb.submit(b).map_err(|e| spill_io(e, "writing KV spill run to", path))?;
             }
         }
         *pos += keys.len() as u64;
@@ -840,7 +926,9 @@ impl SpillWriterKv {
     }
 
     fn end_run(&mut self) -> Result<()> {
-        let start = self.cur.take().expect("end_run without begin_run");
+        let Some(start) = self.cur.take() else {
+            bail!("KV spill run closed without begin_run");
+        };
         self.runs.push((start, self.pos - start));
         if self.runs.len() >= self.cap {
             self.close_seg()?;
@@ -857,10 +945,21 @@ impl SpillWriterKv {
     fn close_seg(&mut self) -> Result<()> {
         let Some((sink, path)) = self.sink.take() else { return Ok(()) };
         match sink {
-            SegSinkKv::Buf(mut w) => {
-                self.wait.timed(|| w.flush()).context("flushing KV spill segment")?
+            SegSinkKv::Buf(mut w) => self
+                .wait
+                .timed(|| w.flush())
+                .map_err(|e| spill_io(e, "flushing KV spill segment", &path))?,
+            SegSinkKv::Behind(wb) => {
+                wb.finish().map_err(|e| spill_io(e, "flushing KV spill segment", &path))?
             }
-            SegSinkKv::Behind(wb) => wb.finish()?,
+        }
+        if let Some(sum) = self.sum.take() {
+            let side = sidecar_path(&path);
+            self.guard.register(&side);
+            let entries = sum.finish();
+            self.wait
+                .timed(|| std::fs::write(&side, &entries))
+                .map_err(|e| spill_io(e, "writing KV spill sidecar", &side))?;
         }
         self.segs.push(SpillSeg { path, runs: std::mem::take(&mut self.runs) });
         self.pos = 0;
@@ -879,16 +978,23 @@ enum RunStoreKv {
     Files(Vec<SpillSeg>),
 }
 
-/// Open one KV spill run as a stream: prefetched when a buffer is
-/// configured and the run outgrows it, synchronous otherwise.
+/// Open one KV spill run as a stream. With `verify` set the run reads
+/// through the checksummed [`SpillRunKvStream`] (block-verified, with
+/// bounded re-read recovery); otherwise through the raw readers —
+/// prefetched when a buffer is configured and the run outgrows it,
+/// synchronous otherwise.
 fn open_kv_run(
     path: &Path,
     start: u64,
     len: u64,
     prefetch: usize,
+    verify: bool,
     wait: &IoWait,
 ) -> Result<Box<dyn SortedKvStream + 'static>> {
-    if prefetch == 0 || len <= prefetch as u64 {
+    if verify {
+        let pf = if len <= prefetch as u64 { 0 } else { prefetch };
+        Ok(boxed_kv(SpillRunKvStream::open(path, start, len, pf, wait.clone())?))
+    } else if prefetch == 0 || len <= prefetch as u64 {
         Ok(boxed_kv(FileRunKvStream::open(path, start, len)?))
     } else {
         Ok(boxed_kv(PrefetchRunKvStream::open(path, start, len, prefetch, wait.clone())?))
@@ -919,6 +1025,7 @@ impl RunStoreKv {
         lo: usize,
         hi: usize,
         prefetch: usize,
+        verify: bool,
         wait: &IoWait,
     ) -> Result<Vec<Box<dyn SortedKvStream + '_>>> {
         match self {
@@ -928,7 +1035,7 @@ impl RunStoreKv {
                 .collect()),
             RunStoreKv::Files(_) => self.flat_runs()[lo..hi]
                 .iter()
-                .map(|&(path, start, len)| open_kv_run(path, start, len, prefetch, wait))
+                .map(|&(path, start, len)| open_kv_run(path, start, len, prefetch, verify, wait))
                 .collect(),
         }
     }
@@ -936,7 +1043,7 @@ impl RunStoreKv {
     fn cleanup(self, guard: &SpillGuard) {
         if let RunStoreKv::Files(segs) = self {
             for seg in segs {
-                guard.remove_now(&seg.path);
+                io::remove_seg(guard, &seg.path);
             }
         }
     }
@@ -982,8 +1089,10 @@ fn merge_pass_kv(
             while lo < count {
                 let hi = (lo + cfg.max_fanin).min(count);
                 let (mut rk, mut rp) = (Vec::new(), Vec::new());
-                let tree =
-                    MergeTreeKv::with_kernel(store.open(lo, hi, cfg.prefetch_buf, wait)?, kernel);
+                let tree = MergeTreeKv::with_kernel(
+                    store.open(lo, hi, cfg.prefetch_buf, cfg.verify_spill, wait)?,
+                    kernel,
+                );
                 kernel = drain_to_vecs(tree, &mut rk, &mut rp, &mut stats.tree)?;
                 runs.push((rk, rp));
                 lo = hi;
@@ -1003,15 +1112,23 @@ fn merge_pass_kv(
                     Some(*acc)
                 })
                 .collect();
-            let mut w =
-                SpillWriterKv::new(dir, cfg.max_fanin, true, guard.clone(), wait.clone());
+            let mut w = SpillWriterKv::new(
+                dir,
+                cfg.max_fanin,
+                true,
+                cfg.verify_spill,
+                guard.clone(),
+                wait.clone(),
+            );
             let (mut ck, mut cp) = (Vec::with_capacity(DRAIN), Vec::with_capacity(DRAIN));
             let mut lo = 0;
             let mut consumed_segs = 0;
             while lo < count {
                 let hi = (lo + cfg.max_fanin).min(count);
-                let mut tree =
-                    MergeTreeKv::with_kernel(store.open(lo, hi, cfg.prefetch_buf, wait)?, kernel);
+                let mut tree = MergeTreeKv::with_kernel(
+                    store.open(lo, hi, cfg.prefetch_buf, cfg.verify_spill, wait)?,
+                    kernel,
+                );
                 w.begin_run()?;
                 loop {
                     ck.clear();
@@ -1026,7 +1143,7 @@ fn merge_pass_kv(
                 kernel = tree.into_kernel();
                 if let RunStoreKv::Files(segs) = &store {
                     while consumed_segs < segs.len() && seg_ends[consumed_segs] <= hi {
-                        guard.remove_now(&segs[consumed_segs].path);
+                        io::remove_seg(guard, &segs[consumed_segs].path);
                         consumed_segs += 1;
                     }
                 }
@@ -1051,11 +1168,11 @@ fn form_runs_mem_kv(
     pays: &[u64],
     run_len: usize,
     threads: usize,
-) -> Vec<(Vec<u32>, Vec<u64>)> {
+) -> Result<Vec<(Vec<u32>, Vec<u64>)>> {
     let chunks: Vec<(&[u32], &[u64])> =
         keys.chunks(run_len).zip(pays.chunks(run_len)).collect();
     if threads <= 1 || chunks.len() <= 1 {
-        return chunks.iter().map(|&(ck, cp)| sort_run(ck, cp)).collect();
+        return Ok(chunks.iter().map(|&(ck, cp)| sort_run(ck, cp)).collect());
     }
     let per = chunks.len().div_ceil(threads);
     std::thread::scope(|s| {
@@ -1065,10 +1182,11 @@ fn form_runs_mem_kv(
                 s.spawn(move || group.iter().map(|&(ck, cp)| sort_run(ck, cp)).collect::<Vec<_>>())
             })
             .collect();
-        handles
-            .into_iter()
-            .flat_map(|h| h.join().expect("KV run-sort worker panicked"))
-            .collect()
+        let mut runs = Vec::with_capacity(chunks.len());
+        for h in handles {
+            runs.extend(h.join().map_err(|_| anyhow!("KV run-sort worker panicked"))?);
+        }
+        Ok(runs)
     })
 }
 
@@ -1097,7 +1215,7 @@ pub fn extsort_kv(
     let threads = part::resolve_threads(cfg.sort_threads);
     let t0 = Instant::now();
     let mut store = match &cfg.spill_dir {
-        None => RunStoreKv::Mem(form_runs_mem_kv(keys, pays, cfg.run_len, threads)),
+        None => RunStoreKv::Mem(form_runs_mem_kv(keys, pays, cfg.run_len, threads)?),
         Some(dir) => {
             std::fs::create_dir_all(dir)
                 .with_context(|| format!("creating spill dir {}", dir.display()))?;
@@ -1105,6 +1223,7 @@ pub fn extsort_kv(
                 dir.clone(),
                 cfg.max_fanin,
                 false,
+                cfg.verify_spill,
                 guard.clone(),
                 wait.clone(),
             );
@@ -1151,7 +1270,8 @@ pub fn extsort_kv(
         _ => {
             let (mut ok, mut op) =
                 (Vec::with_capacity(keys.len()), Vec::with_capacity(keys.len()));
-            let streams = store.open(0, store.count(), cfg.prefetch_buf, &wait)?;
+            let streams =
+                store.open(0, store.count(), cfg.prefetch_buf, cfg.verify_spill, &wait)?;
             let _ = drain_to_vecs(
                 MergeTreeKv::with_kernel(streams, kernel),
                 &mut ok,
@@ -1165,6 +1285,8 @@ pub fn extsort_kv(
     store.cleanup(&guard);
     stats.merge_secs = tm.elapsed().as_secs_f64();
     stats.io_wait_secs = wait.secs();
+    stats.corrupt_detected = wait.corrupt_detected();
+    stats.read_retries = wait.read_retries();
     Ok((out_k, out_p, stats))
 }
 
@@ -1188,9 +1310,9 @@ fn final_merge_kv_file(
     if parts <= 1 || runs.len() <= 1 || total == 0 {
         let f = File::create(output)
             .with_context(|| format!("creating {}", output.display()))?;
-        let mut wb = WriteBehind::spawn(f, wait.clone())?;
+        let mut wb = WriteBehind::spawn(f, wait.clone()).context("starting output writer")?;
         let mut tree = MergeTreeKv::with_kernel(
-            store.open(0, store.count(), cfg.prefetch_buf, wait)?,
+            store.open(0, store.count(), cfg.prefetch_buf, cfg.verify_spill, wait)?,
             kernel,
         );
         let (mut ck, mut cp) = (Vec::with_capacity(DRAIN), Vec::with_capacity(DRAIN));
@@ -1202,10 +1324,10 @@ fn final_merge_kv_file(
             }
             let mut b = wb.buffer();
             encode_records_into(&ck, &cp, &mut b);
-            wb.submit(b)?;
+            wb.submit(b).context("writing sorted output")?;
         }
         stats.tree.absorb(tree.stats());
-        wb.finish()?;
+        wb.finish().context("writing sorted output")?;
         stats.partitions = 1;
         return Ok(());
     }
@@ -1218,6 +1340,15 @@ fn final_merge_kv_file(
         .iter()
         .map(|&(path, start, len)| FileCutter::open(path, start, len, REC_BYTES)?.cuts(&pivots))
         .collect::<Result<_>>()?;
+    // Corrupt (unsorted) spill data can make the binary-search cuts
+    // non-monotone, which would underflow the per-partition sizes below.
+    for (c, &(path, _, len)) in cuts.iter().zip(&runs) {
+        anyhow::ensure!(
+            c.windows(2).all(|w| w[0] <= w[1]) && c.last().is_none_or(|&e| e <= len),
+            "non-monotone partition cuts for {} (corrupt spill data?)",
+            path.display()
+        );
+    }
     let nparts = pivots.len() + 1;
     let sizes: Vec<u64> =
         (0..nparts).map(|p| cuts.iter().map(|c| c[p + 1] - c[p]).sum()).collect();
@@ -1242,7 +1373,8 @@ fn final_merge_kv_file(
                         .open(output)
                         .with_context(|| format!("opening {} region", output.display()))?;
                     f.seek(SeekFrom::Start(offs[p] * REC_BYTES))?;
-                    let mut wb = WriteBehind::spawn(f, wait.clone())?;
+                    let mut wb =
+                        WriteBehind::spawn(f, wait.clone()).context("starting output writer")?;
                     let streams: Vec<Box<dyn SortedKvStream + '_>> = runs
                         .iter()
                         .enumerate()
@@ -1253,6 +1385,7 @@ fn final_merge_kv_file(
                                 start + cuts[i][p],
                                 cuts[i][p + 1] - cuts[i][p],
                                 cfg.prefetch_buf,
+                                cfg.verify_spill,
                                 wait,
                             )
                         })
@@ -1270,7 +1403,7 @@ fn final_merge_kv_file(
                         }
                         let mut b = wb.buffer();
                         encode_records_into(&ck, &cp, &mut b);
-                        wb.submit(b)?;
+                        wb.submit(b).context("writing sorted output")?;
                         written += n as u64;
                     }
                     anyhow::ensure!(
@@ -1278,7 +1411,7 @@ fn final_merge_kv_file(
                         "KV partition {p} wrote {written} of {} records",
                         sizes[p]
                     );
-                    wb.finish()?;
+                    wb.finish().context("writing sorted output")?;
                     Ok(tree.stats())
                 })
             })
@@ -1351,6 +1484,7 @@ pub fn extsort_kv_file(input: &Path, output: &Path, cfg: &ExtSortConfig) -> Resu
             dir.clone(),
             cfg.max_fanin,
             false,
+            cfg.verify_spill,
             guard.clone(),
             wait.clone(),
         );
@@ -1388,6 +1522,8 @@ pub fn extsort_kv_file(input: &Path, output: &Path, cfg: &ExtSortConfig) -> Resu
     store.cleanup(&guard);
     stats.merge_secs = tm.elapsed().as_secs_f64();
     stats.io_wait_secs = wait.secs();
+    stats.corrupt_detected = wait.corrupt_detected();
+    stats.read_retries = wait.read_retries();
     Ok(stats)
 }
 

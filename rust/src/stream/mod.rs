@@ -25,7 +25,9 @@
 //!   bounded memory. Backs the `loms sort` CLI and replaces the
 //!   planner's scalar heap as its phase-3 engine.
 //! * [`io`] — the disk plumbing underneath: bulk LE codecs, prefetch /
-//!   write-behind overlap threads, spill-file drop guards, and the
+//!   write-behind overlap threads, spill-file drop guards, per-block
+//!   CRC-32 spill integrity (sidecar format + verified reader with
+//!   bounded re-read recovery, typed [`ExtSortError`]s), and the
 //!   producer/worker/sink run-formation pipeline.
 //! * [`part`] — sampling-based range partitioning for the final pass:
 //!   P independent merge trees over exact per-run cuts produce the
@@ -45,15 +47,20 @@ pub mod source;
 pub mod tree;
 
 pub use extsort::{extsort, extsort_file, extsort_with, ExtSortConfig, ExtSortStats, RunFormer};
-pub use io::{encode_keys_into, encode_records_into, IoWait, SpillGuard};
+pub use io::{
+    decode_block_meta, encode_block_meta, encode_keys_into, encode_records_into, sidecar_path,
+    ExtSortError, IoWait, SpillBlockMeta, SpillGuard, SPILL_BLOCK_RECS, SPILL_MAGIC,
+    SPILL_META_BYTES, SPILL_VERSION,
+};
 pub use kv::{
     boxed_kv, extsort_kv, extsort_kv_file, merge_k_kv, merge_runs_kv, BlockKernelKv,
     BlockMerger2Kv, FileRunKvStream, MergeTreeKv, PrefetchRunKvStream, SliceKvStream,
-    SortedKvStream, VecKvStream,
+    SortedKvStream, SpillRunKvStream, VecKvStream,
 };
 pub use merge2::{BlockKernel, BlockMerger2};
 pub use part::{merge_runs_kv_parallel, merge_runs_parallel};
 pub use source::{
-    boxed, FileRunStream, IterStream, PrefetchRunStream, SliceStream, SortedStream, VecStream,
+    boxed, FileRunStream, IterStream, PrefetchRunStream, SliceStream, SortedStream,
+    SpillRunStream, VecStream,
 };
 pub use tree::{merge_k, merge_runs, MergeTree, TreeStats, DEFAULT_R};

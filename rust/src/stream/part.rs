@@ -93,6 +93,12 @@ pub(crate) fn cut_slice(run: &[u32], pivots: &[u32]) -> Vec<usize> {
 /// first 4 bytes little-endian (4 = key-only spill, 12 = KV spill).
 /// O(samples + pivots·log len) reads, so cut discovery costs a few
 /// hundred random 4-byte reads per run however large the spill.
+///
+/// These point reads deliberately skip checksum verification (each
+/// would round up to a full block): corrupt keys can only skew where
+/// the cuts land, and the final merges guard against that — cut rows
+/// are checked for monotonicity before sizing, and every record then
+/// streams through the block-verified spill reader.
 pub(crate) struct FileCutter {
     file: File,
     start: u64,

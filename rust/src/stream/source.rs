@@ -20,8 +20,11 @@
 //! * [`PrefetchRunStream`] — the same run with a dedicated read-ahead
 //!   thread (double buffering via [`super::io::FilePrefetch`]), so the
 //!   merge tree never blocks on a cold read.
+//! * [`SpillRunStream`] — the same run through the checksum-verifying
+//!   [`super::io::SpillReader`]: every block is validated against the
+//!   segment's CRC sidecar, with one bounded re-read on failure.
 
-use super::io::{FilePrefetch, IoWait};
+use super::io::{FilePrefetch, IoWait, SpillReader};
 use anyhow::{Context, Result};
 use std::fs::File;
 use std::io::{Read, Seek, SeekFrom};
@@ -208,6 +211,52 @@ impl SortedStream for PrefetchRunStream {
                 .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]])),
         );
         self.pos += n * 4;
+        Ok(n)
+    }
+}
+
+/// A spill run read through the verified [`SpillReader`]: delivers the
+/// same keys as [`FileRunStream`]/[`PrefetchRunStream`] over the same
+/// byte layout, but each checksum block is verified against the
+/// segment's `.crc` sidecar (bounded re-read recovery, typed
+/// [`super::io::ExtSortError`] on unrecoverable corruption).
+pub struct SpillRunStream {
+    rd: SpillReader,
+    carry: Vec<u32>,
+    pos: usize,
+}
+
+impl SpillRunStream {
+    /// Verified reads over keys `[start, start + keys)` of `path`.
+    /// `prefetch_keys == 0` selects synchronous block reads.
+    pub fn open(
+        path: &Path,
+        start: u64,
+        keys: u64,
+        prefetch_keys: usize,
+        wait: IoWait,
+    ) -> Result<Self> {
+        let rd = SpillReader::open(path, start, keys, 4, prefetch_keys, wait)?;
+        Ok(SpillRunStream { rd, carry: Vec::new(), pos: 0 })
+    }
+}
+
+impl SortedStream for SpillRunStream {
+    fn next_chunk(&mut self, max: usize, out: &mut Vec<u32>) -> Result<usize> {
+        while self.pos == self.carry.len() {
+            self.carry.clear();
+            self.pos = 0;
+            match self.rd.next_verified()? {
+                Some(bytes) if !bytes.is_empty() => {
+                    super::io::decode_keys_into(bytes, &mut self.carry)
+                }
+                Some(_) => continue,
+                None => return Ok(0),
+            }
+        }
+        let n = max.min(self.carry.len() - self.pos);
+        out.extend_from_slice(&self.carry[self.pos..self.pos + n]);
+        self.pos += n;
         Ok(n)
     }
 }

@@ -1,0 +1,393 @@
+//! Deterministic, seed-driven fault injection.
+//!
+//! Every injection point in the stack is a named [`Site`] guarded by
+//! [`fires`]. The sites are compiled in unconditionally — no feature
+//! flag, so the exact production binary is what chaos tests exercise —
+//! but when no plan is active the check is a single relaxed load of a
+//! static, nothing more.
+//!
+//! Determinism: each site keeps an atomic call counter; the *n*-th
+//! evaluation of a site fires iff `mix(seed, site, n)` falls below the
+//! site's probability threshold. The set of firing `(site, n)` pairs
+//! therefore depends only on the plan, never on thread interleaving —
+//! reruns with the same seed inject the same faults even though *which
+//! thread* observes each fault may differ.
+//!
+//! Activation, two ways:
+//! * `LOMS_FAULTS` env var, parsed lazily on the first [`fires`] call —
+//!   grammar `seed=N,<site>=<prob>[:<max>],...`, e.g.
+//!   `seed=7,spill_corrupt_byte=0.01:4,net_conn_reset=0.05`. How CI's
+//!   chaos matrix drives whole binaries.
+//! * [`install`] for tests: installs a [`FaultPlan`] and returns a
+//!   [`FaultGuard`] holding a process-wide lock, so concurrent chaos
+//!   tests serialize instead of trampling each other's plans; dropping
+//!   the guard reverts to the env-derived state.
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+/// Named injection points. Keep [`Site::name`] and [`Site::from_name`]
+/// in sync — the env grammar uses the names verbatim.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Site {
+    /// Spill write fails with ENOSPC ([`crate::stream`] writers).
+    SpillWriteEnospc,
+    /// A spill read comes back short / errored before verification.
+    SpillReadShort,
+    /// One byte of a read spill block flips before verification.
+    SpillCorruptByte,
+    /// The server resets a connection mid-serve ([`crate::net`]).
+    NetConnReset,
+    /// The server writer stalls before a reply write.
+    NetWriteStall,
+    /// A batch execution fails transiently and is retried in place.
+    ExecTransient,
+}
+
+pub const SITE_COUNT: usize = 6;
+
+/// Every site, for iteration (counter dumps, plan parsing).
+pub const ALL_SITES: [Site; SITE_COUNT] = [
+    Site::SpillWriteEnospc,
+    Site::SpillReadShort,
+    Site::SpillCorruptByte,
+    Site::NetConnReset,
+    Site::NetWriteStall,
+    Site::ExecTransient,
+];
+
+impl Site {
+    pub fn name(self) -> &'static str {
+        match self {
+            Site::SpillWriteEnospc => "spill_write_enospc",
+            Site::SpillReadShort => "spill_read_short",
+            Site::SpillCorruptByte => "spill_corrupt_byte",
+            Site::NetConnReset => "net_conn_reset",
+            Site::NetWriteStall => "net_write_stall",
+            Site::ExecTransient => "exec_transient",
+        }
+    }
+
+    fn from_name(s: &str) -> Option<Site> {
+        ALL_SITES.into_iter().find(|site| site.name() == s)
+    }
+
+    #[inline]
+    fn idx(self) -> usize {
+        self as usize
+    }
+}
+
+/// Per-site fault rule: firing probability and an optional cap on the
+/// total number of fires (`u64::MAX` = unlimited).
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct Rule {
+    prob: f64,
+    max: u64,
+}
+
+/// A complete injection plan: one seed plus per-site rules.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    seed: u64,
+    rules: [Option<Rule>; SITE_COUNT],
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { seed, rules: [None; SITE_COUNT] }
+    }
+
+    /// Fire `site` with probability `prob` (clamped to `[0, 1]`) on
+    /// every evaluation, no cap.
+    pub fn with(self, site: Site, prob: f64) -> FaultPlan {
+        self.with_max(site, prob, u64::MAX)
+    }
+
+    /// Fire `site` with probability `prob`, at most `max` times total.
+    pub fn with_max(mut self, site: Site, prob: f64, max: u64) -> FaultPlan {
+        self.rules[site.idx()] = Some(Rule { prob: prob.clamp(0.0, 1.0), max });
+        self
+    }
+
+    /// Parse the `LOMS_FAULTS` grammar:
+    /// `seed=N,<site>=<prob>[:<max>],...` (whitespace around commas
+    /// tolerated; `seed` defaults to 0 when omitted).
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::new(0);
+        let mut any = false;
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, val) =
+                part.split_once('=').ok_or_else(|| format!("expected key=value, got {part:?}"))?;
+            let (key, val) = (key.trim(), val.trim());
+            if key == "seed" {
+                plan.seed = val.parse().map_err(|_| format!("bad seed {val:?}"))?;
+                continue;
+            }
+            let site = Site::from_name(key).ok_or_else(|| format!("unknown fault site {key:?}"))?;
+            let (prob_s, max) = match val.split_once(':') {
+                Some((p, m)) => {
+                    (p, m.parse::<u64>().map_err(|_| format!("bad max count {m:?}"))?)
+                }
+                None => (val, u64::MAX),
+            };
+            let prob: f64 =
+                prob_s.parse().map_err(|_| format!("bad probability {prob_s:?}"))?;
+            if !(0.0..=1.0).contains(&prob) {
+                return Err(format!("probability {prob} outside [0, 1]"));
+            }
+            plan = plan.with_max(site, prob, max);
+            any = true;
+        }
+        if !any {
+            return Err("no fault sites in spec".into());
+        }
+        Ok(plan)
+    }
+}
+
+/// Tri-state activation flag: 0 = env not yet consulted, 1 = faults
+/// off, 2 = a plan is active. The disabled fast path is one relaxed
+/// load and one branch.
+const STATE_UNKNOWN: u8 = 0;
+const STATE_OFF: u8 = 1;
+const STATE_ON: u8 = 2;
+static ACTIVE: AtomicU8 = AtomicU8::new(STATE_UNKNOWN);
+
+static SEED: AtomicU64 = AtomicU64::new(0);
+/// Per-site firing threshold: `prob` scaled to the full `u64` range
+/// (0 = never). Stored as atomics so [`fires`] never takes a lock.
+static THRESH: [AtomicU64; SITE_COUNT] = [const { AtomicU64::new(0) }; SITE_COUNT];
+static MAX_FIRES: [AtomicU64; SITE_COUNT] = [const { AtomicU64::new(0) }; SITE_COUNT];
+static CALLS: [AtomicU64; SITE_COUNT] = [const { AtomicU64::new(0) }; SITE_COUNT];
+static FIRED: [AtomicU64; SITE_COUNT] = [const { AtomicU64::new(0) }; SITE_COUNT];
+
+/// Serializes plan installation (and env [re]initialisation) across
+/// threads; [`FaultGuard`] holds it for a test's whole lifetime.
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    // A chaos test that panicked mid-guard must not poison every later
+    // test in the binary.
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// splitmix64-style avalanche over (seed, site, call index): the whole
+/// source of injection randomness, so a plan replays exactly.
+fn mix(seed: u64, site: u64, n: u64) -> u64 {
+    let mut x = seed
+        ^ site.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ n.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    x
+}
+
+fn apply(plan: &FaultPlan) {
+    SEED.store(plan.seed, Ordering::SeqCst);
+    for (i, rule) in plan.rules.iter().enumerate() {
+        let (thresh, max) = match rule {
+            Some(r) if r.prob > 0.0 => {
+                let t = if r.prob >= 1.0 {
+                    u64::MAX
+                } else {
+                    (r.prob * u64::MAX as f64) as u64
+                };
+                (t.max(1), r.max)
+            }
+            _ => (0, 0),
+        };
+        THRESH[i].store(thresh, Ordering::SeqCst);
+        MAX_FIRES[i].store(max, Ordering::SeqCst);
+        CALLS[i].store(0, Ordering::SeqCst);
+        FIRED[i].store(0, Ordering::SeqCst);
+    }
+}
+
+/// Parse `LOMS_FAULTS` (if set) under the lock; invalid specs warn once
+/// and leave injection off rather than aborting a production binary.
+fn init_from_env() {
+    let _g = lock();
+    if ACTIVE.load(Ordering::SeqCst) != STATE_UNKNOWN {
+        return; // raced: someone else initialised while we waited
+    }
+    match std::env::var("LOMS_FAULTS") {
+        Ok(spec) if !spec.trim().is_empty() => match FaultPlan::parse(&spec) {
+            Ok(plan) => {
+                apply(&plan);
+                ACTIVE.store(STATE_ON, Ordering::SeqCst);
+            }
+            Err(e) => {
+                eprintln!("warning: ignoring invalid LOMS_FAULTS ({e})");
+                apply(&FaultPlan::default());
+                ACTIVE.store(STATE_OFF, Ordering::SeqCst);
+            }
+        },
+        _ => {
+            apply(&FaultPlan::default());
+            ACTIVE.store(STATE_OFF, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Should this evaluation of `site` fail? The only call sites are the
+/// named injection points; disabled cost is one atomic load.
+#[inline]
+pub fn fires(site: Site) -> bool {
+    match ACTIVE.load(Ordering::Relaxed) {
+        STATE_OFF => false,
+        STATE_UNKNOWN => {
+            init_from_env();
+            if ACTIVE.load(Ordering::Relaxed) == STATE_OFF {
+                return false;
+            }
+            fires_active(site)
+        }
+        _ => fires_active(site),
+    }
+}
+
+fn fires_active(site: Site) -> bool {
+    let i = site.idx();
+    let thresh = THRESH[i].load(Ordering::Relaxed);
+    if thresh == 0 {
+        return false;
+    }
+    let n = CALLS[i].fetch_add(1, Ordering::Relaxed);
+    if mix(SEED.load(Ordering::Relaxed), i as u64, n) >= thresh {
+        return false;
+    }
+    // Past the per-site cap, hits stop firing (and stop counting).
+    let prev = FIRED[i].fetch_add(1, Ordering::Relaxed);
+    if prev < MAX_FIRES[i].load(Ordering::Relaxed) {
+        true
+    } else {
+        FIRED[i].fetch_sub(1, Ordering::Relaxed);
+        false
+    }
+}
+
+/// Faults actually injected at `site` since the active plan was
+/// installed.
+pub fn injected(site: Site) -> u64 {
+    FIRED[site.idx()].load(Ordering::Relaxed)
+}
+
+/// Total faults injected across all sites under the active plan.
+pub fn injected_total() -> u64 {
+    ALL_SITES.iter().map(|s| injected(*s)).sum()
+}
+
+/// Is any plan active (env- or test-installed)?
+pub fn active() -> bool {
+    ACTIVE.load(Ordering::Relaxed) == STATE_ON
+}
+
+/// Install `plan` process-wide and hold it active until the returned
+/// guard drops (then the env-derived state is restored). Serializes
+/// with every other [`install`] caller — chaos tests in one binary run
+/// their storms one at a time.
+pub fn install(plan: &FaultPlan) -> FaultGuard {
+    let guard = lock();
+    apply(plan);
+    ACTIVE.store(STATE_ON, Ordering::SeqCst);
+    FaultGuard { _lock: guard }
+}
+
+/// Keeps an installed [`FaultPlan`] active; restores the env-derived
+/// state on drop.
+pub struct FaultGuard {
+    _lock: MutexGuard<'static, ()>,
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        apply(&FaultPlan::default());
+        // Back to "unknown": the next `fires` re-reads LOMS_FAULTS, so
+        // env-driven chaos runs resume after a programmatic test.
+        ACTIVE.store(STATE_UNKNOWN, Ordering::SeqCst);
+    }
+}
+
+/// The injected disk-full error (`ENOSPC`), built from the raw errno so
+/// it round-trips like the real thing.
+pub fn enospc() -> std::io::Error {
+    std::io::Error::from_raw_os_error(28)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_grammar() {
+        let p = FaultPlan::parse("seed=7,spill_corrupt_byte=0.01:4,net_conn_reset=0.05").unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(
+            p.rules[Site::SpillCorruptByte.idx()],
+            Some(Rule { prob: 0.01, max: 4 })
+        );
+        assert_eq!(
+            p.rules[Site::NetConnReset.idx()],
+            Some(Rule { prob: 0.05, max: u64::MAX })
+        );
+        assert!(FaultPlan::parse("bogus_site=0.5").is_err());
+        assert!(FaultPlan::parse("spill_read_short=1.5").is_err());
+        assert!(FaultPlan::parse("seed=3").is_err(), "a seed alone injects nothing");
+        assert!(FaultPlan::parse("spill_read_short").is_err());
+    }
+
+    #[test]
+    fn deterministic_and_capped() {
+        let plan = FaultPlan::new(42).with_max(Site::ExecTransient, 0.5, 10);
+        let run = || {
+            let _g = install(&plan);
+            let fired: Vec<bool> = (0..200).map(|_| fires(Site::ExecTransient)).collect();
+            (fired, injected(Site::ExecTransient))
+        };
+        let (a, fired_a) = run();
+        let (b, fired_b) = run();
+        assert_eq!(a, b, "same plan must replay the same fault sequence");
+        assert!(fired_a > 0, "p=0.5 over 200 calls must fire");
+        assert_eq!(fired_a, 10, "cap must bound total fires");
+        assert_eq!(fired_a, fired_b);
+    }
+
+    #[test]
+    fn inactive_sites_never_fire() {
+        let plan = FaultPlan::new(1).with(Site::NetWriteStall, 1.0);
+        let _g = install(&plan);
+        assert!(fires(Site::NetWriteStall));
+        for _ in 0..50 {
+            assert!(!fires(Site::SpillWriteEnospc), "unconfigured site fired");
+        }
+        assert_eq!(injected(Site::SpillWriteEnospc), 0);
+    }
+
+    #[test]
+    fn guard_restores_inactive_state() {
+        {
+            let plan = FaultPlan::new(9).with(Site::SpillReadShort, 1.0);
+            let _g = install(&plan);
+            assert!(active());
+            assert!(fires(Site::SpillReadShort));
+        }
+        // No LOMS_FAULTS in the test environment ⇒ off after the guard.
+        if std::env::var("LOMS_FAULTS").map_or(true, |s| s.trim().is_empty()) {
+            assert!(!fires(Site::SpillReadShort));
+            assert!(!active());
+        }
+    }
+
+    #[test]
+    fn enospc_is_storage_full() {
+        assert_eq!(enospc().raw_os_error(), Some(28));
+    }
+}

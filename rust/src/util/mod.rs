@@ -1,8 +1,12 @@
-//! In-crate substrates for the offline build: PRNG, JSON, timing/report
-//! helpers. (The environment vendors only `xla` + `anyhow`.)
+//! In-crate substrates for the offline build: PRNG, JSON, CRC-32,
+//! deterministic fault injection, timing/report helpers. (The
+//! environment vendors only `xla` + `anyhow`.)
 
+pub mod crc32;
+pub mod fault;
 pub mod json;
 pub mod rng;
 
+pub use crc32::crc32;
 pub use json::Json;
 pub use rng::Rng;

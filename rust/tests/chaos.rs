@@ -1,0 +1,373 @@
+//! Chaos capstone: seeded fault storms through the spill and serving
+//! paths. Every test installs a [`loms::util::fault::FaultPlan`] (the
+//! install guard also serializes chaos tests and shields them from any
+//! ambient `LOMS_FAULTS` the CI matrix sets on the whole binary), then
+//! asserts the only observable outcomes are byte-identical output or a
+//! typed error with the spill directory left clean — never a panic,
+//! never silently wrong bytes.
+
+use loms::stream::{
+    encode_block_meta, encode_keys_into, extsort, extsort_file, extsort_kv, sidecar_path,
+    ExtSortConfig, ExtSortError, IoWait, SortedStream, SpillBlockMeta, SpillRunStream,
+    SPILL_BLOCK_RECS,
+};
+use loms::util::crc32::crc32;
+use loms::util::fault::{self, FaultPlan, Site};
+use loms::util::Rng;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Fresh scratch dir per test (process id + label keep parallel test
+/// binaries and parallel tests apart).
+fn scratch(label: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("loms_chaos_{}_{label}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// The typed spill error somewhere in an anyhow context chain.
+fn spill_error(e: &anyhow::Error) -> Option<&ExtSortError> {
+    e.chain().find_map(|c| c.downcast_ref::<ExtSortError>())
+}
+
+fn entries(dir: &Path) -> Vec<PathBuf> {
+    match fs::read_dir(dir) {
+        Ok(rd) => rd.map(|e| e.unwrap().path()).collect(),
+        Err(_) => Vec::new(),
+    }
+}
+
+fn cfg(spill: &Path) -> ExtSortConfig {
+    ExtSortConfig {
+        run_len: 4096,
+        max_fanin: 4,
+        spill_dir: Some(spill.to_path_buf()),
+        prefetch_buf: 1024,
+        ..ExtSortConfig::default()
+    }
+}
+
+/// Write a spill segment the way the sorter does: raw LE keys plus the
+/// per-block CRC sidecar.
+fn write_segment(path: &Path, keys: &[u32]) {
+    let mut bytes = Vec::new();
+    encode_keys_into(keys, &mut bytes);
+    let mut side = Vec::new();
+    for block in bytes.chunks(SPILL_BLOCK_RECS * 4) {
+        let meta = SpillBlockMeta {
+            stride: 4,
+            rec_count: (block.len() / 4).min(SPILL_BLOCK_RECS) as u16,
+            crc: crc32(block),
+        };
+        encode_block_meta(&meta, &mut side);
+    }
+    fs::write(path, &bytes).unwrap();
+    fs::write(sidecar_path(path), &side).unwrap();
+}
+
+fn drain(path: &Path, start: u64, keys: u64, wait: &IoWait) -> anyhow::Result<Vec<u32>> {
+    let mut s = SpillRunStream::open(path, start, keys, 0, wait.clone())?;
+    let mut out = Vec::new();
+    loop {
+        if s.next_chunk(4096, &mut out)? == 0 {
+            return Ok(out);
+        }
+    }
+}
+
+fn flip_byte(path: &Path, offset: usize) {
+    let mut bytes = fs::read(path).unwrap();
+    bytes[offset] ^= 0x10;
+    fs::write(path, bytes).unwrap();
+}
+
+/// On-disk corruption that survives the bounded re-read must surface as
+/// `ExtSortError::CorruptSpill` naming the bad block — in the data
+/// file, in the sidecar, and on truncation.
+#[test]
+fn on_disk_corruption_is_a_typed_error() {
+    let _g = fault::install(&FaultPlan::new(0)); // no injection: real disk damage only
+    let dir = scratch("disk_corrupt");
+    let seg = dir.join("seg.bin");
+    let keys: Vec<u32> = (0..40_000u32).collect();
+    write_segment(&seg, &keys);
+
+    // Clean segment round-trips, full range and a block-straddling window.
+    let wait = IoWait::new();
+    assert_eq!(drain(&seg, 0, 40_000, &wait).unwrap(), keys);
+    assert_eq!(drain(&seg, 10_000, 20_000, &wait).unwrap(), &keys[10_000..30_000]);
+    assert_eq!(wait.corrupt_detected(), 0);
+
+    // One flipped payload byte in block 1 (bytes 65536..131072).
+    flip_byte(&seg, 70_000);
+    let wait = IoWait::new();
+    let err = drain(&seg, 0, 40_000, &wait).unwrap_err();
+    match spill_error(&err) {
+        Some(ExtSortError::CorruptSpill { run, offset }) => {
+            assert_eq!(run, &seg);
+            assert_eq!(*offset, 65_536, "{err:#}");
+        }
+        other => panic!("want CorruptSpill, got {other:?} ({err:#})"),
+    }
+    // Detected on attempt 0 and again after the one bounded re-read.
+    assert_eq!(wait.read_retries(), 1);
+    assert_eq!(wait.corrupt_detected(), 2);
+    flip_byte(&seg, 70_000); // restore
+
+    // A flipped CRC byte in block 2's sidecar entry fails that block.
+    let side = sidecar_path(&seg);
+    flip_byte(&side, 2 * 12 + 8);
+    let err = drain(&seg, 0, 40_000, &IoWait::new()).unwrap_err();
+    match spill_error(&err) {
+        Some(ExtSortError::CorruptSpill { offset, .. }) => assert_eq!(*offset, 131_072),
+        other => panic!("want CorruptSpill, got {other:?} ({err:#})"),
+    }
+    flip_byte(&side, 2 * 12 + 8); // restore
+
+    // A smashed sidecar magic is rejected at open, before any data read.
+    flip_byte(&side, 0);
+    let err = drain(&seg, 0, 40_000, &IoWait::new()).unwrap_err();
+    assert!(
+        matches!(spill_error(&err), Some(ExtSortError::CorruptSpill { .. })),
+        "{err:#}"
+    );
+    flip_byte(&side, 0); // restore
+
+    // Truncation: the run index now points past end-of-file.
+    let bytes = fs::read(&seg).unwrap();
+    fs::write(&seg, &bytes[..bytes.len() - 4]).unwrap();
+    let err = drain(&seg, 0, 40_000, &IoWait::new()).unwrap_err();
+    assert!(
+        matches!(spill_error(&err), Some(ExtSortError::CorruptSpill { .. })),
+        "{err:#}"
+    );
+    fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Transient read faults (in-memory bit flips, short reads) are
+/// recovered by the bounded re-read: output stays byte-identical and
+/// the stats record every detection and retry.
+#[test]
+fn transient_read_corruption_recovers_byte_identical() {
+    let dir = scratch("transient");
+    let mut rng = Rng::new(0x7A57);
+    let n = 120_000;
+    let data: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+    let mut want = data.clone();
+    want.sort_unstable();
+
+    let plan = FaultPlan::new(11)
+        .with_max(Site::SpillCorruptByte, 1.0, 3)
+        .with_max(Site::SpillReadShort, 1.0, 2);
+    let _g = fault::install(&plan);
+    let (out, stats) = extsort(&data, &cfg(&dir)).unwrap();
+    assert_eq!(out, want, "recovered output must be byte-identical");
+    // 5 capped faults land on 3..=5 distinct block reads (short and
+    // corrupt can co-fire on one read); every failed read is retried
+    // once, and at least one pure corruption is detected by checksum.
+    assert_eq!(fault::injected(Site::SpillCorruptByte), 3);
+    assert_eq!(fault::injected(Site::SpillReadShort), 2);
+    assert!((3..=5).contains(&stats.read_retries), "{stats:?}");
+    assert!((1..=3).contains(&stats.corrupt_detected), "{stats:?}");
+    assert!(entries(&dir).is_empty(), "spill dir not cleaned: {:?}", entries(&dir));
+    fs::remove_dir_all(&dir).unwrap();
+}
+
+/// The key-value engine shares the verified reader: same storm, same
+/// recovery, payloads still riding their keys.
+#[test]
+fn transient_read_corruption_recovers_kv() {
+    let dir = scratch("transient_kv");
+    let n = 90_000u32;
+    let mut keys: Vec<u32> = (0..n).collect();
+    let mut rng = Rng::new(0x6B5E);
+    rng.shuffle(&mut keys);
+    let pays: Vec<u64> = keys.iter().map(|&k| u64::from(k) * 7 + 1).collect();
+
+    let plan = FaultPlan::new(13)
+        .with_max(Site::SpillCorruptByte, 1.0, 2)
+        .with_max(Site::SpillReadShort, 1.0, 2);
+    let _g = fault::install(&plan);
+    let (ok, op, stats) = extsort_kv(&keys, &pays, &cfg(&dir)).unwrap();
+    assert!(ok.windows(2).all(|w| w[0] <= w[1]));
+    assert_eq!(ok, (0..n).collect::<Vec<_>>());
+    assert!(op.iter().zip(&ok).all(|(&p, &k)| p == u64::from(k) * 7 + 1));
+    assert!(stats.read_retries >= 2, "{stats:?}");
+    assert!(entries(&dir).is_empty());
+    fs::remove_dir_all(&dir).unwrap();
+}
+
+/// A guaranteed disk-full on spill write: the sort fails with the typed
+/// ENOSPC error and the guard leaves no spill files behind.
+#[test]
+fn enospc_fails_typed_and_cleans_spill_dir() {
+    let dir = scratch("enospc");
+    let spill = dir.join("spill");
+    let mut rng = Rng::new(0xE05C);
+    let data: Vec<u32> = (0..50_000).map(|_| rng.next_u32()).collect();
+
+    let plan = FaultPlan::new(3).with(Site::SpillWriteEnospc, 1.0);
+    let _g = fault::install(&plan);
+
+    // In-memory input, spilled runs.
+    let err = extsort(&data, &cfg(&spill)).unwrap_err();
+    match spill_error(&err) {
+        Some(ExtSortError::Spill(io)) => assert_eq!(io.raw_os_error(), Some(28), "{err:#}"),
+        other => panic!("want Spill(ENOSPC), got {other:?} ({err:#})"),
+    }
+    assert!(entries(&spill).is_empty(), "guard left spill files: {:?}", entries(&spill));
+
+    // File-to-file path.
+    let input = dir.join("in.u32");
+    let output = dir.join("out.u32");
+    let mut bytes = Vec::new();
+    encode_keys_into(&data, &mut bytes);
+    fs::write(&input, &bytes).unwrap();
+    let err = extsort_file(&input, &output, &cfg(&spill)).unwrap_err();
+    assert!(
+        matches!(spill_error(&err), Some(ExtSortError::Spill(_))),
+        "{err:#}"
+    );
+    assert!(entries(&spill).is_empty());
+
+    // Key-value path.
+    let pays: Vec<u64> = (0..data.len() as u64).collect();
+    let err = extsort_kv(&data, &pays, &cfg(&spill)).unwrap_err();
+    assert!(
+        matches!(spill_error(&err), Some(ExtSortError::Spill(_))),
+        "{err:#}"
+    );
+    assert!(entries(&spill).is_empty());
+    fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Seeded mixed storms: across seeds the only outcomes are a
+/// byte-identical sort or a typed error, and the spill directory is
+/// empty either way.
+#[test]
+fn seeded_fault_storms_never_corrupt_output() {
+    let mut rng = Rng::new(0x5702);
+    let data: Vec<u32> = (0..150_000).map(|_| rng.next_u32()).collect();
+    let mut want = data.clone();
+    want.sort_unstable();
+
+    for seed in 0..6u64 {
+        let dir = scratch(&format!("storm_{seed}"));
+        let mut plan = FaultPlan::new(seed)
+            .with(Site::SpillCorruptByte, 0.05)
+            .with(Site::SpillReadShort, 0.05);
+        if seed != 0 {
+            // Seed 0 keeps one guaranteed-clean-write run in the matrix
+            // so the Ok arm is always exercised.
+            plan = plan.with(Site::SpillWriteEnospc, 0.02);
+        }
+        let _g = fault::install(&plan);
+        match extsort(&data, &cfg(&dir)) {
+            Ok((out, _)) => assert_eq!(out, want, "seed {seed}: silent corruption"),
+            Err(e) => assert!(
+                spill_error(&e).is_some(),
+                "seed {seed}: untyped failure: {e:#}"
+            ),
+        }
+        assert!(
+            entries(&dir).is_empty(),
+            "seed {seed}: spill dir not cleaned: {:?}",
+            entries(&dir)
+        );
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}
+
+mod net {
+    use super::*;
+    use loms::coordinator::{MergeService, ServiceConfig, SoftwareBackend};
+    use loms::net::{run_load, NetServer, NetServerConfig};
+
+    fn start_server(cfg: NetServerConfig) -> NetServer {
+        let svc =
+            MergeService::start(|| Ok(SoftwareBackend::default_set()), ServiceConfig::default())
+                .expect("service");
+        NetServer::start("127.0.0.1:0", svc, cfg).expect("server")
+    }
+
+    /// Connection kills, write stalls and transient exec failures, all
+    /// at once: the retrying load generator still gets every response
+    /// oracle-correct, and the counters account for each injected
+    /// fault exactly.
+    #[test]
+    fn killed_connections_recover_oracle_correct() {
+        let plan = FaultPlan::new(21)
+            .with_max(Site::NetConnReset, 1.0, 4)
+            .with_max(Site::NetWriteStall, 1.0, 2)
+            .with_max(Site::ExecTransient, 1.0, 5);
+        let _g = fault::install(&plan);
+        let server = start_server(NetServerConfig { workers: 3, ..NetServerConfig::default() });
+        let addr = server.addr().to_string();
+        let report = run_load(&addr, 3, 4, 120, 0xC405, false).expect("load");
+        assert_eq!(report.ok, 120, "{report:?}");
+        assert_eq!(report.errors, 0, "{report:?}");
+        assert_eq!(report.failed_conns, 0, "{:?}", report.conn_errors);
+        assert!(report.retries >= 1, "no reconnect recorded: {report:?}");
+
+        let snap = server.service().metrics().snapshot();
+        // Each site fires to its cap (probability 1.0, plenty of
+        // evaluations) and every fire is mirrored into the metrics.
+        assert_eq!(fault::injected(Site::NetConnReset), 4);
+        assert_eq!(fault::injected(Site::NetWriteStall), 2);
+        assert_eq!(fault::injected(Site::ExecTransient), 5);
+        assert_eq!(snap.faults_injected, 11, "{snap:?}");
+        assert_eq!(snap.retries, 5, "transient execs absorbed in place: {snap:?}");
+        assert_eq!(snap.sheds, 0, "{snap:?}");
+        server.shutdown();
+    }
+
+    /// A tiny admission watermark sheds aggressively with `OVERLOADED`;
+    /// the load generator resubmits until everything completes, so
+    /// shedding degrades latency, never correctness.
+    #[test]
+    fn overload_shedding_resubmits_to_completion() {
+        let _g = fault::install(&FaultPlan::new(0)); // shed policy only, no injection
+        let server = start_server(NetServerConfig {
+            workers: 2,
+            shed_pending: 2,
+            ..NetServerConfig::default()
+        });
+        let addr = server.addr().to_string();
+        let report = run_load(&addr, 2, 8, 80, 0x5EDD, true).expect("load");
+        assert_eq!(report.ok, 80, "{report:?}");
+        assert_eq!(report.errors, 0, "{report:?}");
+        assert_eq!(report.failed_conns, 0, "{:?}", report.conn_errors);
+
+        let snap = server.service().metrics().snapshot();
+        assert!(snap.sheds > 0, "watermark 2 under 16 pipelined requests must shed: {snap:?}");
+        assert!(report.retries >= snap.sheds, "every shed is resubmitted: {report:?} {snap:?}");
+        // Shed requests never reached the service, so its pending gauge
+        // settled back to zero and accounting balances.
+        assert_eq!(server.service().pending(), 0);
+        assert_eq!(snap.net_frames_in, snap.net_responses + snap.net_errors, "{snap:?}");
+        server.shutdown();
+    }
+}
+
+/// Satellite: the CLI reports failures as one `error:` line on stderr
+/// and a nonzero exit — no panic, no backtrace.
+#[test]
+fn cli_exits_nonzero_with_diagnostic() {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_loms"))
+        .args(["sort", "--input", "/nonexistent/loms-chaos.u32"])
+        .output()
+        .expect("spawn loms");
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("error:"), "stderr: {stderr}");
+    assert!(!stderr.contains("panicked"), "stderr: {stderr}");
+
+    // An invalid LOMS_FAULTS spec must warn and keep running, not abort.
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_loms"))
+        .env("LOMS_FAULTS", "bogus_site=0.5")
+        .args(["sort", "--n", "4096"])
+        .output()
+        .expect("spawn loms");
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+}

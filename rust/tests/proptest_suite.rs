@@ -6,7 +6,11 @@ use loms::coordinator::planner::kway_merge;
 use loms::coordinator::{MergeService, Route, Router, ServiceConfig, SoftwareBackend};
 use loms::sortnet::exec::{merge, ExecMode};
 use loms::sortnet::{batcher, loms as lm, s2ms};
-use loms::stream::{boxed, BlockKernel, BlockMerger2, MergeTree, SliceStream, SortedStream};
+use loms::stream::{
+    boxed, decode_block_meta, encode_block_meta, BlockKernel, BlockMerger2, MergeTree,
+    SliceStream, SortedStream, SpillBlockMeta, SPILL_META_BYTES,
+};
+use loms::util::crc32::crc32;
 use loms::util::Rng;
 
 /// Property: every LOMS 2-way configuration merges arbitrary sorted
@@ -292,6 +296,63 @@ fn prop_service_state_conservation() {
     assert_eq!(snap.requests, total as u64);
     assert_eq!(snap.responses, total as u64);
     assert_eq!(snap.rejected, 0);
+}
+
+/// Property: the spill-block sidecar codec round-trips every meta, and
+/// every single-bit flip of an encoded entry is caught — either decode
+/// rejects the entry outright (magic/version/length damage) or the
+/// decoded meta differs from the written one, which block verification
+/// then catches against values derived from the data file (stride,
+/// rec_count) or the recomputed payload CRC.
+#[test]
+fn prop_spill_block_meta_bit_flips_detected() {
+    let mut rng = Rng::new(0xC3C);
+    for case in 0..200 {
+        let meta = SpillBlockMeta {
+            stride: if rng.below(2) == 0 { 4 } else { 12 },
+            rec_count: rng.below(1 << 16) as u16,
+            crc: rng.next_u32(),
+        };
+        let mut enc = Vec::new();
+        encode_block_meta(&meta, &mut enc);
+        assert_eq!(enc.len(), SPILL_META_BYTES);
+        assert_eq!(decode_block_meta(&enc), Ok(meta), "case {case}");
+        for bit in 0..SPILL_META_BYTES * 8 {
+            let mut flipped = enc.clone();
+            flipped[bit / 8] ^= 1 << (bit % 8);
+            match decode_block_meta(&flipped) {
+                Err(_) => {}
+                Ok(m) => assert_ne!(m, meta, "case {case}: bit {bit} flip went unnoticed"),
+            }
+        }
+        // Truncated and oversized entries are rejected, not misread.
+        assert!(decode_block_meta(&enc[..SPILL_META_BYTES - 1]).is_err());
+        let mut long = enc.clone();
+        long.push(0);
+        assert!(decode_block_meta(&long).is_err());
+    }
+}
+
+/// Property: any single-bit flip in a spill block's payload changes its
+/// CRC-32 (guaranteed by CRC linearity; checked here over random block
+/// lengths including the empty and one-byte edges).
+#[test]
+fn prop_spill_payload_bit_flips_change_crc() {
+    let mut rng = Rng::new(0xF11);
+    for _ in 0..60 {
+        let len = [0usize, 1, 2, 63, 64, 65, 1021][rng.below(7) as usize];
+        let mut block: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        let clean = crc32(&block);
+        if block.is_empty() {
+            continue;
+        }
+        for _ in 0..40 {
+            let bit = rng.below(len as u64 * 8) as usize;
+            block[bit / 8] ^= 1 << (bit % 8);
+            assert_ne!(crc32(&block), clean, "flip at bit {bit} kept the CRC");
+            block[bit / 8] ^= 1 << (bit % 8);
+        }
+    }
 }
 
 /// Property: the batcher pads but never reorders — responses map 1:1 to
