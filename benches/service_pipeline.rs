@@ -21,6 +21,10 @@
 //!    delta to `tile_direct` is the cost of carrying payloads.
 //! 5. `kv_pipelined` — the full service round trip in key-value mode
 //!    (`submit_kv`), batched per `(artifact, kv)` queue.
+//! 6./7. `pipelined_obs_on` / `pipelined_obs_off` — the pipelined
+//!    round trip with detail recording (histograms + span retention)
+//!    on vs off, best of 3; the harness asserts the throughput delta
+//!    stays within 3% (the "cheap enough to leave on" contract).
 //!
 //! For the backend-level variants, each request's latency is its
 //! batch's service time, so percentiles are taken over per-batch
@@ -29,6 +33,7 @@
 //! `cargo bench --bench service_pipeline` for full-size numbers.
 
 use loms::coordinator::{Backend, MergeService, ServiceConfig, SoftwareBackend};
+use loms::obs::percentile_us;
 use loms::runtime::ArtifactMeta;
 use loms::util::Rng;
 use std::time::Instant;
@@ -42,14 +47,6 @@ struct Variant {
     p50_latency_us: f64,
     p99_latency_us: f64,
     copies_per_batch: usize,
-}
-
-fn percentile(sorted_us: &[f64], q: f64) -> f64 {
-    if sorted_us.is_empty() {
-        return 0.0;
-    }
-    let idx = ((sorted_us.len() as f64 * q).ceil() as usize).saturating_sub(1);
-    sorted_us[idx.min(sorted_us.len() - 1)]
 }
 
 /// Ragged request batches for the artifact shape.
@@ -71,9 +68,39 @@ fn workload(rng: &mut Rng, meta: &ArtifactMeta, batches: usize) -> Vec<Vec<Vec<V
         .collect()
 }
 
-fn batch_percentiles(mut durations_us: Vec<f64>) -> (f64, f64) {
-    durations_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    (percentile(&durations_us, 0.50), percentile(&durations_us, 0.99))
+fn batch_percentiles(durations_us: Vec<f64>) -> (f64, f64) {
+    // Same log-linear histogram definition as the service's own
+    // latency percentiles, so every p50/p99 in the JSON is comparable.
+    (percentile_us(&durations_us, 0.50), percentile_us(&durations_us, 0.99))
+}
+
+/// One full pipelined-service round trip over a fresh workload with
+/// detail recording (histograms + span retention) on or off. Returns
+/// `(requests/s, p50 µs, p99 µs)` — the percentiles read 0 with detail
+/// off, since the histograms are the thing being switched.
+fn run_pipelined(
+    reqs: Vec<Vec<Vec<Vec<u32>>>>,
+    n_requests: usize,
+    detail: bool,
+) -> (f64, f64, f64) {
+    let svc = MergeService::start(|| Ok(SoftwareBackend::default_set()), ServiceConfig::default())
+        .unwrap();
+    svc.metrics().set_detail(detail);
+    svc.merge_blocking(vec![vec![1, 2], vec![3, 4]]).unwrap();
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(n_requests);
+    for batch_reqs in reqs {
+        for r in batch_reqs {
+            rxs.push(svc.submit(r));
+        }
+    }
+    for rx in rxs {
+        rx.recv().expect("service response");
+    }
+    let total = t0.elapsed();
+    let snap = svc.metrics().snapshot();
+    svc.shutdown();
+    (n_requests as f64 / total.as_secs_f64(), snap.p50_latency_us, snap.p99_latency_us)
 }
 
 fn main() {
@@ -207,6 +234,41 @@ fn main() {
     let snap_kv = svc_kv.metrics().snapshot();
     svc_kv.shutdown();
 
+    // Obs-overhead guard: the same pipelined workload with detail
+    // recording (histograms + span retention) on vs off, best of 3
+    // runs each so scheduler noise doesn't fail the gate. The contract
+    // ("cheap enough to leave on") is a throughput delta within 3% —
+    // relaxed in smoke mode, where runs are far too short to separate
+    // recording cost from noise.
+    let (mut on, mut off) = ((0.0f64, 0.0, 0.0), (0.0f64, 0.0, 0.0));
+    for _ in 0..3 {
+        let r = run_pipelined(workload(&mut rng, &meta, batches), n_requests, true);
+        if r.0 > on.0 {
+            on = r;
+        }
+        let r = run_pipelined(workload(&mut rng, &meta, batches), n_requests, false);
+        if r.0 > off.0 {
+            off = r;
+        }
+    }
+    let overhead = (off.0 - on.0) / off.0;
+    let tolerance = if loms::bench::smoke_mode() { 0.25 } else { 0.03 };
+    println!(
+        "obs overhead: on={:.0} req/s off={:.0} req/s delta={:+.2}% (tolerance {:.0}%)",
+        on.0,
+        off.0,
+        100.0 * overhead,
+        100.0 * tolerance
+    );
+    assert!(
+        overhead <= tolerance,
+        "observability overhead {:.2}% exceeds {:.0}% (on={:.0} off={:.0} req/s)",
+        100.0 * overhead,
+        100.0 * tolerance,
+        on.0,
+        off.0
+    );
+
     let variants = [
         Variant {
             name: "old_assemble_then_execute",
@@ -249,6 +311,22 @@ fn main() {
             p50_latency_us: snap_kv.p50_latency_us,
             p99_latency_us: snap_kv.p99_latency_us,
             copies_per_batch: 3,
+        },
+        Variant {
+            name: "pipelined_obs_on",
+            mode: "key_only",
+            requests_per_s: on.0,
+            p50_latency_us: on.1,
+            p99_latency_us: on.2,
+            copies_per_batch: 2,
+        },
+        Variant {
+            name: "pipelined_obs_off",
+            mode: "key_only",
+            requests_per_s: off.0,
+            p50_latency_us: off.1,
+            p99_latency_us: off.2,
+            copies_per_batch: 2,
         },
     ];
     for v in &variants {

@@ -23,6 +23,11 @@ pub struct BatchRun {
     /// ones (the tile-direct software path executes none; PJRT pads to
     /// the compiled batch shape).
     pub padded_rows: usize,
+    /// Which execution path ran the batch: the active SIMD tier label
+    /// for the software tile path (`"avx2"`, `"portable"`, …) or
+    /// `"pjrt"` — carried back so execute spans and per-artifact stats
+    /// name the code path that produced the latency.
+    pub tier: &'static str,
 }
 
 /// A batch executor over a fixed artifact set.
@@ -149,7 +154,7 @@ impl Backend for PjrtBackend {
             anyhow::ensure!(dst.len() <= total, "{name}: row {r} output too wide");
             dst.copy_from_slice(&out[r * total..r * total + dst.len()]);
         }
-        Ok(BatchRun { padded_rows: batch - rows.len() })
+        Ok(BatchRun { padded_rows: batch - rows.len(), tier: self.label() })
     }
 
     fn label(&self) -> &'static str {
@@ -387,7 +392,7 @@ impl Backend for SoftwareBackend {
             .map_err(|e| anyhow!("{name}: {e}"))?;
         // Tile-direct executes only the real rows (full tiles + scalar
         // tail) — unlike the row-major path, which padded to `batch`.
-        Ok(BatchRun { padded_rows: 0 })
+        Ok(BatchRun { padded_rows: 0, tier: lanes::active_tier().label() })
     }
 
     fn supports_kv(&self) -> bool {
@@ -449,7 +454,7 @@ impl Backend for SoftwareBackend {
                 dst[t] = src[p as usize];
             }
         }
-        Ok(BatchRun { padded_rows: 0 })
+        Ok(BatchRun { padded_rows: 0, tier: lanes::active_tier().label() })
     }
 
     fn label(&self) -> &'static str {

@@ -1,12 +1,21 @@
-//! Service metrics: counters, padding efficiency and a fixed-bucket
-//! latency histogram (lock-free enough for the request path: one mutex,
-//! short critical sections).
+//! Service metrics: counters, padding efficiency, per-stage and
+//! per-artifact latency histograms ([`crate::obs::Hist`] — the one
+//! percentile definition shared with `net/client.rs` and the benches),
+//! and the service [`Tracer`].
+//!
+//! Layout: plain counters live behind one mutex with short critical
+//! sections (as before); every latency distribution is a lock-free
+//! log-linear histogram recorded with relaxed atomics, cheap enough to
+//! leave on (`benches/service_pipeline.rs` guards the obs-on vs
+//! obs-off throughput delta). The `detail` switch exists *only* for
+//! that guard's obs-off row: it gates histogram/trace recording, never
+//! the counters.
 
-use std::sync::Mutex;
+use crate::obs::{Hist, HistStats, Tracer};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
-
-/// Power-of-2 latency buckets from 1 µs up to ~4 s.
-const BUCKETS: usize = 23;
 
 #[derive(Debug, Default)]
 struct Inner {
@@ -17,7 +26,6 @@ struct Inner {
     rows_real: u64,
     software_served: u64,
     rejected: u64,
-    latency_buckets: [u64; BUCKETS],
     latency_sum_ns: u128,
     /// Batches with per-stage timing recorded (pipeline observability:
     /// the serving path is queue wait → assemble → execute → respond,
@@ -31,7 +39,8 @@ struct Inner {
     /// connections accepted, complete frames received, frames that
     /// failed protocol decode, and reply frames produced (response vs
     /// error). Steady-state invariant once a connection drains:
-    /// `net_frames_in == net_responses + net_errors`.
+    /// `net_frames_in == net_responses + net_errors` (promoted to
+    /// [`Snapshot::check`]).
     net_connections: u64,
     net_frames_in: u64,
     net_decode_errors: u64,
@@ -45,12 +54,49 @@ struct Inner {
     corrupt_detected: u64,
     retries: u64,
     sheds: u64,
+    /// Cumulative external-sort phase clocks reported into this
+    /// service's stats surface (`on_extsort_clocks`) — zero on a
+    /// pure-serve workload.
+    extsort_run_form_secs: f64,
+    extsort_merge_secs: f64,
+    extsort_io_wait_secs: f64,
+}
+
+/// Per-artifact observability: batch count, real rows served, and the
+/// execute-stage latency distribution. All relaxed atomics — recorded
+/// outside any lock.
+#[derive(Debug, Default)]
+struct ArtifactObs {
+    batches: AtomicU64,
+    rows: AtomicU64,
+    execute: Hist,
 }
 
 /// Shared metrics handle.
 #[derive(Debug, Default)]
 pub struct Metrics {
     inner: Mutex<Inner>,
+    /// End-to-end response latency.
+    latency: Hist,
+    /// Per-stage batch histograms (same stages as the `*_ns` mean sums).
+    queue_wait: Hist,
+    assemble: Hist,
+    execute: Hist,
+    respond: Hist,
+    /// Keyed by artifact name (plus `"software"` for the fallback pool).
+    artifacts: Mutex<HashMap<Arc<str>, Arc<ArtifactObs>>>,
+    tracer: Tracer,
+    /// Inverted so `derive(Default)` means detail *on*.
+    detail_off: AtomicBool,
+}
+
+/// One artifact's slice of a [`Snapshot`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ArtifactSnapshot {
+    pub name: String,
+    pub batches: u64,
+    pub rows: u64,
+    pub execute: HistStats,
 }
 
 /// A point-in-time snapshot.
@@ -59,6 +105,11 @@ pub struct Snapshot {
     pub requests: u64,
     pub responses: u64,
     pub batches: u64,
+    /// Batches with per-stage timing recorded. Increments after
+    /// `batches` for the same batch (single executor thread), so at any
+    /// instant `batches <= stage_batches + 1`; drained and error-free
+    /// they are equal ([`Snapshot::check`]).
+    pub stage_batches: u64,
     pub rows_padded: u64,
     pub rows_real: u64,
     pub software_served: u64,
@@ -66,6 +117,8 @@ pub struct Snapshot {
     pub mean_latency_us: f64,
     pub p50_latency_us: f64,
     pub p99_latency_us: f64,
+    /// Full end-to-end latency distribution (p50/p90/p99/p999/max).
+    pub latency: HistStats,
     /// Mean per-batch stage timings (µs): how long the oldest request
     /// waited for its batch to flush, view/buffer assembly, backend
     /// execution, and response fan-out. With the pipelined engine,
@@ -74,6 +127,14 @@ pub struct Snapshot {
     pub assemble_us_mean: f64,
     pub execute_us_mean: f64,
     pub respond_us_mean: f64,
+    /// Per-stage batch latency distributions.
+    pub queue_wait: HistStats,
+    pub assemble: HistStats,
+    pub execute: HistStats,
+    pub respond: HistStats,
+    /// Per-artifact batch/row counts and execute histograms, sorted by
+    /// artifact name (includes `"software"` once the fallback serves).
+    pub artifacts: Vec<ArtifactSnapshot>,
     /// Connections accepted by the network front-end.
     pub net_connections: u64,
     /// Frames received and answered: complete frames (requests, pings,
@@ -84,7 +145,8 @@ pub struct Snapshot {
     /// Frames whose body (or length prefix) failed protocol decode;
     /// each was answered with an Error frame.
     pub net_decode_errors: u64,
-    /// Reply frames produced with a payload (MergeResponse / Pong).
+    /// Reply frames produced with a payload (MergeResponse / Pong /
+    /// StatsResponse).
     pub net_responses: u64,
     /// Error frames produced (decode failures, rejected requests,
     /// unsupported modes, shed overloads). Once every connection
@@ -101,11 +163,80 @@ pub struct Snapshot {
     /// Requests refused at admission because the service was over its
     /// pending-work watermark (answered with an `OVERLOADED` error).
     pub sheds: u64,
+    /// Cumulative extsort phase clocks reported to this service (zero
+    /// on a pure-serve workload).
+    pub extsort_run_form_secs: f64,
+    pub extsort_merge_secs: f64,
+    pub extsort_io_wait_secs: f64,
+    /// Span events evicted from the trace ring (ring full).
+    pub spans_dropped: u64,
+}
+
+impl Snapshot {
+    /// Drained-state balance invariants, shared by the test suites and
+    /// `debug_assert!`ed (in their always-true transient form) at
+    /// snapshot time. Valid once every connection has drained and no
+    /// batch failed at execute:
+    ///
+    /// * every answered frame got exactly one reply,
+    /// * every counted batch also recorded its stage split,
+    /// * every admitted request settled as a response or a rejection,
+    /// * the latency histogram (when recording was on) saw every
+    ///   response.
+    pub fn check(&self) -> Result<(), String> {
+        let mut violations = Vec::new();
+        if self.net_frames_in != self.net_responses + self.net_errors {
+            violations.push(format!(
+                "net_frames_in {} != net_responses {} + net_errors {}",
+                self.net_frames_in, self.net_responses, self.net_errors
+            ));
+        }
+        if self.stage_batches != self.batches {
+            violations.push(format!(
+                "stage_batches {} != batches {}",
+                self.stage_batches, self.batches
+            ));
+        }
+        if self.requests != self.responses + self.rejected {
+            violations.push(format!(
+                "requests {} != responses {} + rejected {}",
+                self.requests, self.responses, self.rejected
+            ));
+        }
+        // When the detail switch was off, the histogram is empty; any
+        // other count must match responses exactly.
+        if self.latency.count != 0 && self.latency.count != self.responses {
+            violations.push(format!(
+                "latency histogram count {} != responses {}",
+                self.latency.count, self.responses
+            ));
+        }
+        if violations.is_empty() {
+            Ok(())
+        } else {
+            Err(violations.join("; "))
+        }
+    }
 }
 
 impl Metrics {
     pub fn new() -> Self {
         Metrics::default()
+    }
+
+    /// The service tracer (trace-id minting + sampled span ring).
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
+    /// Histogram/trace recording switch — exists for the obs-overhead
+    /// bench guard's obs-off row. Counters are never gated.
+    pub fn set_detail(&self, on: bool) {
+        self.detail_off.store(!on, Ordering::Relaxed);
+    }
+
+    pub fn detail(&self) -> bool {
+        !self.detail_off.load(Ordering::Relaxed)
     }
 
     pub fn on_request(&self) {
@@ -136,12 +267,42 @@ impl Metrics {
         execute: Duration,
         respond: Duration,
     ) {
-        let mut g = self.inner.lock().unwrap();
-        g.stage_batches += 1;
-        g.queue_wait_ns += queue_wait.as_nanos();
-        g.assemble_ns += assemble.as_nanos();
-        g.execute_ns += execute.as_nanos();
-        g.respond_ns += respond.as_nanos();
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.stage_batches += 1;
+            g.queue_wait_ns += queue_wait.as_nanos();
+            g.assemble_ns += assemble.as_nanos();
+            g.execute_ns += execute.as_nanos();
+            g.respond_ns += respond.as_nanos();
+        }
+        if self.detail() {
+            self.queue_wait.record_duration(queue_wait);
+            self.assemble.record_duration(assemble);
+            self.execute.record_duration(execute);
+            self.respond.record_duration(respond);
+        }
+    }
+
+    /// Record one executed batch against its artifact (or `"software"`
+    /// for the fallback pool): batch count, real rows, execute latency.
+    pub fn on_artifact_batch(&self, name: &Arc<str>, rows: u64, execute: Duration) {
+        if !self.detail() {
+            return;
+        }
+        let obs = {
+            let mut g = self.artifacts.lock().unwrap();
+            match g.get(name.as_ref()) {
+                Some(o) => Arc::clone(o),
+                None => {
+                    let o = Arc::new(ArtifactObs::default());
+                    g.insert(Arc::clone(name), Arc::clone(&o));
+                    o
+                }
+            }
+        };
+        obs.batches.fetch_add(1, Ordering::Relaxed);
+        obs.rows.fetch_add(rows, Ordering::Relaxed);
+        obs.execute.record_duration(execute);
     }
 
     pub fn on_net_connection(&self) {
@@ -180,6 +341,16 @@ impl Metrics {
         self.inner.lock().unwrap().sheds += 1;
     }
 
+    /// Accumulate external-sort phase clocks into the stats surface
+    /// (`loms sort` and the planner report their `ExtSortStats` here
+    /// when a service is around to own the numbers).
+    pub fn on_extsort_clocks(&self, run_form_secs: f64, merge_secs: f64, io_wait_secs: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.extsort_run_form_secs += run_form_secs;
+        g.extsort_merge_secs += merge_secs;
+        g.extsort_io_wait_secs += io_wait_secs;
+    }
+
     /// Requests answered or rejected by the service so far — the cheap
     /// half of the pending-work gauge the server's admission check
     /// reads on every frame (`snapshot()` would be far too heavy
@@ -192,37 +363,52 @@ impl Metrics {
     }
 
     pub fn on_response(&self, latency: Duration) {
-        let mut g = self.inner.lock().unwrap();
-        g.responses += 1;
-        let ns = latency.as_nanos();
-        g.latency_sum_ns += ns;
-        let us = (ns / 1_000).max(1) as u64;
-        let bucket = (63 - us.leading_zeros() as usize).min(BUCKETS - 1);
-        g.latency_buckets[bucket] += 1;
-    }
-
-    fn percentile(buckets: &[u64; BUCKETS], total: u64, q: f64) -> f64 {
-        if total == 0 {
-            return 0.0;
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.responses += 1;
+            g.latency_sum_ns += latency.as_nanos();
         }
-        let target = (total as f64 * q).ceil() as u64;
-        let mut acc = 0u64;
-        for (i, &c) in buckets.iter().enumerate() {
-            acc += c;
-            if acc >= target {
-                // midpoint of the bucket [2^i, 2^(i+1)) µs
-                return (1u64 << i) as f64 * 1.5;
-            }
+        if self.detail() {
+            self.latency.record_duration(latency);
         }
-        (1u64 << (BUCKETS - 1)) as f64
     }
 
     pub fn snapshot(&self) -> Snapshot {
+        let mut artifacts: Vec<ArtifactSnapshot> = {
+            let g = self.artifacts.lock().unwrap();
+            g.iter()
+                .map(|(k, v)| ArtifactSnapshot {
+                    name: k.to_string(),
+                    batches: v.batches.load(Ordering::Relaxed),
+                    rows: v.rows.load(Ordering::Relaxed),
+                    execute: v.execute.snapshot(),
+                })
+                .collect()
+        };
+        artifacts.sort_by(|a, b| a.name.cmp(&b.name));
+        let latency = self.latency.snapshot();
         let g = self.inner.lock().unwrap();
+        // Transient forms of the Snapshot::check balance invariants —
+        // true at *any* instant given the recording order (frame before
+        // reply; batch before its stage split, one executor thread).
+        debug_assert!(
+            g.net_frames_in >= g.net_responses + g.net_errors,
+            "net frames_in {} < responses {} + errors {}",
+            g.net_frames_in,
+            g.net_responses,
+            g.net_errors
+        );
+        debug_assert!(
+            g.batches <= g.stage_batches + 1,
+            "batches {} ran ahead of stage_batches {}",
+            g.batches,
+            g.stage_batches
+        );
         Snapshot {
             requests: g.requests,
             responses: g.responses,
             batches: g.batches,
+            stage_batches: g.stage_batches,
             rows_padded: g.rows_padded,
             rows_real: g.rows_real,
             software_served: g.software_served,
@@ -232,12 +418,18 @@ impl Metrics {
             } else {
                 g.latency_sum_ns as f64 / g.responses as f64 / 1_000.0
             },
-            p50_latency_us: Self::percentile(&g.latency_buckets, g.responses, 0.50),
-            p99_latency_us: Self::percentile(&g.latency_buckets, g.responses, 0.99),
+            p50_latency_us: latency.p50_us as f64,
+            p99_latency_us: latency.p99_us as f64,
+            latency,
             queue_wait_us_mean: Self::stage_mean(g.queue_wait_ns, g.stage_batches),
             assemble_us_mean: Self::stage_mean(g.assemble_ns, g.stage_batches),
             execute_us_mean: Self::stage_mean(g.execute_ns, g.stage_batches),
             respond_us_mean: Self::stage_mean(g.respond_ns, g.stage_batches),
+            queue_wait: self.queue_wait.snapshot(),
+            assemble: self.assemble.snapshot(),
+            execute: self.execute.snapshot(),
+            respond: self.respond.snapshot(),
+            artifacts,
             net_connections: g.net_connections,
             net_frames_in: g.net_frames_in,
             net_decode_errors: g.net_decode_errors,
@@ -247,6 +439,10 @@ impl Metrics {
             corrupt_detected: g.corrupt_detected,
             retries: g.retries,
             sheds: g.sheds,
+            extsort_run_form_secs: g.extsort_run_form_secs,
+            extsort_merge_secs: g.extsort_merge_secs,
+            extsort_io_wait_secs: g.extsort_io_wait_secs,
+            spans_dropped: self.tracer.dropped(),
         }
     }
 
@@ -281,6 +477,7 @@ mod tests {
         assert_eq!(s.requests, 2);
         assert_eq!(s.responses, 2);
         assert_eq!(s.batches, 1);
+        assert_eq!(s.stage_batches, 1);
         assert_eq!(s.rows_real, 3);
         assert_eq!(s.rows_padded, 1);
         assert!(s.mean_latency_us >= 100.0 && s.mean_latency_us <= 200.0);
@@ -290,6 +487,64 @@ mod tests {
         assert_eq!(s.assemble_us_mean, 10.0);
         assert_eq!(s.execute_us_mean, 80.0);
         assert_eq!(s.respond_us_mean, 20.0);
+        // Stage histograms agree with the exact means on whole-µs input.
+        assert_eq!(s.queue_wait.count, 1);
+        assert_eq!(s.queue_wait.p50_us, 500);
+        assert_eq!(s.execute.p50_us, 80);
+        assert_eq!(s.latency.count, 2);
+        assert_eq!(s.latency.max_us, 200);
+    }
+
+    #[test]
+    fn latency_percentiles_share_the_hist_definition() {
+        // The Snapshot p50/p99 and the raw histogram are the same
+        // numbers — one percentile definition everywhere.
+        let m = Metrics::new();
+        for us in 1..=1000u64 {
+            m.on_response(Duration::from_micros(us));
+        }
+        let s = m.snapshot();
+        assert_eq!(s.p50_latency_us, s.latency.p50_us as f64);
+        assert_eq!(s.p99_latency_us, s.latency.p99_us as f64);
+        let direct = crate::obs::percentile_us(
+            &(1..=1000).map(|i| i as f64).collect::<Vec<_>>(),
+            0.99,
+        );
+        assert_eq!(s.p99_latency_us, direct);
+    }
+
+    #[test]
+    fn detail_off_gates_histograms_not_counters() {
+        let m = Metrics::new();
+        assert!(m.detail(), "detail defaults on");
+        m.set_detail(false);
+        m.on_response(Duration::from_micros(100));
+        let name: Arc<str> = "loms2_up32_dn32_b256".into();
+        m.on_artifact_batch(&name, 4, Duration::from_micros(10));
+        let s = m.snapshot();
+        assert_eq!(s.responses, 1, "counters never gated");
+        assert_eq!(s.latency.count, 0, "histogram recording gated");
+        assert!(s.artifacts.is_empty());
+        m.set_detail(true);
+        m.on_response(Duration::from_micros(100));
+        m.on_artifact_batch(&name, 4, Duration::from_micros(10));
+        let s = m.snapshot();
+        assert_eq!(s.latency.count, 1);
+        assert_eq!(s.artifacts.len(), 1);
+        assert_eq!(s.artifacts[0].name, "loms2_up32_dn32_b256");
+        assert_eq!(s.artifacts[0].rows, 4);
+    }
+
+    #[test]
+    fn artifact_snapshots_sorted_by_name() {
+        let m = Metrics::new();
+        for n in ["zeta", "alpha", "mid"] {
+            let name: Arc<str> = n.into();
+            m.on_artifact_batch(&name, 1, Duration::from_micros(5));
+        }
+        let names: Vec<String> =
+            m.snapshot().artifacts.into_iter().map(|a| a.name).collect();
+        assert_eq!(names, vec!["alpha", "mid", "zeta"]);
     }
 
     #[test]
@@ -314,6 +569,35 @@ mod tests {
     }
 
     #[test]
+    fn check_accepts_balanced_and_names_violations() {
+        let m = Metrics::new();
+        m.snapshot().check().unwrap();
+        m.on_request();
+        m.on_response(Duration::from_micros(10));
+        m.on_batch(1, 0);
+        m.on_batch_stages(
+            Duration::ZERO,
+            Duration::ZERO,
+            Duration::from_micros(5),
+            Duration::ZERO,
+        );
+        m.on_net_frame_in();
+        m.on_net_response();
+        m.snapshot().check().unwrap();
+        // Unbalance the frames: one unanswered frame in flight is a
+        // check() violation (drained state only).
+        m.on_net_frame_in();
+        let err = m.snapshot().check().unwrap_err();
+        assert!(err.contains("net_frames_in"), "{err}");
+        m.on_net_error();
+        m.snapshot().check().unwrap();
+        // A batch without a stage split is a violation too.
+        m.on_batch(1, 0);
+        let err = m.snapshot().check().unwrap_err();
+        assert!(err.contains("stage_batches"), "{err}");
+    }
+
+    #[test]
     fn robustness_counters_accumulate() {
         let m = Metrics::new();
         m.on_fault_injected();
@@ -329,6 +613,17 @@ mod tests {
         // Sheds happen before submission, so they never settle work.
         assert_eq!(m.settled(), 0);
         assert_eq!(s.rejected, 0);
+    }
+
+    #[test]
+    fn extsort_clocks_accumulate() {
+        let m = Metrics::new();
+        m.on_extsort_clocks(1.5, 0.5, 0.25);
+        m.on_extsort_clocks(0.5, 0.5, 0.25);
+        let s = m.snapshot();
+        assert_eq!(s.extsort_run_form_secs, 2.0);
+        assert_eq!(s.extsort_merge_secs, 1.0);
+        assert_eq!(s.extsort_io_wait_secs, 0.5);
     }
 
     #[test]

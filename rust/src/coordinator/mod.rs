@@ -15,7 +15,7 @@ pub mod router;
 pub mod service;
 
 pub use backend::{Backend, BatchRun, PjrtBackend, SoftwareBackend};
-pub use metrics::{Metrics, Snapshot};
+pub use metrics::{ArtifactSnapshot, Metrics, Snapshot};
 pub use request::{MergeRequest, MergeResponse};
 pub use router::{Route, Router};
 pub use service::{ConfigError, MergeService, ServiceConfig};

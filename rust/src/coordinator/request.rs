@@ -17,17 +17,27 @@ pub struct MergeRequest {
     pub payloads: Option<Vec<u64>>,
     /// Submission time (for latency accounting).
     pub submitted: Instant,
+    /// Trace id minted at the net edge (0 = untraced). Rides with the
+    /// request through batching so span events recorded along the
+    /// admit → queue → assemble → execute → respond path carry it.
+    pub trace: u64,
 }
 
 impl MergeRequest {
     pub fn new(id: u64, lists: Vec<Vec<u32>>) -> Self {
-        MergeRequest { id, lists, payloads: None, submitted: Instant::now() }
+        MergeRequest { id, lists, payloads: None, submitted: Instant::now(), trace: 0 }
     }
 
     /// A key-value request: `payloads` is the list-major column beside
     /// the keys (validated against the key count at admission).
     pub fn new_kv(id: u64, lists: Vec<Vec<u32>>, payloads: Vec<u64>) -> Self {
-        MergeRequest { id, lists, payloads: Some(payloads), submitted: Instant::now() }
+        MergeRequest { id, lists, payloads: Some(payloads), submitted: Instant::now(), trace: 0 }
+    }
+
+    /// Attach a trace id (builder form used at submission).
+    pub fn with_trace(mut self, trace: u64) -> Self {
+        self.trace = trace;
+        self
     }
 
     /// Whether this request carries a payload column.

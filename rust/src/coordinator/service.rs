@@ -31,6 +31,7 @@ use super::backend::Backend;
 use super::metrics::Metrics;
 use super::request::{MergeRequest, MergeResponse, ResponseTx};
 use super::router::{Route, Router};
+use crate::obs::{self, SpanEvent};
 use crate::runtime::ArtifactMeta;
 use crate::util::fault::{self, Site};
 use anyhow::{Context, Result};
@@ -184,6 +185,17 @@ impl Engine {
 
     fn admit(&mut self, req: Box<MergeRequest>, tx: ResponseTx) {
         self.metrics.on_request();
+        if self.metrics.detail() && self.metrics.tracer().sampled(req.trace) {
+            let tr = self.metrics.tracer();
+            tr.record(SpanEvent {
+                trace: req.trace,
+                name: "admit",
+                start_us: tr.now_us(),
+                dur_us: 0,
+                artifact: None,
+                tier: None,
+            });
+        }
         // Unsorted lists violate the hardware precondition; u32::MAX
         // values collide with the PAD sentinel and would be corrupted by
         // batch padding — both rejected before routing.
@@ -316,10 +328,27 @@ fn exec_loop<B: Backend>(mut backend: B, rx: mpsc::Receiver<ExecBatch>, metrics:
             };
             (run, t1, Instant::now())
         };
+        // Traced slots are resolved before the batch is consumed by
+        // fan-out; with sampling off this is one atomic load per slot.
+        let traced: Vec<u64> = if metrics.detail() && metrics.tracer().sample() != 0 {
+            slots
+                .iter()
+                .map(|s| s.req.trace)
+                .filter(|&t| metrics.tracer().sampled(t))
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let tier = match &run {
+            Ok(stats) => stats.tier,
+            Err(_) => "",
+        };
+        let ok = run.is_ok();
         match run {
             Ok(stats) => {
                 let pay = kv.then_some(merged_pay);
-                respond_batch(&metrics, name, slots, merged, pay, real, stats.padded_rows);
+                metrics.on_artifact_batch(&name, real as u64, t2 - t1);
+                respond_batch(&metrics, name.clone(), slots, merged, pay, real, stats.padded_rows);
             }
             Err(e) => {
                 eprintln!("merge batch {name} failed: {e:#}");
@@ -329,7 +358,57 @@ fn exec_loop<B: Backend>(mut backend: B, rx: mpsc::Receiver<ExecBatch>, metrics:
                 }
             }
         }
-        metrics.on_batch_stages(queue_wait, t1 - t0, t2 - t1, t2.elapsed());
+        let respond = t2.elapsed();
+        metrics.on_batch_stages(queue_wait, t1 - t0, t2 - t1, respond);
+        if ok && !traced.is_empty() {
+            // Reconstruct the batch's stage timeline on the tracer
+            // clock by counting back from "now" — every traced slot in
+            // the batch shares the same queue/assemble/execute/respond
+            // spans (batching is the point).
+            let tr = metrics.tracer();
+            let respond_us = obs::us_from_duration(respond);
+            let exec_us = obs::us_from_duration(t2 - t1);
+            let asm_us = obs::us_from_duration(t1 - t0);
+            let qw_us = obs::us_from_duration(queue_wait);
+            let t2_us = tr.now_us().saturating_sub(respond_us);
+            let t1_us = t2_us.saturating_sub(exec_us);
+            let t0_us = t1_us.saturating_sub(asm_us);
+            let q_us = t0_us.saturating_sub(qw_us);
+            for &trace in &traced {
+                tr.record(SpanEvent {
+                    trace,
+                    name: "queue",
+                    start_us: q_us,
+                    dur_us: qw_us,
+                    artifact: None,
+                    tier: None,
+                });
+                tr.record(SpanEvent {
+                    trace,
+                    name: "assemble",
+                    start_us: t0_us,
+                    dur_us: asm_us,
+                    artifact: None,
+                    tier: None,
+                });
+                tr.record(SpanEvent {
+                    trace,
+                    name: "execute",
+                    start_us: t1_us,
+                    dur_us: exec_us,
+                    artifact: Some(name.clone()),
+                    tier: Some(tier),
+                });
+                tr.record(SpanEvent {
+                    trace,
+                    name: "respond",
+                    start_us: t2_us,
+                    dur_us: respond_us,
+                    artifact: None,
+                    tier: None,
+                });
+            }
+        }
     }
 }
 
@@ -375,6 +454,7 @@ fn fallback_loop(rx: Arc<Mutex<mpsc::Receiver<FallbackJob>>>, metrics: Arc<Metri
             guard.recv()
         };
         let Ok((req, tx)) = job else { return };
+        let t_exec = Instant::now();
         let (merged, payloads) = match &req.payloads {
             None => {
                 let mut merged: Vec<u32> = req.lists.concat();
@@ -391,6 +471,20 @@ fn fallback_loop(rx: Arc<Mutex<mpsc::Receiver<FallbackJob>>>, metrics: Arc<Metri
                 (merged, Some(payloads))
             }
         };
+        let exec_dur = t_exec.elapsed();
+        metrics.on_artifact_batch(&label, 1, exec_dur);
+        if metrics.detail() && metrics.tracer().sampled(req.trace) {
+            let tr = metrics.tracer();
+            let exec_us = obs::us_from_duration(exec_dur);
+            tr.record(SpanEvent {
+                trace: req.trace,
+                name: "execute",
+                start_us: tr.now_us().saturating_sub(exec_us),
+                dur_us: exec_us,
+                artifact: Some(label.clone()),
+                tier: Some("software"),
+            });
+        }
         let latency = req.submitted.elapsed();
         metrics.on_response(latency);
         let _ = tx.send(MergeResponse {
@@ -504,9 +598,18 @@ impl MergeService {
 
     /// Submit a merge; returns the response channel.
     pub fn submit(&self, lists: Vec<Vec<u32>>) -> mpsc::Receiver<MergeResponse> {
+        self.submit_traced(lists, 0)
+    }
+
+    /// Submit a merge carrying a trace id (0 = untraced). The net edge
+    /// mints ids for frames that arrive without one; in-process callers
+    /// may mint via `metrics().tracer().mint()` to follow their own
+    /// request through the span ring.
+    pub fn submit_traced(&self, lists: Vec<Vec<u32>>, trace: u64) -> mpsc::Receiver<MergeResponse> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
-        let _ = self.tx.send(Msg::Job(Box::new(MergeRequest::new(id, lists)), tx));
+        let req = MergeRequest::new(id, lists).with_trace(trace);
+        let _ = self.tx.send(Msg::Job(Box::new(req), tx));
         rx
     }
 
@@ -519,9 +622,22 @@ impl MergeService {
         lists: Vec<Vec<u32>>,
         payloads: Vec<u64>,
     ) -> mpsc::Receiver<MergeResponse> {
+        self.submit_kv_traced(lists, payloads, 0)
+    }
+
+    /// Key-value submission carrying a trace id (see [`submit_traced`]).
+    ///
+    /// [`submit_traced`]: MergeService::submit_traced
+    pub fn submit_kv_traced(
+        &self,
+        lists: Vec<Vec<u32>>,
+        payloads: Vec<u64>,
+        trace: u64,
+    ) -> mpsc::Receiver<MergeResponse> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
-        let _ = self.tx.send(Msg::Job(Box::new(MergeRequest::new_kv(id, lists, payloads)), tx));
+        let req = MergeRequest::new_kv(id, lists, payloads).with_trace(trace);
+        let _ = self.tx.send(Msg::Job(Box::new(req), tx));
         rx
     }
 

@@ -25,6 +25,10 @@
 //!   protocol, [`net::NetServer`] (acceptor + bounded worker pool over
 //!   the pipelined service) and the pipelined [`net::NetClient`] /
 //!   load generator behind `loms serve --listen` and `loms bench-net`.
+//! * [`obs`] — observability: the log-linear latency histogram (one
+//!   percentile definition stack-wide), per-request tracing with a
+//!   bounded span ring, and the stats wire/JSONL export surface behind
+//!   `loms stats` and `loms serve --metrics-interval`.
 //! * [`bench`] — figure/table regeneration harness shared by `benches/`.
 //!
 //! See `rust/DESIGN.md` for the system inventory and
@@ -34,6 +38,7 @@ pub mod bench;
 pub mod coordinator;
 pub mod fpga;
 pub mod net;
+pub mod obs;
 pub mod runtime;
 pub mod sortnet;
 pub mod stream;

@@ -6,14 +6,23 @@
 //!   goldens  [--dir tests/golden]                  write the cross-check set
 //!   validate --kind K [options]                    exhaustive 0-1 validation
 //!   serve    [--artifacts DIR] [--requests N] [--payload true]
-//!            [--listen ADDR [--workers N] [--duration-secs S]]
+//!            [--listen ADDR [--workers N] [--duration-secs S]
+//!             [--metrics-interval S] [--trace-sample N]
+//!             [--trace-file FILE]]
 //!            with --listen: serve the framed TCP protocol on ADDR
 //!            (e.g. 127.0.0.1:7474) instead of the in-process demo;
-//!            --payload true drives the demo with key-value requests
+//!            --payload true drives the demo with key-value requests;
+//!            --metrics-interval S emits the full stats document as
+//!            one JSON line every S seconds; --trace-sample N retains
+//!            spans for every Nth trace id; --trace-file appends the
+//!            retained spans as JSONL
+//!   stats    --addr ADDR                            fetch and pretty-print
+//!            the live stats document from a running `serve --listen`
 //!   bench-net --addr ADDR [--conns N] [--inflight M] [--requests R]
-//!            [--payload true]
+//!            [--payload true] [--smoke true]
 //!            load-generate against a running `serve --listen`
-//!            (--payload true sends v1.1 key-value requests)
+//!            (--payload true sends v1.1 key-value requests;
+//!            --smoke true shrinks the run for CI gate checks)
 //!   sort     [--engine stream|ladder] [--n N] [--input F [--output F]]
 //!            [--r R] [--run-len L] [--fanin F] [--spill DIR]
 //!            [--sort-threads T] [--partitions P] [--prefetch-buf K]
@@ -37,7 +46,8 @@ use loms::bench::figures;
 use loms::coordinator::{
     planner, Backend, MergeService, PjrtBackend, ServiceConfig, SoftwareBackend,
 };
-use loms::net::{self, NetServer, NetServerConfig};
+use loms::net::{self, NetClient, NetServer, NetServerConfig};
+use loms::obs::{self, HistStats};
 use loms::sortnet::validate::{validate_median_01, validate_merge_01};
 use loms::sortnet::{batcher, json, loms as lomsnet, mwms, s2ms, MergeDevice};
 use loms::stream::{self, ExtSortConfig, RunFormer};
@@ -157,8 +167,21 @@ fn report_sorted(sorted: &[u32], n: usize, label: &str, dt: Duration) -> Result<
     Ok(())
 }
 
+/// One `--stats true` line per I/O phase histogram.
+fn report_phase_hist(name: &str, h: &HistStats) {
+    println!(
+        "  {name}: count={} mean={:.1}µs p50={}µs p90={}µs p99={}µs max={}µs",
+        h.count,
+        h.mean_us(),
+        h.p50_us,
+        h.p90_us,
+        h.p99_us,
+        h.max_us
+    );
+}
+
 /// Print extsort stats: one Debug line always, phase-level breakdown
-/// under `--stats true`.
+/// (including the per-phase histograms) under `--stats true`.
 fn report_extsort_stats(stats: &stream::ExtSortStats, verbose: bool) {
     println!("{stats:?}");
     if !verbose {
@@ -176,6 +199,10 @@ fn report_extsort_stats(stats: &stream::ExtSortStats, verbose: bool) {
         "kernel: batches={} rows={} flushes={}",
         stats.tree.kernel_batches, stats.tree.kernel_rows, stats.tree.flushes
     );
+    println!("phase histograms:");
+    report_phase_hist("chunk-sort", &stats.chunk_sort);
+    report_phase_hist("spill-write", &stats.spill_write);
+    report_phase_hist("prefetch-wait", &stats.prefetch_wait);
 }
 
 fn start_service(o: &HashMap<String, String>) -> Result<(MergeService, &'static str)> {
@@ -198,7 +225,8 @@ fn start_service(o: &HashMap<String, String>) -> Result<(MergeService, &'static 
 fn run(args: &[String]) -> Result<()> {
     let Some(cmd) = args.first() else {
         bail!(
-            "usage: loms <report|netgen|goldens|validate|serve|bench-net|sort|selftest> [options]"
+            "usage: loms <report|netgen|goldens|validate|serve|stats|bench-net|sort|selftest> \
+             [options]"
         );
     };
     let o = opts(&args[1..])?;
@@ -279,7 +307,18 @@ fn run(args: &[String]) -> Result<()> {
         "serve" if o.contains_key("listen") => {
             let listen = o.get("listen").expect("guarded").clone();
             let workers = get_usize(&o, "workers", NetServerConfig::default().workers)?;
+            let trace_sample = get_usize(&o, "trace-sample", 0)? as u64;
+            let metrics_interval = get_usize(&o, "metrics-interval", 0)?;
+            let mut trace_out = o
+                .get("trace-file")
+                .map(|p| {
+                    std::fs::File::create(p)
+                        .map(std::io::BufWriter::new)
+                        .with_context(|| format!("creating --trace-file {p}"))
+                })
+                .transpose()?;
             let (svc, backend) = start_service(&o)?;
+            svc.metrics().tracer().set_sample(trace_sample);
             let server = NetServer::start(
                 &listen,
                 svc,
@@ -291,45 +330,77 @@ fn run(args: &[String]) -> Result<()> {
                 .map(|v| v.parse::<u64>().with_context(|| format!("--duration-secs {v:?}")))
                 .transpose()?
                 .map(Duration::from_secs);
+            let tick = if metrics_interval > 0 { metrics_interval as u64 } else { 10 };
             let t0 = Instant::now();
-            // Periodic one-line snapshot until the deadline (forever
-            // when none was given — kill the process to stop).
+            // Periodic snapshot until the deadline (forever when none
+            // was given — kill the process to stop): a one-line human
+            // summary by default, the full stats document as one JSON
+            // line with --metrics-interval, plus any sampled spans
+            // appended to --trace-file.
             loop {
-                std::thread::sleep(Duration::from_secs(10).min(
-                    duration.map_or(Duration::from_secs(10), |d| {
+                std::thread::sleep(Duration::from_secs(tick).min(
+                    duration.map_or(Duration::from_secs(tick), |d| {
                         d.saturating_sub(t0.elapsed()).max(Duration::from_millis(10))
                     }),
                 ));
-                let s = server.service().metrics().snapshot();
-                println!(
-                    "conns={} frames_in={} responses={} errors={} decode_errors={} \
-                     sheds={} retries={} batches={} p50={:.0}µs p99={:.0}µs",
-                    s.net_connections,
-                    s.net_frames_in,
-                    s.net_responses,
-                    s.net_errors,
-                    s.net_decode_errors,
-                    s.sheds,
-                    s.retries,
-                    s.batches,
-                    s.p50_latency_us,
-                    s.p99_latency_us
-                );
+                let svc = server.service();
+                if let Some(w) = trace_out.as_mut() {
+                    let spans = svc.metrics().tracer().drain();
+                    obs::write_spans_jsonl(&spans, w).context("writing --trace-file")?;
+                    std::io::Write::flush(w).context("flushing --trace-file")?;
+                }
+                if metrics_interval > 0 {
+                    let doc = obs::expo::stats_json(&svc.metrics().snapshot(), svc.pending());
+                    println!("{}", doc.to_string());
+                } else {
+                    let s = svc.metrics().snapshot();
+                    println!(
+                        "conns={} frames_in={} responses={} errors={} decode_errors={} \
+                         sheds={} retries={} batches={} p50={:.0}µs p99={:.0}µs",
+                        s.net_connections,
+                        s.net_frames_in,
+                        s.net_responses,
+                        s.net_errors,
+                        s.net_decode_errors,
+                        s.sheds,
+                        s.retries,
+                        s.batches,
+                        s.p50_latency_us,
+                        s.p99_latency_us
+                    );
+                }
                 if duration.is_some_and(|d| t0.elapsed() >= d) {
                     break;
                 }
             }
+            if let Some(w) = trace_out.as_mut() {
+                let spans = server.service().metrics().tracer().drain();
+                obs::write_spans_jsonl(&spans, w).context("writing --trace-file")?;
+                std::io::Write::flush(w).context("flushing --trace-file")?;
+            }
             server.shutdown();
             println!("drained and stopped");
+            Ok(())
+        }
+        "stats" => {
+            let addr =
+                o.get("addr").ok_or_else(|| anyhow!("stats requires --addr HOST:PORT"))?;
+            let mut client = NetClient::connect(addr.as_str())?;
+            let doc = client.stats()?;
+            println!("{}", doc.to_string_pretty());
             Ok(())
         }
         "bench-net" => {
             let addr = o
                 .get("addr")
                 .ok_or_else(|| anyhow!("bench-net requires --addr HOST:PORT"))?;
-            let conns = get_usize(&o, "conns", 8)?;
-            let inflight = get_usize(&o, "inflight", 16)?;
-            let requests = get_usize(&o, "requests", 20_000)?;
+            // Valued flag (`--smoke true`): see the --ladder-runs note.
+            // Smoke mode shrinks the defaults so CI can gate on a full
+            // request/response/stats round-trip in seconds.
+            let smoke = o.get("smoke").map(String::as_str) == Some("true");
+            let conns = get_usize(&o, "conns", if smoke { 2 } else { 8 })?;
+            let inflight = get_usize(&o, "inflight", if smoke { 8 } else { 16 })?;
+            let requests = get_usize(&o, "requests", if smoke { 1_000 } else { 20_000 })?;
             let seed = get_usize(&o, "seed", 0xBE7)? as u64;
             // Valued flag (`--payload true`): see the --ladder-runs note.
             let kv = o.get("payload").map(String::as_str) == Some("true");

@@ -26,9 +26,10 @@
 //! resubmit on its own schedule — [`run_load`] does exactly that.
 
 use super::protocol::{
-    self, code, encode_merge_request, encode_merge_request_kv, Frame, FrameReader, ReadFrame,
-    MAX_K, MAX_LIST_LEN, MAX_REQUEST_BYTES, MODE_MERGE,
+    self, code, encode_merge_request, encode_merge_request_kv, encode_stats_request, Frame,
+    FrameReader, ReadFrame, MAX_K, MAX_LIST_LEN, MAX_REQUEST_BYTES, MODE_MERGE,
 };
+use crate::util::Json;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::VecDeque;
 use std::io::Write;
@@ -174,6 +175,14 @@ impl NetClient {
 
     /// Send one merge request without waiting (pipelined submission).
     pub fn submit(&mut self, lists: &[Vec<u32>]) -> Result<()> {
+        self.submit_traced(lists, 0)
+    }
+
+    /// [`Self::submit`] with a v1.2 trace id (0 = untraced; the frame
+    /// stays byte-identical to v1). A nonzero id follows the request
+    /// through admission, batching, and execution server-side — pair it
+    /// with the server's `--trace-sample`/`--trace-file` exporter.
+    pub fn submit_traced(&mut self, lists: &[Vec<u32>], trace: u64) -> Result<()> {
         anyhow::ensure!(
             !lists.is_empty() && lists.len() <= MAX_K,
             "k = {} outside 1..={MAX_K}",
@@ -191,18 +200,30 @@ impl NetClient {
         // limit here too, so an oversized request is a clean local
         // error instead of a server-side Corrupt + connection close
         // that discards every other pipelined request.
-        let payload = 3 + 4 * lists.len() + 4 * lists.iter().map(Vec::len).sum::<usize>();
+        let trace_bytes = if trace != 0 { 8 } else { 0 };
+        let payload =
+            3 + trace_bytes + 4 * lists.len() + 4 * lists.iter().map(Vec::len).sum::<usize>();
         anyhow::ensure!(
             payload <= MAX_REQUEST_BYTES,
             "request payload {payload} bytes exceeds {MAX_REQUEST_BYTES}"
         );
-        encode_merge_request(MODE_MERGE, lists, &mut self.wbuf);
+        encode_merge_request(MODE_MERGE, trace, lists, &mut self.wbuf);
         self.write_wbuf(true, "sending merge request")
     }
 
     /// Send one v1.1 key-value merge request without waiting:
     /// `payloads` is the list-major column, one `u64` per key.
     pub fn submit_kv(&mut self, lists: &[Vec<u32>], payloads: &[u64]) -> Result<()> {
+        self.submit_kv_traced(lists, payloads, 0)
+    }
+
+    /// [`Self::submit_kv`] with a v1.2 trace id (0 = untraced).
+    pub fn submit_kv_traced(
+        &mut self,
+        lists: &[Vec<u32>],
+        payloads: &[u64],
+        trace: u64,
+    ) -> Result<()> {
         anyhow::ensure!(
             !lists.is_empty() && lists.len() <= MAX_K,
             "k = {} outside 1..={MAX_K}",
@@ -223,13 +244,31 @@ impl NetClient {
         }
         // Same local enforcement of the decoder's payload cap as
         // `submit` — KV keys cost 12 wire bytes each.
-        let payload = 3 + 4 * lists.len() + 12 * total;
+        let trace_bytes = if trace != 0 { 8 } else { 0 };
+        let payload = 3 + trace_bytes + 4 * lists.len() + 12 * total;
         anyhow::ensure!(
             payload <= MAX_REQUEST_BYTES,
             "request payload {payload} bytes exceeds {MAX_REQUEST_BYTES}"
         );
-        encode_merge_request_kv(MODE_MERGE, lists, payloads, &mut self.wbuf);
+        encode_merge_request_kv(MODE_MERGE, trace, lists, payloads, &mut self.wbuf);
         self.write_wbuf(true, "sending KV merge request")
+    }
+
+    /// Fetch the server's live stats document (v1.2 `Stats` frames).
+    /// Like [`Self::ping`], must not be interleaved with outstanding
+    /// merges — the reply arrives in their order. Returns the parsed
+    /// JSON; shape validation is [`crate::obs::expo::check_stats_doc`].
+    pub fn stats(&mut self) -> Result<Json> {
+        anyhow::ensure!(self.inflight == 0, "stats with {} merges in flight", self.inflight);
+        encode_stats_request(&mut self.wbuf);
+        self.write_wbuf(false, "sending stats request")?;
+        match self.read_reply() {
+            Ok(Frame::StatsResponse { json }) => {
+                Json::parse(&json).map_err(|e| anyhow!("unparsable stats document: {e}"))
+            }
+            Ok(other) => bail!("expected StatsResponse, got {other:?}"),
+            Err(e) => Err(e.into_anyhow().context("awaiting stats response")),
+        }
     }
 
     /// Receive the next in-order response. A server `Error` frame
@@ -450,15 +489,14 @@ impl LoadReport {
     }
 }
 
-/// Ceil-index percentile over an ascending slice (µs). The one
-/// definition shared by the load generator and `benches/net_serving.rs`
-/// so both report identically-defined p50/p99.
-pub fn percentile_us(sorted: &[f64], q: f64) -> f64 {
-    if sorted.is_empty() {
-        return 0.0;
-    }
-    let idx = ((sorted.len() as f64 * q).ceil() as usize).saturating_sub(1);
-    sorted[idx.min(sorted.len() - 1)]
+/// Percentile over latency samples (µs), routed through the shared
+/// obs histogram ([`crate::obs::hist`]): ceil-rank selection over
+/// log-linear buckets. The one percentile definition shared by the
+/// load generator, `benches/net_serving.rs`, the service metrics, and
+/// the stats wire endpoint — all four report identically-defined
+/// p50/p99. Samples need not be sorted.
+pub fn percentile_us(samples: &[f64], q: f64) -> f64 {
+    crate::obs::percentile_us(samples, q)
 }
 
 /// The bench-net workload: ragged 2-way requests shaped for the
@@ -660,7 +698,6 @@ pub fn run_load(
             }
         }
     }
-    lat_us.sort_by(f64::total_cmp);
     Ok(LoadReport {
         connections,
         inflight,

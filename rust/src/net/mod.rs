@@ -33,6 +33,6 @@ pub mod server;
 pub use client::{run_load, LoadReport, NetClient, NetMerge, RetryPolicy, ServerError};
 pub use protocol::{
     Frame, FrameReader, ReadFrame, MAX_FRAME_BYTES, MAX_K, MAX_LIST_LEN, MAX_REQUEST_BYTES,
-    PROTOCOL_VERSION,
+    MODE_FLAG_TRACE, PROTOCOL_VERSION,
 };
 pub use server::{NetServer, NetServerConfig};

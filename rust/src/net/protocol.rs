@@ -9,17 +9,20 @@
 //! body    := version:u8 type:u8 payload
 //!
 //! payload by type:
-//!   1 MergeRequest   mode:u8 k:u16le len[0]:u32le .. len[k-1]:u32le
+//!   1 MergeRequest   mode:u8 [trace:u64le] k:u16le len[0]:u32le .. len[k-1]:u32le
 //!                    keys of list 0 .. keys of list k-1   (each key u32le)
 //!   2 MergeResponse  served_by_len:u8 served_by:bytes n:u32le key*n:u32le
 //!   3 Error          code:u8 msg_len:u16le msg:bytes (UTF-8)
 //!   4 Ping           (empty)
 //!   5 Pong           (empty)
-//!   6 MergeRequestKV  (v1.1) mode:u8 k:u16le len[0..k):u32le
+//!   6 MergeRequestKV  (v1.1) mode:u8 [trace:u64le] k:u16le len[0..k):u32le
 //!                    keys of list 0 .. keys of list k-1   (each key u32le)
 //!                    payload*Σlen: u64le   (list-major, one per key)
 //!   7 MergeResponseKV (v1.1) served_by_len:u8 served_by:bytes
 //!                    n:u32le key*n:u32le payload*n:u64le
+//!   8 StatsRequest   (v1.2) (empty)
+//!   9 StatsResponse  (v1.2) json_len:u32le json:bytes (UTF-8, see
+//!                    crate::obs::expo for the document grammar)
 //! ```
 //!
 //! Frame types 6/7 are the **v1.1** key-value extension. The version
@@ -28,6 +31,16 @@
 //! 6 with a `MALFORMED` error frame (unknown type) without dropping
 //! the connection — exactly the forward-compatibility the `Malformed`
 //! decode semantics were designed for.
+//!
+//! **v1.2** extends the same way twice over. (a) Request frames carry
+//! an *optional* trace id: bit 7 of the mode byte
+//! ([`MODE_FLAG_TRACE`]) says a `u64le` trace id follows the mode
+//! byte; an untraced request (trace 0) never sets the bit, so every
+//! v1/v1.1 frame is still byte-identical and an old server never sees
+//! the flag from an old client. (b) The `Stats` request/response pair
+//! (types 8/9) serves the live metrics document — answered even when
+//! the server is shedding merge load (an operator inspecting an
+//! overloaded server is exactly the point).
 //!
 //! All integers are little-endian — the same byte order as the extsort
 //! spill format ([`crate::stream::source::FileRunStream`]), so a spill
@@ -83,9 +96,18 @@ pub const MAX_LIST_LEN: usize = 1 << 20;
 /// Longest error message the encoder will put on the wire.
 pub const MAX_ERROR_MSG: usize = 512;
 
-/// Request mode byte: a plain k-way merge. Other values are reserved;
-/// the server answers them with [`code::UNSUPPORTED`].
+/// Request mode byte: a plain k-way merge. Other *mode* values (bits
+/// 0..=6) are reserved; the server answers them with
+/// [`code::UNSUPPORTED`].
 pub const MODE_MERGE: u8 = 0;
+
+/// v1.2 mode-byte flag: a `u64le` trace id follows the mode byte.
+/// Trace 0 ("untraced") always encodes *without* the flag, keeping
+/// pre-v1.2 request frames byte-identical.
+pub const MODE_FLAG_TRACE: u8 = 0x80;
+
+/// Cap on a StatsResponse JSON body.
+pub const MAX_STATS_BYTES: usize = 1 << 20;
 
 /// Frame type bytes.
 const TYPE_MERGE_REQUEST: u8 = 1;
@@ -95,6 +117,8 @@ const TYPE_PING: u8 = 4;
 const TYPE_PONG: u8 = 5;
 const TYPE_MERGE_REQUEST_KV: u8 = 6;
 const TYPE_MERGE_RESPONSE_KV: u8 = 7;
+const TYPE_STATS_REQUEST: u8 = 8;
+const TYPE_STATS_RESPONSE: u8 = 9;
 
 /// Error frame codes.
 pub mod code {
@@ -116,16 +140,22 @@ pub mod code {
 /// One decoded frame.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Frame {
-    MergeRequest { mode: u8, lists: Vec<Vec<u32>> },
+    /// `trace` is the v1.2 optional trace id (0 = untraced; wire
+    /// presence governed by [`MODE_FLAG_TRACE`]).
+    MergeRequest { mode: u8, trace: u64, lists: Vec<Vec<u32>> },
     MergeResponse { served_by: String, merged: Vec<u32> },
     Error { code: u8, message: String },
     Ping,
     Pong,
     /// v1.1 key-value merge request: `payloads` is the list-major
     /// column, exactly one `u64` per key across all lists.
-    MergeRequestKV { mode: u8, lists: Vec<Vec<u32>>, payloads: Vec<u64> },
+    MergeRequestKV { mode: u8, trace: u64, lists: Vec<Vec<u32>>, payloads: Vec<u64> },
     /// v1.1 key-value response: `payloads[t]` rides with `merged[t]`.
     MergeResponseKV { served_by: String, merged: Vec<u32>, payloads: Vec<u64> },
+    /// v1.2 stats poll (empty payload; never shed).
+    StatsRequest,
+    /// v1.2 stats document (JSON, grammar in `crate::obs::expo`).
+    StatsResponse { json: String },
 }
 
 /// Outcome of one [`FrameReader::read_frame`] call.
@@ -253,7 +283,7 @@ fn decode_body(body: &[u8]) -> Result<Frame, String> {
                     c.b.len()
                 ));
             }
-            let mode = c.u8("mode")?;
+            let (mode, trace) = c.mode_and_trace()?;
             let k = c.u16("k")? as usize;
             if k == 0 || k > MAX_K {
                 return Err(format!("k = {k} outside 1..={MAX_K}"));
@@ -279,7 +309,7 @@ fn decode_body(body: &[u8]) -> Result<Frame, String> {
                 lists.push(list);
             }
             c.done()?;
-            Ok(Frame::MergeRequest { mode, lists })
+            Ok(Frame::MergeRequest { mode, trace, lists })
         }
         TYPE_MERGE_RESPONSE => {
             let label_len = c.u8("served_by length")? as usize;
@@ -327,7 +357,7 @@ fn decode_body(body: &[u8]) -> Result<Frame, String> {
                     c.b.len()
                 ));
             }
-            let mode = c.u8("mode")?;
+            let (mode, trace) = c.mode_and_trace()?;
             let k = c.u16("k")? as usize;
             if k == 0 || k > MAX_K {
                 return Err(format!("k = {k} outside 1..={MAX_K}"));
@@ -360,7 +390,7 @@ fn decode_body(body: &[u8]) -> Result<Frame, String> {
                 .map(|b| u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
                 .collect();
             c.done()?;
-            Ok(Frame::MergeRequestKV { mode, lists, payloads })
+            Ok(Frame::MergeRequestKV { mode, trace, lists, payloads })
         }
         TYPE_MERGE_RESPONSE_KV => {
             let label_len = c.u8("served_by length")? as usize;
@@ -384,6 +414,22 @@ fn decode_body(body: &[u8]) -> Result<Frame, String> {
                 .collect();
             c.done()?;
             Ok(Frame::MergeResponseKV { served_by, merged, payloads })
+        }
+        TYPE_STATS_REQUEST => {
+            c.done()?;
+            Ok(Frame::StatsRequest)
+        }
+        TYPE_STATS_RESPONSE => {
+            let n = c.u32("stats length")? as usize;
+            if n > MAX_STATS_BYTES {
+                return Err(format!("stats body {n} exceeds {MAX_STATS_BYTES} bytes"));
+            }
+            let raw = c.bytes(n, "stats body")?;
+            let json = std::str::from_utf8(raw)
+                .map_err(|_| "stats body is not UTF-8".to_string())?
+                .to_string();
+            c.done()?;
+            Ok(Frame::StatsResponse { json })
         }
         other => Err(format!("unknown frame type {other}")),
     }
@@ -420,6 +466,20 @@ impl<'a> Cur<'a> {
         Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
+    fn u64(&mut self, what: &str) -> Result<u64, String> {
+        let b = self.bytes(8, what)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    /// Read a request mode byte plus the optional v1.2 trace id
+    /// ([`MODE_FLAG_TRACE`]); returns the mode with the flag stripped.
+    fn mode_and_trace(&mut self) -> Result<(u8, u64), String> {
+        let raw = self.u8("mode")?;
+        let trace =
+            if raw & MODE_FLAG_TRACE != 0 { self.u64("trace id")? } else { 0 };
+        Ok((raw & !MODE_FLAG_TRACE, trace))
+    }
+
     fn done(&self) -> Result<(), String> {
         if self.i == self.b.len() {
             Ok(())
@@ -453,14 +513,27 @@ fn finish(out: &mut Vec<u8>) {
     out[..4].copy_from_slice(&len.to_le_bytes());
 }
 
+/// Push the mode byte plus the optional trace id: the flag bit and the
+/// eight id bytes appear only for a nonzero trace, so an untraced
+/// request encodes byte-identically to its pre-v1.2 form.
+fn push_mode_trace(out: &mut Vec<u8>, mode: u8, trace: u64) {
+    debug_assert_eq!(mode & MODE_FLAG_TRACE, 0, "mode collides with the trace flag");
+    if trace != 0 {
+        out.push(mode | MODE_FLAG_TRACE);
+        out.extend_from_slice(&trace.to_le_bytes());
+    } else {
+        out.push(mode);
+    }
+}
+
 /// Encode a merge request directly from borrowed lists — the client's
 /// hot path, which never builds a [`Frame`] (that would clone every
 /// key). `out` is cleared and refilled, so a reused buffer allocates
-/// nothing in steady state.
-pub fn encode_merge_request(mode: u8, lists: &[Vec<u32>], out: &mut Vec<u8>) {
+/// nothing in steady state. `trace` 0 means untraced.
+pub fn encode_merge_request(mode: u8, trace: u64, lists: &[Vec<u32>], out: &mut Vec<u8>) {
     debug_assert!(!lists.is_empty() && lists.len() <= MAX_K);
     begin(out, TYPE_MERGE_REQUEST);
-    out.push(mode);
+    push_mode_trace(out, mode, trace);
     out.extend_from_slice(&(lists.len() as u16).to_le_bytes());
     for l in lists {
         debug_assert!(l.len() <= MAX_LIST_LEN);
@@ -491,11 +564,17 @@ pub fn encode_merge_response(served_by: &str, merged: &[u32], out: &mut Vec<u8>)
 /// Encode a v1.1 key-value merge request from borrowed columns —
 /// `payloads` list-major, one `u64` per key (debug-asserted; the
 /// decoder enforces it on the wire).
-pub fn encode_merge_request_kv(mode: u8, lists: &[Vec<u32>], payloads: &[u64], out: &mut Vec<u8>) {
+pub fn encode_merge_request_kv(
+    mode: u8,
+    trace: u64,
+    lists: &[Vec<u32>],
+    payloads: &[u64],
+    out: &mut Vec<u8>,
+) {
     debug_assert!(!lists.is_empty() && lists.len() <= MAX_K);
     debug_assert_eq!(payloads.len(), lists.iter().map(Vec::len).sum::<usize>());
     begin(out, TYPE_MERGE_REQUEST_KV);
-    out.push(mode);
+    push_mode_trace(out, mode, trace);
     out.extend_from_slice(&(lists.len() as u16).to_le_bytes());
     for l in lists {
         debug_assert!(l.len() <= MAX_LIST_LEN);
@@ -534,6 +613,23 @@ pub fn encode_merge_response_kv(
     finish(out);
 }
 
+/// Encode a v1.2 stats poll (empty payload).
+pub fn encode_stats_request(out: &mut Vec<u8>) {
+    begin(out, TYPE_STATS_REQUEST);
+    finish(out);
+}
+
+/// Encode a v1.2 stats response. The JSON body is clamped to
+/// [`MAX_STATS_BYTES`] on a char boundary — a truncated document fails
+/// the receiver's parse rather than desyncing the stream.
+pub fn encode_stats_response(json: &str, out: &mut Vec<u8>) {
+    let body = clamp_str(json, MAX_STATS_BYTES);
+    begin(out, TYPE_STATS_RESPONSE);
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(body.as_bytes());
+    finish(out);
+}
+
 /// Encode an error frame (message clamped to [`MAX_ERROR_MSG`]).
 pub fn encode_error(code: u8, message: &str, out: &mut Vec<u8>) {
     let msg = clamp_str(message, MAX_ERROR_MSG);
@@ -548,13 +644,15 @@ pub fn encode_error(code: u8, message: &str, out: &mut Vec<u8>) {
 /// paths use the borrowing encoders above).
 pub fn encode_frame(f: &Frame, out: &mut Vec<u8>) {
     match f {
-        Frame::MergeRequest { mode, lists } => encode_merge_request(*mode, lists, out),
+        Frame::MergeRequest { mode, trace, lists } => {
+            encode_merge_request(*mode, *trace, lists, out)
+        }
         Frame::MergeResponse { served_by, merged } => {
             encode_merge_response(served_by, merged, out)
         }
         Frame::Error { code, message } => encode_error(*code, message, out),
-        Frame::MergeRequestKV { mode, lists, payloads } => {
-            encode_merge_request_kv(*mode, lists, payloads, out)
+        Frame::MergeRequestKV { mode, trace, lists, payloads } => {
+            encode_merge_request_kv(*mode, *trace, lists, payloads, out)
         }
         Frame::MergeResponseKV { served_by, merged, payloads } => {
             encode_merge_response_kv(served_by, merged, payloads, out)
@@ -567,6 +665,8 @@ pub fn encode_frame(f: &Frame, out: &mut Vec<u8>) {
             begin(out, TYPE_PONG);
             finish(out);
         }
+        Frame::StatsRequest => encode_stats_request(out),
+        Frame::StatsResponse { json } => encode_stats_response(json, out),
     }
 }
 
@@ -598,8 +698,13 @@ mod tests {
     #[test]
     fn roundtrip_every_frame_type() {
         for f in [
-            Frame::MergeRequest { mode: MODE_MERGE, lists: vec![vec![1, 2, 3], vec![2, 9]] },
-            Frame::MergeRequest { mode: 7, lists: vec![vec![], vec![u32::MAX], vec![0]] },
+            Frame::MergeRequest {
+                mode: MODE_MERGE,
+                trace: 0,
+                lists: vec![vec![1, 2, 3], vec![2, 9]],
+            },
+            Frame::MergeRequest { mode: 7, trace: 0, lists: vec![vec![], vec![u32::MAX], vec![0]] },
+            Frame::MergeRequest { mode: MODE_MERGE, trace: u64::MAX, lists: vec![vec![1]] },
             Frame::MergeResponse { served_by: "loms2_up32_dn32_b256".into(), merged: vec![1, 2] },
             Frame::MergeResponse { served_by: String::new(), merged: vec![] },
             Frame::Error { code: code::REJECTED, message: "list 0 is not sorted".into() },
@@ -607,11 +712,13 @@ mod tests {
             Frame::Pong,
             Frame::MergeRequestKV {
                 mode: MODE_MERGE,
+                trace: 0,
                 lists: vec![vec![1, 2, 3], vec![2, 9]],
                 payloads: vec![10, 20, 30, 40, 50],
             },
             Frame::MergeRequestKV {
                 mode: MODE_MERGE,
+                trace: 0xDEAD_BEEF,
                 lists: vec![vec![], vec![7]],
                 payloads: vec![u64::MAX],
             },
@@ -621,6 +728,9 @@ mod tests {
                 payloads: vec![10, 30, 40],
             },
             Frame::MergeResponseKV { served_by: String::new(), merged: vec![], payloads: vec![] },
+            Frame::StatsRequest,
+            Frame::StatsResponse { json: "{\"requests\":0}".into() },
+            Frame::StatsResponse { json: String::new() },
         ] {
             assert_eq!(roundtrip(&f), f);
         }
@@ -628,9 +738,11 @@ mod tests {
 
     #[test]
     fn v1_frames_are_byte_identical_under_v1_1() {
-        // The KV extension must not move a single v1 byte: same
-        // version byte, same type bytes, same layouts.
-        let f = Frame::MergeRequest { mode: MODE_MERGE, lists: vec![vec![3, 5], vec![4]] };
+        // Neither the KV extension nor the v1.2 trace flag may move a
+        // single v1 byte: same version byte, same type bytes, same
+        // layouts, and an untraced request never carries the flag.
+        let f =
+            Frame::MergeRequest { mode: MODE_MERGE, trace: 0, lists: vec![vec![3, 5], vec![4]] };
         let mut bytes = Vec::new();
         encode_frame(&f, &mut bytes);
         assert_eq!(
@@ -647,12 +759,29 @@ mod tests {
     }
 
     #[test]
+    fn traced_request_carries_the_id_and_strips_the_flag() {
+        let f = Frame::MergeRequest {
+            mode: MODE_MERGE,
+            trace: 0x0102_0304_0506_0708,
+            lists: vec![vec![3, 5], vec![4]],
+        };
+        let mut bytes = Vec::new();
+        encode_frame(&f, &mut bytes);
+        // Exactly 8 bytes longer than the untraced frame, flag set in
+        // the mode byte, id little-endian right after it.
+        assert_eq!(bytes[4 + 2], MODE_MERGE | MODE_FLAG_TRACE);
+        assert_eq!(&bytes[4 + 3..4 + 11], &[8, 7, 6, 5, 4, 3, 2, 1]);
+        assert_eq!(roundtrip(&f), f); // decode strips the flag bit
+    }
+
+    #[test]
     fn kv_payload_width_is_enforced_by_the_wire() {
         // A KV request whose payload column is short or long fails
         // decode (truncated read or trailing bytes) — width mismatches
         // cannot reach the service from the wire.
         let good = Frame::MergeRequestKV {
             mode: MODE_MERGE,
+            trace: 0,
             lists: vec![vec![1, 2], vec![3]],
             payloads: vec![10, 20, 30],
         };
@@ -677,7 +806,11 @@ mod tests {
 
     #[test]
     fn frames_split_across_reads_reassemble() {
-        let f = Frame::MergeRequest { mode: MODE_MERGE, lists: vec![vec![5; 100], vec![7; 33]] };
+        let f = Frame::MergeRequest {
+            mode: MODE_MERGE,
+            trace: 0,
+            lists: vec![vec![5; 100], vec![7; 33]],
+        };
         let mut bytes = Vec::new();
         encode_frame(&f, &mut bytes);
         // A reader that hands out one byte at a time.

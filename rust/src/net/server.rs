@@ -42,11 +42,12 @@
 //! service down — in-flight batches are never dropped.
 
 use super::protocol::{
-    self, code, encode_error, encode_merge_response, encode_merge_response_kv, Frame, FrameReader,
-    ReadFrame, MODE_MERGE,
+    self, code, encode_error, encode_merge_response, encode_merge_response_kv,
+    encode_stats_response, Frame, FrameReader, ReadFrame, MODE_MERGE,
 };
 use crate::coordinator::request::MergeResponse;
 use crate::coordinator::{Metrics, MergeService};
+use crate::obs::expo;
 use crate::util::fault::{self, Site};
 use anyhow::{Context, Result};
 use std::io::{self, Write};
@@ -239,7 +240,23 @@ enum Reply {
     /// response channel (closed channel = rejected).
     Merge(mpsc::Receiver<MergeResponse>),
     Pong,
+    /// A v1.2 stats document, already rendered to JSON by the reader
+    /// (snapshotting under the reader keeps the writer non-blocking).
+    Stats(String),
     Err { code: u8, message: String },
+}
+
+/// v1.2 trace id for an inbound merge: honor the client's id, else
+/// mint one at the edge — but only while sampling is on, so the
+/// untraced hot path pays nothing extra.
+fn net_trace(metrics: &Metrics, wire: u64) -> u64 {
+    if wire != 0 {
+        wire
+    } else if metrics.tracer().sample() != 0 {
+        metrics.tracer().mint()
+    } else {
+        0
+    }
 }
 
 /// Serve one connection to completion (peer close, fatal frame, or
@@ -331,17 +348,30 @@ fn serve_conn(
                                 message: "server overloaded, retry later".into(),
                             }
                         }
+                        // Stats are answered even over the shed
+                        // watermark — inspecting an overloaded server
+                        // is the poll's whole point. Rendering under
+                        // the reader keeps the writer non-blocking.
+                        Frame::StatsRequest => {
+                            let doc = expo::stats_json(&metrics.snapshot(), service.pending());
+                            Reply::Stats(doc.to_string())
+                        }
                         // The decoded lists go into admission as-is —
                         // no re-copy between socket and service.
-                        Frame::MergeRequest { lists, .. } => Reply::Merge(service.submit(lists)),
+                        Frame::MergeRequest { trace, lists, .. } => {
+                            let trace = net_trace(metrics, trace);
+                            Reply::Merge(service.submit_traced(lists, trace))
+                        }
                         // v1.1: the decoded payload column rides into
                         // admission beside the keys, same single copy.
-                        Frame::MergeRequestKV { lists, payloads, .. } => {
-                            Reply::Merge(service.submit_kv(lists, payloads))
+                        Frame::MergeRequestKV { trace, lists, payloads, .. } => {
+                            let trace = net_trace(metrics, trace);
+                            Reply::Merge(service.submit_kv_traced(lists, payloads, trace))
                         }
                         Frame::MergeResponse { .. }
                         | Frame::MergeResponseKV { .. }
                         | Frame::Error { .. }
+                        | Frame::StatsResponse { .. }
                         | Frame::Pong => Reply::Err {
                             code: code::UNSUPPORTED,
                             message: "client-only frame type sent to server".into(),
@@ -370,6 +400,10 @@ fn writer_loop(mut w: TcpStream, rx: mpsc::Receiver<Reply>, metrics: &Metrics) {
             Reply::Pong => {
                 metrics.on_net_response();
                 protocol::encode_frame(&Frame::Pong, &mut buf);
+            }
+            Reply::Stats(json) => {
+                metrics.on_net_response();
+                encode_stats_response(&json, &mut buf);
             }
             Reply::Err { code, message } => {
                 metrics.on_net_error();

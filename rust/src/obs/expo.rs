@@ -1,0 +1,245 @@
+//! The stats export surface: one JSON document shape shared by the
+//! `Stats` protocol frame (`loms stats --addr`), the periodic
+//! `--metrics-interval` JSONL emitter in `loms serve`, and the
+//! integration tests.
+//!
+//! Grammar (all latency objects are
+//! [`HistStats::to_json`](crate::obs::hist::HistStats::to_json):
+//! `{count, mean_us, p50_us, p90_us, p99_us, p999_us, max_us}`):
+//!
+//! ```text
+//! { "requests": n, "responses": n, "batches": n, "stage_batches": n,
+//!   "rows_real": n, "rows_padded": n, "software_served": n,
+//!   "rejected": n, "pending": n,
+//!   "latency": <hist>,
+//!   "stages": { "queue_wait": <hist>, "assemble": <hist>,
+//!               "execute": <hist>, "respond": <hist> },
+//!   "artifacts": { "<name>": { "batches": n, "rows": n,
+//!                              "execute": <hist> }, ... },
+//!   "net": { "connections": n, "frames_in": n, "decode_errors": n,
+//!            "responses": n, "errors": n },
+//!   "faults": { "faults_injected": n, "corrupt_detected": n,
+//!               "retries": n, "sheds": n },
+//!   "extsort": { "run_form_secs": f, "merge_secs": f,
+//!                "io_wait_secs": f },
+//!   "trace": { "spans_dropped": n } }
+//! ```
+//!
+//! Key names mirror the [`Snapshot`] field names so a grep against the
+//! wire document and a read of the code land in the same place.
+
+use crate::coordinator::Snapshot;
+use crate::util::Json;
+use std::collections::BTreeMap;
+
+/// Build the stats document from a service snapshot plus the live
+/// queue-depth gauge (`MergeService::pending`, which a snapshot cannot
+/// carry — it is computed from the submission counter).
+pub fn stats_json(snap: &Snapshot, pending: u64) -> Json {
+    let artifacts: BTreeMap<String, Json> = snap
+        .artifacts
+        .iter()
+        .map(|a| {
+            (
+                a.name.clone(),
+                Json::obj(vec![
+                    ("batches", Json::int(a.batches as i64)),
+                    ("rows", Json::int(a.rows as i64)),
+                    ("execute", a.execute.to_json()),
+                ]),
+            )
+        })
+        .collect();
+    Json::obj(vec![
+        ("requests", Json::int(snap.requests as i64)),
+        ("responses", Json::int(snap.responses as i64)),
+        ("batches", Json::int(snap.batches as i64)),
+        ("stage_batches", Json::int(snap.stage_batches as i64)),
+        ("rows_real", Json::int(snap.rows_real as i64)),
+        ("rows_padded", Json::int(snap.rows_padded as i64)),
+        ("software_served", Json::int(snap.software_served as i64)),
+        ("rejected", Json::int(snap.rejected as i64)),
+        ("pending", Json::int(pending as i64)),
+        ("latency", snap.latency.to_json()),
+        (
+            "stages",
+            Json::obj(vec![
+                ("queue_wait", snap.queue_wait.to_json()),
+                ("assemble", snap.assemble.to_json()),
+                ("execute", snap.execute.to_json()),
+                ("respond", snap.respond.to_json()),
+            ]),
+        ),
+        ("artifacts", Json::Obj(artifacts)),
+        (
+            "net",
+            Json::obj(vec![
+                ("connections", Json::int(snap.net_connections as i64)),
+                ("frames_in", Json::int(snap.net_frames_in as i64)),
+                ("decode_errors", Json::int(snap.net_decode_errors as i64)),
+                ("responses", Json::int(snap.net_responses as i64)),
+                ("errors", Json::int(snap.net_errors as i64)),
+            ]),
+        ),
+        (
+            "faults",
+            Json::obj(vec![
+                ("faults_injected", Json::int(snap.faults_injected as i64)),
+                ("corrupt_detected", Json::int(snap.corrupt_detected as i64)),
+                ("retries", Json::int(snap.retries as i64)),
+                ("sheds", Json::int(snap.sheds as i64)),
+            ]),
+        ),
+        (
+            "extsort",
+            Json::obj(vec![
+                ("run_form_secs", Json::Num(snap.extsort_run_form_secs)),
+                ("merge_secs", Json::Num(snap.extsort_merge_secs)),
+                ("io_wait_secs", Json::Num(snap.extsort_io_wait_secs)),
+            ]),
+        ),
+        ("trace", Json::obj(vec![("spans_dropped", Json::int(snap.spans_dropped as i64))])),
+    ])
+}
+
+/// Validate a stats document's required shape — the contract the CI
+/// smoke job and the `obs` integration suite hold the live server to.
+/// Returns the first missing/ill-typed path.
+pub fn check_stats_doc(doc: &Json) -> Result<(), String> {
+    for key in [
+        "requests",
+        "responses",
+        "batches",
+        "stage_batches",
+        "rejected",
+        "pending",
+    ] {
+        doc.get(key)
+            .and_then(Json::as_i64)
+            .ok_or_else(|| format!("missing integer key {key:?}"))?;
+    }
+    check_hist(doc.get("latency"), "latency")?;
+    let stages = doc.get("stages").ok_or("missing \"stages\"")?;
+    for key in ["queue_wait", "assemble", "execute", "respond"] {
+        check_hist(stages.get(key), &format!("stages.{key}"))?;
+    }
+    let artifacts = match doc.get("artifacts") {
+        Some(Json::Obj(m)) => m,
+        _ => return Err("missing object key \"artifacts\"".into()),
+    };
+    for (name, a) in artifacts {
+        for key in ["batches", "rows"] {
+            a.get(key)
+                .and_then(Json::as_i64)
+                .ok_or_else(|| format!("artifact {name:?}: missing {key:?}"))?;
+        }
+        check_hist(a.get("execute"), &format!("artifacts.{name}.execute"))?;
+    }
+    let faults = doc.get("faults").ok_or("missing \"faults\"")?;
+    for key in ["faults_injected", "corrupt_detected", "retries", "sheds"] {
+        faults
+            .get(key)
+            .and_then(Json::as_i64)
+            .ok_or_else(|| format!("missing integer key faults.{key}"))?;
+    }
+    let net = doc.get("net").ok_or("missing \"net\"")?;
+    for key in ["connections", "frames_in", "decode_errors", "responses", "errors"] {
+        net.get(key)
+            .and_then(Json::as_i64)
+            .ok_or_else(|| format!("missing integer key net.{key}"))?;
+    }
+    let ext = doc.get("extsort").ok_or("missing \"extsort\"")?;
+    for key in ["run_form_secs", "merge_secs", "io_wait_secs"] {
+        ext.get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("missing number key extsort.{key}"))?;
+    }
+    Ok(())
+}
+
+fn check_hist(h: Option<&Json>, path: &str) -> Result<(), String> {
+    let h = h.ok_or_else(|| format!("missing histogram {path:?}"))?;
+    for key in ["count", "p50_us", "p90_us", "p99_us", "p999_us", "max_us"] {
+        h.get(key)
+            .and_then(Json::as_i64)
+            .ok_or_else(|| format!("histogram {path:?}: missing {key:?}"))?;
+    }
+    h.get("mean_us")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("histogram {path:?}: missing \"mean_us\""))?;
+    Ok(())
+}
+
+/// Round-trip helper for the wire path: parse a received stats frame
+/// body and validate its shape in one step.
+pub fn parse_stats_doc(body: &str) -> Result<Json, String> {
+    let doc = Json::parse(body)?;
+    check_stats_doc(&doc)?;
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{ArtifactSnapshot, Metrics};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn live_snapshot_produces_a_valid_doc() {
+        let m = Metrics::new();
+        m.on_request();
+        m.on_response(Duration::from_micros(120));
+        m.on_batch(1, 0);
+        m.on_batch_stages(
+            Duration::from_micros(50),
+            Duration::from_micros(5),
+            Duration::from_micros(60),
+            Duration::from_micros(5),
+        );
+        let name: Arc<str> = "loms2_up32_dn32_b256".into();
+        m.on_artifact_batch(&name, 1, Duration::from_micros(60));
+        m.on_extsort_clocks(1.0, 0.5, 0.25);
+        let doc = stats_json(&m.snapshot(), 3);
+        check_stats_doc(&doc).unwrap();
+        // Wire round-trip preserves validity.
+        let doc2 = parse_stats_doc(&doc.to_string()).unwrap();
+        assert_eq!(doc2.get("pending").unwrap().as_i64(), Some(3));
+        let art = doc2.get("artifacts").unwrap().get("loms2_up32_dn32_b256").unwrap();
+        assert_eq!(art.get("batches").unwrap().as_i64(), Some(1));
+        assert_eq!(
+            art.get("execute").unwrap().get("p50_us").unwrap().as_i64(),
+            Some(60)
+        );
+        assert_eq!(
+            doc2.get("extsort").unwrap().get("run_form_secs").unwrap().as_f64(),
+            Some(1.0)
+        );
+    }
+
+    #[test]
+    fn empty_snapshot_is_still_well_formed() {
+        let doc = stats_json(&Metrics::new().snapshot(), 0);
+        check_stats_doc(&doc).unwrap();
+    }
+
+    #[test]
+    fn checker_names_the_missing_key() {
+        let doc = Json::obj(vec![("requests", Json::int(1))]);
+        let err = check_stats_doc(&doc).unwrap_err();
+        assert!(err.contains("responses"), "{err}");
+        // A doc with a malformed artifact entry is rejected too.
+        let mut snap = Metrics::new().snapshot();
+        snap.artifacts.push(ArtifactSnapshot { name: "x".into(), ..Default::default() });
+        let mut doc = stats_json(&snap, 0);
+        if let Json::Obj(m) = &mut doc {
+            if let Some(Json::Obj(arts)) = m.get_mut("artifacts") {
+                if let Some(Json::Obj(a)) = arts.get_mut("x") {
+                    a.remove("execute");
+                }
+            }
+        }
+        let err = check_stats_doc(&doc).unwrap_err();
+        assert!(err.contains("execute"), "{err}");
+    }
+}

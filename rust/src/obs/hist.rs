@@ -1,0 +1,335 @@
+//! Lock-light log-linear latency histogram — the one percentile
+//! definition for the whole stack.
+//!
+//! Values are microseconds in a fixed HDR-style log-linear layout:
+//! unit-width buckets below [`SUB`], then [`SUB`] sub-buckets per
+//! power-of-two octave (4 significant bits ⇒ ≤ 1/16 relative bucket
+//! width) up to ~2^37 µs (~38 hours); anything larger clamps into the
+//! top bucket. Memory is fixed ([`N_BUCKETS`] counters, ~4 KiB), so a
+//! histogram can sit on every artifact and stage of a server and be
+//! merged, snapshotted, and shipped over the stats frame at any time.
+//!
+//! Recording is a handful of `Relaxed` atomic adds — no lock, no
+//! allocation — cheap enough to leave on in production (the
+//! `service_pipeline` bench guards the obs-on vs obs-off delta).
+//! Reads ([`Hist::snapshot`], [`Hist::percentile`]) copy the counters
+//! once and compute from the copy, so a snapshot taken while other
+//! threads record is internally consistent with *some* interleaving of
+//! the concurrent records.
+//!
+//! Percentile definition (everywhere: `coordinator/metrics.rs`,
+//! `net/client.rs`, the benches, the stats frame): rank
+//! `ceil(q · count)` (clamped to `[1, count]`) over the recorded
+//! multiset, reported as the covering bucket's **last** value, capped
+//! at the exact recorded maximum. Unit buckets report exactly; wider
+//! buckets over-report by at most 1/16 — never under.
+
+use crate::util::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Significant bits per octave (sub-bucket resolution).
+const SUB_BITS: usize = 4;
+/// Sub-buckets per octave; also the width of the unit-bucket prefix.
+const SUB: usize = 1 << SUB_BITS;
+/// Log-linear octaves after the unit prefix (top octave starts at
+/// `SUB << (TIERS - 1)` = 2^36 µs).
+const TIERS: usize = 33;
+/// Total bucket count.
+pub const N_BUCKETS: usize = SUB + SUB * TIERS;
+
+/// Bucket index for a microsecond value (total function — large values
+/// clamp into the top bucket).
+fn bucket_index(us: u64) -> usize {
+    if us < SUB as u64 {
+        return us as usize;
+    }
+    let top = 63 - us.leading_zeros() as usize; // >= SUB_BITS
+    let g = top - SUB_BITS;
+    if g >= TIERS {
+        return N_BUCKETS - 1;
+    }
+    let sub = ((us >> g) & (SUB as u64 - 1)) as usize;
+    SUB + g * SUB + sub
+}
+
+/// Smallest value mapping into bucket `i`.
+fn bucket_floor(i: usize) -> u64 {
+    if i < SUB {
+        i as u64
+    } else {
+        let g = (i - SUB) / SUB;
+        ((SUB + (i - SUB) % SUB) as u64) << g
+    }
+}
+
+/// Largest value mapping into bucket `i` (the percentile
+/// representative, before the exact-max cap).
+fn bucket_last(i: usize) -> u64 {
+    if i < SUB {
+        i as u64
+    } else {
+        bucket_floor(i) + (1u64 << ((i - SUB) / SUB)) - 1
+    }
+}
+
+/// Microseconds from a wall duration, rounded half-up (so a 1.5 µs
+/// stage records as 2, and sub-microsecond work still lands in bucket
+/// 0/1 rather than vanishing).
+pub fn us_from_duration(d: Duration) -> u64 {
+    ((d.as_nanos() + 500) / 1_000) as u64
+}
+
+/// Microseconds from an `f64` sample (the bench/client sample shape),
+/// rounded to nearest — the same quantization as [`us_from_duration`]
+/// so histograms built from either agree.
+pub fn us_from_f64(us: f64) -> u64 {
+    if us <= 0.0 {
+        0
+    } else {
+        us.round() as u64
+    }
+}
+
+/// A mergeable fixed-memory log-linear histogram of microsecond values.
+pub struct Hist {
+    counts: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist::new()
+    }
+}
+
+impl std::fmt::Debug for Hist {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.snapshot();
+        write!(f, "Hist({s:?})")
+    }
+}
+
+impl Hist {
+    pub fn new() -> Hist {
+        Hist {
+            counts: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one microsecond value (lock-free, `Relaxed` adds).
+    pub fn record(&self, us: u64) {
+        self.counts[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(us, Ordering::Relaxed);
+        self.max.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Record a wall duration (quantized by [`us_from_duration`]).
+    pub fn record_duration(&self, d: Duration) {
+        self.record(us_from_duration(d));
+    }
+
+    /// Fold `other`'s recorded values into `self` (bucket-exact: the
+    /// merged histogram is identical to one that recorded the union).
+    pub fn merge_from(&self, other: &Hist) {
+        for (dst, src) in self.counts.iter().zip(other.counts.iter()) {
+            let n = src.load(Ordering::Relaxed);
+            if n > 0 {
+                dst.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum.fetch_add(other.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max.fetch_max(other.max.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Total recorded values.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// One percentile (`q` in `[0, 1]`) under the shared definition.
+    pub fn percentile(&self, q: f64) -> u64 {
+        let counts: Vec<u64> = self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        percentile_of(&counts, self.max.load(Ordering::Relaxed), q)
+    }
+
+    /// Copy-once summary: count/sum/max plus the fixed percentile set.
+    pub fn snapshot(&self) -> HistStats {
+        let counts: Vec<u64> = self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let max = self.max.load(Ordering::Relaxed);
+        HistStats {
+            count: counts.iter().sum(),
+            sum_us: self.sum.load(Ordering::Relaxed),
+            max_us: max,
+            p50_us: percentile_of(&counts, max, 0.50),
+            p90_us: percentile_of(&counts, max, 0.90),
+            p99_us: percentile_of(&counts, max, 0.99),
+            p999_us: percentile_of(&counts, max, 0.999),
+        }
+    }
+}
+
+/// The shared percentile walk over a copied bucket array.
+fn percentile_of(counts: &[u64], max: u64, q: f64) -> u64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0;
+    }
+    let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+    let mut acc = 0u64;
+    for (i, &c) in counts.iter().enumerate() {
+        acc += c;
+        if acc >= target {
+            return bucket_last(i).min(max);
+        }
+    }
+    max
+}
+
+/// `Copy` summary of a histogram — rides inside
+/// [`crate::stream::ExtSortStats`], [`crate::coordinator::Snapshot`],
+/// and the stats wire frame.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct HistStats {
+    pub count: u64,
+    pub sum_us: u64,
+    pub max_us: u64,
+    pub p50_us: u64,
+    pub p90_us: u64,
+    pub p99_us: u64,
+    pub p999_us: u64,
+}
+
+impl HistStats {
+    /// Mean of the recorded values in microseconds.
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    /// The stats-frame / JSONL object form.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::int(self.count as i64)),
+            ("mean_us", Json::Num(self.mean_us())),
+            ("p50_us", Json::int(self.p50_us as i64)),
+            ("p90_us", Json::int(self.p90_us as i64)),
+            ("p99_us", Json::int(self.p99_us as i64)),
+            ("p999_us", Json::int(self.p999_us as i64)),
+            ("max_us", Json::int(self.max_us as i64)),
+        ])
+    }
+}
+
+/// Percentile of raw `f64` microsecond samples through the shared
+/// histogram definition — what `net/client.rs` and the bench harnesses
+/// call, so wire-level and in-process percentiles agree bucket-exactly.
+pub fn percentile_us(samples: &[f64], q: f64) -> f64 {
+    let h = Hist::new();
+    for &s in samples {
+        h.record(us_from_f64(s));
+    }
+    h.percentile(q) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_layout_is_total_and_monotone() {
+        // Every index round-trips and bucket ranges tile the line.
+        let mut prev_last = None;
+        for i in 0..N_BUCKETS {
+            let (lo, hi) = (bucket_floor(i), bucket_last(i));
+            assert!(lo <= hi, "bucket {i}");
+            assert_eq!(bucket_index(lo), i, "floor of bucket {i}");
+            if i < N_BUCKETS - 1 {
+                assert_eq!(bucket_index(hi), i, "last of bucket {i}");
+            }
+            if let Some(p) = prev_last {
+                assert_eq!(lo, p + 1, "gap before bucket {i}");
+            }
+            prev_last = Some(hi);
+        }
+        // Out-of-range values clamp into the top bucket.
+        assert_eq!(bucket_index(u64::MAX), N_BUCKETS - 1);
+    }
+
+    #[test]
+    fn relative_error_is_bounded() {
+        // Any recorded value's representative over-reports by < 1/16
+        // and never under-reports.
+        for v in [0u64, 1, 15, 16, 17, 100, 1000, 12_345, 1 << 20, (1 << 36) - 1] {
+            let i = bucket_index(v);
+            assert!(bucket_floor(i) <= v && v <= bucket_last(i), "{v}");
+            assert!(bucket_last(i) as f64 <= v as f64 * (1.0 + 1.0 / 16.0) + 1.0, "{v}");
+        }
+    }
+
+    #[test]
+    fn single_value_percentiles_are_exact() {
+        let h = Hist::new();
+        h.record(100);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.percentile(q), 100);
+        }
+        let s = h.snapshot();
+        assert_eq!((s.count, s.sum_us, s.max_us, s.p50_us), (1, 100, 100, 100));
+    }
+
+    #[test]
+    fn empty_hist_is_all_zero() {
+        let h = Hist::new();
+        assert_eq!(h.snapshot(), HistStats::default());
+        assert_eq!(h.percentile(0.5), 0);
+    }
+
+    #[test]
+    fn merge_equals_union() {
+        let (a, b, u) = (Hist::new(), Hist::new(), Hist::new());
+        for v in [3u64, 17, 17, 250, 9_000] {
+            a.record(v);
+            u.record(v);
+        }
+        for v in [1u64, 40, 40_000, 1 << 30] {
+            b.record(v);
+            u.record(v);
+        }
+        a.merge_from(&b);
+        assert_eq!(a.snapshot(), u.snapshot());
+    }
+
+    #[test]
+    fn duration_and_f64_quantize_identically() {
+        for us in [0u64, 1, 2, 999, 1000, 123_456] {
+            assert_eq!(us_from_duration(Duration::from_micros(us)), us);
+            assert_eq!(us_from_f64(us as f64), us);
+        }
+        assert_eq!(us_from_duration(Duration::from_nanos(1_500)), 2);
+        assert_eq!(us_from_f64(1.5), 2);
+        assert_eq!(us_from_f64(-3.0), 0);
+    }
+
+    #[test]
+    fn percentile_us_matches_hist_on_whole_samples() {
+        let samples: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        let h = Hist::new();
+        for &s in &samples {
+            h.record(s as u64);
+        }
+        for q in [0.5, 0.9, 0.99, 0.999] {
+            assert_eq!(percentile_us(&samples, q), h.percentile(q) as f64);
+        }
+    }
+}

@@ -1,0 +1,25 @@
+//! Observability: histograms, tracing, and the stats export surface.
+//!
+//! Dependency-free (std + `util::Json` only) and wired through every
+//! layer of the stack:
+//!
+//! * [`hist`] — the lock-light log-linear histogram and the single
+//!   percentile definition shared by `coordinator/metrics.rs`,
+//!   `net/client.rs`, the bench harnesses, and `stream` phase stats.
+//! * [`trace`] — per-request trace ids (minted at the net edge,
+//!   carried in the v1.2 frame field), the bounded span ring, and the
+//!   JSONL span exporter behind `loms serve --trace-sample N`.
+//! * [`expo`] — the stats wire document: builds the JSON served by the
+//!   `Stats` protocol frame, `loms stats --addr`, and the periodic
+//!   `--metrics-interval` emitter in `loms serve`.
+//!
+//! The contract throughout: recording must be cheap enough to leave on
+//! (`benches/service_pipeline.rs` asserts obs-on vs obs-off throughput
+//! within 3%), and every retained structure is fixed-memory.
+
+pub mod expo;
+pub mod hist;
+pub mod trace;
+
+pub use hist::{percentile_us, us_from_duration, us_from_f64, Hist, HistStats};
+pub use trace::{write_spans_jsonl, SpanEvent, Tracer};

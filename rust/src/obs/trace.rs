@@ -1,0 +1,237 @@
+//! Per-request tracing: trace ids minted at the net edge, a bounded
+//! in-memory ring of structured span events, and a JSONL exporter.
+//!
+//! A trace id is a nonzero `u64`. The net server mints one for every
+//! request that arrives without one (clients may pre-mint their own and
+//! send it in the v1.1 frame field, so a caller can follow its own
+//! request end-to-end). `0` means "untraced" and encodes to a
+//! byte-identical v1 frame.
+//!
+//! Span events are only *retained* for sampled traces (`trace % N == 0`
+//! for sample rate `N`; `N = 0` disables retention entirely), so the
+//! steady-state cost of tracing is one modulo per request. Retained
+//! events go into a fixed-capacity ring; when full, the oldest event is
+//! dropped and counted — memory is bounded no matter how long the
+//! server runs.
+//!
+//! Span taxonomy (DESIGN.md "Observability"):
+//!   request path — `admit`, `queue`, `assemble`, `execute` (with
+//!   `artifact` + SIMD `tier` attrs), `respond`
+//!   extsort path — `run_form`, `merge`, and the `io_wait` phases
+//!   surfaced per-phase by `stream/io.rs` histograms.
+
+use crate::util::Json;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Bounded span-ring capacity (events, not traces).
+pub const RING_CAP: usize = 8192;
+
+/// One structured span event. Times are microseconds since the owning
+/// [`Tracer`]'s epoch, so events from one process order totally.
+#[derive(Debug, Clone)]
+pub struct SpanEvent {
+    pub trace: u64,
+    pub name: &'static str,
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Artifact executed, for `execute` spans.
+    pub artifact: Option<Arc<str>>,
+    /// SIMD tier / backend label, for `execute` spans.
+    pub tier: Option<&'static str>,
+}
+
+impl SpanEvent {
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("trace", Json::int(self.trace as i64)),
+            ("span", Json::str(self.name)),
+            ("start_us", Json::int(self.start_us as i64)),
+            ("dur_us", Json::int(self.dur_us as i64)),
+        ];
+        if let Some(a) = &self.artifact {
+            fields.push(("artifact", Json::str(a.as_ref())));
+        }
+        if let Some(t) = self.tier {
+            fields.push(("tier", Json::str(t)));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Trace-id minter plus sampled span ring. One per [`Metrics`]
+/// (i.e. one per `MergeService`).
+///
+/// [`Metrics`]: crate::coordinator::Metrics
+#[derive(Debug)]
+pub struct Tracer {
+    epoch: Instant,
+    next: AtomicU64,
+    sample: AtomicU64,
+    dropped: AtomicU64,
+    ring: Mutex<VecDeque<SpanEvent>>,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Tracer::new()
+    }
+}
+
+impl Tracer {
+    pub fn new() -> Tracer {
+        Tracer {
+            epoch: Instant::now(),
+            next: AtomicU64::new(1),
+            sample: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            ring: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// Mint a fresh nonzero trace id.
+    pub fn mint(&self) -> u64 {
+        self.next.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Set the sample rate: retain spans for traces with
+    /// `trace % n == 0`; `0` disables span retention.
+    pub fn set_sample(&self, n: u64) {
+        self.sample.store(n, Ordering::Relaxed);
+    }
+
+    pub fn sample(&self) -> u64 {
+        self.sample.load(Ordering::Relaxed)
+    }
+
+    /// Should spans for `trace` be retained? The per-request fast path:
+    /// one load and (if sampling is on) one modulo.
+    pub fn sampled(&self, trace: u64) -> bool {
+        if trace == 0 {
+            return false;
+        }
+        let n = self.sample.load(Ordering::Relaxed);
+        n != 0 && trace % n == 0
+    }
+
+    /// Microseconds since this tracer's epoch.
+    pub fn now_us(&self) -> u64 {
+        (self.epoch.elapsed().as_nanos() / 1_000) as u64
+    }
+
+    /// Retain one span event (caller has already checked [`sampled`]).
+    ///
+    /// [`sampled`]: Tracer::sampled
+    pub fn record(&self, ev: SpanEvent) {
+        let mut ring = self.ring.lock().unwrap();
+        if ring.len() >= RING_CAP {
+            ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(ev);
+    }
+
+    /// Events evicted because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Number of retained events currently in the ring.
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Take every retained event out of the ring (oldest first).
+    pub fn drain(&self) -> Vec<SpanEvent> {
+        self.ring.lock().unwrap().drain(..).collect()
+    }
+}
+
+/// Write span events as JSONL (one compact object per line) — the
+/// `--trace-sample N` exporter in `loms serve` and the integration
+/// tests share this.
+pub fn write_spans_jsonl(events: &[SpanEvent], w: &mut impl std::io::Write) -> std::io::Result<()> {
+    for ev in events {
+        writeln!(w, "{}", ev.to_json().to_string())?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mint_is_nonzero_and_unique() {
+        let t = Tracer::new();
+        let a = t.mint();
+        let b = t.mint();
+        assert_ne!(a, 0);
+        assert_ne!(b, 0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn sampling_gates_retention() {
+        let t = Tracer::new();
+        assert!(!t.sampled(4), "retention off by default");
+        t.set_sample(2);
+        assert!(t.sampled(4));
+        assert!(!t.sampled(5));
+        assert!(!t.sampled(0), "untraced never sampled");
+        t.set_sample(1);
+        assert!(t.sampled(7), "sample=1 retains everything");
+    }
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops() {
+        let t = Tracer::new();
+        for i in 0..(RING_CAP as u64 + 10) {
+            t.record(SpanEvent {
+                trace: i + 1,
+                name: "admit",
+                start_us: i,
+                dur_us: 0,
+                artifact: None,
+                tier: None,
+            });
+        }
+        assert_eq!(t.len(), RING_CAP);
+        assert_eq!(t.dropped(), 10);
+        let evs = t.drain();
+        assert_eq!(evs.len(), RING_CAP);
+        // Oldest 10 were evicted; ring starts at trace 11.
+        assert_eq!(evs[0].trace, 11);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn jsonl_round_trips_through_util_json() {
+        let ev = SpanEvent {
+            trace: 42,
+            name: "execute",
+            start_us: 100,
+            dur_us: 250,
+            artifact: Some(Arc::from("loms2_up32_dn32_b256")),
+            tier: Some("avx2"),
+        };
+        let mut buf = Vec::new();
+        write_spans_jsonl(&[ev], &mut buf).unwrap();
+        let line = String::from_utf8(buf).unwrap();
+        let parsed = Json::parse(line.trim()).unwrap();
+        let obj = match parsed {
+            Json::Obj(m) => m,
+            other => panic!("expected object, got {other:?}"),
+        };
+        assert_eq!(obj.get("trace"), Some(&Json::int(42)));
+        assert_eq!(obj.get("span"), Some(&Json::str("execute")));
+        assert_eq!(obj.get("artifact"), Some(&Json::str("loms2_up32_dn32_b256")));
+        assert_eq!(obj.get("tier"), Some(&Json::str("avx2")));
+    }
+}

@@ -133,6 +133,18 @@ impl SimdTier {
         }
     }
 
+    /// The `LOMS_SIMD` spelling of this tier — [`SimdTier::parse`]'s
+    /// inverse, used as the `tier` attribute on execute spans and
+    /// per-artifact stats.
+    pub fn label(self) -> &'static str {
+        match self {
+            SimdTier::Scalar => "scalar",
+            SimdTier::Portable => "portable",
+            SimdTier::Avx2 => "avx2",
+            SimdTier::Neon => "neon",
+        }
+    }
+
     /// Whether this tier's kernels may run on this host. `Scalar` and
     /// `Portable` always can; the explicit tiers require their
     /// architecture (and, for AVX2, runtime CPU feature detection).

@@ -30,7 +30,8 @@
 //! themselves cannot provide.
 
 use super::io::{
-    self, encode_keys_into, sidecar_path, spill_io, IoWait, SpillChecksum, SpillGuard, WriteBehind,
+    self, encode_keys_into, sidecar_path, spill_io, IoPhase, IoWait, SpillChecksum, SpillGuard,
+    WriteBehind,
 };
 use super::merge2::BlockKernel;
 use super::part;
@@ -39,6 +40,7 @@ use super::source::{
 };
 use super::tree::{MergeTree, TreeStats, DEFAULT_R};
 use crate::coordinator::{planner, MergeService};
+use crate::obs::HistStats;
 use crate::util::fault::{self, Site};
 use anyhow::{Context, Result};
 use std::fs::File;
@@ -133,8 +135,29 @@ pub struct ExtSortStats {
     pub corrupt_detected: u64,
     /// Bounded re-reads of spill blocks (recovered or not).
     pub read_retries: u64,
+    /// Per-chunk sort latency (phase 1 CPU; not part of
+    /// `io_wait_secs`). Behind `loms sort --stats true`.
+    pub chunk_sort: HistStats,
+    /// Per-buffer spill/output write-stall latency.
+    pub spill_write: HistStats,
+    /// Per-buffer prefetch-wait latency (compute blocked on read-ahead).
+    pub prefetch_wait: HistStats,
     /// Merge-tree scheduling counters pooled across passes/partitions.
     pub tree: TreeStats,
+}
+
+impl ExtSortStats {
+    /// Drain the shared I/O accounting into the stats block — the
+    /// common epilogue of every extsort entry point (key-only and KV,
+    /// slice and file).
+    pub(crate) fn absorb_wait(&mut self, wait: &IoWait) {
+        self.io_wait_secs = wait.secs();
+        self.corrupt_detected = wait.corrupt_detected();
+        self.read_retries = wait.read_retries();
+        self.chunk_sort = wait.phase_stats(IoPhase::ChunkSort);
+        self.spill_write = wait.phase_stats(IoPhase::SpillWrite);
+        self.prefetch_wait = wait.phase_stats(IoPhase::PrefetchWait);
+    }
 }
 
 /// How phase 1 sorts each run.
@@ -281,7 +304,7 @@ impl SpillWriter {
                 if let Some(sum) = sum.as_mut() {
                     sum.update(bytes);
                 }
-                wait.timed(|| w.write_all(bytes))
+                wait.timed_phase(IoPhase::SpillWrite, || w.write_all(bytes))
                     .map_err(|e| spill_io(e, "writing spill run to", path))?;
             }
             SegSink::Behind(wb) => {
@@ -539,12 +562,19 @@ pub fn extsort(data: &[u32], cfg: &ExtSortConfig) -> Result<(Vec<u32>, ExtSortSt
 /// Phase-1 run formation over an in-memory slice, sharded across
 /// `threads` scoped workers on contiguous chunk groups (order
 /// preserved by construction).
-fn form_runs_mem(data: &[u32], run_len: usize, threads: usize) -> Result<Vec<Vec<u32>>> {
+fn form_runs_mem(
+    data: &[u32],
+    run_len: usize,
+    threads: usize,
+    wait: &IoWait,
+) -> Result<Vec<Vec<u32>>> {
     let chunks: Vec<&[u32]> = data.chunks(run_len).collect();
     let sort_one = |c: &&[u32]| {
-        let mut v = c.to_vec();
-        v.sort_unstable();
-        v
+        wait.timed_phase(IoPhase::ChunkSort, || {
+            let mut v = c.to_vec();
+            v.sort_unstable();
+            v
+        })
     };
     if threads <= 1 || chunks.len() <= 1 {
         return Ok(chunks.iter().map(sort_one).collect());
@@ -584,10 +614,10 @@ pub fn extsort_with(
     let t0 = Instant::now();
     let mut store = match &cfg.spill_dir {
         None => RunStore::Mem(match former {
-            RunFormer::Std => form_runs_mem(data, cfg.run_len, threads)?,
+            RunFormer::Std => form_runs_mem(data, cfg.run_len, threads, &wait)?,
             RunFormer::Ladder { .. } => data
                 .chunks(cfg.run_len)
-                .map(|c| sort_run(former, c))
+                .map(|c| wait.timed_phase(IoPhase::ChunkSort, || sort_run(former, c)))
                 .collect::<Result<_>>()?,
         }),
         Some(dir) => {
@@ -603,13 +633,16 @@ pub fn extsort_with(
             );
             let segs = if parallel_std {
                 let mut chunks = data.chunks(cfg.run_len);
+                let wait = &wait;
                 io::pipeline(
                     threads,
                     || Ok(chunks.next()),
                     |c: &[u32]| {
-                        let mut v = c.to_vec();
-                        v.sort_unstable();
-                        v
+                        wait.timed_phase(IoPhase::ChunkSort, || {
+                            let mut v = c.to_vec();
+                            v.sort_unstable();
+                            v
+                        })
                     },
                     w,
                     |w, run| w.push_run(&run),
@@ -618,7 +651,8 @@ pub fn extsort_with(
             } else {
                 let mut w = w;
                 for c in data.chunks(cfg.run_len) {
-                    w.push_run(&sort_run(former, c)?)?;
+                    let run = wait.timed_phase(IoPhase::ChunkSort, || sort_run(former, c))?;
+                    w.push_run(&run)?;
                 }
                 w.finish()?
             };
@@ -654,9 +688,7 @@ pub fn extsort_with(
     };
     store.cleanup(&guard);
     stats.merge_secs = tm.elapsed().as_secs_f64();
-    stats.io_wait_secs = wait.secs();
-    stats.corrupt_detected = wait.corrupt_detected();
-    stats.read_retries = wait.read_retries();
+    stats.absorb_wait(&wait);
     Ok((out, stats))
 }
 
@@ -850,11 +882,12 @@ pub fn extsort_file(input: &Path, output: &Path, cfg: &ExtSortConfig) -> Result<
             wait.clone(),
         );
         let segs = if threads > 1 {
+            let wait = &wait;
             io::pipeline(
                 threads,
                 produce,
                 |mut keys: Vec<u32>| {
-                    keys.sort_unstable();
+                    wait.timed_phase(IoPhase::ChunkSort, || keys.sort_unstable());
                     keys
                 },
                 w,
@@ -865,7 +898,7 @@ pub fn extsort_file(input: &Path, output: &Path, cfg: &ExtSortConfig) -> Result<
             let mut w = w;
             let mut produce = produce;
             while let Some(mut keys) = produce()? {
-                keys.sort_unstable();
+                wait.timed_phase(IoPhase::ChunkSort, || keys.sort_unstable());
                 w.push_run(&keys)?;
             }
             w.finish()?
@@ -885,9 +918,7 @@ pub fn extsort_file(input: &Path, output: &Path, cfg: &ExtSortConfig) -> Result<
     final_merge_file(&store, output, total, cfg, &mut stats, &wait, kernel)?;
     store.cleanup(&guard);
     stats.merge_secs = tm.elapsed().as_secs_f64();
-    stats.io_wait_secs = wait.secs();
-    stats.corrupt_detected = wait.corrupt_detected();
-    stats.read_retries = wait.read_retries();
+    stats.absorb_wait(&wait);
     Ok(stats)
 }
 
@@ -1009,6 +1040,11 @@ mod tests {
         assert!(stats.io_wait_secs >= 0.0);
         assert!(stats.partitions >= 1);
         assert!(stats.tree.kernel_rows > 0, "{:?}", stats.tree);
+        // Per-phase histograms: every chunk sort and spill write is
+        // recorded (one histogram sample per chunk / buffer).
+        assert_eq!(stats.chunk_sort.count as usize, 30_000usize.div_ceil(1024));
+        assert!(stats.spill_write.count > 0, "{:?}", stats.spill_write);
+        assert!(stats.chunk_sort.max_us >= stats.chunk_sort.p50_us);
         let _ = std::fs::remove_dir_all(dir);
     }
 }

@@ -11,6 +11,7 @@
 //! choosing their record stride (4-byte keys vs 12-byte records) at
 //! the decode/encode layer.
 
+use crate::obs::{Hist, HistStats};
 use crate::util::crc32::{crc32, crc32_finish, crc32_update, CRC32_INIT};
 use crate::util::fault::{self, Site};
 use anyhow::{Context, Result};
@@ -76,9 +77,11 @@ pub fn decode_records_into(bytes: &[u8], keys: &mut Vec<u32>, pays: &mut Vec<u64
 }
 
 /// Shared I/O accounting, cloned into every helper thread: nanoseconds
-/// compute threads spent blocked on disk, plus the spill-integrity
-/// event counters (blocks that failed their checksum, bounded re-read
-/// retries). Drained into [`super::extsort::ExtSortStats`].
+/// compute threads spent blocked on disk, per-phase latency histograms
+/// (chunk sort, spill write, prefetch wait — the `loms sort --stats`
+/// breakdown), plus the spill-integrity event counters (blocks that
+/// failed their checksum, bounded re-read retries). Drained into
+/// [`super::extsort::ExtSortStats`].
 #[derive(Clone, Default)]
 pub struct IoWait(Arc<WaitInner>);
 
@@ -87,11 +90,36 @@ struct WaitInner {
     nanos: AtomicU64,
     corrupt: AtomicU64,
     retries: AtomicU64,
+    chunk_sort: Hist,
+    spill_write: Hist,
+    prefetch_wait: Hist,
+}
+
+/// Phase label for the per-phase histograms behind
+/// `loms sort --stats true`.
+#[derive(Clone, Copy, Debug)]
+pub enum IoPhase {
+    /// CPU time sorting one chunk into a run. Recorded in its
+    /// histogram only — *not* charged to the blocked-on-disk total
+    /// ([`IoWait::secs`]), because it is compute, not I/O.
+    ChunkSort,
+    /// Blocked handing a spill/output buffer to the disk.
+    SpillWrite,
+    /// Blocked on the prefetch thread for the next filled buffer.
+    PrefetchWait,
 }
 
 impl IoWait {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    fn hist(&self, phase: IoPhase) -> &Hist {
+        match phase {
+            IoPhase::ChunkSort => &self.0.chunk_sort,
+            IoPhase::SpillWrite => &self.0.spill_write,
+            IoPhase::PrefetchWait => &self.0.prefetch_wait,
+        }
     }
 
     /// Run `f`, charging its wall time to the counter.
@@ -100,6 +128,25 @@ impl IoWait {
         let out = f();
         self.0.nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         out
+    }
+
+    /// Run `f`, recording its wall time in `phase`'s histogram. The
+    /// I/O phases also charge the blocked-on-disk total;
+    /// [`IoPhase::ChunkSort`] does not (see its doc).
+    pub fn timed_phase<T>(&self, phase: IoPhase, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        let d = t0.elapsed();
+        if !matches!(phase, IoPhase::ChunkSort) {
+            self.0.nanos.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+        }
+        self.hist(phase).record_duration(d);
+        out
+    }
+
+    /// Snapshot one phase histogram.
+    pub fn phase_stats(&self, phase: IoPhase) -> HistStats {
+        self.hist(phase).snapshot()
     }
 
     /// Total accumulated wait in seconds.
@@ -653,7 +700,7 @@ impl FilePrefetch {
     /// only when the reader is behind (charged to the wait counter).
     pub fn next_buf(&mut self) -> Result<Option<Vec<u8>>> {
         let Some(rx) = &self.rx else { return Ok(None) };
-        match self.wait.timed(|| rx.recv()) {
+        match self.wait.timed_phase(IoPhase::PrefetchWait, || rx.recv()) {
             Ok(Ok(buf)) => Ok(Some(buf)),
             Ok(Err(e)) => {
                 self.rx = None;
@@ -730,7 +777,7 @@ impl WriteBehind {
         let Some(tx) = self.tx.as_ref() else {
             return Err(std::io::Error::other("write-behind used after finish"));
         };
-        if self.wait.timed(|| tx.send(buf)).is_err() {
+        if self.wait.timed_phase(IoPhase::SpillWrite, || tx.send(buf)).is_err() {
             // Writer exited early: it can only have done so on error.
             self.join()?;
             return Err(std::io::Error::other("write-behind thread exited before finish"));

@@ -32,7 +32,7 @@ use std::time::Instant;
 use super::extsort::{ExtSortConfig, ExtSortStats, SpillSeg};
 use super::io::{
     self, decode_records_into, encode_records_into, pipeline, sidecar_path, spill_io,
-    FilePrefetch, IoWait, SpillChecksum, SpillGuard, SpillReader, WriteBehind,
+    FilePrefetch, IoPhase, IoWait, SpillChecksum, SpillGuard, SpillReader, WriteBehind,
 };
 use super::part::{self, FileCutter};
 use super::tree::TreeStats;
@@ -909,7 +909,7 @@ impl SpillWriterKv {
                 if let Some(sum) = sum.as_mut() {
                     sum.update(bytes);
                 }
-                wait.timed(|| w.write_all(bytes))
+                wait.timed_phase(IoPhase::SpillWrite, || w.write_all(bytes))
                     .map_err(|e| spill_io(e, "writing KV spill run to", path))?;
             }
             SegSinkKv::Behind(wb) => {
@@ -1168,18 +1168,20 @@ fn form_runs_mem_kv(
     pays: &[u64],
     run_len: usize,
     threads: usize,
+    wait: &IoWait,
 ) -> Result<Vec<(Vec<u32>, Vec<u64>)>> {
+    let sort_one = |ck: &[u32], cp: &[u64]| wait.timed_phase(IoPhase::ChunkSort, || sort_run(ck, cp));
     let chunks: Vec<(&[u32], &[u64])> =
         keys.chunks(run_len).zip(pays.chunks(run_len)).collect();
     if threads <= 1 || chunks.len() <= 1 {
-        return Ok(chunks.iter().map(|&(ck, cp)| sort_run(ck, cp)).collect());
+        return Ok(chunks.iter().map(|&(ck, cp)| sort_one(ck, cp)).collect());
     }
     let per = chunks.len().div_ceil(threads);
     std::thread::scope(|s| {
         let handles: Vec<_> = chunks
             .chunks(per)
             .map(|group| {
-                s.spawn(move || group.iter().map(|&(ck, cp)| sort_run(ck, cp)).collect::<Vec<_>>())
+                s.spawn(move || group.iter().map(|&(ck, cp)| sort_one(ck, cp)).collect::<Vec<_>>())
             })
             .collect();
         let mut runs = Vec::with_capacity(chunks.len());
@@ -1215,7 +1217,7 @@ pub fn extsort_kv(
     let threads = part::resolve_threads(cfg.sort_threads);
     let t0 = Instant::now();
     let mut store = match &cfg.spill_dir {
-        None => RunStoreKv::Mem(form_runs_mem_kv(keys, pays, cfg.run_len, threads)?),
+        None => RunStoreKv::Mem(form_runs_mem_kv(keys, pays, cfg.run_len, threads, &wait)?),
         Some(dir) => {
             std::fs::create_dir_all(dir)
                 .with_context(|| format!("creating spill dir {}", dir.display()))?;
@@ -1229,10 +1231,13 @@ pub fn extsort_kv(
             );
             let segs = if threads > 1 {
                 let mut chunks = keys.chunks(cfg.run_len).zip(pays.chunks(cfg.run_len));
+                let wait = &wait;
                 pipeline(
                     threads,
                     || Ok(chunks.next()),
-                    |(ck, cp): (&[u32], &[u64])| sort_run(ck, cp),
+                    |(ck, cp): (&[u32], &[u64])| {
+                        wait.timed_phase(IoPhase::ChunkSort, || sort_run(ck, cp))
+                    },
                     w,
                     |w, (rk, rp)| w.push_run(&rk, &rp),
                 )?
@@ -1240,7 +1245,7 @@ pub fn extsort_kv(
             } else {
                 let mut w = w;
                 for (ck, cp) in keys.chunks(cfg.run_len).zip(pays.chunks(cfg.run_len)) {
-                    let (rk, rp) = sort_run(ck, cp);
+                    let (rk, rp) = wait.timed_phase(IoPhase::ChunkSort, || sort_run(ck, cp));
                     w.push_run(&rk, &rp)?;
                 }
                 w.finish()?
@@ -1284,9 +1289,7 @@ pub fn extsort_kv(
     };
     store.cleanup(&guard);
     stats.merge_secs = tm.elapsed().as_secs_f64();
-    stats.io_wait_secs = wait.secs();
-    stats.corrupt_detected = wait.corrupt_detected();
-    stats.read_retries = wait.read_retries();
+    stats.absorb_wait(&wait);
     Ok((out_k, out_p, stats))
 }
 
@@ -1489,10 +1492,13 @@ pub fn extsort_kv_file(input: &Path, output: &Path, cfg: &ExtSortConfig) -> Resu
             wait.clone(),
         );
         let segs = if threads > 1 {
+            let wait = &wait;
             pipeline(
                 threads,
                 produce,
-                |(ck, cp): (Vec<u32>, Vec<u64>)| sort_run(&ck, &cp),
+                |(ck, cp): (Vec<u32>, Vec<u64>)| {
+                    wait.timed_phase(IoPhase::ChunkSort, || sort_run(&ck, &cp))
+                },
                 w,
                 |w, (rk, rp)| w.push_run(&rk, &rp),
             )?
@@ -1501,7 +1507,7 @@ pub fn extsort_kv_file(input: &Path, output: &Path, cfg: &ExtSortConfig) -> Resu
             let mut w = w;
             let mut produce = produce;
             while let Some((ck, cp)) = produce()? {
-                let (rk, rp) = sort_run(&ck, &cp);
+                let (rk, rp) = wait.timed_phase(IoPhase::ChunkSort, || sort_run(&ck, &cp));
                 w.push_run(&rk, &rp)?;
             }
             w.finish()?
@@ -1521,9 +1527,7 @@ pub fn extsort_kv_file(input: &Path, output: &Path, cfg: &ExtSortConfig) -> Resu
     final_merge_kv_file(&store, output, total, cfg, &mut stats, &wait, kernel)?;
     store.cleanup(&guard);
     stats.merge_secs = tm.elapsed().as_secs_f64();
-    stats.io_wait_secs = wait.secs();
-    stats.corrupt_detected = wait.corrupt_detected();
-    stats.read_retries = wait.read_retries();
+    stats.absorb_wait(&wait);
     Ok(stats)
 }
 

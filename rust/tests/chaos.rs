@@ -282,7 +282,8 @@ fn seeded_fault_storms_never_corrupt_output() {
 mod net {
     use super::*;
     use loms::coordinator::{MergeService, ServiceConfig, SoftwareBackend};
-    use loms::net::{run_load, NetServer, NetServerConfig};
+    use loms::net::{run_load, NetClient, NetServer, NetServerConfig};
+    use loms::obs::expo;
 
     fn start_server(cfg: NetServerConfig) -> NetServer {
         let svc =
@@ -346,6 +347,39 @@ mod net {
         // settled back to zero and accounting balances.
         assert_eq!(server.service().pending(), 0);
         assert_eq!(snap.net_frames_in, snap.net_responses + snap.net_errors, "{snap:?}");
+        server.shutdown();
+    }
+
+    /// Satellite: injected faults surface in the *stats wire frame* — a
+    /// live `loms stats` round-trip reports the same fault/retry/shed
+    /// counters the in-process snapshot holds, so chaos runs are
+    /// diagnosable from outside the process.
+    #[test]
+    fn fault_counters_surface_in_the_stats_frame() {
+        let plan = FaultPlan::new(29).with_max(Site::ExecTransient, 1.0, 4);
+        let _g = fault::install(&plan);
+        let server = start_server(NetServerConfig {
+            workers: 2,
+            shed_pending: 2,
+            ..NetServerConfig::default()
+        });
+        let addr = server.addr().to_string();
+        let report = run_load(&addr, 2, 8, 60, 0xFA17, false).expect("load");
+        assert_eq!(report.ok, 60, "{report:?}");
+
+        let mut client = NetClient::connect(&*addr).expect("stats connection");
+        let doc = client.stats().expect("stats frame");
+        expo::check_stats_doc(&doc).expect("stats grammar");
+        let faults = doc.get("faults").expect("faults section");
+        let get = |k: &str| faults.get(k).and_then(loms::util::Json::as_i64).unwrap();
+        assert_eq!(get("faults_injected"), 4, "{doc:?}");
+        assert_eq!(get("retries"), 4, "transient execs absorbed in place: {doc:?}");
+        let snap = server.service().metrics().snapshot();
+        assert_eq!(get("sheds"), snap.sheds as i64, "{doc:?}");
+        assert!(
+            get("sheds") > 0,
+            "watermark 2 under 16 pipelined requests must shed: {doc:?}"
+        );
         server.shutdown();
     }
 }

@@ -49,13 +49,15 @@ fn codec_round_trips_extreme_shapes() {
     // u32::MAX (legal on the wire — the *service* rejects the
     // sentinel, the protocol does not).
     let ragged: Vec<Vec<u32>> = (0..7).map(|l| (0..l * 3).map(|x| x as u32).collect()).collect();
-    codec_roundtrip(&Frame::MergeRequest { mode: MODE_MERGE, lists: ragged });
+    codec_roundtrip(&Frame::MergeRequest { mode: MODE_MERGE, trace: 0, lists: ragged });
     codec_roundtrip(&Frame::MergeRequest {
         mode: MODE_MERGE,
+        trace: 0,
         lists: vec![vec![], vec![0, 1, u32::MAX - 1, u32::MAX], vec![]],
     });
     codec_roundtrip(&Frame::MergeRequest {
         mode: MODE_MERGE,
+        trace: u64::MAX,
         lists: vec![(0..MAX_LIST_LEN as u32).collect()],
     });
     codec_roundtrip(&Frame::MergeResponse {
@@ -152,7 +154,7 @@ fn valid_request_bytes(rng: &mut Rng) -> Vec<u8> {
     let k = rng.range(1, 4);
     let lists: Vec<Vec<u32>> = (0..k).map(|_| rng.sorted_list_ragged(0, 40, 1 << 20)).collect();
     let mut out = Vec::new();
-    encode_merge_request(MODE_MERGE, &lists, &mut out);
+    encode_merge_request(MODE_MERGE, 0, &lists, &mut out);
     out
 }
 

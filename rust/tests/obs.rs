@@ -1,0 +1,253 @@
+//! Observability integration suite: a [`NetClient`] request followed
+//! end-to-end by trace id through the sampled span JSONL, the live
+//! `Stats` wire frame against a running server, the single percentile
+//! definition shared by the client and the service metrics, and the
+//! concurrency/merge contracts of the log-linear histogram.
+
+use loms::coordinator::{Metrics, MergeService, ServiceConfig, SoftwareBackend};
+use loms::net::{client, NetClient, NetServer, NetServerConfig};
+use loms::obs::{expo, percentile_us, write_spans_jsonl, Hist};
+use loms::util::{Json, Rng};
+use std::time::{Duration, Instant};
+
+fn start_server() -> NetServer {
+    let svc = MergeService::start(|| Ok(SoftwareBackend::default_set()), ServiceConfig::default())
+        .expect("service");
+    NetServer::start("127.0.0.1:0", svc, NetServerConfig::default()).expect("server")
+}
+
+/// Acceptance: a client-minted trace id is honored by the server and
+/// every request-path span — admit, queue, assemble, execute, respond —
+/// lands in the sampled span ring carrying that id, with the execute
+/// span naming its artifact and SIMD tier in the JSONL export.
+#[test]
+fn a_traced_request_is_followable_end_to_end() {
+    let server = start_server();
+    server.service().metrics().tracer().set_sample(1);
+    let mut client = NetClient::connect(server.addr()).unwrap();
+    const TRACE: u64 = 0x0DD_BA11;
+    client.submit_traced(&[vec![1, 3, 5], vec![2, 4, 6]], TRACE).unwrap();
+    let resp = client.recv().unwrap();
+    assert_eq!(resp.merged, vec![1, 2, 3, 4, 5, 6]);
+
+    // Batch spans are retained on the executor after the response fans
+    // out, so the reply can race the recording — poll briefly.
+    let tracer = server.service().metrics().tracer();
+    let want = ["admit", "queue", "assemble", "execute", "respond"];
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut spans = Vec::new();
+    loop {
+        spans.extend(tracer.drain());
+        let have: Vec<&str> =
+            spans.iter().filter(|s| s.trace == TRACE).map(|s| s.name).collect();
+        if want.iter().all(|w| have.contains(w)) {
+            break;
+        }
+        assert!(Instant::now() < deadline, "spans never arrived; have {have:?}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // The JSONL export carries the id and the execute attributes.
+    let mut buf = Vec::new();
+    write_spans_jsonl(&spans, &mut buf).unwrap();
+    let text = String::from_utf8(buf).unwrap();
+    let lines: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+    let mine: Vec<&Json> = lines
+        .iter()
+        .filter(|j| j.get("trace").and_then(Json::as_i64) == Some(TRACE as i64))
+        .collect();
+    for w in want {
+        assert!(
+            mine.iter().any(|j| j.get("span").and_then(Json::as_str) == Some(w)),
+            "missing {w} span in:\n{text}"
+        );
+    }
+    let exec = mine
+        .iter()
+        .find(|j| j.get("span").and_then(Json::as_str) == Some("execute"))
+        .unwrap();
+    assert!(exec.get("artifact").and_then(Json::as_str).is_some(), "{exec:?}");
+    assert!(exec.get("tier").and_then(Json::as_str).is_some(), "{exec:?}");
+    server.shutdown();
+}
+
+/// A request arriving without a trace id gets one minted at the net
+/// edge whenever sampling is on, so server-side sampling needs no
+/// client cooperation.
+#[test]
+fn untraced_requests_get_server_minted_ids_when_sampling() {
+    let server = start_server();
+    server.service().metrics().tracer().set_sample(1);
+    let mut client = NetClient::connect(server.addr()).unwrap();
+    assert_eq!(client.merge(&[vec![2], vec![1]]).unwrap().merged, vec![1, 2]);
+    let tracer = server.service().metrics().tracer();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        if tracer.drain().iter().any(|s| s.name == "respond" && s.trace != 0) {
+            break;
+        }
+        assert!(Instant::now() < deadline, "no minted-trace spans arrived");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    server.shutdown();
+}
+
+/// Acceptance: `loms stats` against a live server — the wire document
+/// passes the grammar check, reports per-artifact execute histograms
+/// consistent with the batch counts, and carries the fault/retry/shed
+/// counters. Once the connection drains, the snapshot balance
+/// invariants hold ([`loms::coordinator::Snapshot::check`]).
+#[test]
+fn live_stats_frame_reports_artifacts_and_counters() {
+    let server = start_server();
+    let mut client = NetClient::connect(server.addr()).unwrap();
+    let mut rng = Rng::new(0x0B5);
+    const N: i64 = 24;
+    for i in 0..N {
+        let lists = if i % 4 == 3 {
+            vec![
+                rng.sorted_list(7, 1 << 20),
+                rng.sorted_list(7, 1 << 20),
+                rng.sorted_list(7, 1 << 20),
+            ]
+        } else {
+            vec![rng.sorted_list(32, 1 << 20), rng.sorted_list(32, 1 << 20)]
+        };
+        let mut want: Vec<u32> = lists.concat();
+        want.sort_unstable();
+        assert_eq!(client.merge(&lists).unwrap().merged, want);
+    }
+
+    let doc = client.stats().expect("stats round-trip");
+    expo::check_stats_doc(&doc).expect("stats grammar");
+    assert!(doc.get("requests").unwrap().as_i64().unwrap() >= N, "{doc:?}");
+    assert_eq!(doc.get("responses").unwrap().as_i64(), doc.get("requests").unwrap().as_i64());
+    let artifacts = match doc.get("artifacts") {
+        Some(Json::Obj(m)) => m,
+        other => panic!("artifacts section: {other:?}"),
+    };
+    assert!(!artifacts.is_empty(), "{doc:?}");
+    let mut batches = 0;
+    for (name, a) in artifacts {
+        let b = a.get("batches").unwrap().as_i64().unwrap();
+        // Every executed batch recorded exactly one execute sample, so
+        // the per-artifact histogram count equals its batch count.
+        assert_eq!(
+            a.get("execute").unwrap().get("count").unwrap().as_i64(),
+            Some(b),
+            "artifact {name}: {a:?}"
+        );
+        batches += b;
+    }
+    assert!(batches >= N, "{doc:?}");
+    // Fault-free run: the counters exist and read zero.
+    let faults = doc.get("faults").unwrap();
+    for key in ["faults_injected", "corrupt_detected", "sheds"] {
+        assert_eq!(faults.get(key).unwrap().as_i64(), Some(0), "{key}");
+    }
+
+    // Satellite: the drained-state balance invariants hold once the
+    // connection closes (poll — the server sees the close asynchronously).
+    drop(client);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match server.service().metrics().snapshot().check() {
+            Ok(()) => break,
+            Err(e) => {
+                assert!(Instant::now() < deadline, "snapshot never balanced: {e}");
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+    server.shutdown();
+}
+
+/// Satellite: one percentile definition everywhere — the client's
+/// sample percentiles, the service snapshot's latency percentiles, and
+/// the raw histogram agree exactly on the same data.
+#[test]
+fn one_percentile_definition_across_client_and_metrics() {
+    let mut rng = Rng::new(0xDEF);
+    let samples: Vec<f64> = (0..5_000).map(|_| rng.below(1_000_000) as f64).collect();
+    let m = Metrics::new();
+    for &s in &samples {
+        m.on_request();
+        m.on_response(Duration::from_micros(s as u64));
+    }
+    let snap = m.snapshot();
+    assert_eq!(client::percentile_us(&samples, 0.50), snap.p50_latency_us);
+    assert_eq!(client::percentile_us(&samples, 0.99), snap.p99_latency_us);
+    assert_eq!(client::percentile_us(&samples, 0.99), percentile_us(&samples, 0.99));
+    assert_eq!(snap.latency.count, samples.len() as u64);
+}
+
+/// Satellite: concurrent recording into one shared histogram, and
+/// merging per-thread partials, both match a single-threaded oracle
+/// replaying the same deterministic streams.
+#[test]
+fn concurrent_records_and_merges_match_single_thread_oracle() {
+    const THREADS: u64 = 8;
+    const PER: usize = 5_000;
+    let shared = Hist::new();
+    let partials: Vec<Hist> = (0..THREADS).map(|_| Hist::new()).collect();
+    std::thread::scope(|s| {
+        for (t, partial) in partials.iter().enumerate() {
+            let shared = &shared;
+            s.spawn(move || {
+                let mut rng = Rng::new(t as u64 + 1);
+                for _ in 0..PER {
+                    let v = rng.below(1 << 22);
+                    shared.record(v);
+                    partial.record(v);
+                }
+            });
+        }
+    });
+    let oracle = Hist::new();
+    for t in 0..THREADS {
+        let mut rng = Rng::new(t + 1);
+        for _ in 0..PER {
+            oracle.record(rng.below(1 << 22));
+        }
+    }
+    assert_eq!(shared.snapshot(), oracle.snapshot());
+    let merged = Hist::new();
+    for partial in &partials {
+        merged.merge_from(partial);
+    }
+    assert_eq!(merged.snapshot(), oracle.snapshot());
+}
+
+/// Satellite (hand-rolled property test): across random partitions of
+/// random samples, the merged histogram's percentiles bound the exact
+/// union percentiles — never under, and over by at most the 1/16
+/// bucket width (+1 for the unit rounding).
+#[test]
+fn merged_histogram_percentiles_bound_the_union() {
+    let mut rng = Rng::new(0x93E0);
+    for case in 0..60 {
+        let merged = Hist::new();
+        let mut all = Vec::new();
+        for _ in 0..1 + rng.below(5) {
+            let h = Hist::new();
+            for _ in 0..1 + rng.below(400) {
+                // Shifted samples cover several orders of magnitude.
+                let v = u64::from(rng.next_u32()) >> rng.below(32);
+                h.record(v);
+                all.push(v);
+            }
+            merged.merge_from(&h);
+        }
+        all.sort_unstable();
+        for q in [0.5, 0.9, 0.99, 1.0] {
+            let rank = ((q * all.len() as f64).ceil() as usize).clamp(1, all.len());
+            let exact = all[rank - 1];
+            let got = merged.percentile(q);
+            assert!(got >= exact, "case {case} q={q}: {got} under-reports {exact}");
+            assert!(
+                got as f64 <= exact as f64 * (1.0 + 1.0 / 16.0) + 1.0,
+                "case {case} q={q}: {got} over-reports {exact}"
+            );
+        }
+    }
+}
