@@ -1,20 +1,30 @@
-//! Networked serving benchmark: the cost of the wire, emitted as
-//! `BENCH_net.json`.
+//! Networked serving benchmark: the connection-scaling curve, emitted
+//! as `BENCH_net.json`.
 //!
-//! One software-backed [`MergeService`] behind a [`NetServer`] on an
-//! ephemeral loopback port. Variants over the same ragged 32+32
-//! workload ([`loms::net::client::workload_lists`]):
+//! One software-backed [`MergeService`] behind a [`NetServer`] (32
+//! dispatch workers, readiness-loop front-end) on an ephemeral
+//! loopback port. Variants over the same ragged 32+32 workload
+//! ([`loms::net::client::workload_lists`]):
 //!
 //! * `in_process` — the baseline: requests submitted straight into the
 //!   service from this process (no sockets, no frames), latency
 //!   measured per request with the same pipelined window the network
 //!   clients use — so the delta to the next rows is purely transport.
-//! * `net_1conn` / `net_8conn` / `net_32conn` — the framed TCP path at
-//!   increasing connection counts, each connection keeping
-//!   `INFLIGHT` requests pipelined.
+//! * `net_1conn` / `net_8conn` / `net_32conn` / `net_256conn` /
+//!   `net_1024conn` — the framed TCP path at increasing connection
+//!   counts, each connection keeping `INFLIGHT` requests pipelined.
+//!   The interesting rows are the ones where connections vastly
+//!   outnumber the 32 dispatch workers: a thread-per-connection server
+//!   would starve there; the readiness loop must hold throughput flat.
+//!   The 1024-connection row runs in full mode only (smoke stops at
+//!   256 to keep CI under budget).
 //! * `net_8conn_kv` — the same wire path carrying v1.1 key-value
 //!   frames (one `u64` payload per key, both directions); the delta to
 //!   `net_8conn` is the payload's wire + permute cost.
+//! * `net_32conn_v2` — the same wire path over protocol v2 (explicit
+//!   request ids, replies matched by id in completion order); the
+//!   delta to `net_32conn` is the id bookkeeping, which should be
+//!   noise.
 //!
 //! Every response (all variants) is verified byte-exact against a sort
 //! oracle — a bench run that returns wrong bytes panics rather than
@@ -24,7 +34,7 @@
 
 use loms::coordinator::{MergeService, ServiceConfig, SoftwareBackend};
 use loms::net::client::{percentile_us, workload_lists};
-use loms::net::{run_load, NetServer, NetServerConfig};
+use loms::net::{run_load_with, NetServer, NetServerConfig};
 use loms::util::Rng;
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -33,6 +43,8 @@ const INFLIGHT: usize = 16;
 
 struct Variant {
     name: String,
+    /// Concurrent TCP connections (0 for the in-process baseline).
+    conns: usize,
     requests_per_s: f64,
     p50_latency_us: f64,
     p99_latency_us: f64,
@@ -67,17 +79,47 @@ fn run_in_process(svc: &MergeService, requests: usize, seed: u64) -> Variant {
     lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
     Variant {
         name: "in_process".into(),
+        conns: 0,
         requests_per_s: requests as f64 / dt.as_secs_f64(),
         p50_latency_us: percentile_us(&lat_us, 0.50),
         p99_latency_us: percentile_us(&lat_us, 0.99),
     }
 }
 
+/// One wire variant: drive `requests` through `conns` connections and
+/// hold the run to the oracle (zero errors, zero dead connections).
+fn run_wire(
+    addr: &str,
+    name: String,
+    conns: usize,
+    requests: usize,
+    seed: u64,
+    kv: bool,
+    v2: bool,
+) -> Variant {
+    let report =
+        run_load_with(addr, conns, INFLIGHT, requests, seed, kv, v2).expect("load run");
+    assert_eq!(report.errors, 0, "{name}: net oracle mismatches");
+    assert_eq!(
+        report.failed_conns, 0,
+        "{name}: dead connections: {:?}",
+        report.conn_errors
+    );
+    Variant {
+        name,
+        conns,
+        requests_per_s: report.requests_per_s(),
+        p50_latency_us: report.p50_us,
+        p99_latency_us: report.p99_us,
+    }
+}
+
 fn main() {
+    let smoke = loms::bench::smoke_mode();
     let requests: usize = std::env::var("BENCH_NET_REQUESTS")
         .ok()
         .and_then(|s| s.parse().ok())
-        .unwrap_or(if loms::bench::smoke_mode() { 2_000 } else { 40_000 });
+        .unwrap_or(if smoke { 2_000 } else { 40_000 });
     let svc = MergeService::start(|| Ok(SoftwareBackend::default_set()), ServiceConfig::default())
         .expect("service");
     // Warm the plan caches off the clock.
@@ -85,7 +127,9 @@ fn main() {
 
     let mut variants = vec![run_in_process(&svc, requests, 0xBE2C)];
 
-    // Same service, now behind the wire.
+    // Same service, now behind the wire. 32 workers against up to 1024
+    // connections: the scaling curve's right edge is the regime the
+    // readiness loop exists for.
     let server = NetServer::start(
         "127.0.0.1:0",
         svc,
@@ -93,32 +137,28 @@ fn main() {
     )
     .expect("server");
     let addr = server.addr().to_string();
-    for conns in [1usize, 8, 32] {
-        let report = run_load(&addr, conns, INFLIGHT, requests, 0x9E7 + conns as u64, false)
-            .expect("load run");
-        assert_eq!(report.errors, 0, "net oracle mismatches at {conns} conns");
-        variants.push(Variant {
-            name: format!("net_{conns}conn"),
-            requests_per_s: report.requests_per_s(),
-            p50_latency_us: report.p50_us,
-            p99_latency_us: report.p99_us,
-        });
+    let curve: &[usize] = if smoke { &[1, 8, 32, 256] } else { &[1, 8, 32, 256, 1024] };
+    for &conns in curve {
+        variants.push(run_wire(
+            &addr,
+            format!("net_{conns}conn"),
+            conns,
+            requests,
+            0x9E7 + conns as u64,
+            false,
+            false,
+        ));
     }
     // The same wire path carrying v1.1 key-value frames.
-    let report = run_load(&addr, 8, INFLIGHT, requests, 0xA11E, true).expect("KV load run");
-    assert_eq!(report.errors, 0, "KV net oracle mismatches");
-    variants.push(Variant {
-        name: "net_8conn_kv".into(),
-        requests_per_s: report.requests_per_s(),
-        p50_latency_us: report.p50_us,
-        p99_latency_us: report.p99_us,
-    });
+    variants.push(run_wire(&addr, "net_8conn_kv".into(), 8, requests, 0xA11E, true, false));
+    // The same wire path over protocol v2 (explicit request ids).
+    variants.push(run_wire(&addr, "net_32conn_v2".into(), 32, requests, 0xF2BD, false, true));
     let snap = server.service().metrics().snapshot();
     server.shutdown();
 
     for v in &variants {
         println!(
-            "{:<12} {:>12.0} req/s   p50 {:>9.1}µs   p99 {:>9.1}µs",
+            "{:<14} {:>12.0} req/s   p50 {:>9.1}µs   p99 {:>9.1}µs",
             v.name, v.requests_per_s, v.p50_latency_us, v.p99_latency_us
         );
     }
@@ -131,15 +171,15 @@ fn main() {
         .iter()
         .map(|v| {
             format!(
-                "    {{\"name\": \"{}\", \"requests_per_s\": {:.0}, \"p50_latency_us\": {:.1}, \
-                 \"p99_latency_us\": {:.1}}}",
-                v.name, v.requests_per_s, v.p50_latency_us, v.p99_latency_us
+                "    {{\"name\": \"{}\", \"conns\": {}, \"requests_per_s\": {:.0}, \
+                 \"p50_latency_us\": {:.1}, \"p99_latency_us\": {:.1}}}",
+                v.name, v.conns, v.requests_per_s, v.p50_latency_us, v.p99_latency_us
             )
         })
         .collect();
     let json = format!(
         "{{\n  \"bench\": \"net_serving\",\n  \"requests_per_variant\": {requests},\n  \
-         \"inflight_per_conn\": {INFLIGHT},\n  \"variants\": [\n{}\n  ]\n}}\n",
+         \"inflight_per_conn\": {INFLIGHT},\n  \"workers\": 32,\n  \"variants\": [\n{}\n  ]\n}}\n",
         rows.join(",\n")
     );
     std::fs::write("BENCH_net.json", &json).expect("write BENCH_net.json");

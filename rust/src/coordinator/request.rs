@@ -109,7 +109,71 @@ pub struct MergeResponse {
 
 /// Response channel handed back on submission.
 pub type ResponseRx = mpsc::Receiver<MergeResponse>;
-pub type ResponseTx = mpsc::Sender<MergeResponse>;
+/// How the service delivers a request's outcome. Kept as an alias so
+/// the engine/exec plumbing reads unchanged.
+pub type ResponseTx = Responder;
+
+enum ResponderInner {
+    Channel(mpsc::Sender<MergeResponse>),
+    Callback(Box<dyn FnOnce(Option<MergeResponse>) + Send>),
+}
+
+/// One-shot response delivery: either the classic per-request channel
+/// (blocking `submit` callers) or a completion callback (the event
+/// loop, which must never park a thread per request).
+///
+/// Dropping a `Responder` without responding signals rejection: the
+/// channel variant disconnects the receiver (the old drop-==-reject
+/// contract), the callback variant fires with `None`. Every admission
+/// failure in the service keeps working by just dropping the handle.
+pub struct Responder(Option<ResponderInner>);
+
+impl Responder {
+    /// Channel-backed pair: `respond` feeds the returned receiver.
+    pub fn channel() -> (Responder, ResponseRx) {
+        let (tx, rx) = mpsc::channel();
+        (Responder(Some(ResponderInner::Channel(tx))), rx)
+    }
+
+    /// Callback-backed responder: `f` runs exactly once, with
+    /// `Some(response)` on success or `None` on rejection/drop — on
+    /// whichever thread settles the request (engine, exec, or
+    /// fallback), so it must be quick and non-blocking.
+    pub fn callback(f: impl FnOnce(Option<MergeResponse>) + Send + 'static) -> Responder {
+        Responder(Some(ResponderInner::Callback(Box::new(f))))
+    }
+
+    /// Deliver the response, consuming the handle.
+    pub fn respond(mut self, resp: MergeResponse) {
+        match self.0.take() {
+            // A vanished receiver is the caller's prerogative (it gave
+            // up waiting); nothing to do.
+            Some(ResponderInner::Channel(tx)) => {
+                let _ = tx.send(resp);
+            }
+            Some(ResponderInner::Callback(f)) => f(Some(resp)),
+            None => unreachable!("respond consumes self"),
+        }
+    }
+}
+
+impl Drop for Responder {
+    fn drop(&mut self) {
+        if let Some(ResponderInner::Callback(f)) = self.0.take() {
+            f(None);
+        }
+    }
+}
+
+impl std::fmt::Debug for Responder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.0 {
+            Some(ResponderInner::Channel(_)) => f.write_str("Responder::Channel"),
+            Some(ResponderInner::Callback(_)) => f.write_str("Responder::Callback"),
+            None => f.write_str("Responder::Spent"),
+        }
+    }
+}
 
 #[cfg(test)]
 mod tests {
@@ -133,6 +197,31 @@ mod tests {
         assert!(short.check_valid().unwrap_err().contains("payload"));
         // Key-only requests never trip the payload check.
         assert!(!MergeRequest::new(3, vec![vec![1]]).is_kv());
+    }
+
+    fn resp(id: u64) -> MergeResponse {
+        MergeResponse { id, merged: vec![], payloads: None, latency_ns: 0, served_by: "t".into() }
+    }
+
+    #[test]
+    fn responder_channel_delivers_and_drop_disconnects() {
+        let (tx, rx) = Responder::channel();
+        tx.respond(resp(7));
+        assert_eq!(rx.recv().unwrap().id, 7);
+        let (tx, rx) = Responder::channel();
+        drop(tx);
+        assert!(rx.recv().is_err(), "drop == reject disconnects the receiver");
+    }
+
+    #[test]
+    fn responder_callback_fires_once_with_none_on_drop() {
+        use std::sync::Mutex;
+        let got: Arc<Mutex<Vec<Option<u64>>>> = Arc::new(Mutex::new(vec![]));
+        let g = got.clone();
+        Responder::callback(move |r| g.lock().unwrap().push(r.map(|r| r.id))).respond(resp(9));
+        let g = got.clone();
+        drop(Responder::callback(move |r| g.lock().unwrap().push(r.map(|r| r.id))));
+        assert_eq!(*got.lock().unwrap(), vec![Some(9), None]);
     }
 
     #[test]

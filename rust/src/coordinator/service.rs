@@ -29,7 +29,7 @@
 
 use super::backend::Backend;
 use super::metrics::Metrics;
-use super::request::{MergeRequest, MergeResponse, ResponseTx};
+use super::request::{MergeRequest, MergeResponse, Responder, ResponseTx};
 use super::router::{Route, Router};
 use crate::obs::{self, SpanEvent};
 use crate::runtime::ArtifactMeta;
@@ -105,11 +105,18 @@ enum Msg {
 /// Handle to a running merge service.
 pub struct MergeService {
     tx: mpsc::Sender<Msg>,
-    engine: Option<JoinHandle<()>>,
-    exec: Option<JoinHandle<()>>,
-    fallback: Vec<JoinHandle<()>>,
+    /// Stage threads, taken exactly once by whichever caller drains
+    /// first — `shutdown(&self)` works through any clone/borrow, and a
+    /// second call (or `Drop` after an explicit shutdown) is a no-op.
+    joins: Mutex<Option<Joins>>,
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
+}
+
+struct Joins {
+    engine: JoinHandle<()>,
+    exec: JoinHandle<()>,
+    fallback: Vec<JoinHandle<()>>,
 }
 
 struct Slot {
@@ -426,10 +433,10 @@ fn respond_batch(
     metrics.on_batch(real, padded_rows);
     for (r, (slot, out)) in slots.into_iter().zip(merged).enumerate() {
         let latency = slot.req.submitted.elapsed();
-        // Record before sending: a caller may observe the response and
-        // read the snapshot before we run again.
+        // Record before responding: a caller may observe the response
+        // and read the snapshot before we run again.
         metrics.on_response(latency);
-        let _ = slot.tx.send(MergeResponse {
+        slot.tx.respond(MergeResponse {
             id: slot.req.id,
             merged: out,
             payloads: payloads.as_mut().map(|p| std::mem::take(&mut p[r])),
@@ -487,7 +494,7 @@ fn fallback_loop(rx: Arc<Mutex<mpsc::Receiver<FallbackJob>>>, metrics: Arc<Metri
         }
         let latency = req.submitted.elapsed();
         metrics.on_response(latency);
-        let _ = tx.send(MergeResponse {
+        tx.respond(MergeResponse {
             id: req.id,
             merged,
             payloads,
@@ -588,12 +595,32 @@ impl MergeService {
             .context("spawning engine thread")?;
         Ok(MergeService {
             tx,
-            engine: Some(engine),
-            exec: Some(exec),
-            fallback,
+            joins: Mutex::new(Some(Joins { engine, exec, fallback })),
             metrics,
             next_id: AtomicU64::new(1),
         })
+    }
+
+    fn alloc_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Hand a request to the engine. When the engine is already gone
+    /// (a submit raced an explicit [`shutdown`]), the request is
+    /// accounted as rejected — keeping the `requests == responses +
+    /// rejected` balance and the [`pending`] gauge honest — and the
+    /// responder is dropped (drop == reject).
+    ///
+    /// [`shutdown`]: MergeService::shutdown
+    /// [`pending`]: MergeService::pending
+    fn enqueue(&self, req: MergeRequest, tx: ResponseTx) {
+        if let Err(mpsc::SendError(msg)) = self.tx.send(Msg::Job(Box::new(req), tx)) {
+            if let Msg::Job(_, tx) = msg {
+                self.metrics.on_request();
+                self.metrics.on_rejected();
+                drop(tx);
+            }
+        }
     }
 
     /// Submit a merge; returns the response channel.
@@ -606,11 +633,38 @@ impl MergeService {
     /// may mint via `metrics().tracer().mint()` to follow their own
     /// request through the span ring.
     pub fn submit_traced(&self, lists: Vec<Vec<u32>>, trace: u64) -> mpsc::Receiver<MergeResponse> {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let (tx, rx) = mpsc::channel();
-        let req = MergeRequest::new(id, lists).with_trace(trace);
-        let _ = self.tx.send(Msg::Job(Box::new(req), tx));
+        let (tx, rx) = Responder::channel();
+        self.enqueue(MergeRequest::new(self.alloc_id(), lists).with_trace(trace), tx);
         rx
+    }
+
+    /// Submit with a completion callback instead of a channel — the
+    /// event-driven net server's path, where no thread may park per
+    /// request. `on_done` runs exactly once with `Some(response)` on
+    /// success or `None` on rejection, on whichever service thread
+    /// settles the request — it must be quick and non-blocking.
+    pub fn submit_with(
+        &self,
+        lists: Vec<Vec<u32>>,
+        trace: u64,
+        on_done: impl FnOnce(Option<MergeResponse>) + Send + 'static,
+    ) {
+        let req = MergeRequest::new(self.alloc_id(), lists).with_trace(trace);
+        self.enqueue(req, Responder::callback(on_done));
+    }
+
+    /// Key-value twin of [`submit_with`].
+    ///
+    /// [`submit_with`]: MergeService::submit_with
+    pub fn submit_kv_with(
+        &self,
+        lists: Vec<Vec<u32>>,
+        payloads: Vec<u64>,
+        trace: u64,
+        on_done: impl FnOnce(Option<MergeResponse>) + Send + 'static,
+    ) {
+        let req = MergeRequest::new_kv(self.alloc_id(), lists, payloads).with_trace(trace);
+        self.enqueue(req, Responder::callback(on_done));
     }
 
     /// Submit a key-value merge: `payloads` is the list-major column
@@ -634,10 +688,8 @@ impl MergeService {
         payloads: Vec<u64>,
         trace: u64,
     ) -> mpsc::Receiver<MergeResponse> {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let (tx, rx) = mpsc::channel();
-        let req = MergeRequest::new_kv(id, lists, payloads).with_trace(trace);
-        let _ = self.tx.send(Msg::Job(Box::new(req), tx));
+        let (tx, rx) = Responder::channel();
+        self.enqueue(MergeRequest::new_kv(self.alloc_id(), lists, payloads).with_trace(trace), tx);
         rx
     }
 
@@ -670,31 +722,35 @@ impl MergeService {
         submitted.saturating_sub(self.metrics.settled())
     }
 
-    /// Join every stage: engine first (its drop closes the batch and
-    /// fallback channels), then the executor and fallback workers drain
-    /// what is in flight and exit.
-    fn stop(&mut self) {
+    /// Stop the engine, flushing pending batches, and join every stage:
+    /// engine first (its drop closes the batch and fallback channels),
+    /// then the executor and fallback workers drain what is in flight
+    /// and exit.
+    ///
+    /// Idempotent and clone-proof: the stage handles are taken exactly
+    /// once under a lock, so the drain happens regardless of how many
+    /// `Arc<MergeService>` clones survive (the old `Arc::try_unwrap`
+    /// gate silently skipped it when any clone was held, dropping
+    /// in-flight batches). A concurrent second caller blocks until the
+    /// drain finishes; a later call (or `Drop`) is a no-op.
+    pub fn shutdown(&self) {
+        let mut joins = match self.joins.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        let Some(j) = joins.take() else { return };
         let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.engine.take() {
+        let _ = j.engine.join();
+        let _ = j.exec.join();
+        for h in j.fallback {
             let _ = h.join();
         }
-        if let Some(h) = self.exec.take() {
-            let _ = h.join();
-        }
-        for h in self.fallback.drain(..) {
-            let _ = h.join();
-        }
-    }
-
-    /// Stop the engine, flushing pending batches.
-    pub fn shutdown(mut self) {
-        self.stop();
     }
 }
 
 impl Drop for MergeService {
     fn drop(&mut self) {
-        self.stop();
+        self.shutdown();
     }
 }
 
@@ -990,6 +1046,50 @@ mod tests {
         let rx = s.submit(vec![vec![1, 2], vec![3, 4]]);
         s.shutdown();
         assert_eq!(rx.recv().unwrap().merged, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn shutdown_drains_with_a_clone_held() {
+        // Regression: the old shutdown path gated the drain on
+        // `Arc::try_unwrap`, so any surviving clone meant in-flight
+        // batches were dropped instead of flushed. The drain must not
+        // depend on reference counts.
+        let s = Arc::new(svc());
+        let clone = Arc::clone(&s);
+        let rx = s.submit(vec![vec![1, 2], vec![3, 4]]);
+        s.shutdown();
+        assert_eq!(
+            rx.recv().expect("in-flight request drained despite the held clone").merged,
+            vec![1, 2, 3, 4]
+        );
+        // Idempotent: a second call (through either handle) is a no-op.
+        clone.shutdown();
+        s.shutdown();
+    }
+
+    #[test]
+    fn callback_submit_completes_and_post_shutdown_submit_rejects() {
+        let s = svc();
+        let (tx, rx) = mpsc::channel();
+        let tx2 = tx.clone();
+        s.submit_with(vec![vec![1, 3], vec![2, 4]], 0, move |r| {
+            tx2.send(r.map(|r| r.merged)).unwrap()
+        });
+        assert_eq!(rx.recv().unwrap(), Some(vec![1, 2, 3, 4]));
+        // A rejected request (unsorted) fires the callback with None.
+        let tx2 = tx.clone();
+        s.submit_with(vec![vec![5, 1]], 0, move |r| tx2.send(r.map(|r| r.merged)).unwrap());
+        assert_eq!(rx.recv().unwrap(), None);
+        s.shutdown();
+        // Post-shutdown submits reject via the callback and stay
+        // balanced in the metrics (requests == responses + rejected).
+        let tx2 = tx.clone();
+        s.submit_with(vec![vec![1, 2]], 0, move |r| tx2.send(r.map(|r| r.merged)).unwrap());
+        assert_eq!(rx.recv().unwrap(), None);
+        let snap = s.metrics().snapshot();
+        snap.check().unwrap();
+        assert_eq!(snap.rejected, 2);
+        assert_eq!(s.pending(), 0, "post-shutdown submit settles the gauge");
     }
 
     #[test]

@@ -22,9 +22,11 @@
 //!   composed into a lane-batched merge tree) and the run-formation +
 //!   spill external sorter behind `loms sort`.
 //! * [`net`] — the networked serving front-end: versioned framed-TCP
-//!   protocol, [`net::NetServer`] (acceptor + bounded worker pool over
-//!   the pipelined service) and the pipelined [`net::NetClient`] /
-//!   load generator behind `loms serve --listen` and `loms bench-net`.
+//!   protocol (v2 adds echoed request ids for multiplexing),
+//!   [`net::NetServer`] (a nonblocking readiness loop over epoll/kqueue
+//!   plus a fixed dispatch pool — connections bounded by memory, not
+//!   threads) and the pipelined [`net::NetClient`] / load generator
+//!   behind `loms serve --listen` and `loms bench-net`.
 //! * [`obs`] — observability: the log-linear latency histogram (one
 //!   percentile definition stack-wide), per-request tracing with a
 //!   bounded span ring, and the stats wire/JSONL export surface behind

@@ -19,9 +19,10 @@
 //!   stats    --addr ADDR                            fetch and pretty-print
 //!            the live stats document from a running `serve --listen`
 //!   bench-net --addr ADDR [--conns N] [--inflight M] [--requests R]
-//!            [--payload true] [--smoke true]
+//!            [--payload true] [--proto v2] [--smoke true]
 //!            load-generate against a running `serve --listen`
 //!            (--payload true sends v1.1 key-value requests;
+//!            --proto v2 multiplexes over protocol-v2 request ids;
 //!            --smoke true shrinks the run for CI gate checks)
 //!   sort     [--engine stream|ladder] [--n N] [--input F [--output F]]
 //!            [--r R] [--run-len L] [--fanin F] [--spill DIR]
@@ -404,11 +405,20 @@ fn run(args: &[String]) -> Result<()> {
             let seed = get_usize(&o, "seed", 0xBE7)? as u64;
             // Valued flag (`--payload true`): see the --ladder-runs note.
             let kv = o.get("payload").map(String::as_str) == Some("true");
-            let report = net::run_load(addr, conns, inflight, requests, seed, kv)?;
+            // `--proto v2` drives every connection over protocol v2
+            // (explicit request ids, replies in completion order);
+            // default is the v1 in-order pipeline.
+            let v2 = match o.get("proto").map(String::as_str) {
+                None | Some("v1") => false,
+                Some("v2") => true,
+                Some(other) => anyhow::bail!("unknown --proto {other:?} (want v1 or v2)"),
+            };
+            let report = net::run_load_with(addr, conns, inflight, requests, seed, kv, v2)?;
             println!(
-                "mode={} {} conns × {} inflight: {} ok / {} errors / {} retries in {:?} \
+                "mode={}{} {} conns × {} inflight: {} ok / {} errors / {} retries in {:?} \
                  ({:.0} req/s, p50 {:.0}µs, p99 {:.0}µs)",
                 if kv { "key-value" } else { "key-only" },
+                if v2 { " proto=v2" } else { "" },
                 report.connections,
                 report.inflight,
                 report.ok,

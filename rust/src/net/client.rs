@@ -4,10 +4,16 @@
 //!
 //! [`NetClient`] supports *pipelined* submission: any number of
 //! [`NetClient::submit`] calls may be outstanding before the matching
-//! [`NetClient::recv`] calls — responses arrive strictly in request
-//! order (the protocol carries no ids; ordering is the correlation).
-//! Encoding reuses one write buffer, so a steady-state client
-//! allocates only the decoded response vectors.
+//! [`NetClient::recv`] calls. On a v1 connection ([`NetClient::connect`])
+//! responses arrive strictly in request order — the frames carry no
+//! ids; ordering is the correlation. On a v2 connection
+//! ([`NetClient::connect_v2`]) every submit claims a `u64` request id
+//! (returned by the submit call and echoed in [`NetMerge::id`] /
+//! [`ServerError::id`]), replies arrive in *completion* order, and
+//! [`NetClient::recv`] matches each one to its request by id — many
+//! logical callers can multiplex one connection. Encoding reuses one
+//! write buffer, so a steady-state client allocates only the decoded
+//! response vectors.
 //!
 //! # Retry and replay
 //!
@@ -18,9 +24,10 @@
 //! jitter, bounded by a per-operation deadline budget) and replays
 //! the whole unanswered window in order. This is sound because merge
 //! requests are **pure and idempotent** — re-executing one produces
-//! byte-identical output and mutates nothing server-side — and the
-//! protocol correlates replies by order, so a replayed stream is
-//! indistinguishable from a first transmission. Server-side
+//! byte-identical output and mutates nothing server-side — and
+//! replies correlate by order (v1) or by the echoed request id (v2),
+//! so a replayed stream is indistinguishable from a first
+//! transmission. Server-side
 //! [`code::OVERLOADED`] sheds are *not* replayed here (the reply did
 //! arrive); they surface as a typed [`ServerError`] so the caller can
 //! resubmit on its own schedule — [`run_load`] does exactly that.
@@ -39,6 +46,9 @@ use std::time::{Duration, Instant};
 /// One merged response off the wire.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct NetMerge {
+    /// The request id this reply answers (0 on a v1 connection, where
+    /// ordering is the correlation).
+    pub id: u64,
     pub merged: Vec<u32>,
     /// Key-value requests only: the merged payload column,
     /// `payloads[t]` riding with `merged[t]`.
@@ -54,6 +64,8 @@ pub struct NetMerge {
 pub struct ServerError {
     pub code: u8,
     pub message: String,
+    /// The request id the error answers (0 on a v1 connection).
+    pub id: u64,
 }
 
 impl ServerError {
@@ -112,9 +124,17 @@ pub struct NetClient {
     addr: Option<SocketAddr>,
     retry: Option<RetryPolicy>,
     jitter: crate::util::Rng,
-    /// Encoded request frames submitted but not yet answered — the
-    /// replay window for reconnects (one entry per in-flight merge).
-    unanswered: VecDeque<Vec<u8>>,
+    /// Protocol v2: frames carry request ids and replies arrive in
+    /// completion order.
+    proto2: bool,
+    /// Next v2 request id to claim (ids are unique per connection
+    /// lifetime on the client side; the server only requires them
+    /// unique among in-flight requests).
+    next_id: u64,
+    /// Encoded request frames submitted but not yet answered, keyed by
+    /// request id (0 on v1) — the replay window for reconnects (one
+    /// entry per in-flight merge).
+    unanswered: VecDeque<(u64, Vec<u8>)>,
     /// Previous backoff sleep (decorrelated jitter state).
     last_backoff: Duration,
     /// Successful reconnect-and-replay recoveries so far.
@@ -140,10 +160,33 @@ impl NetClient {
             addr: resolved,
             retry: None,
             jitter: crate::util::Rng::new(0x5EED),
+            proto2: false,
+            next_id: 1,
             unanswered: VecDeque::new(),
             last_backoff: Duration::ZERO,
             retries: 0,
         })
+    }
+
+    /// Connect speaking protocol v2: every request carries a `u64`
+    /// id (returned by the submit call), replies arrive in completion
+    /// order and are matched by the echoed id. The server latches the
+    /// connection to v2 on the first frame.
+    pub fn connect_v2(addr: impl ToSocketAddrs) -> Result<NetClient> {
+        let mut c = NetClient::connect(addr)?;
+        c.proto2 = true;
+        Ok(c)
+    }
+
+    /// Claim the id the next frame will carry (0 on a v1 connection,
+    /// whose frames have no id field).
+    fn alloc_id(&mut self) -> u64 {
+        if !self.proto2 {
+            return 0;
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        id
     }
 
     /// Arm reconnect-and-replay: after this, a broken connection is
@@ -161,20 +204,34 @@ impl NetClient {
     }
 
     /// Liveness probe: Ping, expect Pong. Must not be interleaved with
-    /// outstanding merges (the Pong would arrive in their order).
+    /// outstanding merges (the Pong would arrive among their replies).
     pub fn ping(&mut self) -> Result<()> {
         anyhow::ensure!(self.inflight == 0, "ping with {} merges in flight", self.inflight);
-        protocol::encode_frame(&Frame::Ping, &mut self.wbuf);
-        self.write_wbuf(false, "sending ping")?;
+        let id = self.alloc_id();
+        if self.proto2 {
+            protocol::encode_frame_v2(&Frame::Ping, id, &mut self.wbuf);
+        } else {
+            protocol::encode_frame(&Frame::Ping, &mut self.wbuf);
+        }
+        self.write_wbuf(None, "sending ping")?;
         match self.read_reply() {
-            Ok(Frame::Pong) => Ok(()),
-            Ok(other) => bail!("expected Pong, got {other:?}"),
+            Ok((Frame::Pong, rid)) => {
+                anyhow::ensure!(
+                    rid.unwrap_or(0) == id,
+                    "pong echoed id {:?}, expected {id}",
+                    rid
+                );
+                Ok(())
+            }
+            Ok((other, _)) => bail!("expected Pong, got {other:?}"),
             Err(e) => Err(e.into_anyhow().context("awaiting pong")),
         }
     }
 
     /// Send one merge request without waiting (pipelined submission).
-    pub fn submit(&mut self, lists: &[Vec<u32>]) -> Result<()> {
+    /// Returns the request id its reply will echo (0 on v1, where the
+    /// reply is correlated by order instead).
+    pub fn submit(&mut self, lists: &[Vec<u32>]) -> Result<u64> {
         self.submit_traced(lists, 0)
     }
 
@@ -182,7 +239,7 @@ impl NetClient {
     /// stays byte-identical to v1). A nonzero id follows the request
     /// through admission, batching, and execution server-side — pair it
     /// with the server's `--trace-sample`/`--trace-file` exporter.
-    pub fn submit_traced(&mut self, lists: &[Vec<u32>], trace: u64) -> Result<()> {
+    pub fn submit_traced(&mut self, lists: &[Vec<u32>], trace: u64) -> Result<u64> {
         anyhow::ensure!(
             !lists.is_empty() && lists.len() <= MAX_K,
             "k = {} outside 1..={MAX_K}",
@@ -207,13 +264,20 @@ impl NetClient {
             payload <= MAX_REQUEST_BYTES,
             "request payload {payload} bytes exceeds {MAX_REQUEST_BYTES}"
         );
-        encode_merge_request(MODE_MERGE, trace, lists, &mut self.wbuf);
-        self.write_wbuf(true, "sending merge request")
+        let id = self.alloc_id();
+        if self.proto2 {
+            protocol::encode_merge_request_v2(id, MODE_MERGE, trace, lists, &mut self.wbuf);
+        } else {
+            encode_merge_request(MODE_MERGE, trace, lists, &mut self.wbuf);
+        }
+        self.write_wbuf(Some(id), "sending merge request")?;
+        Ok(id)
     }
 
     /// Send one v1.1 key-value merge request without waiting:
-    /// `payloads` is the list-major column, one `u64` per key.
-    pub fn submit_kv(&mut self, lists: &[Vec<u32>], payloads: &[u64]) -> Result<()> {
+    /// `payloads` is the list-major column, one `u64` per key. Returns
+    /// the request id like [`Self::submit`].
+    pub fn submit_kv(&mut self, lists: &[Vec<u32>], payloads: &[u64]) -> Result<u64> {
         self.submit_kv_traced(lists, payloads, 0)
     }
 
@@ -223,7 +287,7 @@ impl NetClient {
         lists: &[Vec<u32>],
         payloads: &[u64],
         trace: u64,
-    ) -> Result<()> {
+    ) -> Result<u64> {
         anyhow::ensure!(
             !lists.is_empty() && lists.len() <= MAX_K,
             "k = {} outside 1..={MAX_K}",
@@ -250,8 +314,16 @@ impl NetClient {
             payload <= MAX_REQUEST_BYTES,
             "request payload {payload} bytes exceeds {MAX_REQUEST_BYTES}"
         );
-        encode_merge_request_kv(MODE_MERGE, trace, lists, payloads, &mut self.wbuf);
-        self.write_wbuf(true, "sending KV merge request")
+        let id = self.alloc_id();
+        if self.proto2 {
+            protocol::encode_merge_request_kv_v2(
+                id, MODE_MERGE, trace, lists, payloads, &mut self.wbuf,
+            );
+        } else {
+            encode_merge_request_kv(MODE_MERGE, trace, lists, payloads, &mut self.wbuf);
+        }
+        self.write_wbuf(Some(id), "sending KV merge request")?;
+        Ok(id)
     }
 
     /// Fetch the server's live stats document (v1.2 `Stats` frames).
@@ -260,50 +332,78 @@ impl NetClient {
     /// JSON; shape validation is [`crate::obs::expo::check_stats_doc`].
     pub fn stats(&mut self) -> Result<Json> {
         anyhow::ensure!(self.inflight == 0, "stats with {} merges in flight", self.inflight);
-        encode_stats_request(&mut self.wbuf);
-        self.write_wbuf(false, "sending stats request")?;
+        let id = self.alloc_id();
+        if self.proto2 {
+            protocol::encode_stats_request_v2(id, &mut self.wbuf);
+        } else {
+            encode_stats_request(&mut self.wbuf);
+        }
+        self.write_wbuf(None, "sending stats request")?;
         match self.read_reply() {
-            Ok(Frame::StatsResponse { json }) => {
+            Ok((Frame::StatsResponse { json }, _)) => {
                 Json::parse(&json).map_err(|e| anyhow!("unparsable stats document: {e}"))
             }
-            Ok(other) => bail!("expected StatsResponse, got {other:?}"),
+            // A typed refusal (e.g. the stats document overflowed the
+            // frame limit) surfaces as a ServerError, not a bail — the
+            // caller can branch on the code.
+            Ok((Frame::Error { code, message }, rid)) => {
+                Err(ServerError { code, message, id: rid.unwrap_or(0) }.into())
+            }
+            Ok((other, _)) => bail!("expected StatsResponse, got {other:?}"),
             Err(e) => Err(e.into_anyhow().context("awaiting stats response")),
         }
     }
 
-    /// Receive the next in-order response. A server `Error` frame
-    /// surfaces as a typed [`ServerError`] inside the `anyhow` chain —
-    /// downcast to branch on the code.
+    /// Receive the next response: the next in-order reply on v1, the
+    /// next *completed* reply (any outstanding id) on v2 — check
+    /// [`NetMerge::id`] to see which request it answers. A server
+    /// `Error` frame surfaces as a typed [`ServerError`] inside the
+    /// `anyhow` chain — downcast to branch on the code (its `id` names
+    /// the errored request on v2).
     pub fn recv(&mut self) -> Result<NetMerge> {
         anyhow::ensure!(self.inflight > 0, "recv with nothing in flight");
         let deadline = self.op_deadline();
         let mut attempts = 0u32;
-        let frame = loop {
+        let (frame, rid) = loop {
             match self.read_reply() {
                 Ok(f) => break f,
                 Err(ReadError::Protocol(m)) => bail!("undecodable server frame: {m}"),
                 Err(e) => {
                     // Connection-level failure with requests in flight:
                     // reconnect and replay the unanswered window, then
-                    // keep waiting for the front request's reply.
+                    // keep waiting for a reply.
                     self.reconnect_and_replay(&mut attempts, deadline, e.into_anyhow())?;
                 }
             }
         };
-        // Any frame answers the front unanswered request (ordering is
-        // the correlation), so the replay window shrinks even when the
-        // reply is an error.
+        // Settle the replay window: v1 answers the front request
+        // (ordering is the correlation, even for error replies); v2
+        // answers whichever entry the echoed id names — an id we never
+        // sent (or already answered) is a peer protocol violation.
+        let id = if self.proto2 {
+            let Some(rid) = rid else {
+                bail!("v1-framed reply on a v2 connection");
+            };
+            let Some(pos) = self.unanswered.iter().position(|(i, _)| *i == rid) else {
+                bail!("response carries unknown request id {rid}");
+            };
+            self.unanswered.remove(pos);
+            rid
+        } else {
+            anyhow::ensure!(rid.is_none(), "v2-framed reply on a v1 connection");
+            self.unanswered.pop_front();
+            0
+        };
         self.inflight -= 1;
-        self.unanswered.pop_front();
         self.last_backoff = Duration::ZERO;
         match frame {
             Frame::MergeResponse { served_by, merged } => {
-                Ok(NetMerge { merged, payloads: None, served_by })
+                Ok(NetMerge { id, merged, payloads: None, served_by })
             }
             Frame::MergeResponseKV { served_by, merged, payloads } => {
-                Ok(NetMerge { merged, payloads: Some(payloads), served_by })
+                Ok(NetMerge { id, merged, payloads: Some(payloads), served_by })
             }
-            Frame::Error { code, message } => Err(ServerError { code, message }.into()),
+            Frame::Error { code, message } => Err(ServerError { code, message, id }.into()),
             other => bail!("expected MergeResponse, got {other:?}"),
         }
     }
@@ -336,16 +436,17 @@ impl NetClient {
 
     /// Write the encoded frame in `wbuf`; with a [`RetryPolicy`], a
     /// failed write reconnects, replays the unanswered window, and
-    /// resends. `record` appends the frame to that window (merge
-    /// requests yes, pings no — pings require an empty window).
-    fn write_wbuf(&mut self, record: bool, what: &'static str) -> Result<()> {
+    /// resends. `record` appends the frame to that window under the
+    /// given request id (merge requests yes, pings/stats no — those
+    /// require an empty window).
+    fn write_wbuf(&mut self, record: Option<u64>, what: &'static str) -> Result<()> {
         let deadline = self.op_deadline();
         let mut attempts = 0u32;
         loop {
             match self.stream.write_all(&self.wbuf) {
                 Ok(()) => {
-                    if record {
-                        self.unanswered.push_back(self.wbuf.clone());
+                    if let Some(id) = record {
+                        self.unanswered.push_back((id, self.wbuf.clone()));
                         self.inflight += 1;
                     }
                     self.last_backoff = Duration::ZERO;
@@ -400,7 +501,7 @@ impl NetClient {
             self.stream = stream;
             self.reader = FrameReader::new();
             let NetClient { stream, unanswered, .. } = self;
-            if unanswered.iter().all(|f| stream.write_all(f).is_ok()) {
+            if unanswered.iter().all(|(_, f)| stream.write_all(f).is_ok()) {
                 self.retries += 1;
                 return Ok(());
             }
@@ -408,10 +509,11 @@ impl NetClient {
         }
     }
 
-    fn read_reply(&mut self) -> std::result::Result<Frame, ReadError> {
+    fn read_reply(&mut self) -> std::result::Result<(Frame, Option<u64>), ReadError> {
         loop {
             match self.reader.read_frame(&mut self.stream) {
-                Ok(ReadFrame::Frame(f)) => return Ok(f),
+                Ok(ReadFrame::Frame(f)) => return Ok((f, None)),
+                Ok(ReadFrame::FrameV2(f, id)) => return Ok((f, Some(id))),
                 Ok(ReadFrame::Pending) => continue, // frame still arriving
                 Ok(ReadFrame::Eof) => return Err(ReadError::Closed),
                 Ok(ReadFrame::Malformed(m)) | Ok(ReadFrame::Corrupt(m)) => {
@@ -525,56 +627,70 @@ struct Pending {
 /// error — bounds the drain loop under a permanently overloaded server.
 const MAX_OVERLOAD_RESUBMITS: u32 = 64;
 
-/// Receive one in-order response and score it against its oracle
-/// (shared by the submit-loop window and the tail drain). An
-/// `OVERLOADED` shed is resubmitted (bounded) instead of counted;
-/// connection-level failures surface as `Err` and fail the connection.
+/// Pop the pending entry a reply settles: the front of the window on
+/// v1 (ordering is the correlation), the id-matched entry on v2
+/// (replies arrive in completion order).
+fn take_pending(pending: &mut VecDeque<(u64, Pending)>, v2: bool, id: u64) -> Option<Pending> {
+    if !v2 {
+        return pending.pop_front().map(|(_, p)| p);
+    }
+    let pos = pending.iter().position(|(i, _)| *i == id)?;
+    pending.remove(pos).map(|(_, p)| p)
+}
+
+/// Receive one response and score it against its oracle (shared by
+/// the submit-loop window and the tail drain). An `OVERLOADED` shed is
+/// resubmitted (bounded) instead of counted; connection-level failures
+/// surface as `Err` and fail the connection.
 fn drain_one(
     client: &mut NetClient,
-    pending: &mut VecDeque<Pending>,
+    pending: &mut VecDeque<(u64, Pending)>,
+    v2: bool,
     ok: &mut usize,
     errors: &mut usize,
     resubmits: &mut u64,
     lat_us: &mut Vec<f64>,
 ) -> Result<()> {
-    let Some(mut p) = pending.pop_front() else {
-        bail!("drain with nothing pending");
-    };
     match client.recv() {
-        Ok(resp) if resp.merged == p.want && resp.payloads == p.want_pays => {
-            *ok += 1;
-            lat_us.push(p.sent_at.elapsed().as_nanos() as f64 / 1_000.0);
-        }
-        Err(e)
-            if e.downcast_ref::<ServerError>().is_some_and(ServerError::is_overloaded)
-                && p.resubmits < MAX_OVERLOAD_RESUBMITS =>
-        {
-            // Shed at admission: the request was never submitted, so
-            // resending is always safe. It goes to the back of this
-            // connection's window (ordering is the correlation), with
-            // its oracle and original timestamp riding along.
-            *resubmits += 1;
-            p.resubmits += 1;
-            std::thread::sleep(Duration::from_millis(1 << p.resubmits.min(5)));
-            match &p.pays {
-                Some(pays) => client.submit_kv(&p.lists, pays)?,
-                None => client.submit(&p.lists)?,
+        Ok(resp) => {
+            let Some(p) = take_pending(pending, v2, resp.id) else {
+                bail!("reply for untracked request id {}", resp.id);
+            };
+            if resp.merged == p.want && resp.payloads == p.want_pays {
+                *ok += 1;
+            } else {
+                *errors += 1;
             }
-            pending.push_back(p);
-        }
-        Ok(_) => {
-            *errors += 1;
             lat_us.push(p.sent_at.elapsed().as_nanos() as f64 / 1_000.0);
         }
         Err(e) => {
-            // A non-overload server error settles the request; a
-            // connection-level error (retry budget exhausted) is fatal
-            // for the whole connection.
-            if e.downcast_ref::<ServerError>().is_none() {
+            // A server error settles its request; a connection-level
+            // error (retry budget exhausted) is fatal for the whole
+            // connection.
+            let Some(se) = e.downcast_ref::<ServerError>() else {
                 return Err(e.context("receiving load response"));
+            };
+            let overloaded = se.is_overloaded();
+            let Some(mut p) = take_pending(pending, v2, se.id) else {
+                bail!("error reply for untracked request id {}", se.id);
+            };
+            if overloaded && p.resubmits < MAX_OVERLOAD_RESUBMITS {
+                // Shed at admission: the request was never submitted,
+                // so resending is always safe. It rejoins this
+                // connection's window (under the fresh id on v2), with
+                // its oracle and original timestamp riding along.
+                *resubmits += 1;
+                p.resubmits += 1;
+                std::thread::sleep(Duration::from_millis(1 << p.resubmits.min(5)));
+                let id = match &p.pays {
+                    Some(pays) => client.submit_kv(&p.lists, pays)?,
+                    None => client.submit(&p.lists)?,
+                };
+                pending.push_back((id, p));
+            } else {
+                *errors += 1;
+                lat_us.push(p.sent_at.elapsed().as_nanos() as f64 / 1_000.0);
             }
-            *errors += 1;
-            lat_us.push(p.sent_at.elapsed().as_nanos() as f64 / 1_000.0);
         }
     }
     Ok(())
@@ -602,6 +718,21 @@ pub fn run_load(
     seed: u64,
     kv: bool,
 ) -> Result<LoadReport> {
+    run_load_with(addr, connections, inflight, total_requests, seed, kv, false)
+}
+
+/// [`run_load`] with a protocol selector: `v2` drives every connection
+/// over protocol v2 (explicit request ids, replies in completion
+/// order, oracle matched per id) instead of v1's in-order pipeline.
+pub fn run_load_with(
+    addr: &str,
+    connections: usize,
+    inflight: usize,
+    total_requests: usize,
+    seed: u64,
+    kv: bool,
+    v2: bool,
+) -> Result<LoadReport> {
     anyhow::ensure!(connections >= 1 && inflight >= 1, "need >=1 connection and inflight");
     let per_conn = total_requests.div_ceil(connections);
     let t0 = Instant::now();
@@ -610,18 +741,23 @@ pub fn run_load(
         let handles: Vec<_> = (0..connections)
             .map(|c| {
                 s.spawn(move || -> ConnResult {
-                    let mut client = NetClient::connect(addr)?.with_retry(RetryPolicy {
+                    let raw = if v2 {
+                        NetClient::connect_v2(addr)?
+                    } else {
+                        NetClient::connect(addr)?
+                    };
+                    let mut client = raw.with_retry(RetryPolicy {
                         seed: seed ^ (c as u64).wrapping_mul(0xD1B5),
                         ..RetryPolicy::default()
                     });
                     let mut rng = crate::util::Rng::new(seed ^ (c as u64).wrapping_mul(0x9E37));
-                    let mut pending: VecDeque<Pending> = VecDeque::new();
+                    let mut pending: VecDeque<(u64, Pending)> = VecDeque::new();
                     let (mut ok, mut errors) = (0usize, 0usize);
                     let mut resubmits = 0u64;
                     let mut lat_us = Vec::with_capacity(per_conn);
                     for r in 0..per_conn {
                         let lists = workload_lists(&mut rng);
-                        let p = if kv {
+                        let (id, p) = if kv {
                             let keys: Vec<u32> = lists.concat();
                             // Unique tags so the oracle discriminates
                             // payload routing exactly.
@@ -633,39 +769,45 @@ pub fn run_load(
                             pairs.sort_by_key(|&(k, _)| k); // stable
                             let want: Vec<u32> = pairs.iter().map(|&(k, _)| k).collect();
                             let want_pays: Vec<u64> = pairs.iter().map(|&(_, p)| p).collect();
-                            client.submit_kv(&lists, &pays)?;
-                            Pending {
-                                lists,
-                                pays: Some(pays),
-                                want,
-                                want_pays: Some(want_pays),
-                                sent_at: Instant::now(),
-                                resubmits: 0,
-                            }
+                            let id = client.submit_kv(&lists, &pays)?;
+                            (
+                                id,
+                                Pending {
+                                    lists,
+                                    pays: Some(pays),
+                                    want,
+                                    want_pays: Some(want_pays),
+                                    sent_at: Instant::now(),
+                                    resubmits: 0,
+                                },
+                            )
                         } else {
                             let mut want: Vec<u32> = lists.concat();
                             want.sort_unstable();
-                            client.submit(&lists)?;
-                            Pending {
-                                lists,
-                                pays: None,
-                                want,
-                                want_pays: None,
-                                sent_at: Instant::now(),
-                                resubmits: 0,
-                            }
+                            let id = client.submit(&lists)?;
+                            (
+                                id,
+                                Pending {
+                                    lists,
+                                    pays: None,
+                                    want,
+                                    want_pays: None,
+                                    sent_at: Instant::now(),
+                                    resubmits: 0,
+                                },
+                            )
                         };
-                        pending.push_back(p);
+                        pending.push_back((id, p));
                         if pending.len() >= inflight {
                             drain_one(
-                                &mut client, &mut pending, &mut ok, &mut errors, &mut resubmits,
-                                &mut lat_us,
+                                &mut client, &mut pending, v2, &mut ok, &mut errors,
+                                &mut resubmits, &mut lat_us,
                             )?;
                         }
                     }
                     while !pending.is_empty() {
                         drain_one(
-                            &mut client, &mut pending, &mut ok, &mut errors, &mut resubmits,
+                            &mut client, &mut pending, v2, &mut ok, &mut errors, &mut resubmits,
                             &mut lat_us,
                         )?;
                     }

@@ -1,0 +1,151 @@
+//! Per-connection protocol state for the event-driven server: the
+//! version latch (a connection speaks v1 *or* v2, fixed by its first
+//! frame) and the reply-ordering queue.
+//!
+//! v1 connections promise replies in request order — ordering is the
+//! correlation — so completions that finish out of order are held and
+//! released consecutively. v2 frames carry an explicit `u64le` request
+//! id echoed in the reply, so completions append to the write buffer
+//! the moment they exist; the queue only tracks which ids are in
+//! flight (a duplicate in-flight id is a client protocol error, and an
+//! id becomes reusable once its reply is released).
+//!
+//! This module is pure bookkeeping — no sockets — so the ordering and
+//! id-lifecycle rules are unit-testable without a live server.
+
+use std::collections::{BTreeMap, HashSet};
+
+/// Protocol version latch, decided by the first decoded frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Proto {
+    Unset,
+    V1,
+    V2,
+}
+
+/// Ordering/inflight bookkeeping for one connection's replies.
+#[derive(Debug, Default)]
+pub struct ReplyQueue {
+    inflight: usize,
+    /// Next sequence number handed to an admitted frame.
+    next_seq: u64,
+    /// Next sequence allowed to append to the write buffer (v1).
+    next_write_seq: u64,
+    /// Completed-but-unreleasable v1 replies, keyed by sequence.
+    held: BTreeMap<u64, Vec<u8>>,
+    held_bytes: usize,
+    /// In-flight v2 request ids.
+    live_ids: HashSet<u64>,
+}
+
+impl ReplyQueue {
+    pub fn new() -> ReplyQueue {
+        ReplyQueue::default()
+    }
+
+    /// Admit one frame that will produce exactly one reply; returns its
+    /// release sequence.
+    pub fn admit(&mut self) -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.inflight += 1;
+        seq
+    }
+
+    /// Claim a v2 request id; `false` means the id is already in
+    /// flight (the caller answers with a typed error instead).
+    pub fn claim_id(&mut self, id: u64) -> bool {
+        self.live_ids.insert(id)
+    }
+
+    pub fn inflight(&self) -> usize {
+        self.inflight
+    }
+
+    /// Bytes parked in the v1 hold queue (counted against the
+    /// connection's memory budget alongside the write buffer).
+    pub fn held_bytes(&self) -> usize {
+        self.held_bytes
+    }
+
+    /// Complete the reply for `seq`, appending every newly releasable
+    /// reply to `wbuf`. v2 (`ordered == false`) appends immediately;
+    /// v1 holds out-of-order completions until the gap fills.
+    /// `release_id` frees a v2 id for reuse (None for replies that
+    /// never claimed one, e.g. the duplicate-id error itself).
+    pub fn complete(
+        &mut self,
+        ordered: bool,
+        seq: u64,
+        release_id: Option<u64>,
+        bytes: Vec<u8>,
+        wbuf: &mut Vec<u8>,
+    ) {
+        self.inflight = self.inflight.saturating_sub(1);
+        if let Some(id) = release_id {
+            self.live_ids.remove(&id);
+        }
+        if !ordered {
+            wbuf.extend_from_slice(&bytes);
+            return;
+        }
+        self.held_bytes += bytes.len();
+        self.held.insert(seq, bytes);
+        while let Some(b) = self.held.remove(&self.next_write_seq) {
+            self.held_bytes -= b.len();
+            wbuf.extend_from_slice(&b);
+            self.next_write_seq += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v1_out_of_order_completions_release_in_request_order() {
+        let mut q = ReplyQueue::new();
+        let (s0, s1, s2) = (q.admit(), q.admit(), q.admit());
+        assert_eq!((s0, s1, s2), (0, 1, 2));
+        assert_eq!(q.inflight(), 3);
+
+        let mut wbuf = Vec::new();
+        q.complete(true, s2, None, vec![b'C'], &mut wbuf);
+        assert!(wbuf.is_empty(), "seq 2 released before 0/1");
+        assert_eq!(q.held_bytes(), 1);
+        q.complete(true, s0, None, vec![b'A'], &mut wbuf);
+        assert_eq!(wbuf, b"A", "seq 0 releases alone; 2 still gapped");
+        q.complete(true, s1, None, vec![b'B'], &mut wbuf);
+        assert_eq!(wbuf, b"ABC", "filling the gap releases the held tail");
+        assert_eq!(q.inflight(), 0);
+        assert_eq!(q.held_bytes(), 0);
+    }
+
+    #[test]
+    fn v2_completions_append_immediately_and_recycle_ids() {
+        let mut q = ReplyQueue::new();
+        assert!(q.claim_id(7));
+        assert!(!q.claim_id(7), "duplicate in-flight id rejected");
+        let s0 = q.admit();
+        let mut wbuf = Vec::new();
+        q.complete(false, s0, Some(7), vec![b'X'], &mut wbuf);
+        assert_eq!(wbuf, b"X");
+        assert!(q.claim_id(7), "id reusable after its reply released");
+    }
+
+    #[test]
+    fn dup_id_error_reply_does_not_release_the_original_id() {
+        let mut q = ReplyQueue::new();
+        assert!(q.claim_id(42));
+        let dup_seq = q.admit();
+        let mut wbuf = Vec::new();
+        // The duplicate's error reply releases no id…
+        q.complete(false, dup_seq, None, vec![b'E'], &mut wbuf);
+        assert!(!q.claim_id(42), "original 42 still in flight");
+        // …only the original completion does.
+        let orig = q.admit();
+        q.complete(false, orig, Some(42), vec![b'R'], &mut wbuf);
+        assert!(q.claim_id(42));
+    }
+}

@@ -1,24 +1,36 @@
-//! Networked merge serving: a dependency-free (`std::net`) framed-TCP
-//! front-end over the batched [`crate::coordinator::MergeService`].
+//! Networked merge serving: a dependency-free (`std::net` + raw-fd
+//! readiness syscalls) framed-TCP front-end over the batched
+//! [`crate::coordinator::MergeService`].
 //!
 //! The paper's LOMS devices earn their speedup only when kept
 //! saturated with batches; this layer is what saturates them from
 //! *outside* the process — the same thin-transport-over-batch-engine
 //! split hardware merge services use (cf. FLiMS and the micro-blossom
-//! hardware/service architecture). Three modules:
+//! hardware/service architecture). Five modules:
 //!
 //! * [`protocol`] — versioned length-prefixed binary frames
-//!   (MergeRequest / MergeResponse / Error / Ping / Pong) with
-//!   explicit size, k and list-length limits and an incremental,
-//!   timeout-tolerant [`protocol::FrameReader`]. Request keys decode
-//!   straight into the `Vec<u32>` lists service admission takes.
-//! * [`server`] — [`NetServer`]: acceptor thread + bounded worker
-//!   pool; per-connection reader/writer pair so pipelined requests
-//!   overlap with response write-back; error *replies* (never
-//!   disconnects) on malformed frames; graceful shutdown that drains
-//!   in-flight batches.
+//!   (MergeRequest / MergeResponse / Error / Ping / Pong, KV and
+//!   stats variants) with explicit size, k and list-length limits and
+//!   an incremental, timeout-tolerant [`protocol::FrameReader`].
+//!   Protocol v2 inserts a `u64le` request id after the type byte,
+//!   echoed in every reply; payload grammars are shared byte-for-byte
+//!   with v1, so the framings cannot drift.
+//! * [`poll`] — the dependency-free readiness layer: thin raw-fd
+//!   wrappers over `epoll` (Linux) / `kqueue` (macOS), a self-pipe
+//!   waker, and a coarse timer wheel for write deadlines.
+//! * [`conn`] — per-connection protocol state: the v1/v2 version
+//!   latch, reply ordering (v1 in request order, v2 as completed) and
+//!   the request-id lifecycle, unit-testable without sockets.
+//! * [`server`] — [`NetServer`]: one nonblocking event loop serving
+//!   every connection (bounded by memory, not threads) plus a small
+//!   fixed worker pool for dispatch/encode; per-connection inflight
+//!   quotas and write-backlog pause for fairness; admission shedding;
+//!   dead-peer reaping; error *replies* (never disconnects) on
+//!   malformed frames; graceful shutdown that drains in-flight
+//!   batches.
 //! * [`client`] — blocking [`NetClient`] with pipelined multi-request
-//!   submission, reconnect-and-replay recovery under a [`RetryPolicy`]
+//!   submission over v1 or v2 (explicit ids, out-of-order replies),
+//!   reconnect-and-replay recovery under a [`RetryPolicy`]
 //!   (exponential backoff, decorrelated jitter, per-operation deadline
 //!   budget), plus the multi-connection load generator behind
 //!   `loms bench-net` and `benches/net_serving.rs`.
@@ -27,12 +39,16 @@
 //! the socket-to-tile copy count.
 
 pub mod client;
+pub mod conn;
+pub mod poll;
 pub mod protocol;
 pub mod server;
 
-pub use client::{run_load, LoadReport, NetClient, NetMerge, RetryPolicy, ServerError};
+pub use client::{
+    run_load, run_load_with, LoadReport, NetClient, NetMerge, RetryPolicy, ServerError,
+};
 pub use protocol::{
     Frame, FrameReader, ReadFrame, MAX_FRAME_BYTES, MAX_K, MAX_LIST_LEN, MAX_REQUEST_BYTES,
-    MODE_FLAG_TRACE, PROTOCOL_VERSION,
+    MODE_FLAG_TRACE, PROTOCOL_V2, PROTOCOL_VERSION,
 };
 pub use server::{NetServer, NetServerConfig};

@@ -1,0 +1,620 @@
+//! Readiness primitives for the event-driven net server: a thin
+//! dependency-free poller over `epoll(7)` (Linux) / `kqueue(2)` (macOS)
+//! driving raw fds, a self-pipe [`Waker`] so worker threads can
+//! interrupt a blocked wait, and a coarse [`TimerWheel`] for
+//! write-timeout dead-peer reaping. Only [`crate::net::NetServer`] uses
+//! these; the blocking `NetClient` stays plain `std::net`.
+//!
+//! The FFI surface is hand-declared (the crate carries no libc
+//! dependency) and deliberately tiny: create/ctl/wait on the readiness
+//! fd, plus `pipe`/`fcntl`/`read`/`write`/`close` for the waker.
+//! Registration is level-triggered everywhere — the server's state
+//! machines re-arm interest explicitly, and bytes left in a kernel
+//! buffer simply re-report on the next wait.
+
+use std::io;
+use std::os::fd::RawFd;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One readiness report. `readable`/`writable` fold error and hangup
+/// conditions in (a syscall on the fd will surface the actual error);
+/// `hangup` additionally marks peer-closed so callers can skip
+/// pointless arm cycles.
+#[derive(Debug, Clone, Copy)]
+pub struct PollEvent {
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+    pub hangup: bool,
+}
+
+/// Shared raw-fd syscalls for the self-pipe waker.
+mod fdops {
+    use std::io;
+    use std::os::fd::RawFd;
+
+    #[cfg(target_os = "linux")]
+    const O_NONBLOCK: i32 = 0o4000;
+    #[cfg(not(target_os = "linux"))]
+    const O_NONBLOCK: i32 = 0x0004;
+    const F_GETFL: i32 = 3;
+    const F_SETFL: i32 = 4;
+
+    extern "C" {
+        fn close(fd: i32) -> i32;
+        fn pipe(fds: *mut i32) -> i32;
+        fn fcntl(fd: i32, cmd: i32, arg: i32) -> i32;
+        fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+        fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+    }
+
+    pub fn close_fd(fd: RawFd) {
+        let _ = unsafe { close(fd) };
+    }
+
+    pub fn pipe_pair() -> io::Result<(RawFd, RawFd)> {
+        let mut fds = [-1i32; 2];
+        if unsafe { pipe(fds.as_mut_ptr()) } < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok((fds[0], fds[1]))
+    }
+
+    pub fn set_nonblocking(fd: RawFd) -> io::Result<()> {
+        let flags = unsafe { fcntl(fd, F_GETFL, 0) };
+        if flags < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        if unsafe { fcntl(fd, F_SETFL, flags | O_NONBLOCK) } < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    pub fn read_fd(fd: RawFd, buf: &mut [u8]) -> io::Result<usize> {
+        let n = unsafe { read(fd, buf.as_mut_ptr(), buf.len()) };
+        if n < 0 {
+            Err(io::Error::last_os_error())
+        } else {
+            Ok(n as usize)
+        }
+    }
+
+    pub fn write_fd(fd: RawFd, buf: &[u8]) -> io::Result<usize> {
+        let n = unsafe { write(fd, buf.as_ptr(), buf.len()) };
+        if n < 0 {
+            Err(io::Error::last_os_error())
+        } else {
+            Ok(n as usize)
+        }
+    }
+}
+
+/// Owned raw fd, closed on drop.
+struct Fd(RawFd);
+
+impl Drop for Fd {
+    fn drop(&mut self) {
+        fdops::close_fd(self.0);
+    }
+}
+
+#[cfg(target_os = "linux")]
+mod sys {
+    //! epoll ABI. Constants are arch-independent; the event struct is
+    //! packed on x86-64 only (a kernel ABI quirk kept for compatibility
+    //! with 32-bit epoll_event layouts).
+    use std::io;
+    use std::os::fd::RawFd;
+
+    #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+    #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+    #[derive(Clone, Copy)]
+    pub struct Event {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+    pub const CTL_ADD: i32 = 1;
+    pub const CTL_DEL: i32 = 2;
+    pub const CTL_MOD: i32 = 3;
+    const EPOLL_CLOEXEC: i32 = 0o2000000;
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut Event) -> i32;
+        fn epoll_wait(epfd: i32, events: *mut Event, maxevents: i32, timeout: i32) -> i32;
+    }
+
+    pub fn create() -> io::Result<RawFd> {
+        let fd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+        if fd < 0 {
+            Err(io::Error::last_os_error())
+        } else {
+            Ok(fd)
+        }
+    }
+
+    pub fn ctl(epfd: RawFd, op: i32, fd: RawFd, events: u32, data: u64) -> io::Result<()> {
+        let mut ev = Event { events, data };
+        // DEL ignores the event argument (must tolerate NULL since 2.6.9).
+        let ptr = if op == CTL_DEL { std::ptr::null_mut() } else { &mut ev as *mut Event };
+        if unsafe { epoll_ctl(epfd, op, fd, ptr) } < 0 {
+            Err(io::Error::last_os_error())
+        } else {
+            Ok(())
+        }
+    }
+
+    pub fn wait(epfd: RawFd, buf: &mut [Event], timeout_ms: i32) -> io::Result<usize> {
+        loop {
+            let n = unsafe { epoll_wait(epfd, buf.as_mut_ptr(), buf.len() as i32, timeout_ms) };
+            if n >= 0 {
+                return Ok(n as usize);
+            }
+            let err = io::Error::last_os_error();
+            if err.kind() != io::ErrorKind::Interrupted {
+                return Err(err);
+            }
+        }
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+mod sys {
+    //! kqueue ABI (macOS / the BSDs). Read and write interest are two
+    //! independent filters; the poller issues one change per filter and
+    //! tolerates ENOENT on deletes so interest updates are idempotent.
+    use std::io;
+    use std::os::fd::RawFd;
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct Kevent {
+        pub ident: usize,
+        pub filter: i16,
+        pub flags: u16,
+        pub fflags: u32,
+        pub data: isize,
+        pub udata: *mut core::ffi::c_void,
+    }
+
+    impl Kevent {
+        pub const ZERO: Kevent = Kevent {
+            ident: 0,
+            filter: 0,
+            flags: 0,
+            fflags: 0,
+            data: 0,
+            udata: std::ptr::null_mut(),
+        };
+    }
+
+    #[repr(C)]
+    pub struct Timespec {
+        pub tv_sec: isize,
+        pub tv_nsec: isize,
+    }
+
+    pub const EVFILT_READ: i16 = -1;
+    pub const EVFILT_WRITE: i16 = -2;
+    pub const EV_ADD: u16 = 0x1;
+    pub const EV_DELETE: u16 = 0x2;
+    pub const EV_ERROR: u16 = 0x4000;
+    pub const EV_EOF: u16 = 0x8000;
+    const ENOENT: i32 = 2;
+
+    extern "C" {
+        fn kqueue() -> i32;
+        fn kevent(
+            kq: i32,
+            changelist: *const Kevent,
+            nchanges: i32,
+            eventlist: *mut Kevent,
+            nevents: i32,
+            timeout: *const Timespec,
+        ) -> i32;
+    }
+
+    pub fn create() -> io::Result<RawFd> {
+        let fd = unsafe { kqueue() };
+        if fd < 0 {
+            Err(io::Error::last_os_error())
+        } else {
+            Ok(fd)
+        }
+    }
+
+    pub fn change(kq: RawFd, fd: RawFd, filter: i16, flags: u16, token: u64) -> io::Result<()> {
+        let kev = Kevent {
+            ident: fd as usize,
+            filter,
+            flags,
+            fflags: 0,
+            data: 0,
+            udata: token as *mut core::ffi::c_void,
+        };
+        let n = unsafe { kevent(kq, &kev, 1, std::ptr::null_mut(), 0, std::ptr::null()) };
+        if n < 0 {
+            let err = io::Error::last_os_error();
+            // Deleting interest that was never armed is a no-op.
+            if flags & EV_DELETE != 0 && err.raw_os_error() == Some(ENOENT) {
+                return Ok(());
+            }
+            return Err(err);
+        }
+        Ok(())
+    }
+
+    pub fn wait(kq: RawFd, buf: &mut [Kevent], timeout: Option<&Timespec>) -> io::Result<usize> {
+        let tsp = timeout.map_or(std::ptr::null(), |t| t as *const Timespec);
+        loop {
+            let n = unsafe {
+                kevent(kq, std::ptr::null(), 0, buf.as_mut_ptr(), buf.len() as i32, tsp)
+            };
+            if n >= 0 {
+                return Ok(n as usize);
+            }
+            let err = io::Error::last_os_error();
+            if err.kind() != io::ErrorKind::Interrupted {
+                return Err(err);
+            }
+        }
+    }
+}
+
+/// Readiness selector over raw fds. Tokens are caller-chosen `u64`s
+/// delivered back verbatim with each event; interest is level-triggered
+/// and explicit (`register`/`modify`/`deregister`).
+pub struct Poller {
+    fd: Fd,
+}
+
+#[cfg(target_os = "linux")]
+impl Poller {
+    pub fn new() -> io::Result<Poller> {
+        Ok(Poller { fd: Fd(sys::create()?) })
+    }
+
+    fn interest(readable: bool, writable: bool) -> u32 {
+        let mut ev = sys::EPOLLRDHUP;
+        if readable {
+            ev |= sys::EPOLLIN;
+        }
+        if writable {
+            ev |= sys::EPOLLOUT;
+        }
+        ev
+    }
+
+    pub fn register(&self, fd: RawFd, token: u64, readable: bool, writable: bool) -> io::Result<()> {
+        sys::ctl(self.fd.0, sys::CTL_ADD, fd, Self::interest(readable, writable), token)
+    }
+
+    pub fn modify(&self, fd: RawFd, token: u64, readable: bool, writable: bool) -> io::Result<()> {
+        sys::ctl(self.fd.0, sys::CTL_MOD, fd, Self::interest(readable, writable), token)
+    }
+
+    pub fn deregister(&self, fd: RawFd) -> io::Result<()> {
+        sys::ctl(self.fd.0, sys::CTL_DEL, fd, 0, 0)
+    }
+
+    pub fn wait(&self, out: &mut Vec<PollEvent>, timeout: Option<Duration>) -> io::Result<()> {
+        out.clear();
+        let mut buf = [sys::Event { events: 0, data: 0 }; 128];
+        let ms = match timeout {
+            None => -1,
+            // Round up so a 0.5 ms request doesn't spin at 0.
+            Some(t) => t.as_nanos().div_ceil(1_000_000).min(i32::MAX as u128) as i32,
+        };
+        let n = sys::wait(self.fd.0, &mut buf, ms)?;
+        for ev in &buf[..n] {
+            let events = ev.events;
+            let data = ev.data;
+            out.push(PollEvent {
+                token: data,
+                readable: events
+                    & (sys::EPOLLIN | sys::EPOLLHUP | sys::EPOLLERR | sys::EPOLLRDHUP)
+                    != 0,
+                writable: events & (sys::EPOLLOUT | sys::EPOLLHUP | sys::EPOLLERR) != 0,
+                hangup: events & (sys::EPOLLHUP | sys::EPOLLERR | sys::EPOLLRDHUP) != 0,
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+impl Poller {
+    pub fn new() -> io::Result<Poller> {
+        Ok(Poller { fd: Fd(sys::create()?) })
+    }
+
+    fn apply(&self, fd: RawFd, token: u64, readable: bool, writable: bool) -> io::Result<()> {
+        let (radd, wadd) = (readable, writable);
+        let rflags = if radd { sys::EV_ADD } else { sys::EV_DELETE };
+        let wflags = if wadd { sys::EV_ADD } else { sys::EV_DELETE };
+        sys::change(self.fd.0, fd, sys::EVFILT_READ, rflags, token)?;
+        sys::change(self.fd.0, fd, sys::EVFILT_WRITE, wflags, token)
+    }
+
+    pub fn register(&self, fd: RawFd, token: u64, readable: bool, writable: bool) -> io::Result<()> {
+        self.apply(fd, token, readable, writable)
+    }
+
+    pub fn modify(&self, fd: RawFd, token: u64, readable: bool, writable: bool) -> io::Result<()> {
+        self.apply(fd, token, readable, writable)
+    }
+
+    pub fn deregister(&self, fd: RawFd) -> io::Result<()> {
+        sys::change(self.fd.0, fd, sys::EVFILT_READ, sys::EV_DELETE, 0)?;
+        sys::change(self.fd.0, fd, sys::EVFILT_WRITE, sys::EV_DELETE, 0)
+    }
+
+    pub fn wait(&self, out: &mut Vec<PollEvent>, timeout: Option<Duration>) -> io::Result<()> {
+        out.clear();
+        let mut buf = [sys::Kevent::ZERO; 128];
+        let ts = timeout.map(|t| sys::Timespec {
+            tv_sec: t.as_secs().min(isize::MAX as u64) as isize,
+            tv_nsec: t.subsec_nanos() as isize,
+        });
+        let n = sys::wait(self.fd.0, &mut buf, ts.as_ref())?;
+        for ev in &buf[..n] {
+            let err = ev.flags & sys::EV_ERROR != 0;
+            let eof = ev.flags & sys::EV_EOF != 0;
+            out.push(PollEvent {
+                token: ev.udata as u64,
+                readable: ev.filter == sys::EVFILT_READ || err,
+                writable: ev.filter == sys::EVFILT_WRITE || err,
+                hangup: eof || err,
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Cross-thread wake handle for a blocked [`Poller::wait`]: cloneable,
+/// signal-safe in spirit (one nonblocking pipe write; a full pipe means
+/// a wake is already pending, so the error is ignored by design).
+#[derive(Clone)]
+pub struct Waker(Arc<Fd>);
+
+impl Waker {
+    pub fn wake(&self) {
+        let _ = fdops::write_fd(self.0 .0, &[1u8]);
+    }
+}
+
+/// Read end of the self-pipe: register `fd()` with the poller, call
+/// `drain()` whenever it reports readable.
+pub struct WakeReader(Fd);
+
+impl WakeReader {
+    pub fn fd(&self) -> RawFd {
+        self.0 .0
+    }
+
+    pub fn drain(&self) {
+        let mut buf = [0u8; 64];
+        while let Ok(n) = fdops::read_fd(self.0 .0, &mut buf) {
+            if n < buf.len() {
+                break;
+            }
+        }
+    }
+}
+
+/// Build a connected waker pair (nonblocking self-pipe).
+pub fn wake_pair() -> io::Result<(Waker, WakeReader)> {
+    let (r, w) = fdops::pipe_pair()?;
+    let (r, w) = (Fd(r), Fd(w));
+    fdops::set_nonblocking(r.0)?;
+    fdops::set_nonblocking(w.0)?;
+    Ok((Waker(Arc::new(w)), WakeReader(r)))
+}
+
+/// Coarse hashed timer wheel: O(1) insert, deadlines fire at most one
+/// `granularity` late, beyond-horizon deadlines re-insert themselves
+/// when the cursor reaches their slot. There is no removal — callers
+/// cancel lazily by re-checking their own deadline when a token fires
+/// (the server holds the authoritative per-connection deadline).
+pub struct TimerWheel {
+    slots: Vec<Vec<(u64, Instant)>>,
+    granularity: Duration,
+    cursor: usize,
+    cursor_time: Instant,
+    armed: usize,
+}
+
+impl TimerWheel {
+    pub fn new(granularity: Duration, nslots: usize) -> TimerWheel {
+        Self::with_origin(granularity, nslots, Instant::now())
+    }
+
+    pub fn with_origin(granularity: Duration, nslots: usize, origin: Instant) -> TimerWheel {
+        assert!(nslots >= 4, "wheel needs room for the +1 insert offset");
+        assert!(granularity > Duration::ZERO);
+        TimerWheel {
+            slots: vec![Vec::new(); nslots],
+            granularity,
+            cursor: 0,
+            cursor_time: origin,
+            armed: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.armed
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.armed == 0
+    }
+
+    /// Poll-timeout hint: with anything armed the loop should wake at
+    /// wheel resolution; otherwise it may sleep indefinitely.
+    pub fn tick_hint(&self) -> Option<Duration> {
+        if self.armed == 0 {
+            None
+        } else {
+            Some(self.granularity)
+        }
+    }
+
+    pub fn insert(&mut self, token: u64, deadline: Instant) {
+        let nslots = self.slots.len();
+        let ticks = (deadline.saturating_duration_since(self.cursor_time).as_nanos()
+            / self.granularity.as_nanos()) as usize;
+        // +1 keeps fresh inserts out of the slot the cursor sits on;
+        // the horizon clamp makes far deadlines re-insert on drain.
+        let idx = (self.cursor + 1 + ticks.min(nslots - 2)) % nslots;
+        self.slots[idx].push((token, deadline));
+        self.armed += 1;
+    }
+
+    pub fn advance(&mut self, now: Instant, expired: &mut Vec<u64>) {
+        if self.armed == 0 {
+            // Snap forward while idle so a long quiet span doesn't cost
+            // one empty-slot step per elapsed tick on the next timer.
+            let lag = now.saturating_duration_since(self.cursor_time);
+            let ticks = (lag.as_nanos() / self.granularity.as_nanos()) as usize;
+            if ticks > 0 {
+                self.cursor_time += self.granularity * ticks as u32;
+                self.cursor = (self.cursor + ticks % self.slots.len()) % self.slots.len();
+            }
+            return;
+        }
+        while now.saturating_duration_since(self.cursor_time) >= self.granularity {
+            self.cursor_time += self.granularity;
+            self.cursor = (self.cursor + 1) % self.slots.len();
+            let due = std::mem::take(&mut self.slots[self.cursor]);
+            for (token, deadline) in due {
+                self.armed -= 1;
+                if deadline <= now {
+                    expired.push(token);
+                } else {
+                    self.insert(token, deadline);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::{TcpListener, TcpStream};
+    use std::os::fd::AsRawFd;
+
+    #[test]
+    fn listener_becomes_readable_on_connect() {
+        let poller = Poller::new().unwrap();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        listener.set_nonblocking(true).unwrap();
+        poller.register(listener.as_raw_fd(), 7, true, false).unwrap();
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+        assert!(events.is_empty(), "{events:?}");
+        let _client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            poller.wait(&mut events, Some(Duration::from_millis(100))).unwrap();
+            if events.iter().any(|e| e.token == 7 && e.readable) {
+                break;
+            }
+            assert!(Instant::now() < deadline, "listener never became readable");
+        }
+        poller.deregister(listener.as_raw_fd()).unwrap();
+    }
+
+    #[test]
+    fn waker_interrupts_a_blocked_wait() {
+        let poller = Poller::new().unwrap();
+        let (waker, rx) = wake_pair().unwrap();
+        poller.register(rx.fd(), 1, true, false).unwrap();
+        let w2 = waker.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(50));
+            w2.wake();
+        });
+        let mut events = Vec::new();
+        let t0 = Instant::now();
+        poller.wait(&mut events, Some(Duration::from_secs(10))).unwrap();
+        // Either the wake already landed or we re-wait briefly; never
+        // the full 10 s.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !events.iter().any(|e| e.token == 1 && e.readable) {
+            assert!(Instant::now() < deadline, "wake never observed");
+            poller.wait(&mut events, Some(Duration::from_millis(100))).unwrap();
+        }
+        assert!(t0.elapsed() < Duration::from_secs(9));
+        rx.drain();
+        poller.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+        assert!(events.is_empty(), "drained pipe still readable: {events:?}");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn wheel_fires_between_deadline_and_one_tick_late() {
+        let t0 = Instant::now();
+        let gran = Duration::from_millis(100);
+        let mut wheel = TimerWheel::with_origin(gran, 16, t0);
+        wheel.insert(1, t0 + Duration::from_millis(50));
+        wheel.insert(2, t0 + Duration::from_millis(250));
+        let mut expired = Vec::new();
+
+        wheel.advance(t0 + Duration::from_millis(40), &mut expired);
+        assert!(expired.is_empty(), "{expired:?}");
+        // 50 ms deadline fires once the cursor passes it: ≤ one tick late.
+        wheel.advance(t0 + Duration::from_millis(200), &mut expired);
+        assert_eq!(expired, vec![1]);
+        assert_eq!(wheel.len(), 1);
+
+        expired.clear();
+        wheel.advance(t0 + Duration::from_millis(400), &mut expired);
+        assert_eq!(expired, vec![2]);
+        assert!(wheel.is_empty());
+        assert_eq!(wheel.tick_hint(), None);
+    }
+
+    #[test]
+    fn wheel_reinserts_beyond_horizon_deadlines() {
+        let t0 = Instant::now();
+        let gran = Duration::from_millis(10);
+        // 8 slots → 80 ms horizon, deadline 4 laps out.
+        let mut wheel = TimerWheel::with_origin(gran, 8, t0);
+        wheel.insert(9, t0 + Duration::from_millis(320));
+        let mut expired = Vec::new();
+        for step in 1..=31 {
+            wheel.advance(t0 + Duration::from_millis(step * 10), &mut expired);
+            assert!(expired.is_empty(), "fired early at step {step}: {expired:?}");
+        }
+        wheel.advance(t0 + Duration::from_millis(340), &mut expired);
+        assert_eq!(expired, vec![9]);
+        assert!(wheel.is_empty());
+    }
+
+    #[test]
+    fn wheel_idle_snap_keeps_later_inserts_cheap_and_correct() {
+        let t0 = Instant::now();
+        let gran = Duration::from_millis(10);
+        let mut wheel = TimerWheel::with_origin(gran, 8, t0);
+        let mut expired = Vec::new();
+        // Long idle gap with nothing armed…
+        wheel.advance(t0 + Duration::from_secs(600), &mut expired);
+        assert!(expired.is_empty());
+        // …then a timer inserted relative to "now" still fires on time.
+        let now = t0 + Duration::from_secs(600);
+        wheel.insert(3, now + Duration::from_millis(30));
+        wheel.advance(now + Duration::from_millis(20), &mut expired);
+        assert!(expired.is_empty(), "{expired:?}");
+        wheel.advance(now + Duration::from_millis(60), &mut expired);
+        assert_eq!(expired, vec![3]);
+    }
+}

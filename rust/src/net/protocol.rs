@@ -42,6 +42,28 @@
 //! the server is shedding merge load (an operator inspecting an
 //! overloaded server is exactly the point).
 //!
+//! ## Protocol v2: request ids
+//!
+//! A **v2** body is `version(=2):u8 type:u8 req_id:u64le payload` —
+//! the payload grammar per type is *unchanged* from v1.2 (trace flag
+//! included); the only difference is the version byte and the eight id
+//! bytes between the type byte and the payload, uniformly on every
+//! frame type. The id is chosen by the requester and echoed verbatim
+//! in the reply, so replies may complete **out of order**, many
+//! logical clients can multiplex one connection, and reconnect-replay
+//! keys on ids instead of strict ordering.
+//!
+//! Negotiation is per connection and implicit: the first decoded frame
+//! latches the connection to its version. A v1 peer never sees an id
+//! (replies stay strictly in request order — ordering is the
+//! correlation, exactly the v1 contract); after the latch, a frame of
+//! the *other* version is answered with a typed `MALFORMED` error and
+//! the connection keeps serving. On a v2 connection a request id may
+//! not be reused while its reply is outstanding (duplicate in-flight
+//! ids get a `MALFORMED` error echoing the id); once the reply is
+//! released the id is free for reuse. v1/v1.1/v1.2 frames keep
+//! decoding byte-identically — nothing about v2 moves a v1 byte.
+//!
 //! All integers are little-endian — the same byte order as the extsort
 //! spill format ([`crate::stream::source::FileRunStream`]), so a spill
 //! run can be framed without per-key byte swapping.
@@ -78,6 +100,11 @@ use std::io::{self, Read};
 
 /// Protocol version carried in every frame body.
 pub const PROTOCOL_VERSION: u8 = 1;
+
+/// Protocol v2: same payload grammar, plus a `req_id:u64le` between
+/// the type byte and the payload, echoed in replies (see the module
+/// docs for the negotiation and id-lifecycle rules).
+pub const PROTOCOL_V2: u8 = 2;
 
 /// Hard cap on a frame body (`len` field). Includes headroom above
 /// [`MAX_REQUEST_BYTES`] so a maximal request's response — the same
@@ -161,8 +188,10 @@ pub enum Frame {
 /// Outcome of one [`FrameReader::read_frame`] call.
 #[derive(Debug)]
 pub enum ReadFrame {
-    /// A well-formed frame.
+    /// A well-formed v1/v1.1/v1.2 frame.
     Frame(Frame),
+    /// A well-formed v2 frame and its request id.
+    FrameV2(Frame, u64),
     /// Bytes arrived but no complete frame is buffered yet — call
     /// again. Surfacing between socket reads (instead of looping
     /// internally) lets the server re-check its shutdown flag even
@@ -257,7 +286,8 @@ impl FrameReader {
             return None;
         }
         let result = match decode_body(&self.buf[start + 4..start + 4 + len]) {
-            Ok(f) => ReadFrame::Frame(f),
+            Ok((f, None)) => ReadFrame::Frame(f),
+            Ok((f, Some(id))) => ReadFrame::FrameV2(f, id),
             Err(msg) => ReadFrame::Malformed(msg),
         };
         self.pos = start + 4 + len;
@@ -265,22 +295,32 @@ impl FrameReader {
     }
 }
 
-/// Decode one frame body (`version type payload`, length already
-/// validated against [`MAX_FRAME_BYTES`]).
-fn decode_body(body: &[u8]) -> Result<Frame, String> {
+/// Decode one frame body (`version type [req_id] payload`, length
+/// already validated against [`MAX_FRAME_BYTES`]). The second tuple
+/// element is the v2 request id (`None` for v1/v1.1/v1.2 bodies).
+fn decode_body(body: &[u8]) -> Result<(Frame, Option<u64>), String> {
     debug_assert!(body.len() >= 2);
     let version = body[0];
-    if version != PROTOCOL_VERSION {
-        return Err(format!("unsupported protocol version {version} (expected {PROTOCOL_VERSION})"));
+    if version != PROTOCOL_VERSION && version != PROTOCOL_V2 {
+        return Err(format!(
+            "unsupported protocol version {version} (expected {PROTOCOL_VERSION} or {PROTOCOL_V2})"
+        ));
     }
     let ty = body[1];
     let mut c = Cur { b: &body[2..], i: 0 };
+    let req_id = if version == PROTOCOL_V2 { Some(c.u64("request id")?) } else { None };
+    Ok((decode_payload(ty, &mut c)?, req_id))
+}
+
+/// Decode one frame payload; `c` sits just past the header (and, for
+/// v2, past the request id), so the grammar below is version-agnostic.
+fn decode_payload(ty: u8, c: &mut Cur) -> Result<Frame, String> {
     match ty {
         TYPE_MERGE_REQUEST => {
-            if c.b.len() > MAX_REQUEST_BYTES {
+            if c.remaining() > MAX_REQUEST_BYTES {
                 return Err(format!(
                     "merge request payload {} exceeds {MAX_REQUEST_BYTES} bytes",
-                    c.b.len()
+                    c.remaining()
                 ));
             }
             let (mode, trace) = c.mode_and_trace()?;
@@ -351,10 +391,10 @@ fn decode_body(body: &[u8]) -> Result<Frame, String> {
             // Same payload cap as key-only requests — KV keys are 12
             // bytes each on the wire, so the shape cap shrinks
             // accordingly rather than the frame growing.
-            if c.b.len() > MAX_REQUEST_BYTES {
+            if c.remaining() > MAX_REQUEST_BYTES {
                 return Err(format!(
                     "merge request payload {} exceeds {MAX_REQUEST_BYTES} bytes",
-                    c.b.len()
+                    c.remaining()
                 ));
             }
             let (mode, trace) = c.mode_and_trace()?;
@@ -442,6 +482,12 @@ struct Cur<'a> {
 }
 
 impl<'a> Cur<'a> {
+    /// Unconsumed payload bytes (for v2 this already excludes the
+    /// request id, so size caps apply to the payload proper).
+    fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+
     fn bytes(&mut self, n: usize, what: &str) -> Result<&'a [u8], String> {
         match self.b.get(self.i..self.i + n) {
             Some(s) => {
@@ -508,6 +554,16 @@ fn begin(out: &mut Vec<u8>, ty: u8) {
     out.push(ty);
 }
 
+/// v2 header: version 2, type, then the echoed request id. The payload
+/// that follows is byte-identical to its v1 form.
+fn begin_v2(out: &mut Vec<u8>, ty: u8, req_id: u64) {
+    out.clear();
+    out.extend_from_slice(&[0u8; 4]); // length, patched by finish()
+    out.push(PROTOCOL_V2);
+    out.push(ty);
+    out.extend_from_slice(&req_id.to_le_bytes());
+}
+
 fn finish(out: &mut Vec<u8>) {
     let len = (out.len() - 4) as u32;
     out[..4].copy_from_slice(&len.to_le_bytes());
@@ -526,13 +582,11 @@ fn push_mode_trace(out: &mut Vec<u8>, mode: u8, trace: u64) {
     }
 }
 
-/// Encode a merge request directly from borrowed lists — the client's
-/// hot path, which never builds a [`Frame`] (that would clone every
-/// key). `out` is cleared and refilled, so a reused buffer allocates
-/// nothing in steady state. `trace` 0 means untraced.
-pub fn encode_merge_request(mode: u8, trace: u64, lists: &[Vec<u32>], out: &mut Vec<u8>) {
+/// Shared payload writers: a v1 encoder is `begin` + payload +
+/// `finish`, its v2 twin is `begin_v2` + the *same* payload + `finish`
+/// — so the two framings cannot drift apart.
+fn merge_request_payload(mode: u8, trace: u64, lists: &[Vec<u32>], out: &mut Vec<u8>) {
     debug_assert!(!lists.is_empty() && lists.len() <= MAX_K);
-    begin(out, TYPE_MERGE_REQUEST);
     push_mode_trace(out, mode, trace);
     out.extend_from_slice(&(lists.len() as u16).to_le_bytes());
     for l in lists {
@@ -544,20 +598,109 @@ pub fn encode_merge_request(mode: u8, trace: u64, lists: &[Vec<u32>], out: &mut 
             out.extend_from_slice(&x.to_le_bytes());
         }
     }
-    finish(out);
 }
 
-/// Encode a merge response directly from the served-by label and the
-/// merged keys — the server's hot path (no intermediate [`Frame`]).
-pub fn encode_merge_response(served_by: &str, merged: &[u32], out: &mut Vec<u8>) {
+fn merge_response_payload(served_by: &str, merged: &[u32], out: &mut Vec<u8>) {
     let label = clamp_str(served_by, u8::MAX as usize);
-    begin(out, TYPE_MERGE_RESPONSE);
     out.push(label.len() as u8);
     out.extend_from_slice(label.as_bytes());
     out.extend_from_slice(&(merged.len() as u32).to_le_bytes());
     for &x in merged {
         out.extend_from_slice(&x.to_le_bytes());
     }
+}
+
+fn merge_request_kv_payload(
+    mode: u8,
+    trace: u64,
+    lists: &[Vec<u32>],
+    payloads: &[u64],
+    out: &mut Vec<u8>,
+) {
+    debug_assert!(!lists.is_empty() && lists.len() <= MAX_K);
+    debug_assert_eq!(payloads.len(), lists.iter().map(Vec::len).sum::<usize>());
+    push_mode_trace(out, mode, trace);
+    out.extend_from_slice(&(lists.len() as u16).to_le_bytes());
+    for l in lists {
+        debug_assert!(l.len() <= MAX_LIST_LEN);
+        out.extend_from_slice(&(l.len() as u32).to_le_bytes());
+    }
+    for l in lists {
+        for &x in l {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    for &p in payloads {
+        out.extend_from_slice(&p.to_le_bytes());
+    }
+}
+
+fn merge_response_kv_payload(served_by: &str, merged: &[u32], payloads: &[u64], out: &mut Vec<u8>) {
+    debug_assert_eq!(merged.len(), payloads.len());
+    let label = clamp_str(served_by, u8::MAX as usize);
+    out.push(label.len() as u8);
+    out.extend_from_slice(label.as_bytes());
+    out.extend_from_slice(&(merged.len() as u32).to_le_bytes());
+    for &x in merged {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    for &p in payloads {
+        out.extend_from_slice(&p.to_le_bytes());
+    }
+}
+
+fn error_payload(code: u8, message: &str, out: &mut Vec<u8>) {
+    let msg = clamp_str(message, MAX_ERROR_MSG);
+    out.push(code);
+    out.extend_from_slice(&(msg.len() as u16).to_le_bytes());
+    out.extend_from_slice(msg.as_bytes());
+}
+
+fn stats_response_payload(json: &str, out: &mut Vec<u8>) {
+    debug_assert!(json.len() <= MAX_STATS_BYTES);
+    out.extend_from_slice(&(json.len() as u32).to_le_bytes());
+    out.extend_from_slice(json.as_bytes());
+}
+
+/// Error message used when a stats document cannot be framed.
+pub const STATS_OVERFLOW_MSG: &str =
+    "stats document exceeds MAX_STATS_BYTES; retry after the server elides per-artifact detail";
+
+/// Encode a merge request directly from borrowed lists — the client's
+/// hot path, which never builds a [`Frame`] (that would clone every
+/// key). `out` is cleared and refilled, so a reused buffer allocates
+/// nothing in steady state. `trace` 0 means untraced.
+pub fn encode_merge_request(mode: u8, trace: u64, lists: &[Vec<u32>], out: &mut Vec<u8>) {
+    begin(out, TYPE_MERGE_REQUEST);
+    merge_request_payload(mode, trace, lists, out);
+    finish(out);
+}
+
+/// v2 twin of [`encode_merge_request`].
+pub fn encode_merge_request_v2(
+    req_id: u64,
+    mode: u8,
+    trace: u64,
+    lists: &[Vec<u32>],
+    out: &mut Vec<u8>,
+) {
+    begin_v2(out, TYPE_MERGE_REQUEST, req_id);
+    merge_request_payload(mode, trace, lists, out);
+    finish(out);
+}
+
+/// Encode a merge response directly from the served-by label and the
+/// merged keys — the server's hot path (no intermediate [`Frame`]).
+pub fn encode_merge_response(served_by: &str, merged: &[u32], out: &mut Vec<u8>) {
+    begin(out, TYPE_MERGE_RESPONSE);
+    merge_response_payload(served_by, merged, out);
+    finish(out);
+}
+
+/// v2 twin of [`encode_merge_response`].
+pub fn encode_merge_response_v2(req_id: u64, served_by: &str, merged: &[u32], out: &mut Vec<u8>) {
+    begin_v2(out, TYPE_MERGE_RESPONSE, req_id);
+    merge_response_payload(served_by, merged, out);
     finish(out);
 }
 
@@ -571,23 +714,22 @@ pub fn encode_merge_request_kv(
     payloads: &[u64],
     out: &mut Vec<u8>,
 ) {
-    debug_assert!(!lists.is_empty() && lists.len() <= MAX_K);
-    debug_assert_eq!(payloads.len(), lists.iter().map(Vec::len).sum::<usize>());
     begin(out, TYPE_MERGE_REQUEST_KV);
-    push_mode_trace(out, mode, trace);
-    out.extend_from_slice(&(lists.len() as u16).to_le_bytes());
-    for l in lists {
-        debug_assert!(l.len() <= MAX_LIST_LEN);
-        out.extend_from_slice(&(l.len() as u32).to_le_bytes());
-    }
-    for l in lists {
-        for &x in l {
-            out.extend_from_slice(&x.to_le_bytes());
-        }
-    }
-    for &p in payloads {
-        out.extend_from_slice(&p.to_le_bytes());
-    }
+    merge_request_kv_payload(mode, trace, lists, payloads, out);
+    finish(out);
+}
+
+/// v2 twin of [`encode_merge_request_kv`].
+pub fn encode_merge_request_kv_v2(
+    req_id: u64,
+    mode: u8,
+    trace: u64,
+    lists: &[Vec<u32>],
+    payloads: &[u64],
+    out: &mut Vec<u8>,
+) {
+    begin_v2(out, TYPE_MERGE_REQUEST_KV, req_id);
+    merge_request_kv_payload(mode, trace, lists, payloads, out);
     finish(out);
 }
 
@@ -598,18 +740,21 @@ pub fn encode_merge_response_kv(
     payloads: &[u64],
     out: &mut Vec<u8>,
 ) {
-    debug_assert_eq!(merged.len(), payloads.len());
-    let label = clamp_str(served_by, u8::MAX as usize);
     begin(out, TYPE_MERGE_RESPONSE_KV);
-    out.push(label.len() as u8);
-    out.extend_from_slice(label.as_bytes());
-    out.extend_from_slice(&(merged.len() as u32).to_le_bytes());
-    for &x in merged {
-        out.extend_from_slice(&x.to_le_bytes());
-    }
-    for &p in payloads {
-        out.extend_from_slice(&p.to_le_bytes());
-    }
+    merge_response_kv_payload(served_by, merged, payloads, out);
+    finish(out);
+}
+
+/// v2 twin of [`encode_merge_response_kv`].
+pub fn encode_merge_response_kv_v2(
+    req_id: u64,
+    served_by: &str,
+    merged: &[u32],
+    payloads: &[u64],
+    out: &mut Vec<u8>,
+) {
+    begin_v2(out, TYPE_MERGE_RESPONSE_KV, req_id);
+    merge_response_kv_payload(served_by, merged, payloads, out);
     finish(out);
 }
 
@@ -619,24 +764,50 @@ pub fn encode_stats_request(out: &mut Vec<u8>) {
     finish(out);
 }
 
-/// Encode a v1.2 stats response. The JSON body is clamped to
-/// [`MAX_STATS_BYTES`] on a char boundary — a truncated document fails
-/// the receiver's parse rather than desyncing the stream.
+/// v2 twin of [`encode_stats_request`].
+pub fn encode_stats_request_v2(req_id: u64, out: &mut Vec<u8>) {
+    begin_v2(out, TYPE_STATS_REQUEST, req_id);
+    finish(out);
+}
+
+/// Encode a v1.2 stats response. A document over [`MAX_STATS_BYTES`]
+/// is answered as a typed `Error{UNSUPPORTED}` frame instead — never
+/// clamped mid-document into invalid JSON (the server elides
+/// per-artifact detail first, so this fallback is a last resort).
 pub fn encode_stats_response(json: &str, out: &mut Vec<u8>) {
-    let body = clamp_str(json, MAX_STATS_BYTES);
+    if json.len() > MAX_STATS_BYTES {
+        encode_error(code::UNSUPPORTED, STATS_OVERFLOW_MSG, out);
+        return;
+    }
     begin(out, TYPE_STATS_RESPONSE);
-    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
-    out.extend_from_slice(body.as_bytes());
+    stats_response_payload(json, out);
+    finish(out);
+}
+
+/// v2 twin of [`encode_stats_response`] (the overflow error echoes the
+/// request id like any other v2 reply).
+pub fn encode_stats_response_v2(req_id: u64, json: &str, out: &mut Vec<u8>) {
+    if json.len() > MAX_STATS_BYTES {
+        encode_error_v2(req_id, code::UNSUPPORTED, STATS_OVERFLOW_MSG, out);
+        return;
+    }
+    begin_v2(out, TYPE_STATS_RESPONSE, req_id);
+    stats_response_payload(json, out);
     finish(out);
 }
 
 /// Encode an error frame (message clamped to [`MAX_ERROR_MSG`]).
 pub fn encode_error(code: u8, message: &str, out: &mut Vec<u8>) {
-    let msg = clamp_str(message, MAX_ERROR_MSG);
     begin(out, TYPE_ERROR);
-    out.push(code);
-    out.extend_from_slice(&(msg.len() as u16).to_le_bytes());
-    out.extend_from_slice(msg.as_bytes());
+    error_payload(code, message, out);
+    finish(out);
+}
+
+/// v2 twin of [`encode_error`]; `req_id` echoes the offending request
+/// (0 when the error is not attributable to a v2 request id).
+pub fn encode_error_v2(req_id: u64, code: u8, message: &str, out: &mut Vec<u8>) {
+    begin_v2(out, TYPE_ERROR, req_id);
+    error_payload(code, message, out);
     finish(out);
 }
 
@@ -667,6 +838,35 @@ pub fn encode_frame(f: &Frame, out: &mut Vec<u8>) {
         }
         Frame::StatsRequest => encode_stats_request(out),
         Frame::StatsResponse { json } => encode_stats_response(json, out),
+    }
+}
+
+/// Encode any frame with v2 framing and the given request id.
+pub fn encode_frame_v2(f: &Frame, req_id: u64, out: &mut Vec<u8>) {
+    match f {
+        Frame::MergeRequest { mode, trace, lists } => {
+            encode_merge_request_v2(req_id, *mode, *trace, lists, out)
+        }
+        Frame::MergeResponse { served_by, merged } => {
+            encode_merge_response_v2(req_id, served_by, merged, out)
+        }
+        Frame::Error { code, message } => encode_error_v2(req_id, *code, message, out),
+        Frame::MergeRequestKV { mode, trace, lists, payloads } => {
+            encode_merge_request_kv_v2(req_id, *mode, *trace, lists, payloads, out)
+        }
+        Frame::MergeResponseKV { served_by, merged, payloads } => {
+            encode_merge_response_kv_v2(req_id, served_by, merged, payloads, out)
+        }
+        Frame::Ping => {
+            begin_v2(out, TYPE_PING, req_id);
+            finish(out);
+        }
+        Frame::Pong => {
+            begin_v2(out, TYPE_PONG, req_id);
+            finish(out);
+        }
+        Frame::StatsRequest => encode_stats_request_v2(req_id, out),
+        Frame::StatsResponse { json } => encode_stats_response_v2(req_id, json, out),
     }
 }
 
@@ -923,6 +1123,109 @@ mod tests {
             read_one(&mut rd, &mut cur).unwrap(),
             ReadFrame::Frame(Frame::Ping)
         ));
+    }
+
+    fn roundtrip_v2(f: &Frame, id: u64) -> Frame {
+        let mut bytes = Vec::new();
+        encode_frame_v2(f, id, &mut bytes);
+        let mut rd = FrameReader::new();
+        match read_one(&mut rd, &mut Cursor::new(bytes)).unwrap() {
+            ReadFrame::FrameV2(g, got) => {
+                assert_eq!(got, id, "{f:?} echoed the wrong request id");
+                g
+            }
+            other => panic!("{f:?} decoded to {other:?}"),
+        }
+    }
+
+    #[test]
+    fn v2_roundtrip_every_frame_type_echoes_the_id() {
+        for (i, f) in [
+            Frame::MergeRequest {
+                mode: MODE_MERGE,
+                trace: 0,
+                lists: vec![vec![1, 2, 3], vec![2, 9]],
+            },
+            Frame::MergeRequest { mode: MODE_MERGE, trace: u64::MAX, lists: vec![vec![1]] },
+            Frame::MergeResponse { served_by: "loms2_up32_dn32_b256".into(), merged: vec![1, 2] },
+            Frame::MergeRequestKV {
+                mode: MODE_MERGE,
+                trace: 0,
+                lists: vec![vec![1, 2, 3], vec![2, 9]],
+                payloads: vec![10, 20, 30, 40, 50],
+            },
+            Frame::MergeResponseKV {
+                served_by: String::new(),
+                merged: vec![7],
+                payloads: vec![u64::MAX],
+            },
+            Frame::Error { code: code::REJECTED, message: "list 0 is not sorted".into() },
+            Frame::Ping,
+            Frame::Pong,
+            Frame::StatsRequest,
+            Frame::StatsResponse { json: "{\"requests\":0}".into() },
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            // Exercise id 0, small ids, and the full u64 range.
+            for id in [0u64, i as u64 + 1, u64::MAX - i as u64] {
+                assert_eq!(roundtrip_v2(&f, id), f);
+            }
+        }
+    }
+
+    #[test]
+    fn v2_framing_inserts_the_id_and_moves_no_payload_byte() {
+        // The v2 frame is the v1 frame with the version byte bumped to
+        // 2 and exactly 8 id bytes spliced in after the type byte —
+        // the payload grammar is shared, not parallel.
+        let f =
+            Frame::MergeRequest { mode: MODE_MERGE, trace: 0, lists: vec![vec![3, 5], vec![4]] };
+        let (mut v1, mut v2) = (Vec::new(), Vec::new());
+        encode_frame(&f, &mut v1);
+        encode_frame_v2(&f, 0x0102_0304_0506_0708, &mut v2);
+        assert_eq!(v2.len(), v1.len() + 8);
+        let len = u32::from_le_bytes(v2[..4].try_into().unwrap());
+        assert_eq!(len as usize, v2.len() - 4);
+        assert_eq!(v2[4], PROTOCOL_V2);
+        assert_eq!(v2[5], v1[5], "type byte unchanged");
+        assert_eq!(&v2[6..14], &[8, 7, 6, 5, 4, 3, 2, 1], "u64le id after type");
+        assert_eq!(&v2[14..], &v1[6..], "payload bytes identical");
+    }
+
+    #[test]
+    fn oversized_stats_document_becomes_a_typed_error_not_truncated_json() {
+        let json = format!("{{\"pad\":\"{}\"}}", "x".repeat(MAX_STATS_BYTES + 100));
+        let mut out = Vec::new();
+        encode_stats_response(&json, &mut out);
+        let mut rd = FrameReader::new();
+        match read_one(&mut rd, &mut Cursor::new(out)).unwrap() {
+            ReadFrame::Frame(Frame::Error { code: c, message }) => {
+                assert_eq!(c, code::UNSUPPORTED);
+                assert!(message.contains("MAX_STATS_BYTES"), "{message}");
+            }
+            other => panic!("overflowing stats encoded as {other:?}"),
+        }
+        // The v2 twin echoes the poll's request id on the error.
+        let mut out = Vec::new();
+        encode_stats_response_v2(99, &json, &mut out);
+        let mut rd = FrameReader::new();
+        match read_one(&mut rd, &mut Cursor::new(out)).unwrap() {
+            ReadFrame::FrameV2(Frame::Error { code: c, .. }, 99) => {
+                assert_eq!(c, code::UNSUPPORTED)
+            }
+            other => panic!("overflowing v2 stats encoded as {other:?}"),
+        }
+        // A document that exactly fits still rides the normal frame.
+        let fits = "x".repeat(MAX_STATS_BYTES);
+        let mut out = Vec::new();
+        encode_stats_response(&fits, &mut out);
+        let mut rd = FrameReader::new();
+        match read_one(&mut rd, &mut Cursor::new(out)).unwrap() {
+            ReadFrame::Frame(Frame::StatsResponse { json }) => assert_eq!(json.len(), fits.len()),
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

@@ -1,81 +1,108 @@
-//! The networked serving front-end: a framed-TCP listener over a
-//! running [`MergeService`].
+//! The networked serving front-end: an event-driven framed-TCP
+//! listener over a running [`MergeService`].
 //!
 //! Thread shape:
 //!
-//! * `loms-net-accept` — accepts connections and hands them to the
-//!   worker pool over a bounded channel (backpressure: when every
-//!   worker is busy and the backlog is full, `accept` stalls and the
-//!   kernel's listen queue absorbs the burst).
-//! * `loms-net-worker-*` — a fixed pool; each worker owns one
-//!   connection at a time. Per connection the worker runs a *reader*
-//!   (its own thread of control) and spawns a scoped *writer* thread,
-//!   so pipelined requests decode and enter service admission while
-//!   earlier responses are still being written — the wire front-end
-//!   inherits the service's depth-1 execution pipeline instead of
-//!   serialising it.
+//! * `loms-net-poll` — the readiness loop. Owns the nonblocking
+//!   listener, every connection, a [`Poller`] (epoll/kqueue), and a
+//!   coarse [`TimerWheel`]. It accepts, decodes frames with the
+//!   incremental [`FrameReader`], sequences replies through each
+//!   connection's [`ReplyQueue`], and flushes write buffers — never
+//!   blocking, so served connections are bounded by memory, not
+//!   threads.
+//! * `loms-net-worker-*` — a small fixed pool draining decoded
+//!   requests off the loop. Workers run dispatch (ping/stats/shed/
+//!   validation), submit merges to the service with a completion
+//!   callback ([`MergeService::submit_with`]), and encode every reply;
+//!   finished frames return to the loop as `Ready` buffers via a
+//!   self-pipe [`Waker`].
 //!
-//! Data path: frame bytes decode straight into the `Vec<u32>` lists
-//! handed to [`MergeService::submit`] (one inbound copy), the service
-//! runs its two-copy tile-direct path, and the response keys are
-//! encoded from the response vector into the write buffer (one
-//! outbound copy). No intermediate request/response structs exist on
-//! the server side of the wire.
+//! Protocol negotiation: a connection speaks v1 *or* v2, latched by
+//! its first decoded frame. v1 connections get replies in request
+//! order (the [`ReplyQueue`] holds out-of-order completions); v2
+//! frames carry a `u64le` request id echoed in the reply, so
+//! completions stream out the moment they exist and many logical
+//! clients can multiplex one connection. Cross-version frames after
+//! the latch and duplicate in-flight v2 ids are answered with typed
+//! `MALFORMED` errors on the surviving connection.
 //!
-//! Error policy: a malformed frame body gets an [`Frame::Error`] reply
-//! on the same connection and the stream keeps going (the length
-//! prefix kept it in sync); only an unusable length prefix or a
-//! mid-frame disconnect closes the connection. The server never
-//! panics on wire input — every decode failure is a typed reply.
+//! Fairness and overload: admission shedding refuses merge work over
+//! the service's pending watermark; per-connection inflight quotas
+//! ([`NetServerConfig::max_inflight_per_conn`]) plus a write-backlog
+//! budget pause *reading* an abusive connection, so backpressure
+//! reaches it through TCP while everyone else keeps being served. A
+//! peer that stops reading trips the write deadline on the timer
+//! wheel and is reaped.
 //!
-//! Overload policy: the per-connection reply queue is bounded
-//! ([`NetServerConfig::max_inflight_per_conn`]) — a client that
-//! pipelines faster than it reads stops being *read*, so backpressure
-//! reaches it through TCP instead of growing server memory; a peer
-//! that stops reading entirely trips the write timeout and is
-//! disconnected.
+//! Accounting: `net_frames_in` is counted at decode (on the loop);
+//! `net_responses`/`net_errors` at encode (on a worker) — even when
+//! the connection died in between — so the
+//! `frames_in == responses + errors` balance always settles.
 //!
-//! Shutdown: [`NetServer::shutdown`] stops accepting, lets every
-//! worker finish its in-flight frames (readers poll the flag at
-//! `read_timeout` granularity; writers drain every response already
-//! admitted to the service), then joins the pool and finally shuts the
-//! service down — in-flight batches are never dropped.
+//! Shutdown: [`NetServer::shutdown`] sets a flag and wakes the loop —
+//! no loopback connection, nothing to block on. The loop closes the
+//! listener, stops reading, drains every admitted request's reply to
+//! the wire (the service stays up for the drain; stalled peers are
+//! reaped by the write deadline), and exits when no connections
+//! remain; then the service drains and the workers join. In-flight
+//! batches are never dropped.
 
+use super::conn::{Proto, ReplyQueue};
+use super::poll::{self, PollEvent, Poller, TimerWheel, WakeReader, Waker};
 use super::protocol::{
-    self, code, encode_error, encode_merge_response, encode_merge_response_kv,
-    encode_stats_response, Frame, FrameReader, ReadFrame, MODE_MERGE,
+    self, code, encode_error, encode_error_v2, encode_merge_response, encode_merge_response_kv,
+    encode_merge_response_kv_v2, encode_merge_response_v2, Frame, FrameReader, ReadFrame,
+    MODE_MERGE,
 };
 use crate::coordinator::request::MergeResponse;
 use crate::coordinator::{Metrics, MergeService};
 use crate::obs::expo;
 use crate::util::fault::{self, Site};
 use anyhow::{Context, Result};
+use std::collections::HashMap;
 use std::io::{self, Write};
-use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_WAKER: u64 = 1;
+const FIRST_CONN_TOKEN: u64 = 2;
+/// Pause reading a connection when its un-flushed reply bytes (write
+/// buffer plus the v1 hold queue) reach this budget.
+const WRITE_BACKLOG_PAUSE: usize = 4 << 20;
+/// Compact the write buffer once this many flushed bytes sit in front.
+const WBUF_COMPACT: usize = 64 << 10;
+/// Write deadlines fire at most one wheel tick late.
+const WHEEL_GRANULARITY: Duration = Duration::from_millis(100);
+const WHEEL_SLOTS: usize = 128;
+/// Poll-wait backstop when no timer is armed (wake-ups arrive via the
+/// self-pipe; this only bounds a lost wake).
+const MAX_POLL_WAIT: Duration = Duration::from_millis(500);
+
+/// Rejection message shared by every path that answers for a request
+/// the service refused (or could not accept during shutdown).
+const REJECT_MSG: &str = "request rejected (unsorted list, u32::MAX key, or shutdown)";
 
 /// Listener tuning.
 #[derive(Debug, Clone)]
 pub struct NetServerConfig {
-    /// Worker threads — the maximum number of concurrently served
-    /// connections (clamped to ≥ 1).
+    /// Dispatch/encode worker threads (clamped to ≥ 1). Workers bound
+    /// concurrent *execution* of request dispatch, not the number of
+    /// served connections — the readiness loop serves any number of
+    /// connections regardless of pool size.
     pub workers: usize,
-    /// Socket read timeout: how often a blocked reader wakes to check
-    /// the shutdown flag. Frame sync is kept across timeouts.
-    pub read_timeout: Duration,
-    /// Socket write timeout: how long a reply write may block on a
-    /// peer that stopped reading before the connection is declared
-    /// dead. Bounds how long one slow-loris client can delay worker
-    /// (and therefore server) shutdown.
+    /// How long a connection with pending reply bytes may make no
+    /// write progress before it is declared dead and reaped (via the
+    /// event loop's timer wheel).
     pub write_timeout: Duration,
-    /// Maximum replies a connection may have in flight (admitted to
-    /// the service or queued for the writer). When the writer falls
-    /// this far behind, the reader stops decoding new frames —
-    /// backpressure reaches the client through TCP instead of growing
-    /// server memory without bound (clamped to ≥ 1).
+    /// Maximum replies a connection may have in flight. At the quota
+    /// the loop stops *reading* that connection — backpressure reaches
+    /// the client through TCP instead of growing server memory — while
+    /// every other connection keeps being served (clamped to ≥ 1).
     pub max_inflight_per_conn: usize,
     /// Admission-level overload shedding: when the service's pending
     /// gauge ([`MergeService::pending`]) is at or above this watermark,
@@ -83,7 +110,7 @@ pub struct NetServerConfig {
     /// [`code::OVERLOADED`] error frame instead of being
     /// submitted — the client backs off and retries, and server-side
     /// queues stay bounded under a request storm. `0` disables
-    /// shedding. Pings and error replies are never shed.
+    /// shedding. Pings, stats and error replies are never shed.
     pub shed_pending: u64,
 }
 
@@ -91,7 +118,6 @@ impl Default for NetServerConfig {
     fn default() -> Self {
         NetServerConfig {
             workers: 8,
-            read_timeout: Duration::from_millis(50),
             write_timeout: Duration::from_secs(10),
             max_inflight_per_conn: 256,
             shed_pending: 4096,
@@ -99,12 +125,42 @@ impl Default for NetServerConfig {
     }
 }
 
+/// Work items flowing loop → workers (requests) and service → workers
+/// (completions). `req_id` is the v2 request id (`None` on a
+/// v1-framed connection) and decides the reply framing.
+enum Work {
+    Req { token: u64, seq: u64, req_id: Option<u64>, frame: Frame },
+    Done { token: u64, seq: u64, req_id: Option<u64>, resp: Option<Box<MergeResponse>> },
+}
+
+/// A fully encoded reply headed back to the loop for sequencing.
+struct Ready {
+    token: u64,
+    seq: u64,
+    /// v2 id this reply releases for reuse (`None` for v1 replies and
+    /// for errors that never claimed one, e.g. the duplicate-id error).
+    release_id: Option<u64>,
+    bytes: Vec<u8>,
+}
+
+/// State shared between the loop and the worker pool.
+struct Shared {
+    ready: Mutex<Vec<Ready>>,
+    waker: Waker,
+    /// Completion-callback sender slot. Workers clone a sender per
+    /// merge submit; the slot is cleared after the service drains so
+    /// the workers' `recv` disconnects and the pool exits.
+    work_tx: Mutex<Option<mpsc::Sender<Work>>>,
+}
+
 /// A running framed-TCP front-end over a [`MergeService`].
 pub struct NetServer {
     addr: SocketAddr,
-    service: Option<Arc<MergeService>>,
+    service: Arc<MergeService>,
     shutdown: Arc<AtomicBool>,
-    acceptor: Option<JoinHandle<()>>,
+    waker: Waker,
+    shared: Arc<Shared>,
+    poll_thread: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
 }
 
@@ -116,67 +172,67 @@ impl NetServer {
     pub fn start(listen: &str, service: MergeService, cfg: NetServerConfig) -> Result<NetServer> {
         let listener =
             TcpListener::bind(listen).with_context(|| format!("binding {listen:?}"))?;
+        listener.set_nonblocking(true).context("setting listener nonblocking")?;
         let addr = listener.local_addr().context("resolving listen address")?;
+        let poller = Poller::new().context("creating readiness poller")?;
+        let (waker, wake_rx) = poll::wake_pair().context("creating loop waker")?;
+        poller
+            .register(listener.as_raw_fd(), TOKEN_LISTENER, true, false)
+            .context("registering listener")?;
+        poller
+            .register(wake_rx.fd(), TOKEN_WAKER, true, false)
+            .context("registering waker")?;
         let service = Arc::new(service);
         let shutdown = Arc::new(AtomicBool::new(false));
+        let (work_tx, work_rx) = mpsc::channel::<Work>();
+        let shared = Arc::new(Shared {
+            ready: Mutex::new(Vec::new()),
+            waker: waker.clone(),
+            work_tx: Mutex::new(Some(work_tx.clone())),
+        });
+        let work_rx = Arc::new(Mutex::new(work_rx));
         let n_workers = cfg.workers.max(1);
-        // Bounded hand-off: a full backlog pushes backpressure into the
-        // kernel listen queue instead of growing an unbounded Vec.
-        let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(n_workers);
-        let conn_rx = Arc::new(Mutex::new(conn_rx));
         let mut workers = Vec::with_capacity(n_workers);
         for i in 0..n_workers {
-            let conn_rx = Arc::clone(&conn_rx);
+            let work_rx = Arc::clone(&work_rx);
             let service = Arc::clone(&service);
-            let shutdown = Arc::clone(&shutdown);
+            let shared = Arc::clone(&shared);
             let cfg = cfg.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("loms-net-worker-{i}"))
-                    .spawn(move || loop {
-                        // Take one connection while holding the lock,
-                        // release it to serve.
-                        let conn = {
-                            let Ok(guard) = conn_rx.lock() else { return };
-                            guard.recv()
-                        };
-                        let Ok(stream) = conn else { return };
-                        serve_conn(stream, &service, &shutdown, &cfg);
-                    })
+                    .spawn(move || worker_loop(work_rx, service, shared, cfg))
                     .context("spawning net worker")?,
             );
         }
-        let accept_shutdown = Arc::clone(&shutdown);
-        let accept_metrics = Arc::clone(&service);
-        let acceptor = std::thread::Builder::new()
-            .name("loms-net-accept".into())
-            .spawn(move || {
-                loop {
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            if accept_shutdown.load(Ordering::SeqCst) {
-                                break; // the shutdown wake-up connection
-                            }
-                            accept_metrics.metrics().on_net_connection();
-                            if conn_tx.send(stream).is_err() {
-                                break;
-                            }
-                        }
-                        Err(_) => {
-                            if accept_shutdown.load(Ordering::SeqCst) {
-                                break;
-                            }
-                            // Transient accept errors (EMFILE, aborted
-                            // handshake): back off briefly instead of
-                            // busy-spinning on a persistent condition.
-                            std::thread::sleep(Duration::from_millis(10));
-                        }
-                    }
-                }
-                // Dropping conn_tx here releases the worker pool.
-            })
-            .context("spawning net acceptor")?;
-        Ok(NetServer { addr, service: Some(service), shutdown, acceptor: Some(acceptor), workers })
+        let el = EventLoop {
+            poller,
+            listener: Some(listener),
+            wake_rx,
+            conns: HashMap::new(),
+            next_token: FIRST_CONN_TOKEN,
+            wheel: TimerWheel::new(WHEEL_GRANULARITY, WHEEL_SLOTS),
+            resume: Vec::new(),
+            service: Arc::clone(&service),
+            shared: Arc::clone(&shared),
+            work_tx,
+            max_inflight: cfg.max_inflight_per_conn.max(1),
+            cfg,
+            shutdown: Arc::clone(&shutdown),
+        };
+        let poll_thread = std::thread::Builder::new()
+            .name("loms-net-poll".into())
+            .spawn(move || el.run())
+            .context("spawning net event loop")?;
+        Ok(NetServer {
+            addr,
+            service,
+            shutdown,
+            waker,
+            shared,
+            poll_thread: Some(poll_thread),
+            workers,
+        })
     }
 
     /// The bound address (resolves `:0` to the real ephemeral port).
@@ -186,64 +242,39 @@ impl NetServer {
 
     /// The service behind the listener (in-process submission, metrics).
     pub fn service(&self) -> &MergeService {
-        self.service.as_ref().expect("server not shut down")
+        &self.service
     }
 
     fn stop(&mut self) {
-        if self.acceptor.is_none() && self.workers.is_empty() {
-            return; // already stopped (shutdown() runs before Drop)
-        }
+        let Some(h) = self.poll_thread.take() else { return }; // already stopped
         self.shutdown.store(true, Ordering::SeqCst);
-        // Wake the acceptor out of `accept()`; it sees the flag and
-        // exits, dropping the connection channel. A wildcard bind
-        // (0.0.0.0 / ::) is not self-connectable everywhere, so the
-        // wake-up targets loopback on the same port, with a bounded
-        // connect so a refused wake can never hang the join.
-        let mut wake = self.addr;
-        if wake.ip().is_unspecified() {
-            wake.set_ip(match wake.ip() {
-                IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
-                IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
-            });
-        }
-        let _ = TcpStream::connect_timeout(&wake, Duration::from_secs(1));
-        if let Some(h) = self.acceptor.take() {
-            let _ = h.join();
+        self.waker.wake();
+        let _ = h.join();
+        // The loop is gone; drain the service. Every in-flight
+        // request's completion callback fires inside this call (each
+        // holds a work-sender clone, so the pool is still reachable).
+        self.service.shutdown();
+        // All callback clones have fired and dropped; clearing the
+        // slot drops the last sender and disconnects the worker pool.
+        if let Ok(mut slot) = self.shared.work_tx.lock() {
+            *slot = None;
         }
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
     }
 
-    /// Graceful shutdown: stop accepting, drain every in-flight frame
-    /// and batch, then stop the service itself.
+    /// Graceful shutdown: stop accepting, drain every admitted frame
+    /// and batch to the wire, then stop the service itself.
     pub fn shutdown(mut self) {
         self.stop();
-        if let Some(service) = self.service.take() {
-            if let Ok(svc) = Arc::try_unwrap(service) {
-                svc.shutdown();
-            }
-        }
     }
 }
 
 impl Drop for NetServer {
     fn drop(&mut self) {
         self.stop();
-        // `service` (if still held) stops via its own Drop.
     }
-}
-
-/// What the reader hands the writer, in request order.
-enum Reply {
-    /// A merge admitted to the service — the writer awaits the
-    /// response channel (closed channel = rejected).
-    Merge(mpsc::Receiver<MergeResponse>),
-    Pong,
-    /// A v1.2 stats document, already rendered to JSON by the reader
-    /// (snapshotting under the reader keeps the writer non-blocking).
-    Stats(String),
-    Err { code: u8, message: String },
 }
 
 /// v1.2 trace id for an inbound merge: honor the client's id, else
@@ -259,61 +290,240 @@ fn net_trace(metrics: &Metrics, wire: u64) -> u64 {
     }
 }
 
-/// Serve one connection to completion (peer close, fatal frame, or
-/// server shutdown). Reader runs here; the writer runs in a scoped
-/// thread so responses stream back while later frames decode.
-fn serve_conn(
-    mut stream: TcpStream,
-    service: &MergeService,
-    shutdown: &AtomicBool,
-    cfg: &NetServerConfig,
-) {
-    let metrics = service.metrics();
-    let _ = stream.set_nodelay(true);
-    if stream.set_read_timeout(Some(cfg.read_timeout)).is_err() {
-        return;
+/// One connection's state on the loop thread.
+struct Conn {
+    stream: TcpStream,
+    reader: FrameReader,
+    proto: Proto,
+    queue: ReplyQueue,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    want_write: bool,
+    read_paused: bool,
+    /// No more reads; close once every admitted reply is flushed.
+    closing: bool,
+    /// Whether the fd currently has poller interest (a paused, idle
+    /// connection is deregistered entirely so a peer-hangup cannot
+    /// spin the level-triggered loop).
+    registered: bool,
+    write_deadline: Option<Instant>,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            reader: FrameReader::new(),
+            proto: Proto::Unset,
+            queue: ReplyQueue::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            want_write: false,
+            read_paused: false,
+            closing: false,
+            registered: true,
+            write_deadline: None,
+        }
     }
-    let Ok(write_half) = stream.try_clone() else { return };
-    // A peer that stops reading must not pin this worker forever: the
-    // write timeout turns it into a dead-peer close.
-    let _ = write_half.set_write_timeout(Some(cfg.write_timeout));
-    // Bounded reply queue: when the writer falls `max_inflight` behind
-    // (slow or stalled peer), the reader blocks here instead of
-    // admitting more work — backpressure reaches the client via TCP,
-    // and per-connection memory stays bounded.
-    let (reply_tx, reply_rx) = mpsc::sync_channel::<Reply>(cfg.max_inflight_per_conn.max(1));
-    std::thread::scope(|s| {
-        let writer = s.spawn(|| writer_loop(write_half, reply_rx, metrics));
-        let mut reader = FrameReader::new();
-        loop {
-            if shutdown.load(Ordering::SeqCst) {
-                break;
+
+    /// Write pending bytes; `Ok(true)` means fully drained.
+    fn flush(&mut self) -> io::Result<bool> {
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => return Err(io::ErrorKind::WriteZero.into()),
+                Ok(n) => {
+                    self.wpos += n;
+                    // Progress: the peer is reading. Clear the deadline
+                    // so it re-arms fresh if the very next write blocks.
+                    self.write_deadline = None;
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
             }
-            match reader.read_frame(&mut stream) {
+        }
+        if self.wpos >= self.wbuf.len() {
+            self.wbuf.clear();
+            self.wpos = 0;
+            self.want_write = false;
+            self.write_deadline = None;
+            Ok(true)
+        } else {
+            if self.wpos >= WBUF_COMPACT {
+                self.wbuf.drain(..self.wpos);
+                self.wpos = 0;
+            }
+            self.want_write = true;
+            Ok(false)
+        }
+    }
+
+    /// Reply bytes not yet on the wire (pause-budget input).
+    fn backlog(&self) -> usize {
+        (self.wbuf.len() - self.wpos) + self.queue.held_bytes()
+    }
+}
+
+/// Encode a protocol error on the loop thread and sequence it through
+/// the reply queue (it rides behind earlier v1 replies like any other
+/// completion). Counts `on_net_error` at encode, like the workers.
+fn conn_error(metrics: &Metrics, conn: &mut Conn, code: u8, message: &str, echo_id: u64) {
+    metrics.on_net_error();
+    let mut bytes = Vec::new();
+    let ordered = conn.proto != Proto::V2;
+    if ordered {
+        encode_error(code, message, &mut bytes);
+    } else {
+        encode_error_v2(echo_id, code, message, &mut bytes);
+    }
+    let seq = conn.queue.admit();
+    conn.queue.complete(ordered, seq, None, bytes, &mut conn.wbuf);
+}
+
+/// The readiness loop (runs on `loms-net-poll`).
+struct EventLoop {
+    poller: Poller,
+    listener: Option<TcpListener>,
+    wake_rx: WakeReader,
+    conns: HashMap<u64, Conn>,
+    next_token: u64,
+    wheel: TimerWheel,
+    /// Connections whose reads resumed this iteration — re-pumped so
+    /// frames already buffered in their `FrameReader` are not stranded
+    /// waiting for a readiness event that will never re-fire.
+    resume: Vec<u64>,
+    service: Arc<MergeService>,
+    shared: Arc<Shared>,
+    work_tx: mpsc::Sender<Work>,
+    max_inflight: usize,
+    cfg: NetServerConfig,
+    shutdown: Arc<AtomicBool>,
+}
+
+enum ReadExit {
+    /// Re-sync interest/flush state.
+    Sync,
+    /// The connection was torn down mid-read.
+    Closed,
+}
+
+impl EventLoop {
+    fn run(mut self) {
+        let mut events: Vec<PollEvent> = Vec::new();
+        let mut expired: Vec<u64> = Vec::new();
+        loop {
+            let timeout = self.wheel.tick_hint().unwrap_or(MAX_POLL_WAIT).min(MAX_POLL_WAIT);
+            if self.poller.wait(&mut events, Some(timeout)).is_err() {
+                // A transient wait failure must not spin the loop hot.
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            let evs = std::mem::take(&mut events);
+            for ev in evs.iter().copied() {
+                match ev.token {
+                    TOKEN_LISTENER => self.accept_ready(),
+                    TOKEN_WAKER => self.wake_rx.drain(),
+                    token => self.conn_event(token, ev),
+                }
+            }
+            events = evs;
+            self.apply_ready();
+            let resume = std::mem::take(&mut self.resume);
+            for token in resume {
+                self.read_token(token);
+            }
+            self.wheel.advance(Instant::now(), &mut expired);
+            for token in expired.drain(..) {
+                self.check_deadline(token);
+            }
+            if self.shutdown.load(Ordering::SeqCst) {
+                self.drain_for_shutdown();
+                if self.conns.is_empty() {
+                    break;
+                }
+            }
+        }
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            let Some(listener) = &self.listener else { return };
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    self.service.metrics().on_net_connection();
+                    let token = self.next_token;
+                    self.next_token += 1; // tokens are never reused
+                    if self.poller.register(stream.as_raw_fd(), token, true, false).is_ok() {
+                        self.conns.insert(token, Conn::new(stream));
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    // Transient accept errors (EMFILE, aborted
+                    // handshake): level-triggered readiness will
+                    // re-report, so back off briefly instead of
+                    // busy-spinning on a persistent condition.
+                    std::thread::sleep(Duration::from_millis(5));
+                    return;
+                }
+            }
+        }
+    }
+
+    fn conn_event(&mut self, token: u64, ev: PollEvent) {
+        if ev.writable {
+            self.flush_and_sync(token);
+        }
+        if ev.readable {
+            self.read_token(token);
+        }
+        // `hangup` needs no dedicated arm: reads surface Eof and
+        // writes surface the error; sync handles the teardown.
+    }
+
+    /// Decode frames from one connection until it would block, pauses,
+    /// or dies. One `read_frame` call does at most one transport read,
+    /// and the inflight quota bounds how many frames one connection
+    /// can admit per pump — no connection can starve the loop.
+    fn read_token(&mut self, token: u64) {
+        let exit = loop {
+            let Some(conn) = self.conns.get_mut(&token) else { return };
+            if conn.read_paused || conn.closing {
+                break ReadExit::Sync;
+            }
+            let metrics = self.service.metrics();
+            match conn.reader.read_frame(&mut conn.stream) {
                 Err(e)
                     if e.kind() == io::ErrorKind::WouldBlock
                         || e.kind() == io::ErrorKind::TimedOut =>
                 {
-                    continue; // shutdown poll tick; frame sync is kept
+                    break ReadExit::Sync;
                 }
-                Err(_) => break, // disconnect (possibly mid-frame)
-                // Partial frame: loop so the shutdown check above runs
-                // between every chunk, even against a trickling peer.
+                Err(_) => break ReadExit::Closed, // disconnect (possibly mid-frame)
                 Ok(ReadFrame::Pending) => continue,
-                Ok(ReadFrame::Eof) => break,
+                Ok(ReadFrame::Eof) => {
+                    conn.closing = true;
+                    break ReadExit::Sync;
+                }
                 Ok(ReadFrame::Corrupt(msg)) => {
-                    // The stream cannot be resynced: answer and close.
+                    // The stream cannot be resynced: answer and close
+                    // once the error (and earlier replies) are flushed.
                     metrics.on_net_frame_in();
                     metrics.on_net_decode_error();
-                    let _ = reply_tx.send(Reply::Err { code: code::MALFORMED, message: msg });
-                    break;
+                    conn_error(metrics, conn, code::MALFORMED, &msg, 0);
+                    conn.closing = true;
+                    break ReadExit::Sync;
                 }
                 Ok(ReadFrame::Malformed(msg)) => {
                     // Framing intact: answer on the same connection and
                     // keep serving (no disconnect on bad frames).
                     metrics.on_net_frame_in();
                     metrics.on_net_decode_error();
-                    let _ = reply_tx.send(Reply::Err { code: code::MALFORMED, message: msg });
+                    conn_error(metrics, conn, code::MALFORMED, &msg, 0);
                 }
                 Ok(ReadFrame::Frame(frame)) => {
                     // Injected connection kill: drop the connection
@@ -322,130 +532,416 @@ fn serve_conn(
                     // unanswered and must reconnect and replay.
                     if fault::fires(Site::NetConnReset) {
                         metrics.on_fault_injected();
-                        break;
+                        break ReadExit::Closed;
                     }
                     metrics.on_net_frame_in();
-                    let reply = match frame {
-                        Frame::Ping => Reply::Pong,
-                        Frame::MergeRequest { mode, .. } if mode != MODE_MERGE => Reply::Err {
-                            code: code::UNSUPPORTED,
-                            message: format!("unsupported request mode {mode}"),
-                        },
-                        Frame::MergeRequestKV { mode, .. } if mode != MODE_MERGE => Reply::Err {
-                            code: code::UNSUPPORTED,
-                            message: format!("unsupported request mode {mode}"),
-                        },
-                        // Admission-level shed: refuse merge work while
-                        // the service is over its pending watermark.
-                        // The request was never submitted, so the
-                        // client can always safely retry.
-                        Frame::MergeRequest { .. } | Frame::MergeRequestKV { .. }
-                            if cfg.shed_pending > 0 && service.pending() >= cfg.shed_pending =>
-                        {
-                            metrics.on_shed();
-                            Reply::Err {
-                                code: code::OVERLOADED,
-                                message: "server overloaded, retry later".into(),
-                            }
-                        }
-                        // Stats are answered even over the shed
-                        // watermark — inspecting an overloaded server
-                        // is the poll's whole point. Rendering under
-                        // the reader keeps the writer non-blocking.
-                        Frame::StatsRequest => {
-                            let doc = expo::stats_json(&metrics.snapshot(), service.pending());
-                            Reply::Stats(doc.to_string())
-                        }
-                        // The decoded lists go into admission as-is —
-                        // no re-copy between socket and service.
-                        Frame::MergeRequest { trace, lists, .. } => {
-                            let trace = net_trace(metrics, trace);
-                            Reply::Merge(service.submit_traced(lists, trace))
-                        }
-                        // v1.1: the decoded payload column rides into
-                        // admission beside the keys, same single copy.
-                        Frame::MergeRequestKV { trace, lists, payloads, .. } => {
-                            let trace = net_trace(metrics, trace);
-                            Reply::Merge(service.submit_kv_traced(lists, payloads, trace))
-                        }
-                        Frame::MergeResponse { .. }
-                        | Frame::MergeResponseKV { .. }
-                        | Frame::Error { .. }
-                        | Frame::StatsResponse { .. }
-                        | Frame::Pong => Reply::Err {
-                            code: code::UNSUPPORTED,
-                            message: "client-only frame type sent to server".into(),
-                        },
-                    };
-                    let _ = reply_tx.send(reply);
-                }
-            }
-        }
-        // Closing the reply channel lets the writer drain what is in
-        // flight (including service responses not yet produced) and
-        // exit — graceful per-connection shutdown.
-        drop(reply_tx);
-        let _ = writer.join();
-    });
-}
-
-/// Drain replies in request order and write response frames. Counts
-/// every frame *produced* even if the peer vanished mid-reply, so the
-/// `frames_in == responses + errors` account stays balanced.
-fn writer_loop(mut w: TcpStream, rx: mpsc::Receiver<Reply>, metrics: &Metrics) {
-    let mut buf = Vec::new();
-    let mut peer_gone = false;
-    while let Ok(reply) = rx.recv() {
-        match reply {
-            Reply::Pong => {
-                metrics.on_net_response();
-                protocol::encode_frame(&Frame::Pong, &mut buf);
-            }
-            Reply::Stats(json) => {
-                metrics.on_net_response();
-                encode_stats_response(&json, &mut buf);
-            }
-            Reply::Err { code, message } => {
-                metrics.on_net_error();
-                encode_error(code, &message, &mut buf);
-            }
-            Reply::Merge(resp_rx) => match resp_rx.recv() {
-                Ok(resp) => {
-                    metrics.on_net_response();
-                    // The one outbound copy: response columns → frame
-                    // bytes. A KV request gets the v1.1 response frame;
-                    // key-only responses stay byte-identical to v1.
-                    match &resp.payloads {
-                        Some(pays) => {
-                            encode_merge_response_kv(&resp.served_by, &resp.merged, pays, &mut buf)
-                        }
-                        None => encode_merge_response(&resp.served_by, &resp.merged, &mut buf),
+                    if conn.proto == Proto::Unset {
+                        conn.proto = Proto::V1;
+                    }
+                    if conn.proto == Proto::V2 {
+                        conn_error(
+                            metrics,
+                            conn,
+                            code::MALFORMED,
+                            "v1-framed request on a connection negotiated to v2",
+                            0,
+                        );
+                        continue;
+                    }
+                    let seq = conn.queue.admit();
+                    let _ = self.work_tx.send(Work::Req { token, seq, req_id: None, frame });
+                    if conn.queue.inflight() >= self.max_inflight
+                        || conn.backlog() >= WRITE_BACKLOG_PAUSE
+                    {
+                        conn.read_paused = true;
                     }
                 }
-                Err(_) => {
-                    metrics.on_net_error();
-                    encode_error(
-                        code::REJECTED,
-                        "request rejected (unsorted list, u32::MAX key, or shutdown)",
-                        &mut buf,
-                    );
+                Ok(ReadFrame::FrameV2(frame, id)) => {
+                    if fault::fires(Site::NetConnReset) {
+                        metrics.on_fault_injected();
+                        break ReadExit::Closed;
+                    }
+                    metrics.on_net_frame_in();
+                    if conn.proto == Proto::Unset {
+                        conn.proto = Proto::V2;
+                    }
+                    if conn.proto == Proto::V1 {
+                        conn_error(
+                            metrics,
+                            conn,
+                            code::MALFORMED,
+                            "v2-framed request on a connection negotiated to v1",
+                            0,
+                        );
+                        continue;
+                    }
+                    if !conn.queue.claim_id(id) {
+                        conn_error(
+                            metrics,
+                            conn,
+                            code::MALFORMED,
+                            &format!("request id {id} is already in flight on this connection"),
+                            id,
+                        );
+                        continue;
+                    }
+                    let seq = conn.queue.admit();
+                    let _ = self.work_tx.send(Work::Req { token, seq, req_id: Some(id), frame });
+                    if conn.queue.inflight() >= self.max_inflight
+                        || conn.backlog() >= WRITE_BACKLOG_PAUSE
+                    {
+                        conn.read_paused = true;
+                    }
                 }
-            },
-        }
-        // Injected write stall: delay the reply long enough for the
-        // client's deadline/backoff machinery to be exercised, without
-        // corrupting the stream.
-        if fault::fires(Site::NetWriteStall) {
-            metrics.on_fault_injected();
-            std::thread::sleep(Duration::from_millis(50));
-        }
-        if !peer_gone && w.write_all(&buf).is_err() {
-            // Keep draining so in-flight service responses are still
-            // consumed and the metric account balances.
-            peer_gone = true;
+            }
+        };
+        match exit {
+            ReadExit::Closed => self.force_close(token),
+            ReadExit::Sync => self.flush_and_sync(token),
         }
     }
-    if !peer_gone {
-        let _ = w.flush();
+
+    /// Drain worker-completed replies into their connections' queues
+    /// and flush. Replies for connections that died in between are
+    /// dropped — their metrics were already counted at encode.
+    fn apply_ready(&mut self) {
+        let ready = match self.shared.ready.lock() {
+            Ok(mut g) => std::mem::take(&mut *g),
+            Err(_) => return,
+        };
+        if ready.is_empty() {
+            return;
+        }
+        let mut touched: Vec<u64> = Vec::with_capacity(ready.len());
+        for r in ready {
+            let Some(conn) = self.conns.get_mut(&r.token) else { continue };
+            let ordered = conn.proto != Proto::V2;
+            conn.queue.complete(ordered, r.seq, r.release_id, r.bytes, &mut conn.wbuf);
+            if touched.last() != Some(&r.token) {
+                touched.push(r.token);
+            }
+        }
+        touched.sort_unstable();
+        touched.dedup();
+        for token in touched {
+            self.flush_and_sync(token);
+        }
     }
+
+    /// Flush a connection's write buffer, arm the write deadline if the
+    /// peer blocked us, then re-sync interest / pause / close state.
+    fn flush_and_sync(&mut self, token: u64) {
+        let flushed = match self.conns.get_mut(&token) {
+            None => return,
+            Some(conn) => conn.flush(),
+        };
+        match flushed {
+            Err(_) => {
+                self.force_close(token);
+                return;
+            }
+            Ok(false) => {
+                let mut arm = None;
+                if let Some(conn) = self.conns.get_mut(&token) {
+                    if conn.write_deadline.is_none() {
+                        let dl = Instant::now() + self.cfg.write_timeout;
+                        conn.write_deadline = Some(dl);
+                        arm = Some(dl);
+                    }
+                }
+                if let Some(dl) = arm {
+                    self.wheel.insert(token, dl);
+                }
+            }
+            Ok(true) => {}
+        }
+        self.sync_conn(token);
+    }
+
+    /// Recompute a connection's pause state and poller interest; close
+    /// it if it is drained and closing; queue a resume re-pump if its
+    /// read just unpaused.
+    fn sync_conn(&mut self, token: u64) {
+        let (close_now, resumed) = {
+            let Some(conn) = self.conns.get_mut(&token) else { return };
+            let want_pause =
+                conn.queue.inflight() >= self.max_inflight || conn.backlog() >= WRITE_BACKLOG_PAUSE;
+            let resumed = conn.read_paused && !want_pause && !conn.closing;
+            conn.read_paused = want_pause;
+            let readable = !conn.read_paused && !conn.closing;
+            let writable = conn.want_write;
+            let fd = conn.stream.as_raw_fd();
+            if !readable && !writable {
+                // Fully idle (paused or closing, nothing to write):
+                // drop poller interest so a peer-hangup can't spin the
+                // level-triggered loop. Progress arrives via `Ready`.
+                if conn.registered {
+                    let _ = self.poller.deregister(fd);
+                    conn.registered = false;
+                }
+            } else if conn.registered {
+                let _ = self.poller.modify(fd, token, readable, writable);
+            } else if self.poller.register(fd, token, readable, writable).is_ok() {
+                conn.registered = true;
+            }
+            let drained = conn.wpos >= conn.wbuf.len() && conn.queue.held_bytes() == 0;
+            (conn.closing && conn.queue.inflight() == 0 && drained, resumed)
+        };
+        if close_now {
+            self.force_close(token);
+        } else if resumed {
+            self.resume.push(token);
+        }
+    }
+
+    /// Immediate teardown: deregister and drop the connection. Any
+    /// in-flight completions for it land as unknown-token `Ready`
+    /// buffers and are discarded (already counted at encode).
+    fn force_close(&mut self, token: u64) {
+        if let Some(conn) = self.conns.remove(&token) {
+            if conn.registered {
+                let _ = self.poller.deregister(conn.stream.as_raw_fd());
+            }
+        }
+    }
+
+    /// A wheel token fired: reap the connection if its authoritative
+    /// deadline really passed; re-arm if the deadline moved (lazy
+    /// cancellation — the wheel itself has no removal).
+    fn check_deadline(&mut self, token: u64) {
+        let deadline = match self.conns.get(&token) {
+            None => return,
+            Some(conn) => conn.write_deadline,
+        };
+        match deadline {
+            Some(dl) if Instant::now() >= dl => self.force_close(token), // dead peer
+            Some(dl) => self.wheel.insert(token, dl),
+            None => {}
+        }
+    }
+
+    /// Shutdown progression, run every loop iteration once the flag is
+    /// set: close the listener, stop reading everywhere, and keep
+    /// flushing until every connection has drained its admitted
+    /// replies (the service stays up for the drain; write deadlines
+    /// reap peers that stop reading).
+    fn drain_for_shutdown(&mut self) {
+        if let Some(listener) = self.listener.take() {
+            let _ = self.poller.deregister(listener.as_raw_fd());
+        }
+        let tokens: Vec<u64> = self.conns.keys().copied().collect();
+        for token in tokens {
+            if let Some(conn) = self.conns.get_mut(&token) {
+                conn.closing = true;
+            }
+            self.flush_and_sync(token);
+        }
+    }
+}
+
+/// One dispatch/encode worker.
+fn worker_loop(
+    rx: Arc<Mutex<mpsc::Receiver<Work>>>,
+    service: Arc<MergeService>,
+    shared: Arc<Shared>,
+    cfg: NetServerConfig,
+) {
+    loop {
+        // Take one work item while holding the lock, release to serve.
+        let work = {
+            let Ok(guard) = rx.lock() else { return };
+            guard.recv()
+        };
+        let Ok(work) = work else { return };
+        match work {
+            Work::Req { token, seq, req_id, frame } => {
+                handle_request(token, seq, req_id, frame, &service, &shared, &cfg)
+            }
+            Work::Done { token, seq, req_id, resp } => {
+                handle_done(token, seq, req_id, resp, service.metrics(), &shared)
+            }
+        }
+    }
+}
+
+/// A clone of the completion sender, if the server is still serving.
+fn completion_tx(shared: &Shared) -> Option<mpsc::Sender<Work>> {
+    shared.work_tx.lock().ok().and_then(|slot| (*slot).clone())
+}
+
+/// Count an error at encode time and frame it for the connection's
+/// negotiated protocol.
+fn reply_error(metrics: &Metrics, req_id: Option<u64>, code: u8, message: &str, buf: &mut Vec<u8>) {
+    metrics.on_net_error();
+    match req_id {
+        Some(id) => encode_error_v2(id, code, message, buf),
+        None => encode_error(code, message, buf),
+    }
+}
+
+/// Apply the injected write stall (on a worker thread, never the loop
+/// or an executor) and hand the encoded reply back to the loop.
+fn finish_reply(metrics: &Metrics, shared: &Shared, reply: Ready) {
+    // Injected write stall: delay the reply long enough for the
+    // client's deadline/backoff machinery to be exercised, without
+    // corrupting the stream.
+    if fault::fires(Site::NetWriteStall) {
+        metrics.on_fault_injected();
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    if let Ok(mut g) = shared.ready.lock() {
+        g.push(reply);
+    }
+    shared.waker.wake();
+}
+
+/// Dispatch one decoded request. Control frames and refusals are
+/// answered synchronously; merges are submitted with a completion
+/// callback and answered later via [`Work::Done`].
+fn handle_request(
+    token: u64,
+    seq: u64,
+    req_id: Option<u64>,
+    frame: Frame,
+    service: &Arc<MergeService>,
+    shared: &Arc<Shared>,
+    cfg: &NetServerConfig,
+) {
+    let metrics = service.metrics();
+    let mut buf = Vec::new();
+    match frame {
+        Frame::Ping => {
+            metrics.on_net_response();
+            match req_id {
+                Some(id) => protocol::encode_frame_v2(&Frame::Pong, id, &mut buf),
+                None => protocol::encode_frame(&Frame::Pong, &mut buf),
+            }
+        }
+        Frame::MergeRequest { mode, .. } | Frame::MergeRequestKV { mode, .. }
+            if mode != MODE_MERGE =>
+        {
+            reply_error(
+                metrics,
+                req_id,
+                code::UNSUPPORTED,
+                &format!("unsupported request mode {mode}"),
+                &mut buf,
+            );
+        }
+        // Admission-level shed: refuse merge work while the service is
+        // over its pending watermark. The request was never submitted,
+        // so the client can always safely retry (a v2 id is released
+        // by this reply and reusable for the resubmit).
+        Frame::MergeRequest { .. } | Frame::MergeRequestKV { .. }
+            if cfg.shed_pending > 0 && service.pending() >= cfg.shed_pending =>
+        {
+            metrics.on_shed();
+            reply_error(
+                metrics,
+                req_id,
+                code::OVERLOADED,
+                "server overloaded, retry later",
+                &mut buf,
+            );
+        }
+        // Stats are answered even over the shed watermark — inspecting
+        // an overloaded server is the poll's whole point. The document
+        // is fitted to MAX_STATS_BYTES (per-artifact detail elided
+        // before the frame would overflow).
+        Frame::StatsRequest => {
+            let json = expo::stats_json_fitted(
+                &metrics.snapshot(),
+                service.pending(),
+                protocol::MAX_STATS_BYTES,
+            );
+            metrics.on_net_response();
+            match req_id {
+                Some(id) => protocol::encode_stats_response_v2(id, &json, &mut buf),
+                None => protocol::encode_stats_response(&json, &mut buf),
+            }
+        }
+        // The decoded lists go into admission as-is — no re-copy
+        // between socket and service. The reply arrives via Done.
+        Frame::MergeRequest { trace, lists, .. } => {
+            let trace = net_trace(metrics, trace);
+            match completion_tx(shared) {
+                Some(tx) => {
+                    service.submit_with(lists, trace, move |resp| {
+                        let _ = tx.send(Work::Done { token, seq, req_id, resp: resp.map(Box::new) });
+                    });
+                    return;
+                }
+                None => reply_error(metrics, req_id, code::REJECTED, REJECT_MSG, &mut buf),
+            }
+        }
+        // v1.1: the decoded payload column rides into admission beside
+        // the keys, same single copy.
+        Frame::MergeRequestKV { trace, lists, payloads, .. } => {
+            let trace = net_trace(metrics, trace);
+            match completion_tx(shared) {
+                Some(tx) => {
+                    service.submit_kv_with(lists, payloads, trace, move |resp| {
+                        let _ = tx.send(Work::Done { token, seq, req_id, resp: resp.map(Box::new) });
+                    });
+                    return;
+                }
+                None => reply_error(metrics, req_id, code::REJECTED, REJECT_MSG, &mut buf),
+            }
+        }
+        Frame::MergeResponse { .. }
+        | Frame::MergeResponseKV { .. }
+        | Frame::Error { .. }
+        | Frame::StatsResponse { .. }
+        | Frame::Pong => {
+            reply_error(
+                metrics,
+                req_id,
+                code::UNSUPPORTED,
+                "client-only frame type sent to server",
+                &mut buf,
+            );
+        }
+    }
+    finish_reply(metrics, shared, Ready { token, seq, release_id: req_id, bytes: buf });
+}
+
+/// Encode a completed merge (or its rejection) for the wire. Counted
+/// here even if the connection died — the account must balance.
+fn handle_done(
+    token: u64,
+    seq: u64,
+    req_id: Option<u64>,
+    resp: Option<Box<MergeResponse>>,
+    metrics: &Metrics,
+    shared: &Shared,
+) {
+    let mut buf = Vec::new();
+    match resp {
+        Some(resp) => {
+            metrics.on_net_response();
+            // The one outbound copy: response columns → frame bytes. A
+            // KV request gets the KV response frame; key-only replies
+            // stay byte-identical to v1 on v1 connections.
+            match (req_id, &resp.payloads) {
+                (Some(id), Some(pays)) => {
+                    encode_merge_response_kv_v2(id, &resp.served_by, &resp.merged, pays, &mut buf)
+                }
+                (Some(id), None) => {
+                    encode_merge_response_v2(id, &resp.served_by, &resp.merged, &mut buf)
+                }
+                (None, Some(pays)) => {
+                    encode_merge_response_kv(&resp.served_by, &resp.merged, pays, &mut buf)
+                }
+                (None, None) => encode_merge_response(&resp.served_by, &resp.merged, &mut buf),
+            }
+        }
+        None => {
+            metrics.on_net_error();
+            match req_id {
+                Some(id) => encode_error_v2(id, code::REJECTED, REJECT_MSG, &mut buf),
+                None => encode_error(code::REJECTED, REJECT_MSG, &mut buf),
+            }
+        }
+    }
+    finish_reply(metrics, shared, Ready { token, seq, release_id: req_id, bytes: buf });
 }

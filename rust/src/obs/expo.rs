@@ -102,6 +102,30 @@ pub fn stats_json(snap: &Snapshot, pending: u64) -> Json {
     ])
 }
 
+/// Render the stats document, guaranteed to fit in `max_bytes` of
+/// JSON — the wire path's contract with
+/// [`MAX_STATS_BYTES`](crate::net::protocol::MAX_STATS_BYTES), where
+/// an oversized document must never be truncated into invalid JSON.
+///
+/// A server with thousands of distinct artifacts can push the full
+/// document over the frame limit; per-artifact detail is the only
+/// unbounded section, so when the full render is too large it is
+/// elided (an empty `"artifacts"` object plus an `"artifacts_elided"`
+/// count naming how many entries were dropped) and the stack-wide
+/// aggregates survive. The elided form is a few KiB and always fits.
+pub fn stats_json_fitted(snap: &Snapshot, pending: u64, max_bytes: usize) -> String {
+    let full = stats_json(snap, pending).to_string();
+    if full.len() <= max_bytes {
+        return full;
+    }
+    let mut doc = stats_json(snap, pending);
+    if let Json::Obj(m) = &mut doc {
+        m.insert("artifacts".into(), Json::Obj(BTreeMap::new()));
+        m.insert("artifacts_elided".into(), Json::int(snap.artifacts.len() as i64));
+    }
+    doc.to_string()
+}
+
 /// Validate a stats document's required shape — the contract the CI
 /// smoke job and the `obs` integration suite hold the live server to.
 /// Returns the first missing/ill-typed path.
@@ -221,6 +245,30 @@ mod tests {
     fn empty_snapshot_is_still_well_formed() {
         let doc = stats_json(&Metrics::new().snapshot(), 0);
         check_stats_doc(&doc).unwrap();
+    }
+
+    #[test]
+    fn fitted_doc_elides_artifacts_instead_of_overflowing() {
+        let mut snap = Metrics::new().snapshot();
+        for i in 0..4000 {
+            snap.artifacts.push(ArtifactSnapshot {
+                name: format!("loms2_up32_dn32_b256_variant_{i:05}"),
+                ..Default::default()
+            });
+        }
+        let full = stats_json(&snap, 0).to_string();
+        let cap = 64 << 10;
+        assert!(full.len() > cap, "test premise: full doc overflows the cap");
+        let fitted = stats_json_fitted(&snap, 0, cap);
+        assert!(fitted.len() <= cap, "{} > {cap}", fitted.len());
+        // Still valid JSON with the required shape, and honest about
+        // what was dropped.
+        let doc = parse_stats_doc(&fitted).unwrap();
+        assert_eq!(doc.get("artifacts_elided").unwrap().as_i64(), Some(4000));
+        // Under the cap, nothing is elided.
+        let small = stats_json_fitted(&Metrics::new().snapshot(), 0, cap);
+        let doc = parse_stats_doc(&small).unwrap();
+        assert!(doc.get("artifacts_elided").is_none());
     }
 
     #[test]

@@ -8,8 +8,8 @@
 
 use loms::coordinator::{MergeService, ServiceConfig, SoftwareBackend};
 use loms::net::protocol::{
-    self, code, encode_merge_request, Frame, FrameReader, ReadFrame, MAX_FRAME_BYTES, MAX_K,
-    MAX_LIST_LEN, MODE_MERGE, PROTOCOL_VERSION,
+    self, code, encode_merge_request, encode_merge_request_v2, encode_merge_response_v2, Frame,
+    FrameReader, ReadFrame, MAX_FRAME_BYTES, MAX_K, MAX_LIST_LEN, MODE_MERGE, PROTOCOL_VERSION,
 };
 use loms::net::{NetClient, NetServer, NetServerConfig};
 use loms::util::Rng;
@@ -182,7 +182,9 @@ fn malformed_frame_fuzzer_never_panics_the_server() {
                 true
             }
             2 => {
-                bytes[4] = PROTOCOL_VERSION.wrapping_add(1 + rng.below(200) as u8);
+                // Unknown version: skip past PROTOCOL_V2 (= v1 + 1),
+                // which is a *valid* framing, to 3..=201.
+                bytes[4] = PROTOCOL_VERSION.wrapping_add(2 + rng.below(199) as u8);
                 true
             }
             3 => {
@@ -249,6 +251,175 @@ fn malformed_frame_fuzzer_never_panics_the_server() {
     let snap = server.service().metrics().snapshot();
     assert!(snap.net_decode_errors > 0, "fuzzer produced no decode errors? {snap:?}");
     server.shutdown();
+}
+
+/// Read the next frame (either framing) within a deadline, returning
+/// the v2 request id when present. Panics on undecodable server bytes.
+fn read_reply_any(stream: &mut TcpStream) -> Option<(Frame, Option<u64>)> {
+    stream.set_read_timeout(Some(Duration::from_millis(150))).unwrap();
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    let mut rd = FrameReader::new();
+    loop {
+        match rd.read_frame(stream) {
+            Ok(ReadFrame::Frame(f)) => return Some((f, None)),
+            Ok(ReadFrame::FrameV2(f, id)) => return Some((f, Some(id))),
+            Ok(ReadFrame::Pending) => {}
+            Ok(ReadFrame::Eof) => return None,
+            Ok(other) => panic!("server sent undecodable bytes: {other:?}"),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(_) => return None,
+        }
+        if std::time::Instant::now() >= deadline {
+            return None;
+        }
+    }
+}
+
+/// Fuzzer leg for v2 ids: a duplicate in-flight id is answered with a
+/// typed MALFORMED error *echoing the id*, the original request still
+/// completes, the connection survives, and the id becomes reusable
+/// once its reply has been released.
+#[test]
+fn duplicate_inflight_v2_id_is_a_typed_error_not_a_disconnect() {
+    let server = start_server();
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    // Both same-id frames in ONE write so the server decodes them in
+    // one read pump — the duplicate is guaranteed to still be in
+    // flight when the second frame arrives.
+    let mut bytes = Vec::new();
+    encode_merge_request_v2(7, MODE_MERGE, 0, &[vec![1, 3], vec![2, 4]], &mut bytes);
+    encode_merge_request_v2(7, MODE_MERGE, 0, &[vec![5], vec![6]], &mut bytes);
+    stream.write_all(&bytes).unwrap();
+    // Two replies, in either order (the error is synchronous on the
+    // event loop; the merge completes on a worker): one MergeResponse
+    // for the original, one MALFORMED error for the duplicate — both
+    // echoing id 7.
+    let (mut merged, mut errored) = (false, false);
+    for _ in 0..2 {
+        let (f, id) = read_reply_any(&mut stream).expect("reply");
+        assert_eq!(id, Some(7), "{f:?}");
+        match f {
+            Frame::MergeResponse { merged: m, .. } => {
+                assert_eq!(m, vec![1, 2, 3, 4]);
+                merged = true;
+            }
+            Frame::Error { code: c, message } => {
+                assert_eq!(c, code::MALFORMED, "{message}");
+                assert!(message.contains('7'), "error must name the id: {message}");
+                errored = true;
+            }
+            other => panic!("unexpected reply {other:?}"),
+        }
+    }
+    assert!(merged && errored);
+    // Id 7 was released by the original's reply: reusable now.
+    let mut bytes = Vec::new();
+    encode_merge_request_v2(7, MODE_MERGE, 0, &[vec![9], vec![8]], &mut bytes);
+    stream.write_all(&bytes).unwrap();
+    match read_reply_any(&mut stream) {
+        Some((Frame::MergeResponse { merged, .. }, Some(7))) => {
+            assert_eq!(merged, vec![8, 9]);
+        }
+        other => panic!("id 7 not reusable: {other:?}"),
+    }
+    server.shutdown();
+}
+
+/// The version latch: a v2 frame on a connection latched to v1 is a
+/// typed MALFORMED error (framed v1, like every reply on that
+/// connection) and the connection keeps serving v1.
+#[test]
+fn v2_frame_on_a_v1_latched_connection_is_malformed() {
+    let server = start_server();
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    let mut bytes = Vec::new();
+    protocol::encode_frame(&Frame::Ping, &mut bytes); // latches v1
+    stream.write_all(&bytes).unwrap();
+    assert!(matches!(read_reply_any(&mut stream), Some((Frame::Pong, None))));
+
+    let mut bytes = Vec::new();
+    protocol::encode_frame_v2(&Frame::Ping, 5, &mut bytes);
+    stream.write_all(&bytes).unwrap();
+    match read_reply_any(&mut stream) {
+        Some((Frame::Error { code: c, message }, None)) => {
+            assert_eq!(c, code::MALFORMED, "{message}");
+            assert!(message.contains("v2"), "{message}");
+        }
+        other => panic!("expected a v1-framed MALFORMED error, got {other:?}"),
+    }
+    // Still latched, still serving.
+    let mut bytes = Vec::new();
+    protocol::encode_frame(&Frame::Ping, &mut bytes);
+    stream.write_all(&bytes).unwrap();
+    assert!(matches!(read_reply_any(&mut stream), Some((Frame::Pong, None))));
+    server.shutdown();
+}
+
+/// The mirror latch: a v1 frame on a v2 connection errors (framed v2,
+/// id 0 — the offending frame carried no id to echo) and v2 service
+/// continues.
+#[test]
+fn v1_frame_on_a_v2_latched_connection_is_malformed() {
+    let server = start_server();
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    let mut bytes = Vec::new();
+    protocol::encode_frame_v2(&Frame::Ping, 1, &mut bytes); // latches v2
+    stream.write_all(&bytes).unwrap();
+    assert!(matches!(read_reply_any(&mut stream), Some((Frame::Pong, Some(1)))));
+
+    let mut bytes = Vec::new();
+    protocol::encode_frame(&Frame::Ping, &mut bytes);
+    stream.write_all(&bytes).unwrap();
+    match read_reply_any(&mut stream) {
+        Some((Frame::Error { code: c, message }, Some(0))) => {
+            assert_eq!(c, code::MALFORMED, "{message}");
+            assert!(message.contains("v1"), "{message}");
+        }
+        other => panic!("expected a v2-framed MALFORMED error, got {other:?}"),
+    }
+    let mut bytes = Vec::new();
+    protocol::encode_frame_v2(&Frame::Ping, 2, &mut bytes);
+    stream.write_all(&bytes).unwrap();
+    assert!(matches!(read_reply_any(&mut stream), Some((Frame::Pong, Some(2)))));
+    server.shutdown();
+}
+
+/// Client-side id hygiene: a response naming an id the client never
+/// sent (or already settled) is a peer protocol violation, surfaced as
+/// an error — not silently matched to the wrong request.
+#[test]
+fn unknown_id_in_response_is_a_client_protocol_error() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let fake = std::thread::spawn(move || {
+        let (mut peer, _) = listener.accept().unwrap();
+        // Consume the request frame (length prefix + body) so the
+        // write isn't racing the reply, then answer with an id the
+        // client never claimed.
+        let mut rd = FrameReader::new();
+        loop {
+            match rd.read_frame(&mut peer) {
+                Ok(ReadFrame::FrameV2(_, id)) => {
+                    assert_eq!(id, 1, "client's first v2 id");
+                    break;
+                }
+                Ok(ReadFrame::Pending) => continue,
+                other => panic!("fake server expected a v2 request, got {other:?}"),
+            }
+        }
+        let mut bytes = Vec::new();
+        encode_merge_response_v2(999, "software", &[1, 2], &mut bytes);
+        peer.write_all(&bytes).unwrap();
+        // Hold the socket open until the client has judged the reply.
+        std::thread::sleep(Duration::from_millis(300));
+    });
+    let mut client = loms::net::NetClient::connect_v2(addr).unwrap();
+    client.submit(&[vec![1], vec![2]]).unwrap();
+    let err = client.recv().unwrap_err().to_string();
+    assert!(err.contains("unknown request id 999"), "{err}");
+    fake.join().unwrap();
 }
 
 #[test]

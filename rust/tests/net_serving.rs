@@ -6,9 +6,10 @@
 //! shutdown semantics.
 
 use loms::coordinator::{MergeService, ServiceConfig, SoftwareBackend};
-use loms::net::{NetClient, NetServer, NetServerConfig};
+use loms::net::{run_load, NetClient, NetServer, NetServerConfig};
 use loms::util::Rng;
 use std::collections::VecDeque;
+use std::io::Write;
 use std::time::{Duration, Instant};
 
 fn start_server(workers: usize) -> NetServer {
@@ -83,6 +84,145 @@ fn concurrent_pipelined_clients_match_scalar_oracle() {
     assert_eq!(snap.net_frames_in, snap.net_responses + snap.net_errors);
     // The service behind the wire actually served them all.
     assert_eq!(snap.responses, total, "{snap:?}");
+    server.shutdown();
+}
+
+/// The starvation regression: connections must be bounded by memory,
+/// not worker threads. 64 pipelined connections against a 4-worker
+/// server all make progress (under the old thread-per-connection
+/// design, connection 5+ would wait for a slot forever); every
+/// response stays oracle-exact.
+#[test]
+fn sixty_four_connections_progress_on_four_workers() {
+    let server = start_server(4);
+    let addr = server.addr().to_string();
+    // Watchdog: run the load on a side thread so a starved server
+    // fails the test with a diagnostic instead of hanging CI.
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = tx.send(run_load(&addr, 64, 4, 1024, 0x64C0, false));
+    });
+    let report = rx
+        .recv_timeout(Duration::from_secs(120))
+        .expect("64-connection load starved against 4 workers")
+        .expect("load");
+    assert_eq!(report.ok, 1024, "{report:?}");
+    assert_eq!(report.errors, 0, "{report:?}");
+    assert_eq!(report.failed_conns, 0, "{:?}", report.conn_errors);
+    let snap = server.service().metrics().snapshot();
+    assert_eq!(snap.net_connections, 64, "{snap:?}");
+    snap.check().expect("accounting balances under fan-out");
+    server.shutdown();
+}
+
+/// Protocol v2: one connection multiplexing many logical requests —
+/// ids correlate replies, which may arrive in any completion order.
+#[test]
+fn v2_connection_multiplexes_replies_by_id() {
+    const N: usize = 64;
+    let server = start_server(4);
+    let mut client = NetClient::connect_v2(server.addr()).expect("connect v2");
+    let mut rng = Rng::new(0xB2B2);
+    let mut wants = std::collections::HashMap::new();
+    for i in 0..N {
+        let lists = mixed_lists(&mut rng, i);
+        let mut want: Vec<u32> = lists.concat();
+        want.sort_unstable();
+        let id = client.submit(&lists).expect("submit v2");
+        assert!(wants.insert(id, want).is_none(), "ids unique");
+    }
+    for _ in 0..N {
+        let resp = client.recv().expect("recv v2");
+        let want = wants.remove(&resp.id).expect("each id answered exactly once");
+        assert_eq!(resp.merged, want, "id {}", resp.id);
+    }
+    assert!(wants.is_empty());
+    // Control frames ride the same framing (Pong echoes the id).
+    client.ping().expect("v2 ping");
+    let snap = server.service().metrics().snapshot();
+    assert_eq!(snap.net_frames_in, (N + 1) as u64, "{snap:?}");
+    assert_eq!(snap.net_responses, (N + 1) as u64, "{snap:?}");
+    assert_eq!(snap.net_errors, 0, "{snap:?}");
+    server.shutdown();
+}
+
+/// The shutdown-hang regression: `shutdown()` on a *saturated* server
+/// — pipelined connections far over the inflight quota (reads
+/// paused), none reading replies, plus connections parked mid-frame —
+/// must return promptly, not block behind a full channel or an
+/// unfinished frame.
+#[test]
+fn shutdown_returns_promptly_on_a_saturated_server() {
+    let svc = MergeService::start(|| Ok(SoftwareBackend::default_set()), ServiceConfig::default())
+        .expect("service");
+    let server = NetServer::start(
+        "127.0.0.1:0",
+        svc,
+        NetServerConfig {
+            workers: 2,
+            max_inflight_per_conn: 4,
+            write_timeout: Duration::from_secs(1),
+            ..NetServerConfig::default()
+        },
+    )
+    .expect("server");
+    let addr = server.addr();
+    let mut clients = Vec::new();
+    for c in 0..8u64 {
+        let mut client = NetClient::connect(addr).expect("connect");
+        let mut rng = Rng::new(0x5A7 + c);
+        for _ in 0..64 {
+            let lists = vec![rng.sorted_list(8, 1 << 20), rng.sorted_list(8, 1 << 20)];
+            client.submit(&lists).expect("submit");
+        }
+        clients.push(client);
+    }
+    let mut partials = Vec::new();
+    for _ in 0..4 {
+        let mut s = std::net::TcpStream::connect(addr).expect("connect");
+        // A 100-byte frame with only 3 bytes sent — never completed.
+        s.write_all(&[100, 0, 0, 0, 1, 2, 3]).expect("partial frame");
+        partials.push(s);
+    }
+    std::thread::sleep(Duration::from_millis(50)); // let the loop ingest the mess
+    let (done_tx, done_rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        server.shutdown();
+        let _ = done_tx.send(());
+    });
+    done_rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("shutdown hung on a saturated server");
+    drop(clients);
+    drop(partials);
+}
+
+/// Stats-overflow regression over the real wire: with enough distinct
+/// artifacts to push the full document past `MAX_STATS_BYTES`, the
+/// server elides per-artifact detail (honestly counted) instead of
+/// truncating into invalid JSON.
+#[test]
+fn oversized_stats_elide_artifact_detail_on_the_wire() {
+    let server = start_server(2);
+    let metrics = server.service().metrics();
+    const ARTS: i64 = 8000;
+    for i in 0..ARTS {
+        let name: std::sync::Arc<str> =
+            format!("synthetic_artifact_with_a_long_name_{i:05}").into();
+        metrics.on_artifact_batch(&name, 1, Duration::from_micros(10));
+    }
+    let mut client = NetClient::connect(server.addr()).expect("connect");
+    let doc = client.stats().expect("stats must still fit after eliding");
+    loms::obs::expo::check_stats_doc(&doc).expect("stats grammar");
+    assert_eq!(
+        doc.get("artifacts_elided").and_then(loms::util::Json::as_i64),
+        Some(ARTS),
+        "{doc:?}"
+    );
+    match doc.get("artifacts") {
+        Some(loms::util::Json::Obj(m)) => assert!(m.is_empty(), "detail must be elided"),
+        other => panic!("missing artifacts object: {other:?}"),
+    }
     server.shutdown();
 }
 
